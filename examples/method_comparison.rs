@@ -1,0 +1,57 @@
+//! Method comparison on one model/bit-width (a single Table-6-style row
+//! block): LSQ baseline vs EWGS vs dampening vs freezing, weight+act
+//! quantization.
+//!
+//!     cargo run --release --example method_comparison -- [bits] [steps]
+
+use anyhow::Result;
+use oscillations_qat::analysis::report::TableRenderer;
+use oscillations_qat::coordinator::experiment::{Lab, QatSpec};
+use oscillations_qat::coordinator::Schedule;
+use oscillations_qat::runtime::Runtime;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let bits: u32 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let steps: u64 = argv.get(2).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let mut lab = Lab::new(&rt);
+    lab.qat_steps = steps;
+    lab.seeds = vec![0];
+
+    let mut table = TableRenderer::new(
+        &format!("MobileNetV2 W{bits}/A{bits} method comparison ({steps} steps)"),
+        &["Method", "post-BN acc (%)", "Osc (%)", "Frozen (%)"],
+    );
+    let methods: Vec<(&str, QatSpec)> = vec![
+        ("LSQ", QatSpec::full("mbv2", bits, 0)),
+        ("EWGS", QatSpec { estimator: "ewgs".into(), ..QatSpec::full("mbv2", bits, 0) }),
+        (
+            "LSQ + Dampen",
+            QatSpec {
+                lam: Schedule::Cosine { from: 0.0, to: 1e-2 },
+                ..QatSpec::full("mbv2", bits, 0)
+            },
+        ),
+        (
+            "LSQ + Freeze",
+            QatSpec {
+                f_th: Schedule::Cosine { from: 0.04, to: 0.01 },
+                ..QatSpec::full("mbv2", bits, 0)
+            },
+        ),
+    ];
+    for (name, spec) in methods {
+        let out = lab.run_qat(&spec)?;
+        table.row(vec![
+            name.into(),
+            format!("{:.2}", out.post_bn_acc),
+            format!("{:.2}", out.osc_pct),
+            format!("{:.2}", out.frozen_pct),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

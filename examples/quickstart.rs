@@ -1,0 +1,55 @@
+//! Quickstart: load an AOT artifact, run a handful of QAT steps, inspect
+//! the oscillation telemetry.
+//!
+//!     make artifacts            # once (python, build time)
+//!     cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end path through the stack: Rust loads the
+//! HLO text the JAX/Pallas layers produced, compiles it on the PJRT CPU
+//! client, and drives a few training steps with all state owned host-side.
+
+use anyhow::Result;
+use oscillations_qat::coordinator::{RunCfg, Trainer};
+use oscillations_qat::osc;
+use oscillations_qat::runtime::Runtime;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    println!("models in index: {:?}", rt.index.models.keys().collect::<Vec<_>>());
+
+    let model = "mbv2";
+    let info = rt.index.model(model)?;
+    println!(
+        "{model}: {} params, {} low-bit weight tensors, depthwise layers {:?}",
+        info.param_count,
+        info.lowbit.len(),
+        info.depthwise()
+    );
+
+    // initial state straight from the QTNS the AOT step dumped
+    let state = rt.initial_state(model)?;
+    println!("state tensors: {} ({} elements)", state.len(), state.num_elements());
+
+    // 20 QAT steps at 3-bit weights, oscillation tracking on
+    let trainer = Trainer::new(&rt);
+    let mut cfg = RunCfg::qat(model, 20, 3, 0);
+    cfg.quant_w = true;
+    cfg.log_every = 5;
+    let out = trainer.train(state, &cfg)?;
+
+    for row in &out.history.rows {
+        println!(
+            "step {:>3}  loss {:.4}  acc {:.3}  osc {:.4}  frozen {:.4}",
+            row[0], row[1], row[4], row[5], row[6]
+        );
+    }
+    let summary = osc::summarize(&out.state, &info.lowbit);
+    println!(
+        "after 20 steps: {:.2}% of {} low-bit weights oscillating ({:.1} steps/s)",
+        summary.osc_pct(),
+        summary.total_weights,
+        out.steps_per_sec
+    );
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! The paper's §2.2 toy problem, end to end: watch a single latent weight
+//! oscillate around the decision boundary under the STE, see that the
+//! multiplicative estimators (EWGS/DSQ/PSG) cannot stop it, and that the
+//! additive dampening term can (appendix A.1).
+//!
+//!     cargo run --release --example toy_oscillations
+
+use oscillations_qat::toy::{run, stats, ToyCfg, ToyEstimator};
+
+fn sparkline(traj: &[(f32, f32)], s: f32) -> String {
+    // map integer states to characters for a quick terminal trace
+    traj.iter()
+        .step_by(traj.len() / 120 + 1)
+        .map(|&(_, q)| match (q / s).round() as i64 {
+            3 => '▆',
+            2 => '▂',
+            _ => '.',
+        })
+        .collect()
+}
+
+fn main() {
+    let ests: Vec<(&str, ToyEstimator)> = vec![
+        ("STE", ToyEstimator::Ste),
+        ("EWGS δ=0.2", ToyEstimator::Ewgs { delta: 0.2 }),
+        ("DSQ k=5", ToyEstimator::Dsq { k: 5.0 }),
+        ("PSG ε=0.01", ToyEstimator::Psg { eps: 0.01 }),
+        ("Dampen λ=0.6", ToyEstimator::Dampen { lambda: 0.6 }),
+    ];
+    println!("w* = 0.252, grid step s = 0.1 → optimum between states 2 and 3\n");
+    for (name, est) in ests {
+        let cfg = ToyCfg { est, steps: 1200, ..Default::default() };
+        let traj = run(&cfg);
+        let st = stats(&traj, 300, cfg.s);
+        println!("{name:<14} freq {:>6.4}  amp {:>7.5}  up-frac {:>5.3}", st.freq,
+                 st.amplitude, st.frac_up);
+        println!("  {}", sparkline(&traj, cfg.s));
+    }
+    println!("\nFrequency ∝ distance (appendix A.2):");
+    for d in [0.04f32, 0.02, 0.01, 0.005] {
+        let cfg = ToyCfg { w_star: 0.25 + d, steps: 6000, ..Default::default() };
+        let st = stats(&run(&cfg), 1000, cfg.s);
+        println!("  d/s = {:<5.3} -> freq {:.4}", d / cfg.s, st.freq);
+    }
+    println!("\nLearning rate moves amplitude, not frequency (appendix A.3):");
+    for lr in [0.02f32, 0.01, 0.005] {
+        let cfg = ToyCfg { lr, steps: 8000, ..Default::default() };
+        let st = stats(&run(&cfg), 2000, cfg.s);
+        println!("  lr = {lr:<6} -> freq {:.4}  amplitude {:.5}", st.freq, st.amplitude);
+    }
+}

@@ -1,0 +1,255 @@
+"""AOT compiler driver: lower every artifact to HLO text + manifests.
+
+Python's last act. For each (model, estimator) pair this emits:
+
+  artifacts/<model>_<est>_train.hlo.txt      train step (fwd+bwd+SGD+Alg.1)
+  artifacts/<model>_eval.hlo.txt             eval step (running-stat BN)
+  artifacts/<model>_bnstats.hlo.txt          calibration step
+  artifacts/<model>.params.bin               initial state (QTNS format)
+  artifacts/<name>.manifest.json             per-artifact flat I/O signature
+  artifacts/index.json                       global index + model metadata
+
+plus standalone L1 kernel benchmarks (kernel_*.hlo.txt) with pure-jnp
+reference twins for the Rust perf harness.
+
+Interchange is HLO **text**, never the serialized proto: jax >= 0.5 emits
+64-bit instruction ids that the xla_extension 0.5.1 proto parser rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+The QTNS binary: magic 'QTNS', u32 version, u32 count, then per tensor:
+u16 name-len, utf8 name, u8 dtype (0 = f32), u8 ndim, u32 dims..., f32 LE
+data. Little-endian throughout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import arch, train
+from .model import build_model, DEFAULT_BATCH, DEFAULT_CLASSES
+
+MODELS = ("mbv2", "resnet18", "mbv3", "efflite")
+# Estimator variants are lowered for mbv2 only (the paper's main ablation
+# network); the other models use LSQ, matching Tables 7/8.
+MBV2_ESTIMATORS = ("lsq", "ewgs", "dsq", "psg", "pact")
+
+
+def _key_str(k):
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+ARG_NAMES = {"0": "state", "1": "batch", "2": "hyper",
+             "3": "arg3"}
+
+
+def flatten_named(tree, arg_names=None):
+    """Flatten a pytree into (names, leaves) with '/'-joined path names."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        parts = [_key_str(k) for k in path]
+        if arg_names and parts and parts[0] in arg_names:
+            parts[0] = arg_names[parts[0]]
+        names.append("/".join(parts))
+        leaves.append(leaf)
+    return names, leaves
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _tensor_entry(name, leaf):
+    return {"name": name, "shape": [int(d) for d in jnp.shape(leaf)],
+            "dtype": "f32"}
+
+
+def emit_artifact(out_dir, name, fn, example_args, arg_names):
+    """Lower ``fn(*example_args)``, write HLO text + manifest. Returns meta."""
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    in_names, in_leaves = flatten_named(
+        tuple(example_args), ARG_NAMES if arg_names is None else arg_names)
+    outs = jax.eval_shape(fn, *example_args)
+    out_names, out_leaves = flatten_named(
+        outs, {"0": "state", "1": "metrics"})
+
+    manifest = {
+        "name": name,
+        "hlo": os.path.basename(hlo_path),
+        "inputs": [_tensor_entry(n, l) for n, l in zip(in_names, in_leaves)],
+        "outputs": [_tensor_entry(n, l) for n, l in zip(out_names, out_leaves)],
+    }
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(manifest['inputs'])} in / "
+          f"{len(manifest['outputs'])} out / {len(hlo)//1024} KiB hlo")
+    return manifest
+
+
+def write_qtns(path, named_tensors):
+    """Write the QTNS initial-state binary consumed by rust state/ckpt.rs."""
+    with open(path, "wb") as f:
+        f.write(b"QTNS")
+        f.write(struct.pack("<II", 1, len(named_tensors)))
+        for name, arr in named_tensors:
+            nb = name.encode("utf-8")
+            arr = np.asarray(arr, dtype=np.float32)
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def layer_meta(descs):
+    """Per-layer metadata for the rust analysis code (Table 1, Figs 2-4)."""
+    layers = {}
+    for d in arch._iter_layers(descs):
+        if d["kind"] == "conv":
+            kind = ("dw" if d["groups"] == d["cin"] and d["cin"] > 1
+                    else ("pw" if d["k"] == 1 else "full"))
+            layers[d["name"]] = {
+                "kind": kind, "weight": d["name"] + ".w",
+                "bn": bool(d["bn"]), "cout": d["cout"], "wq": d["wq"],
+            }
+        elif d["kind"] == "fc":
+            layers[d["name"]] = {"kind": "fc", "weight": d["name"] + ".w",
+                                 "bn": False, "cout": d["cout"], "wq": d["wq"]}
+    return layers
+
+
+def emit_model(out_dir, model_name, estimators, batch_size, num_classes):
+    print(f"model {model_name} (batch {batch_size}, {num_classes} classes)")
+    mb = build_model(model_name, batch_size=batch_size,
+                     num_classes=num_classes)
+    entry = {
+        "model": model_name,
+        "batch_size": batch_size,
+        "num_classes": num_classes,
+        "input_hw": int(mb.batch["x"].shape[1]),
+        "param_count": mb.param_count(),
+        "lowbit": mb.lowbit,
+        "layers": layer_meta(mb.descs),
+        "params_bin": f"{model_name}.params.bin",
+        "artifacts": {},
+    }
+
+    for est in estimators:
+        step = train.make_train_step(mb.descs, est)
+        name = f"{model_name}_{est}_train"
+        emit_artifact(out_dir, name, step, (mb.state, mb.batch, mb.hyper),
+                      ARG_NAMES)
+        entry["artifacts"][f"train_{est}"] = name
+
+    ev = train.make_eval_step(mb.descs)
+    arg_names = {"0": "params", "1": "bn", "2": "batch", "3": "hyper"}
+    name = f"{model_name}_eval"
+    emit_artifact(out_dir, name, ev,
+                  (mb.state["params"], mb.state["bn"], mb.batch, mb.hyper),
+                  arg_names)
+    entry["artifacts"]["eval"] = name
+
+    bs = train.make_bn_stats_step(mb.descs)
+    name = f"{model_name}_bnstats"
+    emit_artifact(out_dir, name, bs,
+                  (mb.state["params"], mb.state["bn"], mb.batch, mb.hyper),
+                  arg_names)
+    entry["artifacts"]["bnstats"] = name
+
+    state_names, state_leaves = flatten_named(mb.state)
+    write_qtns(os.path.join(out_dir, entry["params_bin"]),
+               list(zip(state_names, state_leaves)))
+    return entry
+
+
+def emit_kernel_benches(out_dir):
+    """Standalone L1-kernel artifacts + pure-jnp twins for rust perf benches."""
+    from .kernels import ref
+    from .kernels.fake_quant import fake_quant
+    from .kernels.osc_update import osc_update
+    from .kernels.quant_matmul import quant_matmul
+
+    entries = {}
+    w = jnp.zeros((256, 1024), jnp.float32)
+    sc = (jnp.asarray(0.05), jnp.asarray(-4.0), jnp.asarray(3.0))
+
+    entries["kernel_fakequant"] = emit_artifact(
+        out_dir, "kernel_fakequant",
+        lambda w, s, n, p: (fake_quant(w, s, n, p),), (w, *sc), {})["name"]
+    entries["kernel_fakequant_ref"] = emit_artifact(
+        out_dir, "kernel_fakequant_ref",
+        lambda w, s, n, p: (ref.fake_quant_ref(w, s, n, p),), (w, *sc),
+        {})["name"]
+
+    st = tuple(jnp.zeros((256, 1024), jnp.float32) for _ in range(6))
+    entries["kernel_osc"] = emit_artifact(
+        out_dir, "kernel_osc",
+        lambda w, f, b, fi, ps, wi, ie: osc_update(
+            w, 0.05, -4.0, 3.0, f, b, fi, ps, wi, ie, 0.01, 0.02),
+        (w, *st), {})["name"]
+    entries["kernel_osc_ref"] = emit_artifact(
+        out_dir, "kernel_osc_ref",
+        lambda w, f, b, fi, ps, wi, ie: ref.osc_update_ref(
+            w, 0.05, -4.0, 3.0, f, b, fi, ps, wi, ie, 0.01, 0.02),
+        (w, *st), {})["name"]
+
+    x = jnp.zeros((256, 512), jnp.float32)
+    wm = jnp.zeros((512, 512), jnp.float32)
+    entries["kernel_qmm"] = emit_artifact(
+        out_dir, "kernel_qmm",
+        lambda x, w, s, n, p: (quant_matmul(x, w, s, n, p),), (x, wm, *sc),
+        None)["name"]
+    entries["kernel_qmm_ref"] = emit_artifact(
+        out_dir, "kernel_qmm_ref",
+        lambda x, w, s, n, p: (ref.quant_matmul_ref(x, w, s, n, p),),
+        (x, wm, *sc), {})["name"]
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--batch-size", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--num-classes", type=int, default=DEFAULT_CLASSES)
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    index = {"version": 1, "models": {}, "kernels": {}}
+    for model_name in args.models.split(","):
+        estimators = MBV2_ESTIMATORS if model_name == "mbv2" else ("lsq",)
+        index["models"][model_name] = emit_model(
+            args.out_dir, model_name, estimators, args.batch_size,
+            args.num_classes)
+    if not args.skip_kernels:
+        index["kernels"] = emit_kernel_benches(args.out_dir)
+
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"index written to {args.out_dir}/index.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,385 @@
+"""L2 architecture interpreter: a tiny op-list IR for the QAT model zoo.
+
+The four evaluation networks (MobileNetV2, MobileNetV3-Small,
+EfficientNet-lite, ResNet-18 analogues — see models/) are described as
+flat lists of layer descriptors; this module owns parameter naming /
+initialization and the quantization-aware forward pass, so every model
+shares one code path for:
+
+  * per-tensor LSQ weight quantization (low-bit for interior layers,
+    8-bit for the first and last layer, as in the paper's setup §5.1),
+  * per-tensor LSQ activation quantization on every layer input except
+    normalizing layers,
+  * batch-norm with EMA running statistics threaded through the step,
+  * residual/SE block structure.
+
+Descriptor kinds
+----------------
+  conv  {name, k, stride, groups, cin, cout, wq, aq, bn, act}
+  fc    {name, cin, cout, wq, aq}              (classifier, Pallas qmm path)
+  gap   {}                                      (global average pool)
+  residual {name, layers: [...], skip: bool}    (sum skip when shapes match)
+  se    {name, c, r, wq}                        (squeeze-excite)
+
+``wq`` is one of 'low' (runtime n_w/p_w grid — these are the tensors the
+oscillation tracker / dampening / freezing act on), '8bit' (fixed +-8-bit
+grid for first/last layers) or 'none'. ``aq`` toggles input quantization.
+
+Parameter naming: ``<layer>.w`` weights, ``<layer>.b`` bias (fc only),
+``<layer>.s`` weight step size, ``<layer>.as`` activation step size,
+``<layer>.bn_g/.bn_b`` batch-norm affine; BN running stats live in a
+separate ``bn`` dict as ``<layer>.bn_m/.bn_v``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+
+# Fixed 8-bit signed grid for first/last layers (paper §5.1).
+N8, P8 = -128.0, 127.0
+# 8-bit unsigned grid for their activations.
+PA8 = 255.0
+
+
+def conv(name, k, stride, cin, cout, groups=1, wq="low", aq=True, bn=True,
+         act="relu6"):
+    return dict(kind="conv", name=name, k=k, stride=stride, cin=cin,
+                cout=cout, groups=groups, wq=wq, aq=aq, bn=bn, act=act)
+
+
+def fc(name, cin, cout, wq="8bit", aq=True):
+    return dict(kind="fc", name=name, cin=cin, cout=cout, wq=wq, aq=aq)
+
+
+def gap():
+    return dict(kind="gap")
+
+
+def residual(name, layers, skip=True):
+    return dict(kind="residual", name=name, layers=layers, skip=skip)
+
+
+def se(name, c, r=4, wq="low"):
+    return dict(kind="se", name=name, c=c, r=r, wq=wq)
+
+
+# ---------------------------------------------------------------------------
+# initialization
+
+
+def _conv_shape(d):
+    return (d["k"], d["k"], d["cin"] // d["groups"], d["cout"])
+
+
+def _iter_layers(descs):
+    for d in descs:
+        if d["kind"] == "residual":
+            yield from _iter_layers(d["layers"])
+        else:
+            yield d
+
+
+def init_params(descs, key, num_classes):
+    """He-init all parameters. Returns (params, bn_state) dicts."""
+    params, bn = {}, {}
+    for d in _iter_layers(descs):
+        if d["kind"] == "conv":
+            key, k1 = jax.random.split(key)
+            shape = _conv_shape(d)
+            fan_in = shape[0] * shape[1] * shape[2]
+            params[d["name"] + ".w"] = (
+                jax.random.normal(k1, shape) * jnp.sqrt(2.0 / fan_in)
+            ).astype(jnp.float32)
+            if d["wq"] != "none":
+                params[d["name"] + ".s"] = jnp.asarray(0.05, jnp.float32)
+            if d["aq"]:
+                params[d["name"] + ".as"] = jnp.asarray(0.1, jnp.float32)
+            if d["bn"]:
+                params[d["name"] + ".bn_g"] = jnp.ones(d["cout"], jnp.float32)
+                params[d["name"] + ".bn_b"] = jnp.zeros(d["cout"], jnp.float32)
+                bn[d["name"] + ".bn_m"] = jnp.zeros(d["cout"], jnp.float32)
+                bn[d["name"] + ".bn_v"] = jnp.ones(d["cout"], jnp.float32)
+        elif d["kind"] == "fc":
+            key, k1 = jax.random.split(key)
+            params[d["name"] + ".w"] = (
+                jax.random.normal(k1, (d["cin"], d["cout"]))
+                * jnp.sqrt(1.0 / d["cin"])
+            ).astype(jnp.float32)
+            params[d["name"] + ".b"] = jnp.zeros(d["cout"], jnp.float32)
+            if d["wq"] != "none":
+                params[d["name"] + ".s"] = jnp.asarray(0.05, jnp.float32)
+            if d["aq"]:
+                params[d["name"] + ".as"] = jnp.asarray(0.1, jnp.float32)
+        elif d["kind"] == "se":
+            key, k1, k2 = jax.random.split(key, 3)
+            c, cr = d["c"], max(1, d["c"] // d["r"])
+            params[d["name"] + ".w1"] = (
+                jax.random.normal(k1, (c, cr)) * jnp.sqrt(2.0 / c)
+            ).astype(jnp.float32)
+            params[d["name"] + ".b1"] = jnp.zeros(cr, jnp.float32)
+            params[d["name"] + ".w2"] = (
+                jax.random.normal(k2, (cr, c)) * jnp.sqrt(2.0 / cr)
+            ).astype(jnp.float32)
+            params[d["name"] + ".b2"] = jnp.zeros(c, jnp.float32)
+            if d["wq"] != "none":
+                params[d["name"] + ".s1"] = jnp.asarray(0.05, jnp.float32)
+                params[d["name"] + ".s2"] = jnp.asarray(0.05, jnp.float32)
+    return params, bn
+
+
+def lowbit_weights(descs):
+    """Names of weight tensors on the runtime low-bit grid (osc targets)."""
+    names = []
+    for d in _iter_layers(descs):
+        if d["kind"] in ("conv", "fc") and d["wq"] == "low":
+            names.append(d["name"] + ".w")
+        elif d["kind"] == "se" and d["wq"] == "low":
+            names.extend([d["name"] + ".w1", d["name"] + ".w2"])
+    return names
+
+
+def weight_scale_of(name):
+    """Scale-parameter name for a weight tensor name."""
+    if name.endswith(".w1"):
+        return name[:-3] + ".s1"
+    if name.endswith(".w2"):
+        return name[:-3] + ".s2"
+    return name[:-2] + ".s"
+
+
+def depthwise_layers(descs):
+    """Names of depthwise conv layers (groups == cin), for Table 1/Fig 2-4."""
+    return [d["name"] for d in _iter_layers(descs)
+            if d["kind"] == "conv" and d["groups"] == d["cin"] and d["cin"] > 1]
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _act(x, kind):
+    if kind == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "hswish":
+        return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+    if kind == "none":
+        return x
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def _grids(d, hyper):
+    """(n, p) weight grid and p activation grid for a layer descriptor."""
+    if d["wq"] == "8bit":
+        nw, pw = jnp.asarray(N8), jnp.asarray(P8)
+        pa = jnp.asarray(PA8)
+    else:
+        nw, pw = hyper["n_w"], hyper["p_w"]
+        pa = hyper["p_a"]
+    return nw, pw, pa
+
+
+class Ctx:
+    """Mutable forward context: BN updates, calibration stats, aux."""
+
+    def __init__(self, training, hyper, estimator, collect_calib=False):
+        self.training = training
+        self.hyper = hyper
+        self.estimator = estimator
+        self.collect_calib = collect_calib
+        self.bn_out = {}
+        self.calib = {}
+
+
+def _quant_in(d, params, x, ctx):
+    """Quantize a layer's input activation (if enabled)."""
+    if not d.get("aq"):
+        return x
+    if ctx.collect_calib:
+        ctx.calib[d["name"] + ".absmean"] = jnp.mean(jnp.abs(x))
+    _, _, pa = _grids(d, ctx.hyper)
+    return quant.flagged_act_quant(
+        ctx.estimator, x, params[d["name"] + ".as"], pa, ctx.hyper["aq_on"])
+
+
+def _quant_w(d, params, wname, sname, ctx):
+    w = params[wname]
+    nw, pw, _ = _grids(d, ctx.hyper)
+    if d["wq"] == "none":
+        return w
+    return quant.flagged_weight_quant(
+        ctx.estimator, w, params[sname], nw, pw, ctx.hyper["wq_on"])
+
+
+@jax.custom_vjp
+def _bn_train_norm(x, gamma, beta):
+    """Batch-stat normalization with a hand-written backward.
+
+    XLA CPU autodiffs the mean/var reductions into ~8 memory passes; the
+    classic closed-form BN backward needs 3. ~1.6x faster per BN layer on
+    this host (see EXPERIMENTS.md §Perf).
+    """
+    m = jnp.mean(x, axis=(0, 1, 2))
+    v = jnp.var(x, axis=(0, 1, 2))
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * gamma + beta
+
+
+def _bn_train_fwd(x, gamma, beta):
+    m = jnp.mean(x, axis=(0, 1, 2))
+    v = jnp.var(x, axis=(0, 1, 2))
+    xhat = (x - m) * jax.lax.rsqrt(v + 1e-5)
+    return xhat * gamma + beta, (xhat, jax.lax.rsqrt(v + 1e-5), gamma)
+
+
+def _bn_train_bwd(res, g):
+    xhat, inv, gamma = res
+    axes = (0, 1, 2)
+    mg = jnp.mean(g, axis=axes)
+    mgx = jnp.mean(g * xhat, axis=axes)
+    dx = gamma * inv * (g - mg - xhat * mgx)
+    return dx, jnp.sum(g * xhat, axis=axes), jnp.sum(g, axis=axes)
+
+
+_bn_train_norm.defvjp(_bn_train_fwd, _bn_train_bwd)
+
+
+def _bn(d, params, bn, x, ctx):
+    name = d["name"]
+    if ctx.training:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        if ctx.collect_calib:
+            ctx.calib[name + ".bn_bm"] = mean
+            ctx.calib[name + ".bn_bv"] = var
+        mom = ctx.hyper["bn_mom"]
+        ctx.bn_out[name + ".bn_m"] = (1.0 - mom) * bn[name + ".bn_m"] + mom * mean
+        ctx.bn_out[name + ".bn_v"] = (1.0 - mom) * bn[name + ".bn_v"] + mom * var
+        # NOTE: the EMA update reuses the batch stats computed above (no
+        # gradient flows into the EMA), while the normalization itself goes
+        # through the custom-bwd kernel.
+        return _bn_train_norm(x, params[name + ".bn_g"], params[name + ".bn_b"])
+    mean = bn[name + ".bn_m"]
+    var = bn[name + ".bn_v"]
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return (x - mean) * inv * params[name + ".bn_g"] + params[name + ".bn_b"]
+
+
+def _depthwise_conv(x, w, stride):
+    """Depthwise KxK conv as a K*K-tap shift/multiply/accumulate.
+
+    XLA's CPU backend lowers grouped `conv_general_dilated` to a generic
+    loop that is ~100x slower than its pointwise matmul path (26 ms vs
+    0.24 ms fwd for a 16x16x96 block on this host). A depthwise conv is
+    just K*K shifted elementwise FMAs, which XLA fuses into one fast
+    elementwise loop — and whose transpose (backward) is equally fast.
+
+    x: (B, H, W, C); w: (K, K, 1, C); SAME padding.
+    """
+    k = w.shape[0]
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    H, W = x.shape[1], x.shape[2]
+    y = None
+    for dy in range(k):
+        for dx in range(k):
+            tap = xp[:, dy:dy + H, dx:dx + W, :] * w[dy, dx, 0, :]
+            y = tap if y is None else y + tap
+    if stride > 1:
+        y = y[:, ::stride, ::stride, :]
+    return y
+
+
+def _apply_conv(d, params, bn, x, ctx):
+    x = _quant_in(d, params, x, ctx)
+    w = _quant_w(d, params, d["name"] + ".w", d["name"] + ".s", ctx)
+    if d["groups"] == d["cin"] and d["groups"] > 1:
+        y = _depthwise_conv(x, w, d["stride"])
+    elif d["k"] == 1 and d["groups"] == 1 and d["stride"] == 1:
+        # Pointwise conv as a plain GEMM: XLA CPU's conv path is ~2x
+        # slower than its dot path for the same contraction (single-core
+        # Eigen); (B,H,W,Ci) @ (Ci,Co) hits the fast GEMM directly.
+        B, H, W, _ = x.shape
+        ci, co = w.shape[2], w.shape[3]
+        y = (x.reshape(-1, ci) @ w.reshape(ci, co)).reshape(B, H, W, co)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=(d["stride"], d["stride"]),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=d["groups"],
+        )
+    if d["bn"]:
+        y = _bn(d, params, bn, y, ctx)
+    return _act(y, d["act"])
+
+
+def _apply_fc(d, params, bn, x, ctx):
+    x = _quant_in(d, params, x, ctx)
+    nw, pw, _ = _grids(d, ctx.hyper)
+    if d["wq"] == "none":
+        y = x @ params[d["name"] + ".w"]
+    else:
+        # Pallas fused quant-matmul on the classifier hot path, gated by
+        # wq_on exactly like flagged_weight_quant.
+        qmm = quant.make_quant_matmul(ctx.estimator)
+        w = params[d["name"] + ".w"]
+        s = params[d["name"] + ".s"]
+        y = (ctx.hyper["wq_on"] * qmm(x, w, s, nw, pw)
+             + (1.0 - ctx.hyper["wq_on"]) * (x @ w))
+    return y + params[d["name"] + ".b"]
+
+
+def _apply_se(d, params, bn, x, ctx):
+    name = d["name"]
+    nw, pw, _ = _grids(d, ctx.hyper)
+    z = jnp.mean(x, axis=(1, 2))  # (B, C)
+    w1 = params[name + ".w1"]
+    w2 = params[name + ".w2"]
+    if d["wq"] != "none":
+        w1 = quant.flagged_weight_quant(ctx.estimator, w1, params[name + ".s1"],
+                                        nw, pw, ctx.hyper["wq_on"])
+        w2 = quant.flagged_weight_quant(ctx.estimator, w2, params[name + ".s2"],
+                                        nw, pw, ctx.hyper["wq_on"])
+    z = jnp.maximum(z @ w1 + params[name + ".b1"], 0.0)
+    z = z @ w2 + params[name + ".b2"]
+    gate = jnp.clip(z + 3.0, 0.0, 6.0) / 6.0  # hard sigmoid
+    return x * gate[:, None, None, :]
+
+
+def apply_layers(descs, params, bn, x, ctx):
+    for d in descs:
+        kind = d["kind"]
+        if kind == "conv":
+            x = _apply_conv(d, params, bn, x, ctx)
+        elif kind == "fc":
+            x = _apply_fc(d, params, bn, x, ctx)
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(1, 2))
+        elif kind == "se":
+            x = _apply_se(d, params, bn, x, ctx)
+        elif kind == "residual":
+            y = apply_layers(d["layers"], params, bn, x, ctx)
+            x = x + y if d["skip"] else y
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    return x
+
+
+def forward(descs, params, bn, x, *, training, hyper, estimator,
+            collect_calib=False):
+    """Full forward pass.
+
+    Returns (logits, new_bn_state, calib) where new_bn_state equals ``bn``
+    untouched in eval mode and calib is populated only when
+    ``collect_calib`` (the bn_stats artifact).
+    """
+    ctx = Ctx(training, hyper, estimator, collect_calib)
+    logits = apply_layers(descs, params, bn, x, ctx)
+    new_bn = dict(bn)
+    new_bn.update(ctx.bn_out)
+    return logits, new_bn, ctx.calib

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: blocked matmul with the RHS fake-quantized on load.
+
+The pointwise (1x1) convolutions and the classifier of MobileNet-family
+networks are matmuls; under QAT each one consumes a fake-quantized weight.
+Done naively this materializes fq(W) in HBM and then reads it back for the
+matmul. This kernel fuses the fake-quant into the weight-block load so the
+quantize -> matmul path never round-trips HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles (M, N) into
+(BM, BN) = (128, 128) MXU-aligned output blocks with the full K dimension
+resident per block (K is small for these models). Per-block VMEM:
+BM*K + K*BN + BM*BN floats; with K <= 512 this is <= 768 KiB, comfortably
+inside VMEM, and the inner product runs on the MXU systolic array while the
+fake-quant of the next weight block overlaps on the VPU.
+
+interpret=True on CPU; numerics asserted against ref.quant_matmul_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128
+BN = 128
+
+
+def _qmm_kernel(x_ref, w_ref, sc_ref, o_ref):
+    s = sc_ref[0]
+    n = sc_ref[1]
+    p = sc_ref[2]
+    w = w_ref[...]
+    # fake-quant fused into the weight load (VPU), matmul on the MXU
+    wq = s * jnp.clip(jnp.round(w / s), n, p)
+    o_ref[...] = jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+def quant_matmul(x, w, s, n, p, *, interpret: bool = True):
+    """Compute ``x @ fake_quant(w, s, n, p)`` with the fused Pallas kernel.
+
+    Args:
+      x: (M, K) activations.
+      w: (K, N) weights (latent, float).
+      s, n, p: per-tensor quantization step and integer limits.
+
+    Shapes are padded up to the (BM, BN) output tiling and cropped back, so
+    arbitrary M/N/K are accepted.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, f"contraction mismatch {K} vs {K2}"
+
+    xp = _pad_to(x, 0, BM)
+    wp = _pad_to(w, 1, BN)
+    Mp, Np = xp.shape[0], wp.shape[1]
+    sc = jnp.stack([jnp.asarray(s, jnp.float32),
+                    jnp.asarray(n, jnp.float32),
+                    jnp.asarray(p, jnp.float32)])
+
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=(Mp // BM, Np // BN),
+        in_specs=[
+            pl.BlockSpec((BM, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((3,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sc)
+    return out[:M, :N]

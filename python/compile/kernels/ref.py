@@ -1,0 +1,100 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written in straight jax.numpy with no pallas imports. pytest compares the
+kernels against these oracles over shape/dtype sweeps (see
+python/tests/test_kernels.py); they are also reused by the L2 model code
+whenever an array is too awkward to push through a kernel (e.g. 0-d edge
+cases in tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(w, s, n, p):
+    """LSQ-style fake quantization: scale -> round -> clip -> dequant.
+
+    Args:
+      w: float array, latent weights (any shape).
+      s: scalar step size (positive).
+      n, p: scalar integer grid limits (e.g. -4, 3 for signed 3-bit).
+
+    Returns:
+      Quantized-dequantized array, same shape as ``w``.
+    """
+    return s * jnp.clip(jnp.round(w / s), n, p)
+
+
+def int_weights_ref(w, s, n, p):
+    """Integer (grid-index) representation of ``w``: clip(round(w/s), n, p)."""
+    return jnp.clip(jnp.round(w / s), n, p)
+
+
+def osc_update_ref(w, s, n, p, f, b, fint, psign, wintp, iema, m, f_th):
+    """Algorithm 1 (iterative weight freezing) single-step state machine.
+
+    All state arrays share ``w``'s shape and are float32 (masks/ints are
+    stored as floats so a single dtype flows through the HLO graph).
+
+    Args:
+      w:     latent weights *after* this step's SGD update.
+      s:     quantization step size (scalar).
+      n, p:  integer grid limits (scalars).
+      f:     oscillation-frequency EMA (eq. 4).
+      b:     frozen mask in {0, 1}.
+      fint:  integer value a frozen weight is pinned to.
+      psign: sign of the previous integer transition, in {-1, 0, +1}.
+      wintp: previous step's integer weights.
+      iema:  EMA of the integer weights (alg. 1 line 15).
+      m:     EMA momentum (scalar).
+      f_th:  freezing threshold (scalar); >= 1.0 disables freezing.
+
+    Returns:
+      Tuple (w_out, f_out, b_out, fint_out, psign_out, wint_out, iema_out,
+      osc) where ``osc`` is the per-weight oscillation indicator o^t in
+      {0, 1} for this step.
+    """
+    # Frozen weights ignore the SGD proposal and stay pinned (in the
+    # *integer* domain, so a moving scale s cannot re-round them).
+    w_eff = jnp.where(b > 0.5, s * fint, w)
+    wint = jnp.clip(jnp.round(w_eff / s), n, p)
+
+    delta = wint - wintp
+    changed = delta != 0
+    sign = jnp.sign(delta)
+    # An oscillation: integer value changed AND direction flipped vs the
+    # previous change (psign == 0 means "no previous change yet").
+    osc = changed & (sign != psign) & (psign != 0)
+    osc_f = osc.astype(w.dtype)
+
+    f_out = m * osc_f + (1.0 - m) * f
+    iema_out = m * wint + (1.0 - m) * iema
+
+    newly = (f_out > f_th) & (b < 0.5)
+    b_out = jnp.where(newly, 1.0, b)
+    fint_out = jnp.where(newly, jnp.clip(jnp.round(iema_out), n, p), fint)
+
+    w_out = jnp.where(b_out > 0.5, s * fint_out, w_eff)
+    wint_out = jnp.clip(jnp.round(w_out / s), n, p)
+    psign_out = jnp.where(changed, sign, psign)
+
+    return w_out, f_out, b_out, fint_out, psign_out, wint_out, iema_out, osc_f
+
+
+def quant_matmul_ref(x, w, s, n, p):
+    """Matmul with the RHS fake-quantized: x @ fq(w)."""
+    return x @ fake_quant_ref(w, s, n, p)
+
+
+def dampening_loss_ref(w, s, n, p):
+    """Oscillation-dampening regularizer (eq. 5), per-tensor sum.
+
+    || fq(w) - clip(w, s*n, s*p) ||_F^2 with no gradient through fq(w).
+    The caller is responsible for stop_gradient on the first operand when
+    differentiating; the reference just computes the value.
+    """
+    wq = fake_quant_ref(w, s, n, p)
+    wc = jnp.clip(w, s * n, s * p)
+    return jnp.sum((wq - wc) ** 2)

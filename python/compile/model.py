@@ -1,0 +1,77 @@
+"""L2 top level: assemble a model + full training state for AOT lowering.
+
+``build_model(name, ...)`` returns a ``ModelBundle`` with the op-list
+descriptors, initial state pytree (params / opt / bn / osc), example batch
+and default hyper dict — everything aot.py needs to lower the train / eval
+/ bn-stats artifacts and dump the initial state binary for the Rust
+coordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import arch, train
+from .models import REGISTRY
+
+INPUT_HW = 16
+DEFAULT_BATCH = 16
+DEFAULT_CLASSES = 10
+
+
+def default_hyper():
+    """Default runtime hyper scalars: FP training, everything disabled."""
+    return {
+        "aq_on": jnp.zeros(()),
+        "bn_mom": jnp.asarray(0.1),
+        "f_th": jnp.asarray(1.1),      # >= 1 disables freezing
+        "lam": jnp.zeros(()),          # dampening off
+        "lr": jnp.asarray(0.01),
+        "m_osc": jnp.asarray(0.01),
+        "n_w": jnp.asarray(-4.0),      # 3-bit signed grid by default
+        "p_a": jnp.asarray(7.0),
+        "p_w": jnp.asarray(3.0),
+        "mu": jnp.asarray(0.9),
+        "wq_on": jnp.zeros(()),
+    }
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    name: str
+    descs: List[dict]
+    meta: Dict[str, Any]
+    state: Dict[str, Dict[str, jnp.ndarray]]
+    batch: Dict[str, jnp.ndarray]
+    hyper: Dict[str, jnp.ndarray]
+    lowbit: List[str]
+    num_classes: int
+    batch_size: int
+
+    def param_count(self) -> int:
+        return sum(int(v.size) for v in self.state["params"].values())
+
+
+def build_model(name: str, *, num_classes: int = DEFAULT_CLASSES,
+                batch_size: int = DEFAULT_BATCH, seed: int = 0,
+                input_hw: int = INPUT_HW) -> ModelBundle:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}")
+    descs, meta = REGISTRY[name](num_classes)
+    key = jax.random.PRNGKey(seed)
+    params, bn = arch.init_params(descs, key, num_classes)
+    lowbit = arch.lowbit_weights(descs)
+    osc = train.init_osc_state(params, lowbit)
+    opt = {k: jnp.zeros_like(v) for k, v in params.items()}
+    state = {"params": params, "opt": opt, "bn": bn, "osc": osc}
+    batch = {
+        "x": jnp.zeros((batch_size, input_hw, input_hw, 3), jnp.float32),
+        "y": jnp.zeros((batch_size, num_classes), jnp.float32),
+    }
+    return ModelBundle(name=name, descs=descs, meta=meta, state=state,
+                       batch=batch, hyper=default_hyper(), lowbit=lowbit,
+                       num_classes=num_classes, batch_size=batch_size)

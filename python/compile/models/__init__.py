@@ -1,0 +1,17 @@
+"""Tiny-scale model zoo mirroring the paper's evaluation networks.
+
+Each module exposes ``build(num_classes) -> (descs, meta)`` where descs is
+the arch.py op list and meta records the feature width etc. The models are
+width/depth-scaled versions of the originals that keep the layer *types*
+verbatim — in particular the depthwise 3x3 convolutions (9 weights per
+output channel) that drive the oscillation/BN pathology the paper studies.
+"""
+
+from . import mobilenet_v2, mobilenet_v3, efficientnet_lite, resnet
+
+REGISTRY = {
+    "mbv2": mobilenet_v2.build,
+    "mbv3": mobilenet_v3.build,
+    "efflite": efficientnet_lite.build,
+    "resnet18": resnet.build,
+}

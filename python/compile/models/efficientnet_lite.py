@@ -1,0 +1,48 @@
+"""Tiny EfficientNet-lite analogue (MBConv without SE, ReLU6).
+
+EfficientNet-lite removes squeeze-excite and swaps swish for ReLU6 so the
+network is integer-quantization friendly; structurally it is MBConv stacks.
+This analogue keeps that layout at reduced width/depth for 32x32 inputs.
+"""
+
+from ..arch import conv, fc, gap, residual
+
+
+def _mbconv(name, cin, cout, stride, expand):
+    mid = cin * expand
+    layers = []
+    if expand != 1:
+        layers.append(conv(f"{name}.pw1", 1, 1, cin, mid, act="relu6"))
+    layers.append(conv(f"{name}.dw", 3, stride, mid, mid, groups=mid,
+                       act="relu6"))
+    layers.append(conv(f"{name}.pw2", 1, 1, mid, cout, act="none"))
+    skip = stride == 1 and cin == cout
+    return residual(name, layers, skip=skip)
+
+
+# (expand, cout, n, stride) — compressed EfficientNet-lite0 schedule.
+STAGES = [
+    (1, 16, 1, 1),
+    (4, 24, 2, 2),
+    (4, 40, 2, 2),
+    (4, 64, 1, 1),
+]
+
+HEAD = 128
+
+
+def build(num_classes=10):
+    descs = [conv("stem", 3, 1, 3, 16, wq="8bit", act="relu6")]
+    cin = 16
+    bi = 0
+    for expand, cout, n, stride in STAGES:
+        for i in range(n):
+            bi += 1
+            descs.append(_mbconv(f"b{bi}", cin, cout,
+                                 stride if i == 0 else 1, expand))
+            cin = cout
+    descs.append(conv("head", 1, 1, cin, HEAD, act="relu6"))
+    descs.append(gap())
+    descs.append(fc("fc", HEAD, num_classes, wq="8bit"))
+    meta = dict(name="efflite", head=HEAD, blocks=bi)
+    return descs, meta

@@ -1,0 +1,56 @@
+"""Tiny MobileNetV2 analogue (inverted residual blocks, ReLU6).
+
+Structure mirrors Sandler et al. 2018 scaled to 32x32 inputs and ~130k
+parameters: stem 3x3 conv, a stack of inverted residual blocks
+(pointwise-expand -> depthwise 3x3 -> pointwise-project, skip when
+stride == 1 and cin == cout), a 1x1 head conv, GAP, and an FC classifier.
+
+Quantization placement follows the paper §5.1: first (stem) and last (fc)
+layers on a fixed 8-bit grid, everything else on the runtime low-bit grid.
+The depthwise layers are the oscillation hot-spots Table 1 / Figs 2-4 probe;
+their names follow the paper's ``conv.<block>.<i>`` convention so the
+analysis code can reference e.g. ``b3.dw`` the way the paper cites conv.3.1.
+"""
+
+from ..arch import conv, fc, gap, residual
+
+
+def _inverted_residual(name, cin, cout, stride, expand):
+    mid = cin * expand
+    layers = []
+    if expand != 1:
+        layers.append(conv(f"{name}.pw1", 1, 1, cin, mid, act="relu6"))
+    layers.append(conv(f"{name}.dw", 3, stride, mid, mid, groups=mid,
+                       act="relu6"))
+    layers.append(conv(f"{name}.pw2", 1, 1, mid, cout, act="none"))
+    skip = stride == 1 and cin == cout
+    return residual(name, layers, skip=skip)
+
+
+# (expand, cout, n_blocks, stride) per stage — a compressed copy of the
+# MobileNetV2 table with width ~0.5 and depth trimmed for 32x32 inputs.
+STAGES = [
+    (1, 16, 1, 1),
+    (4, 24, 2, 2),
+    (4, 32, 2, 2),
+    (4, 48, 1, 1),
+]
+
+HEAD = 96
+
+
+def build(num_classes=10):
+    descs = [conv("stem", 3, 1, 3, 16, wq="8bit", act="relu6")]
+    cin = 16
+    bi = 0
+    for expand, cout, n, stride in STAGES:
+        for i in range(n):
+            bi += 1
+            descs.append(_inverted_residual(
+                f"b{bi}", cin, cout, stride if i == 0 else 1, expand))
+            cin = cout
+    descs.append(conv("head", 1, 1, cin, HEAD, act="relu6"))
+    descs.append(gap())
+    descs.append(fc("fc", HEAD, num_classes, wq="8bit"))
+    meta = dict(name="mbv2", head=HEAD, blocks=bi)
+    return descs, meta

@@ -1,0 +1,48 @@
+"""Tiny MobileNetV3-Small analogue (SE blocks, h-swish).
+
+Same inverted-residual skeleton as the V2 analogue plus squeeze-excite
+modules and hard-swish activations in the later stages, mirroring Howard
+et al. 2019. SE FC weights sit on the low-bit grid like other interior
+weights; SE internals are not activation-quantized (they follow the
+normalizing-layer exemption of §5.1).
+"""
+
+from ..arch import conv, fc, gap, residual, se
+
+
+def _block(name, cin, cout, stride, expand, use_se, act):
+    mid = cin * expand
+    layers = []
+    if expand != 1:
+        layers.append(conv(f"{name}.pw1", 1, 1, cin, mid, act=act))
+    layers.append(conv(f"{name}.dw", 3, stride, mid, mid, groups=mid, act=act))
+    if use_se:
+        layers.append(se(f"{name}.se", mid))
+    layers.append(conv(f"{name}.pw2", 1, 1, mid, cout, act="none"))
+    skip = stride == 1 and cin == cout
+    return residual(name, layers, skip=skip)
+
+
+# (expand, cout, stride, se, act) — compressed MobileNetV3-Small schedule.
+BLOCKS = [
+    (1, 16, 1, True, "relu"),
+    (4, 24, 2, False, "relu"),
+    (4, 24, 1, False, "relu"),
+    (4, 40, 2, True, "hswish"),
+    (4, 48, 1, True, "hswish"),
+]
+
+HEAD = 96
+
+
+def build(num_classes=10):
+    descs = [conv("stem", 3, 1, 3, 16, wq="8bit", act="hswish")]
+    cin = 16
+    for i, (expand, cout, stride, use_se, act) in enumerate(BLOCKS, start=1):
+        descs.append(_block(f"b{i}", cin, cout, stride, expand, use_se, act))
+        cin = cout
+    descs.append(conv("head", 1, 1, cin, HEAD, act="hswish"))
+    descs.append(gap())
+    descs.append(fc("fc", HEAD, num_classes, wq="8bit"))
+    meta = dict(name="mbv3", head=HEAD, blocks=len(BLOCKS))
+    return descs, meta

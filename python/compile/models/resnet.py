@@ -1,0 +1,42 @@
+"""Tiny ResNet-18 analogue (basic blocks, full 3x3 convolutions).
+
+The control network for Table 1/2: full convolutions have hundreds to
+thousands of weights per output channel, so oscillation-induced BN drift
+averages out (law of large numbers) — the paper's contrast case to the
+depthwise layers of the MobileNet family.
+"""
+
+from ..arch import conv, fc, gap, residual
+
+
+def _basic_block(name, cin, cout, stride):
+    layers = [
+        conv(f"{name}.c1", 3, stride, cin, cout, act="relu"),
+        conv(f"{name}.c2", 3, 1, cout, cout, act="none"),
+    ]
+    skip = stride == 1 and cin == cout
+    return residual(name, layers, skip=skip)
+
+
+# (cout, n_blocks, stride) — CIFAR-style ResNet-18 skeleton.
+STAGES = [
+    (16, 2, 1),
+    (32, 2, 2),
+    (64, 2, 2),
+]
+
+
+def build(num_classes=10):
+    descs = [conv("stem", 3, 1, 3, 16, wq="8bit", act="relu")]
+    cin = 16
+    bi = 0
+    for cout, n, stride in STAGES:
+        for i in range(n):
+            bi += 1
+            descs.append(_basic_block(f"l{bi}", cin, cout,
+                                      stride if i == 0 else 1))
+            cin = cout
+    descs.append(gap())
+    descs.append(fc("fc", 64, num_classes, wq="8bit"))
+    meta = dict(name="resnet18", head=64, blocks=bi)
+    return descs, meta

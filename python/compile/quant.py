@@ -1,0 +1,199 @@
+"""L2 quantizer library: LSQ fake-quant with swappable gradient estimators.
+
+Implements the quantization formulation of the paper (eq. 1) with learned
+step sizes (LSQ, Esser et al. 2020) and the gradient-estimator variants the
+paper analyses (section 3 / appendix A.1):
+
+  * ``lsq``  — vanilla STE within the grid (eq. 2) + LSQ step-size gradient.
+  * ``ewgs`` — element-wise gradient scaling (J. Lee 2021): multiplicative
+               1 + delta * sign(g) * (w/s - round(w/s)).
+  * ``psg``  — position-based scaled gradient (Kim et al. 2020):
+               multiplicative |round(w/s) - w/s| + eps.
+  * ``dsq``  — differentiable soft quantization (Gong et al. 2019): the
+               derivative of a tanh soft staircase, large near the decision
+               boundary and small at the bin center.
+  * ``pact`` — PACT (Choi et al. 2018) for activations: learned clipping
+               level alpha with d/dalpha = 1[x >= alpha].
+
+Forward passes route through the L1 Pallas kernels (fake_quant /
+quant_matmul); backward passes are explicit custom_vjp rules, which is what
+makes the estimator swap possible at all (and is also why oscillations
+happen — see section 2.2 of the paper).
+
+All quantization grid limits (n, p) are *runtime scalars*, so one lowered
+artifact serves any bit-width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fake_quant import fake_quant as fake_quant_kernel
+from .kernels.quant_matmul import quant_matmul as quant_matmul_kernel
+
+# Estimator hyper-parameters (trace-time constants; the paper treats them
+# as fixed per-method settings).
+EWGS_DELTA = 0.2
+PSG_EPS = 0.01
+DSQ_K = 5.0
+
+ESTIMATORS = ("lsq", "ewgs", "psg", "dsq", "pact")
+
+
+def _estimator_factor(estimator: str, winv, g):
+    """Multiplicative factor the estimator applies to the masked STE grad.
+
+    ``winv`` is w/s (grid domain), ``g`` the incoming cotangent. All of the
+    methods in the paper's 'multiplicative' family reduce to such a factor
+    (appendix A.1) — which is exactly why they cannot stop oscillations.
+    """
+    if estimator in ("lsq", "pact"):
+        return jnp.ones_like(winv)
+    r = jnp.round(winv)
+    t = winv - r  # signed distance from the nearest grid point, [-0.5, 0.5]
+    if estimator == "ewgs":
+        return 1.0 + EWGS_DELTA * jnp.sign(g) * t
+    if estimator == "psg":
+        return jnp.abs(t) + PSG_EPS
+    if estimator == "dsq":
+        # derivative of the tanh soft staircase; u = |t| - 0.5 is the
+        # (negative) distance from the decision boundary
+        u = jnp.abs(t) - 0.5
+        return DSQ_K * (1.0 - jnp.tanh(DSQ_K * u) ** 2) / (2.0 * jnp.tanh(DSQ_K / 2.0))
+    raise ValueError(f"unknown estimator {estimator!r}")
+
+
+def _lsq_scale_grad(winv, g, n, p):
+    """LSQ gradient for the step size s, with the 1/sqrt(N*p) grad scale."""
+    r = jnp.clip(jnp.round(winv), n, p)
+    ds = jnp.where(winv <= n, n, jnp.where(winv >= p, p, r - winv))
+    gscale = jax.lax.rsqrt(jnp.asarray(winv.size, jnp.float32) * jnp.maximum(p, 1.0))
+    return jnp.sum(g * ds) * gscale
+
+
+@functools.lru_cache(maxsize=None)
+def make_weight_quantizer(estimator: str):
+    """Build ``qw(w, s, n, p) -> w_hat`` with the estimator's backward rule.
+
+    Forward: the L1 Pallas fake-quant kernel. Backward: masked STE times the
+    estimator factor for w; LSQ rule for s; zeros for the grid limits.
+    """
+
+    @jax.custom_vjp
+    def qw(w, s, n, p):
+        return fake_quant_kernel(w, s, n, p)
+
+    def fwd(w, s, n, p):
+        return qw(w, s, n, p), (w, s, n, p)
+
+    def bwd(res, g):
+        w, s, n, p = res
+        winv = w / s
+        mask = ((winv >= n) & (winv <= p)).astype(g.dtype)
+        dw = g * mask * _estimator_factor(estimator, winv, g)
+        ds = _lsq_scale_grad(winv, g, n, p)
+        return dw, ds, jnp.zeros(()), jnp.zeros(())
+
+    qw.defvjp(fwd, bwd)
+    return qw
+
+
+@functools.lru_cache(maxsize=None)
+def make_act_quantizer(estimator: str):
+    """Build ``qa(x, s, p) -> x_hat`` for unsigned activations on [0, p].
+
+    For ``pact`` the step is parameterized by the learned clipping level
+    alpha = s * p and the alpha gradient is the PACT rule 1[x >= alpha]
+    (chain-ruled onto s); the other estimators use the LSQ rule.
+    """
+
+    @jax.custom_vjp
+    def qa(x, s, p):
+        return s * jnp.clip(jnp.round(x / s), 0.0, p)
+
+    def fwd(x, s, p):
+        return qa(x, s, p), (x, s, p)
+
+    def bwd(res, g):
+        x, s, p = res
+        xinv = x / s
+        mask = ((xinv >= 0.0) & (xinv <= p)).astype(g.dtype)
+        if estimator == "pact":
+            dx = g * mask
+            # alpha = s*p with alpha learned; PACT: dL/dalpha = sum g[x >= alpha],
+            # chain rule ds = dL/dalpha * dalpha/ds = sum(g[x >= alpha]) * p, but we
+            # keep the un-scaled form so the effective alpha step matches LSQ runs.
+            ds = jnp.sum(g * (xinv >= p).astype(g.dtype))
+        else:
+            dx = g * mask * _estimator_factor(estimator, xinv, g)
+            r = jnp.clip(jnp.round(xinv), 0.0, p)
+            dse = jnp.where(xinv <= 0.0, 0.0, jnp.where(xinv >= p, p, r - xinv))
+            gscale = jax.lax.rsqrt(jnp.asarray(x.size, jnp.float32) * jnp.maximum(p, 1.0))
+            ds = jnp.sum(g * dse) * gscale
+        return dx, ds, jnp.zeros(())
+
+    qa.defvjp(fwd, bwd)
+    return qa
+
+
+@functools.lru_cache(maxsize=None)
+def make_quant_matmul(estimator: str):
+    """Build ``qmm(x, w, s, n, p) -> x @ fq(w)`` with a custom backward.
+
+    Forward: the L1 fused Pallas matmul (fake-quant on the weight-block
+    load). Backward: dx through the quantized weight; dw via the masked
+    STE (+ estimator factor); ds via the LSQ rule chained through the
+    matmul cotangent.
+    """
+
+    @jax.custom_vjp
+    def qmm(x, w, s, n, p):
+        return quant_matmul_kernel(x, w, s, n, p)
+
+    def fwd(x, w, s, n, p):
+        return qmm(x, w, s, n, p), (x, w, s, n, p)
+
+    def bwd(res, g):
+        x, w, s, n, p = res
+        winv = w / s
+        wq = s * jnp.clip(jnp.round(winv), n, p)
+        dx = g @ wq.T
+        gw = x.T @ g  # cotangent wrt the quantized weight
+        mask = ((winv >= n) & (winv <= p)).astype(g.dtype)
+        dw = gw * mask * _estimator_factor(estimator, winv, gw)
+        ds = _lsq_scale_grad(winv, gw, n, p)
+        return dx, dw, ds, jnp.zeros(()), jnp.zeros(())
+
+    qmm.defvjp(fwd, bwd)
+    return qmm
+
+
+def flagged_weight_quant(estimator: str, w, s, n, p, wq_on):
+    """``wq_on``-gated fake quant: wq_on*fq(w) + (1-wq_on)*w.
+
+    The gate is a runtime scalar, so the same artifact runs FP pretraining
+    (wq_on = 0) and QAT (wq_on = 1); gradients compose linearly so the LSQ
+    scale receives zero gradient while gated off.
+    """
+    qw = make_weight_quantizer(estimator)
+    return wq_on * qw(w, s, n, p) + (1.0 - wq_on) * w
+
+
+def flagged_act_quant(estimator: str, x, s, p, aq_on):
+    """``aq_on``-gated activation quant (see flagged_weight_quant)."""
+    qa = make_act_quantizer(estimator)
+    return aq_on * qa(x, s, p) + (1.0 - aq_on) * x
+
+
+def dampening_loss(w, s, n, p):
+    """Oscillation-dampening regularizer (eq. 5) for one weight tensor.
+
+    The bin centers fq(w) are the (stop-gradient) target; latent weights are
+    clipped to the grid range so clipped weights receive no pull (sec. 4.2).
+    """
+    wq = jax.lax.stop_gradient(s * jnp.clip(jnp.round(w / s), n, p))
+    wc = jnp.clip(w, s * n, s * p)
+    return jnp.sum((wq - wc) ** 2)

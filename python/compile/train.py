@@ -1,0 +1,186 @@
+"""L2 training/eval/bn-stats step functions — the AOT compilation units.
+
+Each function here is pure: all mutable training state (parameters, SGD
+momenta, BN running statistics, Algorithm-1 oscillation state) is threaded
+through the signature, so the Rust coordinator (L3) owns every byte of
+state between steps and Python never runs after `make artifacts`.
+
+``train_step`` per invocation:
+  1. forward + cross-entropy + the oscillation-dampening regularizer
+     (eq. 5) weighted by the runtime scalar lambda,
+  2. backward through the estimator's custom_vjp rules (quant.py),
+  3. SGD-with-momentum update (scales clamped positive),
+  4. the Algorithm-1 Pallas kernel over every low-bit weight tensor:
+     oscillation-frequency EMA, integer EMA, iterative freezing against the
+     runtime threshold f_th,
+  5. scalar metrics: loss/ce/damp/acc plus the paper's oscillation metric
+     (fraction of weights with f > 0.005) and the frozen fraction.
+
+Runtime hyper scalars (all f32 0-d):
+  lr, mu (SGD momentum), lam (dampening weight), f_th (freeze threshold,
+  >= 1 disables), m_osc (EMA momentum, eq. 4), bn_mom, n_w/p_w (weight
+  grid), p_a (activation grid), wq_on/aq_on (quantization gates).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import arch
+from .kernels.osc_update import osc_update
+from .quant import dampening_loss
+
+# Threshold defining "an oscillating weight" for the Osc.% metric
+# (Tables 4/5 use f > 0.005).
+OSC_METRIC_TH = 0.005
+
+SCALE_MIN = 1e-5
+
+HYPER_KEYS = ("aq_on", "bn_mom", "f_th", "lam", "lr", "m_osc", "n_w",
+              "p_a", "p_w", "mu", "wq_on")
+
+
+def init_osc_state(params, lowbit):
+    """Fresh Algorithm-1 state for every low-bit weight tensor.
+
+    Six arrays per tensor: f (freq EMA), b (frozen mask), fint (pinned
+    integer), psign (previous transition sign), wintp (previous integer
+    weights), iema (integer EMA). wintp/iema start at the current integer
+    weights so step 0 records no spurious transition.
+    """
+    osc = {}
+    for name in lowbit:
+        w = params[name]
+        s = params[arch.weight_scale_of(name)]
+        wint = jnp.round(w / s)
+        osc[name + "#f"] = jnp.zeros_like(w)
+        osc[name + "#b"] = jnp.zeros_like(w)
+        osc[name + "#fint"] = jnp.zeros_like(w)
+        osc[name + "#psign"] = jnp.zeros_like(w)
+        osc[name + "#wintp"] = wint
+        osc[name + "#iema"] = wint
+    return osc
+
+
+def _cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y * logp, axis=-1))
+
+
+def _accuracy(logits, y):
+    return jnp.mean(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y, axis=-1))
+        .astype(jnp.float32))
+
+
+def make_train_step(descs, estimator):
+    """Build the jittable train step for one model/estimator pair."""
+    lowbit = arch.lowbit_weights(descs)
+
+    def train_step(state, batch, hyper):
+        params, opt, bn, osc = (state["params"], state["opt"],
+                                state["bn"], state["osc"])
+
+        def loss_fn(params):
+            logits, bn_new, _ = arch.forward(
+                descs, params, bn, batch["x"], training=True, hyper=hyper,
+                estimator=estimator)
+            ce = _cross_entropy(logits, batch["y"])
+            damp = jnp.zeros(())
+            for name in lowbit:
+                damp = damp + dampening_loss(
+                    params[name], params[arch.weight_scale_of(name)],
+                    hyper["n_w"], hyper["p_w"])
+            # Gate the regularizer with wq_on so FP pretraining ignores it.
+            loss = ce + hyper["wq_on"] * hyper["lam"] * damp
+            return loss, (bn_new, logits, ce, damp)
+
+        (loss, (bn_new, logits, ce, damp)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+
+        # SGD with momentum; step-size parameters clamped positive so LSQ
+        # cannot push a scale through zero.
+        new_opt = {}
+        new_params = {}
+        for k in params:
+            v = hyper["mu"] * opt[k] + grads[k]
+            new_opt[k] = v
+            upd = params[k] - hyper["lr"] * v
+            if k.endswith((".s", ".s1", ".s2", ".as")):
+                upd = jnp.maximum(upd, SCALE_MIN)
+            new_params[k] = upd
+
+        # Algorithm 1 over every low-bit weight tensor (L1 Pallas kernel).
+        new_osc = {}
+        osc_cnt = jnp.zeros(())
+        frz_cnt = jnp.zeros(())
+        total = 0
+        for name in lowbit:
+            s = new_params[arch.weight_scale_of(name)]
+            (w_out, f, b, fint, psign, wintp, iema, _o) = osc_update(
+                new_params[name], s, hyper["n_w"], hyper["p_w"],
+                osc[name + "#f"], osc[name + "#b"], osc[name + "#fint"],
+                osc[name + "#psign"], osc[name + "#wintp"],
+                osc[name + "#iema"], hyper["m_osc"], hyper["f_th"])
+            new_params[name] = w_out
+            new_osc[name + "#f"] = f
+            new_osc[name + "#b"] = b
+            new_osc[name + "#fint"] = fint
+            new_osc[name + "#psign"] = psign
+            new_osc[name + "#wintp"] = wintp
+            new_osc[name + "#iema"] = iema
+            osc_cnt = osc_cnt + jnp.sum((f > OSC_METRIC_TH).astype(jnp.float32))
+            frz_cnt = frz_cnt + jnp.sum(b)
+            total += f.size
+
+        metrics = {
+            "loss": loss,
+            "ce": ce,
+            "damp": damp,
+            "acc": _accuracy(logits, batch["y"]),
+            "osc_frac": osc_cnt / float(total),
+            "frozen_frac": frz_cnt / float(total),
+        }
+        new_state = {"params": new_params, "opt": new_opt, "bn": bn_new,
+                     "osc": new_osc}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(descs, estimator="lsq"):
+    """Eval step: BN running stats, quantization per the same runtime gates.
+
+    Returns (loss, correct_count, acc) so the coordinator can aggregate
+    exactly over an epoch.
+    """
+
+    def eval_step(params, bn, batch, hyper):
+        logits, _, _ = arch.forward(
+            descs, params, bn, batch["x"], training=False, hyper=hyper,
+            estimator=estimator)
+        ce = _cross_entropy(logits, batch["y"])
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == jnp.argmax(batch["y"], axis=-1))
+            .astype(jnp.float32))
+        return {"loss": ce, "correct": correct,
+                "acc": _accuracy(logits, batch["y"])}
+
+    return eval_step
+
+
+def make_bn_stats_step(descs, estimator="lsq"):
+    """Calibration step: batch-mode forward that emits per-BN-layer batch
+    mean/var and per-quant-site mean-|x| (for MSE/LSQ range init and for
+    the Table 1 KL analysis + BN re-estimation driver)."""
+
+    def bn_stats_step(params, bn, batch, hyper):
+        logits, _, calib = arch.forward(
+            descs, params, bn, batch["x"], training=True, hyper=hyper,
+            estimator=estimator, collect_calib=True)
+        calib = dict(calib)
+        calib["__acc"] = _accuracy(logits, batch["y"])
+        return calib
+
+    return bn_stats_step

@@ -1,0 +1,205 @@
+"""L1 kernel-vs-oracle tests: the CORE correctness signal for the stack.
+
+Every Pallas kernel is compared against its pure-jnp twin in ref.py, with
+hypothesis sweeping shapes, scales, and grid limits. If these pass, the
+HLO the Rust runtime executes computes exactly what ref.py specifies.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.osc_update import osc_update
+from compile.kernels.quant_matmul import quant_matmul
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+
+SHAPES = [(1,), (7,), (128,), (1024,), (3, 3, 8, 16), (64, 64), (5, 1, 9)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fake_quant_matches_ref(shape):
+    w = _rand(KEY, shape)
+    out = fake_quant(w, 0.07, -4, 3)
+    np.testing.assert_allclose(out, ref.fake_quant_ref(w, 0.07, -4, 3),
+                               rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    cols=st.integers(1, 40),
+    s=st.floats(1e-3, 1.0),
+    bits=st.integers(2, 8),
+)
+def test_fake_quant_hypothesis(rows, cols, s, bits):
+    n, p = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    w = _rand(jax.random.PRNGKey(rows * 41 + cols), (rows, cols))
+    out = fake_quant(w, s, n, p)
+    np.testing.assert_allclose(out, ref.fake_quant_ref(w, s, n, p), rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_fake_quant_output_on_grid():
+    w = _rand(KEY, (256,), scale=3.0)
+    s = 0.1
+    out = np.asarray(fake_quant(w, s, -4, 3))
+    ints = out / s
+    np.testing.assert_allclose(ints, np.round(ints), atol=1e-5)
+    assert ints.min() >= -4 and ints.max() <= 3
+
+
+def test_fake_quant_idempotent():
+    w = _rand(KEY, (64,))
+    once = fake_quant(w, 0.05, -8, 7)
+    twice = fake_quant(once, 0.05, -8, 7)
+    np.testing.assert_allclose(once, twice, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# osc_update
+
+
+def _osc_inputs(key, shape, s=0.1):
+    ks = jax.random.split(key, 6)
+    w = _rand(ks[0], shape, 0.4)
+    f = jax.random.uniform(ks[1], shape) * 0.05
+    b = (jax.random.uniform(ks[2], shape) > 0.9).astype(jnp.float32)
+    fint = jnp.round(jax.random.uniform(ks[3], shape) * 6 - 3)
+    psign = jnp.sign(jnp.round(jax.random.normal(ks[4], shape)))
+    wintp = jnp.round(w / s) + jnp.round(jax.random.normal(ks[5], shape))
+    iema = wintp
+    return w, f, b, fint, psign, wintp, iema
+
+
+@pytest.mark.parametrize("shape", [(16,), (3, 3, 8, 8), (130,), (1025,)])
+def test_osc_update_matches_ref(shape):
+    w, f, b, fint, psign, wintp, iema = _osc_inputs(KEY, shape)
+    args = (w, 0.1, -4, 3, f, b, fint, psign, wintp, iema, 0.01, 0.02)
+    outs = osc_update(*args)
+    refs = ref.osc_update_ref(*args)
+    assert len(outs) == len(refs) == 8
+    for i, (o, r) in enumerate(zip(outs, refs)):
+        np.testing.assert_allclose(o, r, rtol=1e-6, err_msg=f"output {i}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    size=st.integers(1, 300),
+    m=st.floats(0.001, 0.5),
+    f_th=st.floats(0.001, 1.2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_osc_update_hypothesis(size, m, f_th, seed):
+    w, f, b, fint, psign, wintp, iema = _osc_inputs(
+        jax.random.PRNGKey(seed), (size,))
+    args = (w, 0.07, -4, 3, f, b, fint, psign, wintp, iema, m, f_th)
+    outs = osc_update(*args)
+    refs = ref.osc_update_ref(*args)
+    for i, (o, r) in enumerate(zip(outs, refs)):
+        np.testing.assert_allclose(o, r, rtol=1e-5, atol=1e-7,
+                                   err_msg=f"output {i}")
+
+
+def test_frozen_weight_is_pinned():
+    """A frozen weight must stay at s * fint regardless of the SGD input."""
+    shape = (8,)
+    w = jnp.full(shape, 123.0)  # wild proposal
+    b = jnp.ones(shape)
+    fint = jnp.full(shape, 2.0)
+    z = jnp.zeros(shape)
+    w_out, *_ = osc_update(w, 0.1, -4, 3, z, b, fint, z, z, z, 0.01, 0.02)
+    np.testing.assert_allclose(w_out, 0.1 * 2.0 * jnp.ones(shape), rtol=1e-6)
+
+
+def test_freeze_triggers_at_threshold():
+    """A weight whose frequency EMA crosses f_th gets frozen to round(EMA)."""
+    shape = (4,)
+    s, m, f_th = 0.1, 0.5, 0.3
+    w = jnp.asarray([0.149, 0.149, 0.0, 0.0])      # wint = 1 (first two)
+    f = jnp.asarray([0.5, 0.0, 0.0, 0.0])          # high existing EMA
+    b = jnp.zeros(shape)
+    fint = jnp.zeros(shape)
+    psign = jnp.asarray([-1.0, 0.0, 0.0, 0.0])     # previous move was down
+    wintp = jnp.asarray([0.0, 1.0, 0.0, 0.0])      # idx 0 changes 0 -> 1
+    iema = jnp.asarray([0.8, 0.0, 0.0, 0.0])
+    w_out, f_out, b_out, fint_out, *_ = osc_update(
+        w, s, -4, 3, f, b, fint, psign, wintp, iema, m, f_th)
+    # idx 0: integer transition +1 vs psign -1 => oscillation, f = .5*1+.5*.5
+    assert float(f_out[0]) == pytest.approx(0.75)
+    assert float(b_out[0]) == 1.0
+    # frozen to round(EMA) = round(.5*1 + .5*.8) = round(0.9) = 1
+    assert float(fint_out[0]) == 1.0
+    assert float(w_out[0]) == pytest.approx(s * 1.0)
+    # idx 1: no direction history (psign 0) => no oscillation, no freeze
+    assert float(b_out[1]) == 0.0
+
+
+def test_oscillation_requires_direction_flip():
+    """Two moves in the same direction must not count as an oscillation."""
+    shape = (1,)
+    z = jnp.zeros(shape)
+    # previous move up (+1), current move up again (1 -> 2)
+    w = jnp.asarray([0.201])
+    psign = jnp.asarray([1.0])
+    wintp = jnp.asarray([1.0])
+    _, f_out, *_ = osc_update(w, 0.1, -4, 3, z, z, z, psign, wintp, z,
+                              0.5, 1.1)
+    assert float(f_out[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 4), (37, 50, 29), (128, 64, 128),
+                                   (130, 17, 200)])
+def test_quant_matmul_matches_ref(m, k, n):
+    ks = jax.random.split(KEY, 2)
+    x = _rand(ks[0], (m, k))
+    w = _rand(ks[1], (k, n), 0.5)
+    out = quant_matmul(x, w, 0.05, -8, 7)
+    np.testing.assert_allclose(out, ref.quant_matmul_ref(x, w, 0.05, -8, 7),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 150), k=st.integers(1, 80), n=st.integers(1, 150),
+       seed=st.integers(0, 2**31 - 1))
+def test_quant_matmul_hypothesis(m, k, n, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = _rand(ks[0], (m, k))
+    w = _rand(ks[1], (k, n), 0.5)
+    out = quant_matmul(x, w, 0.1, -4, 3)
+    np.testing.assert_allclose(out, ref.quant_matmul_ref(x, w, 0.1, -4, 3),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# kernels must lower inside jit to plain HLO (the AOT contract)
+
+
+def test_kernels_lower_to_hlo_text():
+    from jax._src.lib import xla_client as xc
+
+    def f(w):
+        return (fake_quant(w, 0.1, -4, 3),)
+
+    lowered = jax.jit(f).lower(jnp.zeros((33, 7)))
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False,
+        return_tuple=True)
+    text = comp.as_hlo_text()
+    assert "ENTRY" in text and "custom-call" not in text.lower()

@@ -1,0 +1,188 @@
+"""L2 model/train-step tests: the invariants the Rust coordinator relies on.
+
+Small batch sizes keep these fast; they validate the *semantics* of the
+lowered graphs (the heavy numerics live in the rust integration tests that
+execute the actual HLO artifacts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import arch, train
+from compile.model import build_model, default_hyper
+
+BATCH = 4
+
+
+@pytest.fixture(scope="module")
+def mb():
+    return build_model("mbv2", batch_size=BATCH)
+
+
+def _batch(mb, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, mb.batch["x"].shape)
+    y = jax.nn.one_hot(
+        jax.random.randint(k2, (mb.batch["y"].shape[0],), 0, 10), 10)
+    return {"x": x, "y": y}
+
+
+def hyper(**kw):
+    h = default_hyper()
+    for k, v in kw.items():
+        h[k] = jnp.asarray(v, jnp.float32)
+    return h
+
+
+def test_all_models_build_and_forward():
+    from compile.models import REGISTRY
+    for name in REGISTRY:
+        m = build_model(name, batch_size=2)
+        logits, bn, _ = arch.forward(
+            m.descs, m.state["params"], m.state["bn"],
+            jnp.zeros((2, 16, 16, 3)), training=True, hyper=m.hyper,
+            estimator="lsq")
+        assert logits.shape == (2, 10), name
+        assert all(jnp.all(jnp.isfinite(v)) for v in [logits])
+        assert m.param_count() > 20_000, name
+        assert len(m.lowbit) >= 10, name
+
+
+def test_eval_mode_does_not_touch_bn_state(mb):
+    batch = _batch(mb)
+    _, bn_out, _ = arch.forward(
+        mb.descs, mb.state["params"], mb.state["bn"], batch["x"],
+        training=False, hyper=mb.hyper, estimator="lsq")
+    for k, v in bn_out.items():
+        np.testing.assert_array_equal(v, mb.state["bn"][k], err_msg=k)
+
+
+def test_train_mode_updates_bn_state(mb):
+    batch = _batch(mb)
+    _, bn_out, _ = arch.forward(
+        mb.descs, mb.state["params"], mb.state["bn"], batch["x"],
+        training=True, hyper=mb.hyper, estimator="lsq")
+    changed = sum(
+        not np.allclose(v, mb.state["bn"][k]) for k, v in bn_out.items())
+    assert changed > 10
+
+
+def test_fp_flag_makes_quant_a_noop(mb):
+    """wq_on = aq_on = 0 must match a structurally unquantized forward."""
+    batch = _batch(mb)
+    h_off = hyper(wq_on=0.0, aq_on=0.0)
+    logits_off, _, _ = arch.forward(
+        mb.descs, mb.state["params"], mb.state["bn"], batch["x"],
+        training=False, hyper=h_off, estimator="lsq")
+    h_on = hyper(wq_on=1.0, aq_on=1.0, n_w=-4.0, p_w=3.0, p_a=7.0)
+    logits_on, _, _ = arch.forward(
+        mb.descs, mb.state["params"], mb.state["bn"], batch["x"],
+        training=False, hyper=h_on, estimator="lsq")
+    # 3-bit quantization must actually change the output...
+    assert not np.allclose(logits_off, logits_on, atol=1e-3)
+    # ...and the FP path must be exactly flag-independent of the grids
+    h_off2 = hyper(wq_on=0.0, aq_on=0.0, n_w=-128.0, p_w=127.0, p_a=255.0)
+    logits_off2, _, _ = arch.forward(
+        mb.descs, mb.state["params"], mb.state["bn"], batch["x"],
+        training=False, hyper=h_off2, estimator="lsq")
+    np.testing.assert_allclose(logits_off, logits_off2, rtol=1e-6)
+
+
+def test_train_step_shapes_roundtrip(mb):
+    """Outputs must mirror the state tree exactly (the AOT contract)."""
+    step = train.make_train_step(mb.descs, "lsq")
+    new_state, metrics = jax.jit(step)(mb.state, _batch(mb), mb.hyper)
+    for group in ("params", "opt", "bn", "osc"):
+        assert set(new_state[group]) == set(mb.state[group]), group
+        for k in new_state[group]:
+            assert new_state[group][k].shape == mb.state[group][k].shape, k
+    for m in ("loss", "ce", "damp", "acc", "osc_frac", "frozen_frac"):
+        assert m in metrics and jnp.isfinite(metrics[m]), m
+
+
+def test_frozen_weights_do_not_move(mb):
+    """With f_th = 0 everything freezes on the first oscillation-free step
+    check: force b=1 via threshold 0 -> weights pinned to s*round(EMA)."""
+    step = train.make_train_step(mb.descs, "lsq")
+    h = hyper(wq_on=1.0, f_th=-1.0, lr=0.05)  # f > f_th always
+    s1, _ = jax.jit(step)(mb.state, _batch(mb, 0), h)
+    w1 = {k: v for k, v in s1["params"].items() if k in mb.lowbit}
+    s2, _ = jax.jit(step)(s1, _batch(mb, 1), h)
+    for name in mb.lowbit:
+        b = s2["osc"][name + "#b"]
+        assert float(jnp.mean(b)) == 1.0, f"{name} should be fully frozen"
+        # frozen in integer domain: same integer values across steps
+        s_prev = s1["params"][arch.weight_scale_of(name)]
+        s_new = s2["params"][arch.weight_scale_of(name)]
+        int1 = jnp.round(w1[name] / s_prev)
+        int2 = jnp.round(s2["params"][name] / s_new)
+        np.testing.assert_array_equal(int1, int2, err_msg=name)
+
+
+def test_dampening_term_decreases_boundary_mass(mb):
+    """A few steps with strong dampening must pull latents toward centers."""
+    step = train.make_train_step(mb.descs, "lsq")
+
+    def boundary_mass(state):
+        total, near = 0, 0
+        for name in mb.lowbit:
+            w = state["params"][name]
+            s = state["params"][arch.weight_scale_of(name)]
+            t = w / s - jnp.round(w / s)
+            near += int(jnp.sum(jnp.abs(t) > 0.4))
+            total += t.size
+        return near / total
+
+    h_damp = hyper(wq_on=1.0, lam=1.0, lr=0.01)
+    state = mb.state
+    jstep = jax.jit(step)
+    for i in range(8):
+        state, _ = jstep(state, _batch(mb, i), h_damp)
+    assert boundary_mass(state) < boundary_mass(mb.state) * 0.7
+
+
+def test_osc_metric_counts_oscillations(mb):
+    """Alternate two batches with a large lr: some weights must rack up
+    oscillation frequency."""
+    step = train.make_train_step(mb.descs, "lsq")
+    h = hyper(wq_on=1.0, lr=0.05, m_osc=0.2)
+    state = mb.state
+    jstep = jax.jit(step)
+    last = None
+    for i in range(12):
+        state, metrics = jstep(state, _batch(mb, i % 2), h)
+        last = metrics
+    assert float(last["osc_frac"]) > 0.0
+
+
+def test_bn_stats_step_exports_calibration(mb):
+    bs = train.make_bn_stats_step(mb.descs)
+    calib = jax.jit(bs)(mb.state["params"], mb.state["bn"], _batch(mb),
+                        mb.hyper)
+    bn_keys = [k for k in calib if k.endswith(".bn_bm")]
+    abs_keys = [k for k in calib if k.endswith(".absmean")]
+    assert len(bn_keys) > 10
+    assert len(abs_keys) > 10
+    for k in abs_keys:
+        assert float(calib[k]) >= 0.0
+
+
+def test_estimators_change_gradients_not_forward(mb):
+    batch = _batch(mb)
+    h = hyper(wq_on=1.0)
+    outs = {}
+    grads = {}
+    for est in ("lsq", "ewgs", "dsq"):
+        def loss(params):
+            logits, _, _ = arch.forward(
+                mb.descs, params, mb.state["bn"], batch["x"], training=True,
+                hyper=h, estimator=est)
+            return train._cross_entropy(logits, batch["y"])
+        outs[est] = float(loss(mb.state["params"]))
+        g = jax.grad(loss)(mb.state["params"])
+        grads[est] = g[mb.lowbit[0]]
+    assert outs["lsq"] == pytest.approx(outs["ewgs"], rel=1e-6)
+    assert outs["lsq"] == pytest.approx(outs["dsq"], rel=1e-6)
+    assert not np.allclose(grads["lsq"], grads["dsq"], rtol=1e-3)

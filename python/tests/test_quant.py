@@ -1,0 +1,149 @@
+"""L2 quantizer tests: custom-VJP gradient rules per estimator.
+
+These pin down the *backward* semantics the paper analyses (appendix A.1):
+masked STE, the multiplicative factors of EWGS/PSG/DSQ, the LSQ step-size
+gradient, the PACT alpha rule, and the dampening regularizer's gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant
+
+KEY = jax.random.PRNGKey(7)
+
+
+def grad_wrt_w(estimator, w, s=0.1, n=-4.0, p=3.0):
+    qw = quant.make_weight_quantizer(estimator)
+    return jax.grad(lambda w: jnp.sum(qw(w, s, n, p)))(w)
+
+
+def test_ste_gradient_is_masked_identity():
+    w = jnp.asarray([0.05, -0.2, 0.29, 5.0, -5.0])  # last two clip at 3-bit
+    g = grad_wrt_w("lsq", w)
+    np.testing.assert_allclose(g, [1.0, 1.0, 1.0, 0.0, 0.0], atol=1e-6)
+
+
+def test_ewgs_scales_gradient_by_signed_distance():
+    w = jnp.asarray([0.13])  # w/s = 1.3 -> t = 0.3
+    g = grad_wrt_w("ewgs", w)
+    expected = 1.0 + quant.EWGS_DELTA * 1.0 * 0.3
+    np.testing.assert_allclose(g, [expected], rtol=1e-5)
+
+
+def test_psg_gradient_small_at_bin_center():
+    w_center = jnp.asarray([0.1])   # exactly on grid point
+    w_edge = jnp.asarray([0.149])   # near decision boundary
+    gc = grad_wrt_w("psg", w_center)[0]
+    ge = grad_wrt_w("psg", w_edge)[0]
+    assert gc == pytest.approx(quant.PSG_EPS, rel=1e-4)
+    assert ge > gc * 20
+
+
+def test_dsq_gradient_large_at_boundary():
+    gb = grad_wrt_w("dsq", jnp.asarray([0.149]))[0]  # near boundary
+    gc = grad_wrt_w("dsq", jnp.asarray([0.101]))[0]  # near center
+    assert gb > 1.0 > gc
+
+
+def test_all_multiplicative_factors_are_positive():
+    """Appendix A.1: multiplicative methods can only rescale the STE
+    gradient, never flip it — which is why they cannot stop oscillations."""
+    w = jax.random.uniform(KEY, (512,), minval=-0.35, maxval=0.35)
+    for est in ("ewgs", "psg", "dsq"):
+        g = grad_wrt_w(est, w)
+        base = grad_wrt_w("lsq", w)
+        inside = np.asarray(base) > 0.5
+        assert np.all(np.asarray(g)[inside] > 0.0), est
+
+
+def test_lsq_scale_gradient_sign():
+    # all weights far above the grid top -> increasing s reduces clipping
+    # error -> ds must push s up (negative gradient of sum means... check
+    # against a numerical derivative instead of guessing signs)
+    qw = quant.make_weight_quantizer("lsq")
+    w = jax.random.normal(KEY, (128,)) * 0.3
+
+    def f(s):
+        return jnp.sum(qw(w, s, -4.0, 3.0) ** 2)
+
+    g = jax.grad(f)(jnp.asarray(0.08))
+    eps = 1e-3
+    num = (f(0.08 + eps) - f(0.08 - eps)) / (2 * eps)
+    # LSQ grad-scales by 1/sqrt(N*p); apply to the numeric estimate's
+    # un-scaled chain rule is messy — just check sign agreement
+    assert jnp.sign(g) == jnp.sign(num)
+
+
+def test_pact_alpha_gradient_counts_clipped():
+    qa = quant.make_act_quantizer("pact")
+    x = jnp.asarray([0.5, 1.0, 2.0, 3.0])
+    s = jnp.asarray(0.2)  # alpha = s*p = 0.2*7 = 1.4 -> two clipped
+    ds = jax.grad(lambda s: jnp.sum(qa(x, s, 7.0)))(s)
+    np.testing.assert_allclose(ds, 2.0, atol=1e-6)
+
+
+def test_act_quantizer_unsigned_range():
+    qa = quant.make_act_quantizer("lsq")
+    x = jnp.asarray([-1.0, 0.0, 0.33, 10.0])
+    y = qa(x, 0.1, 7.0)
+    np.testing.assert_allclose(y, [0.0, 0.0, 0.3, 0.7], atol=1e-6)
+
+
+def test_flag_gating_blends_linearly():
+    w = jax.random.normal(KEY, (64,)) * 0.3
+    q1 = quant.flagged_weight_quant("lsq", w, 0.1, -4.0, 3.0, jnp.asarray(1.0))
+    q0 = quant.flagged_weight_quant("lsq", w, 0.1, -4.0, 3.0, jnp.asarray(0.0))
+    np.testing.assert_allclose(q0, w, rtol=1e-6)
+    from compile.kernels.ref import fake_quant_ref
+    np.testing.assert_allclose(q1, fake_quant_ref(w, 0.1, -4.0, 3.0), rtol=1e-6)
+
+
+def test_scale_gets_no_gradient_when_gated_off():
+    def f(s, flag):
+        w = jnp.asarray([0.13, -0.27])
+        return jnp.sum(quant.flagged_weight_quant("lsq", w, s, -4.0, 3.0, flag))
+
+    g_on = jax.grad(f)(jnp.asarray(0.1), jnp.asarray(1.0))
+    g_off = jax.grad(f)(jnp.asarray(0.1), jnp.asarray(0.0))
+    assert float(g_off) == 0.0
+    assert float(g_on) != 0.0
+
+
+def test_dampening_loss_gradient_pulls_to_bin_center():
+    w = jnp.asarray([0.13])  # above the bin center 0.1
+    g = jax.grad(lambda w: quant.dampening_loss(w, 0.1, -4.0, 3.0))(w)
+    # d/dw ||sg(fq(w)) - w||^2 = -2 (fq(w) - w) = -2(0.1-0.13) > 0
+    # so gradient DESCENT moves w down toward 0.1: g must be positive
+    assert g[0] > 0.0
+    w2 = jnp.asarray([0.07])  # below the center
+    g2 = jax.grad(lambda w: quant.dampening_loss(w, 0.1, -4.0, 3.0))(w2)
+    assert g2[0] < 0.0
+
+
+def test_dampening_loss_no_pull_outside_grid():
+    w = jnp.asarray([5.0])  # clipped region
+    g = jax.grad(lambda w: quant.dampening_loss(w, 0.1, -4.0, 3.0))(w)
+    assert g[0] == 0.0
+
+
+def test_quant_matmul_vjp_matches_explicit():
+    qmm = quant.make_quant_matmul("lsq")
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (8, 16))
+    w = jax.random.normal(k2, (16, 4)) * 0.3
+    g = jax.random.normal(k3, (8, 4))
+    s = jnp.asarray(0.05)
+
+    def f(x, w, s):
+        return jnp.sum(qmm(x, w, s, -8.0, 7.0) * g)
+
+    dx, dw, ds = jax.grad(f, argnums=(0, 1, 2))(x, w, s)
+    from compile.kernels.ref import fake_quant_ref
+    wq = fake_quant_ref(w, s, -8.0, 7.0)
+    np.testing.assert_allclose(dx, g @ wq.T, rtol=1e-4, atol=1e-5)
+    mask = jnp.abs(w / s) <= 8.0
+    np.testing.assert_allclose(dw, (x.T @ g) * mask, rtol=1e-4, atol=1e-5)
+    assert jnp.isfinite(ds)

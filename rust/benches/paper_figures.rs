@@ -1,0 +1,39 @@
+//! Regenerate every paper FIGURE (1-6).
+//!
+//! Fig 1/5/6 are the closed-form toy substrate (fast, exact). Fig 2 traces
+//! integer weights through a real QAT run; Figs 3/4 histogram the latent
+//! weights of baseline / dampened / frozen runs. Reduced scale by default;
+//! see paper_tables.rs for the env knobs.
+
+use oscillations_qat::coordinator::experiment::Lab;
+use oscillations_qat::runtime::Runtime;
+use std::path::Path;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let mut lab = Lab::new(&rt);
+    lab.qat_steps = env_u64("QAT_BENCH_STEPS", 80);
+    lab.fp_steps = env_u64("QAT_BENCH_FP_STEPS", 120);
+    lab.bn_batches = 8;
+    lab.seeds = vec![0];
+    lab.ckpt_dir = Path::new("ckpts/bench").to_path_buf();
+    lab.results_dir = Path::new("results/bench").to_path_buf();
+
+    macro_rules! figure {
+        ($name:literal, $method:ident) => {{
+            let t0 = std::time::Instant::now();
+            lab.$method()?;
+            eprintln!("[bench] {} regenerated in {:.1?}\n", $name, t0.elapsed());
+        }};
+    }
+    figure!("fig1", fig1);
+    figure!("fig5", fig5);
+    figure!("fig6", fig6);
+    figure!("fig2", fig2);
+    figure!("fig34", fig34);
+    Ok(())
+}

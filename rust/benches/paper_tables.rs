@@ -1,0 +1,53 @@
+//! Regenerate every paper TABLE (1-8).
+//!
+//! `cargo bench --bench paper_tables` runs a reduced-scale pass by default
+//! (QAT_BENCH_STEPS=80, one seed) so the whole suite demonstrates each
+//! table in minutes. The committed EXPERIMENTS.md results were produced
+//! with the full settings via the main binary:
+//!
+//!     cargo run --release -- suite --steps 400 --fp-steps 600 --seeds 0,1
+//!
+//! Environment knobs: QAT_BENCH_STEPS, QAT_BENCH_FP_STEPS, QAT_BENCH_SEEDS,
+//! QAT_BENCH_TABLES (comma list, e.g. "2,4,5").
+
+use oscillations_qat::coordinator::experiment::Lab;
+use oscillations_qat::runtime::Runtime;
+use std::path::Path;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let mut lab = Lab::new(&rt);
+    lab.qat_steps = env_u64("QAT_BENCH_STEPS", 80);
+    lab.fp_steps = env_u64("QAT_BENCH_FP_STEPS", 120);
+    lab.bn_batches = 8;
+    lab.seeds = std::env::var("QAT_BENCH_SEEDS")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![0]);
+    lab.ckpt_dir = Path::new("ckpts/bench").to_path_buf();
+    lab.results_dir = Path::new("results/bench").to_path_buf();
+
+    let which: Vec<u32> = std::env::var("QAT_BENCH_TABLES")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|_| (1..=8).collect());
+
+    for t in which {
+        let t0 = std::time::Instant::now();
+        match t {
+            1 => drop(lab.table1()?),
+            2 => drop(lab.table2()?),
+            3 => drop(lab.table3()?),
+            4 => drop(lab.table4()?),
+            5 => drop(lab.table5()?),
+            6 => drop(lab.table6()?),
+            7 => drop(lab.table7()?),
+            8 => drop(lab.table8()?),
+            _ => continue,
+        }
+        eprintln!("[bench] table{t} regenerated in {:.1?}\n", t0.elapsed());
+    }
+    Ok(())
+}

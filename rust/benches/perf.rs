@@ -1,0 +1,108 @@
+//! Performance micro-benchmarks (the §Perf instrumentation):
+//!
+//!   * end-to-end train-step latency / sample throughput per model,
+//!   * L1 kernel artifacts vs their pure-jnp reference twins,
+//!   * eval-step latency,
+//!   * data-pipeline generation rate,
+//!   * host substrates (fake-quant mirror, JSON manifest parse).
+//!
+//! Run: `cargo bench --bench perf` (needs `make artifacts`).
+
+use oscillations_qat::bench::{bench, bench_for};
+use oscillations_qat::coordinator::evaluator::{EvalQuant, Evaluator};
+use oscillations_qat::coordinator::{RunCfg, Trainer};
+use oscillations_qat::data::{DataCfg, Dataset};
+use oscillations_qat::quant;
+use oscillations_qat::runtime::Runtime;
+use oscillations_qat::state::NamedTensors;
+use oscillations_qat::tensor::Tensor;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    println!("# oscillations-qat perf benchmarks\n");
+
+    // -------- host substrates (no PJRT) --------
+    let ds = Dataset::new(DataCfg::default());
+    let mut i = 0u64;
+    let s = bench("data: synth batch 16x16x16x3", 3, 200, || {
+        let b = ds.train_batch(0, i);
+        std::hint::black_box(&b.x.data[0]);
+        i += 1;
+    });
+    println!("{}  ({:.0} img/s)", s.report(), s.per_sec(16.0));
+
+    let w: Vec<f32> = (0..262_144).map(|i| ((i % 97) as f32 - 48.0) * 0.01).collect();
+    let s = bench("host: fake_quant mirror 256k f32", 3, 50, || {
+        std::hint::black_box(quant::fake_quant(&w, 0.05, -4.0, 3.0));
+    });
+    println!("{}  ({:.2} Gelem/s)", s.report(), s.per_sec(262_144.0) / 1e9);
+
+    let manifest_text =
+        std::fs::read_to_string("artifacts/mbv2_lsq_train.manifest.json")?;
+    let s = bench("host: manifest JSON parse (1.2k tensors)", 3, 50, || {
+        std::hint::black_box(oscillations_qat::json::parse(&manifest_text).unwrap());
+    });
+    println!("{}", s.report());
+
+    // -------- L1 kernels vs refs through PJRT --------
+    println!();
+    for (label, key) in [
+        ("kernel: fake_quant (pallas)", "kernel_fakequant"),
+        ("kernel: fake_quant (jnp ref)", "kernel_fakequant_ref"),
+        ("kernel: osc_update (pallas)", "kernel_osc"),
+        ("kernel: osc_update (jnp ref)", "kernel_osc_ref"),
+        ("kernel: quant_matmul (pallas)", "kernel_qmm"),
+        ("kernel: quant_matmul (jnp ref)", "kernel_qmm_ref"),
+    ] {
+        let Some(name) = rt.index.kernels.get(key) else { continue };
+        let artifact = rt.artifact(name)?;
+        let mut io = NamedTensors::new();
+        for spec in &artifact.manifest.inputs {
+            let n = spec.num_elements().max(1);
+            let data: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+            io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+        }
+        let s = bench_for(label, 2, Duration::from_secs(2), || {
+            let _ = artifact.execute(&[&io]).expect("exec");
+        });
+        println!("{}", s.report());
+    }
+
+    // -------- end-to-end step latency per model --------
+    println!();
+    let trainer = Trainer::new(&rt);
+    for model in ["mbv2", "resnet18", "mbv3", "efflite"] {
+        let batch = rt.index.model(model)?.batch_size as f64;
+        let mut cfg = RunCfg::qat(model, 1, 3, 0);
+        cfg.quant_a = true;
+        let mut cur = Some(rt.initial_state(model)?);
+        let s = bench_for(
+            &format!("step: {model} w3a3 train (batch {batch})"),
+            1,
+            Duration::from_secs(8),
+            || {
+                let out = trainer.train(cur.take().unwrap(), &cfg).expect("step");
+                cur = Some(out.state);
+            },
+        );
+        println!("{}  ({:.1} samples/s)", s.report(), s.per_sec(batch));
+    }
+
+    // -------- eval step --------
+    println!();
+    let ev = Evaluator::new(&rt, "mbv2")?;
+    let state = rt.initial_state("mbv2")?;
+    let data = DataCfg { val_size: 16, ..Default::default() };
+    let s = bench_for("eval: mbv2 one batch", 1, Duration::from_secs(4), || {
+        let _ = ev.eval_val(&state, &data, EvalQuant::weights(3)).expect("eval");
+    });
+    println!("{}", s.report());
+
+    println!(
+        "\ntotal XLA compile time: {:.1}s",
+        rt.compile_secs.borrow()
+    );
+    Ok(())
+}

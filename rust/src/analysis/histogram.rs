@@ -1,0 +1,128 @@
+//! Fixed-range histograms + ASCII rendering (Figs 3, 4 and the appendix
+//! figures are emitted as CSV series plus a terminal sketch).
+
+/// Histogram over [lo, hi) with uniform bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub clipped: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f32, hi: f32, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], total: 0, clipped: 0 }
+    }
+
+    pub fn add(&mut self, x: f32) {
+        let bins = self.counts.len();
+        let f = (x - self.lo) / (self.hi - self.lo);
+        if (0.0..1.0).contains(&f) {
+            self.counts[((f * bins as f32) as usize).min(bins - 1)] += 1;
+        } else if x == self.hi {
+            self.counts[bins - 1] += 1;
+        } else {
+            self.clipped += 1;
+        }
+        self.total += 1;
+    }
+
+    pub fn add_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    pub fn bin_center(&self, i: usize) -> f32 {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        self.lo + (i as f32 + 0.5) * w
+    }
+
+    /// Fraction of in-range mass within `r` of the bin-range edges
+    /// (used to check "weights pile up at the decision boundary").
+    pub fn edge_mass(&self, r: f32) -> f64 {
+        let mut edge = 0u64;
+        let mut total = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let x = self.bin_center(i);
+            if (x - self.lo).abs() < r || (self.hi - x).abs() < r {
+                edge += c;
+            }
+            total += c;
+        }
+        edge as f64 / total.max(1) as f64
+    }
+
+    /// CSV: bin_center,count per line.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("bin_center,count\n");
+        for (i, &c) in self.counts.iter().enumerate() {
+            s.push_str(&format!("{:.5},{}\n", self.bin_center(i), c));
+        }
+        s
+    }
+
+    /// Small vertical ASCII sketch for logs/reports.
+    pub fn ascii(&self, height: usize) -> String {
+        let max = *self.counts.iter().max().unwrap_or(&1) as f64;
+        let mut out = String::new();
+        for row in (0..height).rev() {
+            let cut = max * (row as f64 + 0.5) / height as f64;
+            for &c in &self.counts {
+                out.push(if c as f64 > cut { '#' } else { ' ' });
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!("{:<8.3}{:>width$.3}\n", self.lo, self.hi,
+                              width = self.counts.len().saturating_sub(8)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_correctly() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add_all(&[0.05, 0.15, 0.15, 0.999, -1.0, 2.0]);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.clipped, 2);
+        assert_eq!(h.total, 6);
+    }
+
+    #[test]
+    fn upper_edge_inclusive() {
+        let mut h = Histogram::new(-0.5, 0.5, 4);
+        h.add(0.5);
+        assert_eq!(h.counts[3], 1);
+        assert_eq!(h.clipped, 0);
+    }
+
+    #[test]
+    fn edge_mass_detects_boundary_pileup() {
+        let mut h = Histogram::new(-0.5, 0.5, 50);
+        for _ in 0..90 {
+            h.add(0.49);
+            h.add(-0.49);
+        }
+        for i in 0..20 {
+            h.add(-0.2 + 0.02 * i as f32);
+        }
+        assert!(h.edge_mass(0.05) > 0.8);
+    }
+
+    #[test]
+    fn csv_has_all_bins() {
+        let mut h = Histogram::new(0.0, 1.0, 5);
+        h.add(0.3);
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 6);
+    }
+}

@@ -1,0 +1,79 @@
+//! Gaussian KL divergence between estimated (EMA) and population BN
+//! statistics — the Table 1 measurement.
+//!
+//! Following the paper's footnote 1: outputs are assumed normal, so
+//! D_KL(p, q) = log(s2²/s1²) + (s1² + (m1-m2)²) / (2 s2²) − 1/2 with
+//! p = N(m1, s1) the *population* statistics and q = N(m2, s2) the
+//! *estimated* (EMA) statistics.
+
+/// KL between two Gaussians given (mean, var) pairs.
+pub fn gaussian_kl(mu1: f32, var1: f32, mu2: f32, var2: f32) -> f64 {
+    let v1 = var1.max(1e-10) as f64;
+    let v2 = var2.max(1e-10) as f64;
+    let dm = (mu1 - mu2) as f64;
+    0.5 * (v2 / v1).ln() + (v1 + dm * dm) / (2.0 * v2) - 0.5
+}
+
+/// Per-layer KL summary row (max and mean over output channels).
+#[derive(Debug, Clone)]
+pub struct KlRow {
+    pub layer: String,
+    pub kind: String,
+    pub max_kl: f64,
+    pub mean_kl: f64,
+}
+
+/// Channel-wise KL between population and estimated stats.
+pub fn layer_kl(
+    layer: &str,
+    kind: &str,
+    pop_mean: &[f32],
+    pop_var: &[f32],
+    est_mean: &[f32],
+    est_var: &[f32],
+) -> KlRow {
+    let mut max_kl = 0.0f64;
+    let mut sum = 0.0f64;
+    let c = pop_mean.len().max(1);
+    for i in 0..pop_mean.len() {
+        let kl = gaussian_kl(pop_mean[i], pop_var[i], est_mean[i], est_var[i]);
+        max_kl = max_kl.max(kl);
+        sum += kl;
+    }
+    KlRow { layer: layer.into(), kind: kind.into(), max_kl, mean_kl: sum / c as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        assert!(gaussian_kl(0.3, 1.2, 0.3, 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_positive_and_grows_with_shift() {
+        let k1 = gaussian_kl(0.0, 1.0, 0.5, 1.0);
+        let k2 = gaussian_kl(0.0, 1.0, 2.0, 1.0);
+        assert!(k1 > 0.0);
+        assert!(k2 > k1);
+        // closed form for equal variances: dm²/2
+        assert!((k1 - 0.125).abs() < 1e-9, "{k1}");
+        assert!((k2 - 2.0).abs() < 1e-9, "{k2}");
+    }
+
+    #[test]
+    fn kl_variance_mismatch() {
+        // var1=2, var2=1, means equal: 0.5*ln(1/2) + 2/2 - 0.5 = 0.1534
+        let k = gaussian_kl(0.0, 2.0, 0.0, 1.0);
+        assert!((k - (0.5f64 * (0.5f64).ln() + 1.0 - 0.5)).abs() < 1e-9, "{k}");
+    }
+
+    #[test]
+    fn row_aggregates() {
+        let r = layer_kl("l", "dw", &[0.0, 0.0], &[1.0, 1.0], &[0.5, 2.0], &[1.0, 1.0]);
+        assert!((r.max_kl - 2.0).abs() < 1e-9);
+        assert!((r.mean_kl - (0.125 + 2.0) / 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Analysis toolkit: KL divergence (Table 1), histograms (Figs 3-4),
+//! table / ASCII-figure rendering.
+
+pub mod histogram;
+pub mod kl;
+pub mod report;
+
+pub use histogram::Histogram;
+pub use kl::{gaussian_kl, layer_kl, KlRow};
+pub use report::TableRenderer;

@@ -1,0 +1,129 @@
+//! Text table rendering for the paper-table regenerators.
+//!
+//! Every `bench table*` / `bench fig*` driver prints a monospace table
+//! shaped like the paper's and also writes a CSV next to it under
+//! `results/`.
+
+/// Simple aligned-column table renderer.
+#[derive(Debug, Default)]
+pub struct TableRenderer {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableRenderer {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        TableRenderer {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                line.push_str(&format!("{:<w$}  ", c, w = width[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV under `results/<slug>.csv`.
+    pub fn emit(&self, results_dir: &std::path::Path, slug: &str) {
+        println!("{}", self.render());
+        if let Err(e) = std::fs::create_dir_all(results_dir).and_then(|_| {
+            std::fs::write(results_dir.join(format!("{slug}.csv")), self.to_csv())
+        }) {
+            eprintln!("warn: could not write results csv: {e}");
+        }
+    }
+}
+
+/// Format "mean^std" the way the paper's tables annotate seed spread.
+pub fn mean_std(vals: &[f64]) -> String {
+    if vals.is_empty() {
+        return "-".into();
+    }
+    let n = vals.len() as f64;
+    let mean = vals.iter().sum::<f64>() / n;
+    if vals.len() == 1 {
+        return format!("{mean:.2}");
+    }
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    format!("{mean:.2}^{:.2}", var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableRenderer::new("T", &["a", "long_header"]);
+        t.row(vec!["xxxx".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("a     long_header"));
+        assert!(r.contains("xxxx  1"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = TableRenderer::new("T", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn mean_std_formats() {
+        assert_eq!(mean_std(&[1.0]), "1.00");
+        let s = mean_std(&[1.0, 3.0]);
+        assert!(s.starts_with("2.00^"), "{s}");
+        assert_eq!(mean_std(&[]), "-");
+    }
+}

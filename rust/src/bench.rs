@@ -1,0 +1,98 @@
+//! Criterion-style micro-bench harness (criterion itself is not in the
+//! offline crate cache). Warmup + timed iterations, robust summary stats,
+//! and a one-line report format shared by all `benches/*.rs` targets.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<38} {:>6} iters  mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    /// throughput given per-iteration item count
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` for `warmup` unrecorded + `iters` recorded iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, samples)
+}
+
+/// Time-budgeted variant: run until `budget` elapsed (at least 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, warmup: usize, budget: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 3 || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+    samples.sort();
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    let pick = |q: f64| samples[((n - 1) as f64 * q) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean,
+        p50: pick(0.5),
+        p95: pick(0.95),
+        min: *samples.first().unwrap_or(&Duration::ZERO),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut x = 0u64;
+        let s = bench("noop", 2, 50, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn budgeted_runs_at_least_three() {
+        let s = bench_for("fast", 0, Duration::from_millis(1), || {});
+        assert!(s.iters >= 3);
+    }
+}

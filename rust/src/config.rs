@@ -1,0 +1,185 @@
+//! Experiment configuration: a hand-rolled TOML-subset parser (offline
+//! cache has no serde/toml) + typed run configs.
+//!
+//! Supported grammar — ample for experiment files:
+//!   [section]
+//!   key = "string" | 123 | 1.5 | true | false | [1, 2, 3]
+//!   # comments
+//!
+//! See `configs/` for the shipped experiment files.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value. The pre-section area is section "".
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = Self::parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {:?}", lineno + 1, v.trim()))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    fn parse_value(v: &str) -> Result<Value> {
+        if let Some(rest) = v.strip_prefix('"') {
+            let s = rest.strip_suffix('"').context("unterminated string")?;
+            return Ok(Value::Str(s.to_string()));
+        }
+        if v == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if v == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if let Some(rest) = v.strip_prefix('[') {
+            let inner = rest.strip_suffix(']').context("unterminated list")?;
+            let mut out = Vec::new();
+            for part in inner.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                out.push(part.parse::<f64>().context("non-numeric list item")?);
+            }
+            return Ok(Value::List(out));
+        }
+        if let Ok(n) = v.parse::<f64>() {
+            return Ok(Value::Num(n));
+        }
+        bail!("unparseable value")
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.f64_or(section, key, default as f64) as usize
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment file
+name = "table4"
+
+[train]
+steps = 400
+lr = 0.01          # base learning rate
+cosine = true
+lambdas = [0.0001, 0.001, 0.01]
+
+[data]
+classes = 10
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "name", "?"), "table4");
+        assert_eq!(c.usize_or("train", "steps", 0), 400);
+        assert_eq!(c.f64_or("train", "lr", 0.0), 0.01);
+        assert!(c.bool_or("train", "cosine", false));
+        assert_eq!(
+            c.get("train", "lambdas"),
+            Some(&Value::List(vec![0.0001, 0.001, 0.01]))
+        );
+        assert_eq!(c.usize_or("data", "classes", 0), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("train", "steps", 7), 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = \"unterminated").is_err());
+    }
+}

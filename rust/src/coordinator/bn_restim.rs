@@ -1,0 +1,157 @@
+//! Batch-normalization re-estimation (§2.3.1).
+//!
+//! Oscillating integer weights shift layer output distributions between
+//! iterations, corrupting the EMA statistics BN uses at inference. The
+//! cheap fix the paper advocates: after training, recompute the BN stats
+//! over a small data subset and overwrite the EMAs.
+//!
+//! We aggregate exactly: with per-batch (μ_k, σ²_k) over K batches,
+//!   μ = mean_k μ_k,
+//!   σ² = mean_k σ²_k + mean_k μ_k² − μ²   (law of total variance).
+
+use super::evaluator::EvalQuant;
+use crate::data::{DataCfg, Dataset};
+use crate::quant::{act_grid, weight_grid};
+use crate::runtime::Runtime;
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Accumulated per-layer batch statistics from the bnstats artifact.
+#[derive(Debug, Default, Clone)]
+pub struct BnStats {
+    /// layer -> (sum μ, sum σ², sum μ², count) per channel
+    pub acc: BTreeMap<String, (Vec<f64>, Vec<f64>, Vec<f64>, usize)>,
+}
+
+impl BnStats {
+    pub fn add_batch(&mut self, out: &NamedTensors) {
+        for (k, v) in &out.map {
+            let Some(layer) = k.strip_suffix(".bn_bm") else { continue };
+            let var_key = format!("{layer}.bn_bv");
+            let Some(var) = out.get(&var_key) else { continue };
+            let entry = self.acc.entry(layer.to_string()).or_insert_with(|| {
+                (vec![0.0; v.len()], vec![0.0; v.len()], vec![0.0; v.len()], 0)
+            });
+            for i in 0..v.len() {
+                entry.0[i] += v.data[i] as f64;
+                entry.1[i] += var.data[i] as f64;
+                entry.2[i] += (v.data[i] as f64) * (v.data[i] as f64);
+            }
+            entry.3 += 1;
+        }
+    }
+
+    /// Final population estimates: layer -> (mean, var) per channel.
+    pub fn finalize(&self) -> BTreeMap<String, (Vec<f32>, Vec<f32>)> {
+        let mut out = BTreeMap::new();
+        for (layer, (sm, sv, sm2, k)) in &self.acc {
+            let k = *k as f64;
+            let mean: Vec<f32> = sm.iter().map(|s| (s / k) as f32).collect();
+            let var: Vec<f32> = sv
+                .iter()
+                .zip(sm2)
+                .zip(&mean)
+                .map(|((v, m2), m)| ((v / k) + (m2 / k) - (*m as f64) * (*m as f64)).max(0.0) as f32)
+                .collect();
+            out.insert(layer.clone(), (mean, var));
+        }
+        out
+    }
+}
+
+/// Collect population BN statistics with the train-mode forward pass.
+pub fn collect_stats(
+    rt: &Runtime,
+    state: &NamedTensors,
+    model: &str,
+    q: EvalQuant,
+    data: &DataCfg,
+    seed: u64,
+    batches: u64,
+) -> Result<BnStats> {
+    let info = rt.index.model(model)?;
+    let name = info.artifacts.get("bnstats").context("bnstats artifact")?;
+    let artifact = rt.artifact(name)?;
+    let ds = Dataset::new(DataCfg { seed, ..data.clone() });
+    let hyper = bn_hyper(q);
+    let mut stats = BnStats::default();
+    for i in 0..batches {
+        let b = ds.train_batch(seed ^ 0xb57a7, i);
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", b.x);
+        io.insert("batch/y", b.y);
+        let out = artifact.execute(&[state, &io, &hyper])?;
+        stats.add_batch(&out);
+    }
+    Ok(stats)
+}
+
+/// Re-estimate and overwrite the BN running statistics in `state`.
+/// Returns the number of BN layers updated.
+pub fn reestimate(
+    rt: &Runtime,
+    state: &mut NamedTensors,
+    model: &str,
+    q: EvalQuant,
+    data: &DataCfg,
+    seed: u64,
+    batches: u64,
+) -> Result<usize> {
+    let stats = collect_stats(rt, state, model, q, data, seed, batches)?;
+    let mut updated = 0;
+    for (layer, (mean, var)) in stats.finalize() {
+        let mkey = format!("bn/{layer}.bn_m");
+        let vkey = format!("bn/{layer}.bn_v");
+        if state.get(&mkey).is_some() {
+            let c = mean.len();
+            state.insert(mkey, Tensor::new(vec![c], mean));
+            state.insert(vkey, Tensor::new(vec![c], var));
+            updated += 1;
+        }
+    }
+    Ok(updated)
+}
+
+fn bn_hyper(q: EvalQuant) -> NamedTensors {
+    let (n_w, p_w) = weight_grid(q.bits_w);
+    let mut h = NamedTensors::new();
+    let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
+    put("lr", 0.0);
+    put("lam", 0.0);
+    put("f_th", 1.1);
+    put("m_osc", 0.0);
+    put("bn_mom", 0.0);
+    put("mu", 0.0);
+    put("n_w", n_w);
+    put("p_w", p_w);
+    put("p_a", act_grid(q.bits_a));
+    put("wq_on", if q.quant_w { 1.0 } else { 0.0 });
+    put("aq_on", if q.quant_a { 1.0 } else { 0.0 });
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_variance_aggregation() {
+        // two "batches" with per-batch stats of disjoint constant batches:
+        // batch1 all 0, batch2 all 2 -> population mean 1, var 1.
+        let mut stats = BnStats::default();
+        let mut o1 = NamedTensors::new();
+        o1.insert("l.bn_bm", Tensor::new(vec![1], vec![0.0]));
+        o1.insert("l.bn_bv", Tensor::new(vec![1], vec![0.0]));
+        let mut o2 = NamedTensors::new();
+        o2.insert("l.bn_bm", Tensor::new(vec![1], vec![2.0]));
+        o2.insert("l.bn_bv", Tensor::new(vec![1], vec![0.0]));
+        stats.add_batch(&o1);
+        stats.add_batch(&o2);
+        let f = stats.finalize();
+        let (m, v) = &f["l"];
+        assert!((m[0] - 1.0).abs() < 1e-6);
+        assert!((v[0] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,123 @@
+//! Validation / train-subset evaluation through the compiled eval artifact.
+
+use crate::data::{Batch, DataCfg, Dataset};
+use crate::quant::{act_grid, weight_grid};
+use crate::runtime::{Artifact, Runtime};
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::rc::Rc;
+
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub acc: f64,
+    pub loss: f64,
+    pub samples: usize,
+}
+
+/// Quantization gates for evaluation (must match the training run).
+#[derive(Debug, Clone, Copy)]
+pub struct EvalQuant {
+    pub bits_w: u32,
+    pub bits_a: u32,
+    pub quant_w: bool,
+    pub quant_a: bool,
+}
+
+impl EvalQuant {
+    pub fn fp() -> Self {
+        EvalQuant { bits_w: 8, bits_a: 8, quant_w: false, quant_a: false }
+    }
+
+    pub fn weights(bits_w: u32) -> Self {
+        EvalQuant { bits_w, bits_a: 8, quant_w: true, quant_a: false }
+    }
+
+    pub fn full(bits: u32) -> Self {
+        EvalQuant { bits_w: bits, bits_a: bits, quant_w: true, quant_a: true }
+    }
+
+    fn hyper(&self) -> NamedTensors {
+        let (n_w, p_w) = weight_grid(self.bits_w);
+        let mut h = NamedTensors::new();
+        let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
+        put("lr", 0.0);
+        put("lam", 0.0);
+        put("f_th", 1.1);
+        put("m_osc", 0.0);
+        put("bn_mom", 0.0);
+        put("mu", 0.0);
+        put("n_w", n_w);
+        put("p_w", p_w);
+        put("p_a", act_grid(self.bits_a));
+        put("wq_on", if self.quant_w { 1.0 } else { 0.0 });
+        put("aq_on", if self.quant_a { 1.0 } else { 0.0 });
+        h
+    }
+}
+
+pub struct Evaluator<'rt> {
+    pub rt: &'rt Runtime,
+    artifact: Rc<Artifact>,
+    batch: usize,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
+        let info = rt.index.model(model)?;
+        let name = info.artifacts.get("eval").expect("eval artifact").clone();
+        Ok(Evaluator { rt, artifact: rt.artifact(&name)?, batch: info.batch_size })
+    }
+
+    /// Evaluate over a batch list. State needs `params/*` and `bn/*`.
+    pub fn eval_batches(
+        &self,
+        state: &NamedTensors,
+        batches: &[Batch],
+        q: EvalQuant,
+    ) -> Result<EvalResult> {
+        let hyper = q.hyper();
+        let mut correct = 0.0f64;
+        let mut loss = 0.0f64;
+        let mut n = 0usize;
+        for b in batches {
+            let mut io = NamedTensors::new();
+            io.insert("batch/x", b.x.clone());
+            io.insert("batch/y", b.y.clone());
+            let out = self.artifact.execute(&[state, &io, &hyper])?;
+            correct += out.expect("correct")?.item() as f64;
+            loss += out.expect("loss")?.item() as f64;
+            n += self.batch;
+        }
+        Ok(EvalResult {
+            acc: 100.0 * correct / n.max(1) as f64,
+            loss: loss / batches.len().max(1) as f64,
+            samples: n,
+        })
+    }
+
+    /// Validation accuracy on the deterministic val split.
+    pub fn eval_val(
+        &self,
+        state: &NamedTensors,
+        data: &DataCfg,
+        q: EvalQuant,
+    ) -> Result<EvalResult> {
+        let ds = Dataset::new(data.clone());
+        self.eval_batches(state, &ds.val_batches(), q)
+    }
+
+    /// Loss on a fixed slice of the *training* stream (Table 3 objective).
+    pub fn train_loss(
+        &self,
+        state: &NamedTensors,
+        data: &DataCfg,
+        seed: u64,
+        batches: usize,
+        q: EvalQuant,
+    ) -> Result<EvalResult> {
+        let ds = Dataset::new(data.clone());
+        let bs: Vec<Batch> = (0..batches as u64).map(|i| ds.train_batch(seed, i)).collect();
+        self.eval_batches(state, &bs, q)
+    }
+}

@@ -1,0 +1,751 @@
+//! Experiment drivers: one function per paper table / figure.
+//!
+//! Every driver prints a paper-shaped text table (analysis::report) and
+//! writes CSV under `results/`. The scale knobs (steps, seeds) default to
+//! values that fit a single-core CPU host; EXPERIMENTS.md records the
+//! settings used for the committed results.
+
+use super::bn_restim;
+use super::evaluator::{EvalQuant, Evaluator};
+use super::qat::{fp_pretrained, prepare_qat};
+use super::schedule::Schedule;
+use super::trainer::{RunCfg, RunResult, Trainer};
+use crate::analysis::histogram::Histogram;
+use crate::analysis::kl::{layer_kl, KlRow};
+use crate::analysis::report::{mean_std, TableRenderer};
+use crate::data::DataCfg;
+use crate::osc;
+use crate::quant::adaround::{self, AnnealCfg};
+use crate::quant::sampler;
+use crate::quant::weight_grid;
+use crate::rng::Pcg32;
+use crate::runtime::Runtime;
+use crate::state::NamedTensors;
+use crate::toy::{self, ToyCfg, ToyEstimator};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Shared experiment context: runtime + scale knobs.
+pub struct Lab<'rt> {
+    pub rt: &'rt Runtime,
+    pub ckpt_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub fp_steps: u64,
+    pub qat_steps: u64,
+    pub seeds: Vec<u64>,
+    pub data: DataCfg,
+    /// batches for BN re-estimation
+    pub bn_batches: u64,
+}
+
+impl<'rt> Lab<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Lab {
+            rt,
+            ckpt_dir: PathBuf::from("ckpts"),
+            results_dir: PathBuf::from("results"),
+            fp_steps: 600,
+            qat_steps: 400,
+            seeds: vec![0, 1],
+            data: DataCfg::default(),
+            bn_batches: 24,
+        }
+    }
+}
+
+/// One QAT run specification (a table row for one seed).
+#[derive(Debug, Clone)]
+pub struct QatSpec {
+    pub model: String,
+    pub estimator: String,
+    pub bits_w: u32,
+    pub bits_a: u32,
+    pub quant_a: bool,
+    pub lam: Schedule,
+    pub f_th: Schedule,
+    pub seed: u64,
+    pub trace: Option<(String, usize)>,
+}
+
+impl QatSpec {
+    pub fn weight_only(model: &str, bits: u32, seed: u64) -> Self {
+        QatSpec {
+            model: model.into(),
+            estimator: "lsq".into(),
+            bits_w: bits,
+            bits_a: 8,
+            quant_a: false,
+            lam: Schedule::Const(0.0),
+            f_th: Schedule::Const(1.1),
+            seed,
+            trace: None,
+        }
+    }
+
+    pub fn full(model: &str, bits: u32, seed: u64) -> Self {
+        QatSpec { bits_a: bits, quant_a: true, ..Self::weight_only(model, bits, seed) }
+    }
+
+    fn quant(&self) -> EvalQuant {
+        EvalQuant {
+            bits_w: self.bits_w,
+            bits_a: self.bits_a,
+            quant_w: true,
+            quant_a: self.quant_a,
+        }
+    }
+}
+
+/// Outcome of one QAT run (pre/post BN re-estimation).
+pub struct QatOutcome {
+    pub pre_bn_acc: f64,
+    pub post_bn_acc: f64,
+    pub osc_pct: f64,
+    pub frozen_pct: f64,
+    pub state: NamedTensors,
+    pub run: RunResult,
+}
+
+impl<'rt> Lab<'rt> {
+    /// The core workflow shared by all tables: FP ckpt -> range init ->
+    /// QAT -> pre-BN eval -> BN re-estimation -> post-BN eval.
+    pub fn run_qat(&self, spec: &QatSpec) -> Result<QatOutcome> {
+        let mut state = fp_pretrained(self.rt, &self.ckpt_dir, &spec.model, spec.seed,
+                                      self.fp_steps, &self.data)?;
+        prepare_qat(self.rt, &mut state, &spec.model, spec.bits_w, spec.bits_a,
+                    &self.data, spec.seed)?;
+
+        let mut cfg = RunCfg::qat(&spec.model, self.qat_steps, spec.bits_w, spec.seed);
+        cfg.estimator = spec.estimator.clone();
+        cfg.bits_a = spec.bits_a;
+        cfg.quant_a = spec.quant_a;
+        if spec.quant_a {
+            // §5.1: W/A runs train at the lower of the paper's two learning
+            // rates (0.0033) — 0.01 destabilizes the activation-scale
+            // learning at low bit-widths.
+            cfg.lr = Schedule::Cosine { from: 0.0033, to: 0.0 };
+        }
+        cfg.lam = spec.lam;
+        cfg.f_th = spec.f_th;
+        cfg.trace = spec.trace.clone();
+        cfg.data = self.data.clone();
+
+        let trainer = Trainer::new(self.rt);
+        let run = trainer.train(state, &cfg)?;
+        let mut state = run.state.clone();
+
+        let evaluator = Evaluator::new(self.rt, &spec.model)?;
+        let q = spec.quant();
+        let pre = evaluator.eval_val(&state, &self.data, q)?;
+        bn_restim::reestimate(self.rt, &mut state, &spec.model, q, &self.data,
+                              spec.seed, self.bn_batches)?;
+        let post = evaluator.eval_val(&state, &self.data, q)?;
+
+        let info = self.rt.index.model(&spec.model)?;
+        let summary = osc::summarize(&state, &info.lowbit);
+        eprintln!(
+            "[lab] {} {} w{}a{} λ={} f_th={} seed{}: pre {:.2} post {:.2} osc {:.2}% frozen {:.2}%",
+            spec.model, spec.estimator, spec.bits_w,
+            if spec.quant_a { spec.bits_a.to_string() } else { "-".into() },
+            spec.lam.describe(), spec.f_th.describe(), spec.seed,
+            pre.acc, post.acc, summary.osc_pct(), summary.frozen_pct()
+        );
+        Ok(QatOutcome {
+            pre_bn_acc: pre.acc,
+            post_bn_acc: post.acc,
+            osc_pct: summary.osc_pct(),
+            frozen_pct: summary.frozen_pct(),
+            state,
+            run,
+        })
+    }
+
+    /// Seed-averaged row helper.
+    fn rows_over_seeds(
+        &self,
+        spec_for: impl Fn(u64) -> QatSpec,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>, Option<QatOutcome>)> {
+        let mut pre = vec![];
+        let mut post = vec![];
+        let mut oscs = vec![];
+        let mut last = None;
+        for &seed in &self.seeds {
+            let out = self.run_qat(&spec_for(seed))?;
+            pre.push(out.pre_bn_acc);
+            post.push(out.post_bn_acc);
+            oscs.push(out.osc_pct);
+            last = Some(out);
+        }
+        Ok((pre, post, oscs, last))
+    }
+
+    // -----------------------------------------------------------------
+    // Table 1: BN-statistics KL divergence per layer kind
+
+    pub fn table1(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 1: KL(population || EMA) of BN statistics, 3-bit weights",
+            &["Network", "Layer", "Kind", "max KL", "mean KL"],
+        );
+        for model in ["resnet18", "mbv2"] {
+            let spec = QatSpec::weight_only(model, 3, self.seeds[0]);
+            // train WITHOUT BN re-estimation; take the state right after QAT
+            let mut state = fp_pretrained(self.rt, &self.ckpt_dir, model, spec.seed,
+                                          self.fp_steps, &self.data)?;
+            prepare_qat(self.rt, &mut state, model, 3, 8, &self.data, spec.seed)?;
+            let mut cfg = RunCfg::qat(model, self.qat_steps, 3, spec.seed);
+            cfg.data = self.data.clone();
+            let run = Trainer::new(self.rt).train(state, &cfg)?;
+            let state = run.state;
+
+            // population stats via many train-mode batches
+            let stats = bn_restim::collect_stats(
+                self.rt, &state, model, spec.quant(), &self.data, spec.seed,
+                self.bn_batches * 2,
+            )?;
+            let pop = stats.finalize();
+            let info = self.rt.index.model(model)?;
+            let mut rows: Vec<KlRow> = vec![];
+            for (layer, (pm, pv)) in &pop {
+                let Some(em) = state.get(&format!("bn/{layer}.bn_m")) else { continue };
+                let Some(ev) = state.get(&format!("bn/{layer}.bn_v")) else { continue };
+                let kind = info
+                    .layers
+                    .get(layer)
+                    .map(|l| l.kind.clone())
+                    .unwrap_or_else(|| "?".into());
+                rows.push(layer_kl(layer, &kind, pm, pv, &em.data, &ev.data));
+            }
+            // representative rows: the paper lists stem-adjacent + two blocks
+            rows.sort_by(|a, b| a.layer.cmp(&b.layer));
+            for r in rows.iter().filter(|r| interesting_layer(&r.layer)) {
+                table.row(vec![
+                    model.into(),
+                    r.layer.clone(),
+                    r.kind.to_uppercase(),
+                    format!("{:.4}", r.max_kl),
+                    format!("{:.4}", r.mean_kl),
+                ]);
+            }
+            // aggregate by kind (the paper's DW >> PW >> full claim)
+            for kind in ["dw", "pw", "full"] {
+                let ks: Vec<&KlRow> = rows.iter().filter(|r| r.kind == kind).collect();
+                if ks.is_empty() {
+                    continue;
+                }
+                let max = ks.iter().map(|r| r.max_kl).fold(0.0, f64::max);
+                let mean = ks.iter().map(|r| r.mean_kl).sum::<f64>() / ks.len() as f64;
+                table.row(vec![
+                    model.into(),
+                    format!("<all {kind}>"),
+                    kind.to_uppercase(),
+                    format!("{max:.4}"),
+                    format!("{mean:.4}"),
+                ]);
+            }
+        }
+        table.emit(&self.results_dir, "table1");
+        Ok(table)
+    }
+
+    // -----------------------------------------------------------------
+    // Table 2: pre-BN vs post-BN accuracy across bit-widths
+
+    pub fn table2(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 2: val acc (%) before/after BN re-estimation (weight-only quant)",
+            &["Network", "Bits", "pre-BN", "post-BN"],
+        );
+        for (model, bits_list) in [("resnet18", vec![4, 3]), ("mbv2", vec![8, 4, 3])] {
+            for &bits in &bits_list {
+                let (pre, post, _, _) =
+                    self.rows_over_seeds(|seed| QatSpec::weight_only(model, bits, seed))?;
+                table.row(vec![
+                    model.into(),
+                    bits.to_string(),
+                    mean_std(&pre),
+                    mean_std(&post),
+                ]);
+            }
+        }
+        table.emit(&self.results_dir, "table2");
+        Ok(table)
+    }
+
+    // -----------------------------------------------------------------
+    // Table 3: effect of oscillations on training
+    // (baseline / SR sampling / AdaRound / freezing)
+
+    pub fn table3(&self) -> Result<TableRenderer> {
+        let model = "mbv2";
+        let seed = self.seeds[0];
+        let mut table = TableRenderer::new(
+            "Table 3: oscillating-weight optimization, MobileNetV2 3-bit weights",
+            &["Method", "Train loss", "Val acc (%)"],
+        );
+        let evaluator = Evaluator::new(self.rt, model)?;
+        let info = self.rt.index.model(model)?.clone();
+        let q = EvalQuant::weights(3);
+        let loss_batches = 16;
+
+        // Baseline
+        let base = self.run_qat(&QatSpec::weight_only(model, 3, seed))?;
+        let base_loss = evaluator
+            .train_loss(&base.state, &self.data, seed, loss_batches, q)?
+            .loss;
+        table.row(vec!["Baseline".into(), format!("{base_loss:.4}"), format!("{:.2}", base.post_bn_acc)]);
+
+        // Candidates: oscillating weights of the converged baseline
+        let (n_w, p_w) = weight_grid(3);
+        let mut cands = adaround::collect_candidates(
+            &base.state, &info.lowbit, |n| osc::weight_scale_of(n),
+            osc::OSC_METRIC_TH, n_w, p_w,
+        );
+        eprintln!("[table3] {} oscillating-weight candidates", cands.len());
+        let scale_of = |state: &NamedTensors, tensor: &str| -> f32 {
+            let wname = tensor.strip_prefix("params/").unwrap_or(tensor);
+            state
+                .get(&format!("params/{}", osc::weight_scale_of(wname)))
+                .map(|t| t.item())
+                .unwrap_or(1.0)
+        };
+
+        // SR: stochastic samples weighted by time-in-state
+        let mut rng = Pcg32::new(seed, 0x5a);
+        let mut losses = vec![];
+        let mut best_state: Option<(f64, NamedTensors)> = None;
+        for _ in 0..10 {
+            let mut s = base.state.clone();
+            let sc = |t: &str| scale_of(&base.state, t);
+            sampler::sample_assignment(&mut s, &mut cands, &mut rng, sc);
+            let l = evaluator.train_loss(&s, &self.data, seed, loss_batches, q)?.loss;
+            if best_state.as_ref().map(|(bl, _)| l < *bl).unwrap_or(true) {
+                best_state = Some((l, s));
+            }
+            losses.push(l);
+        }
+        let stats = sampler::summarize(losses);
+        table.row(vec![
+            "SR (mean+std)".into(),
+            format!("{:.4}^{:.4}", stats.mean, stats.std),
+            "-".into(),
+        ]);
+        let (best_l, best_s) = best_state.unwrap();
+        let mut best_s = best_s;
+        bn_restim::reestimate(self.rt, &mut best_s, model, q, &self.data, seed,
+                              self.bn_batches)?;
+        let best_acc = evaluator.eval_val(&best_s, &self.data, q)?.acc;
+        table.row(vec!["SR (best)".into(), format!("{best_l:.4}"), format!("{best_acc:.2}")]);
+
+        // AdaRound-style simulated annealing on the task loss
+        let base_state = base.state.clone();
+        let anneal_cfg = AnnealCfg { iters: 250, seed, flips: 4, ..Default::default() };
+        let (best_assign, ada_loss, _) = adaround::anneal(&mut cands, &anneal_cfg, |cs| {
+            let mut s = base_state.clone();
+            let sc = |t: &str| scale_of(&base_state, t);
+            adaround::apply_assignment(&mut s, cs, sc);
+            Ok(evaluator.train_loss(&s, &self.data, seed, loss_batches, q)?.loss)
+        })?;
+        let mut ada_state = base.state.clone();
+        let sc = |t: &str| scale_of(&base.state, t);
+        adaround::apply_assignment(&mut ada_state, &best_assign, sc);
+        bn_restim::reestimate(self.rt, &mut ada_state, model, q, &self.data, seed,
+                              self.bn_batches)?;
+        let ada_acc = evaluator.eval_val(&ada_state, &self.data, q)?.acc;
+        table.row(vec!["AdaRound".into(), format!("{ada_loss:.4}"), format!("{ada_acc:.2}")]);
+
+        // Iterative freezing (§4.3), best schedule from Table 5
+        let freeze = self.run_qat(&QatSpec {
+            f_th: Schedule::Cosine { from: 0.04, to: 0.01 },
+            ..QatSpec::weight_only(model, 3, seed)
+        })?;
+        table.row(vec![
+            "Freezing".into(),
+            "-".into(),
+            format!("{:.2}", freeze.post_bn_acc),
+        ]);
+
+        table.emit(&self.results_dir, "table3");
+        Ok(table)
+    }
+
+    // -----------------------------------------------------------------
+    // Table 4: oscillation dampening sweep
+
+    pub fn table4(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 4: dampening strength/schedule, MobileNetV2 3-bit weights",
+            &["Regularization", "pre-BN", "post-BN", "Osc. (%)"],
+        );
+        let mut add = |name: &str, lam: Schedule| -> Result<()> {
+            let (pre, post, oscs, _) = self.rows_over_seeds(|seed| QatSpec {
+                lam,
+                ..QatSpec::weight_only("mbv2", 3, seed)
+            })?;
+            table.row(vec![
+                name.into(),
+                mean_std(&pre),
+                mean_std(&post),
+                format!("{:.2}", oscs.iter().sum::<f64>() / oscs.len() as f64),
+            ]);
+            Ok(())
+        };
+        add("Baseline", Schedule::Const(0.0))?;
+        for lam in [1e-4f32, 1e-3, 1e-2] {
+            add(&format!("λ = {lam}"), Schedule::Const(lam))?;
+        }
+        for lam in [1e-4f32, 1e-3, 1e-2] {
+            add(&format!("λ = cos(0, {lam})"), Schedule::Cosine { from: 0.0, to: lam })?;
+        }
+        table.emit(&self.results_dir, "table4");
+        Ok(table)
+    }
+
+    // -----------------------------------------------------------------
+    // Table 5: iterative weight freezing sweep
+
+    pub fn table5(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 5: freezing threshold/schedule, MobileNetV2 3-bit weights",
+            &["Method", "pre-BN", "post-BN", "Osc. (%)"],
+        );
+        let mut add = |name: &str, f_th: Schedule| -> Result<()> {
+            let (pre, post, oscs, _) = self.rows_over_seeds(|seed| QatSpec {
+                f_th,
+                ..QatSpec::weight_only("mbv2", 3, seed)
+            })?;
+            table.row(vec![
+                name.into(),
+                mean_std(&pre),
+                mean_std(&post),
+                format!("{:.2}", oscs.iter().sum::<f64>() / oscs.len() as f64),
+            ]);
+            Ok(())
+        };
+        add("Baseline", Schedule::Const(1.1))?;
+        for th in [0.02f32, 0.015, 0.01] {
+            add(&format!("f_th = {th}"), Schedule::Const(th))?;
+        }
+        add("f_th = cos(0.04, 0.015)", Schedule::Cosine { from: 0.04, to: 0.015 })?;
+        add("f_th = cos(0.04, 0.01)", Schedule::Cosine { from: 0.04, to: 0.01 })?;
+        table.emit(&self.results_dir, "table5");
+        Ok(table)
+    }
+
+    // -----------------------------------------------------------------
+    // Tables 6-8: method comparison at W/A quantization
+
+    fn comparison_rows(
+        &self,
+        table: &mut TableRenderer,
+        model: &str,
+        bits: u32,
+        methods: &[(&str, &str, Schedule, Schedule)],
+    ) -> Result<()> {
+        for (name, est, lam, f_th) in methods {
+            let (_, post, _, _) = self.rows_over_seeds(|seed| QatSpec {
+                estimator: est.to_string(),
+                lam: *lam,
+                f_th: *f_th,
+                ..QatSpec::full(model, bits, seed)
+            })?;
+            table.row(vec![
+                name.to_string(),
+                format!("{bits}/{bits}"),
+                mean_std(&post),
+            ]);
+        }
+        Ok(())
+    }
+
+    /// Common method set: LSQ baseline, multiplicative estimators, bin
+    /// regularization (constant-λ dampening, Han et al. 2021), and the
+    /// paper's two methods.
+    fn methods_full() -> Vec<(&'static str, &'static str, Schedule, Schedule)> {
+        vec![
+            ("LSQ (baseline)", "lsq", Schedule::Const(0.0), Schedule::Const(1.1)),
+            ("PACT", "pact", Schedule::Const(0.0), Schedule::Const(1.1)),
+            ("DSQ", "dsq", Schedule::Const(0.0), Schedule::Const(1.1)),
+            ("EWGS", "ewgs", Schedule::Const(0.0), Schedule::Const(1.1)),
+            ("PSG", "psg", Schedule::Const(0.0), Schedule::Const(1.1)),
+            ("LSQ + BR", "lsq", Schedule::Const(1e-3), Schedule::Const(1.1)),
+            ("LSQ + Dampen (ours)", "lsq", Schedule::Cosine { from: 0.0, to: 1e-2 },
+             Schedule::Const(1.1)),
+            ("LSQ + Freeze (ours)", "lsq", Schedule::Const(0.0),
+             Schedule::Cosine { from: 0.04, to: 0.01 }),
+        ]
+    }
+
+    fn methods_lsq_only() -> Vec<(&'static str, &'static str, Schedule, Schedule)> {
+        vec![
+            ("LSQ (baseline)", "lsq", Schedule::Const(0.0), Schedule::Const(1.1)),
+            ("LSQ + BR", "lsq", Schedule::Const(1e-3), Schedule::Const(1.1)),
+            ("LSQ + Dampen (ours)", "lsq", Schedule::Cosine { from: 0.0, to: 1e-2 },
+             Schedule::Const(1.1)),
+            ("LSQ + Freeze (ours)", "lsq", Schedule::Const(0.0),
+             Schedule::Cosine { from: 0.04, to: 0.01 }),
+        ]
+    }
+
+    pub fn table6(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 6: MobileNetV2, W/A quantization, val acc (%)",
+            &["Method", "W/A", "Val acc (%)"],
+        );
+        self.fp_reference_row(&mut table, "mbv2")?;
+        for bits in [4, 3] {
+            self.comparison_rows(&mut table, "mbv2", bits, &Self::methods_full())?;
+        }
+        table.emit(&self.results_dir, "table6");
+        Ok(table)
+    }
+
+    pub fn table7(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 7: MobileNetV3-Small, W/A quantization, val acc (%)",
+            &["Method", "W/A", "Val acc (%)"],
+        );
+        self.fp_reference_row(&mut table, "mbv3")?;
+        for bits in [4, 3] {
+            self.comparison_rows(&mut table, "mbv3", bits, &Self::methods_lsq_only())?;
+        }
+        table.emit(&self.results_dir, "table7");
+        Ok(table)
+    }
+
+    pub fn table8(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Table 8: EfficientNet-lite, W/A quantization, val acc (%)",
+            &["Method", "W/A", "Val acc (%)"],
+        );
+        self.fp_reference_row(&mut table, "efflite")?;
+        for bits in [4, 3] {
+            let methods = [
+                Self::methods_lsq_only()[0],
+                Self::methods_lsq_only()[2],
+                Self::methods_lsq_only()[3],
+            ];
+            self.comparison_rows(&mut table, "efflite", bits, &methods)?;
+        }
+        table.emit(&self.results_dir, "table8");
+        Ok(table)
+    }
+
+    fn fp_reference_row(&self, table: &mut TableRenderer, model: &str) -> Result<()> {
+        let mut accs = vec![];
+        for &seed in &self.seeds {
+            let state = fp_pretrained(self.rt, &self.ckpt_dir, model, seed, self.fp_steps, &self.data)?;
+            let ev = Evaluator::new(self.rt, model)?;
+            accs.push(ev.eval_val(&state, &self.data, EvalQuant::fp())?.acc);
+        }
+        table.row(vec!["Full-precision".into(), "32/32".into(), mean_std(&accs)]);
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Figures
+
+    /// Fig 1: toy oscillation traces for STE / EWGS / DSQ (+ dampening).
+    pub fn fig1(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Fig 1: toy 1-D regression — oscillation stats per estimator",
+            &["Estimator", "freq (flips/iter)", "amplitude", "frac in upper state"],
+        );
+        let ests: Vec<(&str, ToyEstimator)> = vec![
+            ("STE", ToyEstimator::Ste),
+            ("EWGS", ToyEstimator::Ewgs { delta: 0.2 }),
+            ("DSQ", ToyEstimator::Dsq { k: 5.0 }),
+            ("PSG", ToyEstimator::Psg { eps: 0.01 }),
+            ("Dampen λ=0.6", ToyEstimator::Dampen { lambda: 0.6 }),
+        ];
+        let mut csv = String::from("iter,estimator,latent,quant\n");
+        for (name, est) in ests {
+            let cfg = ToyCfg { est, steps: 800, ..Default::default() };
+            let traj = toy::run(&cfg);
+            let st = toy::stats(&traj, 200, cfg.s);
+            for (i, (w, q)) in traj.iter().enumerate().step_by(2) {
+                csv.push_str(&format!("{i},{name},{w},{q}\n"));
+            }
+            table.row(vec![
+                name.into(),
+                format!("{:.4}", st.freq),
+                format!("{:.4}", st.amplitude),
+                format!("{:.3}", st.frac_up),
+            ]);
+        }
+        std::fs::create_dir_all(&self.results_dir).ok();
+        std::fs::write(self.results_dir.join("fig1_traces.csv"), csv)?;
+        table.emit(&self.results_dir, "fig1");
+        Ok(table)
+    }
+
+    /// Fig 2: integer/latent weight traces of a depthwise layer.
+    pub fn fig2(&self) -> Result<TableRenderer> {
+        let model = "mbv2";
+        let info = self.rt.index.model(model)?;
+        let dw = info
+            .depthwise()
+            .first()
+            .map(|s| format!("{s}.w"))
+            .expect("model has depthwise layers");
+        let spec = QatSpec {
+            trace: Some((dw.clone(), 9)),
+            ..QatSpec::weight_only(model, 3, self.seeds[0])
+        };
+        let out = self.run_qat(&spec)?;
+        let mut csv = String::from("step,weight,int,latent\n");
+        for rec in &out.run.trace {
+            for (k, (&i, &l)) in rec.ints.iter().zip(&rec.latents).enumerate() {
+                csv.push_str(&format!("{},{},{},{}\n", rec.step, k, i, l));
+            }
+        }
+        std::fs::create_dir_all(&self.results_dir).ok();
+        std::fs::write(self.results_dir.join("fig2_trace.csv"), csv)?;
+
+        // summarize: transitions per weight over the trace tail
+        let mut table = TableRenderer::new(
+            &format!("Fig 2: integer-weight transitions in {dw} (trace tail)"),
+            &["weight idx", "transitions", "distinct states"],
+        );
+        let tail: Vec<_> = out.run.trace.iter().rev().take(300).collect();
+        for k in 0..9 {
+            let series: Vec<i64> = tail.iter().rev().map(|r| r.ints[k] as i64).collect();
+            if series.is_empty() {
+                continue;
+            }
+            let trans = series.windows(2).filter(|w| w[0] != w[1]).count();
+            let mut states: Vec<i64> = series.clone();
+            states.sort();
+            states.dedup();
+            table.row(vec![k.to_string(), trans.to_string(), states.len().to_string()]);
+        }
+        table.emit(&self.results_dir, "fig2");
+        Ok(table)
+    }
+
+    /// Figs 3 & 4: latent-weight / boundary-distance histograms for the
+    /// baseline (fig3) and for dampening + freezing (fig4).
+    pub fn fig34(&self) -> Result<TableRenderer> {
+        let model = "mbv2";
+        let seed = self.seeds[0];
+        let info = self.rt.index.model(model)?;
+        let dws = info.depthwise();
+        let dw = dws.get(1.min(dws.len() - 1)).map(|s| format!("{s}.w")).unwrap();
+        let (n_w, p_w) = weight_grid(3);
+
+        let mut table = TableRenderer::new(
+            &format!("Figs 3-4: boundary-distance mass of {dw} (3-bit)"),
+            &["Run", "|d| > 0.4 (%)", "|d| < 0.1 (%)", "Osc (%)"],
+        );
+        let mut runs: Vec<(&str, QatSpec)> = vec![
+            ("Baseline (fig3)", QatSpec::weight_only(model, 3, seed)),
+            (
+                "Dampening (fig4L)",
+                QatSpec {
+                    lam: Schedule::Cosine { from: 0.0, to: 1e-2 },
+                    ..QatSpec::weight_only(model, 3, seed)
+                },
+            ),
+            (
+                "Freezing (fig4R)",
+                QatSpec {
+                    f_th: Schedule::Cosine { from: 0.04, to: 0.01 },
+                    ..QatSpec::weight_only(model, 3, seed)
+                },
+            ),
+        ];
+        std::fs::create_dir_all(&self.results_dir).ok();
+        for (name, spec) in runs.drain(..) {
+            let out = self.run_qat(&spec)?;
+            let d = osc::boundary_distances(&out.state, &dw, n_w, p_w);
+            let mut hist = Histogram::new(-0.5, 0.5, 50);
+            hist.add_all(&d);
+            let slug = name.split_whitespace().next().unwrap().to_lowercase();
+            std::fs::write(
+                self.results_dir.join(format!("fig34_{slug}.csv")),
+                hist.to_csv(),
+            )?;
+            println!("{name}:\n{}", hist.ascii(8));
+            let edge = 100.0 * hist.edge_mass(0.1);
+            let center = 100.0
+                * d.iter().filter(|&&x| x.abs() < 0.1).count() as f64
+                / d.len().max(1) as f64;
+            table.row(vec![
+                name.into(),
+                format!("{edge:.1}"),
+                format!("{center:.1}"),
+                format!("{:.2}", out.osc_pct),
+            ]);
+
+            // fig 3 also wants the latent-weight histogram itself
+            let lat = osc::latent_grid_values(&out.state, &dw);
+            let mut lhist = Histogram::new(n_w - 0.5, p_w + 0.5, 64);
+            lhist.add_all(&lat);
+            std::fs::write(
+                self.results_dir.join(format!("fig3_latent_{slug}.csv")),
+                lhist.to_csv(),
+            )?;
+        }
+        table.emit(&self.results_dir, "fig34");
+        Ok(table)
+    }
+
+    /// Fig 5: oscillation frequency vs distance of w* from the grid.
+    pub fn fig5(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Fig 5: toy oscillation frequency ∝ distance d = |q(w*) - w*|",
+            &["d / s", "measured freq", "predicted 2d/s"],
+        );
+        // w* sits at distance d from the grid point 0.2; the flip counter
+        // registers both edges of each period, so predicted freq = 2 d/s.
+        let mut csv = String::from("d_over_s,freq,predicted\n");
+        for i in 1..=9 {
+            let d = 0.005 * i as f32;
+            let cfg = ToyCfg { w_star: 0.2 + d, steps: 8000, ..Default::default() };
+            let st = toy::stats(&toy::run(&cfg), 1000, cfg.s);
+            let dos = d / cfg.s;
+            csv.push_str(&format!("{dos},{},{}\n", st.freq, 2.0 * dos));
+            table.row(vec![
+                format!("{dos:.3}"),
+                format!("{:.4}", st.freq),
+                format!("{:.3}", 2.0 * dos),
+            ]);
+        }
+        std::fs::create_dir_all(&self.results_dir).ok();
+        std::fs::write(self.results_dir.join("fig5.csv"), csv)?;
+        table.emit(&self.results_dir, "fig5");
+        Ok(table)
+    }
+
+    /// Fig 6: learning rate changes amplitude, not frequency.
+    pub fn fig6(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Fig 6: toy oscillation vs learning rate (STE)",
+            &["lr", "freq", "amplitude"],
+        );
+        let mut csv = String::from("lr,freq,amplitude\n");
+        for lr in [0.02f32, 0.01, 0.005, 0.0025] {
+            let cfg = ToyCfg { lr, steps: 8000, ..Default::default() };
+            let st = toy::stats(&toy::run(&cfg), 2000, cfg.s);
+            csv.push_str(&format!("{lr},{},{}\n", st.freq, st.amplitude));
+            table.row(vec![
+                format!("{lr}"),
+                format!("{:.4}", st.freq),
+                format!("{:.5}", st.amplitude),
+            ]);
+        }
+        std::fs::create_dir_all(&self.results_dir).ok();
+        std::fs::write(self.results_dir.join("fig6.csv"), csv)?;
+        table.emit(&self.results_dir, "fig6");
+        Ok(table)
+    }
+}
+
+/// Table-1 row filter: stem + two whole blocks, like the paper's listing.
+fn interesting_layer(layer: &str) -> bool {
+    layer == "stem"
+        || layer.starts_with("b2.")
+        || layer.starts_with("b5.")
+        || layer.starts_with("l2.")
+        || layer.starts_with("l5.")
+}

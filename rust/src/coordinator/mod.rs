@@ -1,0 +1,23 @@
+//! The QAT training orchestrator (the paper's training-loop protocol).
+//!
+//! * `schedule` — cosine/constant schedules for lr, dampening λ and the
+//!   freezing threshold f_th (§4.2/4.3 use cosine-annealed strengths).
+//! * `trainer` — the step loop around the compiled train artifact; owns
+//!   the prefetching data pipeline, the hyper-scalar schedule evaluation,
+//!   trace capture (Fig 2), and metric logging.
+//! * `qat` — run preparation: FP pretrain reuse, MSE range estimation,
+//!   calibration-driven activation-scale init, oscillation-state reset.
+//! * `bn_restim` — post-training batch-norm re-estimation (§2.3.1).
+//! * `evaluator` — validation-set accuracy/loss through the eval artifact.
+//! * `experiment` — the table/figure drivers (Tables 1-8, Figs 1-6).
+
+pub mod bn_restim;
+pub mod evaluator;
+pub mod experiment;
+pub mod qat;
+pub mod schedule;
+pub mod trainer;
+
+pub use evaluator::EvalResult;
+pub use schedule::Schedule;
+pub use trainer::{RunCfg, RunResult, Trainer};

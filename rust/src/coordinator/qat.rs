@@ -1,0 +1,173 @@
+//! QAT run preparation: the paper's workflow glue (§5.1).
+//!
+//! Starting from a pretrained FP checkpoint:
+//!   1. **MSE range estimation** for every weight scale (grid search on
+//!      the actual weight tensor against its target grid),
+//!   2. **activation-scale init** from a calibration pass (bnstats
+//!      artifact -> per-site E|x| -> LSQ rule),
+//!   3. **oscillation-state reset** consistent with the new scales
+//!      (wintp = iema = clip(round(w/s)); f = b = 0),
+//!   4. momentum reset.
+//!
+//! FP pretraining itself is cached per (model, seed) under `ckpts/` and
+//! shared by every QAT table row — exactly how the paper reuses one
+//! pretrained network per architecture.
+
+use super::evaluator::EvalQuant;
+use super::trainer::{RunCfg, Trainer};
+use crate::data::{DataCfg, Dataset};
+use crate::osc::weight_scale_of;
+use crate::quant::range_est::{lsq_act_scale, mse_weight_scale};
+use crate::quant::{act_grid, weight_grid};
+use crate::runtime::Runtime;
+use crate::state::{Checkpoint, NamedTensors};
+use crate::tensor::{round_ties_even, Tensor};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load (or train + cache) the FP-pretrained state for (model, seed).
+pub fn fp_pretrained(
+    rt: &Runtime,
+    ckpt_dir: &Path,
+    model: &str,
+    seed: u64,
+    steps: u64,
+    data: &DataCfg,
+) -> Result<NamedTensors> {
+    let tag = format!("{model}_fp_s{seed}");
+    if Checkpoint::exists(ckpt_dir, &tag) {
+        return Checkpoint::load(ckpt_dir, &tag);
+    }
+    eprintln!("[qat] FP-pretraining {model} seed {seed} for {steps} steps");
+    let trainer = Trainer::new(rt);
+    let state = rt.initial_state(model)?;
+    let mut cfg = RunCfg::fp(model, steps, 0.02, seed);
+    cfg.data = data.clone();
+    let res = trainer.train(state, &cfg)?;
+    let acc = res.history.last("acc").unwrap_or(f64::NAN);
+    eprintln!("[qat] FP pretrain done (train acc {acc:.2})");
+    Checkpoint::save(ckpt_dir, &tag, &res.state, steps)?;
+    Ok(res.state)
+}
+
+/// Per-layer weight grid: interior layers use the run's low-bit grid,
+/// first/last ("8bit") layers a fixed 8-bit grid.
+fn grid_for(wq: &str, bits_w: u32) -> (f32, f32) {
+    match wq {
+        "8bit" => weight_grid(8),
+        _ => weight_grid(bits_w),
+    }
+}
+
+/// Prepare a state for QAT: range-estimate scales, calibrate activation
+/// scales, reset oscillation + momentum state.
+pub fn prepare_qat(
+    rt: &Runtime,
+    state: &mut NamedTensors,
+    model: &str,
+    bits_w: u32,
+    bits_a: u32,
+    data: &DataCfg,
+    seed: u64,
+) -> Result<()> {
+    let info = rt.index.model(model)?.clone();
+
+    // (1) MSE range estimation for all quantized weight tensors.
+    // Layer table gives conv/fc weights; SE weights (w1/w2) are covered by
+    // the lowbit list.
+    let mut weight_grids: Vec<(String, f32, f32)> = Vec::new();
+    for (_, layer) in &info.layers {
+        if layer.wq == "none" || layer.weight.is_empty() {
+            continue;
+        }
+        let (n, p) = grid_for(&layer.wq, bits_w);
+        weight_grids.push((layer.weight.clone(), n, p));
+    }
+    for w in &info.lowbit {
+        if !weight_grids.iter().any(|(n, _, _)| n == w) {
+            let (n, p) = weight_grid(bits_w);
+            weight_grids.push((w.clone(), n, p));
+        }
+    }
+    for (wname, n, p) in &weight_grids {
+        let key = format!("params/{wname}");
+        let Some(w) = state.get(&key) else { continue };
+        let s = mse_weight_scale(&w.data, *n, *p);
+        state.insert(format!("params/{}", weight_scale_of(wname)), Tensor::scalar(s));
+    }
+
+    // (2) activation scales from a calibration pass.
+    let bn_name = info.artifacts.get("bnstats").context("bnstats artifact")?;
+    let artifact = rt.artifact(bn_name)?;
+    let ds = Dataset::new(DataCfg { seed, ..data.clone() });
+    let q = EvalQuant::fp(); // calibrate on unquantized activations
+    let hyper = calib_hyper(q);
+    let mut sums: std::collections::BTreeMap<String, f64> = Default::default();
+    const CALIB_BATCHES: u64 = 4;
+    for i in 0..CALIB_BATCHES {
+        let b = ds.train_batch(seed ^ 0xca11b, i);
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", b.x);
+        io.insert("batch/y", b.y);
+        let out = artifact.execute(&[state, &io, &hyper])?;
+        for (k, v) in &out.map {
+            if let Some(site) = k.strip_suffix(".absmean") {
+                *sums.entry(site.to_string()).or_default() += v.item() as f64;
+            }
+        }
+    }
+    for (site, sum) in sums {
+        let abs_mean = (sum / CALIB_BATCHES as f64) as f32;
+        let p_a = match info.layers.get(&site).map(|l| l.wq.as_str()) {
+            Some("8bit") => act_grid(8),
+            _ => act_grid(bits_a),
+        };
+        state.insert(format!("params/{site}.as"), Tensor::scalar(lsq_act_scale(abs_mean, p_a)));
+    }
+
+    // (3) oscillation-state reset consistent with the fresh scales.
+    let (n_w, p_w) = weight_grid(bits_w);
+    for wname in &info.lowbit {
+        let w = state.expect(&format!("params/{wname}"))?.clone();
+        let s = state.expect(&format!("params/{}", weight_scale_of(wname)))?.item();
+        let wint: Vec<f32> = w
+            .data
+            .iter()
+            .map(|&x| round_ties_even(x / s).clamp(n_w, p_w))
+            .collect();
+        let shape = w.shape.clone();
+        let z = Tensor::zeros(&shape);
+        state.insert(format!("osc/{wname}#f"), z.clone());
+        state.insert(format!("osc/{wname}#b"), z.clone());
+        state.insert(format!("osc/{wname}#fint"), z.clone());
+        state.insert(format!("osc/{wname}#psign"), z);
+        state.insert(format!("osc/{wname}#wintp"), Tensor::new(shape.clone(), wint.clone()));
+        state.insert(format!("osc/{wname}#iema"), Tensor::new(shape, wint));
+    }
+
+    // (4) fresh SGD momenta.
+    let opt_keys: Vec<String> = state.names_under("opt/").map(String::from).collect();
+    for k in opt_keys {
+        let shape = state.get(&k).unwrap().shape.clone();
+        state.insert(k, Tensor::zeros(&shape));
+    }
+    Ok(())
+}
+
+fn calib_hyper(q: EvalQuant) -> NamedTensors {
+    let (n_w, p_w) = weight_grid(q.bits_w);
+    let mut h = NamedTensors::new();
+    let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
+    put("lr", 0.0);
+    put("lam", 0.0);
+    put("f_th", 1.1);
+    put("m_osc", 0.0);
+    put("bn_mom", 0.0);
+    put("mu", 0.0);
+    put("n_w", n_w);
+    put("p_w", p_w);
+    put("p_a", act_grid(q.bits_a));
+    put("wq_on", if q.quant_w { 1.0 } else { 0.0 });
+    put("aq_on", if q.quant_a { 1.0 } else { 0.0 });
+    h
+}

@@ -1,0 +1,111 @@
+//! Hyper-parameter schedules.
+//!
+//! The paper anneals three quantities with cosine schedules: the learning
+//! rate (standard cosine decay, §5.1), the dampening strength λ
+//! (*increasing* cosine, Table 4 "cos(0, λ_max)") and the freezing
+//! threshold f_th (*decreasing* cosine, Table 5 "cos(0.04, f_end)").
+//! One type covers all three: `Cosine { from, to }` moves from `from` at
+//! t=0 to `to` at t=T along the half-cosine.
+
+/// A scalar schedule over normalized training progress x ∈ [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Const(f32),
+    /// half-cosine interpolation from `from` (x=0) to `to` (x=1)
+    Cosine { from: f32, to: f32 },
+    /// linear interpolation (used by ablations)
+    Linear { from: f32, to: f32 },
+}
+
+impl Schedule {
+    pub fn at(&self, x: f32) -> f32 {
+        let x = x.clamp(0.0, 1.0);
+        match *self {
+            Schedule::Const(v) => v,
+            Schedule::Cosine { from, to } => {
+                let w = 0.5 * (1.0 - (std::f32::consts::PI * x).cos());
+                from + (to - from) * w
+            }
+            Schedule::Linear { from, to } => from + (to - from) * x,
+        }
+    }
+
+    /// Parse "0.01", "cos(0,0.001)", "lin(1,0)" — the CLI/config syntax.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let s = s.trim();
+        if let Some(inner) = s.strip_prefix("cos(").and_then(|r| r.strip_suffix(')')) {
+            let (a, b) = inner.split_once(',')?;
+            return Some(Schedule::Cosine {
+                from: a.trim().parse().ok()?,
+                to: b.trim().parse().ok()?,
+            });
+        }
+        if let Some(inner) = s.strip_prefix("lin(").and_then(|r| r.strip_suffix(')')) {
+            let (a, b) = inner.split_once(',')?;
+            return Some(Schedule::Linear {
+                from: a.trim().parse().ok()?,
+                to: b.trim().parse().ok()?,
+            });
+        }
+        s.parse().ok().map(Schedule::Const)
+    }
+
+    /// Human-readable form matching the paper's notation.
+    pub fn describe(&self) -> String {
+        match *self {
+            Schedule::Const(v) => format!("{v}"),
+            Schedule::Cosine { from, to } => format!("cos({from},{to})"),
+            Schedule::Linear { from, to } => format!("lin({from},{to})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let c = Schedule::Cosine { from: 0.0, to: 1.0 };
+        assert!((c.at(0.0) - 0.0).abs() < 1e-6);
+        assert!((c.at(1.0) - 1.0).abs() < 1e-6);
+        assert!((c.at(0.5) - 0.5).abs() < 1e-6);
+        // slow start: below linear early on
+        assert!(c.at(0.25) < 0.25);
+    }
+
+    #[test]
+    fn decreasing_cosine() {
+        let c = Schedule::Cosine { from: 0.04, to: 0.015 };
+        assert!(c.at(0.0) > c.at(0.5) && c.at(0.5) > c.at(1.0));
+    }
+
+    #[test]
+    fn clamps() {
+        let c = Schedule::Linear { from: 0.0, to: 1.0 };
+        assert_eq!(c.at(-1.0), 0.0);
+        assert_eq!(c.at(2.0), 1.0);
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!(Schedule::parse("0.01"), Some(Schedule::Const(0.01)));
+        assert_eq!(
+            Schedule::parse("cos(0, 0.001)"),
+            Some(Schedule::Cosine { from: 0.0, to: 0.001 })
+        );
+        assert_eq!(
+            Schedule::parse("lin(1,0)"),
+            Some(Schedule::Linear { from: 1.0, to: 0.0 })
+        );
+        assert_eq!(Schedule::parse("wat"), None);
+    }
+
+    #[test]
+    fn describe_roundtrips() {
+        for s in ["0.01", "cos(0,0.001)", "lin(1,0)"] {
+            let sch = Schedule::parse(s).unwrap();
+            assert_eq!(Schedule::parse(&sch.describe()), Some(sch));
+        }
+    }
+}

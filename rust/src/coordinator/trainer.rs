@@ -1,0 +1,225 @@
+//! The training step loop: drive the compiled train artifact with
+//! schedule-evaluated hyper scalars, a prefetching data pipeline, trace
+//! capture and metric logging. Pure Rust on the step path.
+
+use super::schedule::Schedule;
+use crate::data::{DataCfg, Dataset, Loader};
+use crate::metrics::History;
+use crate::osc::{self, TraceRecord};
+use crate::quant::{act_grid, weight_grid};
+use crate::runtime::{Artifact, Runtime};
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// Everything one training run needs.
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    pub model: String,
+    /// gradient estimator: lsq | ewgs | dsq | psg | pact
+    pub estimator: String,
+    pub steps: u64,
+    pub lr: Schedule,
+    /// oscillation-dampening strength λ (eq. 5); Const(0) = off
+    pub lam: Schedule,
+    /// freezing threshold f_th; Const(1.1) = freezing off
+    pub f_th: Schedule,
+    pub bits_w: u32,
+    pub bits_a: u32,
+    pub quant_w: bool,
+    pub quant_a: bool,
+    /// oscillation-EMA momentum m (eq. 4)
+    pub m_osc: f32,
+    pub bn_mom: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// record metrics every N steps
+    pub log_every: u64,
+    /// Fig-2 style trace: capture (weight tensor, first k weights) each step
+    pub trace: Option<(String, usize)>,
+    pub data: DataCfg,
+}
+
+impl RunCfg {
+    /// FP pretraining run (quantization gates off).
+    pub fn fp(model: &str, steps: u64, lr: f32, seed: u64) -> Self {
+        RunCfg {
+            model: model.into(),
+            estimator: "lsq".into(),
+            steps,
+            lr: Schedule::Cosine { from: lr, to: 0.0 },
+            lam: Schedule::Const(0.0),
+            f_th: Schedule::Const(1.1),
+            bits_w: 8,
+            bits_a: 8,
+            quant_w: false,
+            quant_a: false,
+            m_osc: 0.02,
+            bn_mom: 0.1,
+            momentum: 0.9,
+            seed,
+            log_every: 20,
+            trace: None,
+            data: DataCfg::default(),
+        }
+    }
+
+    /// QAT run at a weight bit-width (LSQ baseline defaults, §5.1).
+    pub fn qat(model: &str, steps: u64, bits_w: u32, seed: u64) -> Self {
+        RunCfg {
+            bits_w,
+            bits_a: bits_w,
+            quant_w: true,
+            quant_a: false,
+            lr: Schedule::Cosine { from: 0.01, to: 0.0 },
+            ..Self::fp(model, steps, 0.01, seed)
+        }
+    }
+
+    /// Artifact role key for the estimator ("train_lsq", ...).
+    pub fn train_role(&self) -> String {
+        format!("train_{}", self.estimator)
+    }
+}
+
+/// Outcome of a run: final state + logged history + optional trace.
+pub struct RunResult {
+    pub state: NamedTensors,
+    pub history: History,
+    pub trace: Vec<TraceRecord>,
+    pub steps_per_sec: f64,
+    pub final_metrics: Vec<(String, f64)>,
+}
+
+/// The step-loop driver bound to one Runtime.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        Trainer { rt }
+    }
+
+    fn train_artifact(&self, cfg: &RunCfg) -> Result<Rc<Artifact>> {
+        let info = self.rt.index.model(&cfg.model)?;
+        let role = cfg.train_role();
+        let name = info
+            .artifacts
+            .get(&role)
+            .with_context(|| format!("model {} has no artifact {role}", cfg.model))?;
+        self.rt.artifact(name)
+    }
+
+    /// Hyper scalars for a step at progress x ∈ [0, 1].
+    fn hyper(&self, cfg: &RunCfg, x: f32) -> NamedTensors {
+        let (n_w, p_w) = weight_grid(cfg.bits_w);
+        let p_a = act_grid(cfg.bits_a);
+        let mut h = NamedTensors::new();
+        let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
+        put("lr", cfg.lr.at(x));
+        put("lam", cfg.lam.at(x));
+        put("f_th", cfg.f_th.at(x));
+        put("m_osc", cfg.m_osc);
+        put("bn_mom", cfg.bn_mom);
+        put("mu", cfg.momentum);
+        put("n_w", n_w);
+        put("p_w", p_w);
+        put("p_a", p_a);
+        put("wq_on", if cfg.quant_w { 1.0 } else { 0.0 });
+        put("aq_on", if cfg.quant_a { 1.0 } else { 0.0 });
+        h
+    }
+
+    /// Run `cfg.steps` training steps from `state` (consumed), returning
+    /// the final state and history. All training state round-trips through
+    /// the artifact; Rust owns it between steps.
+    pub fn train(&self, mut state: NamedTensors, cfg: &RunCfg) -> Result<RunResult> {
+        let artifact = self.train_artifact(cfg)?;
+        let mut data_cfg = cfg.data.clone();
+        data_cfg.seed = cfg.seed;
+        let dataset = Dataset::new(data_cfg);
+        let loader = Loader::new(dataset, cfg.seed, 4);
+
+        let (n_w, p_w) = weight_grid(cfg.bits_w);
+        let mut history = History::new(&[
+            "step", "loss", "ce", "damp", "acc", "osc_frac", "frozen_frac", "lr",
+            "lam", "f_th",
+        ]);
+        let mut trace = Vec::new();
+        let t0 = std::time::Instant::now();
+
+        for step in 0..cfg.steps {
+            let x = if cfg.steps <= 1 { 0.0 } else { step as f32 / (cfg.steps - 1) as f32 };
+            let hyper = self.hyper(cfg, x);
+            let batch = loader.next();
+            let mut io = NamedTensors::new();
+            io.insert("batch/x", batch.x);
+            io.insert("batch/y", batch.y);
+
+            let out = artifact
+                .execute(&[&state, &io, &hyper])
+                .with_context(|| format!("train step {step}"))?;
+
+            // re-key: "state/..." -> new state; "metrics/..." -> scalars
+            let mut new_state = NamedTensors::new();
+            let mut metrics = Vec::new();
+            for (k, v) in out.map {
+                if let Some(rest) = k.strip_prefix("state/") {
+                    new_state.insert(rest.to_string(), v);
+                } else if let Some(rest) = k.strip_prefix("metrics/") {
+                    metrics.push((rest.to_string(), v.item() as f64));
+                }
+            }
+            state = new_state;
+
+            if let Some((weight, k)) = &cfg.trace {
+                if let Some(rec) = osc::trace_record(&state, weight, *k, step, n_w, p_w) {
+                    trace.push(rec);
+                }
+            }
+
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                let get = |name: &str| {
+                    metrics
+                        .iter()
+                        .find(|(k, _)| k == name)
+                        .map(|(_, v)| *v)
+                        .unwrap_or(f64::NAN)
+                };
+                history.push(vec![
+                    step as f64,
+                    get("loss"),
+                    get("ce"),
+                    get("damp"),
+                    get("acc"),
+                    get("osc_frac"),
+                    get("frozen_frac"),
+                    cfg.lr.at(x) as f64,
+                    cfg.lam.at(x) as f64,
+                    cfg.f_th.at(x) as f64,
+                ]);
+            }
+            if step + 1 == cfg.steps {
+                let final_metrics = metrics;
+                let dt = t0.elapsed().as_secs_f64();
+                return Ok(RunResult {
+                    state,
+                    history,
+                    trace,
+                    steps_per_sec: cfg.steps as f64 / dt.max(1e-9),
+                    final_metrics,
+                });
+            }
+        }
+        // steps == 0: passthrough
+        Ok(RunResult {
+            state,
+            history,
+            trace,
+            steps_per_sec: 0.0,
+            final_metrics: vec![],
+        })
+    }
+}

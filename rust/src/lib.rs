@@ -1,0 +1,45 @@
+//! # oscillations-qat
+//!
+//! Production-grade reproduction of **"Overcoming Oscillations in
+//! Quantization-Aware Training"** (Nagel, Fournarakis, Bondarenko,
+//! Blankevoort — ICML 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the QAT training orchestrator: experiment
+//!   runner, synthetic data pipeline, all mutable training state, schedule
+//!   management (cosine LR / dampening λ / freezing threshold f_th), BN
+//!   re-estimation, oscillation analysis, the toy-regression substrate and
+//!   the benchmark harness regenerating every table and figure of the
+//!   paper. Python never runs on the step path.
+//! * **L2 (python/compile, build time)** — JAX model fwd/bwd for the tiny
+//!   MobileNetV2 / MobileNetV3 / EfficientNet-lite / ResNet-18 zoo with
+//!   LSQ quantization and the paper's gradient-estimator variants, lowered
+//!   once to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
+//!   QAT hot spots: fused fake-quant, the Algorithm-1 oscillation
+//!   state machine, and a fused quantize-matmul.
+//!
+//! The runtime loads the AOT artifacts through the PJRT C API (`xla`
+//! crate) and drives them from a pure-Rust event loop.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod json;
+pub mod metrics;
+pub mod osc;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod state;
+pub mod tensor;
+pub mod toy;
+
+pub use runtime::{Artifact, Runtime};
+pub use state::NamedTensors;
+pub use tensor::Tensor;

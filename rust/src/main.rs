@@ -1,0 +1,244 @@
+//! oscillations-qat CLI: the leader binary driving the whole system.
+//!
+//! Subcommands:
+//!   train    one training run (FP or QAT) with full knob control
+//!   eval     evaluate a checkpoint on the validation split
+//!   toy      the 1-D toy regression (prints a trace)
+//!   table1..table8, fig1..fig6   regenerate a paper table/figure
+//!   suite    run every table + figure in one process (artifact compiles
+//!            are cached, so this is much cheaper than separate processes)
+//!   bench-step / bench-kernels   perf micro-benchmarks
+//!
+//! Common flags: --artifacts DIR, --steps N, --fp-steps N, --seeds 0,1
+//! Run with no arguments for usage.
+
+use anyhow::Result;
+use oscillations_qat::cli::Args;
+use oscillations_qat::coordinator::evaluator::{EvalQuant, Evaluator};
+use oscillations_qat::coordinator::experiment::{Lab, QatSpec};
+use oscillations_qat::coordinator::{Schedule, Trainer};
+use oscillations_qat::runtime::Runtime;
+use oscillations_qat::toy::{run as toy_run, stats as toy_stats, ToyCfg, ToyEstimator};
+use std::path::PathBuf;
+
+const USAGE: &str = "oscillations-qat — QAT oscillation study (Nagel et al., ICML 2022)
+
+USAGE: oscillations-qat <subcommand> [flags]
+
+  train     --model mbv2 --estimator lsq --steps 400 --bits-w 3 [--bits-a 3 --quant-a]
+            [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0] [--fp-steps 600]
+  eval      --model mbv2 --ckpt ckpts/<tag>.qtns --bits-w 3 [--fp | --quant-a]
+  toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
+  table1 .. table8, fig1, fig2, fig34, fig5, fig6
+  suite     [--quick]       run everything in one process
+  bench-step / bench-kernels
+
+Common flags: --artifacts artifacts --results results --ckpts ckpts
+              --steps N --fp-steps N --seeds 0,1";
+
+fn lab_from_args<'rt>(rt: &'rt Runtime, args: &Args) -> Lab<'rt> {
+    let mut lab = Lab::new(rt);
+    lab.qat_steps = args.u64_or("steps", lab.qat_steps);
+    lab.fp_steps = args.u64_or("fp-steps", lab.fp_steps);
+    let default_seeds = lab.seeds.clone();
+    lab.seeds = args.u64_list_or("seeds", &default_seeds);
+    lab.ckpt_dir = PathBuf::from(args.str_or("ckpts", "ckpts"));
+    lab.results_dir = PathBuf::from(args.str_or("results", "results"));
+    lab.data.noise = args.f32_or("noise", lab.data.noise);
+    lab.data.max_shift = args.u32_or("max-shift", lab.data.max_shift as u32) as i32;
+    if args.flag("quick") {
+        lab.qat_steps = lab.qat_steps.min(120);
+        lab.fp_steps = lab.fp_steps.min(150);
+        lab.seeds.truncate(1);
+        lab.bn_batches = 8;
+    }
+    lab
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.subcommand.clone() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+
+    // toy needs no runtime
+    if cmd == "toy" {
+        return cmd_toy(&args);
+    }
+
+    let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let rt = Runtime::new(&artifact_dir)?;
+    let lab = lab_from_args(&rt, &args);
+
+    match cmd.as_str() {
+        "train" => cmd_train(&lab, &args)?,
+        "eval" => cmd_eval(&rt, &args)?,
+        "table1" => drop(lab.table1()?),
+        "table2" => drop(lab.table2()?),
+        "table3" => drop(lab.table3()?),
+        "table4" => drop(lab.table4()?),
+        "table5" => drop(lab.table5()?),
+        "table6" => drop(lab.table6()?),
+        "table7" => drop(lab.table7()?),
+        "table8" => drop(lab.table8()?),
+        "fig1" => drop(lab.fig1()?),
+        "fig2" => drop(lab.fig2()?),
+        "fig34" | "fig3" | "fig4" => drop(lab.fig34()?),
+        "fig5" => drop(lab.fig5()?),
+        "fig6" => drop(lab.fig6()?),
+        "suite" => cmd_suite(&lab)?,
+        "bench-step" => cmd_bench_step(&rt, &args)?,
+        "bench-kernels" => cmd_bench_kernels(&rt)?,
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    eprintln!(
+        "[runtime] total XLA compile time this process: {:.1}s",
+        rt.compile_secs.borrow()
+    );
+    Ok(())
+}
+
+fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
+    let model = args.str_or("model", "mbv2");
+    let spec = QatSpec {
+        model: model.clone(),
+        estimator: args.str_or("estimator", "lsq"),
+        bits_w: args.u32_or("bits-w", 3),
+        bits_a: args.u32_or("bits-a", args.u32_or("bits-w", 3)),
+        quant_a: args.flag("quant-a"),
+        lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
+        f_th: Schedule::parse(&args.str_or("f-th", "1.1")).expect("bad --f-th"),
+        seed: args.u64_or("seed", 0),
+        trace: args.get("trace-weight").map(|w| (w.to_string(), 9)),
+    };
+    let out = lab.run_qat(&spec)?;
+    println!(
+        "final: pre-BN {:.2}%  post-BN {:.2}%  osc {:.2}%  frozen {:.2}%  ({:.1} steps/s)",
+        out.pre_bn_acc, out.post_bn_acc, out.osc_pct, out.frozen_pct,
+        out.run.steps_per_sec
+    );
+    let curve = lab.results_dir.join(format!("train_{model}_{}.csv", spec.seed));
+    out.run.history.save_csv(&curve)?;
+    println!("loss curve -> {}", curve.display());
+    Ok(())
+}
+
+fn cmd_eval(rt: &Runtime, args: &Args) -> Result<()> {
+    let model = args.str_or("model", "mbv2");
+    let ckpt = PathBuf::from(args.str_or("ckpt", ""));
+    let state = oscillations_qat::state::NamedTensors::read_qtns(&ckpt)?;
+    let ev = Evaluator::new(rt, &model)?;
+    let bits = args.u32_or("bits-w", 3);
+    let q = if args.flag("fp") {
+        EvalQuant::fp()
+    } else if args.flag("quant-a") {
+        EvalQuant::full(bits)
+    } else {
+        EvalQuant::weights(bits)
+    };
+    let r = ev.eval_val(&state, &Default::default(), q)?;
+    println!("val acc {:.2}%  loss {:.4}  ({} samples)", r.acc, r.loss, r.samples);
+    Ok(())
+}
+
+fn cmd_toy(args: &Args) -> Result<()> {
+    let est = match args.str_or("estimator", "ste").as_str() {
+        "ste" => ToyEstimator::Ste,
+        "ewgs" => ToyEstimator::Ewgs { delta: args.f32_or("delta", 0.2) },
+        "dsq" => ToyEstimator::Dsq { k: args.f32_or("k", 5.0) },
+        "psg" => ToyEstimator::Psg { eps: args.f32_or("eps", 0.01) },
+        "dampen" => ToyEstimator::Dampen { lambda: args.f32_or("lambda", 0.6) },
+        other => anyhow::bail!("unknown estimator {other}"),
+    };
+    let cfg = ToyCfg {
+        est,
+        w_star: args.f32_or("w-star", 0.252),
+        lr: args.f32_or("lr", 0.01),
+        steps: args.u64_or("steps", 600) as usize,
+        ..Default::default()
+    };
+    let traj = toy_run(&cfg);
+    let st = toy_stats(&traj, traj.len() / 4, cfg.s);
+    for (i, (w, q)) in traj.iter().enumerate() {
+        if i % args.u64_or("every", 10) as usize == 0 {
+            println!("{i:>5}  w={w:+.4}  q(w)={q:+.2}");
+        }
+    }
+    println!(
+        "freq={:.4} flips/iter  amplitude={:.5}  frac_upper={:.3}",
+        st.freq, st.amplitude, st.frac_up
+    );
+    Ok(())
+}
+
+fn cmd_suite(lab: &Lab) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    lab.fig1()?;
+    lab.fig5()?;
+    lab.fig6()?;
+    lab.table2()?;
+    lab.table1()?;
+    lab.table4()?;
+    lab.table5()?;
+    lab.fig2()?;
+    lab.fig34()?;
+    lab.table3()?;
+    lab.table6()?;
+    lab.table7()?;
+    lab.table8()?;
+    eprintln!("[suite] everything regenerated in {:.1?}", t0.elapsed());
+    Ok(())
+}
+
+fn cmd_bench_step(rt: &Runtime, args: &Args) -> Result<()> {
+    use oscillations_qat::bench::bench_for;
+    use oscillations_qat::coordinator::RunCfg;
+    let model = args.str_or("model", "mbv2");
+    let state = rt.initial_state(&model)?;
+    let trainer = Trainer::new(rt);
+    let mut cfg = RunCfg::qat(&model, 1, 3, 0);
+    cfg.quant_a = true;
+    let mut cur = Some(state);
+    let stats = bench_for(
+        &format!("train_step[{model},lsq,w3a3]"),
+        1,
+        std::time::Duration::from_secs(10),
+        || {
+            let s = cur.take().unwrap();
+            let out = trainer.train(s, &cfg).expect("step");
+            cur = Some(out.state);
+        },
+    );
+    println!("{}", stats.report());
+    println!(
+        "  = {:.1} samples/s (batch {})",
+        stats.per_sec(rt.index.model(&model)?.batch_size as f64),
+        rt.index.model(&model)?.batch_size
+    );
+    Ok(())
+}
+
+fn cmd_bench_kernels(rt: &Runtime) -> Result<()> {
+    use oscillations_qat::bench::bench_for;
+    use oscillations_qat::state::NamedTensors;
+    use oscillations_qat::tensor::Tensor;
+    let kernels = rt.index.kernels.clone();
+    for (label, artifact_name) in kernels {
+        let artifact = rt.artifact(&artifact_name)?;
+        let mut io = NamedTensors::new();
+        for spec in &artifact.manifest.inputs {
+            let n: usize = spec.shape.iter().product::<usize>().max(1);
+            let data: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+            io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+        }
+        let stats = bench_for(&label, 2, std::time::Duration::from_secs(3), || {
+            let _ = artifact.execute(&[&io]).expect("kernel exec");
+        });
+        println!("{}", stats.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Metrics sink: JSONL step logs + CSV series under `results/`.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Append-only JSONL logger for step metrics.
+pub struct JsonlLogger {
+    file: Option<std::fs::File>,
+}
+
+impl JsonlLogger {
+    /// `path = None` -> disabled (useful in tests).
+    pub fn new(path: Option<&Path>) -> Self {
+        let file = path.and_then(|p| {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            std::fs::OpenOptions::new().create(true).append(true).open(p).ok()
+        });
+        JsonlLogger { file }
+    }
+
+    pub fn log(&mut self, fields: &[(&str, f64)]) {
+        let Some(f) = self.file.as_mut() else { return };
+        let obj: BTreeMap<String, Json> = fields
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+            .collect();
+        let _ = writeln!(f, "{}", crate::json::to_string(&Json::Obj(obj)));
+    }
+}
+
+/// In-memory step-metric history with CSV export (loss curves etc.).
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl History {
+    pub fn new(columns: &[&str]) -> Self {
+        History { columns: columns.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>) {
+        debug_assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    pub fn col(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.columns.iter().position(|c| c == name)?;
+        Some(self.rows.iter().map(|r| r[i]).collect())
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        let i = self.columns.iter().position(|c| c == name)?;
+        self.rows.last().map(|r| r[i])
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",");
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(
+                &r.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(","),
+            );
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_roundtrip() {
+        let mut h = History::new(&["step", "loss"]);
+        h.push(vec![0.0, 2.5]);
+        h.push(vec![1.0, 2.0]);
+        assert_eq!(h.col("loss").unwrap(), vec![2.5, 2.0]);
+        assert_eq!(h.last("loss"), Some(2.0));
+        assert!(h.to_csv().starts_with("step,loss\n0,2.5\n"));
+    }
+
+    #[test]
+    fn jsonl_writes_parseable_lines() {
+        let dir = std::env::temp_dir().join("qat_metrics_test");
+        let p = dir.join("m.jsonl");
+        let _ = std::fs::remove_file(&p);
+        let mut l = JsonlLogger::new(Some(&p));
+        l.log(&[("step", 1.0), ("loss", 0.5)]);
+        drop(l);
+        let text = std::fs::read_to_string(&p).unwrap();
+        let j = crate::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("loss").as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn disabled_logger_is_noop() {
+        let mut l = JsonlLogger::new(None);
+        l.log(&[("x", 1.0)]); // must not panic
+    }
+}

@@ -1,0 +1,171 @@
+//! Host-side oscillation bookkeeping & analysis.
+//!
+//! The per-weight oscillation state itself is updated *in-graph* by the L1
+//! Algorithm-1 kernel; this module reads it back out of the threaded state
+//! for the paper's measurements: the Osc.% metric of Tables 4/5, per-layer
+//! breakdowns, the Fig-2 weight traces and the Fig-3/4 boundary-distance
+//! histograms.
+
+use crate::state::NamedTensors;
+use crate::tensor::round_ties_even;
+
+/// The paper's oscillating-weight criterion: frequency EMA above 0.005.
+pub const OSC_METRIC_TH: f32 = 0.005;
+
+/// Scale-parameter name for a weight-tensor name (mirrors
+/// python/compile/arch.py::weight_scale_of).
+pub fn weight_scale_of(name: &str) -> String {
+    if let Some(stripped) = name.strip_suffix(".w1") {
+        return format!("{stripped}.s1");
+    }
+    if let Some(stripped) = name.strip_suffix(".w2") {
+        return format!("{stripped}.s2");
+    }
+    name.strip_suffix(".w").map(|s| format!("{s}.s")).unwrap_or_else(|| format!("{name}.s"))
+}
+
+/// Aggregated oscillation summary.
+#[derive(Debug, Clone, Default)]
+pub struct OscSummary {
+    pub total_weights: usize,
+    pub oscillating: usize,
+    pub frozen: usize,
+    pub per_tensor: Vec<(String, usize, usize, usize)>, // name, total, osc, frozen
+}
+
+impl OscSummary {
+    pub fn osc_pct(&self) -> f64 {
+        100.0 * self.oscillating as f64 / self.total_weights.max(1) as f64
+    }
+
+    pub fn frozen_pct(&self) -> f64 {
+        100.0 * self.frozen as f64 / self.total_weights.max(1) as f64
+    }
+}
+
+/// Summarize oscillation state over the low-bit weight tensors.
+pub fn summarize(state: &NamedTensors, lowbit: &[String]) -> OscSummary {
+    let mut out = OscSummary::default();
+    for name in lowbit {
+        let Some(f) = state.get(&format!("osc/{name}#f")) else { continue };
+        let b = state.get(&format!("osc/{name}#b"));
+        let osc = f.data.iter().filter(|&&x| x > OSC_METRIC_TH).count();
+        let frozen = b.map(|b| b.data.iter().filter(|&&x| x > 0.5).count()).unwrap_or(0);
+        out.total_weights += f.len();
+        out.oscillating += osc;
+        out.frozen += frozen;
+        out.per_tensor.push((name.clone(), f.len(), osc, frozen));
+    }
+    out
+}
+
+/// Distances of latent weights from their nearest grid point,
+/// d = w/s - round(w/s) in [-0.5, 0.5] — the x-axis of Figs 3 & 4.
+/// Clipped weights are skipped (they are not on the interior grid).
+pub fn boundary_distances(state: &NamedTensors, tensor: &str, n: f32, p: f32) -> Vec<f32> {
+    let Some(w) = state.get(&format!("params/{tensor}")) else { return vec![] };
+    let s = state
+        .get(&format!("params/{}", weight_scale_of(tensor)))
+        .map(|t| t.item())
+        .unwrap_or(1.0);
+    w.data
+        .iter()
+        .filter_map(|&x| {
+            let winv = x / s;
+            if winv < n || winv > p {
+                return None;
+            }
+            Some(winv - round_ties_even(winv))
+        })
+        .collect()
+}
+
+/// Latent weights in units of the scale (w/s) — Fig 3 left panel.
+pub fn latent_grid_values(state: &NamedTensors, tensor: &str) -> Vec<f32> {
+    let Some(w) = state.get(&format!("params/{tensor}")) else { return vec![] };
+    let s = state
+        .get(&format!("params/{}", weight_scale_of(tensor)))
+        .map(|t| t.item())
+        .unwrap_or(1.0);
+    w.data.iter().map(|&x| x / s).collect()
+}
+
+/// One Fig-2 trace record: integer + latent values of the first `k`
+/// weights of a tensor at one step.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub step: u64,
+    pub ints: Vec<f32>,
+    pub latents: Vec<f32>,
+    pub scale: f32,
+}
+
+pub fn trace_record(
+    state: &NamedTensors,
+    tensor: &str,
+    k: usize,
+    step: u64,
+    n: f32,
+    p: f32,
+) -> Option<TraceRecord> {
+    let w = state.get(&format!("params/{tensor}"))?;
+    let s = state.get(&format!("params/{}", weight_scale_of(tensor)))?.item();
+    let k = k.min(w.len());
+    let latents: Vec<f32> = w.data[..k].iter().map(|&x| x / s).collect();
+    let ints = latents.iter().map(|&x| round_ties_even(x).clamp(n, p)).collect();
+    Some(TraceRecord { step, ints, latents, scale: s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn state() -> NamedTensors {
+        let mut s = NamedTensors::new();
+        s.insert("params/a.w", Tensor::new(vec![4], vec![0.05, 0.1, -0.24, 0.9]));
+        s.insert("params/a.s", Tensor::scalar(0.1));
+        s.insert("osc/a.w#f", Tensor::new(vec![4], vec![0.01, 0.0, 0.004, 0.2]));
+        s.insert("osc/a.w#b", Tensor::new(vec![4], vec![0.0, 0.0, 0.0, 1.0]));
+        s
+    }
+
+    #[test]
+    fn summary_counts() {
+        let s = state();
+        let sum = summarize(&s, &["a.w".to_string()]);
+        assert_eq!(sum.total_weights, 4);
+        assert_eq!(sum.oscillating, 2); // 0.01 and 0.2
+        assert_eq!(sum.frozen, 1);
+        assert!((sum.osc_pct() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distances_in_range_and_skip_clipped() {
+        let s = state();
+        let d = boundary_distances(&s, "a.w", -4.0, 3.0);
+        // 0.9/0.1 = 9 lies outside the [-4, 3] grid -> clipped, skipped
+        assert_eq!(d.len(), 3);
+        for &x in &d {
+            assert!((-0.5..=0.5).contains(&x));
+        }
+        // 0.05/0.1 = 0.5 -> ties-even rounds to 0, distance +0.5
+        assert!((d[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_name_mapping() {
+        assert_eq!(weight_scale_of("b1.dw.w"), "b1.dw.s");
+        assert_eq!(weight_scale_of("b4.se.w1"), "b4.se.s1");
+        assert_eq!(weight_scale_of("b4.se.w2"), "b4.se.s2");
+    }
+
+    #[test]
+    fn trace_extracts() {
+        let s = state();
+        let t = trace_record(&s, "a.w", 3, 7, -4.0, 3.0).unwrap();
+        assert_eq!(t.step, 7);
+        assert_eq!(t.ints.len(), 3);
+        assert_eq!(t.ints[1], 1.0);
+    }
+}

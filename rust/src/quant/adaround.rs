@@ -1,0 +1,218 @@
+//! AdaRound-flavoured binary optimization of oscillating weights (Table 3).
+//!
+//! After a converged QAT run, every oscillating weight sits between two
+//! adjacent integer states (w_down, w_up). The paper optimizes this binary
+//! assignment on the final task loss "akin to ... simulated annealing to
+//! solve binary optimization problems" (§2.3.2). This module implements
+//! exactly that: Metropolis simulated annealing over per-weight up/down
+//! bits, with the loss evaluated through the compiled eval artifact on a
+//! fixed set of training batches.
+
+use crate::rng::Pcg32;
+use crate::state::NamedTensors;
+use crate::tensor::round_ties_even;
+use anyhow::Result;
+
+/// One binary decision variable: an oscillating weight and its two states.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// state key of the weight tensor (e.g. "params/b3.dw.w")
+    pub tensor: String,
+    pub index: usize,
+    /// lower integer state
+    pub down: f32,
+    /// current assignment (false = down, true = up)
+    pub up: bool,
+    /// probability weight spent in the up state (from the integer EMA)
+    pub p_up: f32,
+}
+
+/// Collect oscillating-weight candidates from a trained state.
+///
+/// A weight qualifies if its tracked oscillation frequency exceeds
+/// `f_threshold`. Its two states bracket the integer EMA; the current
+/// assignment is read from the latent weight.
+pub fn collect_candidates(
+    state: &NamedTensors,
+    lowbit: &[String],
+    scale_of: impl Fn(&str) -> String,
+    f_threshold: f32,
+    n: f32,
+    p: f32,
+) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for name in lowbit {
+        let (Some(w), Some(f), Some(iema)) = (
+            state.get(&format!("params/{name}")),
+            state.get(&format!("osc/{name}#f")),
+            state.get(&format!("osc/{name}#iema")),
+        ) else {
+            continue;
+        };
+        let s = state
+            .get(&format!("params/{}", scale_of(name)))
+            .map(|t| t.item())
+            .unwrap_or(1.0);
+        for i in 0..w.len() {
+            if f.data[i] <= f_threshold {
+                continue;
+            }
+            let ema = iema.data[i];
+            let down = ema.floor().clamp(n, p - 1.0);
+            let cur = round_ties_even(w.data[i] / s).clamp(n, p);
+            let p_up = (ema - down).clamp(0.0, 1.0);
+            out.push(Candidate {
+                tensor: format!("params/{name}"),
+                index: i,
+                down,
+                up: cur > down + 0.5,
+                p_up,
+            });
+        }
+    }
+    out
+}
+
+/// Write an assignment into a copy of the state (latent weights moved to
+/// the chosen grid point so the graph's fake-quant reproduces it exactly).
+pub fn apply_assignment(
+    state: &mut NamedTensors,
+    cands: &[Candidate],
+    scale_lookup: impl Fn(&str) -> f32,
+) {
+    for c in cands {
+        let s = scale_lookup(&c.tensor);
+        let int = if c.up { c.down + 1.0 } else { c.down };
+        if let Some(t) = state.map.get_mut(&c.tensor) {
+            t.data[c.index] = s * int;
+        }
+    }
+}
+
+/// Simulated-annealing config.
+#[derive(Debug, Clone)]
+pub struct AnnealCfg {
+    pub iters: usize,
+    pub t0: f64,
+    pub t_end: f64,
+    pub seed: u64,
+    /// bits flipped per proposal
+    pub flips: usize,
+}
+
+impl Default for AnnealCfg {
+    fn default() -> Self {
+        AnnealCfg { iters: 400, t0: 5e-3, t_end: 1e-5, seed: 0, flips: 4 }
+    }
+}
+
+/// Metropolis annealing over the candidate bits. `loss` evaluates the task
+/// loss for an assignment (the caller owns the eval artifact + batches).
+/// Returns (best assignment, best loss, loss trace).
+pub fn anneal(
+    cands: &mut Vec<Candidate>,
+    cfg: &AnnealCfg,
+    mut loss: impl FnMut(&[Candidate]) -> Result<f64>,
+) -> Result<(Vec<Candidate>, f64, Vec<f64>)> {
+    let mut rng = Pcg32::new(cfg.seed, 0xada);
+    let mut cur_loss = loss(cands)?;
+    let mut best = cands.clone();
+    let mut best_loss = cur_loss;
+    let mut trace = vec![cur_loss];
+    if cands.is_empty() {
+        return Ok((best, best_loss, trace));
+    }
+    for it in 0..cfg.iters {
+        let frac = it as f64 / cfg.iters.max(1) as f64;
+        let t = cfg.t0 * (cfg.t_end / cfg.t0).powf(frac);
+        // propose: flip a few random bits
+        let mut flipped = Vec::with_capacity(cfg.flips);
+        for _ in 0..cfg.flips {
+            let i = rng.below(cands.len());
+            cands[i].up = !cands[i].up;
+            flipped.push(i);
+        }
+        let new_loss = loss(cands)?;
+        let accept = new_loss <= cur_loss
+            || (rng.next_f32() as f64) < ((cur_loss - new_loss) / t).exp();
+        if accept {
+            cur_loss = new_loss;
+            if new_loss < best_loss {
+                best_loss = new_loss;
+                best = cands.clone();
+            }
+        } else {
+            for &i in flipped.iter().rev() {
+                cands[i].up = !cands[i].up;
+            }
+        }
+        trace.push(cur_loss);
+    }
+    Ok((best, best_loss, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn toy_state() -> (NamedTensors, Vec<String>) {
+        let mut s = NamedTensors::new();
+        s.insert("params/l.w", Tensor::new(vec![4], vec![0.1, 0.0, 0.25, -0.3]));
+        s.insert("params/l.s", Tensor::scalar(0.1));
+        s.insert(
+            "osc/l.w#f",
+            Tensor::new(vec![4], vec![0.05, 0.0, 0.06, 0.0]),
+        );
+        s.insert(
+            "osc/l.w#iema",
+            Tensor::new(vec![4], vec![0.7, 0.0, 2.4, -3.0]),
+        );
+        (s, vec!["l.w".to_string()])
+    }
+
+    #[test]
+    fn collects_only_oscillating() {
+        let (s, lb) = toy_state();
+        let c = collect_candidates(&s, &lb, |n| format!("{}.s", &n[..n.len() - 2]),
+                                   0.02, -4.0, 3.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].index, 0);
+        assert_eq!(c[0].down, 0.0);
+        assert!((c[0].p_up - 0.7).abs() < 1e-6);
+        assert!(c[0].up); // latent 0.1/0.1 = 1 > 0.5
+        assert_eq!(c[1].index, 2);
+        assert_eq!(c[1].down, 2.0);
+    }
+
+    #[test]
+    fn anneal_finds_planted_optimum() {
+        // loss = number of bits that differ from a planted pattern
+        let mut cands: Vec<Candidate> = (0..12)
+            .map(|i| Candidate {
+                tensor: "params/x".into(),
+                index: i,
+                down: 0.0,
+                up: false,
+                p_up: 0.5,
+            })
+            .collect();
+        let target: Vec<bool> = (0..12).map(|i| i % 3 == 0).collect();
+        let cfg = AnnealCfg { iters: 600, seed: 3, flips: 2, ..Default::default() };
+        let (best, best_loss, _) = anneal(&mut cands, &cfg, |cs| {
+            Ok(cs.iter().zip(&target).filter(|(c, t)| c.up != **t).count() as f64)
+        })
+        .unwrap();
+        assert_eq!(best_loss, 0.0, "{best:?}");
+    }
+
+    #[test]
+    fn apply_assignment_moves_latents() {
+        let (mut s, lb) = toy_state();
+        let mut c = collect_candidates(&s, &lb, |n| format!("{}.s", &n[..n.len() - 2]),
+                                       0.02, -4.0, 3.0);
+        c[0].up = false;
+        apply_assignment(&mut s, &c, |_| 0.1);
+        assert!((s.get("params/l.w").unwrap().data[0] - 0.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,91 @@
+//! Host-side quantization substrate.
+//!
+//! A bit-exact mirror of the L1 fake-quant kernel (same round-half-to-even
+//! as XLA's `round-nearest-even`) plus the pieces of the paper's workflow
+//! that are naturally host-side:
+//!
+//! * MSE range estimation for scale initialization (§5.1, Nagel et al.
+//!   2021 white-paper style grid search),
+//! * the AdaRound-flavoured binary optimization of oscillating weights
+//!   (Table 3) via simulated annealing,
+//! * the stochastic-rounding sampler over oscillating weights (Table 3).
+
+pub mod adaround;
+pub mod range_est;
+pub mod sampler;
+
+use crate::tensor::round_ties_even;
+
+/// Signed integer grid for a weight bit-width: n = -2^(b-1), p = 2^(b-1)-1.
+pub fn weight_grid(bits: u32) -> (f32, f32) {
+    let half = 1i64 << (bits - 1);
+    (-(half as f32), (half - 1) as f32)
+}
+
+/// Unsigned activation grid: p = 2^b - 1.
+pub fn act_grid(bits: u32) -> f32 {
+    ((1i64 << bits) - 1) as f32
+}
+
+/// Fake quantization, identical to the L1 kernel / ref.fake_quant_ref.
+pub fn fake_quant(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
+    w.iter().map(|&x| s * round_ties_even(x / s).clamp(n, p)).collect()
+}
+
+/// Integer (grid index) representation.
+pub fn int_weights(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
+    w.iter().map(|&x| round_ties_even(x / s).clamp(n, p)).collect()
+}
+
+/// Mean squared quantization error for a candidate scale.
+pub fn quant_mse(w: &[f32], s: f32, n: f32, p: f32) -> f64 {
+    let mut acc = 0.0f64;
+    for &x in w {
+        let q = s * round_ties_even(x / s).clamp(n, p);
+        acc += ((x - q) as f64).powi(2);
+    }
+    acc / w.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids() {
+        assert_eq!(weight_grid(3), (-4.0, 3.0));
+        assert_eq!(weight_grid(4), (-8.0, 7.0));
+        assert_eq!(weight_grid(8), (-128.0, 127.0));
+        assert_eq!(act_grid(3), 7.0);
+        assert_eq!(act_grid(8), 255.0);
+    }
+
+    #[test]
+    fn fake_quant_on_grid() {
+        let w = vec![0.12, -0.37, 0.05, 2.0, -2.0];
+        let q = fake_quant(&w, 0.1, -4.0, 3.0);
+        for v in &q {
+            let i = v / 0.1;
+            assert!((i - i.round()).abs() < 1e-5);
+            assert!((-4.0..=3.0).contains(&i.round()));
+        }
+        // clipping
+        assert_eq!(q[3], 0.3);
+        assert_eq!(q[4], -0.4);
+    }
+
+    #[test]
+    fn ties_even_matches_xla_semantics() {
+        // 0.05/0.1 = 0.5 -> rounds to 0 (ties to even), not 1
+        let q = fake_quant(&[0.05], 0.1, -4.0, 3.0);
+        assert_eq!(q[0], 0.0);
+        let q = fake_quant(&[0.15], 0.1, -4.0, 3.0);
+        assert_eq!(q[0], 0.2); // 1.5 -> 2
+    }
+
+    #[test]
+    fn mse_zero_for_exact_grid() {
+        let w = vec![0.1, -0.2, 0.3];
+        assert!(quant_mse(&w, 0.1, -4.0, 3.0) < 1e-12);
+    }
+}

@@ -1,0 +1,72 @@
+//! MSE range estimation for quantization-scale initialization (§5.1).
+//!
+//! The paper instantiates weight/activation quantization parameters with
+//! MSE range estimation before QAT. For weights we grid-search the scale
+//! minimizing the squared quantization error; for activations we use the
+//! LSQ heuristic s = 2 * E|x| / sqrt(p) seeded from the calibration
+//! forward pass (bnstats artifact).
+
+use super::quant_mse;
+
+/// Number of scale candidates in the grid search.
+const CANDIDATES: usize = 60;
+
+/// Best per-tensor scale for grid [n, p] by MSE grid search over
+/// fractions of the absmax-implied scale.
+pub fn mse_weight_scale(w: &[f32], n: f32, p: f32) -> f32 {
+    let absmax = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if absmax == 0.0 {
+        return 1e-4;
+    }
+    let s_max = absmax / p.max(-n); // scale covering the full range
+    // the full-range scale is always a candidate so the search can never
+    // return something worse than the naive absmax init
+    let mut best = (quant_mse(w, s_max, n, p), s_max);
+    for i in 0..CANDIDATES {
+        let frac = 0.2 + 1.0 * (i as f32 / (CANDIDATES - 1) as f32);
+        let s = (s_max * frac).max(1e-6);
+        let mse = quant_mse(w, s, n, p);
+        if mse < best.0 {
+            best = (mse, s);
+        }
+    }
+    best.1
+}
+
+/// LSQ-style activation scale from a calibration mean-|x|.
+pub fn lsq_act_scale(abs_mean: f32, p: f32) -> f32 {
+    (2.0 * abs_mean / p.max(1.0).sqrt()).max(1e-4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_mse;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn recovers_good_scale_for_gaussian() {
+        let mut r = Pcg32::new(0, 0);
+        let w: Vec<f32> = (0..4096).map(|_| 0.3 * r.normal()).collect();
+        let (n, p) = (-4.0, 3.0);
+        let s = mse_weight_scale(&w, n, p);
+        // must beat the naive absmax scale by a margin
+        let absmax = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let naive = absmax / 4.0;
+        assert!(quant_mse(&w, s, n, p) <= quant_mse(&w, naive, n, p));
+        assert!(s > 0.0 && s < naive * 1.3);
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let s = mse_weight_scale(&[0.0; 16], -4.0, 3.0);
+        assert!(s > 0.0);
+    }
+
+    #[test]
+    fn act_scale_positive() {
+        assert!(lsq_act_scale(0.0, 7.0) > 0.0);
+        let s = lsq_act_scale(0.5, 7.0);
+        assert!((s - 2.0 * 0.5 / 7.0f32.sqrt()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,72 @@
+//! Stochastic-rounding sampler over oscillating weights (Table 3, "SR").
+//!
+//! §2.3.2: sample every oscillating weight between its two states with
+//! probability proportional to the time spent in each (the integer EMA),
+//! i.e. p(w_up) = E_t[w^t = w_up]. Table 3 reports mean/std/best training
+//! loss over such samples.
+
+use super::adaround::{apply_assignment, Candidate};
+use crate::rng::Pcg32;
+use crate::state::NamedTensors;
+
+/// Draw one stochastic sample of the oscillating weights into `state`.
+pub fn sample_assignment(
+    state: &mut NamedTensors,
+    cands: &mut [Candidate],
+    rng: &mut Pcg32,
+    scale_lookup: impl Fn(&str) -> f32,
+) {
+    for c in cands.iter_mut() {
+        c.up = rng.next_f32() < c.p_up;
+    }
+    apply_assignment(state, cands, scale_lookup);
+}
+
+/// Summary statistics over sampled losses.
+#[derive(Debug, Clone)]
+pub struct SampleStats {
+    pub mean: f64,
+    pub std: f64,
+    pub best: f64,
+    pub losses: Vec<f64>,
+}
+
+pub fn summarize(losses: Vec<f64>) -> SampleStats {
+    let n = losses.len().max(1) as f64;
+    let mean = losses.iter().sum::<f64>() / n;
+    let var = losses.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / n;
+    let best = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+    SampleStats { mean, std: var.sqrt(), best, losses }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_respects_probabilities() {
+        let mut rng = Pcg32::new(0, 0);
+        let mut cands: Vec<Candidate> = vec![
+            Candidate { tensor: "params/x".into(), index: 0, down: 0.0, up: false, p_up: 1.0 },
+            Candidate { tensor: "params/x".into(), index: 1, down: 0.0, up: true, p_up: 0.0 },
+        ];
+        let mut ups = [0u32; 2];
+        for _ in 0..200 {
+            for c in cands.iter_mut() {
+                c.up = rng.next_f32() < c.p_up;
+            }
+            ups[0] += cands[0].up as u32;
+            ups[1] += cands[1].up as u32;
+        }
+        assert_eq!(ups[0], 200);
+        assert_eq!(ups[1], 0);
+    }
+
+    #[test]
+    fn stats() {
+        let s = summarize(vec![1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-9);
+        assert_eq!(s.best, 1.0);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-9);
+    }
+}

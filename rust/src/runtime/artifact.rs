@@ -1,0 +1,147 @@
+//! Artifact = one compiled PJRT executable + its manifest, with named I/O.
+
+use super::manifest::{ArtifactIndex, Manifest};
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Shared PJRT CPU client + executable cache.
+///
+/// XLA compilation of a train artifact takes tens of seconds on this host,
+/// so every experiment suite runs inside one `Runtime` and compiles each
+/// artifact at most once.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub index: ArtifactIndex,
+    cache: RefCell<BTreeMap<String, Rc<Artifact>>>,
+    /// cumulative compile seconds (reported by the bench harness)
+    pub compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let index = ArtifactIndex::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Runtime {
+            client,
+            index,
+            cache: RefCell::new(BTreeMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    /// Load + compile (or fetch from cache) an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let manifest = Manifest::load(&self.index.dir.join(format!("{name}.manifest.json")))?;
+        let hlo_path = self.index.dir.join(&manifest.hlo_file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        *self.compile_secs.borrow_mut() += dt;
+        log::info!("compiled {name} in {dt:.1}s");
+        eprintln!("[runtime] compiled {name} in {dt:.1}s");
+        let a = Rc::new(Artifact { manifest, exe });
+        self.cache.borrow_mut().insert(name.to_string(), a.clone());
+        Ok(a)
+    }
+
+    /// Initial state QTNS for a model.
+    pub fn initial_state(&self, model: &str) -> Result<NamedTensors> {
+        let info = self.index.model(model)?;
+        NamedTensors::read_qtns(&self.index.dir.join(&info.params_bin))
+    }
+}
+
+/// One compiled executable with manifest-driven named I/O.
+pub struct Artifact {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with a by-name resolver. The resolver must provide every
+    /// manifest input; outputs come back keyed by manifest output names.
+    pub fn execute_with<F>(&self, resolve: F) -> Result<NamedTensors>
+    where
+        F: Fn(&str) -> Option<Tensor>,
+    {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.manifest.inputs.len());
+        for spec in &self.manifest.inputs {
+            let t = resolve(&spec.name)
+                .with_context(|| format!("unresolved input {:?} for {}", spec.name, self.manifest.name))?;
+            if t.len() != spec.num_elements() {
+                bail!(
+                    "input {:?}: resolver gave {} elements, manifest wants {:?}",
+                    spec.name,
+                    t.len(),
+                    spec.shape
+                );
+            }
+            args.push(tensor_to_literal(&t, &spec.shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&args).context("pjrt execute")?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = tuple.decompose_tuple().context("decompose result tuple")?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest expects {}",
+                self.manifest.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let mut out = NamedTensors::new();
+        for (spec, lit) in self.manifest.outputs.iter().zip(parts) {
+            let data = lit.to_vec::<f32>().with_context(|| format!("output {}", spec.name))?;
+            out.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+        }
+        Ok(out)
+    }
+
+    /// Execute against a set of name->tensor maps searched in order.
+    /// Names may appear in the manifest under a `group/` prefix that the
+    /// map keys already include.
+    pub fn execute(&self, sources: &[&NamedTensors]) -> Result<NamedTensors> {
+        self.execute_with(|name| {
+            // train-step inputs are "state/params/x"; state maps key
+            // "params/x". Try the raw name, then with the first path
+            // component stripped.
+            for src in sources {
+                if let Some(t) = src.get(name) {
+                    return Some(t.clone());
+                }
+            }
+            let stripped = name.splitn(2, '/').nth(1)?;
+            for src in sources {
+                if let Some(t) = src.get(stripped) {
+                    return Some(t.clone());
+                }
+            }
+            None
+        })
+    }
+}
+
+fn tensor_to_literal(t: &Tensor, shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}

@@ -1,0 +1,196 @@
+//! Artifact manifests + the global artifact index (artifacts/index.json).
+
+use crate::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape/dtype signature of one tensor in an artifact's flat I/O list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-artifact manifest: ordered input and output signatures.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn specs(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().with_context(|| format!("manifest {what} not a list"))?;
+    arr.iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .as_str()
+                .with_context(|| format!("{what} entry missing name"))?
+                .to_string();
+            let shape = e
+                .get("shape")
+                .as_arr()
+                .with_context(|| format!("{what} {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        Ok(Manifest {
+            name: j.get("name").as_str().context("manifest missing name")?.into(),
+            hlo_file: j.get("hlo").as_str().context("manifest missing hlo")?.into(),
+            inputs: specs(j.get("inputs"), "inputs")?,
+            outputs: specs(j.get("outputs"), "outputs")?,
+        })
+    }
+}
+
+/// Static metadata about one model emitted by aot.py (layer kinds, the
+/// low-bit weight list the oscillation machinery acts on, artifact names).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub batch_size: usize,
+    pub num_classes: usize,
+    pub input_hw: usize,
+    pub param_count: usize,
+    pub params_bin: String,
+    /// weight-tensor names on the runtime low-bit grid
+    pub lowbit: Vec<String>,
+    /// layer name -> (kind, weight tensor, has_bn, cout, wq)
+    pub layers: BTreeMap<String, LayerInfo>,
+    /// role -> artifact name, e.g. "train_lsq" -> "mbv2_lsq_train"
+    pub artifacts: BTreeMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub kind: String,
+    pub weight: String,
+    pub bn: bool,
+    pub cout: usize,
+    pub wq: String,
+}
+
+impl ModelInfo {
+    /// Depthwise conv layers — the paper's oscillation hot spots.
+    pub fn depthwise(&self) -> Vec<&str> {
+        self.layers
+            .iter()
+            .filter(|(_, l)| l.kind == "dw")
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    pub fn pointwise(&self) -> Vec<&str> {
+        self.layers
+            .iter()
+            .filter(|(_, l)| l.kind == "pw")
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+}
+
+/// The parsed artifacts/index.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    /// kernel-bench artifact names (name -> artifact)
+    pub kernels: BTreeMap<String, String>,
+}
+
+impl ArtifactIndex {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("read {}/index.json — run `make artifacts`", dir.display()))?;
+        let j = json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        let jm = j.get("models").as_obj().context("index missing models")?;
+        for (name, m) in jm {
+            let layers = m
+                .get("layers")
+                .as_obj()
+                .context("model missing layers")?
+                .iter()
+                .map(|(ln, l)| {
+                    (
+                        ln.clone(),
+                        LayerInfo {
+                            kind: l.get("kind").as_str().unwrap_or("?").into(),
+                            weight: l.get("weight").as_str().unwrap_or("").into(),
+                            bn: matches!(l.get("bn"), Json::Bool(true)),
+                            cout: l.get("cout").as_usize().unwrap_or(0),
+                            wq: l.get("wq").as_str().unwrap_or("").into(),
+                        },
+                    )
+                })
+                .collect();
+            let artifacts = m
+                .get("artifacts")
+                .as_obj()
+                .context("model missing artifacts")?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                .collect();
+            let lowbit = m
+                .get("lowbit")
+                .as_arr()
+                .context("model missing lowbit")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    batch_size: m.get("batch_size").as_usize().unwrap_or(16),
+                    num_classes: m.get("num_classes").as_usize().unwrap_or(10),
+                    input_hw: m.get("input_hw").as_usize().unwrap_or(16),
+                    param_count: m.get("param_count").as_usize().unwrap_or(0),
+                    params_bin: m.get("params_bin").as_str().unwrap_or("").into(),
+                    lowbit,
+                    layers,
+                    artifacts,
+                },
+            );
+        }
+        let kernels = j
+            .get("kernels")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        if models.is_empty() {
+            bail!("artifact index has no models");
+        }
+        Ok(ArtifactIndex { dir: dir.to_path_buf(), models, kernels })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in index (have {:?})",
+                                     self.models.keys().collect::<Vec<_>>()))
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the step loop.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//! * HLO **text** (`*.hlo.txt`) — the text parser reassigns instruction
+//!   ids, dodging the 64-bit-id protos jax >= 0.5 emits that
+//!   xla_extension 0.5.1 rejects.
+//! * A JSON manifest per artifact listing the flat input/output tensor
+//!   signature (names, shapes); the runtime binds tensors **by name**
+//!   through a resolver, so callers never depend on positional order.
+//! * Executables return one tuple; the runtime decomposes it and re-keys
+//!   the parts by the manifest output names.
+
+mod artifact;
+mod manifest;
+
+pub use artifact::{Artifact, Runtime};
+pub use manifest::{ArtifactIndex, LayerInfo, Manifest, ModelInfo, TensorSpec};

@@ -1,0 +1,216 @@
+//! Training-state ownership: named tensors, the QTNS initial-state format,
+//! and checkpointing.
+//!
+//! All mutable state of a run — parameters, SGD momenta, BN running stats,
+//! Algorithm-1 oscillation state — lives here between steps, keyed by the
+//! same `group/tensor` names the artifact manifests use
+//! (`params/stem.w`, `osc/b1.dw.w#f`, ...). The artifacts are pure
+//! functions; the coordinator threads this struct through them.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// An ordered name -> tensor map (BTreeMap: deterministic iteration).
+#[derive(Debug, Clone, Default)]
+pub struct NamedTensors {
+    pub map: BTreeMap<String, Tensor>,
+}
+
+impl NamedTensors {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn expect(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// All names with a given prefix (e.g. `params/`).
+    pub fn names_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.map
+            .keys()
+            .filter(move |k| k.starts_with(prefix))
+            .map(|k| k.as_str())
+    }
+
+    /// Total number of f32 elements.
+    pub fn num_elements(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    // ---------------------------------------------------------------
+    // QTNS binary format (shared with python/compile/aot.py::write_qtns):
+    // magic 'QTNS', u32 version, u32 count, then per tensor:
+    //   u16 name_len, name utf8, u8 dtype (0 = f32), u8 ndim,
+    //   u32 dims..., f32 LE data.
+
+    pub fn read_qtns(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_qtns_bytes(&buf)
+    }
+
+    pub fn from_qtns_bytes(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("qtns truncated at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != b"QTNS" {
+            bail!("bad qtns magic");
+        }
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        if version != 1 {
+            bail!("unsupported qtns version {version}");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut out = NamedTensors::new();
+        for _ in 0..count {
+            let name_len =
+                u16::from_le_bytes(take(&mut pos, 2)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())?;
+            let dtype = take(&mut pos, 1)?[0];
+            if dtype != 0 {
+                bail!("tensor {name}: unsupported dtype {dtype}");
+            }
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let raw = take(&mut pos, n * 4)?;
+            let mut data = Vec::with_capacity(n);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into()?));
+            }
+            out.insert(name, Tensor::new(shape, data));
+        }
+        if pos != buf.len() {
+            bail!("qtns trailing bytes ({} of {})", buf.len() - pos, buf.len());
+        }
+        Ok(out)
+    }
+
+    pub fn write_qtns(&self, path: &Path) -> Result<()> {
+        let mut buf = Vec::with_capacity(self.num_elements() * 4 + 64);
+        buf.extend_from_slice(b"QTNS");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(self.map.len() as u32).to_le_bytes());
+        for (name, t) in &self.map {
+            let nb = name.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.push(0); // dtype f32
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+}
+
+/// Checkpoint = QTNS state file + sidecar metadata. Used to reuse the FP
+/// pretraining across every QAT table row (paper workflow: pretrained FP
+/// net -> range estimation -> QAT fine-tune).
+pub struct Checkpoint;
+
+impl Checkpoint {
+    pub fn save(dir: &Path, tag: &str, state: &NamedTensors, step: u64) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        state.write_qtns(&dir.join(format!("{tag}.qtns")))?;
+        std::fs::write(dir.join(format!("{tag}.meta")), format!("step={step}\n"))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path, tag: &str) -> Result<NamedTensors> {
+        NamedTensors::read_qtns(&dir.join(format!("{tag}.qtns")))
+    }
+
+    pub fn exists(dir: &Path, tag: &str) -> bool {
+        dir.join(format!("{tag}.qtns")).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> NamedTensors {
+        let mut s = NamedTensors::new();
+        s.insert("params/w", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        s.insert("params/s", Tensor::scalar(0.05));
+        s.insert("osc/w#f", Tensor::zeros(&[2, 3]));
+        s
+    }
+
+    #[test]
+    fn qtns_roundtrip() {
+        let dir = std::env::temp_dir().join("qat_state_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.qtns");
+        let s = sample();
+        s.write_qtns(&p).unwrap();
+        let s2 = NamedTensors::read_qtns(&p).unwrap();
+        assert_eq!(s.map, s2.map);
+    }
+
+    #[test]
+    fn qtns_rejects_corrupt() {
+        assert!(NamedTensors::from_qtns_bytes(b"NOPE").is_err());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"QTNS");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&5u32.to_le_bytes()); // claims 5 tensors, has 0
+        assert!(NamedTensors::from_qtns_bytes(&buf).is_err());
+    }
+
+    #[test]
+    fn names_under_prefix() {
+        let s = sample();
+        let names: Vec<_> = s.names_under("params/").collect();
+        assert_eq!(names, vec!["params/s", "params/w"]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("qat_ckpt_test");
+        let s = sample();
+        Checkpoint::save(&dir, "fp_seed0", &s, 42).unwrap();
+        assert!(Checkpoint::exists(&dir, "fp_seed0"));
+        let s2 = Checkpoint::load(&dir, "fp_seed0").unwrap();
+        assert_eq!(s.map, s2.map);
+    }
+}

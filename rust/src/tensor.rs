@@ -1,0 +1,136 @@
+//! Minimal host-side tensor: a shape plus a flat `Vec<f32>`.
+//!
+//! All interchange with the PJRT runtime is f32 (the artifacts are lowered
+//! entirely in f32), so the coordinator does not need a dtype-generic
+//! tensor — just enough structure for state management, analysis
+//! (histograms, KL, argmax) and the quantization host mirror.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar value of a 0-d (or single-element) tensor.
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1, "item() on non-scalar");
+        self.data[0]
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn variance(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.data.iter().map(|x| (x - m) * (x - m)).sum::<f32>()
+            / self.data.len() as f32
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn abs_mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Index of the maximum element (first on ties).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Round-half-to-even, matching XLA's `round-nearest-even` (and therefore
+/// the jnp.round used in every artifact). The host quantization mirror
+/// MUST use this — `f32::round()` rounds half away from zero and diverges
+/// from the compiled graphs exactly on the oscillation decision boundary.
+pub fn round_ties_even(x: f32) -> f32 {
+    // stable Rust has f32::round_ties_even since 1.77
+    x.round_ties_even()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_stats() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 6.0]);
+        assert_eq!(t.len(), 4);
+        assert!((t.mean() - 3.0).abs() < 1e-6);
+        assert!((t.variance() - 3.5).abs() < 1e-6);
+        assert_eq!(t.argmax(), 3);
+        assert_eq!(t.abs_max(), 6.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![3], vec![1.0]);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(7.0).item(), 7.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! The 1-D toy regression substrate (§2.2, appendix A.1–A.3).
+//!
+//! min_w E_x[ (x·w* − x·q(w))² ] optimized by gradient descent with the
+//! STE and its variants. Everything here is closed-form scalar math
+//! (appendix A.1), so the substrate is pure Rust; it regenerates Figs 1,
+//! 5 and 6 and the analytic claims (frequency ∝ distance, lr ↛ frequency).
+
+use crate::tensor::round_ties_even;
+
+/// Gradient estimator / update-rule variants from the paper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ToyEstimator {
+    /// vanilla STE (eq. 2)
+    Ste,
+    /// element-wise gradient scaling (J. Lee 2021), multiplicative
+    Ewgs { delta: f32 },
+    /// position-based scaled gradient (Kim et al. 2020), multiplicative
+    Psg { eps: f32 },
+    /// differentiable soft quantization (Gong et al. 2019), multiplicative
+    Dsq { k: f32 },
+    /// STE + the paper's additive oscillation-dampening term (§4.2)
+    Dampen { lambda: f32 },
+}
+
+/// Toy problem configuration.
+#[derive(Debug, Clone)]
+pub struct ToyCfg {
+    pub w_star: f32,
+    pub w0: f32,
+    pub lr: f32,
+    pub steps: usize,
+    /// quantization step size (grid spacing)
+    pub s: f32,
+    pub n: f32,
+    pub p: f32,
+    pub est: ToyEstimator,
+}
+
+impl Default for ToyCfg {
+    fn default() -> Self {
+        ToyCfg {
+            w_star: 0.252,
+            // start just below the decision boundary — the near-convergence
+            // regime the paper studies. (DSQ/PSG shrink the gradient at bin
+            // centers, so from w0 = 0 they take ~10^4 iterations to even
+            // reach the boundary; the oscillation behaviour is identical.)
+            w0: 0.24,
+            lr: 0.01,
+            steps: 600,
+            s: 0.1,
+            n: -4.0,
+            p: 3.0,
+            est: ToyEstimator::Ste,
+        }
+    }
+}
+
+fn quantize(w: f32, s: f32, n: f32, p: f32) -> f32 {
+    s * round_ties_even(w / s).clamp(n, p)
+}
+
+/// One GD step under the chosen estimator (appendix A.1; sigma^2 = 1).
+fn step(w: f32, cfg: &ToyCfg) -> f32 {
+    let q = quantize(w, cfg.s, cfg.n, cfg.p);
+    let g_task = q - cfg.w_star; // dL/d(q(w)) with sigma = 1
+    let winv = w / cfg.s;
+    let t = winv - round_ties_even(winv); // signed dist from grid point
+    let g = match cfg.est {
+        ToyEstimator::Ste => g_task,
+        ToyEstimator::Ewgs { delta } => g_task * (1.0 + delta * g_task.signum() * t),
+        ToyEstimator::Psg { eps } => g_task * (t.abs() + eps),
+        ToyEstimator::Dsq { k } => {
+            let u = t.abs() - 0.5;
+            let f = k * (1.0 - (k * u).tanh().powi(2)) / (2.0 * (k / 2.0).tanh());
+            g_task * f
+        }
+        ToyEstimator::Dampen { lambda } => g_task + 2.0 * lambda * (w - q),
+    };
+    w - cfg.lr * g
+}
+
+/// Full trajectory: (latent w, quantized q(w)) per iteration.
+pub fn run(cfg: &ToyCfg) -> Vec<(f32, f32)> {
+    let mut w = cfg.w0;
+    let mut out = Vec::with_capacity(cfg.steps);
+    for _ in 0..cfg.steps {
+        w = step(w, cfg);
+        out.push((w, quantize(w, cfg.s, cfg.n, cfg.p)));
+    }
+    out
+}
+
+/// Statistics of a trajectory tail (after `burn_in` steps).
+#[derive(Debug, Clone)]
+pub struct ToyStats {
+    /// integer-transition direction flips per iteration (the paper's
+    /// oscillation frequency)
+    pub freq: f32,
+    /// peak-to-peak amplitude of the latent weight
+    pub amplitude: f32,
+    /// fraction of iterations spent in the upper state
+    pub frac_up: f32,
+}
+
+pub fn stats(traj: &[(f32, f32)], burn_in: usize, s: f32) -> ToyStats {
+    let tail = &traj[burn_in.min(traj.len())..];
+    if tail.len() < 3 {
+        return ToyStats { freq: 0.0, amplitude: 0.0, frac_up: 0.0 };
+    }
+    let ints: Vec<i64> = tail.iter().map(|&(_, q)| (q / s).round() as i64).collect();
+    let hi = *ints.iter().max().unwrap();
+    let mut flips = 0usize;
+    let mut last_dir = 0i64;
+    for w in ints.windows(2) {
+        let d = w[1] - w[0];
+        if d != 0 {
+            if last_dir != 0 && d.signum() != last_dir {
+                flips += 1;
+            }
+            last_dir = d.signum();
+        }
+    }
+    let lat_min = tail.iter().map(|&(w, _)| w).fold(f32::INFINITY, f32::min);
+    let lat_max = tail.iter().map(|&(w, _)| w).fold(f32::NEG_INFINITY, f32::max);
+    let frac_up = ints.iter().filter(|&&i| i == hi).count() as f32 / ints.len() as f32;
+    ToyStats {
+        freq: flips as f32 / tail.len() as f32,
+        amplitude: lat_max - lat_min,
+        frac_up,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(est: ToyEstimator) -> ToyCfg {
+        ToyCfg { est, steps: 2000, ..Default::default() }
+    }
+
+    #[test]
+    fn ste_oscillates_between_adjacent_levels() {
+        let traj = run(&cfg(ToyEstimator::Ste));
+        let st = stats(&traj, 500, 0.1);
+        assert!(st.freq > 0.05, "STE should oscillate, freq {}", st.freq);
+        // oscillation around the 0.25 boundary: states 2 and 3
+        let qs: Vec<i64> =
+            traj[500..].iter().map(|&(_, q)| (q / 0.1).round() as i64).collect();
+        assert!(qs.iter().all(|&q| q == 2 || q == 3), "states {:?}", &qs[..8]);
+    }
+
+    #[test]
+    fn multiplicative_variants_still_oscillate() {
+        // DSQ/PSG shrink the gradient near the bin center, so the latent
+        // weight takes long to *reach* the boundary; start next to it (as
+        // at the end of real training) and give the slow variants room.
+        for est in [
+            ToyEstimator::Ewgs { delta: 0.2 },
+            ToyEstimator::Psg { eps: 0.01 },
+            ToyEstimator::Dsq { k: 5.0 },
+        ] {
+            let c = ToyCfg { est, w0: 0.249, steps: 6000, ..Default::default() };
+            let st = stats(&run(&c), 2000, 0.1);
+            assert!(st.freq > 0.02, "{est:?} should oscillate, freq {}", st.freq);
+        }
+    }
+
+    #[test]
+    fn dampening_stops_oscillation() {
+        let st = stats(&run(&cfg(ToyEstimator::Dampen { lambda: 0.6 })), 1000, 0.1);
+        assert!(st.freq < 0.01, "dampening should kill oscillation, freq {}", st.freq);
+    }
+
+    #[test]
+    fn frequency_proportional_to_distance() {
+        // appendix A.2: oscillation frequency grows with the distance
+        // d = |q(w*) - w*| of the optimum from its nearest grid point.
+        // Our flip counter registers ~2 flips per period, i.e. freq ~ 2d/s.
+        let mut last = 0.0f32;
+        for d in [0.01, 0.025, 0.04] {
+            let c = ToyCfg { w_star: 0.2 + d, steps: 6000, ..Default::default() };
+            let st = stats(&run(&c), 1000, 0.1);
+            assert!(st.freq > last - 1e-6, "d={d}: {} !> {last}", st.freq);
+            let predicted = 2.0 * d / 0.1;
+            assert!(
+                (st.freq - predicted).abs() < 0.25 * predicted + 0.05,
+                "d={d}: freq {} vs predicted {predicted}",
+                st.freq
+            );
+            last = st.freq;
+        }
+    }
+
+    #[test]
+    fn lr_changes_amplitude_not_frequency() {
+        let base = stats(
+            &run(&ToyCfg { lr: 0.02, steps: 6000, ..Default::default() }),
+            2000,
+            0.1,
+        );
+        let small = stats(
+            &run(&ToyCfg { lr: 0.005, steps: 6000, ..Default::default() }),
+            2000,
+            0.1,
+        );
+        assert!(small.amplitude < base.amplitude * 0.6,
+                "amplitude should shrink: {} vs {}", small.amplitude, base.amplitude);
+        let ratio = small.freq / base.freq.max(1e-9);
+        assert!((0.6..1.67).contains(&ratio),
+                "frequency roughly invariant: {} vs {}", small.freq, base.freq);
+    }
+
+    #[test]
+    fn time_in_state_tracks_distance() {
+        // w* at 0.28: q(w*) = 3 (upper). Fraction of time in upper state
+        // should exceed that of w* at 0.22 (lower).
+        let hi = stats(&run(&ToyCfg { w_star: 0.28, steps: 4000, ..Default::default() }),
+                       1000, 0.1);
+        let lo = stats(&run(&ToyCfg { w_star: 0.22, steps: 4000, ..Default::default() }),
+                       1000, 0.1);
+        assert!(hi.frac_up > lo.frac_up);
+    }
+}

@@ -1,0 +1,251 @@
+//! Integration tests across the full stack: runtime + artifacts +
+//! coordinator. These need `make artifacts` to have run; they skip (with a
+//! loud message) when the artifacts are missing so `cargo test` stays
+//! usable on a fresh checkout.
+//!
+//! The heavyweight XLA compiles are shared through a lazily-initialized
+//! runtime; tests are threaded through one executable so each artifact
+//! compiles at most once per test binary.
+
+//! NOTE on structure: the PJRT client is deliberately !Send (Rc-based C
+//! API handles), so the expensive Runtime cannot live in a shared static
+//! across libtest's worker threads. Instead one #[test] entry point runs
+//! every sub-check sequentially against a single Runtime — each artifact
+//! compiles exactly once per test binary, and a failing sub-check reports
+//! its name before the suite fails.
+
+use oscillations_qat::coordinator::evaluator::{EvalQuant, Evaluator};
+use oscillations_qat::coordinator::{bn_restim, qat, RunCfg, Schedule, Trainer};
+use oscillations_qat::data::DataCfg;
+use oscillations_qat::osc;
+use oscillations_qat::runtime::Runtime;
+use oscillations_qat::state::NamedTensors;
+use oscillations_qat::tensor::Tensor;
+use std::path::{Path, PathBuf};
+
+fn artifact_dir() -> PathBuf {
+    std::env::var("QAT_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    })
+}
+
+fn small_data() -> DataCfg {
+    DataCfg { val_size: 64, ..Default::default() }
+}
+
+#[test]
+fn integration_suite() {
+    let dir = artifact_dir();
+    if !dir.join("index.json").exists() {
+        eprintln!(
+            "!! artifacts missing at {} — run `make artifacts`; skipping integration suite",
+            dir.display()
+        );
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let checks: Vec<(&str, fn(&Runtime))> = vec![
+        ("index_lists_all_models_and_kernels", index_lists_all_models_and_kernels),
+        ("initial_state_matches_manifest", initial_state_matches_manifest),
+        ("kernel_artifact_matches_its_ref_twin", kernel_artifact_matches_its_ref_twin),
+        ("fp_train_step_reduces_loss", fp_train_step_reduces_loss),
+        (
+            "qat_freezing_pins_weights_and_reduces_oscillation",
+            qat_freezing_pins_weights_and_reduces_oscillation,
+        ),
+        ("eval_and_bn_reestimation_roundtrip", eval_and_bn_reestimation_roundtrip),
+        ("range_estimation_sets_positive_scales", range_estimation_sets_positive_scales),
+        ("determinism_same_seed_same_result", determinism_same_seed_same_result),
+        ("estimator_artifacts_execute", estimator_artifacts_execute),
+    ];
+    let mut failed = vec![];
+    for (name, f) in checks {
+        eprintln!("--- integration: {name}");
+        let t0 = std::time::Instant::now();
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&rt)));
+        eprintln!("--- integration: {name} {} in {:.1?}",
+                  if ok.is_ok() { "ok" } else { "FAILED" }, t0.elapsed());
+        if ok.is_err() {
+            failed.push(name);
+        }
+    }
+    assert!(failed.is_empty(), "failed sub-checks: {failed:?}");
+}
+
+fn index_lists_all_models_and_kernels(rt: &Runtime) {
+    for m in ["mbv2", "resnet18", "mbv3", "efflite"] {
+        let info = rt.index.model(m).expect(m);
+        assert!(info.param_count > 10_000, "{m} too small");
+        assert!(!info.lowbit.is_empty());
+        assert!(!info.depthwise().is_empty() || m == "resnet18");
+        assert!(info.artifacts.contains_key("train_lsq"));
+        assert!(info.artifacts.contains_key("eval"));
+        assert!(info.artifacts.contains_key("bnstats"));
+    }
+    assert!(rt.index.kernels.len() >= 6);
+}
+
+fn initial_state_matches_manifest(rt: &Runtime) {
+    let state = rt.initial_state("mbv2").unwrap();
+    let artifact_name = rt.index.model("mbv2").unwrap().artifacts["train_lsq"].clone();
+    let artifact = rt.artifact(&artifact_name).unwrap();
+    // every state/* manifest input must resolve from the QTNS state
+    for spec in &artifact.manifest.inputs {
+        if let Some(key) = spec.name.strip_prefix("state/") {
+            let t = state
+                .get(key)
+                .unwrap_or_else(|| panic!("missing state tensor {key}"));
+            assert_eq!(t.len(), spec.num_elements(), "shape mismatch for {key}");
+        }
+    }
+}
+
+fn kernel_artifact_matches_its_ref_twin(rt: &Runtime) {
+    // the fused Pallas fake-quant and the pure-jnp reference must agree
+    // numerically when executed through PJRT from rust
+    let a = rt.artifact(&rt.index.kernels["kernel_fakequant"]).unwrap();
+    let b = rt.artifact(&rt.index.kernels["kernel_fakequant_ref"]).unwrap();
+    let mut io = NamedTensors::new();
+    for spec in &a.manifest.inputs {
+        let n = spec.num_elements().max(1);
+        let data: Vec<f32> = (0..n).map(|i| ((i % 31) as f32 - 15.0) * 0.013).collect();
+        io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+    }
+    let oa = a.execute(&[&io]).unwrap();
+    let ob = b.execute(&[&io]).unwrap();
+    let ta = oa.map.values().next().unwrap();
+    let tb = ob.map.values().next().unwrap();
+    assert_eq!(ta.len(), tb.len());
+    for (x, y) in ta.data.iter().zip(&tb.data) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+fn fp_train_step_reduces_loss(rt: &Runtime) {
+    let state = rt.initial_state("mbv2").unwrap();
+    let trainer = Trainer::new(&rt);
+    let mut cfg = RunCfg::fp("mbv2", 40, 0.02, 0);
+    cfg.data = small_data();
+    cfg.log_every = 1;
+    let out = trainer.train(state, &cfg).unwrap();
+    let losses = out.history.col("loss").unwrap();
+    let first = losses[..5].iter().sum::<f64>() / 5.0;
+    let last = losses[losses.len() - 5..].iter().sum::<f64>() / 5.0;
+    assert!(
+        last < first,
+        "FP training should reduce loss: first~{first:.3} last~{last:.3}"
+    );
+}
+
+fn qat_freezing_pins_weights_and_reduces_oscillation(rt: &Runtime) {
+    let info = rt.index.model("mbv2").unwrap().clone();
+    let mut state = rt.initial_state("mbv2").unwrap();
+    qat::prepare_qat(&rt, &mut state, "mbv2", 3, 8, &small_data(), 0).unwrap();
+    let trainer = Trainer::new(&rt);
+
+    // aggressive freezing threshold: most weights should freeze quickly
+    let mut cfg = RunCfg::qat("mbv2", 60, 3, 0);
+    cfg.data = small_data();
+    cfg.f_th = Schedule::Const(0.01);
+    cfg.m_osc = 0.1; // fast EMA so the short test can trip the threshold
+    let out = trainer.train(state, &cfg).unwrap();
+    let summary = osc::summarize(&out.state, &info.lowbit);
+    assert!(
+        summary.frozen > 0,
+        "aggressive threshold should freeze something: {summary:?}"
+    );
+    // frozen weights must sit exactly on the grid: w = s * fint
+    for name in &info.lowbit {
+        let w = out.state.get(&format!("params/{name}")).unwrap();
+        let b = out.state.get(&format!("osc/{name}#b")).unwrap();
+        let fint = out.state.get(&format!("osc/{name}#fint")).unwrap();
+        let s = out
+            .state
+            .get(&format!("params/{}", osc::weight_scale_of(name)))
+            .unwrap()
+            .item();
+        for i in 0..w.len() {
+            if b.data[i] > 0.5 {
+                assert!(
+                    (w.data[i] - s * fint.data[i]).abs() < 1e-5,
+                    "{name}[{i}] frozen but off-grid"
+                );
+            }
+        }
+    }
+}
+
+fn eval_and_bn_reestimation_roundtrip(rt: &Runtime) {
+    let mut state = rt.initial_state("mbv2").unwrap();
+    qat::prepare_qat(&rt, &mut state, "mbv2", 3, 8, &small_data(), 1).unwrap();
+    let trainer = Trainer::new(&rt);
+    let mut cfg = RunCfg::qat("mbv2", 30, 3, 1);
+    cfg.data = small_data();
+    let out = trainer.train(state, &cfg).unwrap();
+    let mut state = out.state;
+
+    let ev = Evaluator::new(&rt, "mbv2").unwrap();
+    let q = EvalQuant::weights(3);
+    let pre = ev.eval_val(&state, &small_data(), q).unwrap();
+    assert!(pre.samples >= 64);
+    assert!(pre.acc >= 0.0 && pre.acc <= 100.0);
+
+    let updated = bn_restim::reestimate(&rt, &mut state, "mbv2", q, &small_data(), 1, 8)
+        .unwrap();
+    assert!(updated > 5, "should update many BN layers, got {updated}");
+    let post = ev.eval_val(&state, &small_data(), q).unwrap();
+    // re-estimated stats must keep the network functional
+    assert!(post.loss.is_finite());
+}
+
+fn range_estimation_sets_positive_scales(rt: &Runtime) {
+    let mut state = rt.initial_state("resnet18").unwrap();
+    qat::prepare_qat(&rt, &mut state, "resnet18", 4, 4, &small_data(), 0).unwrap();
+    let info = rt.index.model("resnet18").unwrap();
+    for name in &info.lowbit {
+        let s = state
+            .get(&format!("params/{}", osc::weight_scale_of(name)))
+            .unwrap()
+            .item();
+        assert!(s > 0.0 && s < 1.0, "{name} scale {s}");
+    }
+    // act scales were calibrated (params/ only — opt/ momenta are zero)
+    let n_as = state
+        .map
+        .keys()
+        .filter(|k| k.starts_with("params/") && k.ends_with(".as"))
+        .count();
+    assert!(n_as > 5);
+    for (k, v) in &state.map {
+        if k.starts_with("params/") && k.ends_with(".as") {
+            assert!(v.item() > 0.0, "{k} must be positive");
+        }
+    }
+}
+
+fn determinism_same_seed_same_result(rt: &Runtime) {
+    let trainer = Trainer::new(&rt);
+    let mut results = vec![];
+    for _ in 0..2 {
+        let state = rt.initial_state("mbv2").unwrap();
+        let mut cfg = RunCfg::fp("mbv2", 10, 0.02, 7);
+        cfg.data = small_data();
+        let out = trainer.train(state, &cfg).unwrap();
+        results.push(out.history.last("loss").unwrap());
+    }
+    assert_eq!(results[0], results[1], "same seed must reproduce bit-exact");
+}
+
+fn estimator_artifacts_execute(rt: &Runtime) {
+    let trainer = Trainer::new(&rt);
+    for est in ["ewgs", "dsq", "psg", "pact"] {
+        let state = rt.initial_state("mbv2").unwrap();
+        let mut cfg = RunCfg::qat("mbv2", 2, 4, 0);
+        cfg.estimator = est.into();
+        cfg.quant_a = true;
+        cfg.data = small_data();
+        let out = trainer.train(state, &cfg).unwrap();
+        let loss = out.history.last("loss").unwrap();
+        assert!(loss.is_finite(), "{est} produced {loss}");
+    }
+}

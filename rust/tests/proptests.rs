@@ -1,0 +1,219 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline crate cache has no `proptest`, so this file carries a small
+//! hand-rolled property harness (`for_random_cases`) driven by the same
+//! PCG32 substrate the data pipeline uses: each property runs against a
+//! few hundred randomized cases with shrink-free but seeded-reproducible
+//! failures (the failing seed is printed).
+
+use oscillations_qat::analysis::histogram::Histogram;
+use oscillations_qat::analysis::kl::gaussian_kl;
+use oscillations_qat::coordinator::Schedule;
+use oscillations_qat::json;
+use oscillations_qat::quant::{self, range_est};
+use oscillations_qat::rng::Pcg32;
+use oscillations_qat::state::NamedTensors;
+use oscillations_qat::tensor::{round_ties_even, Tensor};
+use oscillations_qat::toy::{run, stats, ToyCfg, ToyEstimator};
+
+/// Mini property harness: `f(case_rng)` must hold for `n` seeded cases.
+fn for_random_cases(n: u64, name: &str, mut f: impl FnMut(&mut Pcg32)) {
+    for seed in 0..n {
+        let mut rng = Pcg32::new(seed, 0x9999);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if result.is_err() {
+            panic!("property {name} failed at case seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn fake_quant_always_on_grid_and_idempotent() {
+    for_random_cases(300, "fq_grid", |rng| {
+        let bits = 2 + rng.below(7) as u32;
+        let (n, p) = quant::weight_grid(bits);
+        let s = rng.uniform(1e-3, 0.5);
+        let w: Vec<f32> = (0..rng.below(200) + 1).map(|_| rng.normal() * 2.0).collect();
+        let q = quant::fake_quant(&w, s, n, p);
+        for &v in &q {
+            let int = v / s;
+            assert!((int - round_ties_even(int)).abs() < 1e-4);
+            assert!(int >= n - 1e-4 && int <= p + 1e-4);
+        }
+        let q2 = quant::fake_quant(&q, s, n, p);
+        for (a, b) in q.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-6, "not idempotent: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn mse_scale_never_worse_than_absmax_scale() {
+    for_random_cases(120, "mse_scale", |rng| {
+        let bits = 2 + rng.below(4) as u32;
+        let (n, p) = quant::weight_grid(bits);
+        let scale = rng.uniform(0.01, 2.0);
+        let w: Vec<f32> = (0..64 + rng.below(512)).map(|_| rng.normal() * scale).collect();
+        let s = range_est::mse_weight_scale(&w, n, p);
+        let absmax = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        if absmax > 0.0 {
+            let naive = absmax / p.max(-n);
+            assert!(
+                quant::quant_mse(&w, s, n, p) <= quant::quant_mse(&w, naive, n, p) + 1e-12
+            );
+        }
+    });
+}
+
+#[test]
+fn schedules_stay_within_endpoint_bounds() {
+    for_random_cases(300, "schedule_bounds", |rng| {
+        let a = rng.uniform(-2.0, 2.0);
+        let b = rng.uniform(-2.0, 2.0);
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        for sched in [Schedule::Cosine { from: a, to: b }, Schedule::Linear { from: a, to: b }] {
+            for i in 0..=20 {
+                let v = sched.at(i as f32 / 20.0);
+                assert!(v >= lo - 1e-5 && v <= hi + 1e-5, "{sched:?} at {i}: {v}");
+            }
+            // monotone between endpoints
+            let mut last = sched.at(0.0);
+            for i in 1..=20 {
+                let v = sched.at(i as f32 / 20.0);
+                if b >= a {
+                    assert!(v >= last - 1e-5);
+                } else {
+                    assert!(v <= last + 1e-5);
+                }
+                last = v;
+            }
+        }
+    });
+}
+
+#[test]
+fn json_roundtrip_arbitrary_trees() {
+    for_random_cases(200, "json_roundtrip", |rng| {
+        fn gen(rng: &mut Pcg32, depth: usize) -> json::Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => json::Json::Null,
+                1 => json::Json::Bool(rng.next_f32() < 0.5),
+                2 => json::Json::Num((rng.normal() * 100.0).round() as f64 / 4.0),
+                3 => {
+                    let n = rng.below(8);
+                    json::Json::Str(
+                        (0..n).map(|_| char::from(32 + rng.below(90) as u8)).collect(),
+                    )
+                }
+                4 => json::Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => json::Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let text = json::to_string(&v);
+        let v2 = json::parse(&text).expect("parse own output");
+        assert_eq!(v, v2, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn qtns_roundtrip_arbitrary_states() {
+    for_random_cases(60, "qtns_roundtrip", |rng| {
+        let mut s = NamedTensors::new();
+        let n_tensors = 1 + rng.below(12);
+        for i in 0..n_tensors {
+            let ndim = rng.below(4);
+            let shape: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(6)).collect();
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            s.insert(format!("group{}/t{}", i % 3, i), Tensor::new(shape, data));
+        }
+        let dir = std::env::temp_dir().join("qat_prop_qtns");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("case_{}.qtns", rng.next_u32()));
+        s.write_qtns(&p).unwrap();
+        let s2 = NamedTensors::read_qtns(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(s.map, s2.map);
+    });
+}
+
+#[test]
+fn gaussian_kl_nonnegative() {
+    for_random_cases(500, "kl_nonneg", |rng| {
+        let m1 = rng.normal() * 3.0;
+        let m2 = rng.normal() * 3.0;
+        let v1 = rng.uniform(1e-4, 9.0);
+        let v2 = rng.uniform(1e-4, 9.0);
+        let kl = gaussian_kl(m1, v1, m2, v2);
+        assert!(kl >= -1e-9, "KL must be >= 0: {kl}");
+    });
+}
+
+#[test]
+fn histogram_conserves_mass() {
+    for_random_cases(200, "hist_mass", |rng| {
+        let mut h = Histogram::new(-1.0, 1.0, 1 + rng.below(40));
+        let n = rng.below(500);
+        for _ in 0..n {
+            h.add(rng.normal());
+        }
+        let binned: u64 = h.counts.iter().sum();
+        assert_eq!(binned + h.clipped, h.total);
+        assert_eq!(h.total, n as u64);
+    });
+}
+
+#[test]
+fn toy_oscillation_is_bounded_near_optimum() {
+    // invariant: under every estimator the latent weight stays within one
+    // grid step of the optimum once converged
+    for_random_cases(40, "toy_bounded", |rng| {
+        let est = match rng.below(5) {
+            0 => ToyEstimator::Ste,
+            1 => ToyEstimator::Ewgs { delta: rng.uniform(0.05, 0.5) },
+            2 => ToyEstimator::Psg { eps: rng.uniform(0.001, 0.05) },
+            3 => ToyEstimator::Dsq { k: rng.uniform(2.0, 8.0) },
+            _ => ToyEstimator::Dampen { lambda: rng.uniform(0.1, 1.0) },
+        };
+        let w_star = rng.uniform(-0.3, 0.3);
+        let cfg = ToyCfg { est, w_star, steps: 3000, lr: 0.01, ..Default::default() };
+        let traj = run(&cfg);
+        for &(w, _) in &traj[1500..] {
+            assert!(
+                (w - w_star).abs() <= cfg.s * 1.5,
+                "{est:?} diverged: w={w} w*={w_star}"
+            );
+        }
+    });
+}
+
+#[test]
+fn toy_frequency_monotone_in_distance() {
+    // appendix A.2 as a property over random base grids: the further the
+    // optimum sits from its nearest grid point, the higher the measured
+    // oscillation frequency.
+    for_random_cases(25, "freq_monotone", |rng| {
+        let level = rng.below(3) as f32 * 0.1;
+        let mut freqs = vec![];
+        for dist_frac in [0.1, 0.5, 0.9] {
+            let d = 0.05 * dist_frac; // distance from the grid point `level + 0.1`
+            let cfg = ToyCfg {
+                w_star: level + 0.1 - d,
+                steps: 5000,
+                ..Default::default()
+            };
+            freqs.push(stats(&run(&cfg), 1500, cfg.s).freq);
+        }
+        assert!(
+            freqs[2] >= freqs[0] - 0.02 && freqs[1] >= freqs[0] - 0.02,
+            "freq should grow with distance: {freqs:?}"
+        );
+    });
+}
