@@ -8,7 +8,7 @@ use anyhow::Result;
 use oscillations_qat::analysis::report::TableRenderer;
 use oscillations_qat::coordinator::experiment::{Lab, QatSpec};
 use oscillations_qat::coordinator::Schedule;
-use oscillations_qat::runtime::Runtime;
+use oscillations_qat::runtime::auto_backend;
 use std::path::Path;
 
 fn main() -> Result<()> {
@@ -16,8 +16,8 @@ fn main() -> Result<()> {
     let bits: u32 = argv.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let steps: u64 = argv.get(2).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let rt = Runtime::new(Path::new("artifacts"))?;
-    let mut lab = Lab::new(&rt);
+    let be = auto_backend(Path::new("artifacts"))?;
+    let mut lab = Lab::new(be.as_ref());
     lab.qat_steps = steps;
     lab.seeds = vec![0];
 

@@ -1,25 +1,28 @@
-//! Quickstart: load an AOT artifact, run a handful of QAT steps, inspect
-//! the oscillation telemetry.
+//! Quickstart: pick a backend, run a handful of QAT steps, inspect the
+//! oscillation telemetry.
 //!
-//!     make artifacts            # once (python, build time)
 //!     cargo run --release --example quickstart
 //!
-//! This is the smallest end-to-end path through the stack: Rust loads the
+//! With no `artifacts/` directory this runs on the pure-Rust native
+//! backend out of the box. After `make artifacts` (python, build time) the
+//! same example drives the compiled PJRT artifacts instead: Rust loads the
 //! HLO text the JAX/Pallas layers produced, compiles it on the PJRT CPU
-//! client, and drives a few training steps with all state owned host-side.
+//! client, and owns all state host-side either way.
 
 use anyhow::Result;
 use oscillations_qat::coordinator::{RunCfg, Trainer};
 use oscillations_qat::osc;
-use oscillations_qat::runtime::Runtime;
+use oscillations_qat::runtime::auto_backend;
 use std::path::Path;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(Path::new("artifacts"))?;
-    println!("models in index: {:?}", rt.index.models.keys().collect::<Vec<_>>());
+    let be = auto_backend(Path::new("artifacts"))?;
+    let be = be.as_ref();
+    println!("backend: {}", be.kind());
+    println!("models in index: {:?}", be.index().models.keys().collect::<Vec<_>>());
 
     let model = "mbv2";
-    let info = rt.index.model(model)?;
+    let info = be.index().model(model)?;
     println!(
         "{model}: {} params, {} low-bit weight tensors, depthwise layers {:?}",
         info.param_count,
@@ -27,12 +30,12 @@ fn main() -> Result<()> {
         info.depthwise()
     );
 
-    // initial state straight from the QTNS the AOT step dumped
-    let state = rt.initial_state(model)?;
+    // fresh initial state (QTNS dump on PJRT, procedural on native)
+    let state = be.initial_state(model)?;
     println!("state tensors: {} ({} elements)", state.len(), state.num_elements());
 
     // 20 QAT steps at 3-bit weights, oscillation tracking on
-    let trainer = Trainer::new(&rt);
+    let trainer = Trainer::new(be);
     let mut cfg = RunCfg::qat(model, 20, 3, 0);
     cfg.quant_w = true;
     cfg.log_every = 5;

@@ -6,17 +6,20 @@
 //!   each followed by pre/post BN-re-estimation evaluation,
 //!   with the loss curve logged to results/e2e_loss_curve.csv.
 //!
-//!     make artifacts && cargo run --release --example train_mobilenet_qat
+//!     cargo run --release --example train_mobilenet_qat
+//!
+//! Runs on the native backend out of the box; prefers the PJRT artifacts
+//! when `make artifacts` has produced them.
 
 use anyhow::Result;
 use oscillations_qat::coordinator::experiment::{Lab, QatSpec};
 use oscillations_qat::coordinator::Schedule;
-use oscillations_qat::runtime::Runtime;
+use oscillations_qat::runtime::auto_backend;
 use std::path::Path;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(Path::new("artifacts"))?;
-    let mut lab = Lab::new(&rt);
+    let be = auto_backend(Path::new("artifacts"))?;
+    let mut lab = Lab::new(be.as_ref());
     lab.fp_steps = std::env::var("E2E_FP_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(600);
     lab.qat_steps = std::env::var("E2E_QAT_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(400);
     lab.seeds = vec![0];

@@ -1,0 +1,118 @@
+"""Generate golden-parity JSON fixtures from the pure-jnp kernel oracles.
+
+The native Rust backend must match ``ref.py`` numerically; this script
+freezes small input/output vectors for the three hot-path kernels
+(fake-quant, Algorithm-1 osc-update, quant-matmul) into
+``rust/tests/fixtures/*.json``, where ``rust/tests/golden.rs`` asserts the
+native kernels agree within 1e-5.
+
+Run from the repo root (requires jax):
+
+    python3 python/compile/kernels/gen_fixtures.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+
+from compile.kernels import ref  # noqa: E402
+
+OUT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "rust", "tests", "fixtures"
+)
+
+
+def _f32(x):
+    return np.asarray(x, dtype=np.float32)
+
+
+def _lst(x):
+    return [float(v) for v in np.asarray(x, dtype=np.float32).reshape(-1)]
+
+
+def fake_quant_cases(rng):
+    cases = []
+    for s, n, p, size in [(0.07, -4, 3, 48), (0.013, -8, 7, 64), (0.5, -128, 127, 32)]:
+        w = _f32(rng.normal(size=size) * 1.5)
+        out = ref.fake_quant_ref(w, np.float32(s), n, p)
+        cases.append(
+            {"w": _lst(w), "s": s, "n": n, "p": p, "out": _lst(out)}
+        )
+    return {"kernel": "fake_quant", "cases": cases}
+
+
+def osc_update_cases(rng):
+    cases = []
+    for s, n, p, m, f_th, size in [
+        (0.1, -4, 3, 0.1, 0.03, 40),
+        (0.05, -8, 7, 0.02, 0.01, 64),
+        (0.2, -4, 3, 0.5, 1.1, 24),  # freezing disabled (f_th > 1)
+    ]:
+        w = _f32(rng.normal(size=size) * (abs(n) * s * 0.6))
+        f = _f32(rng.uniform(0.0, 0.08, size=size))
+        b = _f32(rng.integers(0, 2, size=size))
+        fint = _f32(rng.integers(n, p + 1, size=size))
+        psign = _f32(rng.integers(-1, 2, size=size))
+        wintp = _f32(rng.integers(n, p + 1, size=size))
+        iema = _f32(wintp + rng.normal(size=size) * 0.3)
+        outs = ref.osc_update_ref(
+            w, np.float32(s), n, p, f, b, fint, psign, wintp, iema,
+            np.float32(m), np.float32(f_th),
+        )
+        names = ["w_out", "f_out", "b_out", "fint_out", "psign_out",
+                 "wint_out", "iema_out", "osc"]
+        case = {
+            "w": _lst(w), "s": s, "n": n, "p": p,
+            "f": _lst(f), "b": _lst(b), "fint": _lst(fint),
+            "psign": _lst(psign), "wintp": _lst(wintp), "iema": _lst(iema),
+            "m": m, "f_th": f_th,
+        }
+        for name, out in zip(names, outs):
+            case[name] = _lst(out)
+        cases.append(case)
+    return {"kernel": "osc_update", "cases": cases}
+
+
+def quant_matmul_cases(rng):
+    cases = []
+    for s, n, p, (mm, kk, nn) in [
+        (0.07, -4, 3, (4, 6, 5)),
+        (0.02, -8, 7, (3, 8, 8)),
+        (0.11, -4, 3, (1, 12, 2)),
+    ]:
+        x = _f32(rng.normal(size=(mm, kk)))
+        w = _f32(rng.normal(size=(kk, nn)) * 0.4)
+        out = ref.quant_matmul_ref(x, w, np.float32(s), n, p)
+        cases.append(
+            {
+                "x": _lst(x), "x_shape": [mm, kk],
+                "w": _lst(w), "w_shape": [kk, nn],
+                "s": s, "n": n, "p": p,
+                "out": _lst(out), "out_shape": [mm, nn],
+            }
+        )
+    return {"kernel": "quant_matmul", "cases": cases}
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    rng = np.random.default_rng(20220707)
+    for name, payload in [
+        ("fake_quant", fake_quant_cases(rng)),
+        ("osc_update", osc_update_cases(rng)),
+        ("quant_matmul", quant_matmul_cases(rng)),
+    ]:
+        path = os.path.join(OUT_DIR, f"{name}.json")
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=1)
+        print(f"wrote {path} ({len(payload['cases'])} cases)")
+
+
+if __name__ == "__main__":
+    main()

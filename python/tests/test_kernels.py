@@ -9,7 +9,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    # Offline environments without hypothesis still collect and run the
+    # parametrized tests; only the property sweeps are skipped.
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
 
 from compile.kernels import ref
 from compile.kernels.fake_quant import fake_quant

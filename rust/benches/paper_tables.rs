@@ -11,7 +11,7 @@
 //! QAT_BENCH_TABLES (comma list, e.g. "2,4,5").
 
 use oscillations_qat::coordinator::experiment::Lab;
-use oscillations_qat::runtime::Runtime;
+use oscillations_qat::runtime::auto_backend;
 use std::path::Path;
 
 fn env_u64(key: &str, default: u64) -> u64 {
@@ -19,8 +19,8 @@ fn env_u64(key: &str, default: u64) -> u64 {
 }
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(Path::new("artifacts"))?;
-    let mut lab = Lab::new(&rt);
+    let be = auto_backend(Path::new("artifacts"))?;
+    let mut lab = Lab::new(be.as_ref());
     lab.qat_steps = env_u64("QAT_BENCH_STEPS", 80);
     lab.fp_steps = env_u64("QAT_BENCH_FP_STEPS", 120);
     lab.bn_batches = 8;

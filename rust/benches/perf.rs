@@ -1,29 +1,29 @@
 //! Performance micro-benchmarks (the §Perf instrumentation):
 //!
 //!   * end-to-end train-step latency / sample throughput per model,
-//!   * L1 kernel artifacts vs their pure-jnp reference twins,
+//!   * hot-path kernels (and their reference twins) through the backend,
 //!   * eval-step latency,
 //!   * data-pipeline generation rate,
 //!   * host substrates (fake-quant mirror, JSON manifest parse).
 //!
-//! Run: `cargo bench --bench perf` (needs `make artifacts`).
+//! Run: `cargo bench --bench perf`. Uses the PJRT artifacts when present,
+//! the native backend otherwise.
 
 use oscillations_qat::bench::{bench, bench_for};
 use oscillations_qat::coordinator::evaluator::{EvalQuant, Evaluator};
 use oscillations_qat::coordinator::{RunCfg, Trainer};
 use oscillations_qat::data::{DataCfg, Dataset};
 use oscillations_qat::quant;
-use oscillations_qat::runtime::Runtime;
-use oscillations_qat::state::NamedTensors;
-use oscillations_qat::tensor::Tensor;
+use oscillations_qat::runtime::auto_backend;
 use std::path::Path;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(Path::new("artifacts"))?;
-    println!("# oscillations-qat perf benchmarks\n");
+    let be = auto_backend(Path::new("artifacts"))?;
+    let be = be.as_ref();
+    println!("# oscillations-qat perf benchmarks (backend: {})\n", be.kind());
 
-    // -------- host substrates (no PJRT) --------
+    // -------- host substrates (no backend) --------
     let ds = Dataset::new(DataCfg::default());
     let mut i = 0u64;
     let s = bench("data: synth batch 16x16x16x3", 3, 200, || {
@@ -39,45 +39,41 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}  ({:.2} Gelem/s)", s.report(), s.per_sec(262_144.0) / 1e9);
 
-    let manifest_text =
-        std::fs::read_to_string("artifacts/mbv2_lsq_train.manifest.json")?;
-    let s = bench("host: manifest JSON parse (1.2k tensors)", 3, 50, || {
-        std::hint::black_box(oscillations_qat::json::parse(&manifest_text).unwrap());
-    });
-    println!("{}", s.report());
+    // PJRT-only substrate: manifest JSON parse (needs an artifact dir)
+    if let Ok(manifest_text) = std::fs::read_to_string("artifacts/mbv2_lsq_train.manifest.json") {
+        let s = bench("host: manifest JSON parse (1.2k tensors)", 3, 50, || {
+            std::hint::black_box(oscillations_qat::json::parse(&manifest_text).unwrap());
+        });
+        println!("{}", s.report());
+    }
 
-    // -------- L1 kernels vs refs through PJRT --------
+    // -------- hot-path kernels vs refs through the backend --------
     println!();
     for (label, key) in [
-        ("kernel: fake_quant (pallas)", "kernel_fakequant"),
-        ("kernel: fake_quant (jnp ref)", "kernel_fakequant_ref"),
-        ("kernel: osc_update (pallas)", "kernel_osc"),
-        ("kernel: osc_update (jnp ref)", "kernel_osc_ref"),
-        ("kernel: quant_matmul (pallas)", "kernel_qmm"),
-        ("kernel: quant_matmul (jnp ref)", "kernel_qmm_ref"),
+        ("kernel: fake_quant", "kernel_fakequant"),
+        ("kernel: fake_quant (ref)", "kernel_fakequant_ref"),
+        ("kernel: osc_update", "kernel_osc"),
+        ("kernel: osc_update (ref)", "kernel_osc_ref"),
+        ("kernel: quant_matmul", "kernel_qmm"),
+        ("kernel: quant_matmul (ref)", "kernel_qmm_ref"),
     ] {
-        let Some(name) = rt.index.kernels.get(key) else { continue };
-        let artifact = rt.artifact(name)?;
-        let mut io = NamedTensors::new();
-        for spec in &artifact.manifest.inputs {
-            let n = spec.num_elements().max(1);
-            let data: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
-            io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
-        }
+        let Some(name) = be.index().kernels.get(key).cloned() else { continue };
+        let sig = be.signature(&name)?;
+        let io = oscillations_qat::bench::kernel_bench_inputs(&sig);
         let s = bench_for(label, 2, Duration::from_secs(2), || {
-            let _ = artifact.execute(&[&io]).expect("exec");
+            let _ = be.execute(&name, &[&io]).expect("exec");
         });
         println!("{}", s.report());
     }
 
     // -------- end-to-end step latency per model --------
     println!();
-    let trainer = Trainer::new(&rt);
+    let trainer = Trainer::new(be);
     for model in ["mbv2", "resnet18", "mbv3", "efflite"] {
-        let batch = rt.index.model(model)?.batch_size as f64;
+        let batch = be.index().model(model)?.batch_size as f64;
         let mut cfg = RunCfg::qat(model, 1, 3, 0);
         cfg.quant_a = true;
-        let mut cur = Some(rt.initial_state(model)?);
+        let mut cur = Some(be.initial_state(model)?);
         let s = bench_for(
             &format!("step: {model} w3a3 train (batch {batch})"),
             1,
@@ -92,17 +88,16 @@ fn main() -> anyhow::Result<()> {
 
     // -------- eval step --------
     println!();
-    let ev = Evaluator::new(&rt, "mbv2")?;
-    let state = rt.initial_state("mbv2")?;
+    let ev = Evaluator::new(be, "mbv2")?;
+    let state = be.initial_state("mbv2")?;
     let data = DataCfg { val_size: 16, ..Default::default() };
     let s = bench_for("eval: mbv2 one batch", 1, Duration::from_secs(4), || {
         let _ = ev.eval_val(&state, &data, EvalQuant::weights(3)).expect("eval");
     });
     println!("{}", s.report());
 
-    println!(
-        "\ntotal XLA compile time: {:.1}s",
-        rt.compile_secs.borrow()
-    );
+    if be.compile_seconds() > 0.0 {
+        println!("\ntotal XLA compile time: {:.1}s", be.compile_seconds());
+    }
     Ok(())
 }

@@ -2,7 +2,37 @@
 //! offline crate cache). Warmup + timed iterations, robust summary stats,
 //! and a one-line report format shared by all `benches/*.rs` targets.
 
+use crate::runtime::Signature;
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
 use std::time::{Duration, Instant};
+
+/// Synthesize a meaningful input set for a kernel artifact from its
+/// signature: arrays get a deterministic value sweep, while the grid and
+/// state-machine scalars get realistic values (a positive scale, a proper
+/// n < p 3-bit grid, a sane EMA momentum and freezing threshold) — a
+/// uniform fill would hand the kernels a degenerate one-point grid and a
+/// negative threshold, benchmarking paths no training run takes.
+pub fn kernel_bench_inputs(sig: &Signature) -> NamedTensors {
+    let mut io = NamedTensors::new();
+    for spec in &sig.inputs {
+        let n: usize = spec.shape.iter().product::<usize>().max(1);
+        let data: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+        io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+    }
+    for (name, v) in [
+        ("s", 0.05),
+        ("n", -4.0),
+        ("p", 3.0),
+        ("m", 0.01),
+        ("f_th", 1.1),
+    ] {
+        if io.get(name).is_some() {
+            io.insert(name, Tensor::scalar(v));
+        }
+    }
+    io
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchStats {

@@ -11,8 +11,7 @@
 
 use super::evaluator::EvalQuant;
 use crate::data::{DataCfg, Dataset};
-use crate::quant::{act_grid, weight_grid};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::state::NamedTensors;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
@@ -63,7 +62,7 @@ impl BnStats {
 
 /// Collect population BN statistics with the train-mode forward pass.
 pub fn collect_stats(
-    rt: &Runtime,
+    rt: &dyn Backend,
     state: &NamedTensors,
     model: &str,
     q: EvalQuant,
@@ -71,18 +70,17 @@ pub fn collect_stats(
     seed: u64,
     batches: u64,
 ) -> Result<BnStats> {
-    let info = rt.index.model(model)?;
+    let info = rt.index().model(model)?;
     let name = info.artifacts.get("bnstats").context("bnstats artifact")?;
-    let artifact = rt.artifact(name)?;
     let ds = Dataset::new(DataCfg { seed, ..data.clone() });
-    let hyper = bn_hyper(q);
+    let hyper = q.hyper();
     let mut stats = BnStats::default();
     for i in 0..batches {
         let b = ds.train_batch(seed ^ 0xb57a7, i);
         let mut io = NamedTensors::new();
         io.insert("batch/x", b.x);
         io.insert("batch/y", b.y);
-        let out = artifact.execute(&[state, &io, &hyper])?;
+        let out = rt.execute(name, &[state, &io, &hyper])?;
         stats.add_batch(&out);
     }
     Ok(stats)
@@ -91,7 +89,7 @@ pub fn collect_stats(
 /// Re-estimate and overwrite the BN running statistics in `state`.
 /// Returns the number of BN layers updated.
 pub fn reestimate(
-    rt: &Runtime,
+    rt: &dyn Backend,
     state: &mut NamedTensors,
     model: &str,
     q: EvalQuant,
@@ -112,24 +110,6 @@ pub fn reestimate(
         }
     }
     Ok(updated)
-}
-
-fn bn_hyper(q: EvalQuant) -> NamedTensors {
-    let (n_w, p_w) = weight_grid(q.bits_w);
-    let mut h = NamedTensors::new();
-    let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
-    put("lr", 0.0);
-    put("lam", 0.0);
-    put("f_th", 1.1);
-    put("m_osc", 0.0);
-    put("bn_mom", 0.0);
-    put("mu", 0.0);
-    put("n_w", n_w);
-    put("p_w", p_w);
-    put("p_a", act_grid(q.bits_a));
-    put("wq_on", if q.quant_w { 1.0 } else { 0.0 });
-    put("aq_on", if q.quant_a { 1.0 } else { 0.0 });
-    h
 }
 
 #[cfg(test)]

@@ -1,12 +1,11 @@
-//! Validation / train-subset evaluation through the compiled eval artifact.
+//! Validation / train-subset evaluation through the backend's eval artifact.
 
 use crate::data::{Batch, DataCfg, Dataset};
 use crate::quant::{act_grid, weight_grid};
-use crate::runtime::{Artifact, Runtime};
+use crate::runtime::Backend;
 use crate::state::NamedTensors;
 use crate::tensor::Tensor;
-use anyhow::Result;
-use std::rc::Rc;
+use anyhow::{Context, Result};
 
 #[derive(Debug, Clone)]
 pub struct EvalResult {
@@ -37,7 +36,9 @@ impl EvalQuant {
         EvalQuant { bits_w: bits, bits_a: bits, quant_w: true, quant_a: true }
     }
 
-    fn hyper(&self) -> NamedTensors {
+    /// The inference-mode hyper map (lr/λ/momenta zero, freezing off)
+    /// shared by eval, BN statistics collection and calibration passes.
+    pub(crate) fn hyper(&self) -> NamedTensors {
         let (n_w, p_w) = weight_grid(self.bits_w);
         let mut h = NamedTensors::new();
         let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
@@ -57,16 +58,16 @@ impl EvalQuant {
 }
 
 pub struct Evaluator<'rt> {
-    pub rt: &'rt Runtime,
-    artifact: Rc<Artifact>,
+    pub rt: &'rt dyn Backend,
+    artifact: String,
     batch: usize,
 }
 
 impl<'rt> Evaluator<'rt> {
-    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
-        let info = rt.index.model(model)?;
-        let name = info.artifacts.get("eval").expect("eval artifact").clone();
-        Ok(Evaluator { rt, artifact: rt.artifact(&name)?, batch: info.batch_size })
+    pub fn new(rt: &'rt dyn Backend, model: &str) -> Result<Self> {
+        let info = rt.index().model(model)?;
+        let name = info.artifacts.get("eval").context("eval artifact")?.clone();
+        Ok(Evaluator { rt, artifact: name, batch: info.batch_size })
     }
 
     /// Evaluate over a batch list. State needs `params/*` and `bn/*`.
@@ -84,7 +85,7 @@ impl<'rt> Evaluator<'rt> {
             let mut io = NamedTensors::new();
             io.insert("batch/x", b.x.clone());
             io.insert("batch/y", b.y.clone());
-            let out = self.artifact.execute(&[state, &io, &hyper])?;
+            let out = self.rt.execute(&self.artifact, &[state, &io, &hyper])?;
             correct += out.expect("correct")?.item() as f64;
             loss += out.expect("loss")?.item() as f64;
             n += self.batch;

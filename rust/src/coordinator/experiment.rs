@@ -19,15 +19,15 @@ use crate::quant::adaround::{self, AnnealCfg};
 use crate::quant::sampler;
 use crate::quant::weight_grid;
 use crate::rng::Pcg32;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::state::NamedTensors;
 use crate::toy::{self, ToyCfg, ToyEstimator};
 use anyhow::Result;
 use std::path::PathBuf;
 
-/// Shared experiment context: runtime + scale knobs.
+/// Shared experiment context: execution backend + scale knobs.
 pub struct Lab<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
     pub ckpt_dir: PathBuf,
     pub results_dir: PathBuf,
     pub fp_steps: u64,
@@ -39,7 +39,7 @@ pub struct Lab<'rt> {
 }
 
 impl<'rt> Lab<'rt> {
-    pub fn new(rt: &'rt Runtime) -> Self {
+    pub fn new(rt: &'rt dyn Backend) -> Self {
         Lab {
             rt,
             ckpt_dir: PathBuf::from("ckpts"),
@@ -141,7 +141,7 @@ impl<'rt> Lab<'rt> {
                               spec.seed, self.bn_batches)?;
         let post = evaluator.eval_val(&state, &self.data, q)?;
 
-        let info = self.rt.index.model(&spec.model)?;
+        let info = self.rt.index().model(&spec.model)?;
         let summary = osc::summarize(&state, &info.lowbit);
         eprintln!(
             "[lab] {} {} w{}a{} λ={} f_th={} seed{}: pre {:.2} post {:.2} osc {:.2}% frozen {:.2}%",
@@ -204,7 +204,7 @@ impl<'rt> Lab<'rt> {
                 self.bn_batches * 2,
             )?;
             let pop = stats.finalize();
-            let info = self.rt.index.model(model)?;
+            let info = self.rt.index().model(model)?;
             let mut rows: Vec<KlRow> = vec![];
             for (layer, (pm, pv)) in &pop {
                 let Some(em) = state.get(&format!("bn/{layer}.bn_m")) else { continue };
@@ -284,7 +284,7 @@ impl<'rt> Lab<'rt> {
             &["Method", "Train loss", "Val acc (%)"],
         );
         let evaluator = Evaluator::new(self.rt, model)?;
-        let info = self.rt.index.model(model)?.clone();
+        let info = self.rt.index().model(model)?.clone();
         let q = EvalQuant::weights(3);
         let loss_batches = 16;
 
@@ -582,7 +582,7 @@ impl<'rt> Lab<'rt> {
     /// Fig 2: integer/latent weight traces of a depthwise layer.
     pub fn fig2(&self) -> Result<TableRenderer> {
         let model = "mbv2";
-        let info = self.rt.index.model(model)?;
+        let info = self.rt.index().model(model)?;
         let dw = info
             .depthwise()
             .first()
@@ -628,7 +628,7 @@ impl<'rt> Lab<'rt> {
     pub fn fig34(&self) -> Result<TableRenderer> {
         let model = "mbv2";
         let seed = self.seeds[0];
-        let info = self.rt.index.model(model)?;
+        let info = self.rt.index().model(model)?;
         let dws = info.depthwise();
         let dw = dws.get(1.min(dws.len() - 1)).map(|s| format!("{s}.w")).unwrap();
         let (n_w, p_w) = weight_grid(3);

@@ -19,7 +19,7 @@ use crate::data::{DataCfg, Dataset};
 use crate::osc::weight_scale_of;
 use crate::quant::range_est::{lsq_act_scale, mse_weight_scale};
 use crate::quant::{act_grid, weight_grid};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::state::{Checkpoint, NamedTensors};
 use crate::tensor::{round_ties_even, Tensor};
 use anyhow::{Context, Result};
@@ -27,7 +27,7 @@ use std::path::Path;
 
 /// Load (or train + cache) the FP-pretrained state for (model, seed).
 pub fn fp_pretrained(
-    rt: &Runtime,
+    rt: &dyn Backend,
     ckpt_dir: &Path,
     model: &str,
     seed: u64,
@@ -62,7 +62,7 @@ fn grid_for(wq: &str, bits_w: u32) -> (f32, f32) {
 /// Prepare a state for QAT: range-estimate scales, calibrate activation
 /// scales, reset oscillation + momentum state.
 pub fn prepare_qat(
-    rt: &Runtime,
+    rt: &dyn Backend,
     state: &mut NamedTensors,
     model: &str,
     bits_w: u32,
@@ -70,7 +70,7 @@ pub fn prepare_qat(
     data: &DataCfg,
     seed: u64,
 ) -> Result<()> {
-    let info = rt.index.model(model)?.clone();
+    let info = rt.index().model(model)?.clone();
 
     // (1) MSE range estimation for all quantized weight tensors.
     // Layer table gives conv/fc weights; SE weights (w1/w2) are covered by
@@ -98,10 +98,8 @@ pub fn prepare_qat(
 
     // (2) activation scales from a calibration pass.
     let bn_name = info.artifacts.get("bnstats").context("bnstats artifact")?;
-    let artifact = rt.artifact(bn_name)?;
     let ds = Dataset::new(DataCfg { seed, ..data.clone() });
-    let q = EvalQuant::fp(); // calibrate on unquantized activations
-    let hyper = calib_hyper(q);
+    let hyper = EvalQuant::fp().hyper(); // calibrate on unquantized activations
     let mut sums: std::collections::BTreeMap<String, f64> = Default::default();
     const CALIB_BATCHES: u64 = 4;
     for i in 0..CALIB_BATCHES {
@@ -109,7 +107,7 @@ pub fn prepare_qat(
         let mut io = NamedTensors::new();
         io.insert("batch/x", b.x);
         io.insert("batch/y", b.y);
-        let out = artifact.execute(&[state, &io, &hyper])?;
+        let out = rt.execute(bn_name, &[state, &io, &hyper])?;
         for (k, v) in &out.map {
             if let Some(site) = k.strip_suffix(".absmean") {
                 *sums.entry(site.to_string()).or_default() += v.item() as f64;
@@ -154,20 +152,3 @@ pub fn prepare_qat(
     Ok(())
 }
 
-fn calib_hyper(q: EvalQuant) -> NamedTensors {
-    let (n_w, p_w) = weight_grid(q.bits_w);
-    let mut h = NamedTensors::new();
-    let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));
-    put("lr", 0.0);
-    put("lam", 0.0);
-    put("f_th", 1.1);
-    put("m_osc", 0.0);
-    put("bn_mom", 0.0);
-    put("mu", 0.0);
-    put("n_w", n_w);
-    put("p_w", p_w);
-    put("p_a", act_grid(q.bits_a));
-    put("wq_on", if q.quant_w { 1.0 } else { 0.0 });
-    put("aq_on", if q.quant_a { 1.0 } else { 0.0 });
-    h
-}

@@ -7,11 +7,10 @@ use crate::data::{DataCfg, Dataset, Loader};
 use crate::metrics::History;
 use crate::osc::{self, TraceRecord};
 use crate::quant::{act_grid, weight_grid};
-use crate::runtime::{Artifact, Runtime};
+use crate::runtime::Backend;
 use crate::state::NamedTensors;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
-use std::rc::Rc;
 
 /// Everything one training run needs.
 #[derive(Debug, Clone)]
@@ -92,24 +91,24 @@ pub struct RunResult {
     pub final_metrics: Vec<(String, f64)>,
 }
 
-/// The step-loop driver bound to one Runtime.
+/// The step-loop driver bound to one execution backend.
 pub struct Trainer<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
 }
 
 impl<'rt> Trainer<'rt> {
-    pub fn new(rt: &'rt Runtime) -> Self {
+    pub fn new(rt: &'rt dyn Backend) -> Self {
         Trainer { rt }
     }
 
-    fn train_artifact(&self, cfg: &RunCfg) -> Result<Rc<Artifact>> {
-        let info = self.rt.index.model(&cfg.model)?;
+    fn train_artifact(&self, cfg: &RunCfg) -> Result<String> {
+        let info = self.rt.index().model(&cfg.model)?;
         let role = cfg.train_role();
         let name = info
             .artifacts
             .get(&role)
             .with_context(|| format!("model {} has no artifact {role}", cfg.model))?;
-        self.rt.artifact(name)
+        Ok(name.clone())
     }
 
     /// Hyper scalars for a step at progress x ∈ [0, 1].
@@ -158,8 +157,9 @@ impl<'rt> Trainer<'rt> {
             io.insert("batch/x", batch.x);
             io.insert("batch/y", batch.y);
 
-            let out = artifact
-                .execute(&[&state, &io, &hyper])
+            let out = self
+                .rt
+                .execute(&artifact, &[&state, &io, &hyper])
                 .with_context(|| format!("train step {step}"))?;
 
             // re-key: "state/..." -> new state; "metrics/..." -> scalars

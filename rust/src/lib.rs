@@ -2,7 +2,8 @@
 //!
 //! Production-grade reproduction of **"Overcoming Oscillations in
 //! Quantization-Aware Training"** (Nagel, Fournarakis, Bondarenko,
-//! Blankevoort — ICML 2022) as a three-layer Rust + JAX + Pallas stack:
+//! Blankevoort — ICML 2022) as a Rust training system with a
+//! **two-backend runtime**:
 //!
 //! * **L3 (this crate)** — the QAT training orchestrator: experiment
 //!   runner, synthetic data pipeline, all mutable training state, schedule
@@ -10,18 +11,23 @@
 //!   re-estimation, oscillation analysis, the toy-regression substrate and
 //!   the benchmark harness regenerating every table and figure of the
 //!   paper. Python never runs on the step path.
-//! * **L2 (python/compile, build time)** — JAX model fwd/bwd for the tiny
-//!   MobileNetV2 / MobileNetV3 / EfficientNet-lite / ResNet-18 zoo with
-//!   LSQ quantization and the paper's gradient-estimator variants, lowered
-//!   once to HLO text.
-//! * **L1 (python/compile/kernels, build time)** — Pallas kernels for the
-//!   QAT hot spots: fused fake-quant, the Algorithm-1 oscillation
-//!   state machine, and a fused quantize-matmul.
+//! * **Backends** (`runtime::Backend`) — artifact execution is abstract:
+//!   - `runtime::Runtime` replays AOT HLO-text artifacts produced by the
+//!     JAX/Pallas build layers (L2 `python/compile`, L1
+//!     `python/compile/kernels`) through the PJRT C API;
+//!   - `runtime::NativeBackend` interprets the same QAT step semantics in
+//!     pure Rust — fused fake-quant (LSQ forward/backward with the
+//!     paper's gradient-estimator variants), the Algorithm-1 oscillation
+//!     state machine, quantized matmul, BN statistics, SGD + momentum —
+//!     numerically mirroring `python/compile/kernels/ref.py`. It needs no
+//!     artifacts, no Python and no XLA, so the entire pipeline (and CI)
+//!     runs on a fresh checkout.
 //!
-//! The runtime loads the AOT artifacts through the PJRT C API (`xla`
-//! crate) and drives them from a pure-Rust event loop.
+//! Backend selection: `--backend {auto,pjrt,native}` on the CLI
+//! (`runtime::backend_by_name`), or `runtime::auto_backend` which prefers
+//! PJRT when an artifact directory is usable and falls back to native.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! See README.md for the architecture overview and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 
 pub mod analysis;
@@ -40,6 +46,6 @@ pub mod state;
 pub mod tensor;
 pub mod toy;
 
-pub use runtime::{Artifact, Runtime};
+pub use runtime::{auto_backend, backend_by_name, Artifact, Backend, NativeBackend, Runtime};
 pub use state::NamedTensors;
 pub use tensor::Tensor;

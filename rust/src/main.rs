@@ -9,15 +9,19 @@
 //!            are cached, so this is much cheaper than separate processes)
 //!   bench-step / bench-kernels   perf micro-benchmarks
 //!
-//! Common flags: --artifacts DIR, --steps N, --fp-steps N, --seeds 0,1
-//! Run with no arguments for usage.
+//! Backends: --backend {auto,pjrt,native}. `pjrt` replays the AOT HLO
+//! artifacts under --artifacts; `native` is the artifact-free pure-Rust
+//! interpreter; `auto` (default) picks PJRT when usable, else native.
+//!
+//! Common flags: --backend auto --artifacts DIR --steps N --fp-steps N
+//! --seeds 0,1. Run with no arguments for usage.
 
 use anyhow::Result;
 use oscillations_qat::cli::Args;
 use oscillations_qat::coordinator::evaluator::{EvalQuant, Evaluator};
 use oscillations_qat::coordinator::experiment::{Lab, QatSpec};
 use oscillations_qat::coordinator::{Schedule, Trainer};
-use oscillations_qat::runtime::Runtime;
+use oscillations_qat::runtime::{self, Backend};
 use oscillations_qat::toy::{run as toy_run, stats as toy_stats, ToyCfg, ToyEstimator};
 use std::path::PathBuf;
 
@@ -33,10 +37,11 @@ USAGE: oscillations-qat <subcommand> [flags]
   suite     [--quick]       run everything in one process
   bench-step / bench-kernels
 
-Common flags: --artifacts artifacts --results results --ckpts ckpts
+Common flags: --backend auto|pjrt|native   (native needs no artifacts)
+              --artifacts artifacts --results results --ckpts ckpts
               --steps N --fp-steps N --seeds 0,1";
 
-fn lab_from_args<'rt>(rt: &'rt Runtime, args: &Args) -> Lab<'rt> {
+fn lab_from_args<'rt>(rt: &'rt dyn Backend, args: &Args) -> Lab<'rt> {
     let mut lab = Lab::new(rt);
     lab.qat_steps = args.u64_or("steps", lab.qat_steps);
     lab.fp_steps = args.u64_or("fp-steps", lab.fp_steps);
@@ -62,18 +67,20 @@ fn main() -> Result<()> {
         return Ok(());
     };
 
-    // toy needs no runtime
+    // toy needs no backend
     if cmd == "toy" {
         return cmd_toy(&args);
     }
 
     let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let rt = Runtime::new(&artifact_dir)?;
-    let lab = lab_from_args(&rt, &args);
+    let be = runtime::backend_by_name(&args.str_or("backend", "auto"), &artifact_dir)?;
+    let be: &dyn Backend = be.as_ref();
+    eprintln!("[runtime] backend: {}", be.kind());
+    let lab = lab_from_args(be, &args);
 
     match cmd.as_str() {
         "train" => cmd_train(&lab, &args)?,
-        "eval" => cmd_eval(&rt, &args)?,
+        "eval" => cmd_eval(be, &args)?,
         "table1" => drop(lab.table1()?),
         "table2" => drop(lab.table2()?),
         "table3" => drop(lab.table3()?),
@@ -88,17 +95,19 @@ fn main() -> Result<()> {
         "fig5" => drop(lab.fig5()?),
         "fig6" => drop(lab.fig6()?),
         "suite" => cmd_suite(&lab)?,
-        "bench-step" => cmd_bench_step(&rt, &args)?,
-        "bench-kernels" => cmd_bench_kernels(&rt)?,
+        "bench-step" => cmd_bench_step(be, &args)?,
+        "bench-kernels" => cmd_bench_kernels(be)?,
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);
         }
     }
-    eprintln!(
-        "[runtime] total XLA compile time this process: {:.1}s",
-        rt.compile_secs.borrow()
-    );
+    if be.compile_seconds() > 0.0 {
+        eprintln!(
+            "[runtime] total XLA compile time this process: {:.1}s",
+            be.compile_seconds()
+        );
+    }
     Ok(())
 }
 
@@ -127,7 +136,7 @@ fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(rt: &Runtime, args: &Args) -> Result<()> {
+fn cmd_eval(rt: &dyn Backend, args: &Args) -> Result<()> {
     let model = args.str_or("model", "mbv2");
     let ckpt = PathBuf::from(args.str_or("ckpt", ""));
     let state = oscillations_qat::state::NamedTensors::read_qtns(&ckpt)?;
@@ -194,7 +203,7 @@ fn cmd_suite(lab: &Lab) -> Result<()> {
     Ok(())
 }
 
-fn cmd_bench_step(rt: &Runtime, args: &Args) -> Result<()> {
+fn cmd_bench_step(rt: &dyn Backend, args: &Args) -> Result<()> {
     use oscillations_qat::bench::bench_for;
     use oscillations_qat::coordinator::RunCfg;
     let model = args.str_or("model", "mbv2");
@@ -216,27 +225,20 @@ fn cmd_bench_step(rt: &Runtime, args: &Args) -> Result<()> {
     println!("{}", stats.report());
     println!(
         "  = {:.1} samples/s (batch {})",
-        stats.per_sec(rt.index.model(&model)?.batch_size as f64),
-        rt.index.model(&model)?.batch_size
+        stats.per_sec(rt.index().model(&model)?.batch_size as f64),
+        rt.index().model(&model)?.batch_size
     );
     Ok(())
 }
 
-fn cmd_bench_kernels(rt: &Runtime) -> Result<()> {
+fn cmd_bench_kernels(rt: &dyn Backend) -> Result<()> {
     use oscillations_qat::bench::bench_for;
-    use oscillations_qat::state::NamedTensors;
-    use oscillations_qat::tensor::Tensor;
-    let kernels = rt.index.kernels.clone();
+    let kernels = rt.index().kernels.clone();
     for (label, artifact_name) in kernels {
-        let artifact = rt.artifact(&artifact_name)?;
-        let mut io = NamedTensors::new();
-        for spec in &artifact.manifest.inputs {
-            let n: usize = spec.shape.iter().product::<usize>().max(1);
-            let data: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
-            io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
-        }
+        let sig = rt.signature(&artifact_name)?;
+        let io = oscillations_qat::bench::kernel_bench_inputs(&sig);
         let stats = bench_for(&label, 2, std::time::Duration::from_secs(3), || {
-            let _ = artifact.execute(&[&io]).expect("kernel exec");
+            let _ = rt.execute(&artifact_name, &[&io]).expect("kernel exec");
         });
         println!("{}", stats.report());
     }

@@ -1,6 +1,10 @@
-//! Artifact = one compiled PJRT executable + its manifest, with named I/O.
+//! PJRT backend: one compiled executable + manifest per artifact, with
+//! named I/O. This is the [`super::Backend`] implementation that replays
+//! AOT HLO-text artifacts; see `runtime/native/` for the artifact-free
+//! pure-Rust implementation of the same contract.
 
 use super::manifest::{ArtifactIndex, Manifest};
+use super::{Backend, Signature};
 use crate::state::NamedTensors;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
@@ -120,23 +124,41 @@ impl Artifact {
     /// Names may appear in the manifest under a `group/` prefix that the
     /// map keys already include.
     pub fn execute(&self, sources: &[&NamedTensors]) -> Result<NamedTensors> {
-        self.execute_with(|name| {
-            // train-step inputs are "state/params/x"; state maps key
-            // "params/x". Try the raw name, then with the first path
-            // component stripped.
-            for src in sources {
-                if let Some(t) = src.get(name) {
-                    return Some(t.clone());
-                }
-            }
-            let stripped = name.splitn(2, '/').nth(1)?;
-            for src in sources {
-                if let Some(t) = src.get(stripped) {
-                    return Some(t.clone());
-                }
-            }
-            None
-        })
+        self.execute_with(|name| super::resolve(sources, name))
+    }
+}
+
+impl Backend for Runtime {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn index(&self) -> &ArtifactIndex {
+        &self.index
+    }
+
+    fn initial_state(&self, model: &str) -> Result<NamedTensors> {
+        Runtime::initial_state(self, model)
+    }
+
+    fn signature(&self, artifact: &str) -> Result<Signature> {
+        if let Some(a) = self.cache.borrow().get(artifact) {
+            return Ok(Signature {
+                inputs: a.manifest.inputs.clone(),
+                outputs: a.manifest.outputs.clone(),
+            });
+        }
+        // manifests are plain JSON sidecars; no compilation needed
+        let m = Manifest::load(&self.index.dir.join(format!("{artifact}.manifest.json")))?;
+        Ok(Signature { inputs: m.inputs, outputs: m.outputs })
+    }
+
+    fn execute(&self, artifact: &str, sources: &[&NamedTensors]) -> Result<NamedTensors> {
+        self.artifact(artifact)?.execute(sources)
+    }
+
+    fn compile_seconds(&self) -> f64 {
+        *self.compile_secs.borrow()
     }
 }
 

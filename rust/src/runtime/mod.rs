@@ -1,18 +1,148 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the step loop.
+//! Execution backends behind one [`Backend`] trait.
 //!
-//! The interchange contract with `python/compile/aot.py`:
-//! * HLO **text** (`*.hlo.txt`) — the text parser reassigns instruction
-//!   ids, dodging the 64-bit-id protos jax >= 0.5 emits that
-//!   xla_extension 0.5.1 rejects.
-//! * A JSON manifest per artifact listing the flat input/output tensor
-//!   signature (names, shapes); the runtime binds tensors **by name**
-//!   through a resolver, so callers never depend on positional order.
-//! * Executables return one tuple; the runtime decomposes it and re-keys
-//!   the parts by the manifest output names.
+//! The coordinator drives training through an abstract artifact executor:
+//! `execute(name, sources) -> NamedTensors` plus model-index and signature
+//! lookup. Two implementations exist:
+//!
+//! * **PJRT** ([`Runtime`], `artifact.rs`) — loads AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py`, compiles them once through the
+//!   PJRT C API and replays them from the step loop. Requires a `make
+//!   artifacts` output directory and a real `xla` binding.
+//! * **Native** ([`NativeBackend`], `native/`) — a pure-Rust interpreter of
+//!   the same QAT step semantics (fused fake-quant with the paper's
+//!   gradient estimators, the Algorithm-1 oscillation state machine,
+//!   quantized matmul, BN statistics, SGD + momentum), numerically
+//!   mirroring `python/compile/kernels/ref.py`. Needs no artifacts, no
+//!   Python and no XLA — this is what CI and a fresh checkout run.
+//!
+//! The interchange contract shared by both backends:
+//! * Tensors bind **by name** through a resolver ([`resolve`]); callers
+//!   never depend on positional order. A manifest name `state/params/x`
+//!   also matches a source key `params/x` (first path component stripped).
+//! * Train artifacts return the whole mutable state re-keyed under
+//!   `state/...` plus scalar `metrics/...` entries.
 
 mod artifact;
 mod manifest;
+pub mod native;
 
 pub use artifact::{Artifact, Runtime};
 pub use manifest::{ArtifactIndex, LayerInfo, Manifest, ModelInfo, TensorSpec};
+pub use native::NativeBackend;
+
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// The hyper scalars every train/eval/bnstats artifact binds (all under a
+/// `hyper/` prefix). The single source of truth for the contract the four
+/// coordinator hyper builders and the native interpreter share.
+pub const HYPER_KEYS: [&str; 11] = [
+    "lr", "lam", "f_th", "m_osc", "bn_mom", "mu", "n_w", "p_w", "p_a", "wq_on", "aq_on",
+];
+
+/// Flat input/output signature of one artifact.
+#[derive(Debug, Clone)]
+pub struct Signature {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// An artifact executor: the coordinator's only window onto compute.
+pub trait Backend {
+    /// Short backend tag: `"pjrt"` or `"native"`.
+    fn kind(&self) -> &'static str;
+
+    /// The model/kernel index (layer tables, low-bit weight lists, the
+    /// role -> artifact-name maps).
+    fn index(&self) -> &ArtifactIndex;
+
+    /// Fresh initial training state for a model.
+    fn initial_state(&self, model: &str) -> Result<NamedTensors>;
+
+    /// Input/output signature of an artifact (no compilation implied).
+    fn signature(&self, artifact: &str) -> Result<Signature>;
+
+    /// Execute an artifact, binding every input by name from `sources`
+    /// (searched in order, see [`resolve`]).
+    fn execute(&self, artifact: &str, sources: &[&NamedTensors]) -> Result<NamedTensors>;
+
+    /// Cumulative seconds spent compiling artifacts (0 for native).
+    fn compile_seconds(&self) -> f64 {
+        0.0
+    }
+}
+
+/// By-name input resolution shared by both backends: try the raw name in
+/// each source, then the name with its first path component stripped
+/// (train-step inputs are `state/params/x`; state maps key `params/x`).
+pub fn resolve(sources: &[&NamedTensors], name: &str) -> Option<Tensor> {
+    for src in sources {
+        if let Some(t) = src.get(name) {
+            return Some(t.clone());
+        }
+    }
+    let stripped = name.splitn(2, '/').nth(1)?;
+    for src in sources {
+        if let Some(t) = src.get(stripped) {
+            return Some(t.clone());
+        }
+    }
+    None
+}
+
+/// Instantiate a backend by CLI name: `pjrt`, `native`, or `auto`
+/// (PJRT when an artifact index exists and the binding works, else native).
+pub fn backend_by_name(kind: &str, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    match kind {
+        "pjrt" => Ok(Box::new(Runtime::new(artifact_dir)?)),
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "auto" | "" => auto_backend(artifact_dir),
+        other => bail!("unknown backend {other:?} (expected pjrt | native | auto)"),
+    }
+}
+
+/// PJRT when usable, otherwise the artifact-free native fallback.
+pub fn auto_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    if artifact_dir.join("index.json").exists() {
+        match Runtime::new(artifact_dir) {
+            Ok(rt) => return Ok(Box::new(rt)),
+            Err(e) => {
+                eprintln!("[runtime] PJRT backend unavailable ({e}); falling back to native");
+            }
+        }
+    }
+    Ok(Box::new(NativeBackend::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_strips_group_prefix() {
+        let mut a = NamedTensors::new();
+        a.insert("params/w", Tensor::scalar(1.0));
+        let mut b = NamedTensors::new();
+        b.insert("hyper/lr", Tensor::scalar(0.1));
+        let srcs: Vec<&NamedTensors> = vec![&a, &b];
+        assert_eq!(resolve(&srcs, "params/w").unwrap().item(), 1.0);
+        assert_eq!(resolve(&srcs, "state/params/w").unwrap().item(), 1.0);
+        assert_eq!(resolve(&srcs, "hyper/lr").unwrap().item(), 0.1);
+        assert!(resolve(&srcs, "nope/x").is_none());
+    }
+
+    #[test]
+    fn auto_backend_falls_back_to_native() {
+        let be = auto_backend(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(be.kind(), "native");
+        assert!(be.index().models.contains_key("mbv2"));
+    }
+
+    #[test]
+    fn backend_by_name_rejects_unknown() {
+        assert!(backend_by_name("tpu", Path::new(".")).is_err());
+        assert_eq!(backend_by_name("native", Path::new(".")).unwrap().kind(), "native");
+    }
+}

@@ -1,0 +1,775 @@
+//! The native step interpreter: forward/backward of a [`NativeModel`]
+//! under the same I/O contract as the compiled PJRT train/eval/bnstats
+//! artifacts.
+//!
+//! * `train_step` — quantized forward (LSQ weight + unsigned activation
+//!   fake-quant), softmax cross-entropy + dampening loss, full backward
+//!   with the selected gradient estimator, SGD + momentum, BN
+//!   running-stat EMA update and the Algorithm-1 oscillation/freezing
+//!   update; returns `state/...` + `metrics/...`.
+//! * `eval_step` — inference forward (BN running stats); returns
+//!   `correct` and `loss`.
+//! * `bnstats_step` — train-mode forward; returns per-BN-layer batch
+//!   statistics (`{layer}.bn_bm` / `{layer}.bn_bv`) and per-site
+//!   calibration means (`{layer}.absmean`).
+//!
+//! Everything is f32 with round-half-to-even grid math, matching
+//! `python/compile/kernels/ref.py` bit-for-bit on the kernel paths.
+
+use super::kernels::{self, Estimator, OscState};
+use super::model::{LayerOp, NativeModel};
+use crate::runtime::resolve;
+use crate::state::NamedTensors;
+use crate::tensor::{round_ties_even, Tensor};
+use anyhow::{Context, Result};
+
+const BN_EPS: f32 = 1e-5;
+
+/// Hyper scalars threaded into every artifact call.
+#[derive(Debug, Clone, Copy)]
+struct Hyper {
+    lr: f32,
+    lam: f32,
+    f_th: f32,
+    m_osc: f32,
+    bn_mom: f32,
+    mu: f32,
+    n_w: f32,
+    p_w: f32,
+    p_a: f32,
+    wq_on: bool,
+    aq_on: bool,
+}
+
+fn req(sources: &[&NamedTensors], name: &str) -> Result<Tensor> {
+    resolve(sources, name).with_context(|| format!("native: unresolved input {name:?}"))
+}
+
+fn scalar(sources: &[&NamedTensors], name: &str) -> Result<f32> {
+    Ok(req(sources, name)?.item())
+}
+
+fn hyper(sources: &[&NamedTensors]) -> Result<Hyper> {
+    Ok(Hyper {
+        lr: scalar(sources, "hyper/lr")?,
+        lam: scalar(sources, "hyper/lam")?,
+        f_th: scalar(sources, "hyper/f_th")?,
+        m_osc: scalar(sources, "hyper/m_osc")?,
+        bn_mom: scalar(sources, "hyper/bn_mom")?,
+        mu: scalar(sources, "hyper/mu")?,
+        n_w: scalar(sources, "hyper/n_w")?,
+        p_w: scalar(sources, "hyper/p_w")?,
+        p_a: scalar(sources, "hyper/p_a")?,
+        wq_on: scalar(sources, "hyper/wq_on")? > 0.5,
+        aq_on: scalar(sources, "hyper/aq_on")? > 0.5,
+    })
+}
+
+/// Per-layer forward cache (everything backward needs).
+struct LayerFwd {
+    /// layer input before activation quantization, [B * d_in]
+    a_in: Vec<f32>,
+    /// layer input actually fed to the linear op (quantized or same)
+    a_q: Vec<f32>,
+    /// effective (fake-quantized or raw) weights used
+    w_eff: Vec<f32>,
+    /// linear output, [B * d_out]
+    z: Vec<f32>,
+    /// BN caches (empty when the layer has no BN)
+    bn_mean: Vec<f32>,
+    bn_var: Vec<f32>,
+    xhat: Vec<f32>,
+    /// post-BN post-activation output, [B * d_out]
+    out: Vec<f32>,
+    /// act-quant bookkeeping
+    act_scale: f32,
+    act_p: f32,
+    act_quantized: bool,
+    /// weight-quant bookkeeping
+    w_scale: f32,
+    w_n: f32,
+    w_p: f32,
+    w_quantized: bool,
+}
+
+struct Forward {
+    layers: Vec<LayerFwd>,
+    logits: Vec<f32>,
+}
+
+/// BN statistics source for the forward pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BnMode {
+    /// batch statistics (training / bnstats calibration)
+    Batch,
+    /// running EMA statistics (inference)
+    Running,
+}
+
+fn forward(
+    model: &NativeModel,
+    sources: &[&NamedTensors],
+    h: &Hyper,
+    bn_mode: BnMode,
+) -> Result<Forward> {
+    let x = req(sources, "batch/x")?;
+    let b = *x.shape.first().context("batch/x missing batch dim")?;
+    let mut act = x.data.clone(); // [B, 768] row-major (flattened NHWC)
+    let mut layers = Vec::with_capacity(model.layers.len());
+
+    for l in &model.layers {
+        let (d_in, d_out) = (l.d_in, l.d_out);
+        anyhow::ensure!(
+            act.len() == b * d_in,
+            "layer {}: input has {} elements, want {}x{}",
+            l.name,
+            act.len(),
+            b,
+            d_in
+        );
+        let a_in = act;
+
+        // --- input activation fake-quant (unsigned LSQ grid [0, p]) ---
+        let act_quantized = l.aq && h.aq_on;
+        let act_p = if l.wq == "8bit" { 255.0 } else { h.p_a };
+        let act_scale = if act_quantized {
+            scalar(sources, &format!("params/{}.as", l.name))?.max(1e-8)
+        } else {
+            1.0
+        };
+        let a_q = if act_quantized {
+            kernels::fake_quant(&a_in, act_scale, 0.0, act_p)
+        } else {
+            a_in.clone()
+        };
+
+        // --- weights (fake-quantized on the layer's grid when gated on) ---
+        let w = req(sources, &format!("params/{}.w", l.name))?;
+        let w_quantized = h.wq_on;
+        let (w_n, w_p) = if l.wq == "8bit" { (-128.0, 127.0) } else { (h.n_w, h.p_w) };
+        let w_scale = scalar(sources, &format!("params/{}.s", l.name))?.max(1e-8);
+        let w_eff = if w_quantized {
+            kernels::fake_quant(&w.data, w_scale, w_n, w_p)
+        } else {
+            w.data.clone()
+        };
+
+        // --- linear op ---
+        let mut z = vec![0.0f32; b * d_out];
+        match l.op {
+            LayerOp::Full => {
+                for bi in 0..b {
+                    let arow = &a_q[bi * d_in..(bi + 1) * d_in];
+                    let zrow = &mut z[bi * d_out..(bi + 1) * d_out];
+                    for (i, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let wrow = &w_eff[i * d_out..(i + 1) * d_out];
+                        for (zv, &wv) in zrow.iter_mut().zip(wrow) {
+                            *zv += a * wv;
+                        }
+                    }
+                }
+            }
+            LayerOp::Dw => {
+                // circular depthwise 3-tap conv over the channel axis:
+                // z[b,c] = sum_t w[c,t] * a[b, (c + t - 1) mod C]
+                for bi in 0..b {
+                    let arow = &a_q[bi * d_in..(bi + 1) * d_in];
+                    let zrow = &mut z[bi * d_out..(bi + 1) * d_out];
+                    for c in 0..d_out {
+                        let mut acc = 0.0f32;
+                        for t in 0..3usize {
+                            let j = (c + t + d_in - 1) % d_in;
+                            acc += w_eff[c * 3 + t] * arow[j];
+                        }
+                        zrow[c] = acc;
+                    }
+                }
+            }
+        }
+        if l.bias {
+            let bias = req(sources, &format!("params/{}.bias", l.name))?;
+            for bi in 0..b {
+                for c in 0..d_out {
+                    z[bi * d_out + c] += bias.data[c];
+                }
+            }
+        }
+
+        // --- batch norm ---
+        let (mut bn_mean, mut bn_var, mut xhat) = (vec![], vec![], vec![]);
+        let mut out = if l.bn {
+            let g = req(sources, &format!("params/{}.g", l.name))?;
+            let beta = req(sources, &format!("params/{}.beta", l.name))?;
+            let (mean, var) = match bn_mode {
+                BnMode::Batch => batch_stats(&z, b, d_out),
+                BnMode::Running => (
+                    req(sources, &format!("bn/{}.bn_m", l.name))?.data,
+                    req(sources, &format!("bn/{}.bn_v", l.name))?.data,
+                ),
+            };
+            let mut xh = vec![0.0f32; b * d_out];
+            let mut o = vec![0.0f32; b * d_out];
+            for c in 0..d_out {
+                let ivar = 1.0 / (var[c] + BN_EPS).sqrt();
+                for bi in 0..b {
+                    let idx = bi * d_out + c;
+                    let v = (z[idx] - mean[c]) * ivar;
+                    xh[idx] = v;
+                    o[idx] = g.data[c] * v + beta.data[c];
+                }
+            }
+            bn_mean = mean;
+            bn_var = var;
+            xhat = xh;
+            o
+        } else {
+            z.clone()
+        };
+
+        // --- activation ---
+        if l.relu {
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+
+        act = out.clone();
+        layers.push(LayerFwd {
+            a_in,
+            a_q,
+            w_eff,
+            z,
+            bn_mean,
+            bn_var,
+            xhat,
+            out,
+            act_scale,
+            act_p,
+            act_quantized,
+            w_scale,
+            w_n,
+            w_p,
+            w_quantized,
+        });
+    }
+
+    Ok(Forward { layers, logits: act })
+}
+
+/// Per-channel biased batch statistics of `z` ([B, C] row-major).
+fn batch_stats(z: &[f32], b: usize, c: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for bi in 0..b {
+        for ci in 0..c {
+            mean[ci] += z[bi * c + ci];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= b as f32;
+    }
+    for bi in 0..b {
+        for ci in 0..c {
+            let d = z[bi * c + ci] - mean[ci];
+            var[ci] += d * d;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= b as f32;
+    }
+    (mean, var)
+}
+
+/// Softmax cross-entropy + accuracy against one-hot labels.
+/// Returns (mean CE, correct count, d loss / d logits).
+fn softmax_ce(logits: &[f32], y: &[f32], b: usize, c: usize) -> (f32, f32, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; b * c];
+    let mut ce = 0.0f64;
+    let mut correct = 0.0f32;
+    for bi in 0..b {
+        let row = &logits[bi * c..(bi + 1) * c];
+        let yrow = &y[bi * c..(bi + 1) * c];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - maxv).exp();
+        }
+        let mut best = 0usize;
+        let mut ybest = 0usize;
+        for i in 0..c {
+            let p = (row[i] - maxv).exp() / denom;
+            if yrow[i] > 0.5 {
+                ce -= (p.max(1e-12) as f64).ln();
+            }
+            dlogits[bi * c + i] = (p - yrow[i]) / b as f32;
+            if row[i] > row[best] {
+                best = i;
+            }
+            if yrow[i] > yrow[ybest] {
+                ybest = i;
+            }
+        }
+        if best == ybest {
+            correct += 1.0;
+        }
+    }
+    ((ce / b as f64) as f32, correct, dlogits)
+}
+
+/// Echo every state tensor found in `sources` (keys under the four state
+/// groups) into `out` under a `state/` prefix.
+fn echo_state(sources: &[&NamedTensors], out: &mut NamedTensors) {
+    for src in sources {
+        for (k, v) in &src.map {
+            if k.starts_with("params/")
+                || k.starts_with("opt/")
+                || k.starts_with("bn/")
+                || k.starts_with("osc/")
+            {
+                let key = format!("state/{k}");
+                if out.get(&key).is_none() {
+                    out.insert(key, v.clone());
+                }
+            }
+        }
+    }
+}
+
+/// One full training step. See the module docs for the exact pipeline.
+pub fn train_step(
+    model: &NativeModel,
+    est: Estimator,
+    sources: &[&NamedTensors],
+) -> Result<NamedTensors> {
+    let h = hyper(sources)?;
+    let y = req(sources, "batch/y")?;
+    let b = model.batch_size_of(sources)?;
+    let c = model.num_classes;
+
+    let fwd = forward(model, sources, &h, BnMode::Batch)?;
+    let (ce, correct, dlogits) = softmax_ce(&fwd.logits, &y.data, b, c);
+
+    // dampening regularizer over the low-bit weight tensors
+    let mut damp = 0.0f32;
+    if h.wq_on && h.lam > 0.0 {
+        for l in &model.layers {
+            if l.wq != "low" {
+                continue;
+            }
+            let w = req(sources, &format!("params/{}.w", l.name))?;
+            let s = scalar(sources, &format!("params/{}.s", l.name))?.max(1e-8);
+            damp += kernels::dampening_loss(&w.data, s, h.n_w, h.p_w);
+        }
+        damp *= h.lam;
+    }
+    let loss = ce + damp;
+
+    // ---------------- backward ----------------
+    // gradients keyed by bare param name ("stem.w", "b1.dw.g", ...)
+    let mut grads: NamedTensors = NamedTensors::new();
+    let mut dact = dlogits; // gradient w.r.t. the current layer's output
+
+    for (li, l) in model.layers.iter().enumerate().rev() {
+        let cache = &fwd.layers[li];
+        let d_out = l.d_out;
+        let d_in = l.d_in;
+
+        // activation backward
+        if l.relu {
+            for (dv, &o) in dact.iter_mut().zip(&cache.out) {
+                if o <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+        }
+
+        // BN backward (batch statistics)
+        let dz = if l.bn {
+            let g = req(sources, &format!("params/{}.g", l.name))?;
+            let mut dg = vec![0.0f32; d_out];
+            let mut dbeta = vec![0.0f32; d_out];
+            let mut dzv = vec![0.0f32; b * d_out];
+            for ci in 0..d_out {
+                let ivar = 1.0 / (cache.bn_var[ci] + BN_EPS).sqrt();
+                let mut sum_dxhat = 0.0f32;
+                let mut sum_dxhat_xhat = 0.0f32;
+                for bi in 0..b {
+                    let idx = bi * d_out + ci;
+                    let dxhat = dact[idx] * g.data[ci];
+                    sum_dxhat += dxhat;
+                    sum_dxhat_xhat += dxhat * cache.xhat[idx];
+                    dg[ci] += dact[idx] * cache.xhat[idx];
+                    dbeta[ci] += dact[idx];
+                }
+                // dz = ivar/B * (B*dxhat - sum(dxhat) - xhat * sum(dxhat*xhat))
+                let binv = 1.0 / b as f32;
+                for bi in 0..b {
+                    let idx = bi * d_out + ci;
+                    let dxhat = dact[idx] * g.data[ci];
+                    dzv[idx] = ivar
+                        * (dxhat - binv * sum_dxhat - cache.xhat[idx] * binv * sum_dxhat_xhat);
+                }
+            }
+            grads.insert(format!("{}.g", l.name), Tensor::new(vec![d_out], dg));
+            grads.insert(format!("{}.beta", l.name), Tensor::new(vec![d_out], dbeta));
+            dzv
+        } else {
+            dact.clone()
+        };
+
+        if l.bias {
+            let mut dbias = vec![0.0f32; d_out];
+            for bi in 0..b {
+                for ci in 0..d_out {
+                    dbias[ci] += dz[bi * d_out + ci];
+                }
+            }
+            grads.insert(format!("{}.bias", l.name), Tensor::new(vec![d_out], dbias));
+        }
+
+        // linear backward: d a_q and d w_eff
+        let mut da_q = vec![0.0f32; b * d_in];
+        let w = req(sources, &format!("params/{}.w", l.name))?;
+        let mut dw_eff = vec![0.0f32; w.len()];
+        match l.op {
+            LayerOp::Full => {
+                for bi in 0..b {
+                    let arow = &cache.a_q[bi * d_in..(bi + 1) * d_in];
+                    let dzrow = &dz[bi * d_out..(bi + 1) * d_out];
+                    let darow = &mut da_q[bi * d_in..(bi + 1) * d_in];
+                    for i in 0..d_in {
+                        let wrow = &cache.w_eff[i * d_out..(i + 1) * d_out];
+                        let dwrow = &mut dw_eff[i * d_out..(i + 1) * d_out];
+                        let a = arow[i];
+                        let mut acc = 0.0f32;
+                        for j in 0..d_out {
+                            acc += dzrow[j] * wrow[j];
+                            dwrow[j] += a * dzrow[j];
+                        }
+                        darow[i] = acc;
+                    }
+                }
+            }
+            LayerOp::Dw => {
+                for bi in 0..b {
+                    let arow = &cache.a_q[bi * d_in..(bi + 1) * d_in];
+                    let dzrow = &dz[bi * d_out..(bi + 1) * d_out];
+                    let darow = &mut da_q[bi * d_in..(bi + 1) * d_in];
+                    for ci in 0..d_out {
+                        for t in 0..3usize {
+                            let j = (ci + t + d_in - 1) % d_in;
+                            dw_eff[ci * 3 + t] += dzrow[ci] * arow[j];
+                            darow[j] += dzrow[ci] * cache.w_eff[ci * 3 + t];
+                        }
+                    }
+                }
+            }
+        }
+
+        // weight fake-quant backward (estimator) + dampening gradient
+        let mut dw = vec![0.0f32; w.len()];
+        let mut ds = 0.0f32;
+        if cache.w_quantized {
+            kernels::fake_quant_bwd(
+                est,
+                &w.data,
+                &dw_eff,
+                cache.w_scale,
+                cache.w_n,
+                cache.w_p,
+                &mut dw,
+                &mut ds,
+            );
+            if l.wq == "low" && h.lam > 0.0 {
+                kernels::dampening_bwd(&w.data, cache.w_scale, cache.w_n, cache.w_p, h.lam, &mut dw);
+            }
+            grads.insert(format!("{}.s", l.name), Tensor::scalar(ds));
+        } else {
+            dw.copy_from_slice(&dw_eff);
+        }
+        grads.insert(format!("{}.w", l.name), Tensor::new(w.shape.clone(), dw));
+
+        // input activation fake-quant backward (unsigned LSQ)
+        if cache.act_quantized {
+            let sa = cache.act_scale;
+            let p = cache.act_p;
+            let gscale = 1.0 / ((cache.a_in.len() as f32).max(1.0) * p.max(1.0)).sqrt();
+            let mut dsa = 0.0f32;
+            let mut da_in = vec![0.0f32; b * d_in];
+            for i in 0..cache.a_in.len() {
+                let r = cache.a_in[i] / sa;
+                if r < 0.0 {
+                    // clipped at zero: no gradient to a, none to the scale
+                } else if r > p {
+                    dsa += da_q[i] * p * gscale;
+                } else {
+                    dsa += da_q[i] * (round_ties_even(r) - r) * gscale;
+                    da_in[i] = da_q[i];
+                }
+            }
+            grads.insert(format!("{}.as", l.name), Tensor::scalar(dsa));
+            dact = da_in;
+        } else {
+            dact = da_q;
+        }
+    }
+
+    // ---------------- SGD + momentum ----------------
+    let mut out = NamedTensors::new();
+    echo_state(sources, &mut out);
+    for (pname, g) in &grads.map {
+        // scale parameters only learn while their quantizer is active
+        if pname.ends_with(".s") && !h.wq_on {
+            continue;
+        }
+        if pname.ends_with(".as") && !h.aq_on {
+            continue;
+        }
+        let pkey = format!("state/params/{pname}");
+        let okey = format!("state/opt/{pname}");
+        let mut param = out.expect(&pkey)?.clone();
+        let mut mom = out.expect(&okey)?.clone();
+        for i in 0..param.len() {
+            mom.data[i] = h.mu * mom.data[i] + g.data[i];
+            param.data[i] -= h.lr * mom.data[i];
+        }
+        if pname.ends_with(".s") || pname.ends_with(".as") {
+            // LSQ step sizes must stay positive
+            param.data[0] = param.data[0].max(1e-6);
+        }
+        out.insert(pkey, param);
+        out.insert(okey, mom);
+    }
+
+    // ---------------- BN running-stat EMA update ----------------
+    for (li, l) in model.layers.iter().enumerate() {
+        if !l.bn {
+            continue;
+        }
+        let cache = &fwd.layers[li];
+        let mkey = format!("state/bn/{}.bn_m", l.name);
+        let vkey = format!("state/bn/{}.bn_v", l.name);
+        let mut m = out.expect(&mkey)?.clone();
+        let mut v = out.expect(&vkey)?.clone();
+        for ci in 0..l.d_out {
+            m.data[ci] = (1.0 - h.bn_mom) * m.data[ci] + h.bn_mom * cache.bn_mean[ci];
+            v.data[ci] = (1.0 - h.bn_mom) * v.data[ci] + h.bn_mom * cache.bn_var[ci];
+        }
+        out.insert(mkey, m);
+        out.insert(vkey, v);
+    }
+
+    // ---------------- Algorithm-1 oscillation / freezing update ----------
+    let mut osc_hits = 0usize;
+    let mut frozen = 0usize;
+    let mut total = 0usize;
+    if h.wq_on {
+        for l in &model.layers {
+            if l.wq != "low" {
+                continue;
+            }
+            let wkey = format!("state/params/{}.w", l.name);
+            let mut w = out.expect(&wkey)?.clone();
+            let s = out
+                .expect(&format!("state/params/{}.s", l.name))?
+                .item()
+                .max(1e-8);
+            let read = |suffix: &str| -> Result<Vec<f32>> {
+                Ok(out
+                    .expect(&format!("state/osc/{}.w#{suffix}", l.name))?
+                    .data
+                    .clone())
+            };
+            let mut st = OscState {
+                f: read("f")?,
+                b: read("b")?,
+                fint: read("fint")?,
+                psign: read("psign")?,
+                wintp: read("wintp")?,
+                iema: read("iema")?,
+            };
+            kernels::osc_update(&mut w.data, s, h.n_w, h.p_w, &mut st, h.m_osc, h.f_th);
+            total += w.len();
+            osc_hits += st.f.iter().filter(|&&x| x > crate::osc::OSC_METRIC_TH).count();
+            frozen += st.b.iter().filter(|&&x| x > 0.5).count();
+            let shape = w.shape.clone();
+            out.insert(wkey, w);
+            for (suffix, data) in [
+                ("f", st.f),
+                ("b", st.b),
+                ("fint", st.fint),
+                ("psign", st.psign),
+                ("wintp", st.wintp),
+                ("iema", st.iema),
+            ] {
+                out.insert(
+                    format!("state/osc/{}.w#{suffix}", l.name),
+                    Tensor::new(shape.clone(), data),
+                );
+            }
+        }
+    }
+
+    // ---------------- metrics ----------------
+    let acc = correct / b as f32;
+    let denom = total.max(1) as f32;
+    let mut put = |k: &str, v: f32| out.insert(format!("metrics/{k}"), Tensor::scalar(v));
+    put("loss", loss);
+    put("ce", ce);
+    put("damp", damp);
+    put("acc", acc);
+    put("osc_frac", if total == 0 { 0.0 } else { osc_hits as f32 / denom });
+    put("frozen_frac", if total == 0 { 0.0 } else { frozen as f32 / denom });
+    Ok(out)
+}
+
+/// Inference pass over one batch: `correct` count and mean CE `loss`.
+pub fn eval_step(model: &NativeModel, sources: &[&NamedTensors]) -> Result<NamedTensors> {
+    let h = hyper(sources)?;
+    let y = req(sources, "batch/y")?;
+    let b = model.batch_size_of(sources)?;
+    let fwd = forward(model, sources, &h, BnMode::Running)?;
+    let (ce, correct, _) = softmax_ce(&fwd.logits, &y.data, b, model.num_classes);
+    let mut out = NamedTensors::new();
+    out.insert("correct", Tensor::scalar(correct));
+    out.insert("loss", Tensor::scalar(ce));
+    Ok(out)
+}
+
+/// Train-mode forward emitting per-layer batch BN statistics and per-site
+/// calibration activation magnitudes.
+pub fn bnstats_step(model: &NativeModel, sources: &[&NamedTensors]) -> Result<NamedTensors> {
+    let h = hyper(sources)?;
+    let b = model.batch_size_of(sources)?;
+    let fwd = forward(model, sources, &h, BnMode::Batch)?;
+    let mut out = NamedTensors::new();
+    for (li, l) in model.layers.iter().enumerate() {
+        let cache = &fwd.layers[li];
+        if l.bn {
+            out.insert(
+                format!("{}.bn_bm", l.name),
+                Tensor::new(vec![l.d_out], cache.bn_mean.clone()),
+            );
+            out.insert(
+                format!("{}.bn_bv", l.name),
+                Tensor::new(vec![l.d_out], cache.bn_var.clone()),
+            );
+        }
+        if l.aq {
+            let n = (b * l.d_in) as f32;
+            let absmean = cache.a_in.iter().map(|x| x.abs()).sum::<f32>() / n.max(1.0);
+            out.insert(format!("{}.absmean", l.name), Tensor::scalar(absmean));
+        }
+    }
+    Ok(out)
+}
+
+impl NativeModel {
+    /// Batch size from the incoming batch tensor (falls back to the model
+    /// default when absent).
+    fn batch_size_of(&self, sources: &[&NamedTensors]) -> Result<usize> {
+        let x = req(sources, "batch/x")?;
+        Ok(*x.shape.first().unwrap_or(&self.batch_size))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::model::zoo;
+
+    fn hyper_map(wq_on: bool) -> NamedTensors {
+        let mut hm = NamedTensors::new();
+        let mut put = |k: &str, v: f32| hm.insert(format!("hyper/{k}"), Tensor::scalar(v));
+        put("lr", 0.02);
+        put("lam", 0.0);
+        put("f_th", 1.1);
+        put("m_osc", 0.02);
+        put("bn_mom", 0.1);
+        put("mu", 0.9);
+        put("n_w", -4.0);
+        put("p_w", 3.0);
+        put("p_a", 7.0);
+        put("wq_on", if wq_on { 1.0 } else { 0.0 });
+        put("aq_on", 0.0);
+        hm
+    }
+
+    fn batch(model: &NativeModel) -> NamedTensors {
+        let ds = crate::data::Dataset::new(crate::data::DataCfg {
+            val_size: 32,
+            ..Default::default()
+        });
+        let bch = ds.train_batch(0, 0);
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", bch.x);
+        io.insert("batch/y", bch.y);
+        let _ = model;
+        io
+    }
+
+    #[test]
+    fn train_step_round_trips_state_and_reduces_loss() {
+        let models = zoo();
+        let m = &models[3]; // efflite: smallest
+        let mut state = m.initial_state();
+        let hm = hyper_map(false);
+        let n_keys = state.len();
+        let mut losses = vec![];
+        for i in 0..12 {
+            let ds = crate::data::Dataset::new(Default::default());
+            let bch = ds.train_batch(0, i);
+            let mut io = NamedTensors::new();
+            io.insert("batch/x", bch.x);
+            io.insert("batch/y", bch.y);
+            let out = train_step(m, Estimator::Lsq, &[&state, &io, &hm]).unwrap();
+            let mut next = NamedTensors::new();
+            for (k, v) in out.map {
+                if let Some(rest) = k.strip_prefix("state/") {
+                    next.insert(rest.to_string(), v);
+                } else if k == "metrics/loss" {
+                    losses.push(v.item());
+                }
+            }
+            state = next;
+            assert_eq!(state.len(), n_keys, "state keys must round-trip");
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        let first: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+        let last: f32 = losses[losses.len() - 3..].iter().sum::<f32>() / 3.0;
+        assert!(last < first, "loss should drop: {losses:?}");
+    }
+
+    #[test]
+    fn eval_step_reports_sane_metrics() {
+        let models = zoo();
+        let m = &models[3];
+        let state = m.initial_state();
+        let io = batch(m);
+        let out = eval_step(m, &[&state, &io, &hyper_map(false)]).unwrap();
+        let correct = out.expect("correct").unwrap().item();
+        let loss = out.expect("loss").unwrap().item();
+        assert!((0.0..=16.0).contains(&correct));
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn bnstats_step_emits_stats_and_absmeans() {
+        let models = zoo();
+        let m = &models[0]; // mbv2
+        let state = m.initial_state();
+        let io = batch(m);
+        let out = bnstats_step(m, &[&state, &io, &hyper_map(false)]).unwrap();
+        assert!(out.get("stem.bn_bm").is_some());
+        assert!(out.get("stem.bn_bv").is_some());
+        assert!(out.get("b1.dw.absmean").is_some());
+        assert!(out.get("head.absmean").is_some());
+        let am = out.get("b1.dw.absmean").unwrap().item();
+        assert!(am > 0.0 && am.is_finite());
+    }
+}

@@ -1,0 +1,360 @@
+//! Pure-Rust QAT hot-path kernels, numerically mirroring
+//! `python/compile/kernels/ref.py` (the jnp oracles the Pallas kernels are
+//! tested against). Same rounding mode everywhere: round-half-to-even,
+//! like XLA's `round-nearest-even`.
+//!
+//! Clipping uses `max(n).min(p)` rather than `f32::clamp` so a degenerate
+//! grid (n > p, possible with synthetic bench inputs) degrades instead of
+//! panicking.
+
+use crate::tensor::round_ties_even;
+
+/// `sign` with jnp semantics: sign(0) = 0 (Rust's `signum(0.0)` is 1!).
+#[inline]
+pub fn sign0(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[inline]
+fn clip(x: f32, n: f32, p: f32) -> f32 {
+    x.max(n).min(p)
+}
+
+/// LSQ-style fake quantization: `s * clip(round(w/s), n, p)`
+/// (ref.fake_quant_ref).
+pub fn fake_quant(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
+    w.iter().map(|&x| s * clip(round_ties_even(x / s), n, p)).collect()
+}
+
+/// Integer (grid-index) representation: `clip(round(w/s), n, p)`
+/// (ref.int_weights_ref).
+pub fn int_weights(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
+    w.iter().map(|&x| clip(round_ties_even(x / s), n, p)).collect()
+}
+
+/// Matmul with the RHS fake-quantized: `x @ fq(w)` (ref.quant_matmul_ref).
+/// `x` is `[m, k]` row-major, `w` is `[k, n]` row-major.
+pub fn quant_matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, s: f32, gn: f32, gp: f32) -> Vec<f32> {
+    let wq = fake_quant(w, s, gn, gp);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let a = x[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let row = &wq[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += a * row[j];
+            }
+        }
+    }
+    out
+}
+
+/// Oscillation-dampening regularizer (eq. 5), per-tensor sum:
+/// `|| fq(w) - clip(w, s*n, s*p) ||_F^2` (ref.dampening_loss_ref).
+pub fn dampening_loss(w: &[f32], s: f32, n: f32, p: f32) -> f32 {
+    let mut acc = 0.0f64;
+    for &x in w {
+        let wq = s * clip(round_ties_even(x / s), n, p);
+        let wc = clip(x, s * n, s * p);
+        acc += ((wq - wc) as f64) * ((wq - wc) as f64);
+    }
+    acc as f32
+}
+
+/// Algorithm-1 oscillation state for one weight tensor (all arrays share
+/// the tensor's length; masks/ints are stored as floats, matching the
+/// single-dtype HLO graphs).
+#[derive(Debug, Clone)]
+pub struct OscState {
+    /// oscillation-frequency EMA (eq. 4)
+    pub f: Vec<f32>,
+    /// frozen mask in {0, 1}
+    pub b: Vec<f32>,
+    /// integer value a frozen weight is pinned to
+    pub fint: Vec<f32>,
+    /// sign of the previous integer transition, in {-1, 0, +1}
+    pub psign: Vec<f32>,
+    /// previous step's integer weights
+    pub wintp: Vec<f32>,
+    /// EMA of the integer weights (alg. 1 line 15)
+    pub iema: Vec<f32>,
+}
+
+/// One step of the Algorithm-1 state machine (ref.osc_update_ref), applied
+/// to `w` (the latent weights *after* this step's SGD update) in place.
+/// Returns the per-weight oscillation indicator o^t for this step.
+pub fn osc_update(
+    w: &mut [f32],
+    s: f32,
+    n: f32,
+    p: f32,
+    st: &mut OscState,
+    m: f32,
+    f_th: f32,
+) -> Vec<f32> {
+    let len = w.len();
+    debug_assert!(
+        st.f.len() == len
+            && st.b.len() == len
+            && st.fint.len() == len
+            && st.psign.len() == len
+            && st.wintp.len() == len
+            && st.iema.len() == len
+    );
+    let mut osc_out = vec![0.0f32; len];
+    for i in 0..len {
+        // Frozen weights ignore the SGD proposal and stay pinned (in the
+        // *integer* domain, so a moving scale s cannot re-round them).
+        let w_eff = if st.b[i] > 0.5 { s * st.fint[i] } else { w[i] };
+        let wint = clip(round_ties_even(w_eff / s), n, p);
+
+        let delta = wint - st.wintp[i];
+        let changed = delta != 0.0;
+        let sign = sign0(delta);
+        // An oscillation: integer value changed AND direction flipped vs
+        // the previous change (psign == 0 means "no previous change yet").
+        let osc = if changed && sign != st.psign[i] && st.psign[i] != 0.0 {
+            1.0
+        } else {
+            0.0
+        };
+
+        let f_new = m * osc + (1.0 - m) * st.f[i];
+        let iema_new = m * wint + (1.0 - m) * st.iema[i];
+
+        let newly = f_new > f_th && st.b[i] < 0.5;
+        let b_new = if newly { 1.0 } else { st.b[i] };
+        let fint_new = if newly {
+            clip(round_ties_even(iema_new), n, p)
+        } else {
+            st.fint[i]
+        };
+
+        let w_out = if b_new > 0.5 { s * fint_new } else { w_eff };
+        let wint_out = clip(round_ties_even(w_out / s), n, p);
+        let psign_out = if changed { sign } else { st.psign[i] };
+
+        w[i] = w_out;
+        st.f[i] = f_new;
+        st.b[i] = b_new;
+        st.fint[i] = fint_new;
+        st.psign[i] = psign_out;
+        st.wintp[i] = wint_out;
+        st.iema[i] = iema_new;
+        osc_out[i] = osc;
+    }
+    osc_out
+}
+
+/// Gradient estimator through the weight fake-quantizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Estimator {
+    /// STE with clip gating + learned step size (LSQ)
+    Lsq,
+    /// element-wise gradient scaling (multiplicative)
+    Ewgs,
+    /// differentiable soft quantization (multiplicative)
+    Dsq,
+    /// position-based scaled gradient (multiplicative)
+    Psg,
+    /// PACT (clipping-centric; STE on the weight path)
+    Pact,
+}
+
+impl Estimator {
+    pub fn parse(name: &str) -> Option<Estimator> {
+        Some(match name {
+            "lsq" => Estimator::Lsq,
+            "ewgs" => Estimator::Ewgs,
+            "dsq" => Estimator::Dsq,
+            "psg" => Estimator::Psg,
+            "pact" => Estimator::Pact,
+            _ => return None,
+        })
+    }
+}
+
+/// Backward through the weight fake-quantizer: maps the gradient w.r.t.
+/// the quantized weight (`g`) to the latent-weight gradient, per the
+/// chosen estimator, and accumulates the LSQ step-size gradient into
+/// `ds`. `w` is the latent weight, `s` the step size.
+///
+/// Every estimator gates the gradient to zero outside the clip range (the
+/// LSQ rule); the multiplicative variants additionally modulate it by the
+/// distance `t = w/s - round(w/s)` from the grid point.
+#[allow(clippy::too_many_arguments)]
+pub fn fake_quant_bwd(
+    est: Estimator,
+    w: &[f32],
+    g: &[f32],
+    s: f32,
+    n: f32,
+    p: f32,
+    dw: &mut [f32],
+    ds: &mut f32,
+) {
+    let gscale = 1.0 / ((w.len() as f32).max(1.0) * p.abs().max(1.0)).sqrt();
+    for i in 0..w.len() {
+        let r = w[i] / s;
+        let inside = r >= n && r <= p;
+        // LSQ step-size gradient (identical grid term for all estimators)
+        let s_term = if r < n {
+            n
+        } else if r > p {
+            p
+        } else {
+            round_ties_even(r) - r
+        };
+        *ds += g[i] * s_term * gscale;
+        if !inside {
+            continue;
+        }
+        let t = r - round_ties_even(r);
+        let factor = match est {
+            Estimator::Lsq | Estimator::Pact => 1.0,
+            Estimator::Ewgs => 1.0 + 0.2 * sign0(g[i]) * t,
+            Estimator::Psg => t.abs() + 0.01,
+            Estimator::Dsq => {
+                let k = 5.0f32;
+                let u = t.abs() - 0.5;
+                k * (1.0 - (k * u).tanh().powi(2)) / (2.0 * (k / 2.0).tanh())
+            }
+        };
+        dw[i] += g[i] * factor;
+    }
+}
+
+/// Gradient of the dampening regularizer (eq. 5) w.r.t. the latent weight:
+/// `d/dw || fq(w) - clip(w, s*n, s*p) ||^2 = 2 (clip(w) - fq(w))` inside
+/// the clip range (stop-gradient through fq), 0 outside. Accumulates
+/// `lam * grad` into `dw`.
+pub fn dampening_bwd(w: &[f32], s: f32, n: f32, p: f32, lam: f32, dw: &mut [f32]) {
+    for i in 0..w.len() {
+        let x = w[i];
+        if x >= s * n && x <= s * p {
+            let wq = s * clip(round_ties_even(x / s), n, p);
+            dw[i] += lam * 2.0 * (x - wq);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_quant_matches_host_mirror() {
+        let w = vec![0.12, -0.37, 0.05, 2.0, -2.0];
+        assert_eq!(fake_quant(&w, 0.1, -4.0, 3.0), crate::quant::fake_quant(&w, 0.1, -4.0, 3.0));
+        assert_eq!(int_weights(&w, 0.1, -4.0, 3.0), crate::quant::int_weights(&w, 0.1, -4.0, 3.0));
+    }
+
+    #[test]
+    fn sign0_matches_jnp() {
+        assert_eq!(sign0(2.5), 1.0);
+        assert_eq!(sign0(-0.1), -1.0);
+        assert_eq!(sign0(0.0), 0.0);
+    }
+
+    #[test]
+    fn quant_matmul_small() {
+        // x = [[1, 2]], w = [[0.1], [0.22]] with s=0.1 -> fq(w) = [0.1, 0.2]
+        let out = quant_matmul(&[1.0, 2.0], &[0.1, 0.22], 1, 2, 1, 0.1, -4.0, 3.0);
+        assert!((out[0] - 0.5).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn osc_update_flags_direction_flip() {
+        // latent weight crosses down after a previous up-transition
+        let mut w = vec![0.04]; // rounds to integer 0 with s = 0.1
+        let mut st = OscState {
+            f: vec![0.0],
+            b: vec![0.0],
+            fint: vec![0.0],
+            psign: vec![1.0], // previous transition was upward
+            wintp: vec![1.0], // was at integer 1
+            iema: vec![1.0],
+        };
+        let osc = osc_update(&mut w, 0.1, -4.0, 3.0, &mut st, 0.5, 1.1);
+        assert_eq!(osc[0], 1.0, "down-after-up must count as oscillation");
+        assert_eq!(st.psign[0], -1.0);
+        assert_eq!(st.wintp[0], 0.0);
+        assert!((st.f[0] - 0.5).abs() < 1e-6, "EMA: 0.5*1 + 0.5*0");
+        // f_th = 1.1 disables freezing
+        assert_eq!(st.b[0], 0.0);
+        // a repeat of the same state with no change is not an oscillation
+        let osc2 = osc_update(&mut w, 0.1, -4.0, 3.0, &mut st, 0.5, 1.1);
+        assert_eq!(osc2[0], 0.0);
+    }
+
+    #[test]
+    fn freezing_pins_to_integer_grid() {
+        let s = 0.1;
+        let mut w = vec![0.26];
+        let mut st = OscState {
+            f: vec![0.5], // already above any threshold after EMA
+            b: vec![0.0],
+            fint: vec![0.0],
+            psign: vec![1.0],
+            wintp: vec![2.0],
+            iema: vec![2.6],
+        };
+        let osc = osc_update(&mut w, s, -4.0, 3.0, &mut st, 0.1, 0.05);
+        assert_eq!(st.b[0], 1.0, "should freeze");
+        // pinned to round(iema) on the grid
+        assert!((w[0] - s * st.fint[0]).abs() < 1e-7);
+        assert!(osc[0] == 0.0 || osc[0] == 1.0);
+    }
+
+    #[test]
+    fn frozen_weight_ignores_sgd_proposal() {
+        let s = 0.1;
+        let mut st = OscState {
+            f: vec![0.9],
+            b: vec![1.0],
+            fint: vec![3.0],
+            psign: vec![0.0],
+            wintp: vec![3.0],
+            iema: vec![3.0],
+        };
+        for proposal in [-5.0f32, 0.0, 0.123, 7.0] {
+            let mut w = vec![proposal];
+            osc_update(&mut w, s, -4.0, 3.0, &mut st, 0.02, 0.01);
+            assert!((w[0] - 0.3).abs() < 1e-7, "frozen weight moved to {}", w[0]);
+        }
+    }
+
+    #[test]
+    fn dampening_zero_on_grid() {
+        let w = vec![0.1, -0.2, 0.3];
+        assert!(dampening_loss(&w, 0.1, -4.0, 3.0) < 1e-12);
+        let mut dw = vec![0.0; 3];
+        dampening_bwd(&w, 0.1, -4.0, 3.0, 1.0, &mut dw);
+        for d in dw {
+            assert!(d.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lsq_bwd_gates_outside_grid() {
+        let w = vec![0.05, 10.0, -10.0];
+        let g = vec![1.0, 1.0, 1.0];
+        let mut dw = vec![0.0; 3];
+        let mut ds = 0.0;
+        fake_quant_bwd(Estimator::Lsq, &w, &g, 0.1, -4.0, 3.0, &mut dw, &mut ds);
+        assert_eq!(dw[0], 1.0);
+        assert_eq!(dw[1], 0.0);
+        assert_eq!(dw[2], 0.0);
+        assert!(ds != 0.0);
+    }
+}

@@ -1,0 +1,343 @@
+//! The native execution backend: a pure-Rust interpreter for the QAT
+//! pipeline, behind the same [`Backend`](crate::runtime::Backend) trait as
+//! the PJRT artifact replayer.
+//!
+//! No artifacts, no Python, no XLA: model states are generated
+//! procedurally ([`model`]), and the train/eval/bnstats "artifacts" are
+//! interpreted step functions ([`interp`]) built on the hot-path kernels
+//! ([`kernels`]) that numerically mirror `python/compile/kernels/ref.py`.
+//! This is what `cargo test` and CI run on a fresh checkout.
+//!
+//! Artifact naming: `native.<model>.<role>` (e.g. `native.mbv2.train_lsq`)
+//! and `native.kernel.<name>` for the standalone kernel benches. The
+//! `*_ref` kernel twins resolve to the same implementation — the native
+//! interpreter *is* the reference.
+
+pub mod interp;
+pub mod kernels;
+pub mod model;
+
+pub use kernels::Estimator;
+
+use crate::runtime::{ArtifactIndex, Backend, Signature, TensorSpec};
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// The artifact-free backend over the native model zoo.
+pub struct NativeBackend {
+    index: ArtifactIndex,
+    models: BTreeMap<String, model::NativeModel>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        let mut models = BTreeMap::new();
+        let mut infos = BTreeMap::new();
+        for m in model::zoo() {
+            infos.insert(m.name.clone(), m.info());
+            models.insert(m.name.clone(), m);
+        }
+        let kernels = [
+            ("kernel_fakequant", "native.kernel.fakequant"),
+            ("kernel_fakequant_ref", "native.kernel.fakequant_ref"),
+            ("kernel_osc", "native.kernel.osc"),
+            ("kernel_osc_ref", "native.kernel.osc_ref"),
+            ("kernel_qmm", "native.kernel.qmm"),
+            ("kernel_qmm_ref", "native.kernel.qmm_ref"),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+        NativeBackend {
+            index: ArtifactIndex { dir: PathBuf::new(), models: infos, kernels },
+            models,
+        }
+    }
+
+    fn model(&self, name: &str) -> Result<&model::NativeModel> {
+        self.models
+            .get(name)
+            .with_context(|| format!("native backend has no model {name:?}"))
+    }
+
+    /// Run a standalone kernel "artifact" (the bench/golden entry points).
+    fn run_kernel(&self, kernel: &str, sources: &[&NamedTensors]) -> Result<NamedTensors> {
+        let get = |name: &str| -> Result<Tensor> {
+            crate::runtime::resolve(sources, name)
+                .with_context(|| format!("kernel {kernel}: missing input {name:?}"))
+        };
+        let scalar = |name: &str| -> Result<f32> { Ok(get(name)?.item()) };
+        let mut out = NamedTensors::new();
+        match kernel {
+            "fakequant" | "fakequant_ref" => {
+                let w = get("w")?;
+                let q = kernels::fake_quant(&w.data, scalar("s")?, scalar("n")?, scalar("p")?);
+                out.insert("out", Tensor::new(w.shape.clone(), q));
+            }
+            "qmm" | "qmm_ref" => {
+                let x = get("x")?;
+                let w = get("w")?;
+                let (m, k) = (x.shape[0], x.shape[1]);
+                let n = w.shape[1];
+                anyhow::ensure!(w.shape[0] == k, "qmm: inner dims {} vs {}", w.shape[0], k);
+                let z = kernels::quant_matmul(
+                    &x.data,
+                    &w.data,
+                    m,
+                    k,
+                    n,
+                    scalar("s")?,
+                    scalar("n")?,
+                    scalar("p")?,
+                );
+                out.insert("out", Tensor::new(vec![m, n], z));
+            }
+            "osc" | "osc_ref" => {
+                let mut w = get("w")?;
+                let mut st = kernels::OscState {
+                    f: get("f")?.data,
+                    b: get("b")?.data,
+                    fint: get("fint")?.data,
+                    psign: get("psign")?.data,
+                    wintp: get("wintp")?.data,
+                    iema: get("iema")?.data,
+                };
+                let osc = kernels::osc_update(
+                    &mut w.data,
+                    scalar("s")?,
+                    scalar("n")?,
+                    scalar("p")?,
+                    &mut st,
+                    scalar("m")?,
+                    scalar("f_th")?,
+                );
+                let shape = w.shape.clone();
+                out.insert("w_out", w);
+                for (name, data) in [
+                    ("f_out", st.f),
+                    ("b_out", st.b),
+                    ("fint_out", st.fint),
+                    ("psign_out", st.psign),
+                    ("wint_out", st.wintp),
+                    ("iema_out", st.iema),
+                    ("osc", osc),
+                ] {
+                    out.insert(name, Tensor::new(shape.clone(), data));
+                }
+            }
+            other => bail!("unknown native kernel {other:?}"),
+        }
+        Ok(out)
+    }
+
+    fn kernel_signature(kernel: &str) -> Result<Signature> {
+        let spec = |name: &str, shape: Vec<usize>| TensorSpec { name: name.into(), shape };
+        let arr = |name: &str| spec(name, vec![64, 64]);
+        let sc = |name: &str| spec(name, vec![]);
+        Ok(match kernel {
+            "fakequant" | "fakequant_ref" => Signature {
+                inputs: vec![arr("w"), sc("s"), sc("n"), sc("p")],
+                outputs: vec![arr("out")],
+            },
+            "qmm" | "qmm_ref" => Signature {
+                inputs: vec![
+                    spec("x", vec![32, 64]),
+                    spec("w", vec![64, 48]),
+                    sc("s"),
+                    sc("n"),
+                    sc("p"),
+                ],
+                outputs: vec![spec("out", vec![32, 48])],
+            },
+            "osc" | "osc_ref" => Signature {
+                inputs: vec![
+                    arr("w"),
+                    sc("s"),
+                    sc("n"),
+                    sc("p"),
+                    arr("f"),
+                    arr("b"),
+                    arr("fint"),
+                    arr("psign"),
+                    arr("wintp"),
+                    arr("iema"),
+                    sc("m"),
+                    sc("f_th"),
+                ],
+                outputs: vec![
+                    arr("w_out"),
+                    arr("f_out"),
+                    arr("b_out"),
+                    arr("fint_out"),
+                    arr("psign_out"),
+                    arr("wint_out"),
+                    arr("iema_out"),
+                    arr("osc"),
+                ],
+            },
+            other => bail!("unknown native kernel {other:?}"),
+        })
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn index(&self) -> &ArtifactIndex {
+        &self.index
+    }
+
+    fn initial_state(&self, model: &str) -> Result<NamedTensors> {
+        Ok(self.model(model)?.initial_state())
+    }
+
+    fn signature(&self, artifact: &str) -> Result<Signature> {
+        let rest = artifact
+            .strip_prefix("native.")
+            .with_context(|| format!("not a native artifact: {artifact:?}"))?;
+        if let Some(kernel) = rest.strip_prefix("kernel.") {
+            return Self::kernel_signature(kernel);
+        }
+        let (model_name, role) = rest
+            .split_once('.')
+            .with_context(|| format!("bad native artifact name {artifact:?}"))?;
+        let m = self.model(model_name)?;
+        let state = m.initial_state();
+        // Eval/bnstats only bind the forward-pass state; train binds all.
+        let state_input = |k: &str| {
+            role.starts_with("train_") || k.starts_with("params/") || k.starts_with("bn/")
+        };
+        let mut inputs: Vec<TensorSpec> = state
+            .map
+            .iter()
+            .filter(|(k, _)| state_input(k))
+            .map(|(k, t)| TensorSpec { name: format!("state/{k}"), shape: t.shape.clone() })
+            .collect();
+        inputs.push(TensorSpec {
+            name: "batch/x".into(),
+            shape: vec![m.batch_size, m.input_hw, m.input_hw, 3],
+        });
+        inputs.push(TensorSpec { name: "batch/y".into(), shape: vec![m.batch_size, m.num_classes] });
+        for k in crate::runtime::HYPER_KEYS {
+            inputs.push(TensorSpec { name: format!("hyper/{k}"), shape: vec![] });
+        }
+        let scalar = |name: &str| TensorSpec { name: name.into(), shape: vec![] };
+        let outputs: Vec<TensorSpec> = match role {
+            "eval" => vec![scalar("correct"), scalar("loss")],
+            "bnstats" => {
+                let mut outs = Vec::new();
+                for l in &m.layers {
+                    if l.bn {
+                        outs.push(TensorSpec {
+                            name: format!("{}.bn_bm", l.name),
+                            shape: vec![l.d_out],
+                        });
+                        outs.push(TensorSpec {
+                            name: format!("{}.bn_bv", l.name),
+                            shape: vec![l.d_out],
+                        });
+                    }
+                    if l.aq {
+                        outs.push(scalar(&format!("{}.absmean", l.name)));
+                    }
+                }
+                outs
+            }
+            _ => {
+                let mut outs: Vec<TensorSpec> = state
+                    .map
+                    .iter()
+                    .map(|(k, t)| TensorSpec {
+                        name: format!("state/{k}"),
+                        shape: t.shape.clone(),
+                    })
+                    .collect();
+                for k in ["loss", "ce", "damp", "acc", "osc_frac", "frozen_frac"] {
+                    outs.push(scalar(&format!("metrics/{k}")));
+                }
+                outs
+            }
+        };
+        Ok(Signature { inputs, outputs })
+    }
+
+    fn execute(&self, artifact: &str, sources: &[&NamedTensors]) -> Result<NamedTensors> {
+        let rest = artifact
+            .strip_prefix("native.")
+            .with_context(|| format!("not a native artifact: {artifact:?}"))?;
+        if let Some(kernel) = rest.strip_prefix("kernel.") {
+            return self.run_kernel(kernel, sources);
+        }
+        let (model_name, role) = rest
+            .split_once('.')
+            .with_context(|| format!("bad native artifact name {artifact:?}"))?;
+        let m = self.model(model_name)?;
+        match role {
+            "eval" => interp::eval_step(m, sources),
+            "bnstats" => interp::bnstats_step(m, sources),
+            _ => {
+                let est_name = role
+                    .strip_prefix("train_")
+                    .with_context(|| format!("unknown native role {role:?}"))?;
+                let est = Estimator::parse(est_name)
+                    .with_context(|| format!("unknown estimator {est_name:?}"))?;
+                interp::train_step(m, est, sources)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_artifacts_execute_and_ref_twins_agree() {
+        let be = NativeBackend::new();
+        for key in ["kernel_fakequant", "kernel_osc", "kernel_qmm"] {
+            let name = be.index.kernels[key].clone();
+            let ref_name = be.index.kernels[&format!("{key}_ref")].clone();
+            let sig = be.signature(&name).unwrap();
+            let mut io = NamedTensors::new();
+            for spec in &sig.inputs {
+                let n = spec.num_elements().max(1);
+                // scalars (s/m/f_th...) land on 0.11; arrays get a sweep
+                let data: Vec<f32> =
+                    (0..n).map(|i| if n == 1 { 0.11 } else { ((i % 31) as f32 - 15.0) * 0.013 }).collect();
+                io.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+            }
+            // grids need n < p to be meaningful
+            io.insert("n", Tensor::scalar(-4.0));
+            io.insert("p", Tensor::scalar(3.0));
+            let a = be.execute(&name, &[&io]).unwrap();
+            let b = be.execute(&ref_name, &[&io]).unwrap();
+            assert!(!a.is_empty());
+            for (k, va) in &a.map {
+                let vb = b.get(k).unwrap();
+                assert_eq!(va.data, vb.data, "{key}/{k} mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn train_artifact_names_resolve() {
+        let be = NativeBackend::new();
+        let info = be.index().model("mbv2").unwrap();
+        let name = &info.artifacts["train_lsq"];
+        assert_eq!(name, "native.mbv2.train_lsq");
+        assert!(be.signature(name).unwrap().inputs.iter().any(|s| s.name == "batch/x"));
+        assert!(be.execute("native.mbv2.nope", &[]).is_err());
+        assert!(be.execute("mbv2_lsq_train", &[]).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! The native model zoo: compact separable networks over the synthetic
+//! 16x16x3 corpus, mirroring the structural traits the paper's phenomena
+//! need — low-bit interior layers with **few weights per output channel**
+//! (depthwise-style 3-tap channel convolutions), 8-bit first/last layers,
+//! batch norm after every hidden linear op.
+//!
+//! Layer inventory per model (names follow `python/compile/arch.py` style):
+//! * `stem`   — full matmul `768 -> C`, BN + ReLU, 8-bit weights
+//! * `b{i}.dw` — depthwise circular 3-tap channel conv (`[C, 3]` weights,
+//!   3 weights per channel — the oscillation hot spot), BN + ReLU, low-bit
+//! * `b{i}.pw` — pointwise matmul `C -> C`, BN + ReLU, low-bit
+//! * `l{i}.a/.b` — plain full matmuls (the ResNet-style no-depthwise zoo
+//!   member), BN + ReLU, low-bit
+//! * `head`   — full matmul `C -> 10` with bias, 8-bit weights
+//!
+//! State layout (same `group/tensor` naming as the PJRT artifacts):
+//! `params/{layer}.w|.s|.as|.g|.beta|.bias`, `bn/{layer}.bn_m|.bn_v`,
+//! `opt/<params key>` momenta and `osc/{w}#f|#b|#fint|#psign|#wintp|#iema`
+//! Algorithm-1 state for every low-bit weight tensor.
+
+use crate::rng::Pcg32;
+use crate::runtime::manifest::{LayerInfo, ModelInfo};
+use crate::state::NamedTensors;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// How a layer mixes its input activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerOp {
+    /// dense matmul `[d_in, d_out]`
+    Full,
+    /// circular depthwise 3-tap channel conv, weights `[C, 3]`
+    Dw,
+}
+
+/// One native layer specification.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub op: LayerOp,
+    /// kind tag used by the analysis tables: "full" | "dw" | "pw"
+    pub kind: &'static str,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub bn: bool,
+    pub relu: bool,
+    /// weight-quantizer grid class: "8bit" (first/last) or "low"
+    pub wq: &'static str,
+    /// whether this layer's input activations are quantized (LSQ, unsigned)
+    pub aq: bool,
+    pub bias: bool,
+}
+
+impl LayerSpec {
+    /// Weight-tensor shape.
+    pub fn w_shape(&self) -> Vec<usize> {
+        match self.op {
+            LayerOp::Full => vec![self.d_in, self.d_out],
+            LayerOp::Dw => vec![self.d_out, 3],
+        }
+    }
+}
+
+/// A native model: ordered layers over the synthetic corpus.
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub name: String,
+    pub batch_size: usize,
+    pub num_classes: usize,
+    pub input_hw: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+fn full(name: &str, kind: &'static str, d_in: usize, d_out: usize, wq: &'static str, aq: bool) -> LayerSpec {
+    LayerSpec {
+        name: name.into(),
+        op: LayerOp::Full,
+        kind,
+        d_in,
+        d_out,
+        bn: true,
+        relu: true,
+        wq,
+        aq,
+        bias: false,
+    }
+}
+
+/// Build one zoo member. `dw = true` gives MobileNet-style dw/pw blocks,
+/// `false` gives plain full-layer blocks (the ResNet stand-in).
+fn separable(name: &str, width: usize, blocks: usize, dw: bool) -> NativeModel {
+    let d_in0 = 16 * 16 * 3;
+    let mut layers = vec![full("stem", "full", d_in0, width, "8bit", false)];
+    for b in 1..=blocks {
+        if dw {
+            layers.push(LayerSpec {
+                name: format!("b{b}.dw"),
+                op: LayerOp::Dw,
+                kind: "dw",
+                d_in: width,
+                d_out: width,
+                bn: true,
+                relu: true,
+                wq: "low",
+                aq: true,
+                bias: false,
+            });
+            layers.push(full(&format!("b{b}.pw"), "pw", width, width, "low", true));
+        } else {
+            layers.push(full(&format!("l{b}.a"), "full", width, width, "low", true));
+            layers.push(full(&format!("l{b}.b"), "full", width, width, "low", true));
+        }
+    }
+    let mut head = full("head", "full", width, 10, "8bit", true);
+    head.bn = false;
+    head.relu = false;
+    head.bias = true;
+    layers.push(head);
+    NativeModel {
+        name: name.into(),
+        batch_size: 16,
+        num_classes: 10,
+        input_hw: 16,
+        layers,
+    }
+}
+
+/// The four models the experiment drivers reference.
+pub fn zoo() -> Vec<NativeModel> {
+    vec![
+        separable("mbv2", 48, 3, true),
+        separable("resnet18", 64, 2, false),
+        separable("mbv3", 40, 2, true),
+        separable("efflite", 32, 2, true),
+    ]
+}
+
+/// Per-model deterministic seed for weight init.
+fn seed_of(name: &str) -> u64 {
+    name.bytes().fold(0x9e3779b97f4a7c15u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+impl NativeModel {
+    /// Names of weight tensors on the runtime low-bit grid.
+    pub fn lowbit(&self) -> Vec<String> {
+        self.layers
+            .iter()
+            .filter(|l| l.wq == "low")
+            .map(|l| format!("{}.w", l.name))
+            .collect()
+    }
+
+    /// Deterministic initial training state (pure function of the model).
+    pub fn initial_state(&self) -> NamedTensors {
+        let mut rng = Pcg32::new(seed_of(&self.name), 0xa11ce);
+        let mut s = NamedTensors::new();
+        for l in &self.layers {
+            let shape = l.w_shape();
+            let data: Vec<f32> = match l.op {
+                LayerOp::Full => {
+                    let lim = (6.0 / (l.d_in + l.d_out) as f32).sqrt();
+                    (0..l.d_in * l.d_out).map(|_| rng.uniform(-lim, lim)).collect()
+                }
+                LayerOp::Dw => {
+                    // near-identity: strong center tap, noisy side taps, so
+                    // signal flows at init and weights spread across bins
+                    let mut v = Vec::with_capacity(l.d_out * 3);
+                    for _ in 0..l.d_out {
+                        v.push(rng.uniform(-0.35, 0.35));
+                        v.push(rng.uniform(0.6, 1.4));
+                        v.push(rng.uniform(-0.35, 0.35));
+                    }
+                    v
+                }
+            };
+            let w = Tensor::new(shape.clone(), data);
+            // absmax-style init; prepare_qat replaces this with the MSE
+            // grid-searched scale before any QAT run
+            s.insert(format!("params/{}.s", l.name), Tensor::scalar(w.abs_max().max(1e-4) / 7.0));
+            s.insert(format!("params/{}.w", l.name), w);
+            if l.aq {
+                s.insert(format!("params/{}.as", l.name), Tensor::scalar(1.0));
+            }
+            if l.bias {
+                s.insert(format!("params/{}.bias", l.name), Tensor::zeros(&[l.d_out]));
+            }
+            if l.bn {
+                s.insert(format!("params/{}.g", l.name), Tensor::filled(&[l.d_out], 1.0));
+                s.insert(format!("params/{}.beta", l.name), Tensor::zeros(&[l.d_out]));
+                s.insert(format!("bn/{}.bn_m", l.name), Tensor::zeros(&[l.d_out]));
+                s.insert(format!("bn/{}.bn_v", l.name), Tensor::filled(&[l.d_out], 1.0));
+            }
+            if l.wq == "low" {
+                for suffix in ["f", "b", "fint", "psign", "wintp", "iema"] {
+                    s.insert(format!("osc/{}.w#{suffix}", l.name), Tensor::zeros(&shape));
+                }
+            }
+        }
+        // SGD momentum buffer per parameter tensor
+        let params: Vec<(String, Vec<usize>)> = s
+            .names_under("params/")
+            .map(String::from)
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|k| {
+                let shape = s.get(&k).unwrap().shape.clone();
+                (k, shape)
+            })
+            .collect();
+        for (k, shape) in params {
+            let rest = k.strip_prefix("params/").unwrap();
+            s.insert(format!("opt/{rest}"), Tensor::zeros(&shape));
+        }
+        s
+    }
+
+    /// The [`ModelInfo`] row this model exposes through the artifact index.
+    pub fn info(&self) -> ModelInfo {
+        let mut layers = BTreeMap::new();
+        for l in &self.layers {
+            layers.insert(
+                l.name.clone(),
+                LayerInfo {
+                    kind: l.kind.to_string(),
+                    weight: format!("{}.w", l.name),
+                    bn: l.bn,
+                    cout: l.d_out,
+                    wq: l.wq.to_string(),
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for role in ["train_lsq", "train_ewgs", "train_dsq", "train_psg", "train_pact", "eval", "bnstats"] {
+            artifacts.insert(role.to_string(), format!("native.{}.{role}", self.name));
+        }
+        let param_count = self
+            .initial_state()
+            .map
+            .iter()
+            .filter(|(k, _)| k.starts_with("params/"))
+            .map(|(_, t)| t.len())
+            .sum();
+        ModelInfo {
+            name: self.name.clone(),
+            batch_size: self.batch_size,
+            num_classes: self.num_classes,
+            input_hw: self.input_hw,
+            param_count,
+            params_bin: String::new(),
+            lowbit: self.lowbit(),
+            layers,
+            artifacts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_models_are_well_formed() {
+        for m in zoo() {
+            assert_eq!(m.layers.first().unwrap().name, "stem");
+            assert_eq!(m.layers.last().unwrap().name, "head");
+            assert!(!m.lowbit().is_empty(), "{} has no low-bit weights", m.name);
+            let info = m.info();
+            assert!(info.param_count > 10_000, "{} too small", m.name);
+            assert!(info.artifacts.contains_key("train_lsq"));
+            assert!(info.artifacts.contains_key("eval"));
+            assert!(info.artifacts.contains_key("bnstats"));
+            if m.name == "resnet18" {
+                assert!(info.depthwise().is_empty());
+            } else {
+                assert!(!info.depthwise().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn initial_state_is_deterministic_and_complete() {
+        let models = zoo();
+        let m = &models[0];
+        let a = m.initial_state();
+        let b = m.initial_state();
+        assert_eq!(a.map, b.map);
+        for l in &m.layers {
+            assert!(a.get(&format!("params/{}.w", l.name)).is_some());
+            assert!(a.get(&format!("opt/{}.w", l.name)).is_some());
+            if l.bn {
+                assert!(a.get(&format!("bn/{}.bn_m", l.name)).is_some());
+            }
+            if l.wq == "low" {
+                assert!(a.get(&format!("osc/{}.w#f", l.name)).is_some());
+            }
+        }
+    }
+}

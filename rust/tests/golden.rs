@@ -1,0 +1,120 @@
+//! Golden-parity tests: the native kernels vs fixtures generated from the
+//! pure-jnp oracles in `python/compile/kernels/ref.py` (see
+//! `gen_fixtures.py`). If these pass, the native backend computes exactly
+//! what the reference (and therefore the Pallas kernels, which are tested
+//! against the same oracles in python/tests) specifies.
+
+use oscillations_qat::json::{self, Json};
+use oscillations_qat::runtime::native::kernels::{self, OscState};
+use std::path::{Path, PathBuf};
+
+const TOL: f32 = 1e-5;
+
+fn fixture(name: &str) -> Json {
+    let path: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e} — run gen_fixtures.py", path.display()));
+    json::parse(&text).expect("fixture JSON")
+}
+
+fn vecf(case: &Json, key: &str) -> Vec<f32> {
+    case.get(key)
+        .as_arr()
+        .unwrap_or_else(|| panic!("fixture field {key} missing"))
+        .iter()
+        .map(|v| v.as_f64().expect("number") as f32)
+        .collect()
+}
+
+fn scalarf(case: &Json, key: &str) -> f32 {
+    case.get(key).as_f64().unwrap_or_else(|| panic!("fixture scalar {key} missing")) as f32
+}
+
+fn assert_close(name: &str, case_idx: usize, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{name}[{case_idx}] length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= TOL,
+            "{name}[{case_idx}][{i}]: native {g} vs ref {w}"
+        );
+    }
+}
+
+#[test]
+fn fake_quant_matches_ref_fixtures() {
+    let fx = fixture("fake_quant");
+    let cases = fx.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let w = vecf(case, "w");
+        let got = kernels::fake_quant(
+            &w,
+            scalarf(case, "s"),
+            scalarf(case, "n"),
+            scalarf(case, "p"),
+        );
+        assert_close("fake_quant", ci, &got, &vecf(case, "out"));
+    }
+}
+
+#[test]
+fn osc_update_matches_ref_fixtures() {
+    let fx = fixture("osc_update");
+    let cases = fx.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let mut w = vecf(case, "w");
+        let mut st = OscState {
+            f: vecf(case, "f"),
+            b: vecf(case, "b"),
+            fint: vecf(case, "fint"),
+            psign: vecf(case, "psign"),
+            wintp: vecf(case, "wintp"),
+            iema: vecf(case, "iema"),
+        };
+        let osc = kernels::osc_update(
+            &mut w,
+            scalarf(case, "s"),
+            scalarf(case, "n"),
+            scalarf(case, "p"),
+            &mut st,
+            scalarf(case, "m"),
+            scalarf(case, "f_th"),
+        );
+        assert_close("osc.w_out", ci, &w, &vecf(case, "w_out"));
+        assert_close("osc.f_out", ci, &st.f, &vecf(case, "f_out"));
+        assert_close("osc.b_out", ci, &st.b, &vecf(case, "b_out"));
+        assert_close("osc.fint_out", ci, &st.fint, &vecf(case, "fint_out"));
+        assert_close("osc.psign_out", ci, &st.psign, &vecf(case, "psign_out"));
+        assert_close("osc.wint_out", ci, &st.wintp, &vecf(case, "wint_out"));
+        assert_close("osc.iema_out", ci, &st.iema, &vecf(case, "iema_out"));
+        assert_close("osc.osc", ci, &osc, &vecf(case, "osc"));
+    }
+}
+
+#[test]
+fn quant_matmul_matches_ref_fixtures() {
+    let fx = fixture("quant_matmul");
+    let cases = fx.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let x = vecf(case, "x");
+        let w = vecf(case, "w");
+        let xs = vecf(case, "x_shape");
+        let ws = vecf(case, "w_shape");
+        let (m, k, n) = (xs[0] as usize, xs[1] as usize, ws[1] as usize);
+        let got = kernels::quant_matmul(
+            &x,
+            &w,
+            m,
+            k,
+            n,
+            scalarf(case, "s"),
+            scalarf(case, "n"),
+            scalarf(case, "p"),
+        );
+        assert_close("quant_matmul", ci, &got, &vecf(case, "out"));
+    }
+}

@@ -12,6 +12,7 @@ use oscillations_qat::coordinator::Schedule;
 use oscillations_qat::json;
 use oscillations_qat::quant::{self, range_est};
 use oscillations_qat::rng::Pcg32;
+use oscillations_qat::runtime::native::kernels::{self, OscState};
 use oscillations_qat::state::NamedTensors;
 use oscillations_qat::tensor::{round_ties_even, Tensor};
 use oscillations_qat::toy::{run, stats, ToyCfg, ToyEstimator};
@@ -167,6 +168,126 @@ fn histogram_conserves_mass() {
         let binned: u64 = h.counts.iter().sum();
         assert_eq!(binned + h.clipped, h.total);
         assert_eq!(h.total, n as u64);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Native-backend kernel invariants
+
+#[test]
+fn native_fake_quant_on_grid_and_idempotent() {
+    for_random_cases(300, "native_fq_grid", |rng| {
+        let bits = 2 + rng.below(7) as u32;
+        let (n, p) = quant::weight_grid(bits);
+        let s = rng.uniform(1e-3, 0.5);
+        let w: Vec<f32> = (0..rng.below(200) + 1).map(|_| rng.normal() * 2.0).collect();
+        let q = kernels::fake_quant(&w, s, n, p);
+        for &v in &q {
+            let int = v / s;
+            assert!((int - round_ties_even(int)).abs() < 1e-4, "off-grid: {v}");
+            assert!(int >= n - 1e-4 && int <= p + 1e-4, "outside grid: {v}");
+        }
+        let q2 = kernels::fake_quant(&q, s, n, p);
+        for (a, b) in q.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-6, "not idempotent: {a} vs {b}");
+        }
+        // and the native kernel is the same function as the host mirror
+        assert_eq!(q, quant::fake_quant(&w, s, n, p));
+    });
+}
+
+fn random_osc_state(rng: &mut Pcg32, len: usize, n: f32, p: f32) -> OscState {
+    let span = (p - n) as usize + 1;
+    let int = |rng: &mut Pcg32| (n + rng.below(span) as f32).clamp(n, p);
+    OscState {
+        f: (0..len).map(|_| rng.uniform(0.0, 1.0)).collect(),
+        b: (0..len).map(|_| if rng.next_f32() < 0.3 { 1.0 } else { 0.0 }).collect(),
+        fint: (0..len).map(|_| int(rng)).collect(),
+        psign: (0..len).map(|_| rng.below(3) as f32 - 1.0).collect(),
+        wintp: (0..len).map(|_| int(rng)).collect(),
+        iema: (0..len).map(|_| int(rng) + rng.uniform(-0.4, 0.4)).collect(),
+    }
+}
+
+#[test]
+fn native_osc_ema_stays_in_unit_interval() {
+    // f is an EMA of a {0,1} indicator: it must stay inside [0, 1] for any
+    // momentum m in [0, 1] and any trajectory of weight proposals
+    for_random_cases(120, "osc_ema_bounded", |rng| {
+        let bits = 2 + rng.below(3) as u32;
+        let (n, p) = quant::weight_grid(bits);
+        let s = rng.uniform(0.01, 0.4);
+        let len = 1 + rng.below(40);
+        let mut st = random_osc_state(rng, len, n, p);
+        let m = rng.uniform(0.0, 1.0);
+        let f_th = rng.uniform(0.005, 1.2);
+        for _ in 0..30 {
+            let mut w: Vec<f32> = (0..len).map(|_| rng.normal() * s * 4.0).collect();
+            let osc = kernels::osc_update(&mut w, s, n, p, &mut st, m, f_th);
+            for i in 0..len {
+                assert!((0.0..=1.0).contains(&st.f[i]), "f out of [0,1]: {}", st.f[i]);
+                assert!(osc[i] == 0.0 || osc[i] == 1.0);
+                assert!(st.b[i] == 0.0 || st.b[i] == 1.0);
+                assert!(st.psign[i] == -1.0 || st.psign[i] == 0.0 || st.psign[i] == 1.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn native_frozen_weights_never_change() {
+    // once b = 1, the integer assignment is immutable and the latent
+    // weight always equals s * fint, whatever SGD proposes
+    for_random_cases(80, "frozen_immutable", |rng| {
+        let (n, p) = quant::weight_grid(2 + rng.below(3) as u32);
+        let s = rng.uniform(0.01, 0.4);
+        let len = 1 + rng.below(30);
+        let mut st = random_osc_state(rng, len, n, p);
+        // low threshold: freezing happens eagerly during the run
+        let m = rng.uniform(0.05, 0.5);
+        let f_th = 0.01;
+        let mut frozen_int: Vec<Option<f32>> = vec![None; len];
+        for _ in 0..40 {
+            let mut w: Vec<f32> = (0..len).map(|_| rng.normal() * s * 4.0).collect();
+            kernels::osc_update(&mut w, s, n, p, &mut st, m, f_th);
+            for i in 0..len {
+                if let Some(fint) = frozen_int[i] {
+                    assert_eq!(st.b[i], 1.0, "weight un-froze");
+                    assert_eq!(st.fint[i], fint, "frozen integer drifted");
+                    assert!((w[i] - s * fint).abs() < 1e-6, "latent left the pin");
+                }
+                if st.b[i] > 0.5 && frozen_int[i].is_none() {
+                    frozen_int[i] = Some(st.fint[i]);
+                    assert!(st.fint[i] >= n && st.fint[i] <= p, "pin off-grid");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn native_quant_matmul_matches_naive() {
+    for_random_cases(80, "qmm_naive", |rng| {
+        let (gn, gp) = quant::weight_grid(2 + rng.below(4) as u32);
+        let s = rng.uniform(0.01, 0.5);
+        let (m, k, n) = (1 + rng.below(6), 1 + rng.below(10), 1 + rng.below(6));
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let got = kernels::quant_matmul(&x, &w, m, k, n, s, gn, gp);
+        let wq = quant::fake_quant(&w, s, gn, gp);
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for kk in 0..k {
+                    want += x[i * k + kk] * wq[kk * n + j];
+                }
+                assert!(
+                    (got[i * n + j] - want).abs() < 1e-4,
+                    "qmm[{i},{j}]: {} vs {want}",
+                    got[i * n + j]
+                );
+            }
+        }
     });
 }
 

@@ -1,0 +1,152 @@
+//! Minimal offline shim of the `anyhow` crate.
+//!
+//! The build environment has no crates.io registry, so the crate vendors
+//! the subset of anyhow's API the workspace actually uses: the opaque
+//! [`Error`] type (context chain flattened into one message), the
+//! [`Result`] alias, the [`Context`] extension trait for `Result`/`Option`,
+//! and the `anyhow!`/`bail!` macros. Error sources are stringified eagerly
+//! via `Display`; there is no backtrace capture.
+
+use std::fmt;
+
+/// Opaque error: the full context chain rendered into one string.
+///
+/// Deliberately does **not** implement `std::error::Error` (mirroring the
+/// real anyhow), which keeps the blanket `From` conversions coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer ("context: cause"), anyhow-style.
+    pub fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// Same blanket conversion as the real anyhow (coherent because `Error`
+// itself deliberately does not implement `std::error::Error`): any
+// standard error converts via `?` or `Context`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert-or-bail (kept for API parity).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        Err(e).context("reading state")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.to_string(), "reading state: disk on fire");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing tensor").unwrap_err();
+        assert_eq!(e.to_string(), "missing tensor");
+        assert_eq!(Some(3).context("nope").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let v = 7;
+        let e: Error = anyhow!("bad value {v}");
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("stopped at {}", 42)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stopped at 42");
+    }
+
+    #[test]
+    fn with_context_formats() {
+        let err: Result<u8, std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = err.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "step 3: boom");
+    }
+}

@@ -1,0 +1,66 @@
+//! Minimal offline shim of the `log` facade: the five level macros,
+//! compiled to no-ops. Format arguments are still type-checked (behind a
+//! constant-false branch) so call sites stay honest.
+
+/// No-op `error!` (arguments type-checked, never evaluated at runtime).
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    };
+}
+
+/// No-op `warn!`.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    };
+}
+
+/// No-op `info!`.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    };
+}
+
+/// No-op `debug!`.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    };
+}
+
+/// No-op `trace!`.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if false {
+            let _ = ::std::format!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_noop() {
+        let x = 3;
+        crate::info!("value {x}");
+        crate::warn!("value {}", x);
+        crate::error!("e");
+        crate::debug!("d");
+        crate::trace!("t");
+    }
+}

@@ -1,0 +1,142 @@
+//! API-compatible **stub** of the `xla` PJRT binding crate.
+//!
+//! The offline build environment ships no XLA/PJRT shared library, so this
+//! crate mirrors exactly the API surface `runtime::pjrt` consumes and fails
+//! gracefully at runtime: [`PjRtClient::cpu`] returns an error, which the
+//! coordinator surfaces as "PJRT backend unavailable" and (in `auto` mode)
+//! falls back to the pure-Rust native backend.
+//!
+//! When a real PJRT toolchain is present, point Cargo at the real binding
+//! with a `[patch]` entry; the PJRT runtime code compiles unchanged against
+//! either.
+
+use std::fmt;
+
+/// Error type of the binding. Unlike `anyhow::Error` this implements
+/// `std::error::Error`, matching the real crate.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub<T>(what: &str) -> Result<T, Error> {
+    Err(Error {
+        msg: format!(
+            "xla stub: {what} is unavailable (this build has no PJRT runtime; \
+             use the native backend or link the real xla binding)"
+        ),
+    })
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT CPU plugin to load.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub). Construction works (it is pure host data in the
+/// real crate too); every operation that would need the runtime errors.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        stub("Literal::reshape")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, Error> {
+        stub("Literal::decompose_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        stub("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_gracefully() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+    }
+
+    #[test]
+    fn error_converts_to_anyhow() {
+        let err = HloModuleProto::from_text_file("x.hlo").unwrap_err();
+        let a: anyhow::Error = err.into();
+        assert!(a.to_string().contains("from_text_file"));
+    }
+}
