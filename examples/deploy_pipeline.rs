@@ -1,0 +1,98 @@
+//! End-to-end deployment: QAT-train a zoo model, export it as a
+//! BN-folded bit-packed integer artifact, and serve batched requests
+//! from the packed engine.
+//!
+//!     cargo run --release --example deploy_pipeline
+//!
+//! Prints the export size report, the top-1 agreement between the
+//! integer engine and the simulated fake-quant eval path, and the
+//! serving throughput/latency summary.
+
+use anyhow::Result;
+use oscillations_qat::coordinator::evaluator::EvalQuant;
+use oscillations_qat::coordinator::{bn_restim, qat, RunCfg, Schedule, Trainer};
+use oscillations_qat::data::{DataCfg, Dataset};
+use oscillations_qat::deploy::export::{export_model, ExportCfg};
+use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
+use oscillations_qat::deploy::Engine;
+use oscillations_qat::runtime::native::model::zoo_model;
+use oscillations_qat::runtime::{Backend, NativeBackend};
+use oscillations_qat::state::NamedTensors;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let be = NativeBackend::new();
+    let model = "efflite";
+    let bits = 4;
+    let data = DataCfg { val_size: 64, ..Default::default() };
+
+    // --- QAT train (short run) + BN re-estimation ----------------------
+    println!("training {model} at w{bits}a{bits} (short run)...");
+    let trainer = Trainer::new(&be);
+    let mut fp = RunCfg::fp(model, 60, 0.02, 0);
+    fp.data = data.clone();
+    let run = trainer.train(be.initial_state(model)?, &fp)?;
+    let mut state = run.state;
+    qat::prepare_qat(&be, &mut state, model, bits, bits, &data, 0)?;
+    let mut cfg = RunCfg::qat(model, 80, bits, 0);
+    cfg.quant_a = true;
+    cfg.data = data.clone();
+    cfg.f_th = Schedule::Cosine { from: 0.04, to: 0.01 };
+    cfg.m_osc = 0.1;
+    let run = trainer.train(state, &cfg)?;
+    let mut state = run.state;
+    let q = EvalQuant::full(bits);
+    bn_restim::reestimate(&be, &mut state, model, q, &data, 0, 8)?;
+
+    // --- export: BN fold + grid snap + bit-pack ------------------------
+    let nm = zoo_model(model).expect("zoo model");
+    let ecfg = ExportCfg { bits_w: bits, bits_a: bits, quant_a: true };
+    let (dm, report) = export_model(&nm, &state, &ecfg)?;
+    println!(
+        "exported {} layers, {} weights ({} frozen verified on-grid): \
+         packed {} B vs f32 {} B = ratio {:.3}",
+        report.layers,
+        report.total_weights,
+        report.frozen_verified,
+        report.packed_bytes,
+        report.f32_bytes,
+        report.ratio()
+    );
+
+    // --- agreement with the simulated eval path ------------------------
+    let info = be.index().model(model)?.clone();
+    let hyper = q.hyper();
+    let ds = Dataset::new(data.clone());
+    let engine = Arc::new(Engine::new(dm));
+    let d_in = engine.model().d_in();
+    let (mut agree, mut total) = (0usize, 0usize);
+    let mut inputs: Vec<Vec<f32>> = vec![];
+    for bch in ds.val_batches() {
+        let b = bch.x.shape[0];
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", bch.x.clone());
+        io.insert("batch/y", bch.y.clone());
+        let out = be.execute(&info.artifacts["eval"], &[&state, &io, &hyper])?;
+        let ref_pred = out.expect("pred")?;
+        let got = engine.predict_batch(&bch.x.data, b)?;
+        for i in 0..b {
+            total += 1;
+            if got[i] == ref_pred.data[i] as usize {
+                agree += 1;
+            }
+            inputs.push(bch.x.data[i * d_in..(i + 1) * d_in].to_vec());
+        }
+    }
+    println!(
+        "integer engine vs fake-quant eval: {}/{} top-1 agreement ({:.1}%)",
+        agree,
+        total,
+        100.0 * agree as f64 / total.max(1) as f64
+    );
+
+    // --- batched serving -----------------------------------------------
+    let scfg = ServeCfg { workers: 4, max_batch: 16, queue_cap: 256 };
+    let sreport = bench_serve(engine, &scfg, &inputs)?;
+    println!("{}", sreport.summary());
+    Ok(())
+}

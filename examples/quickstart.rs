@@ -54,5 +54,14 @@ fn main() -> Result<()> {
         summary.total_weights,
         out.steps_per_sec
     );
+    for t in &summary.per_tensor {
+        println!(
+            "  {:<10} {:>5} weights  osc {:>6.2}%  frozen {:>6.2}%",
+            t.name,
+            t.total,
+            t.osc_pct(),
+            t.frozen_pct()
+        );
+    }
     Ok(())
 }

@@ -96,6 +96,34 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", s.report());
 
+    // -------- deployed inference: packed engine vs simulated eval --------
+    println!();
+    if let Some(nm) = oscillations_qat::runtime::native::model::zoo_model("mbv2") {
+        use oscillations_qat::deploy::export::{export_model, ExportCfg};
+        use oscillations_qat::deploy::Engine;
+        // quant_a on so the i32-accumulation path actually runs
+        let ecfg = ExportCfg { bits_w: 3, bits_a: 3, quant_a: true };
+        let (dm, report) = export_model(&nm, &state, &ecfg)?;
+        println!(
+            "deploy: mbv2 packed {} B vs f32 {} B (ratio {:.3})",
+            report.packed_bytes,
+            report.f32_bytes,
+            report.ratio()
+        );
+        let small = Dataset::new(DataCfg { val_size: 16, ..Default::default() });
+        let batch = small.val_batches().remove(0);
+        let b = batch.x.shape[0];
+        for (label, int_accum) in
+            [("deploy: engine f32-exact, batch 16", false), ("deploy: engine i32-accum, batch 16", true)]
+        {
+            let eng = Engine::with_mode(dm.clone(), int_accum);
+            let s = bench_for(label, 1, Duration::from_secs(3), || {
+                let _ = eng.forward_batch(&batch.x.data, b).expect("deploy fwd");
+            });
+            println!("{}  ({:.0} img/s)", s.report(), s.per_sec(b as f64));
+        }
+    }
+
     if be.compile_seconds() > 0.0 {
         println!("\ntotal XLA compile time: {:.1}s", be.compile_seconds());
     }

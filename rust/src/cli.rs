@@ -1,8 +1,28 @@
 //! Hand-rolled CLI argument parser (no clap in the offline crate cache).
 //!
-//! Grammar: `prog <subcommand> [--key value] [--key=value] [--flag]`.
+//! Grammar: `prog <subcommand> [--key value] [--key=value] [--flag] [--] [positional...]`
+//!
+//! Disambiguation rules (the part a naive splitter gets wrong):
+//!
+//! * **Boolean flags are declared.** A `--key` in [`BOOL_FLAGS`] never
+//!   consumes the next token, so `eval --fp ckpt.qtns` keeps `ckpt.qtns`
+//!   positional instead of parsing `fp = "ckpt.qtns"`. Unknown `--key`s
+//!   take a value when one follows (`--lr 0.01`) and default to `"true"`
+//!   otherwise.
+//! * **Negative numbers are values, not options.** Only `--`-prefixed
+//!   tokens start an option, so `--lr -0.1` and `--w0 -0.3` parse as
+//!   values; a bare `-0.3` with no pending key is positional.
+//! * **`--` ends option parsing**: every later token is treated as plain
+//!   text, even if it looks like an option (the first plain token seen
+//!   overall still fills the subcommand slot).
+//! * `--key=value` always binds, including `--quick=false` overrides of
+//!   declared flags and values containing `=`.
 
 use std::collections::BTreeMap;
+
+/// Options that never take a value. Keep in sync with the `args.flag()`
+/// call sites in `main.rs` (and declare new boolean options here).
+pub const BOOL_FLAGS: &[&str] = &["quick", "fp", "quant-a", "smoke", "exact"];
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -13,23 +33,43 @@ pub struct Args {
 
 impl Args {
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        Self::parse_with_flags(argv, BOOL_FLAGS)
+    }
+
+    /// Parse with an explicit boolean-flag registry (tests and embedders
+    /// with a different flag set).
+    pub fn parse_with_flags(
+        argv: impl IntoIterator<Item = String>,
+        bool_flags: &[&str],
+    ) -> Args {
         let mut out = Args::default();
         let mut iter = argv.into_iter().peekable();
+        let mut opts_done = false;
         while let Some(arg) = iter.next() {
-            if let Some(key) = arg.strip_prefix("--") {
-                if let Some((k, v)) = key.split_once('=') {
-                    out.options.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
-                    out.options.insert(key.to_string(), v);
-                } else {
-                    out.options.insert(key.to_string(), "true".to_string());
+            if !opts_done && arg == "--" {
+                opts_done = true;
+                continue;
+            }
+            if !opts_done {
+                if let Some(key) = arg.strip_prefix("--") {
+                    if let Some((k, v)) = key.split_once('=') {
+                        out.options.insert(k.to_string(), v.to_string());
+                    } else if bool_flags.contains(&key) {
+                        out.options.insert(key.to_string(), "true".to_string());
+                    } else if iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false)
+                    {
+                        let v = iter.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    } else {
+                        out.options.insert(key.to_string(), "true".to_string());
+                    }
+                    continue;
                 }
-            } else if out.subcommand.is_none() {
+            }
+            if out.subcommand.is_none() {
                 out.subcommand = Some(arg);
             } else {
                 out.positional.push(arg);
@@ -94,9 +134,73 @@ mod tests {
 
     #[test]
     fn negative_number_values() {
-        let a = parse("toy --w0 -0.3");
         // "-0.3" does not start with -- so it is consumed as the value
+        let a = parse("toy --w0 -0.3");
         assert_eq!(a.f32_or("w0", 0.0), -0.3);
+        // same through the = form, and for integers
+        let a = parse("toy --lr=-0.1 --shift -2");
+        assert_eq!(a.f32_or("lr", 0.0), -0.1);
+        assert_eq!(a.get("shift"), Some("-2"));
+    }
+
+    #[test]
+    fn declared_flag_does_not_eat_a_positional() {
+        // --fp is a declared boolean flag: the token after it stays
+        // positional instead of becoming fp's value
+        let a = parse("eval --fp ckpts/run.qtns");
+        assert!(a.flag("fp"));
+        assert_eq!(a.positional, vec!["ckpts/run.qtns".to_string()]);
+        // ... and a declared flag right before another option still works
+        let a = parse("train --quant-a --steps 5");
+        assert!(a.flag("quant-a"));
+        assert_eq!(a.u64_or("steps", 0), 5);
+    }
+
+    #[test]
+    fn declared_flag_accepts_explicit_value() {
+        let a = parse("suite --quick=false");
+        assert!(!a.flag("quick"));
+        let a = parse("suite --quick");
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn undeclared_trailing_key_defaults_to_true() {
+        let a = parse("train --verbose");
+        assert!(a.flag("verbose"));
+        let a = parse("train --verbose --steps 3");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.u64_or("steps", 0), 3);
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = parse("run --steps 2 -- --not-an-option -0.5");
+        assert_eq!(a.u64_or("steps", 0), 2);
+        assert_eq!(
+            a.positional,
+            vec!["--not-an-option".to_string(), "-0.5".to_string()]
+        );
+        // the subcommand slot is just the first plain token; `--` only
+        // stops option recognition
+        let a = parse("-- run --x");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["--x".to_string()]);
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals() {
+        let a = parse("train --lam=cos(0,1e-2)=x");
+        assert_eq!(a.get("lam"), Some("cos(0,1e-2)=x"));
+    }
+
+    #[test]
+    fn custom_flag_registry() {
+        let argv = ["go", "--dry-run", "target"].iter().map(|s| s.to_string());
+        let a = Args::parse_with_flags(argv, &["dry-run"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.positional, vec!["target".to_string()]);
     }
 
     #[test]

@@ -37,8 +37,9 @@ impl EvalQuant {
     }
 
     /// The inference-mode hyper map (lr/λ/momenta zero, freezing off)
-    /// shared by eval, BN statistics collection and calibration passes.
-    pub(crate) fn hyper(&self) -> NamedTensors {
+    /// shared by eval, BN statistics collection, calibration passes and
+    /// the deploy round-trip's reference eval.
+    pub fn hyper(&self) -> NamedTensors {
         let (n_w, p_w) = weight_grid(self.bits_w);
         let mut h = NamedTensors::new();
         let mut put = |k: &str, v: f32| h.insert(format!("hyper/{k}"), Tensor::scalar(v));

@@ -14,6 +14,8 @@ use crate::analysis::histogram::Histogram;
 use crate::analysis::kl::{layer_kl, KlRow};
 use crate::analysis::report::{mean_std, TableRenderer};
 use crate::data::DataCfg;
+use crate::deploy::export::{export_model, ExportCfg, ExportReport};
+use crate::deploy::format::DeployModel;
 use crate::osc;
 use crate::quant::adaround::{self, AnnealCfg};
 use crate::quant::sampler;
@@ -22,7 +24,7 @@ use crate::rng::Pcg32;
 use crate::runtime::Backend;
 use crate::state::NamedTensors;
 use crate::toy::{self, ToyCfg, ToyEstimator};
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::path::PathBuf;
 
 /// Shared experiment context: execution backend + scale knobs.
@@ -158,6 +160,26 @@ impl<'rt> Lab<'rt> {
             state,
             run,
         })
+    }
+
+    /// Deployment hook: run the full QAT workflow (which ends with BN
+    /// re-estimation) and export the resulting state as a BN-folded
+    /// packed integer model. This is what the `export` CLI subcommand
+    /// drives when no checkpoint is supplied.
+    pub fn run_qat_and_export(
+        &self,
+        spec: &QatSpec,
+    ) -> Result<(QatOutcome, DeployModel, ExportReport)> {
+        let outcome = self.run_qat(spec)?;
+        let nm = crate::runtime::native::model::zoo_model(&spec.model)
+            .with_context(|| format!("no zoo model {:?} to export", spec.model))?;
+        let cfg = ExportCfg {
+            bits_w: spec.bits_w,
+            bits_a: spec.bits_a,
+            quant_a: spec.quant_a,
+        };
+        let (dm, report) = export_model(&nm, &outcome.state, &cfg)?;
+        Ok((outcome, dm, report))
     }
 
     /// Seed-averaged row helper.

@@ -1,0 +1,330 @@
+//! The packed low-bit inference engine.
+//!
+//! Two execution paths per layer, both reading weights straight out of
+//! the bit-packed QPKG payload:
+//!
+//! * **f32 path** ([`packed_matmul`] / [`packed_dw`]) — weights are
+//!   dequantized on the fly (`s * grid_int`, one exact multiply) and the
+//!   accumulation replays the native interpreter's loop order including
+//!   its `a == 0.0` skip, so the output is **bit-exact** against
+//!   `runtime/native/kernels.rs::quant_matmul` over the fake-quantized
+//!   weights. This is the path for layers whose input activations are
+//!   not quantized (the stem, and every layer of a weight-only run).
+//! * **i32 path** ([`packed_matmul_i32`] / [`packed_dw_i32`]) — input
+//!   activations arrive as unsigned grid codes, weights as signed grid
+//!   integers, and the dot product accumulates in i32 (exact integer
+//!   arithmetic, no rounding at all); one requantization multiply
+//!   (`s_a * s_w * acc`, in f64) brings the result back to the real
+//!   scale. Worst case here (255 x 127 x 768-deep) stays far inside
+//!   i32 range.
+//!
+//! After the linear op the folded-BN requant affine (`mult[c]*z+add[c]`),
+//! bias and ReLU are applied per channel — there is no batch-norm op and
+//! no running statistic left at inference time.
+
+use super::format::{DeployModel, DeployOp};
+use super::packed::Packed;
+use crate::runtime::native::kernels;
+use anyhow::Result;
+
+pub use crate::tensor::argmax;
+
+/// `x [m,k] @ dequant(w) [k,n]`, bit-exact vs `kernels::quant_matmul`
+/// on the same grid (same loop order, same `a == 0.0` skip).
+pub fn packed_matmul(
+    x: &[f32],
+    w: &Packed,
+    m: usize,
+    k: usize,
+    n: usize,
+    s: f32,
+    grid_n: i32,
+) -> Vec<f32> {
+    debug_assert_eq!(w.len, k * n);
+    let mut wq = Vec::new();
+    w.dequant_into(grid_n, s, &mut wq);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let a = x[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let row = &wq[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += a * row[j];
+            }
+        }
+    }
+    out
+}
+
+/// Circular depthwise 3-tap conv with on-the-fly dequantized weights,
+/// mirroring the native interpreter's loop exactly.
+pub fn packed_dw(x: &[f32], w: &Packed, b: usize, c_dim: usize, s: f32, grid_n: i32) -> Vec<f32> {
+    debug_assert_eq!(w.len, c_dim * 3);
+    let mut wq = Vec::new();
+    w.dequant_into(grid_n, s, &mut wq);
+    let mut out = vec![0.0f32; b * c_dim];
+    for bi in 0..b {
+        let arow = &x[bi * c_dim..(bi + 1) * c_dim];
+        let orow = &mut out[bi * c_dim..(bi + 1) * c_dim];
+        for c in 0..c_dim {
+            let mut acc = 0.0f32;
+            for t in 0..3usize {
+                let j = (c + t + c_dim - 1) % c_dim;
+                acc += wq[c * 3 + t] * arow[j];
+            }
+            orow[c] = acc;
+        }
+    }
+    out
+}
+
+/// Integer matmul: unsigned activation codes x signed weight integers,
+/// i32 accumulation. Zero codes are skipped (the integer twin of the
+/// float path's `a == 0.0` fast path — `a_q == 0` iff its code is 0).
+pub fn packed_matmul_i32(
+    qa: &[i32],
+    w: &Packed,
+    m: usize,
+    k: usize,
+    n: usize,
+    grid_n: i32,
+) -> Vec<i32> {
+    debug_assert_eq!(w.len, k * n);
+    let mut wi = Vec::new();
+    w.ints_into(grid_n, &mut wi);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let a = qa[i * k + kk];
+            if a == 0 {
+                continue;
+            }
+            let row = &wi[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += a * row[j];
+            }
+        }
+    }
+    out
+}
+
+/// Integer circular depthwise 3-tap conv with i32 accumulation.
+pub fn packed_dw_i32(qa: &[i32], w: &Packed, b: usize, c_dim: usize, grid_n: i32) -> Vec<i32> {
+    debug_assert_eq!(w.len, c_dim * 3);
+    let mut wi = Vec::new();
+    w.ints_into(grid_n, &mut wi);
+    let mut out = vec![0i32; b * c_dim];
+    for bi in 0..b {
+        let arow = &qa[bi * c_dim..(bi + 1) * c_dim];
+        let orow = &mut out[bi * c_dim..(bi + 1) * c_dim];
+        for c in 0..c_dim {
+            let mut acc = 0i32;
+            for t in 0..3usize {
+                let j = (c + t + c_dim - 1) % c_dim;
+                acc += wi[c * 3 + t] * arow[j];
+            }
+            orow[c] = acc;
+        }
+    }
+    out
+}
+
+/// Inference over a [`DeployModel`].
+pub struct Engine {
+    model: DeployModel,
+    /// use the i32 accumulation path on quantized-activation layers
+    /// (false = f32 path everywhere, the closest mirror of simulated eval)
+    pub int_accum: bool,
+}
+
+impl Engine {
+    /// Engine with the integer fast path on (the deployment default).
+    pub fn new(model: DeployModel) -> Self {
+        Engine { model, int_accum: true }
+    }
+
+    pub fn with_mode(model: DeployModel, int_accum: bool) -> Self {
+        Engine { model, int_accum }
+    }
+
+    pub fn model(&self) -> &DeployModel {
+        &self.model
+    }
+
+    /// Forward `b` samples (`x` is `[b, input_hw*input_hw*3]` row-major
+    /// flattened NHWC, same as the training `batch/x`); returns logits
+    /// `[b, num_classes]`.
+    pub fn forward_batch(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == b * self.model.d_in(),
+            "engine: input has {} elements, want {}x{}",
+            x.len(),
+            b,
+            self.model.d_in()
+        );
+        let mut act = x.to_vec();
+        for l in &self.model.layers {
+            let (d_in, d_out) = (l.d_in, l.d_out);
+            anyhow::ensure!(
+                act.len() == b * d_in,
+                "engine layer {}: input has {} elements, want {}x{}",
+                l.name,
+                act.len(),
+                b,
+                d_in
+            );
+            let grid_n = l.grid_n_int();
+            let mut z = if l.aq {
+                // input activation codes on the unsigned LSQ grid
+                let codes = kernels::int_weights(&act, l.a_scale, 0.0, l.act_p());
+                if self.int_accum {
+                    let qa: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+                    let acc = match l.op {
+                        DeployOp::Full => {
+                            packed_matmul_i32(&qa, &l.weights, b, d_in, d_out, grid_n)
+                        }
+                        DeployOp::Dw => packed_dw_i32(&qa, &l.weights, b, d_out, grid_n),
+                    };
+                    // one requantization multiply back to the real scale
+                    let zscale = l.a_scale as f64 * l.w_scale as f64;
+                    acc.iter().map(|&v| (zscale * v as f64) as f32).collect()
+                } else {
+                    let a_q: Vec<f32> = codes.iter().map(|&c| l.a_scale * c).collect();
+                    match l.op {
+                        DeployOp::Full => {
+                            packed_matmul(&a_q, &l.weights, b, d_in, d_out, l.w_scale, grid_n)
+                        }
+                        DeployOp::Dw => packed_dw(&a_q, &l.weights, b, d_out, l.w_scale, grid_n),
+                    }
+                }
+            } else {
+                match l.op {
+                    DeployOp::Full => {
+                        packed_matmul(&act, &l.weights, b, d_in, d_out, l.w_scale, grid_n)
+                    }
+                    DeployOp::Dw => packed_dw(&act, &l.weights, b, d_out, l.w_scale, grid_n),
+                }
+            };
+            if let Some(bias) = &l.bias {
+                for bi in 0..b {
+                    for c in 0..d_out {
+                        z[bi * d_out + c] += bias[c];
+                    }
+                }
+            }
+            if let Some(rq) = &l.requant {
+                for bi in 0..b {
+                    for c in 0..d_out {
+                        let idx = bi * d_out + c;
+                        z[idx] = rq.mult[c] * z[idx] + rq.add[c];
+                    }
+                }
+            }
+            if l.relu {
+                for v in z.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            act = z;
+        }
+        Ok(act)
+    }
+
+    /// Top-1 class per sample (first index on ties, like `Tensor::argmax`).
+    pub fn predict_batch(&self, x: &[f32], b: usize) -> Result<Vec<usize>> {
+        let logits = self.forward_batch(x, b)?;
+        let nc = self.model.num_classes;
+        Ok((0..b).map(|i| argmax(&logits[i * nc..(i + 1) * nc])).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::weight_grid;
+    use crate::rng::Pcg32;
+    use crate::runtime::native::kernels::quant_matmul;
+
+    fn pack_weights(w: &[f32], s: f32, bits: u32) -> (Packed, i32) {
+        // the exporter's own mapping, so these tests cannot drift from it
+        crate::deploy::export::snap_and_pack(w, s, bits).unwrap()
+    }
+
+    #[test]
+    fn packed_matmul_bitexact_vs_quant_matmul() {
+        let mut rng = Pcg32::new(11, 0xde);
+        for bits in [2u32, 3, 4, 8] {
+            let (gn, gp) = weight_grid(bits);
+            let (m, k, n) = (3usize, 17, 5);
+            let s = rng.uniform(0.01, 0.4);
+            let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            // exact zeros exercise the skip fast path
+            for i in (0..x.len()).step_by(4) {
+                x[i] = 0.0;
+            }
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let (packed, grid_n) = pack_weights(&w, s, bits);
+            let got = packed_matmul(&x, &packed, m, k, n, s, grid_n);
+            let want = quant_matmul(&x, &w, m, k, n, s, gn, gp);
+            assert_eq!(got, want, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn packed_dw_matches_dense_reference() {
+        let mut rng = Pcg32::new(5, 0xd3);
+        let (b, c) = (4usize, 9usize);
+        let s = 0.07f32;
+        let bits = 3;
+        let (gn, gp) = weight_grid(bits);
+        let x: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.3).collect();
+        let (packed, grid_n) = pack_weights(&w, s, bits);
+        let got = packed_dw(&x, &packed, b, c, s, grid_n);
+        let wq = kernels::fake_quant(&w, s, gn, gp);
+        for bi in 0..b {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for t in 0..3usize {
+                    let j = (ci + t + c - 1) % c;
+                    acc += wq[ci * 3 + t] * x[bi * c + j];
+                }
+                assert_eq!(got[bi * c + ci], acc, "[{bi},{ci}]");
+            }
+        }
+    }
+
+    #[test]
+    fn i32_path_exact_on_pow2_grids() {
+        // power-of-two scales + small integers: every f32 op is exact, so
+        // the i32 accumulation must agree with the float path to the bit
+        let mut rng = Pcg32::new(3, 0x1a);
+        let (s_a, s_w) = (0.5f32, 0.25f32);
+        let bits = 4;
+        let (m, k, n) = (2usize, 8, 6);
+        let qa_codes: Vec<i32> = (0..m * k).map(|_| rng.below(8) as i32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.below(15) as f32 - 7.0) * s_w).collect();
+        let (packed, grid_n) = pack_weights(&w, s_w, bits);
+
+        let acc = packed_matmul_i32(&qa_codes, &packed, m, k, n, grid_n);
+        let zscale = s_a as f64 * s_w as f64;
+        let got: Vec<f32> = acc.iter().map(|&v| (zscale * v as f64) as f32).collect();
+
+        let a_q: Vec<f32> = qa_codes.iter().map(|&c| s_a * c as f32).collect();
+        let want = packed_matmul(&a_q, &packed, m, k, n, s_w, grid_n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn argmax_first_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[0.5]), 0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Export: trained QAT state -> deployable integer model.
+//!
+//! The pipeline (run after BN re-estimation, §2.3.1):
+//!
+//! 1. **Grid snapping.** Every quantized weight tensor is snapped to its
+//!    LSQ grid with the same `clip(round_ties_even(w/s), n, p)` the
+//!    training-time fake-quantizer applies, so the deployed integers are
+//!    exactly the integers simulated QAT evaluated. Frozen weights
+//!    (Algorithm 1) are *verified* to already sit on the grid at their
+//!    pinned integer — a frozen weight that drifted off `s * fint` means
+//!    corrupted training state and aborts the export.
+//! 2. **BN folding.** Batch-norm running statistics are folded into a
+//!    per-channel requantization affine `y = mult[c] * z + add[c]` with
+//!    `mult = g / sqrt(v + eps)` and `add = beta - mult * m`. Folding
+//!    into the *requant constants* rather than into the weights keeps the
+//!    weight tensor on its shared per-tensor grid (folding into the
+//!    weights would need per-channel scales and re-rounding, changing the
+//!    integers QAT converged to).
+//! 3. **Bit-packing.** Weight grid indices are serialized at the target
+//!    bit-width (2x int4 per byte, 8-bit stem/head one per byte, ...).
+//!
+//! The result round-trips through the QPKG format and is served by
+//! [`super::engine::Engine`].
+
+use super::format::{DeployLayer, DeployModel, DeployOp, Requant};
+use super::packed::Packed;
+use crate::quant::weight_grid;
+use crate::runtime::native::interp::BN_EPS;
+use crate::runtime::native::kernels;
+use crate::runtime::native::model::{LayerOp, NativeModel};
+use crate::state::NamedTensors;
+use anyhow::{Context, Result};
+
+/// Quantization configuration of the run being exported (must match the
+/// `EvalQuant` the simulated eval used).
+#[derive(Debug, Clone, Copy)]
+pub struct ExportCfg {
+    pub bits_w: u32,
+    pub bits_a: u32,
+    pub quant_a: bool,
+}
+
+/// What the export did — surfaced on the CLI and asserted in tests.
+#[derive(Debug, Clone, Default)]
+pub struct ExportReport {
+    pub layers: usize,
+    pub total_weights: usize,
+    /// frozen weights verified to sit exactly on their pinned integer
+    pub frozen_verified: usize,
+    /// max |w/s - round(w/s)| over non-frozen in-range weights (grid units)
+    pub max_offgrid: f32,
+    pub packed_bytes: usize,
+    pub f32_bytes: usize,
+}
+
+impl ExportReport {
+    /// Packed-to-f32 weight size ratio (the `bits/32` headline number).
+    pub fn ratio(&self) -> f64 {
+        self.packed_bytes as f64 / (self.f32_bytes as f64).max(1.0)
+    }
+}
+
+/// Snap weights to the `bits`-wide LSQ grid (the eval-time
+/// fake-quantizer's `clip(round_ties_even(w/s), n, p)`) and bit-pack the
+/// resulting grid indices. Returns the payload plus the grid minimum the
+/// engine needs to decode it. The single source of truth for the
+/// weight-to-code mapping — the bit-exactness tests encode through this
+/// same function.
+pub fn snap_and_pack(w: &[f32], s: f32, bits: u32) -> Result<(Packed, i32)> {
+    let (gn, gp) = weight_grid(bits);
+    let q = kernels::int_weights(w, s, gn, gp);
+    let codes: Vec<u32> = q.iter().map(|&v| (v - gn) as u32).collect();
+    Ok((Packed::pack(&codes, bits)?, gn as i32))
+}
+
+/// Export a trained state for `model` into a [`DeployModel`].
+///
+/// `state` must hold `params/*` and (for BN layers) re-estimated `bn/*`
+/// running statistics; `osc/*` tensors, when present, drive the frozen
+/// weight verification.
+pub fn export_model(
+    model: &NativeModel,
+    state: &NamedTensors,
+    cfg: &ExportCfg,
+) -> Result<(DeployModel, ExportReport)> {
+    let mut report = ExportReport::default();
+    let mut layers = Vec::with_capacity(model.layers.len());
+    for l in &model.layers {
+        let w = state
+            .expect(&format!("params/{}.w", l.name))
+            .with_context(|| format!("export {}: weights", l.name))?;
+        let s_w = state
+            .expect(&format!("params/{}.s", l.name))
+            .with_context(|| format!("export {}: weight scale", l.name))?
+            .item()
+            .max(1e-8);
+        let w_bits = if l.wq == "8bit" { 8 } else { cfg.bits_w };
+        let (gn, gp) = weight_grid(w_bits);
+
+        // snap to the LSQ grid (identical to the eval-time fake-quantizer)
+        let q = kernels::int_weights(&w.data, s_w, gn, gp);
+
+        // Algorithm-1 consistency: frozen weights must already be on-grid
+        // at their pinned integer. All other in-range weights contribute
+        // their snap distance to the report.
+        let b = state.get(&format!("osc/{}.w#b", l.name));
+        let fint = state.get(&format!("osc/{}.w#fint", l.name));
+        for i in 0..q.len() {
+            let frozen = b.map(|b| b.data[i] > 0.5).unwrap_or(false);
+            if frozen {
+                let fint = fint.with_context(|| {
+                    format!("export {}: frozen mask without pinned integers", l.name)
+                })?;
+                anyhow::ensure!(
+                    q[i] == fint.data[i],
+                    "export {}: frozen weight {i} snaps to {} but is pinned to {}",
+                    l.name,
+                    q[i],
+                    fint.data[i]
+                );
+                anyhow::ensure!(
+                    (w.data[i] - s_w * fint.data[i]).abs() < 1e-5,
+                    "export {}: frozen weight {i} drifted off the grid ({} vs {})",
+                    l.name,
+                    w.data[i],
+                    s_w * fint.data[i]
+                );
+                report.frozen_verified += 1;
+            } else {
+                let r = w.data[i] / s_w;
+                if r >= gn && r <= gp {
+                    report.max_offgrid = report.max_offgrid.max((r - q[i]).abs());
+                }
+            }
+        }
+
+        let (packed, _) = snap_and_pack(&w.data, s_w, w_bits)?;
+
+        // BN fold: per-channel requant affine replacing the BN op
+        let requant = if l.bn {
+            let g = state.expect(&format!("params/{}.g", l.name))?;
+            let beta = state.expect(&format!("params/{}.beta", l.name))?;
+            let m = state.expect(&format!("bn/{}.bn_m", l.name))?;
+            let v = state.expect(&format!("bn/{}.bn_v", l.name))?;
+            let mut mult = Vec::with_capacity(l.d_out);
+            let mut add = Vec::with_capacity(l.d_out);
+            for c in 0..l.d_out {
+                let ivar = 1.0 / (v.data[c] + BN_EPS).sqrt();
+                let a = g.data[c] * ivar;
+                mult.push(a);
+                add.push((beta.data[c] as f64 - a as f64 * m.data[c] as f64) as f32);
+            }
+            Some(Requant { mult, add })
+        } else {
+            None
+        };
+
+        let bias = if l.bias {
+            Some(state.expect(&format!("params/{}.bias", l.name))?.data.clone())
+        } else {
+            None
+        };
+
+        let aq = l.aq && cfg.quant_a;
+        let act_bits = if l.wq == "8bit" { 8 } else { cfg.bits_a };
+        let a_scale = if aq {
+            state
+                .expect(&format!("params/{}.as", l.name))
+                .with_context(|| format!("export {}: activation scale", l.name))?
+                .item()
+                .max(1e-8)
+        } else {
+            1.0
+        };
+
+        report.total_weights += q.len();
+        report.packed_bytes += packed.num_bytes();
+        report.f32_bytes += q.len() * 4;
+        layers.push(DeployLayer {
+            name: l.name.clone(),
+            op: match l.op {
+                LayerOp::Full => DeployOp::Full,
+                LayerOp::Dw => DeployOp::Dw,
+            },
+            d_in: l.d_in,
+            d_out: l.d_out,
+            relu: l.relu,
+            aq,
+            act_bits,
+            a_scale,
+            w_bits,
+            w_scale: s_w,
+            weights: packed,
+            bias,
+            requant,
+        });
+    }
+    report.layers = layers.len();
+    let dm = DeployModel {
+        name: model.name.clone(),
+        input_hw: model.input_hw,
+        num_classes: model.num_classes,
+        quant_a: cfg.quant_a,
+        bits_w: cfg.bits_w,
+        bits_a: cfg.bits_a,
+        layers,
+    };
+    Ok((dm, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::model::zoo_model;
+    use crate::tensor::Tensor;
+
+    fn cfg() -> ExportCfg {
+        ExportCfg { bits_w: 3, bits_a: 3, quant_a: false }
+    }
+
+    #[test]
+    fn exports_initial_state() {
+        let m = zoo_model("efflite").unwrap();
+        let state = m.initial_state();
+        let (dm, report) = export_model(&m, &state, &cfg()).unwrap();
+        assert_eq!(dm.layers.len(), m.layers.len());
+        assert_eq!(report.total_weights, dm.total_weights());
+        assert!(report.frozen_verified == 0, "fresh state has no frozen weights");
+        // stem/head are 8-bit, interior is 3-bit
+        assert_eq!(dm.layers.first().unwrap().w_bits, 8);
+        assert_eq!(dm.layers.last().unwrap().w_bits, 8);
+        assert!(dm.layers.iter().any(|l| l.w_bits == 3));
+        // every BN layer folded, head kept its bias
+        for (dl, nl) in dm.layers.iter().zip(&m.layers) {
+            assert_eq!(dl.requant.is_some(), nl.bn, "{}", nl.name);
+            assert_eq!(dl.bias.is_some(), nl.bias, "{}", nl.name);
+        }
+        assert!(report.ratio() < 0.26, "packed ratio {}", report.ratio());
+    }
+
+    #[test]
+    fn snapped_codes_match_fake_quant() {
+        let m = zoo_model("efflite").unwrap();
+        let state = m.initial_state();
+        let (dm, _) = export_model(&m, &state, &cfg()).unwrap();
+        for (dl, nl) in dm.layers.iter().zip(&m.layers) {
+            let w = state.get(&format!("params/{}.w", nl.name)).unwrap();
+            let s = state.get(&format!("params/{}.s", nl.name)).unwrap().item().max(1e-8);
+            let (gn, gp) = dl.w_grid();
+            let fq = kernels::fake_quant(&w.data, s, gn, gp);
+            let mut deq = Vec::new();
+            dl.weights.dequant_into(dl.grid_n_int(), dl.w_scale, &mut deq);
+            assert_eq!(deq, fq, "layer {} dequant != fake_quant", nl.name);
+        }
+    }
+
+    #[test]
+    fn frozen_offgrid_weight_aborts_export() {
+        let m = zoo_model("efflite").unwrap();
+        let mut state = m.initial_state();
+        let name = m.lowbit()[0].clone(); // e.g. "b1.dw.w"
+        let bkey = format!("osc/{name}#b");
+        let fkey = format!("osc/{name}#fint");
+        let shape = state.get(&bkey).unwrap().shape.clone();
+        let mut b = Tensor::zeros(&shape);
+        let mut fint = Tensor::zeros(&shape);
+        b.data[0] = 1.0;
+        fint.data[0] = 3.0; // pinned to +3, but the latent weight is not s*3
+        state.insert(bkey, b);
+        state.insert(fkey, fint);
+        assert!(export_model(&m, &state, &cfg()).is_err());
+    }
+}

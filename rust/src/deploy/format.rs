@@ -1,0 +1,491 @@
+//! The deployed-model data structure and the versioned QPKG on-disk
+//! format.
+//!
+//! A [`DeployModel`] is the frozen inference artifact an export produces
+//! from a trained QAT state: per layer the bit-packed integer weight
+//! codes, the LSQ scales, the optional bias, and the BN statistics folded
+//! into a per-channel requantization affine (`y = mult[c] * z + add[c]`).
+//! No training state (momenta, oscillation EMAs, latent weights) and no
+//! running-stat updates survive the export — this struct is everything
+//! inference needs and nothing else.
+//!
+//! QPKG binary layout (all little-endian, version 1):
+//!
+//! ```text
+//! magic  'QPKG'  | u32 version | u16 name_len + name
+//! u32 input_hw   | u32 num_classes | u8 quant_a | u32 bits_w | u32 bits_a
+//! u32 n_layers, then per layer:
+//!   u16 name_len + name
+//!   u8 op (0 = full matmul, 1 = depthwise 3-tap)
+//!   u8 relu | u8 aq | u8 has_bias | u8 has_requant
+//!   u32 d_in | u32 d_out | u32 w_bits | u32 act_bits
+//!   f32 w_scale | f32 a_scale
+//!   [f32 bias; d_out]               (if has_bias)
+//!   [f32 mult; d_out] [f32 add; d_out]   (if has_requant)
+//!   u32 n_codes | u32 n_bytes | packed weight bitstream
+//! ```
+
+use super::packed::Packed;
+use crate::quant::{act_grid, weight_grid};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"QPKG";
+const VERSION: u32 = 1;
+
+/// How a deployed layer mixes its input (mirrors the native zoo ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeployOp {
+    /// dense matmul, weights `[d_in, d_out]` row-major
+    Full,
+    /// circular depthwise 3-tap channel conv, weights `[d_out, 3]`
+    Dw,
+}
+
+/// Per-channel requantization affine (the folded BN): `y = mult*z + add`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Requant {
+    pub mult: Vec<f32>,
+    pub add: Vec<f32>,
+}
+
+/// One deployed layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployLayer {
+    pub name: String,
+    pub op: DeployOp,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub relu: bool,
+    /// input activations are quantized (unsigned LSQ grid `[0, act_p]`)
+    pub aq: bool,
+    pub act_bits: u32,
+    pub a_scale: f32,
+    pub w_bits: u32,
+    pub w_scale: f32,
+    /// packed unsigned weight codes (`grid int - grid_n`)
+    pub weights: Packed,
+    pub bias: Option<Vec<f32>>,
+    pub requant: Option<Requant>,
+}
+
+impl DeployLayer {
+    /// Signed weight grid `[n, p]` for this layer's bit-width.
+    pub fn w_grid(&self) -> (f32, f32) {
+        weight_grid(self.w_bits)
+    }
+
+    /// Grid minimum as the integer code offset.
+    pub fn grid_n_int(&self) -> i32 {
+        -(1i32 << (self.w_bits - 1))
+    }
+
+    /// Unsigned activation grid maximum.
+    pub fn act_p(&self) -> f32 {
+        act_grid(self.act_bits)
+    }
+}
+
+/// A complete deployable model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployModel {
+    pub name: String,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    /// activation quantization was enabled at export
+    pub quant_a: bool,
+    pub bits_w: u32,
+    pub bits_a: u32,
+    pub layers: Vec<DeployLayer>,
+}
+
+impl DeployModel {
+    /// Flattened input width (`hw * hw * 3`).
+    pub fn d_in(&self) -> usize {
+        self.input_hw * self.input_hw * 3
+    }
+
+    /// Total weight count across layers.
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.len).sum()
+    }
+
+    /// Bytes the packed weight payloads occupy.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.num_bytes()).sum()
+    }
+
+    /// Bytes the same weights occupy as f32 (the training-state baseline).
+    pub fn f32_weight_bytes(&self) -> usize {
+        self.total_weights() * 4
+    }
+
+    /// Bytes of non-weight payload (scales, biases, requant constants).
+    pub fn aux_bytes(&self) -> usize {
+        let mut n = 0usize;
+        for l in &self.layers {
+            n += 8; // the two scales
+            if let Some(b) = &l.bias {
+                n += b.len() * 4;
+            }
+            if let Some(r) = &l.requant {
+                n += (r.mult.len() + r.add.len()) * 4;
+            }
+        }
+        n
+    }
+
+    // ---------------------------------------------------------------
+    // serialization
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.packed_weight_bytes() + self.aux_bytes() + 256);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        put_str(&mut buf, &self.name);
+        buf.extend_from_slice(&(self.input_hw as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.num_classes as u32).to_le_bytes());
+        buf.push(self.quant_a as u8);
+        buf.extend_from_slice(&self.bits_w.to_le_bytes());
+        buf.extend_from_slice(&self.bits_a.to_le_bytes());
+        buf.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            put_str(&mut buf, &l.name);
+            buf.push(match l.op {
+                DeployOp::Full => 0,
+                DeployOp::Dw => 1,
+            });
+            buf.push(l.relu as u8);
+            buf.push(l.aq as u8);
+            buf.push(l.bias.is_some() as u8);
+            buf.push(l.requant.is_some() as u8);
+            buf.extend_from_slice(&(l.d_in as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.d_out as u32).to_le_bytes());
+            buf.extend_from_slice(&l.w_bits.to_le_bytes());
+            buf.extend_from_slice(&l.act_bits.to_le_bytes());
+            buf.extend_from_slice(&l.w_scale.to_le_bytes());
+            buf.extend_from_slice(&l.a_scale.to_le_bytes());
+            if let Some(b) = &l.bias {
+                put_f32s(&mut buf, b);
+            }
+            if let Some(r) = &l.requant {
+                put_f32s(&mut buf, &r.mult);
+                put_f32s(&mut buf, &r.add);
+            }
+            buf.extend_from_slice(&(l.weights.len as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.weights.bytes.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&l.weights.bytes);
+        }
+        buf
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("qpkg truncated at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad qpkg magic");
+        }
+        let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        if version != VERSION {
+            bail!("unsupported qpkg version {version}");
+        }
+        let name = get_str(buf, &mut pos)?;
+        let input_hw = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let num_classes = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let quant_a = take(&mut pos, 1)?[0] != 0;
+        let bits_w = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        let bits_a = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+        let n_layers = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        anyhow::ensure!(n_layers <= 4096, "qpkg claims {n_layers} layers");
+        anyhow::ensure!(
+            input_hw > 0 && input_hw <= 4096 && num_classes > 0,
+            "qpkg header: input_hw {input_hw}, num_classes {num_classes}"
+        );
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let lname = get_str(buf, &mut pos)?;
+            let op = match take(&mut pos, 1)?[0] {
+                0 => DeployOp::Full,
+                1 => DeployOp::Dw,
+                other => bail!("layer {lname}: unknown op tag {other}"),
+            };
+            let relu = take(&mut pos, 1)?[0] != 0;
+            let aq = take(&mut pos, 1)?[0] != 0;
+            let has_bias = take(&mut pos, 1)?[0] != 0;
+            let has_requant = take(&mut pos, 1)?[0] != 0;
+            let d_in = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let d_out = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let w_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            let act_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            anyhow::ensure!((1..=8).contains(&w_bits), "layer {lname}: w_bits {w_bits}");
+            let w_scale = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            let a_scale = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            // the engine divides by these scales; the exporter writes
+            // them clamped to >= 1e-8, so demand the symmetric invariant
+            // instead of serving NaN/inf logits from a corrupt file
+            anyhow::ensure!(
+                w_scale.is_finite() && w_scale > 0.0,
+                "layer {lname}: weight scale {w_scale}"
+            );
+            anyhow::ensure!(
+                a_scale.is_finite() && a_scale > 0.0,
+                "layer {lname}: activation scale {a_scale}"
+            );
+            let bias = if has_bias { Some(get_f32s(buf, &mut pos, d_out)?) } else { None };
+            let requant = if has_requant {
+                Some(Requant {
+                    mult: get_f32s(buf, &mut pos, d_out)?,
+                    add: get_f32s(buf, &mut pos, d_out)?,
+                })
+            } else {
+                None
+            };
+            let n_codes = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let n_bytes = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            anyhow::ensure!(
+                n_bytes == (n_codes * w_bits as usize + 7) / 8,
+                "layer {lname}: byte count {n_bytes} inconsistent with {n_codes} codes"
+            );
+            // geometry must be engine-safe: the kernels index the packed
+            // payload by (d_in, d_out), so a mismatch here would panic a
+            // worker thread instead of failing the load
+            let want_codes = match op {
+                DeployOp::Full => d_in * d_out,
+                DeployOp::Dw => d_out * 3,
+            };
+            anyhow::ensure!(
+                n_codes == want_codes,
+                "layer {lname}: {n_codes} codes but geometry {d_in}x{d_out} wants {want_codes}"
+            );
+            if op == DeployOp::Dw {
+                anyhow::ensure!(d_in == d_out, "layer {lname}: depthwise d_in {d_in} != d_out {d_out}");
+            }
+            anyhow::ensure!(
+                (1..=8).contains(&act_bits),
+                "layer {lname}: act_bits {act_bits}"
+            );
+            let bytes = take(&mut pos, n_bytes)?.to_vec();
+            layers.push(DeployLayer {
+                name: lname,
+                op,
+                d_in,
+                d_out,
+                relu,
+                aq,
+                act_bits,
+                a_scale,
+                w_bits,
+                w_scale,
+                weights: Packed { bits: w_bits, len: n_codes, bytes },
+                bias,
+                requant,
+            });
+        }
+        if pos != buf.len() {
+            bail!("qpkg trailing bytes ({} of {})", buf.len() - pos, buf.len());
+        }
+        // cross-layer chaining: the engine feeds each layer's output
+        // straight into the next and slices logits by num_classes, so any
+        // mismatch must fail the load, not panic a serving worker
+        anyhow::ensure!(!layers.is_empty(), "qpkg has no layers");
+        let d_in0 = input_hw * input_hw * 3;
+        anyhow::ensure!(
+            layers[0].d_in == d_in0,
+            "first layer wants {} inputs but input_hw {input_hw} gives {d_in0}",
+            layers[0].d_in
+        );
+        for pair in layers.windows(2) {
+            anyhow::ensure!(
+                pair[0].d_out == pair[1].d_in,
+                "layer {} emits {} but layer {} wants {}",
+                pair[0].name,
+                pair[0].d_out,
+                pair[1].name,
+                pair[1].d_in
+            );
+        }
+        let last = layers.last().expect("non-empty layers");
+        anyhow::ensure!(
+            last.d_out == num_classes,
+            "last layer {} emits {} but the model claims {num_classes} classes",
+            last.name,
+            last.d_out
+        );
+        Ok(DeployModel { name, input_hw, num_classes, quant_a, bits_w, bits_a, layers })
+    }
+
+    pub fn write_qpkg(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn read_qpkg(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    buf.extend_from_slice(&(b.len() as u16).to_le_bytes());
+    buf.extend_from_slice(b);
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    if *pos + 2 > buf.len() {
+        bail!("qpkg truncated at byte {}", *pos);
+    }
+    let n = u16::from_le_bytes(buf[*pos..*pos + 2].try_into()?) as usize;
+    *pos += 2;
+    if *pos + n > buf.len() {
+        bail!("qpkg truncated at byte {}", *pos);
+    }
+    let s = String::from_utf8(buf[*pos..*pos + n].to_vec())?;
+    *pos += n;
+    Ok(s)
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &v in xs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_f32s(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<f32>> {
+    if *pos + n * 4 > buf.len() {
+        bail!("qpkg truncated at byte {}", *pos);
+    }
+    let mut out = Vec::with_capacity(n);
+    for c in buf[*pos..*pos + n * 4].chunks_exact(4) {
+        out.push(f32::from_le_bytes(c.try_into()?));
+    }
+    *pos += n * 4;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DeployModel {
+        // input_hw 2 -> 12 inputs; stem [12, 3] chains into the dw head
+        let codes: Vec<u32> = (0..36).map(|i| i % 8).collect();
+        DeployModel {
+            name: "tiny".into(),
+            input_hw: 2,
+            num_classes: 3,
+            quant_a: true,
+            bits_w: 3,
+            bits_a: 3,
+            layers: vec![
+                DeployLayer {
+                    name: "stem".into(),
+                    op: DeployOp::Full,
+                    d_in: 12,
+                    d_out: 3,
+                    relu: true,
+                    aq: false,
+                    act_bits: 8,
+                    a_scale: 1.0,
+                    w_bits: 3,
+                    w_scale: 0.1,
+                    weights: Packed::pack(&codes, 3).unwrap(),
+                    bias: None,
+                    requant: Some(Requant {
+                        mult: vec![1.0, 0.5, 2.0],
+                        add: vec![0.0, -0.1, 0.2],
+                    }),
+                },
+                DeployLayer {
+                    name: "head".into(),
+                    op: DeployOp::Dw,
+                    d_in: 3,
+                    d_out: 3,
+                    relu: false,
+                    aq: true,
+                    act_bits: 3,
+                    a_scale: 0.05,
+                    w_bits: 4,
+                    w_scale: 0.2,
+                    weights: Packed::pack(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 4).unwrap(),
+                    bias: Some(vec![0.1, 0.2, 0.3]),
+                    requant: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn qpkg_roundtrip() {
+        let m = sample();
+        let bytes = m.to_bytes();
+        let m2 = DeployModel::from_bytes(&bytes).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn qpkg_file_roundtrip() {
+        let dir = std::env::temp_dir().join("qat_deploy_fmt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.qpkg");
+        let m = sample();
+        m.write_qpkg(&p).unwrap();
+        let m2 = DeployModel::read_qpkg(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn qpkg_rejects_corrupt() {
+        assert!(DeployModel::from_bytes(b"NOPE").is_err());
+        let mut bytes = sample().to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        assert!(DeployModel::from_bytes(&bytes).is_err());
+        let mut extra = sample().to_bytes();
+        extra.push(0);
+        assert!(DeployModel::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn size_accounting() {
+        let m = sample();
+        assert_eq!(m.total_weights(), 45);
+        assert_eq!(m.f32_weight_bytes(), 180);
+        // 36 x 3-bit = 14 bytes, 9 x 4-bit = 5 bytes
+        assert_eq!(m.packed_weight_bytes(), 19);
+        assert!(m.aux_bytes() > 0);
+        assert_eq!(m.d_in(), 12);
+    }
+
+    #[test]
+    fn qpkg_rejects_broken_chaining() {
+        // last layer's width must equal num_classes
+        let mut m = sample();
+        m.num_classes = 7;
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // adjacent layers must chain d_out -> d_in
+        let mut m = sample();
+        m.layers[0].d_out = 5; // codes no longer match 12x5 either
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn grid_helpers() {
+        let l = &sample().layers[0];
+        assert_eq!(l.w_grid(), (-4.0, 3.0));
+        assert_eq!(l.grid_n_int(), -4);
+        assert_eq!(l.act_p(), 255.0);
+    }
+}

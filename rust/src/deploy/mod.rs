@@ -1,0 +1,40 @@
+//! Quantized deployment: export, packed integer inference, and serving.
+//!
+//! Everything upstream of this module *simulates* quantization
+//! (fake-quant in f32, BN kept as an op with running statistics). This
+//! subsystem produces and runs the real thing — the deployable integer
+//! artifact the paper's method exists to make accurate:
+//!
+//! * [`export`] — BN-folded export of a trained QAT state: snap weights
+//!   to their LSQ grid (verifying Algorithm-1 frozen weights are already
+//!   on-grid), fold BN running statistics into per-channel
+//!   requantization constants, bit-pack the weight integers at the
+//!   target width.
+//! * [`format`] — the versioned QPKG on-disk model format and the
+//!   [`format::DeployModel`] it round-trips.
+//! * [`packed`] — the bit-packed code vectors (2x int4 per byte, ...).
+//! * [`engine`] — the packed-weight inference engine: an f32 path
+//!   bit-exact against the native backend's fake-quant kernels, and an
+//!   i32-accumulation path for quantized-activation layers.
+//! * [`serve`] — a multi-threaded dynamically-batching request server
+//!   plus the `BENCH_serve.json` throughput/latency benchmark.
+//!
+//! Typical flow (also `examples/deploy_pipeline.rs` and the `export` /
+//! `serve` CLI subcommands):
+//!
+//! ```text
+//! QAT train -> BN re-estimate -> export_model() -> write_qpkg()
+//!                                   read_qpkg() -> Engine -> Server
+//! ```
+
+pub mod engine;
+pub mod export;
+pub mod format;
+pub mod packed;
+pub mod serve;
+
+pub use engine::Engine;
+pub use export::{export_model, ExportCfg, ExportReport};
+pub use format::{DeployLayer, DeployModel, DeployOp, Requant};
+pub use packed::Packed;
+pub use serve::{bench_serve, Server, ServeCfg, ServeReport};

@@ -1,0 +1,146 @@
+//! Bit-packed integer code storage for deployed weights.
+//!
+//! A quantized weight tensor is a vector of grid indices `q in [n, p]`
+//! with `p - n + 1 <= 2^bits` states. On disk and in serving memory the
+//! indices are stored as unsigned offset codes `c = q - n` packed
+//! LSB-first into a contiguous bitstream: 2x int4 per byte, 8x int1 per
+//! byte, int8 one per byte, and odd widths (3/5/6/7 bit) straddling byte
+//! boundaries. This is what makes the exported artifact `bits/32` the
+//! size of the f32 state it came from.
+//!
+//! Codes are limited to 8 bits (the repo's widest grid), so one code
+//! spans at most two bytes and the accessors never need more than a
+//! 16-bit window.
+
+use anyhow::Result;
+
+/// A bit-packed vector of unsigned codes, each `bits` wide.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Packed {
+    /// bits per code, 1..=8
+    pub bits: u32,
+    /// number of codes
+    pub len: usize,
+    /// LSB-first bitstream, `ceil(len * bits / 8)` bytes
+    pub bytes: Vec<u8>,
+}
+
+impl Packed {
+    /// Pack `codes` (each `< 2^bits`) into a bitstream.
+    pub fn pack(codes: &[u32], bits: u32) -> Result<Packed> {
+        anyhow::ensure!((1..=8).contains(&bits), "packed bits {bits} outside 1..=8");
+        let mask = (1u32 << bits) - 1;
+        let bits_us = bits as usize;
+        let mut bytes = vec![0u8; (codes.len() * bits_us + 7) / 8];
+        for (i, &c) in codes.iter().enumerate() {
+            anyhow::ensure!(c <= mask, "code {c} does not fit in {bits} bits");
+            let bit = i * bits_us;
+            let (byte, shift) = (bit / 8, bit % 8);
+            bytes[byte] |= (c << shift) as u8;
+            if shift + bits_us > 8 {
+                bytes[byte + 1] |= (c >> (8 - shift)) as u8;
+            }
+        }
+        Ok(Packed { bits, len: codes.len(), bytes })
+    }
+
+    /// Read the `i`-th code.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.len, "packed index {i} out of {}", self.len);
+        let bits = self.bits as usize;
+        let bit = i * bits;
+        let (byte, shift) = (bit / 8, bit % 8);
+        let lo = self.bytes[byte] as u32;
+        let hi = if shift + bits > 8 { (self.bytes[byte + 1] as u32) << 8 } else { 0 };
+        ((lo | hi) >> shift) & ((1u32 << self.bits) - 1)
+    }
+
+    /// All codes, unpacked.
+    pub fn unpack(&self) -> Vec<u32> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Decode to signed grid integers (`code + grid_n`).
+    pub fn ints_into(&self, grid_n: i32, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(self.len);
+        for i in 0..self.len {
+            out.push(self.get(i) as i32 + grid_n);
+        }
+    }
+
+    /// Decode to the fake-quant weight values `scale * (code + grid_n)`.
+    ///
+    /// Bit-exact against `kernels::fake_quant` for weights already on the
+    /// grid: the grid integer is exactly representable in f32, so the
+    /// single multiply here rounds identically to the kernel's
+    /// `s * clip(round(w/s), n, p)`.
+    pub fn dequant_into(&self, grid_n: i32, scale: f32, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.len);
+        for i in 0..self.len {
+            out.push(scale * ((self.get(i) as i32 + grid_n) as f32));
+        }
+    }
+
+    /// Payload size in bytes.
+    pub fn num_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in 1..=8u32 {
+            let mask = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..53u32).map(|i| (i * 7 + 3) & mask).collect();
+            let p = Packed::pack(&codes, bits).unwrap();
+            assert_eq!(p.len, codes.len());
+            assert_eq!(p.bytes.len(), (codes.len() * bits as usize + 7) / 8);
+            assert_eq!(p.unpack(), codes, "width {bits}");
+        }
+    }
+
+    #[test]
+    fn int4_pairs_per_byte() {
+        let p = Packed::pack(&[0x3, 0xa, 0xf, 0x1], 4).unwrap();
+        assert_eq!(p.bytes, vec![0xa3, 0x1f]);
+        assert_eq!(p.get(1), 0xa);
+        assert_eq!(p.get(3), 0x1);
+    }
+
+    #[test]
+    fn three_bit_codes_straddle_bytes() {
+        // 8 x 3-bit codes fill exactly 3 bytes
+        let codes: Vec<u32> = vec![1, 7, 0, 5, 2, 6, 3, 4];
+        let p = Packed::pack(&codes, 3).unwrap();
+        assert_eq!(p.bytes.len(), 3);
+        assert_eq!(p.unpack(), codes);
+    }
+
+    #[test]
+    fn rejects_overflow_and_bad_width() {
+        assert!(Packed::pack(&[8], 3).is_err());
+        assert!(Packed::pack(&[0], 0).is_err());
+        assert!(Packed::pack(&[0], 9).is_err());
+    }
+
+    #[test]
+    fn signed_decode_applies_grid_offset() {
+        // 3-bit signed grid [-4, 3]: codes are q + 4
+        let q = [-4i32, -1, 0, 3];
+        let codes: Vec<u32> = q.iter().map(|&v| (v + 4) as u32).collect();
+        let p = Packed::pack(&codes, 3).unwrap();
+        let mut ints = Vec::new();
+        p.ints_into(-4, &mut ints);
+        assert_eq!(ints, q);
+        let mut deq = Vec::new();
+        p.dequant_into(-4, 0.25, &mut deq);
+        assert_eq!(deq, vec![-1.0, -0.25, 0.0, 0.75]);
+    }
+}

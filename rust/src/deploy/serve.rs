@@ -1,0 +1,428 @@
+//! Batched serving front-end over the packed inference engine.
+//!
+//! Architecture (std channels + threads, no external deps):
+//!
+//! ```text
+//! submit() --> ingress (bounded sync_channel, backpressure)
+//!                 |
+//!              batcher thread: drains up to max_batch queued requests
+//!                 |            into one dynamic batch
+//!              dispatch channel
+//!                 |
+//!              worker pool (N threads, shared Mutex<Receiver>):
+//!                 concatenate inputs -> Engine::forward_batch -> one
+//!                 Response per request through its own channel
+//! ```
+//!
+//! Dynamic batching is what makes the engine's per-layer weight decode
+//! pay off: the packed weights are unpacked once per *batch*, not once
+//! per request, so throughput grows with queue pressure while lightly
+//! loaded requests still see single-digit-batch latency.
+//!
+//! [`bench_serve`] drives a full open-loop benchmark and renders the
+//! `BENCH_serve.json` report the CI perf trajectory tracks.
+
+use super::engine::{argmax, Engine};
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving knobs.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// inference worker threads
+    pub workers: usize,
+    /// largest dynamic batch one worker runs
+    pub max_batch: usize,
+    /// ingress queue capacity (submit blocks when full — backpressure)
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { workers: 4, max_batch: 16, queue_cap: 1024 }
+    }
+}
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    /// submit-to-response wall time
+    pub latency: Duration,
+    /// size of the dynamic batch this request rode in
+    pub batch_size: usize,
+}
+
+struct Job {
+    id: u64,
+    x: Vec<f32>,
+    t0: Instant,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Shared serving counters.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    /// most recent engine failure (jobs of a failed batch are dropped,
+    /// which closes their response channels; the cause is kept here)
+    pub last_error: Mutex<Option<String>>,
+}
+
+/// A running server: batcher + worker pool around one shared engine.
+pub struct Server {
+    ingress: mpsc::SyncSender<Job>,
+    batcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<ServeStats>,
+    next_id: AtomicU64,
+    d_in: usize,
+}
+
+impl Server {
+    /// Spawn the batcher and worker threads.
+    pub fn start(engine: Arc<Engine>, cfg: &ServeCfg) -> Server {
+        let d_in = engine.model().d_in();
+        let num_classes = engine.model().num_classes;
+        let max_batch = cfg.max_batch.max(1);
+        let n_workers = cfg.workers.max(1);
+        let stats = Arc::new(ServeStats::default());
+
+        let (in_tx, in_rx) = mpsc::sync_channel::<Job>(cfg.queue_cap.max(1));
+        let (disp_tx, disp_rx) = mpsc::sync_channel::<Vec<Job>>(n_workers * 2);
+
+        let batcher_stats = stats.clone();
+        let batcher = std::thread::spawn(move || {
+            while let Ok(first) = in_rx.recv() {
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    match in_rx.try_recv() {
+                        Ok(job) => batch.push(job),
+                        Err(_) => break,
+                    }
+                }
+                batcher_stats.batches.fetch_add(1, Ordering::Relaxed);
+                if disp_tx.send(batch).is_err() {
+                    return; // workers gone
+                }
+            }
+            // ingress closed: disp_tx drops here and the workers drain out
+        });
+
+        let disp_rx = Arc::new(Mutex::new(disp_rx));
+        let workers = (0..n_workers)
+            .map(|_| {
+                let rx = disp_rx.clone();
+                let eng = engine.clone();
+                let st = stats.clone();
+                std::thread::spawn(move || loop {
+                    let got = rx.lock().expect("dispatch lock").recv();
+                    let Ok(jobs) = got else { return };
+                    let b = jobs.len();
+                    let mut x = Vec::with_capacity(b * d_in);
+                    for j in &jobs {
+                        x.extend_from_slice(&j.x);
+                    }
+                    match eng.forward_batch(&x, b) {
+                        Ok(logits) => {
+                            for (i, job) in jobs.into_iter().enumerate() {
+                                let row = &logits[i * num_classes..(i + 1) * num_classes];
+                                let resp = Response {
+                                    id: job.id,
+                                    pred: argmax(row),
+                                    logits: row.to_vec(),
+                                    latency: job.t0.elapsed(),
+                                    batch_size: b,
+                                };
+                                st.requests.fetch_add(1, Ordering::Relaxed);
+                                let _ = job.tx.send(resp);
+                            }
+                        }
+                        Err(e) => {
+                            // dropping the jobs closes their response
+                            // channels; clients observe the failure and
+                            // the cause is preserved for the front-end
+                            eprintln!("[serve] batch of {b} failed: {e}");
+                            *st.last_error.lock().expect("stats lock") = Some(e.to_string());
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        Server {
+            ingress: in_tx,
+            batcher,
+            workers,
+            stats,
+            next_id: AtomicU64::new(0),
+            d_in,
+        }
+    }
+
+    /// Enqueue one request; the returned channel yields its [`Response`].
+    /// Blocks when the ingress queue is full (backpressure).
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(
+            x.len() == self.d_in,
+            "serve: request has {} features, model wants {}",
+            x.len(),
+            self.d_in
+        );
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.ingress
+            .send(Job { id, x, t0: Instant::now(), tx })
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Drain and stop: closes the ingress, joins the batcher and every
+    /// worker, and returns (batches, requests) served.
+    pub fn shutdown(self) -> (u64, u64) {
+        let Server { ingress, batcher, workers, stats, .. } = self;
+        drop(ingress);
+        let _ = batcher.join();
+        for w in workers {
+            let _ = w.join();
+        }
+        (stats.batches.load(Ordering::Relaxed), stats.requests.load(Ordering::Relaxed))
+    }
+}
+
+/// One serving benchmark result (rendered into BENCH_serve.json).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub backend_mode: String,
+    pub requests: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+    pub mean_batch: f64,
+    pub batches: u64,
+    /// per-request top-1 predictions, submit order
+    pub preds: Vec<usize>,
+}
+
+impl ServeReport {
+    /// JSON object (predictions excluded — they are test surface, not
+    /// a perf metric).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".to_string(), Json::Str(self.model.clone()));
+        o.insert("backend_mode".to_string(), Json::Str(self.backend_mode.clone()));
+        o.insert("requests".to_string(), Json::Num(self.requests as f64));
+        o.insert("workers".to_string(), Json::Num(self.workers as f64));
+        o.insert("max_batch".to_string(), Json::Num(self.max_batch as f64));
+        o.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        o.insert("throughput_rps".to_string(), Json::Num(self.throughput_rps));
+        o.insert("p50_ms".to_string(), Json::Num(self.p50_ms));
+        o.insert("p95_ms".to_string(), Json::Num(self.p95_ms));
+        o.insert("max_ms".to_string(), Json::Num(self.max_ms));
+        o.insert("mean_batch".to_string(), Json::Num(self.mean_batch));
+        o.insert("batches".to_string(), Json::Num(self.batches as f64));
+        Json::Obj(o)
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, crate::json::to_string(&self.to_json()))
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} [{}]: {} requests, {:.0} req/s, p50 {:.2}ms p95 {:.2}ms, \
+             mean batch {:.1} over {} batches ({} workers, max_batch {})",
+            self.model,
+            self.backend_mode,
+            self.requests,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.mean_batch,
+            self.batches,
+            self.workers,
+            self.max_batch
+        )
+    }
+}
+
+/// Open-loop throughput/latency benchmark: submit every input as its own
+/// request, collect every response, report percentiles.
+pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> Result<ServeReport> {
+    anyhow::ensure!(!inputs.is_empty(), "bench_serve: no inputs");
+    let model = engine.model().name.clone();
+    let mode = if engine.int_accum { "int-accum" } else { "f32-exact" };
+    let server = Server::start(engine, cfg);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(inputs.len());
+    for x in inputs {
+        rxs.push(server.submit(x.clone())?);
+    }
+    let mut preds = Vec::with_capacity(inputs.len());
+    let mut latencies = Vec::with_capacity(inputs.len());
+    let mut batch_sum = 0usize;
+    for rx in &rxs {
+        let r = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                let cause = server
+                    .stats()
+                    .last_error
+                    .lock()
+                    .expect("stats lock")
+                    .clone()
+                    .unwrap_or_else(|| "response channel closed".into());
+                return Err(anyhow::anyhow!("serve response lost: {cause}"));
+            }
+        };
+        preds.push(r.pred);
+        latencies.push(r.latency);
+        batch_sum += r.batch_size;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (batches, served) = server.shutdown();
+    anyhow::ensure!(
+        served as usize == inputs.len(),
+        "served {served} of {} requests",
+        inputs.len()
+    );
+    latencies.sort();
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    let pick = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+    Ok(ServeReport {
+        model,
+        backend_mode: mode.to_string(),
+        requests: inputs.len(),
+        workers: cfg.workers.max(1),
+        max_batch: cfg.max_batch.max(1),
+        wall_s: wall,
+        throughput_rps: inputs.len() as f64 / wall.max(1e-9),
+        p50_ms: ms(pick(0.5)),
+        p95_ms: ms(pick(0.95)),
+        max_ms: ms(*latencies.last().expect("non-empty latencies")),
+        mean_batch: batch_sum as f64 / inputs.len().max(1) as f64,
+        batches,
+        preds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+    use crate::deploy::packed::Packed;
+
+    /// 12-feature identity-flavoured single-layer model: hw=2 so d_in =
+    /// 2*2*3 = 12, 3 output classes.
+    fn tiny_model() -> DeployModel {
+        // weights [12, 3] on a 3-bit grid, s = 0.5: class c sums feature
+        // block c (features 4c..4c+4 get weight +1 = code 5)
+        let mut codes = vec![4u32; 12 * 3]; // grid int 0
+        for c in 0..3usize {
+            for f in 0..4usize {
+                codes[(c * 4 + f) * 3 + c] = 6; // grid int +2 -> weight 1.0
+            }
+        }
+        DeployModel {
+            name: "tiny".into(),
+            input_hw: 2,
+            num_classes: 3,
+            quant_a: false,
+            bits_w: 3,
+            bits_a: 8,
+            layers: vec![DeployLayer {
+                name: "head".into(),
+                op: DeployOp::Full,
+                d_in: 12,
+                d_out: 3,
+                relu: false,
+                aq: false,
+                act_bits: 8,
+                a_scale: 1.0,
+                w_bits: 3,
+                w_scale: 0.5,
+                weights: Packed::pack(&codes, 3).unwrap(),
+                bias: None,
+                requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
+            }],
+        }
+    }
+
+    fn one_hot_block(c: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; 12];
+        for f in 0..4 {
+            x[c * 4 + f] = 1.0;
+        }
+        x
+    }
+
+    #[test]
+    fn server_routes_batched_requests() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let server = Server::start(engine, &ServeCfg { workers: 3, max_batch: 4, queue_cap: 64 });
+        let rxs: Vec<_> = (0..30)
+            .map(|i| server.submit(one_hot_block(i % 3)).unwrap())
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.pred, i % 3, "request {i}");
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+            assert_eq!(r.logits.len(), 3);
+        }
+        let (batches, requests) = server.shutdown();
+        assert_eq!(requests, 30);
+        assert!(batches >= 8, "max_batch 4 needs >= 8 batches for 30 requests");
+    }
+
+    #[test]
+    fn submit_rejects_wrong_width() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let server = Server::start(engine, &ServeCfg::default());
+        assert!(server.submit(vec![0.0; 5]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn bench_serve_reports_and_roundtrips_json() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let inputs: Vec<Vec<f32>> = (0..40).map(|i| one_hot_block(i % 3)).collect();
+        let cfg = ServeCfg { workers: 2, max_batch: 8, queue_cap: 16 };
+        let report = bench_serve(engine, &cfg, &inputs).unwrap();
+        assert_eq!(report.requests, 40);
+        assert_eq!(report.preds.len(), 40);
+        for (i, &p) in report.preds.iter().enumerate() {
+            assert_eq!(p, i % 3);
+        }
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_ms <= report.p95_ms + 1e-9);
+        assert!(report.mean_batch >= 1.0);
+        let j = report.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(40));
+        let dir = std::env::temp_dir().join("qat_serve_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_serve.json");
+        report.write_json(&p).unwrap();
+        let parsed = crate::json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(parsed.get("model").as_str(), Some("tiny"));
+    }
+}

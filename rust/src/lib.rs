@@ -36,6 +36,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod deploy;
 pub mod json;
 pub mod metrics;
 pub mod osc;
@@ -46,6 +47,7 @@ pub mod state;
 pub mod tensor;
 pub mod toy;
 
+pub use deploy::{DeployModel, Engine};
 pub use runtime::{auto_backend, backend_by_name, Artifact, Backend, NativeBackend, Runtime};
 pub use state::NamedTensors;
 pub use tensor::Tensor;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train    one training run (FP or QAT) with full knob control
 //!   eval     evaluate a checkpoint on the validation split
+//!   export   QAT state -> BN-folded bit-packed integer model (.qpkg)
+//!   serve    batched-serving throughput/latency benchmark over a .qpkg
 //!   toy      the 1-D toy regression (prints a trace)
 //!   table1..table8, fig1..fig6   regenerate a paper table/figure
 //!   suite    run every table + figure in one process (artifact compiles
@@ -32,6 +34,10 @@ USAGE: oscillations-qat <subcommand> [flags]
   train     --model mbv2 --estimator lsq --steps 400 --bits-w 3 [--bits-a 3 --quant-a]
             [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0] [--fp-steps 600]
   eval      --model mbv2 --ckpt ckpts/<tag>.qtns --bits-w 3 [--fp | --quant-a]
+  export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a] [--out m.qpkg]
+            [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
+  serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
+            [--exact] [--smoke] [--bench-out BENCH_serve.json]
   toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
   suite     [--quick]       run everything in one process
@@ -81,6 +87,8 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(&lab, &args)?,
         "eval" => cmd_eval(be, &args)?,
+        "export" => cmd_export(&lab, &args)?,
+        "serve" => cmd_serve(&args)?,
         "table1" => drop(lab.table1()?),
         "table2" => drop(lab.table2()?),
         "table3" => drop(lab.table3()?),
@@ -138,7 +146,15 @@ fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
 
 fn cmd_eval(rt: &dyn Backend, args: &Args) -> Result<()> {
     let model = args.str_or("model", "mbv2");
-    let ckpt = PathBuf::from(args.str_or("ckpt", ""));
+    // `eval --fp ckpts/run.qtns` keeps the path positional (--fp is a
+    // declared boolean flag), so accept it there too
+    let ckpt_arg = args.get("ckpt").map(String::from).or_else(|| {
+        args.positional.first().cloned()
+    });
+    let Some(ckpt_arg) = ckpt_arg else {
+        anyhow::bail!("eval needs a checkpoint: --ckpt <state.qtns> (or positional)");
+    };
+    let ckpt = PathBuf::from(ckpt_arg);
     let state = oscillations_qat::state::NamedTensors::read_qtns(&ckpt)?;
     let ev = Evaluator::new(rt, &model)?;
     let bits = args.u32_or("bits-w", 3);
@@ -151,6 +167,106 @@ fn cmd_eval(rt: &dyn Backend, args: &Args) -> Result<()> {
     };
     let r = ev.eval_val(&state, &Default::default(), q)?;
     println!("val acc {:.2}%  loss {:.4}  ({} samples)", r.acc, r.loss, r.samples);
+    Ok(())
+}
+
+fn cmd_export(lab: &Lab, args: &Args) -> Result<()> {
+    use oscillations_qat::deploy::export::{export_model, ExportCfg};
+    use oscillations_qat::runtime::native::model::zoo_model;
+
+    let model = args.str_or("model", "mbv2");
+    let bits_w = args.u32_or("bits-w", 3);
+    let bits_a = args.u32_or("bits-a", bits_w);
+    let quant_a = args.flag("quant-a");
+    let out = PathBuf::from(args.str_or("out", &format!("{model}_w{bits_w}.qpkg")));
+    let cfg = ExportCfg { bits_w, bits_a, quant_a };
+
+    let (dm, report) = if let Some(ckpt) = args.get("ckpt") {
+        // export a saved state directly (assumed already BN-re-estimated)
+        let state = oscillations_qat::state::NamedTensors::read_qtns(&PathBuf::from(ckpt))?;
+        let nm = zoo_model(&model)
+            .ok_or_else(|| anyhow::anyhow!("no zoo model {model:?} to export"))?;
+        export_model(&nm, &state, &cfg)?
+    } else {
+        // full pipeline: FP pretrain -> QAT -> BN re-estimation -> export
+        let spec = QatSpec {
+            model: model.clone(),
+            estimator: args.str_or("estimator", "lsq"),
+            bits_w,
+            bits_a,
+            quant_a,
+            lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
+            f_th: Schedule::parse(&args.str_or("f-th", "cos(0.04,0.01)")).expect("bad --f-th"),
+            seed: args.u64_or("seed", 0),
+            trace: None,
+        };
+        let (outcome, dm, report) = lab.run_qat_and_export(&spec)?;
+        println!(
+            "trained: pre-BN {:.2}%  post-BN {:.2}%  frozen {:.2}%",
+            outcome.pre_bn_acc, outcome.post_bn_acc, outcome.frozen_pct
+        );
+        (dm, report)
+    };
+    dm.write_qpkg(&out)?;
+    let file_bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "exported {} -> {}: {} layers, {} weights, {} frozen verified, \
+         max off-grid {:.4} grid units, packed {} B vs f32 {} B (ratio {:.3}), file {} B",
+        model,
+        out.display(),
+        report.layers,
+        report.total_weights,
+        report.frozen_verified,
+        report.max_offgrid,
+        report.packed_bytes,
+        report.f32_bytes,
+        report.ratio(),
+        file_bytes
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use oscillations_qat::data::{DataCfg, Dataset};
+    use oscillations_qat::deploy::format::DeployModel;
+    use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
+    use oscillations_qat::deploy::Engine;
+    use std::sync::Arc;
+
+    let qpkg = args.str_or("qpkg", "");
+    anyhow::ensure!(!qpkg.is_empty(), "serve needs --qpkg <model.qpkg> (see `export`)");
+    let dm = DeployModel::read_qpkg(&PathBuf::from(&qpkg))?;
+    let engine = Arc::new(Engine::with_mode(dm, !args.flag("exact")));
+
+    let smoke = args.flag("smoke");
+    let requests = args.u64_or("requests", if smoke { 256 } else { 2048 }) as usize;
+    let cfg = ServeCfg {
+        workers: args.u64_or("workers", 4) as usize,
+        max_batch: args.u64_or("max-batch", 16) as usize,
+        queue_cap: args.u64_or("queue-cap", 1024) as usize,
+    };
+
+    // request stream: individual samples from the deterministic val
+    // split, generated once and cycled to the requested count
+    let d_in = engine.model().d_in();
+    let hw = engine.model().input_hw;
+    let ds = Dataset::new(DataCfg { val_size: 256, hw, ..Default::default() });
+    let mut samples: Vec<Vec<f32>> = Vec::new();
+    for b in ds.val_batches() {
+        let bs = b.x.shape[0];
+        for i in 0..bs {
+            samples.push(b.x.data[i * d_in..(i + 1) * d_in].to_vec());
+        }
+    }
+    anyhow::ensure!(!samples.is_empty(), "empty validation stream");
+    let inputs: Vec<Vec<f32>> =
+        (0..requests).map(|i| samples[i % samples.len()].clone()).collect();
+
+    let report = bench_serve(engine, &cfg, &inputs)?;
+    println!("{}", report.summary());
+    let out = PathBuf::from(args.str_or("bench-out", "BENCH_serve.json"));
+    report.write_json(&out)?;
+    println!("report -> {}", out.display());
     Ok(())
 }
 

@@ -24,13 +24,36 @@ pub fn weight_scale_of(name: &str) -> String {
     name.strip_suffix(".w").map(|s| format!("{s}.s")).unwrap_or_else(|| format!("{name}.s"))
 }
 
+/// Per-tensor oscillation/freezing counts (one [`OscSummary`] row).
+#[derive(Debug, Clone)]
+pub struct TensorOscStats {
+    /// weight-tensor name (`b1.dw.w`, ...)
+    pub name: String,
+    /// weights in the tensor
+    pub total: usize,
+    /// weights with frequency EMA above [`OSC_METRIC_TH`]
+    pub oscillating: usize,
+    /// weights frozen by Algorithm 1
+    pub frozen: usize,
+}
+
+impl TensorOscStats {
+    pub fn osc_pct(&self) -> f64 {
+        100.0 * self.oscillating as f64 / self.total.max(1) as f64
+    }
+
+    pub fn frozen_pct(&self) -> f64 {
+        100.0 * self.frozen as f64 / self.total.max(1) as f64
+    }
+}
+
 /// Aggregated oscillation summary.
 #[derive(Debug, Clone, Default)]
 pub struct OscSummary {
     pub total_weights: usize,
     pub oscillating: usize,
     pub frozen: usize,
-    pub per_tensor: Vec<(String, usize, usize, usize)>, // name, total, osc, frozen
+    pub per_tensor: Vec<TensorOscStats>,
 }
 
 impl OscSummary {
@@ -54,7 +77,12 @@ pub fn summarize(state: &NamedTensors, lowbit: &[String]) -> OscSummary {
         out.total_weights += f.len();
         out.oscillating += osc;
         out.frozen += frozen;
-        out.per_tensor.push((name.clone(), f.len(), osc, frozen));
+        out.per_tensor.push(TensorOscStats {
+            name: name.clone(),
+            total: f.len(),
+            oscillating: osc,
+            frozen,
+        });
     }
     out
 }
@@ -138,6 +166,15 @@ mod tests {
         assert_eq!(sum.oscillating, 2); // 0.01 and 0.2
         assert_eq!(sum.frozen, 1);
         assert!((sum.osc_pct() - 50.0).abs() < 1e-9);
+        // per-tensor rows carry the same counts under self-documenting names
+        assert_eq!(sum.per_tensor.len(), 1);
+        let row = &sum.per_tensor[0];
+        assert_eq!(row.name, "a.w");
+        assert_eq!(row.total, 4);
+        assert_eq!(row.oscillating, 2);
+        assert_eq!(row.frozen, 1);
+        assert!((row.osc_pct() - 50.0).abs() < 1e-9);
+        assert!((row.frozen_pct() - 25.0).abs() < 1e-9);
     }
 
     #[test]

@@ -23,7 +23,8 @@ use crate::state::NamedTensors;
 use crate::tensor::{round_ties_even, Tensor};
 use anyhow::{Context, Result};
 
-const BN_EPS: f32 = 1e-5;
+/// Batch-norm variance epsilon, shared with the deploy export's BN fold.
+pub const BN_EPS: f32 = 1e-5;
 
 /// Hyper scalars threaded into every artifact call.
 #[derive(Debug, Clone, Copy)]
@@ -628,16 +629,25 @@ pub fn train_step(
     Ok(out)
 }
 
-/// Inference pass over one batch: `correct` count and mean CE `loss`.
+/// Inference pass over one batch: `correct` count, mean CE `loss`, and
+/// the per-sample top-1 `pred` (the deploy round-trip's agreement
+/// reference).
 pub fn eval_step(model: &NativeModel, sources: &[&NamedTensors]) -> Result<NamedTensors> {
     let h = hyper(sources)?;
     let y = req(sources, "batch/y")?;
     let b = model.batch_size_of(sources)?;
     let fwd = forward(model, sources, &h, BnMode::Running)?;
-    let (ce, correct, _) = softmax_ce(&fwd.logits, &y.data, b, model.num_classes);
+    let c = model.num_classes;
+    let (ce, correct, _) = softmax_ce(&fwd.logits, &y.data, b, c);
+    let mut preds = Vec::with_capacity(b);
+    for bi in 0..b {
+        let row = &fwd.logits[bi * c..(bi + 1) * c];
+        preds.push(crate::tensor::argmax(row) as f32);
+    }
     let mut out = NamedTensors::new();
     out.insert("correct", Tensor::scalar(correct));
     out.insert("loss", Tensor::scalar(ce));
+    out.insert("pred", Tensor::new(vec![b], preds));
     Ok(out)
 }
 

@@ -234,7 +234,11 @@ impl Backend for NativeBackend {
         }
         let scalar = |name: &str| TensorSpec { name: name.into(), shape: vec![] };
         let outputs: Vec<TensorSpec> = match role {
-            "eval" => vec![scalar("correct"), scalar("loss")],
+            "eval" => vec![
+                scalar("correct"),
+                scalar("loss"),
+                TensorSpec { name: "pred".into(), shape: vec![m.batch_size] },
+            ],
             "bnstats" => {
                 let mut outs = Vec::new();
                 for l in &m.layers {

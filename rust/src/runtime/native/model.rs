@@ -135,6 +135,12 @@ pub fn zoo() -> Vec<NativeModel> {
     ]
 }
 
+/// Zoo lookup by name (the deploy export needs the layer structure, not
+/// just the `ModelInfo` index row).
+pub fn zoo_model(name: &str) -> Option<NativeModel> {
+    zoo().into_iter().find(|m| m.name == name)
+}
+
 /// Per-model deterministic seed for weight init.
 fn seed_of(name: &str) -> u64 {
     name.bytes().fold(0x9e3779b97f4a7c15u64, |h, b| {

@@ -81,14 +81,22 @@ impl Tensor {
 
     /// Index of the maximum element (first on ties).
     pub fn argmax(&self) -> usize {
-        let mut best = 0;
-        for (i, &v) in self.data.iter().enumerate() {
-            if v > self.data[best] {
-                best = i;
-            }
-        }
-        best
+        argmax(&self.data)
     }
+}
+
+/// Index of the maximum element of a slice, first on ties. The single
+/// tie-breaking rule shared by eval, the deploy engine and the serving
+/// layer — the deploy round-trip's 100%-agreement contract depends on
+/// all prediction paths using this one implementation.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 /// Round-half-to-even, matching XLA's `round-nearest-even` (and therefore

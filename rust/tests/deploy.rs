@@ -1,0 +1,189 @@
+//! Deployment round-trip: QAT-train a zoo model natively, export it with
+//! BN folding into a bit-packed integer artifact, and check that (a) the
+//! QPKG file round-trips, (b) the packed file honours the `bits/32` size
+//! budget, and (c) the packed integer engine — standalone and behind the
+//! batched serving front-end — reproduces the fake-quant eval path's
+//! top-1 predictions on the validation split exactly.
+
+use oscillations_qat::coordinator::evaluator::EvalQuant;
+use oscillations_qat::coordinator::{bn_restim, qat, RunCfg, Schedule, Trainer};
+use oscillations_qat::data::{DataCfg, Dataset};
+use oscillations_qat::deploy::export::{export_model, ExportCfg};
+use oscillations_qat::deploy::format::DeployModel;
+use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
+use oscillations_qat::deploy::Engine;
+use oscillations_qat::runtime::native::model::zoo_model;
+use oscillations_qat::runtime::{Backend, NativeBackend};
+use oscillations_qat::state::NamedTensors;
+use std::sync::Arc;
+
+const MODEL: &str = "efflite";
+const BITS: u32 = 4;
+const D_IN: usize = 16 * 16 * 3;
+
+fn small_data() -> DataCfg {
+    DataCfg { val_size: 64, ..Default::default() }
+}
+
+/// Train a W4/A4 QAT model with the freezing schedule and re-estimated
+/// BN statistics — the state every check below exports.
+fn trained_state(be: &NativeBackend) -> NamedTensors {
+    let data = small_data();
+    let trainer = Trainer::new(be);
+    let mut fp = RunCfg::fp(MODEL, 60, 0.02, 0);
+    fp.data = data.clone();
+    let run = trainer.train(be.initial_state(MODEL).unwrap(), &fp).unwrap();
+    let mut state = run.state;
+
+    qat::prepare_qat(be, &mut state, MODEL, BITS, BITS, &data, 0).unwrap();
+    let mut cfg = RunCfg::qat(MODEL, 80, BITS, 0);
+    cfg.quant_a = true;
+    cfg.data = data.clone();
+    cfg.f_th = Schedule::Cosine { from: 0.04, to: 0.01 };
+    cfg.m_osc = 0.1;
+    let run = trainer.train(state, &cfg).unwrap();
+    let mut state = run.state;
+
+    let q = EvalQuant::full(BITS);
+    bn_restim::reestimate(be, &mut state, MODEL, q, &data, 0, 8).unwrap();
+    state
+}
+
+/// Per-sample top-1 predictions of the simulated fake-quant eval path,
+/// plus the flattened per-sample inputs.
+fn reference_preds(be: &NativeBackend, state: &NamedTensors) -> (Vec<usize>, Vec<Vec<f32>>) {
+    let info = be.index().model(MODEL).unwrap().clone();
+    let eval_name = info.artifacts["eval"].clone();
+    let hyper = EvalQuant::full(BITS).hyper();
+    let ds = Dataset::new(small_data());
+    let mut preds = vec![];
+    let mut inputs = vec![];
+    for bch in ds.val_batches() {
+        let b = bch.x.shape[0];
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", bch.x.clone());
+        io.insert("batch/y", bch.y.clone());
+        let out = be.execute(&eval_name, &[state, &io, &hyper]).unwrap();
+        let p = out.expect("pred").unwrap();
+        assert_eq!(p.len(), b);
+        for i in 0..b {
+            preds.push(p.data[i] as usize);
+            inputs.push(bch.x.data[i * D_IN..(i + 1) * D_IN].to_vec());
+        }
+    }
+    (preds, inputs)
+}
+
+fn agreement(got: &[usize], want: &[usize]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    let hits = got.iter().zip(want).filter(|(a, b)| a == b).count();
+    hits as f64 / want.len().max(1) as f64
+}
+
+#[test]
+fn deploy_roundtrip_suite() {
+    let be = NativeBackend::new();
+    let state = trained_state(&be);
+    let (ref_preds, inputs) = reference_preds(&be, &state);
+    assert_eq!(ref_preds.len(), 64);
+
+    // ---- export with BN folding + grid snapping -----------------------
+    let nm = zoo_model(MODEL).unwrap();
+    let cfg = ExportCfg { bits_w: BITS, bits_a: BITS, quant_a: true };
+    let (dm, report) = export_model(&nm, &state, &cfg).unwrap();
+    assert_eq!(report.layers, nm.layers.len());
+    assert!(report.total_weights > 10_000, "{report:?}");
+    assert!(
+        report.frozen_verified > 0,
+        "the freezing schedule should have frozen (and verified) weights: {report:?}"
+    );
+    // non-frozen weights land within half a grid step of their snapped int
+    assert!(
+        report.max_offgrid <= 0.5 + 1e-6,
+        "snap distance out of range: {report:?}"
+    );
+    // BN layers all folded away; no layer carries BN state
+    for l in &dm.layers {
+        assert!(l.requant.is_some() || l.name == "head", "{} lost its BN fold", l.name);
+    }
+
+    // ---- size budget: packed file <= (bits/32 + eps) * f32 weights ----
+    // every layer is at most 8-bit, so the whole-file budget is 8/32 of
+    // the f32 weight payload plus the small per-layer aux/header epsilon
+    let dir = std::env::temp_dir().join(format!("qat_deploy_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.qpkg");
+    dm.write_qpkg(&path).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len() as f64;
+    let f32_bytes = dm.f32_weight_bytes() as f64;
+    let eps_bytes = (dm.aux_bytes() + 64 * dm.layers.len() + 256) as f64;
+    assert!(
+        file_bytes <= f32_bytes * (8.0 / 32.0) + eps_bytes,
+        "qpkg {} B exceeds the bits/32 budget over {} f32 B (+{} eps)",
+        file_bytes,
+        f32_bytes,
+        eps_bytes
+    );
+    // the 4-bit interior really packs 2 codes per byte
+    for l in dm.layers.iter().filter(|l| l.w_bits == 4) {
+        assert_eq!(l.weights.num_bytes(), (l.weights.len + 1) / 2, "{}", l.name);
+    }
+
+    // ---- QPKG round-trip ---------------------------------------------
+    let dm2 = DeployModel::read_qpkg(&path).unwrap();
+    assert_eq!(dm, dm2);
+
+    // ---- packed engine vs the fake-quant eval path --------------------
+    // The linear kernels are bit-exact against the interpreter; the
+    // folded BN affine differs from the BN op sequence only in f32
+    // association (ulp-level, see the verified BN-fold deviation bound of
+    // ~2e-7 relative). 100% agreement is therefore asserted empirically
+    // for this pinned (model, seed, bits) configuration — if this ever
+    // trips after changing those knobs, inspect the offending sample's
+    // top-2 logit margin before suspecting the engine.
+    // f32-exact mode: replays the simulated kernels' arithmetic
+    let exact = Engine::with_mode(dm.clone(), false);
+    let mut exact_preds = vec![];
+    for x in &inputs {
+        exact_preds.push(exact.predict_batch(x, 1).unwrap()[0]);
+    }
+    assert_eq!(
+        agreement(&exact_preds, &ref_preds),
+        1.0,
+        "f32-exact engine disagrees with the fake-quant eval path"
+    );
+
+    // i32-accumulation mode (the deployment path), batched
+    let int = Engine::new(dm2);
+    let mut int_preds = vec![];
+    for chunk in inputs.chunks(16) {
+        let mut x = Vec::with_capacity(chunk.len() * D_IN);
+        for s in chunk {
+            x.extend_from_slice(s);
+        }
+        int_preds.extend(int.predict_batch(&x, chunk.len()).unwrap());
+    }
+    assert_eq!(
+        agreement(&int_preds, &ref_preds),
+        1.0,
+        "integer engine disagrees with the fake-quant eval path"
+    );
+
+    // ---- batched serving front-end ------------------------------------
+    let scfg = ServeCfg { workers: 4, max_batch: 8, queue_cap: 64 };
+    let report = bench_serve(Arc::new(int), &scfg, &inputs).unwrap();
+    assert_eq!(report.requests, inputs.len());
+    assert_eq!(
+        agreement(&report.preds, &ref_preds),
+        1.0,
+        "served predictions disagree with the fake-quant eval path"
+    );
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.mean_batch >= 1.0);
+    eprintln!(
+        "[deploy] {MODEL} w{BITS}a{BITS}: 100% top-1 agreement over {} samples; {}",
+        ref_preds.len(),
+        report.summary()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

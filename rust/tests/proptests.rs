@@ -9,6 +9,8 @@
 use oscillations_qat::analysis::histogram::Histogram;
 use oscillations_qat::analysis::kl::gaussian_kl;
 use oscillations_qat::coordinator::Schedule;
+use oscillations_qat::deploy::engine::{packed_dw, packed_matmul, packed_matmul_i32};
+use oscillations_qat::deploy::packed::Packed;
 use oscillations_qat::json;
 use oscillations_qat::quant::{self, range_est};
 use oscillations_qat::rng::Pcg32;
@@ -288,6 +290,120 @@ fn native_quant_matmul_matches_naive() {
                 );
             }
         }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Deploy-engine bit-exactness (packed integer inference vs the native
+// fake-quant kernels)
+
+/// Snap `w` to the grid and bit-pack it — through the exporter's own
+/// mapping, so these properties test the real encoding.
+fn pack_like_export(w: &[f32], s: f32, bits: u32) -> (Packed, i32) {
+    oscillations_qat::deploy::export::snap_and_pack(w, s, bits).unwrap()
+}
+
+#[test]
+fn packed_roundtrip_arbitrary_codes() {
+    for_random_cases(200, "packed_roundtrip", |rng| {
+        let bits = 1 + rng.below(8) as u32;
+        let n = 1 + rng.below(300);
+        let codes: Vec<u32> = (0..n).map(|_| rng.below(1usize << bits) as u32).collect();
+        let p = Packed::pack(&codes, bits).unwrap();
+        assert_eq!(p.unpack(), codes);
+        assert_eq!(p.bytes.len(), (n * bits as usize + 7) / 8);
+    });
+}
+
+#[test]
+fn packed_dequant_matches_fake_quant_exactly() {
+    // the engine's on-the-fly dequant must reproduce the fake-quant
+    // weights bit for bit on every grid the runtime uses
+    for_random_cases(200, "packed_dequant", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let s = rng.uniform(1e-3, 0.5);
+        let w: Vec<f32> = (0..1 + rng.below(200)).map(|_| rng.normal() * 2.0).collect();
+        let (packed, grid_n) = pack_like_export(&w, s, bits);
+        let mut deq = Vec::new();
+        packed.dequant_into(grid_n, s, &mut deq);
+        assert_eq!(deq, kernels::fake_quant(&w, s, gn, gp), "bits {bits}");
+    });
+}
+
+#[test]
+fn packed_matmul_bitexact_vs_native_kernel() {
+    // same loop order, same `a == 0.0` skip: the packed engine must match
+    // kernels::quant_matmul to the bit for 2/3/4/8-bit grids
+    for_random_cases(120, "packed_matmul_exact", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let s = rng.uniform(0.01, 0.5);
+        let (m, k, n) = (1 + rng.below(5), 1 + rng.below(12), 1 + rng.below(7));
+        let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        // force exact zeros so the skip fast path is exercised every case
+        for v in x.iter_mut() {
+            if rng.next_f32() < 0.3 {
+                *v = 0.0;
+            }
+        }
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let (packed, grid_n) = pack_like_export(&w, s, bits);
+        let got = packed_matmul(&x, &packed, m, k, n, s, grid_n);
+        let want = kernels::quant_matmul(&x, &w, m, k, n, s, gn, gp);
+        assert_eq!(got, want, "bits {bits} m {m} k {k} n {n}");
+    });
+}
+
+#[test]
+fn packed_dw_bitexact_vs_interp_order() {
+    // the depthwise 3-tap kernel accumulates in the interpreter's exact
+    // order; replay that order here over fake-quant weights
+    for_random_cases(120, "packed_dw_exact", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let s = rng.uniform(0.01, 0.5);
+        let (b, c) = (1 + rng.below(4), 3 + rng.below(12));
+        let x: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.4).collect();
+        let (packed, grid_n) = pack_like_export(&w, s, bits);
+        let got = packed_dw(&x, &packed, b, c, s, grid_n);
+        let wq = kernels::fake_quant(&w, s, gn, gp);
+        for bi in 0..b {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for t in 0..3usize {
+                    let j = (ci + t + c - 1) % c;
+                    acc += wq[ci * 3 + t] * x[bi * c + j];
+                }
+                assert_eq!(got[bi * c + ci], acc, "bits {bits} [{bi},{ci}]");
+            }
+        }
+    });
+}
+
+#[test]
+fn i32_accumulation_exact_on_power_of_two_scales() {
+    // with power-of-two scales and small integers every f32 op is exact,
+    // so the i32 path must agree with the f32 path to the bit — this
+    // pins the integer accumulation (and its qa == 0 skip) itself
+    for_random_cases(120, "i32_accum_exact", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let s_a = [0.5f32, 0.25, 0.125][rng.below(3)];
+        let s_w = [0.5f32, 0.25, 0.0625][rng.below(3)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let (m, k, n) = (1 + rng.below(4), 1 + rng.below(10), 1 + rng.below(6));
+        let qa: Vec<i32> = (0..m * k).map(|_| rng.below(8) as i32).collect();
+        let w: Vec<f32> = (0..k * n)
+            .map(|_| (gn + rng.below((gp - gn) as usize + 1) as f32) * s_w)
+            .collect();
+        let (packed, grid_n) = pack_like_export(&w, s_w, bits);
+        let acc = packed_matmul_i32(&qa, &packed, m, k, n, grid_n);
+        let zscale = s_a as f64 * s_w as f64;
+        let got: Vec<f32> = acc.iter().map(|&v| (zscale * v as f64) as f32).collect();
+        let a_q: Vec<f32> = qa.iter().map(|&c| s_a * c as f32).collect();
+        let want = packed_matmul(&a_q, &packed, m, k, n, s_w, grid_n);
+        assert_eq!(got, want, "bits {bits} s_a {s_a} s_w {s_w}");
     });
 }
 
