@@ -101,6 +101,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(nm) = oscillations_qat::runtime::native::model::zoo_model("mbv2") {
         use oscillations_qat::deploy::export::{export_model, ExportCfg};
         use oscillations_qat::deploy::Engine;
+        use oscillations_qat::tensor::Tensor;
         // quant_a on so the i32-accumulation path actually runs
         let ecfg = ExportCfg { bits_w: 3, bits_a: 3, quant_a: true };
         let (dm, report) = export_model(&nm, &state, &ecfg)?;
@@ -122,6 +123,20 @@ fn main() -> anyhow::Result<()> {
             });
             println!("{}  ({:.0} img/s)", s.report(), s.per_sec(b as f64));
         }
+        // per-channel export of the same state: the engine pays one scale
+        // lookup per weight decode; this row tracks that overhead
+        let mut pc_state = state.clone();
+        for l in &nm.layers {
+            let sc: Vec<f32> = (0..l.d_out).map(|c| 0.02 + 1e-4 * c as f32).collect();
+            pc_state.insert(format!("params/{}.s", l.name), Tensor::new(vec![l.d_out], sc));
+        }
+        let (dm_pc, _) = export_model(&nm, &pc_state, &ecfg)?;
+        let eng = Engine::new(dm_pc);
+        let label = "deploy: engine i32 per-channel, batch 16";
+        let s = bench_for(label, 1, Duration::from_secs(3), || {
+            let _ = eng.forward_batch(&batch.x.data, b).expect("deploy fwd pc");
+        });
+        println!("{}  ({:.0} img/s)", s.report(), s.per_sec(b as f64));
     }
 
     if be.compile_seconds() > 0.0 {

@@ -63,6 +63,10 @@ pub struct QatSpec {
     pub bits_w: u32,
     pub bits_a: u32,
     pub quant_a: bool,
+    /// per-channel LSQ weight scales (one learned scale per output
+    /// channel — the paper's regime for depthwise models) instead of one
+    /// scale per tensor
+    pub per_channel: bool,
     pub lam: Schedule,
     pub f_th: Schedule,
     pub seed: u64,
@@ -77,6 +81,7 @@ impl QatSpec {
             bits_w: bits,
             bits_a: 8,
             quant_a: false,
+            per_channel: false,
             lam: Schedule::Const(0.0),
             f_th: Schedule::Const(1.1),
             seed,
@@ -116,6 +121,20 @@ impl<'rt> Lab<'rt> {
                                       self.fp_steps, &self.data)?;
         prepare_qat(self.rt, &mut state, &spec.model, spec.bits_w, spec.bits_a,
                     &self.data, spec.seed)?;
+        if spec.per_channel {
+            // the PJRT artifacts were compiled against scalar params/*.s
+            // inputs; feeding [d_out] vectors would die deep inside XLA
+            // with an opaque reshape error, so refuse up front
+            anyhow::ensure!(
+                self.rt.kind() == "native",
+                "--per-channel requires the native backend (the {} backend's compiled \
+                 artifacts expect scalar weight scales)",
+                self.rt.kind()
+            );
+            let n = super::qat::to_per_channel_scales(self.rt, &mut state, &spec.model,
+                                                      spec.bits_w)?;
+            eprintln!("[lab] {}: {} weight tensors on per-channel scales", spec.model, n);
+        }
 
         let mut cfg = RunCfg::qat(&spec.model, self.qat_steps, spec.bits_w, spec.seed);
         cfg.estimator = spec.estimator.clone();

@@ -17,7 +17,7 @@ use super::evaluator::EvalQuant;
 use super::trainer::{RunCfg, Trainer};
 use crate::data::{DataCfg, Dataset};
 use crate::osc::weight_scale_of;
-use crate::quant::range_est::{lsq_act_scale, mse_weight_scale};
+use crate::quant::range_est::{lsq_act_scale, mse_weight_scale, mse_weight_scale_pc};
 use crate::quant::{act_grid, weight_grid};
 use crate::runtime::Backend;
 use crate::state::{Checkpoint, NamedTensors};
@@ -150,5 +150,74 @@ pub fn prepare_qat(
         state.insert(k, Tensor::zeros(&shape));
     }
     Ok(())
+}
+
+/// Upgrade a prepared QAT state to **per-channel** LSQ weight scales:
+/// every quantized weight tensor's scalar `params/{layer}.s` is replaced
+/// by a `[d_out]` vector (one MSE-grid-searched scale per output channel
+/// — for depthwise layers one per channel row), its SGD momentum buffer
+/// is resized to match, and the Algorithm-1 oscillation state of the
+/// low-bit tensors is re-seeded on the new per-channel grids (the
+/// per-channel twin of `prepare_qat` step 3). Call after [`prepare_qat`];
+/// returns the number of tensors converted.
+///
+/// The native interpreter, Algorithm-1 bookkeeping, deploy export and
+/// packed engine all read the scale tensor's length, so the same state
+/// flows through the whole stack untouched afterwards.
+pub fn to_per_channel_scales(
+    rt: &dyn Backend,
+    state: &mut NamedTensors,
+    model: &str,
+    bits_w: u32,
+) -> Result<usize> {
+    let info = rt.index().model(model)?.clone();
+    let mut converted = 0usize;
+    for layer in info.layers.values() {
+        if layer.wq == "none" || layer.weight.is_empty() {
+            continue;
+        }
+        let Some(w) = state.get(&format!("params/{}", layer.weight)).cloned() else {
+            continue;
+        };
+        let n_ch = layer.cout;
+        if n_ch == 0 || w.len() % n_ch != 0 {
+            continue;
+        }
+        let group = if layer.kind == "dw" { 3 } else { 1 };
+        let (n, p) = grid_for(&layer.wq, bits_w);
+        let scales = mse_weight_scale_pc(&w.data, n_ch, group, n, p);
+        let sname = weight_scale_of(&layer.weight);
+        state.insert(format!("params/{sname}"), Tensor::new(vec![n_ch], scales.clone()));
+        state.insert(format!("opt/{sname}"), Tensor::zeros(&[n_ch]));
+
+        // re-seed Algorithm-1 state on the per-channel grids so wintp /
+        // iema agree with the integers the next step will actually see
+        if info.lowbit.iter().any(|x| x == &layer.weight) {
+            let (n_w, p_w) = weight_grid(bits_w);
+            let wint: Vec<f32> = w
+                .data
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| {
+                    let s = scales[crate::runtime::native::kernels::scale_index(i, group, n_ch)];
+                    round_ties_even(x / s).clamp(n_w, p_w)
+                })
+                .collect();
+            let shape = w.shape.clone();
+            let z = Tensor::zeros(&shape);
+            state.insert(format!("osc/{}#f", layer.weight), z.clone());
+            state.insert(format!("osc/{}#b", layer.weight), z.clone());
+            state.insert(format!("osc/{}#fint", layer.weight), z.clone());
+            state.insert(format!("osc/{}#psign", layer.weight), z);
+            state.insert(
+                format!("osc/{}#wintp", layer.weight),
+                Tensor::new(shape.clone(), wint.clone()),
+            );
+            state.insert(format!("osc/{}#iema", layer.weight), Tensor::new(shape, wint));
+        }
+        converted += 1;
+    }
+    anyhow::ensure!(converted > 0, "to_per_channel_scales: no quantized weight tensors found");
+    Ok(converted)
 }
 

@@ -4,19 +4,21 @@
 //! the bit-packed QPKG payload:
 //!
 //! * **f32 path** ([`packed_matmul`] / [`packed_dw`]) — weights are
-//!   dequantized on the fly (`s * grid_int`, one exact multiply) and the
-//!   accumulation replays the native interpreter's loop order including
-//!   its `a == 0.0` skip, so the output is **bit-exact** against
-//!   `runtime/native/kernels.rs::quant_matmul` over the fake-quantized
-//!   weights. This is the path for layers whose input activations are
-//!   not quantized (the stem, and every layer of a weight-only run).
+//!   dequantized on the fly (`s_c * grid_int`, one exact multiply with
+//!   the channel's scale) and the accumulation replays the native
+//!   interpreter's loop order including its `a == 0.0` skip, so the
+//!   output is **bit-exact** against the native fake-quant kernels over
+//!   per-tensor *and* per-channel scale vectors. This is the path for
+//!   layers whose input activations are not quantized (the stem, and
+//!   every layer of a weight-only run).
 //! * **i32 path** ([`packed_matmul_i32`] / [`packed_dw_i32`]) — input
 //!   activations arrive as unsigned grid codes, weights as signed grid
 //!   integers, and the dot product accumulates in i32 (exact integer
-//!   arithmetic, no rounding at all); one requantization multiply
-//!   (`s_a * s_w * acc`, in f64) brings the result back to the real
-//!   scale. Worst case here (255 x 127 x 768-deep) stays far inside
-//!   i32 range.
+//!   arithmetic, no rounding at all); one per-channel requantization
+//!   multiply (`s_a * s_w[c] * acc`, in f64) brings the result back to
+//!   the real scale — per-channel weight scales factor out of each
+//!   output channel's dot product, so the stored integers never change.
+//!   Worst case here (255 x 127 x 768-deep) stays far inside i32 range.
 //!
 //! After the linear op the folded-BN requant affine (`mult[c]*z+add[c]`),
 //! bias and ReLU are applied per channel — there is no batch-norm op and
@@ -30,19 +32,22 @@ use anyhow::Result;
 pub use crate::tensor::argmax;
 
 /// `x [m,k] @ dequant(w) [k,n]`, bit-exact vs `kernels::quant_matmul`
-/// on the same grid (same loop order, same `a == 0.0` skip).
+/// (per-tensor `scales = [s]`) / `kernels::fake_quant_pc` + the same
+/// loop order (same `a == 0.0` skip). `scales` holds one scale or one
+/// per output column.
 pub fn packed_matmul(
     x: &[f32],
     w: &Packed,
     m: usize,
     k: usize,
     n: usize,
-    s: f32,
+    scales: &[f32],
     grid_n: i32,
 ) -> Vec<f32> {
     debug_assert_eq!(w.len, k * n);
+    debug_assert!(scales.len() == 1 || scales.len() == n);
     let mut wq = Vec::new();
-    w.dequant_into(grid_n, s, &mut wq);
+    w.dequant_pc_into(grid_n, scales, 1, &mut wq);
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
         for kk in 0..k {
@@ -60,12 +65,21 @@ pub fn packed_matmul(
     out
 }
 
-/// Circular depthwise 3-tap conv with on-the-fly dequantized weights,
-/// mirroring the native interpreter's loop exactly.
-pub fn packed_dw(x: &[f32], w: &Packed, b: usize, c_dim: usize, s: f32, grid_n: i32) -> Vec<f32> {
+/// Circular depthwise 3-tap conv with on-the-fly dequantized weights
+/// (`scales`: one scale or one per channel row), mirroring the native
+/// interpreter's loop exactly.
+pub fn packed_dw(
+    x: &[f32],
+    w: &Packed,
+    b: usize,
+    c_dim: usize,
+    scales: &[f32],
+    grid_n: i32,
+) -> Vec<f32> {
     debug_assert_eq!(w.len, c_dim * 3);
+    debug_assert!(scales.len() == 1 || scales.len() == c_dim);
     let mut wq = Vec::new();
-    w.dequant_into(grid_n, s, &mut wq);
+    w.dequant_pc_into(grid_n, scales, 3, &mut wq);
     let mut out = vec![0.0f32; b * c_dim];
     for bi in 0..b {
         let arow = &x[bi * c_dim..(bi + 1) * c_dim];
@@ -190,24 +204,32 @@ impl Engine {
                         }
                         DeployOp::Dw => packed_dw_i32(&qa, &l.weights, b, d_out, grid_n),
                     };
-                    // one requantization multiply back to the real scale
-                    let zscale = l.a_scale as f64 * l.w_scale as f64;
-                    acc.iter().map(|&v| (zscale * v as f64) as f32).collect()
+                    // one per-channel requantization multiply back to the
+                    // real scale: output idx -> channel idx % d_out
+                    let sa = l.a_scale as f64;
+                    let zscales: Vec<f64> =
+                        (0..d_out).map(|c| sa * l.w_scale_of(c) as f64).collect();
+                    acc.iter()
+                        .enumerate()
+                        .map(|(idx, &v)| (zscales[idx % d_out] * v as f64) as f32)
+                        .collect()
                 } else {
                     let a_q: Vec<f32> = codes.iter().map(|&c| l.a_scale * c).collect();
                     match l.op {
                         DeployOp::Full => {
-                            packed_matmul(&a_q, &l.weights, b, d_in, d_out, l.w_scale, grid_n)
+                            packed_matmul(&a_q, &l.weights, b, d_in, d_out, &l.w_scales, grid_n)
                         }
-                        DeployOp::Dw => packed_dw(&a_q, &l.weights, b, d_out, l.w_scale, grid_n),
+                        DeployOp::Dw => {
+                            packed_dw(&a_q, &l.weights, b, d_out, &l.w_scales, grid_n)
+                        }
                     }
                 }
             } else {
                 match l.op {
                     DeployOp::Full => {
-                        packed_matmul(&act, &l.weights, b, d_in, d_out, l.w_scale, grid_n)
+                        packed_matmul(&act, &l.weights, b, d_in, d_out, &l.w_scales, grid_n)
                     }
-                    DeployOp::Dw => packed_dw(&act, &l.weights, b, d_out, l.w_scale, grid_n),
+                    DeployOp::Dw => packed_dw(&act, &l.weights, b, d_out, &l.w_scales, grid_n),
                 }
             };
             if let Some(bias) = &l.bias {
@@ -271,10 +293,88 @@ mod tests {
             }
             let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
             let (packed, grid_n) = pack_weights(&w, s, bits);
-            let got = packed_matmul(&x, &packed, m, k, n, s, grid_n);
+            let got = packed_matmul(&x, &packed, m, k, n, &[s], grid_n);
             let want = quant_matmul(&x, &w, m, k, n, s, gn, gp);
             assert_eq!(got, want, "bits {bits}");
         }
+    }
+
+    #[test]
+    fn packed_matmul_per_channel_bitexact_vs_fake_quant_pc() {
+        use crate::deploy::export::snap_and_pack_pc;
+        use crate::runtime::native::kernels::fake_quant_pc;
+        let mut rng = Pcg32::new(21, 0xfe);
+        for bits in [2u32, 3, 4, 8] {
+            let (m, k, n) = (3usize, 11, 6);
+            let scales: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 0.4)).collect();
+            let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let (packed, grid_n) = snap_and_pack_pc(&w, &scales, 1, bits).unwrap();
+            let got = packed_matmul(&x, &packed, m, k, n, &scales, grid_n);
+            // reference: per-channel fake-quant then the same loop order
+            let (gn, gp) = weight_grid(bits);
+            let wq = fake_quant_pc(&w, &scales, 1, gn, gp);
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let a = x[i * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        want[i * n + j] += a * wq[kk * n + j];
+                    }
+                }
+            }
+            assert_eq!(got, want, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn i32_per_channel_requant_composes_with_bn_affine() {
+        use crate::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+        use crate::deploy::export::snap_and_pack_pc;
+        // power-of-two scales: every f32 op is exact, so the int-accum
+        // engine must agree with the f32-exact engine to the bit even
+        // with per-channel weight scales + a folded BN affine on top
+        let (d_in, d_out) = (12usize, 3usize);
+        let scales = vec![0.5f32, 0.25, 0.125];
+        let mut rng = Pcg32::new(9, 0x77);
+        let w: Vec<f32> = (0..d_in * d_out)
+            .map(|i| (rng.below(15) as f32 - 7.0) * scales[i % d_out])
+            .collect();
+        let (packed, _grid_n) = snap_and_pack_pc(&w, &scales, 1, 4).unwrap();
+        let layer = DeployLayer {
+            name: "l".into(),
+            op: DeployOp::Full,
+            d_in,
+            d_out,
+            relu: false,
+            aq: true,
+            act_bits: 3,
+            a_scale: 0.5,
+            w_bits: 4,
+            w_scales: scales.clone(),
+            weights: packed,
+            bias: Some(vec![0.25, -0.5, 0.125]),
+            requant: Some(Requant {
+                mult: vec![2.0, 0.5, 1.0],
+                add: vec![0.5, -0.25, 0.0],
+            }),
+        };
+        let dm = DeployModel {
+            name: "pc".into(),
+            input_hw: 2,
+            num_classes: 3,
+            quant_a: true,
+            bits_w: 4,
+            bits_a: 3,
+            layers: vec![layer],
+        };
+        let x: Vec<f32> = (0..2 * d_in).map(|_| rng.below(8) as f32 * 0.5).collect();
+        let exact = Engine::with_mode(dm.clone(), false).forward_batch(&x, 2).unwrap();
+        let int = Engine::with_mode(dm, true).forward_batch(&x, 2).unwrap();
+        assert_eq!(exact, int);
     }
 
     #[test]
@@ -287,7 +387,7 @@ mod tests {
         let x: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
         let w: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.3).collect();
         let (packed, grid_n) = pack_weights(&w, s, bits);
-        let got = packed_dw(&x, &packed, b, c, s, grid_n);
+        let got = packed_dw(&x, &packed, b, c, &[s], grid_n);
         let wq = kernels::fake_quant(&w, s, gn, gp);
         for bi in 0..b {
             for ci in 0..c {
@@ -318,7 +418,7 @@ mod tests {
         let got: Vec<f32> = acc.iter().map(|&v| (zscale * v as f64) as f32).collect();
 
         let a_q: Vec<f32> = qa_codes.iter().map(|&c| s_a * c as f32).collect();
-        let want = packed_matmul(&a_q, &packed, m, k, n, s_w, grid_n);
+        let want = packed_matmul(&a_q, &packed, m, k, n, &[s_w], grid_n);
         assert_eq!(got, want);
     }
 

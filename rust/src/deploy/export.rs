@@ -12,10 +12,12 @@
 //! 2. **BN folding.** Batch-norm running statistics are folded into a
 //!    per-channel requantization affine `y = mult[c] * z + add[c]` with
 //!    `mult = g / sqrt(v + eps)` and `add = beta - mult * m`. Folding
-//!    into the *requant constants* rather than into the weights keeps the
-//!    weight tensor on its shared per-tensor grid (folding into the
-//!    weights would need per-channel scales and re-rounding, changing the
-//!    integers QAT converged to).
+//!    into the *requant constants* rather than into the weights keeps
+//!    the weight tensor on its LSQ grid (folding into the weights would
+//!    re-round the integers QAT converged to). Per-channel weight scales
+//!    compose naturally: the engine's integer path requantizes channel
+//!    `c` by `s_a * s_w[c]` before this affine, so both per-channel
+//!    factors stack without ever touching the stored integers.
 //! 3. **Bit-packing.** Weight grid indices are serialized at the target
 //!    bit-width (2x int4 per byte, 8-bit stem/head one per byte, ...).
 //!
@@ -60,17 +62,28 @@ impl ExportReport {
     }
 }
 
-/// Snap weights to the `bits`-wide LSQ grid (the eval-time
-/// fake-quantizer's `clip(round_ties_even(w/s), n, p)`) and bit-pack the
+/// Snap weights to the `bits`-wide LSQ grid of their channel's scale
+/// (the eval-time fake-quantizer's `clip(round_ties_even(w/s_c), n, p)`,
+/// with `scales`/`group` as in `kernels::scale_index`) and bit-pack the
 /// resulting grid indices. Returns the payload plus the grid minimum the
 /// engine needs to decode it. The single source of truth for the
 /// weight-to-code mapping — the bit-exactness tests encode through this
 /// same function.
-pub fn snap_and_pack(w: &[f32], s: f32, bits: u32) -> Result<(Packed, i32)> {
+pub fn snap_and_pack_pc(
+    w: &[f32],
+    scales: &[f32],
+    group: usize,
+    bits: u32,
+) -> Result<(Packed, i32)> {
     let (gn, gp) = weight_grid(bits);
-    let q = kernels::int_weights(w, s, gn, gp);
+    let q = kernels::int_weights_pc(w, scales, group, gn, gp);
     let codes: Vec<u32> = q.iter().map(|&v| (v - gn) as u32).collect();
     Ok((Packed::pack(&codes, bits)?, gn as i32))
+}
+
+/// Per-tensor wrapper over [`snap_and_pack_pc`].
+pub fn snap_and_pack(w: &[f32], s: f32, bits: u32) -> Result<(Packed, i32)> {
+    snap_and_pack_pc(w, std::slice::from_ref(&s), 1, bits)
 }
 
 /// Export a trained state for `model` into a [`DeployModel`].
@@ -89,23 +102,33 @@ pub fn export_model(
         let w = state
             .expect(&format!("params/{}.w", l.name))
             .with_context(|| format!("export {}: weights", l.name))?;
-        let s_w = state
+        let s_t = state
             .expect(&format!("params/{}.s", l.name))
-            .with_context(|| format!("export {}: weight scale", l.name))?
-            .item()
-            .max(1e-8);
+            .with_context(|| format!("export {}: weight scale", l.name))?;
+        // per-tensor (scalar) or per-channel ([d_out]) LSQ scales
+        anyhow::ensure!(
+            s_t.len() == 1 || s_t.len() == l.d_out,
+            "export {}: {} weight scales for {} channels",
+            l.name,
+            s_t.len(),
+            l.d_out
+        );
+        let w_scales: Vec<f32> = s_t.data.iter().map(|&v| v.max(1e-8)).collect();
+        let group = l.scale_group();
+        let n_scales = w_scales.len();
         let w_bits = if l.wq == "8bit" { 8 } else { cfg.bits_w };
         let (gn, gp) = weight_grid(w_bits);
 
         // snap to the LSQ grid (identical to the eval-time fake-quantizer)
-        let q = kernels::int_weights(&w.data, s_w, gn, gp);
+        let q = kernels::int_weights_pc(&w.data, &w_scales, group, gn, gp);
 
         // Algorithm-1 consistency: frozen weights must already be on-grid
-        // at their pinned integer. All other in-range weights contribute
-        // their snap distance to the report.
+        // at their pinned integer (on their channel's grid). All other
+        // in-range weights contribute their snap distance to the report.
         let b = state.get(&format!("osc/{}.w#b", l.name));
         let fint = state.get(&format!("osc/{}.w#fint", l.name));
         for i in 0..q.len() {
+            let s_w = w_scales[kernels::scale_index(i, group, n_scales)];
             let frozen = b.map(|b| b.data[i] > 0.5).unwrap_or(false);
             if frozen {
                 let fint = fint.with_context(|| {
@@ -134,7 +157,7 @@ pub fn export_model(
             }
         }
 
-        let (packed, _) = snap_and_pack(&w.data, s_w, w_bits)?;
+        let (packed, _) = snap_and_pack_pc(&w.data, &w_scales, group, w_bits)?;
 
         // BN fold: per-channel requant affine replacing the BN op
         let requant = if l.bn {
@@ -189,7 +212,7 @@ pub fn export_model(
             act_bits,
             a_scale,
             w_bits,
-            w_scale: s_w,
+            w_scales,
             weights: packed,
             bias,
             requant,
@@ -249,9 +272,55 @@ mod tests {
             let (gn, gp) = dl.w_grid();
             let fq = kernels::fake_quant(&w.data, s, gn, gp);
             let mut deq = Vec::new();
-            dl.weights.dequant_into(dl.grid_n_int(), dl.w_scale, &mut deq);
+            dl.weights
+                .dequant_pc_into(dl.grid_n_int(), &dl.w_scales, dl.scale_group(), &mut deq);
             assert_eq!(deq, fq, "layer {} dequant != fake_quant", nl.name);
         }
+    }
+
+    #[test]
+    fn per_channel_export_roundtrips_scale_vectors() {
+        let m = zoo_model("efflite").unwrap();
+        let mut state = m.initial_state();
+        // install distinct per-channel scales on every layer
+        for l in &m.layers {
+            let scales: Vec<f32> = (0..l.d_out).map(|c| 0.05 + 0.01 * c as f32).collect();
+            state.insert(
+                format!("params/{}.s", l.name),
+                crate::tensor::Tensor::new(vec![l.d_out], scales),
+            );
+        }
+        let (dm, report) = export_model(&m, &state, &cfg()).unwrap();
+        assert_eq!(report.layers, m.layers.len());
+        for (dl, nl) in dm.layers.iter().zip(&m.layers) {
+            assert!(dl.per_channel(), "{}", nl.name);
+            assert_eq!(dl.w_scales.len(), nl.d_out, "{}", nl.name);
+            // the packed codes decode bit-exactly to the per-channel
+            // fake-quant of the latent weights
+            let w = state.get(&format!("params/{}.w", nl.name)).unwrap();
+            let (gn, gp) = dl.w_grid();
+            let fq =
+                kernels::fake_quant_pc(&w.data, &dl.w_scales, nl.scale_group(), gn, gp);
+            let mut deq = Vec::new();
+            dl.weights
+                .dequant_pc_into(dl.grid_n_int(), &dl.w_scales, dl.scale_group(), &mut deq);
+            assert_eq!(deq, fq, "layer {}", nl.name);
+        }
+        // QPKG v2 round-trip preserves the scale arrays
+        let dm2 = crate::deploy::format::DeployModel::from_bytes(&dm.to_bytes()).unwrap();
+        assert_eq!(dm, dm2);
+    }
+
+    #[test]
+    fn export_rejects_bad_scale_count() {
+        let m = zoo_model("efflite").unwrap();
+        let mut state = m.initial_state();
+        let l = &m.layers[1]; // an interior layer
+        state.insert(
+            format!("params/{}.s", l.name),
+            crate::tensor::Tensor::new(vec![2], vec![0.1, 0.2]), // d_out != 2
+        );
+        assert!(export_model(&m, &state, &cfg()).is_err());
     }
 
     #[test]

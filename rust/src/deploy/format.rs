@@ -9,7 +9,7 @@
 //! running-stat updates survive the export — this struct is everything
 //! inference needs and nothing else.
 //!
-//! QPKG binary layout (all little-endian, version 1):
+//! QPKG binary layout (all little-endian, version 2):
 //!
 //! ```text
 //! magic  'QPKG'  | u32 version | u16 name_len + name
@@ -19,11 +19,19 @@
 //!   u8 op (0 = full matmul, 1 = depthwise 3-tap)
 //!   u8 relu | u8 aq | u8 has_bias | u8 has_requant
 //!   u32 d_in | u32 d_out | u32 w_bits | u32 act_bits
-//!   f32 w_scale | f32 a_scale
+//!   u32 n_w_scales | [f32 w_scales; n_w_scales] | f32 a_scale
 //!   [f32 bias; d_out]               (if has_bias)
 //!   [f32 mult; d_out] [f32 add; d_out]   (if has_requant)
 //!   u32 n_codes | u32 n_bytes | packed weight bitstream
 //! ```
+//!
+//! `n_w_scales` is 1 (per-tensor LSQ) or `d_out` (per-channel LSQ, one
+//! scale per output channel — for depthwise layers one per channel row).
+//! **Version negotiation:** the writer always emits version 2; the reader
+//! accepts version 1 files (whose layer record carries a single
+//! `f32 w_scale` where v2 puts the scale array) and upgrades them in
+//! memory to a one-element scale vector, so every v1 artifact keeps
+//! loading unchanged.
 
 use super::packed::Packed;
 use crate::quant::{act_grid, weight_grid};
@@ -32,7 +40,10 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"QPKG";
-const VERSION: u32 = 1;
+/// Version the writer emits.
+const VERSION: u32 = 2;
+/// Oldest version the reader still accepts (upgraded on load).
+const MIN_VERSION: u32 = 1;
 
 /// How a deployed layer mixes its input (mirrors the native zoo ops).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,7 +74,9 @@ pub struct DeployLayer {
     pub act_bits: u32,
     pub a_scale: f32,
     pub w_bits: u32,
-    pub w_scale: f32,
+    /// LSQ weight scales: one element (per-tensor) or `d_out` elements
+    /// (per-channel, one per output channel / depthwise channel row)
+    pub w_scales: Vec<f32>,
     /// packed unsigned weight codes (`grid int - grid_n`)
     pub weights: Packed,
     pub bias: Option<Vec<f32>>,
@@ -84,6 +97,27 @@ impl DeployLayer {
     /// Unsigned activation grid maximum.
     pub fn act_p(&self) -> f32 {
         act_grid(self.act_bits)
+    }
+
+    /// Whether the layer carries per-channel weight scales.
+    pub fn per_channel(&self) -> bool {
+        self.w_scales.len() > 1
+    }
+
+    /// Channel layout `group` of the packed weight payload (see
+    /// `kernels::scale_index`): dense `[d_in, d_out]` codes map to their
+    /// output column (`group = 1`), depthwise `[C, 3]` rows to their
+    /// channel row (`group = 3`).
+    pub fn scale_group(&self) -> usize {
+        match self.op {
+            DeployOp::Full => 1,
+            DeployOp::Dw => 3,
+        }
+    }
+
+    /// Weight scale of output channel `c` (per-tensor scales broadcast).
+    pub fn w_scale_of(&self, c: usize) -> f32 {
+        self.w_scales[c % self.w_scales.len()]
     }
 }
 
@@ -125,7 +159,7 @@ impl DeployModel {
     pub fn aux_bytes(&self) -> usize {
         let mut n = 0usize;
         for l in &self.layers {
-            n += 8; // the two scales
+            n += 4 + (l.w_scales.len() + 1) * 4; // scale count + scales + a_scale
             if let Some(b) = &l.bias {
                 n += b.len() * 4;
             }
@@ -164,7 +198,8 @@ impl DeployModel {
             buf.extend_from_slice(&(l.d_out as u32).to_le_bytes());
             buf.extend_from_slice(&l.w_bits.to_le_bytes());
             buf.extend_from_slice(&l.act_bits.to_le_bytes());
-            buf.extend_from_slice(&l.w_scale.to_le_bytes());
+            buf.extend_from_slice(&(l.w_scales.len() as u32).to_le_bytes());
+            put_f32s(&mut buf, &l.w_scales);
             buf.extend_from_slice(&l.a_scale.to_le_bytes());
             if let Some(b) = &l.bias {
                 put_f32s(&mut buf, b);
@@ -194,8 +229,8 @@ impl DeployModel {
             bail!("bad qpkg magic");
         }
         let version = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
-        if version != VERSION {
-            bail!("unsupported qpkg version {version}");
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            bail!("unsupported qpkg version {version} (supported: {MIN_VERSION}..={VERSION})");
         }
         let name = get_str(buf, &mut pos)?;
         let input_hw = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
@@ -226,15 +261,28 @@ impl DeployModel {
             let w_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             let act_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             anyhow::ensure!((1..=8).contains(&w_bits), "layer {lname}: w_bits {w_bits}");
-            let w_scale = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            // v1 carries one f32 weight scale, v2 a counted scale array
+            // (1 = per-tensor, d_out = per-channel)
+            let w_scales = if version >= 2 {
+                let n_scales = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                anyhow::ensure!(
+                    n_scales == 1 || n_scales == d_out,
+                    "layer {lname}: {n_scales} weight scales for {d_out} channels"
+                );
+                get_f32s(buf, &mut pos, n_scales)?
+            } else {
+                vec![f32::from_le_bytes(take(&mut pos, 4)?.try_into()?)]
+            };
             let a_scale = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             // the engine divides by these scales; the exporter writes
             // them clamped to >= 1e-8, so demand the symmetric invariant
             // instead of serving NaN/inf logits from a corrupt file
-            anyhow::ensure!(
-                w_scale.is_finite() && w_scale > 0.0,
-                "layer {lname}: weight scale {w_scale}"
-            );
+            for (c, &s) in w_scales.iter().enumerate() {
+                anyhow::ensure!(
+                    s.is_finite() && s > 0.0,
+                    "layer {lname}: weight scale [{c}] = {s}"
+                );
+            }
             anyhow::ensure!(
                 a_scale.is_finite() && a_scale > 0.0,
                 "layer {lname}: activation scale {a_scale}"
@@ -283,7 +331,7 @@ impl DeployModel {
                 act_bits,
                 a_scale,
                 w_bits,
-                w_scale,
+                w_scales,
                 weights: Packed { bits: w_bits, len: n_codes, bytes },
                 bias,
                 requant,
@@ -401,7 +449,7 @@ mod tests {
                     act_bits: 8,
                     a_scale: 1.0,
                     w_bits: 3,
-                    w_scale: 0.1,
+                    w_scales: vec![0.1],
                     weights: Packed::pack(&codes, 3).unwrap(),
                     bias: None,
                     requant: Some(Requant {
@@ -419,7 +467,7 @@ mod tests {
                     act_bits: 3,
                     a_scale: 0.05,
                     w_bits: 4,
-                    w_scale: 0.2,
+                    w_scales: vec![0.2],
                     weights: Packed::pack(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 4).unwrap(),
                     bias: Some(vec![0.1, 0.2, 0.3]),
                     requant: None,
@@ -428,12 +476,104 @@ mod tests {
         }
     }
 
+    /// The sample model with per-channel weight scales on both layers.
+    fn sample_per_channel() -> DeployModel {
+        let mut m = sample();
+        m.layers[0].w_scales = vec![0.1, 0.07, 0.2];
+        m.layers[1].w_scales = vec![0.2, 0.15, 0.3];
+        m
+    }
+
+    /// Serialize a model in the **version 1** layout (single f32 w_scale
+    /// per layer) — the reader must keep accepting these.
+    fn v1_bytes(m: &DeployModel) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        put_str(&mut buf, &m.name);
+        buf.extend_from_slice(&(m.input_hw as u32).to_le_bytes());
+        buf.extend_from_slice(&(m.num_classes as u32).to_le_bytes());
+        buf.push(m.quant_a as u8);
+        buf.extend_from_slice(&m.bits_w.to_le_bytes());
+        buf.extend_from_slice(&m.bits_a.to_le_bytes());
+        buf.extend_from_slice(&(m.layers.len() as u32).to_le_bytes());
+        for l in &m.layers {
+            put_str(&mut buf, &l.name);
+            buf.push(match l.op {
+                DeployOp::Full => 0,
+                DeployOp::Dw => 1,
+            });
+            buf.push(l.relu as u8);
+            buf.push(l.aq as u8);
+            buf.push(l.bias.is_some() as u8);
+            buf.push(l.requant.is_some() as u8);
+            buf.extend_from_slice(&(l.d_in as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.d_out as u32).to_le_bytes());
+            buf.extend_from_slice(&l.w_bits.to_le_bytes());
+            buf.extend_from_slice(&l.act_bits.to_le_bytes());
+            buf.extend_from_slice(&l.w_scales[0].to_le_bytes());
+            buf.extend_from_slice(&l.a_scale.to_le_bytes());
+            if let Some(b) = &l.bias {
+                put_f32s(&mut buf, b);
+            }
+            if let Some(r) = &l.requant {
+                put_f32s(&mut buf, &r.mult);
+                put_f32s(&mut buf, &r.add);
+            }
+            buf.extend_from_slice(&(l.weights.len as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.weights.bytes.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&l.weights.bytes);
+        }
+        buf
+    }
+
     #[test]
     fn qpkg_roundtrip() {
         let m = sample();
         let bytes = m.to_bytes();
         let m2 = DeployModel::from_bytes(&bytes).unwrap();
         assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn qpkg_v2_roundtrips_per_channel_scales() {
+        let m = sample_per_channel();
+        let m2 = DeployModel::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m, m2);
+        assert!(m2.layers[0].per_channel());
+        assert_eq!(m2.layers[0].w_scale_of(1), 0.07);
+        assert_eq!(m2.layers[1].w_scale_of(2), 0.3);
+    }
+
+    #[test]
+    fn v1_layout_upgrades_to_scale_vector() {
+        let m = sample();
+        let old = v1_bytes(&m);
+        let loaded = DeployModel::from_bytes(&old).unwrap();
+        // the in-memory upgrade is exactly the v2 model with one-element
+        // scale vectors — i.e. the same struct the v2 writer round-trips
+        assert_eq!(loaded, m);
+        assert!(!loaded.layers[0].per_channel());
+        assert_eq!(loaded.layers[0].w_scales, vec![0.1]);
+        // and re-saving silently upgrades the file to v2
+        let resaved = DeployModel::from_bytes(&loaded.to_bytes()).unwrap();
+        assert_eq!(resaved, m);
+    }
+
+    #[test]
+    fn qpkg_rejects_bad_scale_counts() {
+        // scale count must be 1 or d_out
+        let mut m = sample();
+        m.layers[0].w_scales = vec![0.1, 0.2]; // d_out = 3
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // non-positive per-channel scale entries are rejected
+        let mut m = sample_per_channel();
+        m.layers[0].w_scales[1] = 0.0;
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // future versions are refused outright
+        let mut bytes = sample().to_bytes();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(DeployModel::from_bytes(&bytes).is_err());
     }
 
     #[test]

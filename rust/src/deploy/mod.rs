@@ -18,6 +18,15 @@
 //!   i32-accumulation path for quantized-activation layers.
 //! * [`serve`] — a multi-threaded dynamically-batching request server
 //!   plus the `BENCH_serve.json` throughput/latency benchmark.
+//! * [`trajectory`] — the CI perf-trajectory harness: deploy kernel
+//!   micro-benchmarks merged with the serve report into a
+//!   schema-versioned `BENCH_deploy.json`, gated against a committed
+//!   baseline.
+//!
+//! Weight scales are per-tensor or **per-channel** (QPKG version 2, one
+//! scale per output channel) end-to-end: the exporter snaps each channel
+//! to its own grid, and the engine dequantizes / requantizes with the
+//! channel's scale in both execution paths.
 //!
 //! Typical flow (also `examples/deploy_pipeline.rs` and the `export` /
 //! `serve` CLI subcommands):
@@ -32,9 +41,11 @@ pub mod export;
 pub mod format;
 pub mod packed;
 pub mod serve;
+pub mod trajectory;
 
 pub use engine::Engine;
 pub use export::{export_model, ExportCfg, ExportReport};
 pub use format::{DeployLayer, DeployModel, DeployOp, Requant};
 pub use packed::Packed;
 pub use serve::{bench_serve, Server, ServeCfg, ServeReport};
+pub use trajectory::{check_regression, run_deploy_microbench, DeployBenchReport};

@@ -77,10 +77,22 @@ impl Packed {
     /// single multiply here rounds identically to the kernel's
     /// `s * clip(round(w/s), n, p)`.
     pub fn dequant_into(&self, grid_n: i32, scale: f32, out: &mut Vec<f32>) {
+        self.dequant_pc_into(grid_n, std::slice::from_ref(&scale), 1, out);
+    }
+
+    /// Per-channel decode: code `i` is dequantized with the scale of its
+    /// channel, `scales[(i / group) % scales.len()]` (the same layout
+    /// rule as `kernels::scale_index`). With a single scale this is
+    /// [`Packed::dequant_into`], and it stays bit-exact against
+    /// `kernels::fake_quant_pc` for on-grid weights.
+    pub fn dequant_pc_into(&self, grid_n: i32, scales: &[f32], group: usize, out: &mut Vec<f32>) {
         out.clear();
         out.reserve(self.len);
+        let ns = scales.len().max(1);
+        let g = group.max(1);
         for i in 0..self.len {
-            out.push(scale * ((self.get(i) as i32 + grid_n) as f32));
+            let s = scales[(i / g) % ns];
+            out.push(s * ((self.get(i) as i32 + grid_n) as f32));
         }
     }
 
@@ -142,5 +154,24 @@ mod tests {
         let mut deq = Vec::new();
         p.dequant_into(-4, 0.25, &mut deq);
         assert_eq!(deq, vec![-1.0, -0.25, 0.0, 0.75]);
+    }
+
+    #[test]
+    fn per_channel_decode_uses_each_channels_scale() {
+        // [2, 2] dense columns: channel = i % 2
+        let codes = vec![6u32, 6, 2, 2]; // grid ints +2, +2, -2, -2
+        let p = Packed::pack(&codes, 3).unwrap();
+        let mut deq = Vec::new();
+        p.dequant_pc_into(-4, &[0.5, 0.25], 1, &mut deq);
+        assert_eq!(deq, vec![1.0, 0.5, -1.0, -0.5]);
+        // dw rows [2, 2... use group 2: channel = i / 2
+        p.dequant_pc_into(-4, &[0.5, 0.25], 2, &mut deq);
+        assert_eq!(deq, vec![1.0, 1.0, -0.5, -0.5]);
+        // single scale reproduces the scalar decode
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        p.dequant_into(-4, 0.3, &mut a);
+        p.dequant_pc_into(-4, &[0.3], 1, &mut b);
+        assert_eq!(a, b);
     }
 }

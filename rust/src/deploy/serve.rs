@@ -73,6 +73,9 @@ struct Job {
 pub struct ServeStats {
     pub batches: AtomicU64,
     pub requests: AtomicU64,
+    /// requests whose batch failed in the engine (their responses never
+    /// arrive — clients observe the closed channel)
+    pub failed: AtomicU64,
     /// most recent engine failure (jobs of a failed batch are dropped,
     /// which closes their response channels; the cause is kept here)
     pub last_error: Mutex<Option<String>>,
@@ -150,8 +153,10 @@ impl Server {
                         Err(e) => {
                             // dropping the jobs closes their response
                             // channels; clients observe the failure and
-                            // the cause is preserved for the front-end
+                            // the cause + count are preserved so the
+                            // front-end can fail loudly (non-zero exit)
                             eprintln!("[serve] batch of {b} failed: {e}");
+                            st.failed.fetch_add(b as u64, Ordering::Relaxed);
                             *st.last_error.lock().expect("stats lock") = Some(e.to_string());
                         }
                     }
@@ -300,7 +305,11 @@ pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> 
         batch_sum += r.batch_size;
     }
     let wall = t0.elapsed().as_secs_f64();
+    let failed = server.stats().failed.load(Ordering::Relaxed);
     let (batches, served) = server.shutdown();
+    // a benchmark with any failed request must error out (the CI smoke
+    // job exits non-zero on it), never report a rosy partial number
+    anyhow::ensure!(failed == 0, "{failed} requests failed in the engine");
     anyhow::ensure!(
         served as usize == inputs.len(),
         "served {served} of {} requests",
@@ -360,7 +369,7 @@ mod tests {
                 act_bits: 8,
                 a_scale: 1.0,
                 w_bits: 3,
-                w_scale: 0.5,
+                w_scales: vec![0.5],
                 weights: Packed::pack(&codes, 3).unwrap(),
                 bias: None,
                 requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
@@ -392,6 +401,47 @@ mod tests {
         let (batches, requests) = server.shutdown();
         assert_eq!(requests, 30);
         assert!(batches >= 8, "max_batch 4 needs >= 8 batches for 30 requests");
+    }
+
+    /// A structurally broken model (layer widths don't chain — only
+    /// constructible directly, the QPKG loader rejects it) whose engine
+    /// forward fails cleanly on every batch: the second layer expects 7
+    /// inputs but the first emits 3.
+    fn broken_model() -> DeployModel {
+        let mut m = tiny_model();
+        m.layers.push(DeployLayer {
+            name: "bad".into(),
+            op: DeployOp::Full,
+            d_in: 7,
+            d_out: 3,
+            relu: false,
+            aq: false,
+            act_bits: 8,
+            a_scale: 1.0,
+            w_bits: 3,
+            w_scales: vec![0.5],
+            weights: Packed::pack(&[0u32; 21], 3).unwrap(),
+            bias: None,
+            requant: None,
+        });
+        m
+    }
+
+    #[test]
+    fn failed_batches_surface_as_bench_errors() {
+        let engine = Arc::new(Engine::new(broken_model()));
+        let inputs: Vec<Vec<f32>> = (0..8).map(|i| one_hot_block(i % 3)).collect();
+        let err = bench_serve(engine, &ServeCfg::default(), &inputs)
+            .expect_err("engine failures must fail the benchmark");
+        // the failure cause is surfaced, not swallowed
+        assert!(format!("{err:#}").contains("serve response lost"), "{err:#}");
+        // and the failed-request counter records the drops
+        let engine = Arc::new(Engine::new(broken_model()));
+        let server = Server::start(engine, &ServeCfg { workers: 1, max_batch: 4, queue_cap: 8 });
+        let rx = server.submit(one_hot_block(0)).unwrap();
+        assert!(rx.recv().is_err(), "response channel must close on failure");
+        assert!(server.stats().failed.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! CI perf-trajectory support: the deploy micro-benchmark suite and the
+//! schema-versioned `BENCH_deploy.json` merge + regression gate.
+//!
+//! The `bench-trajectory` CI job runs the serve smoke benchmark (which
+//! writes `BENCH_serve.json`) and then `bench-deploy --smoke`, which:
+//!
+//! 1. micro-benchmarks the packed kernels (f32 per-channel matmul / dw,
+//!    i32-accumulation twins) and a full packed-engine forward on a
+//!    per-channel w4a4 export of a depth-wise zoo model,
+//! 2. merges the serve report into one schema-versioned
+//!    `BENCH_deploy.json` (uploaded as the per-commit artifact),
+//! 3. compares every throughput metric against the committed
+//!    `BENCH_baseline.json` and **fails the job** when any metric drops
+//!    by more than the allowed fraction (default 25%).
+//!
+//! The baseline file is a conservative floor (committed numbers are
+//! deliberately below what a developer laptop measures) so runner
+//! variance does not flap the gate while order-of-magnitude regressions
+//! still trip it; refresh it by committing a CI-produced
+//! `BENCH_deploy.json` when the trajectory legitimately shifts.
+
+use super::engine::{packed_dw, packed_dw_i32, packed_matmul, packed_matmul_i32, Engine};
+use super::export::{export_model, snap_and_pack_pc, ExportCfg};
+use crate::bench::bench_for;
+use crate::json::{self, Json};
+use crate::rng::Pcg32;
+use crate::runtime::native::model::zoo_model;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+/// Version of the `BENCH_deploy.json` schema. Bump when the layout of
+/// the report changes; the regression gate refuses to compare reports
+/// across schema versions.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One micro-bench row.
+#[derive(Debug, Clone)]
+pub struct KernelBenchRow {
+    pub name: String,
+    /// work items per second (elements for kernels, images for the engine)
+    pub per_sec: f64,
+    pub mean_ns: f64,
+}
+
+/// The merged deploy benchmark report.
+#[derive(Debug, Clone)]
+pub struct DeployBenchReport {
+    pub schema_version: u32,
+    pub smoke: bool,
+    pub kernels: Vec<KernelBenchRow>,
+    /// the serve benchmark object (BENCH_serve.json), when merged
+    pub serve: Option<Json>,
+}
+
+impl DeployBenchReport {
+    pub fn to_json(&self) -> Json {
+        let mut kernels = BTreeMap::new();
+        for k in &self.kernels {
+            let mut row = BTreeMap::new();
+            row.insert("per_sec".to_string(), Json::Num(k.per_sec));
+            row.insert("mean_ns".to_string(), Json::Num(k.mean_ns));
+            kernels.insert(k.name.clone(), Json::Obj(row));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("schema_version".to_string(), Json::Num(self.schema_version as f64));
+        o.insert("smoke".to_string(), Json::Bool(self.smoke));
+        o.insert("kernels".to_string(), Json::Obj(kernels));
+        if let Some(s) = &self.serve {
+            o.insert("serve".to_string(), s.clone());
+        }
+        Json::Obj(o)
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, json::to_string(&self.to_json()))
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Merge a parsed BENCH_serve.json object into the report.
+    pub fn merge_serve(&mut self, serve: Json) {
+        self.serve = Some(serve);
+    }
+}
+
+/// Micro-benchmark the packed deploy kernels and a full engine forward.
+/// `smoke` shrinks the per-bench time budget for CI.
+pub fn run_deploy_microbench(smoke: bool) -> Result<DeployBenchReport> {
+    let budget = if smoke { Duration::from_millis(250) } else { Duration::from_secs(2) };
+    let warmup = if smoke { 1 } else { 2 };
+    let mut rng = Pcg32::new(42, 0xbe);
+    let mut rows: Vec<KernelBenchRow> = Vec::new();
+    let mut push = |name: &str, per_iter_items: f64, stats: crate::bench::BenchStats| {
+        rows.push(KernelBenchRow {
+            name: name.to_string(),
+            per_sec: stats.per_sec(per_iter_items),
+            mean_ns: stats.mean.as_secs_f64() * 1e9,
+        });
+    };
+
+    // --- packed matmul, per-channel scales (the stem geometry) ---------
+    let (m, k, n) = (16usize, 768, 48);
+    let scales: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 0.3)).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.3).collect();
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let (packed, grid_n) = snap_and_pack_pc(&w, &scales, 1, 4)?;
+    let items = (m * k * n) as f64;
+    let s = bench_for("packed_matmul", warmup, budget, || {
+        std::hint::black_box(packed_matmul(&x, &packed, m, k, n, &scales, grid_n));
+    });
+    push("packed_matmul_f32_pc", items, s);
+    let qa: Vec<i32> = (0..m * k).map(|_| rng.below(15) as i32).collect();
+    let s = bench_for("packed_matmul_i32", warmup, budget, || {
+        std::hint::black_box(packed_matmul_i32(&qa, &packed, m, k, n, grid_n));
+    });
+    push("packed_matmul_i32", items, s);
+
+    // --- packed depthwise, per-channel scales --------------------------
+    let (b, c) = (16usize, 256);
+    let dw_scales: Vec<f32> = (0..c).map(|_| rng.uniform(0.01, 0.3)).collect();
+    let wd: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.3).collect();
+    let xd: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
+    let (packed_d, grid_nd) = snap_and_pack_pc(&wd, &dw_scales, 3, 4)?;
+    let items = (b * c * 3) as f64;
+    let s = bench_for("packed_dw", warmup, budget, || {
+        std::hint::black_box(packed_dw(&xd, &packed_d, b, c, &dw_scales, grid_nd));
+    });
+    push("packed_dw_f32_pc", items, s);
+    let qad: Vec<i32> = (0..b * c).map(|_| rng.below(15) as i32).collect();
+    let s = bench_for("packed_dw_i32", warmup, budget, || {
+        std::hint::black_box(packed_dw_i32(&qad, &packed_d, b, c, grid_nd));
+    });
+    push("packed_dw_i32", items, s);
+
+    // --- full engine forward on a per-channel w4a4 depth-wise export ---
+    let nm = zoo_model("efflite").context("efflite in the zoo")?;
+    let mut state = nm.initial_state();
+    for l in &nm.layers {
+        let sc: Vec<f32> = (0..l.d_out).map(|_| rng.uniform(0.02, 0.2)).collect();
+        state.insert(format!("params/{}.s", l.name), Tensor::new(vec![l.d_out], sc));
+    }
+    let (dm, _) = export_model(&nm, &state, &ExportCfg { bits_w: 4, bits_a: 4, quant_a: true })?;
+    let eng = Engine::new(dm);
+    let batch = 16usize;
+    let d_in = eng.model().d_in();
+    let xe: Vec<f32> = (0..batch * d_in).map(|_| rng.normal().abs()).collect();
+    let s = bench_for("engine_forward", warmup, budget, || {
+        std::hint::black_box(eng.forward_batch(&xe, batch).expect("engine fwd"));
+    });
+    push("engine_forward_pc_w4a4", batch as f64, s);
+
+    Ok(DeployBenchReport { schema_version: SCHEMA_VERSION, smoke, kernels: rows, serve: None })
+}
+
+/// Compare a current report against a baseline: every throughput metric
+/// present in **both** (each `kernels.<name>.per_sec`, plus
+/// `serve.throughput_rps`) must be at least `(1 - max_drop)` of the
+/// baseline value. Returns the list of violations (empty = pass); bails
+/// when the schema versions differ (the numbers would not be comparable).
+pub fn check_regression(current: &Json, baseline: &Json, max_drop: f64) -> Result<Vec<String>> {
+    let cur_v = current.get("schema_version").as_f64().unwrap_or(-1.0);
+    let base_v = baseline.get("schema_version").as_f64().unwrap_or(-1.0);
+    anyhow::ensure!(
+        cur_v == base_v,
+        "schema version mismatch: current {cur_v} vs baseline {base_v} — refresh the baseline"
+    );
+    let floor = 1.0 - max_drop;
+    let mut violations = Vec::new();
+    let mut check = |metric: &str, cur: Option<f64>, base: Option<f64>| {
+        let Some(base) = base.filter(|&b| b > 0.0) else { return };
+        // a baselined metric the current report stopped emitting is a
+        // gate hole (renamed/dropped bench row), not a pass
+        let Some(cur) = cur else {
+            violations.push(format!(
+                "{metric}: present in the baseline but missing from the current report — \
+                 rename the baseline entry or restore the bench row"
+            ));
+            return;
+        };
+        if cur < base * floor {
+            violations.push(format!(
+                "{metric}: {cur:.1}/s is {:.0}% of baseline {base:.1}/s (floor {:.0}%)",
+                100.0 * cur / base,
+                100.0 * floor
+            ));
+        }
+    };
+    if let Some(base_kernels) = baseline.get("kernels").as_obj() {
+        for (name, base_row) in base_kernels {
+            check(
+                &format!("kernels.{name}.per_sec"),
+                current.get("kernels").get(name).get("per_sec").as_f64(),
+                base_row.get("per_sec").as_f64(),
+            );
+        }
+    }
+    check(
+        "serve.throughput_rps",
+        current.get("serve").get("throughput_rps").as_f64(),
+        baseline.get("serve").get("throughput_rps").as_f64(),
+    );
+    Ok(violations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_json(mm_per_sec: f64, rps: Option<f64>, schema: f64) -> Json {
+        let mut kernels = BTreeMap::new();
+        let mut row = BTreeMap::new();
+        row.insert("per_sec".to_string(), Json::Num(mm_per_sec));
+        row.insert("mean_ns".to_string(), Json::Num(1000.0));
+        kernels.insert("packed_matmul_f32_pc".to_string(), Json::Obj(row));
+        let mut o = BTreeMap::new();
+        o.insert("schema_version".to_string(), Json::Num(schema));
+        o.insert("smoke".to_string(), Json::Bool(true));
+        o.insert("kernels".to_string(), Json::Obj(kernels));
+        if let Some(rps) = rps {
+            let mut s = BTreeMap::new();
+            s.insert("throughput_rps".to_string(), Json::Num(rps));
+            o.insert("serve".to_string(), Json::Obj(s));
+        }
+        Json::Obj(o)
+    }
+
+    #[test]
+    fn regression_gate_trips_only_past_the_floor() {
+        let base = report_json(1000.0, Some(200.0), 1.0);
+        // 80% of baseline is within a 25% allowance
+        let ok = report_json(800.0, Some(160.0), 1.0);
+        assert!(check_regression(&ok, &base, 0.25).unwrap().is_empty());
+        // 60% trips both metrics
+        let bad = report_json(600.0, Some(120.0), 1.0);
+        let v = check_regression(&bad, &base, 0.25).unwrap();
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].contains("packed_matmul_f32_pc"));
+        // metrics absent from the baseline are not compared
+        let base_no_serve = report_json(1000.0, None, 1.0);
+        let v = check_regression(&bad, &base_no_serve, 0.25).unwrap();
+        assert_eq!(v.len(), 1);
+        // ... but a baselined metric missing from the CURRENT report is a
+        // gate hole and counts as a violation
+        let cur_no_serve = report_json(900.0, None, 1.0);
+        let v = check_regression(&cur_no_serve, &base, 0.25).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("missing from the current report"), "{v:?}");
+        // schema mismatch refuses to compare at all
+        assert!(check_regression(&ok, &report_json(1000.0, None, 2.0), 0.25).is_err());
+    }
+
+    #[test]
+    fn report_merges_serve_and_roundtrips_json() {
+        let mut r = DeployBenchReport {
+            schema_version: SCHEMA_VERSION,
+            smoke: true,
+            kernels: vec![KernelBenchRow {
+                name: "packed_matmul_f32_pc".into(),
+                per_sec: 123.0,
+                mean_ns: 456.0,
+            }],
+            serve: None,
+        };
+        let mut s = BTreeMap::new();
+        s.insert("throughput_rps".to_string(), Json::Num(99.0));
+        r.merge_serve(Json::Obj(s));
+        let j = r.to_json();
+        let parsed = json::parse(&json::to_string(&j)).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
+        assert_eq!(parsed.get("serve").get("throughput_rps").as_f64(), Some(99.0));
+        assert_eq!(
+            parsed.get("kernels").get("packed_matmul_f32_pc").get("per_sec").as_f64(),
+            Some(123.0)
+        );
+    }
+
+    #[test]
+    fn microbench_smoke_produces_all_rows() {
+        let r = run_deploy_microbench(true).unwrap();
+        assert_eq!(r.schema_version, SCHEMA_VERSION);
+        assert!(r.smoke);
+        let names: Vec<&str> = r.kernels.iter().map(|k| k.name.as_str()).collect();
+        for want in [
+            "packed_matmul_f32_pc",
+            "packed_matmul_i32",
+            "packed_dw_f32_pc",
+            "packed_dw_i32",
+            "engine_forward_pc_w4a4",
+        ] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        for k in &r.kernels {
+            assert!(k.per_sec > 0.0 && k.mean_ns > 0.0, "{k:?}");
+        }
+    }
+}

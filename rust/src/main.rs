@@ -32,9 +32,10 @@ const USAGE: &str = "oscillations-qat — QAT oscillation study (Nagel et al., I
 USAGE: oscillations-qat <subcommand> [flags]
 
   train     --model mbv2 --estimator lsq --steps 400 --bits-w 3 [--bits-a 3 --quant-a]
-            [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0] [--fp-steps 600]
+            [--per-channel] [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0]
+            [--fp-steps 600]
   eval      --model mbv2 --ckpt ckpts/<tag>.qtns --bits-w 3 [--fp | --quant-a]
-  export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a] [--out m.qpkg]
+  export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a --per-channel] [--out m.qpkg]
             [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
   serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
             [--exact] [--smoke] [--bench-out BENCH_serve.json]
@@ -42,6 +43,10 @@ USAGE: oscillations-qat <subcommand> [flags]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
   suite     [--quick]       run everything in one process
   bench-step / bench-kernels
+  bench-deploy  [--smoke] [--serve-json BENCH_serve.json] [--out BENCH_deploy.json]
+                [--baseline BENCH_baseline.json --max-regress 0.25]
+                deploy micro-bench -> merged perf-trajectory report; exits
+                non-zero when any throughput drops past the baseline floor
 
 Common flags: --backend auto|pjrt|native   (native needs no artifacts)
               --artifacts artifacts --results results --ckpts ckpts
@@ -105,6 +110,7 @@ fn main() -> Result<()> {
         "suite" => cmd_suite(&lab)?,
         "bench-step" => cmd_bench_step(be, &args)?,
         "bench-kernels" => cmd_bench_kernels(be)?,
+        "bench-deploy" => cmd_bench_deploy(&args)?,
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
             std::process::exit(2);
@@ -127,6 +133,7 @@ fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
         bits_w: args.u32_or("bits-w", 3),
         bits_a: args.u32_or("bits-a", args.u32_or("bits-w", 3)),
         quant_a: args.flag("quant-a"),
+        per_channel: args.flag("per-channel"),
         lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
         f_th: Schedule::parse(&args.str_or("f-th", "1.1")).expect("bad --f-th"),
         seed: args.u64_or("seed", 0),
@@ -195,6 +202,7 @@ fn cmd_export(lab: &Lab, args: &Args) -> Result<()> {
             bits_w,
             bits_a,
             quant_a,
+            per_channel: args.flag("per-channel"),
             lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
             f_th: Schedule::parse(&args.str_or("f-th", "cos(0.04,0.01)")).expect("bad --f-th"),
             seed: args.u64_or("seed", 0),
@@ -344,6 +352,60 @@ fn cmd_bench_step(rt: &dyn Backend, args: &Args) -> Result<()> {
         stats.per_sec(rt.index().model(&model)?.batch_size as f64),
         rt.index().model(&model)?.batch_size
     );
+    Ok(())
+}
+
+fn cmd_bench_deploy(args: &Args) -> Result<()> {
+    use oscillations_qat::deploy::trajectory::{check_regression, run_deploy_microbench};
+    use oscillations_qat::json;
+
+    let smoke = args.flag("smoke");
+    let mut report = run_deploy_microbench(smoke)?;
+    for k in &report.kernels {
+        println!("{:<26} {:>14.0} items/s  mean {:>10.0} ns", k.name, k.per_sec, k.mean_ns);
+    }
+
+    // merge the serve smoke bench, when present, into one trajectory file
+    if let Some(serve_path) = args.get("serve-json") {
+        let text = std::fs::read_to_string(serve_path)
+            .map_err(|e| anyhow::anyhow!("read serve report {serve_path}: {e}"))?;
+        let parsed = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse serve report {serve_path}: {e}"))?;
+        println!(
+            "merged serve report: {:.0} req/s",
+            parsed.get("throughput_rps").as_f64().unwrap_or(f64::NAN)
+        );
+        report.merge_serve(parsed);
+    }
+
+    let out = PathBuf::from(args.str_or("out", "BENCH_deploy.json"));
+    report.write_json(&out)?;
+    println!("trajectory report -> {}", out.display());
+
+    // regression gate against the committed baseline
+    if let Some(baseline_path) = args.get("baseline") {
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow::anyhow!("read baseline {baseline_path}: {e}"))?;
+        let baseline = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse baseline {baseline_path}: {e}"))?;
+        let max_drop = args.f32_or("max-regress", 0.25) as f64;
+        let violations = check_regression(&report.to_json(), &baseline, max_drop)?;
+        if violations.is_empty() {
+            println!(
+                "regression gate: all metrics within {:.0}% of {baseline_path}",
+                100.0 * max_drop
+            );
+        } else {
+            for v in &violations {
+                eprintln!("REGRESSION {v}");
+            }
+            anyhow::bail!(
+                "{} throughput metric(s) regressed past the {:.0}% floor",
+                violations.len(),
+                100.0 * max_drop
+            );
+        }
+    }
     Ok(())
 }
 

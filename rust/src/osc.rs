@@ -87,19 +87,49 @@ pub fn summarize(state: &NamedTensors, lowbit: &[String]) -> OscSummary {
     out
 }
 
+/// Per-element scale lookup for a (possibly per-channel) weight-scale
+/// tensor. A single-element `scales` is the per-tensor case; otherwise
+/// the weight shape disambiguates the layout: a 2-D `[C, k]` tensor whose
+/// *row* count matches `scales.len()` is depthwise-style (one scale per
+/// channel row), anything else indexes scales by output column
+/// (`i % scales.len()`, the dense `[d_in, d_out]` layout).
+///
+/// Caveat: the inference is ambiguous for a square depthwise tensor
+/// (`[3, 3]` with 3 scales resolves to *columns*). No current zoo layer
+/// hits this (dw widths are 32–64); code that knows the layer op should
+/// use `kernels::scale_index` with an explicit `group` instead — these
+/// analysis helpers only have the tensor name.
+pub fn scale_for(w_shape: &[usize], scales: &[f32], i: usize) -> f32 {
+    let n = scales.len();
+    if n <= 1 {
+        return scales.first().copied().unwrap_or(1.0);
+    }
+    if w_shape.len() == 2 && w_shape[0] == n && w_shape[1] != n {
+        scales[i / w_shape[1]]
+    } else {
+        scales[i % n]
+    }
+}
+
+fn scales_of(state: &NamedTensors, tensor: &str) -> Vec<f32> {
+    state
+        .get(&format!("params/{}", weight_scale_of(tensor)))
+        .map(|t| t.data.clone())
+        .unwrap_or_else(|| vec![1.0])
+}
+
 /// Distances of latent weights from their nearest grid point,
 /// d = w/s - round(w/s) in [-0.5, 0.5] — the x-axis of Figs 3 & 4.
 /// Clipped weights are skipped (they are not on the interior grid).
+/// Per-channel scale tensors are honoured element-wise.
 pub fn boundary_distances(state: &NamedTensors, tensor: &str, n: f32, p: f32) -> Vec<f32> {
     let Some(w) = state.get(&format!("params/{tensor}")) else { return vec![] };
-    let s = state
-        .get(&format!("params/{}", weight_scale_of(tensor)))
-        .map(|t| t.item())
-        .unwrap_or(1.0);
+    let scales = scales_of(state, tensor);
     w.data
         .iter()
-        .filter_map(|&x| {
-            let winv = x / s;
+        .enumerate()
+        .filter_map(|(i, &x)| {
+            let winv = x / scale_for(&w.shape, &scales, i);
             if winv < n || winv > p {
                 return None;
             }
@@ -108,14 +138,16 @@ pub fn boundary_distances(state: &NamedTensors, tensor: &str, n: f32, p: f32) ->
         .collect()
 }
 
-/// Latent weights in units of the scale (w/s) — Fig 3 left panel.
+/// Latent weights in units of their (per-tensor or per-channel) scale
+/// (w/s) — Fig 3 left panel.
 pub fn latent_grid_values(state: &NamedTensors, tensor: &str) -> Vec<f32> {
     let Some(w) = state.get(&format!("params/{tensor}")) else { return vec![] };
-    let s = state
-        .get(&format!("params/{}", weight_scale_of(tensor)))
-        .map(|t| t.item())
-        .unwrap_or(1.0);
-    w.data.iter().map(|&x| x / s).collect()
+    let scales = scales_of(state, tensor);
+    w.data
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| x / scale_for(&w.shape, &scales, i))
+        .collect()
 }
 
 /// One Fig-2 trace record: integer + latent values of the first `k`
@@ -137,11 +169,17 @@ pub fn trace_record(
     p: f32,
 ) -> Option<TraceRecord> {
     let w = state.get(&format!("params/{tensor}"))?;
-    let s = state.get(&format!("params/{}", weight_scale_of(tensor)))?.item();
+    let s_t = state.get(&format!("params/{}", weight_scale_of(tensor)))?;
     let k = k.min(w.len());
-    let latents: Vec<f32> = w.data[..k].iter().map(|&x| x / s).collect();
+    let latents: Vec<f32> = w.data[..k]
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| x / scale_for(&w.shape, &s_t.data, i))
+        .collect();
     let ints = latents.iter().map(|&x| round_ties_even(x).clamp(n, p)).collect();
-    Some(TraceRecord { step, ints, latents, scale: s })
+    // the `scale` field reports the first (for per-channel tensors:
+    // channel 0's) step size — the traced weights below index their own
+    Some(TraceRecord { step, ints, latents, scale: s_t.data.first().copied().unwrap_or(1.0) })
 }
 
 #[cfg(test)]
@@ -188,6 +226,35 @@ mod tests {
         }
         // 0.05/0.1 = 0.5 -> ties-even rounds to 0, distance +0.5
         assert!((d[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_channel_scale_lookup() {
+        // depthwise [C, 3] rows: row count matches scales.len()
+        let dw_shape = [4usize, 3];
+        let scales = [0.1f32, 0.2, 0.4, 0.8];
+        assert_eq!(scale_for(&dw_shape, &scales, 0), 0.1);
+        assert_eq!(scale_for(&dw_shape, &scales, 5), 0.2);
+        assert_eq!(scale_for(&dw_shape, &scales, 11), 0.8);
+        // dense [d_in, d_out] columns
+        let full_shape = [8usize, 4];
+        assert_eq!(scale_for(&full_shape, &scales, 0), 0.1);
+        assert_eq!(scale_for(&full_shape, &scales, 5), 0.2);
+        assert_eq!(scale_for(&full_shape, &scales, 7), 0.8);
+        // per-tensor scalar
+        assert_eq!(scale_for(&full_shape, &[0.3], 7), 0.3);
+        // per-channel distances stay well-formed
+        let mut s = NamedTensors::new();
+        s.insert("params/d.w", Tensor::new(vec![2, 3], vec![0.05, 0.1, -0.24, 0.5, 1.0, -2.4]));
+        s.insert("params/d.s", Tensor::new(vec![2], vec![0.1, 1.0]));
+        let d = boundary_distances(&s, "d.w", -4.0, 3.0);
+        assert_eq!(d.len(), 6);
+        for &x in &d {
+            assert!((-0.5..=0.5).contains(&x));
+        }
+        // rows 0 and 1 see the same latent pattern on their own grids
+        let lat = latent_grid_values(&s, "d.w");
+        assert!((lat[0] - 0.5).abs() < 1e-6 && (lat[3] - 0.5).abs() < 1e-6);
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub fn int_weights(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
     w.iter().map(|&x| round_ties_even(x / s).clamp(n, p)).collect()
 }
 
+/// Per-channel fake quantization lives in
+/// `runtime::native::kernels::fake_quant_pc` — the single source of
+/// truth for the per-channel weight-to-grid mapping (the exporter,
+/// packed engine and bit-exactness tests all encode through it).
+pub use crate::runtime::native::kernels::fake_quant_pc;
+
 /// Mean squared quantization error for a candidate scale.
 pub fn quant_mse(w: &[f32], s: f32, n: f32, p: f32) -> f64 {
     let mut acc = 0.0f64;

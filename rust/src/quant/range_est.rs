@@ -33,6 +33,21 @@ pub fn mse_weight_scale(w: &[f32], n: f32, p: f32) -> f32 {
     best.1
 }
 
+/// Per-channel MSE scales: element `i` belongs to channel
+/// `(i / group) % n_ch` (dense `[d_in, d_out]` columns: `group = 1`,
+/// `n_ch = d_out`; depthwise `[C, 3]` rows: `group = 3`, `n_ch = C`) and
+/// each channel's scale is grid-searched independently on its own
+/// elements — the per-channel twin of [`mse_weight_scale`].
+pub fn mse_weight_scale_pc(w: &[f32], n_ch: usize, group: usize, n: f32, p: f32) -> Vec<f32> {
+    let n_ch = n_ch.max(1);
+    let g = group.max(1);
+    let mut buckets: Vec<Vec<f32>> = vec![Vec::with_capacity(w.len() / n_ch + 1); n_ch];
+    for (i, &x) in w.iter().enumerate() {
+        buckets[(i / g) % n_ch].push(x);
+    }
+    buckets.iter().map(|b| mse_weight_scale(b, n, p)).collect()
+}
+
 /// LSQ-style activation scale from a calibration mean-|x|.
 pub fn lsq_act_scale(abs_mean: f32, p: f32) -> f32 {
     (2.0 * abs_mean / p.max(1.0).sqrt()).max(1e-4)
@@ -61,6 +76,35 @@ mod tests {
     fn zero_tensor_safe() {
         let s = mse_weight_scale(&[0.0; 16], -4.0, 3.0);
         assert!(s > 0.0);
+    }
+
+    #[test]
+    fn per_channel_beats_shared_scale_on_mixed_ranges() {
+        // two dense output columns with very different magnitudes: each
+        // channel's MSE over its own scale must be <= its MSE over the
+        // shared per-tensor scale
+        let mut r = Pcg32::new(3, 9);
+        let (d_in, d_out) = (256usize, 2usize);
+        let mut w = vec![0.0f32; d_in * d_out];
+        for i in 0..d_in {
+            w[i * d_out] = 0.02 * r.normal(); // tiny channel
+            w[i * d_out + 1] = 1.5 * r.normal(); // wide channel
+        }
+        let (n, p) = (-4.0, 3.0);
+        let shared = mse_weight_scale(&w, n, p);
+        let per_ch = mse_weight_scale_pc(&w, d_out, 1, n, p);
+        assert_eq!(per_ch.len(), 2);
+        assert!(per_ch[0] < per_ch[1], "channel scales should differ: {per_ch:?}");
+        for c in 0..d_out {
+            let col: Vec<f32> = (0..d_in).map(|i| w[i * d_out + c]).collect();
+            assert!(
+                quant_mse(&col, per_ch[c], n, p) <= quant_mse(&col, shared, n, p) + 1e-12,
+                "channel {c} worse than shared"
+            );
+        }
+        // degenerate single channel matches the per-tensor search
+        let one = mse_weight_scale_pc(&w, 1, 1, n, p);
+        assert_eq!(one, vec![mse_weight_scale(&w, n, p)]);
     }
 
     #[test]

@@ -86,8 +86,13 @@ struct LayerFwd {
     act_scale: f32,
     act_p: f32,
     act_quantized: bool,
-    /// weight-quant bookkeeping
-    w_scale: f32,
+    /// weight-quant bookkeeping: one scale (per-tensor) or one per
+    /// output channel, plus the element-to-channel layout `group`
+    /// (see `kernels::scale_index`) and the scale tensor's shape (the
+    /// gradient tensor must mirror it)
+    w_scales: Vec<f32>,
+    w_group: usize,
+    w_scale_shape: Vec<usize>,
     w_n: f32,
     w_p: f32,
     w_quantized: bool,
@@ -145,12 +150,17 @@ fn forward(
         };
 
         // --- weights (fake-quantized on the layer's grid when gated on) ---
+        // The scale tensor is a scalar (per-tensor LSQ) or a [d_out]
+        // vector (per-channel LSQ); all grid math below indexes it
+        // through the layer's channel layout.
         let w = req(sources, &format!("params/{}.w", l.name))?;
         let w_quantized = h.wq_on;
         let (w_n, w_p) = if l.wq == "8bit" { (-128.0, 127.0) } else { (h.n_w, h.p_w) };
-        let w_scale = scalar(sources, &format!("params/{}.s", l.name))?.max(1e-8);
+        let s_t = req(sources, &format!("params/{}.s", l.name))?;
+        let w_scales: Vec<f32> = s_t.data.iter().map(|&v| v.max(1e-8)).collect();
+        let w_group = l.scale_group();
         let w_eff = if w_quantized {
-            kernels::fake_quant(&w.data, w_scale, w_n, w_p)
+            kernels::fake_quant_pc(&w.data, &w_scales, w_group, w_n, w_p)
         } else {
             w.data.clone()
         };
@@ -252,7 +262,9 @@ fn forward(
             act_scale,
             act_p,
             act_quantized,
-            w_scale,
+            w_scales,
+            w_group,
+            w_scale_shape: s_t.shape.clone(),
             w_n,
             w_p,
             w_quantized,
@@ -363,8 +375,9 @@ pub fn train_step(
                 continue;
             }
             let w = req(sources, &format!("params/{}.w", l.name))?;
-            let s = scalar(sources, &format!("params/{}.s", l.name))?.max(1e-8);
-            damp += kernels::dampening_loss(&w.data, s, h.n_w, h.p_w);
+            let s_t = req(sources, &format!("params/{}.s", l.name))?;
+            let scales: Vec<f32> = s_t.data.iter().map(|&v| v.max(1e-8)).collect();
+            damp += kernels::dampening_loss_pc(&w.data, &scales, l.scale_group(), h.n_w, h.p_w);
         }
         damp *= h.lam;
     }
@@ -472,24 +485,38 @@ pub fn train_step(
             }
         }
 
-        // weight fake-quant backward (estimator) + dampening gradient
+        // weight fake-quant backward (estimator) + dampening gradient;
+        // the step-size gradient mirrors the scale tensor (scalar or
+        // per-channel vector)
         let mut dw = vec![0.0f32; w.len()];
-        let mut ds = 0.0f32;
         if cache.w_quantized {
-            kernels::fake_quant_bwd(
+            let mut ds = vec![0.0f32; cache.w_scales.len()];
+            kernels::fake_quant_bwd_pc(
                 est,
                 &w.data,
                 &dw_eff,
-                cache.w_scale,
+                &cache.w_scales,
+                cache.w_group,
                 cache.w_n,
                 cache.w_p,
                 &mut dw,
                 &mut ds,
             );
             if l.wq == "low" && h.lam > 0.0 {
-                kernels::dampening_bwd(&w.data, cache.w_scale, cache.w_n, cache.w_p, h.lam, &mut dw);
+                kernels::dampening_bwd_pc(
+                    &w.data,
+                    &cache.w_scales,
+                    cache.w_group,
+                    cache.w_n,
+                    cache.w_p,
+                    h.lam,
+                    &mut dw,
+                );
             }
-            grads.insert(format!("{}.s", l.name), Tensor::scalar(ds));
+            grads.insert(
+                format!("{}.s", l.name),
+                Tensor::new(cache.w_scale_shape.clone(), ds),
+            );
         } else {
             dw.copy_from_slice(&dw_eff);
         }
@@ -540,8 +567,10 @@ pub fn train_step(
             param.data[i] -= h.lr * mom.data[i];
         }
         if pname.ends_with(".s") || pname.ends_with(".as") {
-            // LSQ step sizes must stay positive
-            param.data[0] = param.data[0].max(1e-6);
+            // LSQ step sizes (per-tensor or per-channel) must stay positive
+            for v in param.data.iter_mut() {
+                *v = v.max(1e-6);
+            }
         }
         out.insert(pkey, param);
         out.insert(okey, mom);
@@ -576,10 +605,12 @@ pub fn train_step(
             }
             let wkey = format!("state/params/{}.w", l.name);
             let mut w = out.expect(&wkey)?.clone();
-            let s = out
+            let scales: Vec<f32> = out
                 .expect(&format!("state/params/{}.s", l.name))?
-                .item()
-                .max(1e-8);
+                .data
+                .iter()
+                .map(|&v| v.max(1e-8))
+                .collect();
             let read = |suffix: &str| -> Result<Vec<f32>> {
                 Ok(out
                     .expect(&format!("state/osc/{}.w#{suffix}", l.name))?
@@ -594,7 +625,16 @@ pub fn train_step(
                 wintp: read("wintp")?,
                 iema: read("iema")?,
             };
-            kernels::osc_update(&mut w.data, s, h.n_w, h.p_w, &mut st, h.m_osc, h.f_th);
+            kernels::osc_update_pc(
+                &mut w.data,
+                &scales,
+                l.scale_group(),
+                h.n_w,
+                h.p_w,
+                &mut st,
+                h.m_osc,
+                h.f_th,
+            );
             total += w.len();
             osc_hits += st.f.iter().filter(|&&x| x > crate::osc::OSC_METRIC_TH).count();
             frozen += st.b.iter().filter(|&&x| x > 0.5).count();

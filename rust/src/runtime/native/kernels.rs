@@ -26,16 +26,53 @@ fn clip(x: f32, n: f32, p: f32) -> f32 {
     x.max(n).min(p)
 }
 
+/// Index of the per-channel scale for element `i` of a weight tensor:
+/// `channel = (i / group) % n_scales`.
+///
+/// * dense `[d_in, d_out]` row-major, one scale per output column:
+///   `group = 1`, `n_scales = d_out`;
+/// * depthwise `[C, 3]` rows, one scale per channel row: `group = 3`,
+///   `n_scales = C`;
+/// * per-tensor: `n_scales = 1` (any group) — always index 0, which is
+///   how the scalar wrappers below reproduce the per-tensor behaviour
+///   bit for bit.
+#[inline]
+pub fn scale_index(i: usize, group: usize, n_scales: usize) -> usize {
+    (i / group.max(1)) % n_scales.max(1)
+}
+
+/// Per-channel LSQ fake quantization: element `i` is quantized on the
+/// grid of its channel's scale, `s_c * clip(round(w/s_c), n, p)`.
+pub fn fake_quant_pc(w: &[f32], scales: &[f32], group: usize, n: f32, p: f32) -> Vec<f32> {
+    let ns = scales.len();
+    w.iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let s = scales[scale_index(i, group, ns)];
+            s * clip(round_ties_even(x / s), n, p)
+        })
+        .collect()
+}
+
+/// Per-channel integer (grid-index) representation.
+pub fn int_weights_pc(w: &[f32], scales: &[f32], group: usize, n: f32, p: f32) -> Vec<f32> {
+    let ns = scales.len();
+    w.iter()
+        .enumerate()
+        .map(|(i, &x)| clip(round_ties_even(x / scales[scale_index(i, group, ns)]), n, p))
+        .collect()
+}
+
 /// LSQ-style fake quantization: `s * clip(round(w/s), n, p)`
-/// (ref.fake_quant_ref).
+/// (ref.fake_quant_ref). Per-tensor wrapper over [`fake_quant_pc`].
 pub fn fake_quant(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
-    w.iter().map(|&x| s * clip(round_ties_even(x / s), n, p)).collect()
+    fake_quant_pc(w, std::slice::from_ref(&s), 1, n, p)
 }
 
 /// Integer (grid-index) representation: `clip(round(w/s), n, p)`
-/// (ref.int_weights_ref).
+/// (ref.int_weights_ref). Per-tensor wrapper over [`int_weights_pc`].
 pub fn int_weights(w: &[f32], s: f32, n: f32, p: f32) -> Vec<f32> {
-    w.iter().map(|&x| clip(round_ties_even(x / s), n, p)).collect()
+    int_weights_pc(w, std::slice::from_ref(&s), 1, n, p)
 }
 
 /// Matmul with the RHS fake-quantized: `x @ fq(w)` (ref.quant_matmul_ref).
@@ -59,16 +96,24 @@ pub fn quant_matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, s: f32, 
     out
 }
 
-/// Oscillation-dampening regularizer (eq. 5), per-tensor sum:
-/// `|| fq(w) - clip(w, s*n, s*p) ||_F^2` (ref.dampening_loss_ref).
-pub fn dampening_loss(w: &[f32], s: f32, n: f32, p: f32) -> f32 {
+/// Oscillation-dampening regularizer (eq. 5) with per-channel scales:
+/// `sum_i (fq(w_i; s_c) - clip(w_i, s_c*n, s_c*p))^2`.
+pub fn dampening_loss_pc(w: &[f32], scales: &[f32], group: usize, n: f32, p: f32) -> f32 {
+    let ns = scales.len();
     let mut acc = 0.0f64;
-    for &x in w {
+    for (i, &x) in w.iter().enumerate() {
+        let s = scales[scale_index(i, group, ns)];
         let wq = s * clip(round_ties_even(x / s), n, p);
         let wc = clip(x, s * n, s * p);
         acc += ((wq - wc) as f64) * ((wq - wc) as f64);
     }
     acc as f32
+}
+
+/// Oscillation-dampening regularizer (eq. 5), per-tensor sum:
+/// `|| fq(w) - clip(w, s*n, s*p) ||_F^2` (ref.dampening_loss_ref).
+pub fn dampening_loss(w: &[f32], s: f32, n: f32, p: f32) -> f32 {
+    dampening_loss_pc(w, std::slice::from_ref(&s), 1, n, p)
 }
 
 /// Algorithm-1 oscillation state for one weight tensor (all arrays share
@@ -90,12 +135,16 @@ pub struct OscState {
     pub iema: Vec<f32>,
 }
 
-/// One step of the Algorithm-1 state machine (ref.osc_update_ref), applied
-/// to `w` (the latent weights *after* this step's SGD update) in place.
-/// Returns the per-weight oscillation indicator o^t for this step.
-pub fn osc_update(
+/// One step of the Algorithm-1 state machine with per-channel scales:
+/// element `i` runs the freeze/oscillation bookkeeping on its channel's
+/// grid (`s_c = scales[scale_index(i, group, n_scales)]`). Applied to `w`
+/// (the latent weights *after* this step's SGD update) in place. Returns
+/// the per-weight oscillation indicator o^t for this step.
+#[allow(clippy::too_many_arguments)]
+pub fn osc_update_pc(
     w: &mut [f32],
-    s: f32,
+    scales: &[f32],
+    group: usize,
     n: f32,
     p: f32,
     st: &mut OscState,
@@ -103,6 +152,7 @@ pub fn osc_update(
     f_th: f32,
 ) -> Vec<f32> {
     let len = w.len();
+    let ns = scales.len();
     debug_assert!(
         st.f.len() == len
             && st.b.len() == len
@@ -113,6 +163,7 @@ pub fn osc_update(
     );
     let mut osc_out = vec![0.0f32; len];
     for i in 0..len {
+        let s = scales[scale_index(i, group, ns)];
         // Frozen weights ignore the SGD proposal and stay pinned (in the
         // *integer* domain, so a moving scale s cannot re-round them).
         let w_eff = if st.b[i] > 0.5 { s * st.fint[i] } else { w[i] };
@@ -156,6 +207,20 @@ pub fn osc_update(
     osc_out
 }
 
+/// One step of the Algorithm-1 state machine (ref.osc_update_ref) with a
+/// single per-tensor scale. Wrapper over [`osc_update_pc`].
+pub fn osc_update(
+    w: &mut [f32],
+    s: f32,
+    n: f32,
+    p: f32,
+    st: &mut OscState,
+    m: f32,
+    f_th: f32,
+) -> Vec<f32> {
+    osc_update_pc(w, std::slice::from_ref(&s), 1, n, p, st, m, f_th)
+}
+
 /// Gradient estimator through the weight fake-quantizer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Estimator {
@@ -184,28 +249,37 @@ impl Estimator {
     }
 }
 
-/// Backward through the weight fake-quantizer: maps the gradient w.r.t.
-/// the quantized weight (`g`) to the latent-weight gradient, per the
-/// chosen estimator, and accumulates the LSQ step-size gradient into
-/// `ds`. `w` is the latent weight, `s` the step size.
+/// Backward through the weight fake-quantizer with per-channel scales:
+/// maps the gradient w.r.t. the quantized weight (`g`) to the
+/// latent-weight gradient, per the chosen estimator, and accumulates the
+/// LSQ step-size gradient of channel `c` into `ds[c]` (`ds.len()` must
+/// equal `scales.len()`). The LSQ gradient scaling uses the *per-channel*
+/// weight count `N_c = w.len() / n_scales` — `1/sqrt(N_c * p)` — so each
+/// channel's step size sees the same normalized gradient magnitude the
+/// per-tensor rule gives the whole tensor.
 ///
 /// Every estimator gates the gradient to zero outside the clip range (the
 /// LSQ rule); the multiplicative variants additionally modulate it by the
 /// distance `t = w/s - round(w/s)` from the grid point.
 #[allow(clippy::too_many_arguments)]
-pub fn fake_quant_bwd(
+pub fn fake_quant_bwd_pc(
     est: Estimator,
     w: &[f32],
     g: &[f32],
-    s: f32,
+    scales: &[f32],
+    group: usize,
     n: f32,
     p: f32,
     dw: &mut [f32],
-    ds: &mut f32,
+    ds: &mut [f32],
 ) {
-    let gscale = 1.0 / ((w.len() as f32).max(1.0) * p.abs().max(1.0)).sqrt();
+    let ns = scales.len();
+    debug_assert_eq!(ds.len(), ns, "ds must have one slot per scale");
+    let per_ch = (w.len() / ns.max(1)) as f32;
+    let gscale = 1.0 / (per_ch.max(1.0) * p.abs().max(1.0)).sqrt();
     for i in 0..w.len() {
-        let r = w[i] / s;
+        let c = scale_index(i, group, ns);
+        let r = w[i] / scales[c];
         let inside = r >= n && r <= p;
         // LSQ step-size gradient (identical grid term for all estimators)
         let s_term = if r < n {
@@ -215,7 +289,7 @@ pub fn fake_quant_bwd(
         } else {
             round_ties_even(r) - r
         };
-        *ds += g[i] * s_term * gscale;
+        ds[c] += g[i] * s_term * gscale;
         if !inside {
             continue;
         }
@@ -234,18 +308,57 @@ pub fn fake_quant_bwd(
     }
 }
 
-/// Gradient of the dampening regularizer (eq. 5) w.r.t. the latent weight:
-/// `d/dw || fq(w) - clip(w, s*n, s*p) ||^2 = 2 (clip(w) - fq(w))` inside
-/// the clip range (stop-gradient through fq), 0 outside. Accumulates
+/// Per-tensor wrapper over [`fake_quant_bwd_pc`].
+#[allow(clippy::too_many_arguments)]
+pub fn fake_quant_bwd(
+    est: Estimator,
+    w: &[f32],
+    g: &[f32],
+    s: f32,
+    n: f32,
+    p: f32,
+    dw: &mut [f32],
+    ds: &mut f32,
+) {
+    fake_quant_bwd_pc(
+        est,
+        w,
+        g,
+        std::slice::from_ref(&s),
+        1,
+        n,
+        p,
+        dw,
+        std::slice::from_mut(ds),
+    );
+}
+
+/// Gradient of the dampening regularizer (eq. 5) w.r.t. the latent weight
+/// with per-channel scales: `2 (w - fq(w; s_c))` inside the channel's
+/// clip range (stop-gradient through fq), 0 outside. Accumulates
 /// `lam * grad` into `dw`.
-pub fn dampening_bwd(w: &[f32], s: f32, n: f32, p: f32, lam: f32, dw: &mut [f32]) {
-    for i in 0..w.len() {
-        let x = w[i];
+pub fn dampening_bwd_pc(
+    w: &[f32],
+    scales: &[f32],
+    group: usize,
+    n: f32,
+    p: f32,
+    lam: f32,
+    dw: &mut [f32],
+) {
+    let ns = scales.len();
+    for (i, &x) in w.iter().enumerate() {
+        let s = scales[scale_index(i, group, ns)];
         if x >= s * n && x <= s * p {
             let wq = s * clip(round_ties_even(x / s), n, p);
             dw[i] += lam * 2.0 * (x - wq);
         }
     }
+}
+
+/// Per-tensor wrapper over [`dampening_bwd_pc`].
+pub fn dampening_bwd(w: &[f32], s: f32, n: f32, p: f32, lam: f32, dw: &mut [f32]) {
+    dampening_bwd_pc(w, std::slice::from_ref(&s), 1, n, p, lam, dw);
 }
 
 #[cfg(test)]
@@ -343,6 +456,96 @@ mod tests {
         for d in dw {
             assert!(d.abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn scale_index_layouts() {
+        // dense [d_in, d_out] columns: group 1, n_scales = d_out
+        assert_eq!(scale_index(0, 1, 3), 0);
+        assert_eq!(scale_index(4, 1, 3), 1);
+        // depthwise [C, 3] rows: group 3, n_scales = C
+        assert_eq!(scale_index(2, 3, 5), 0);
+        assert_eq!(scale_index(3, 3, 5), 1);
+        assert_eq!(scale_index(14, 3, 5), 4);
+        // per-tensor: always 0
+        assert_eq!(scale_index(99, 1, 1), 0);
+        assert_eq!(scale_index(99, 3, 1), 0);
+    }
+
+    #[test]
+    fn per_channel_fq_uses_each_channels_grid() {
+        // 2 channels (dense columns): channel 0 at s=0.1, channel 1 at s=1.0
+        let w = vec![0.12, 0.12, -0.37, -0.37]; // [2, 2] row-major
+        let scales = vec![0.1, 1.0];
+        let q = fake_quant_pc(&w, &scales, 1, -4.0, 3.0);
+        assert_eq!(q[0], 0.1); // 0.12/0.1 -> 1 -> 0.1
+        assert_eq!(q[1], 0.0); // 0.12/1.0 -> 0
+        assert!((q[2] - -0.4).abs() < 1e-6); // -3.7 -> clip -4 -> -0.4
+        assert_eq!(q[3], 0.0); // -0.37 -> 0
+        // n_scales = 1 reproduces the scalar function exactly
+        assert_eq!(fake_quant_pc(&w, &[0.1], 1, -4.0, 3.0), fake_quant(&w, 0.1, -4.0, 3.0));
+        assert_eq!(
+            int_weights_pc(&w, &[0.1], 3, -4.0, 3.0),
+            int_weights(&w, 0.1, -4.0, 3.0)
+        );
+    }
+
+    #[test]
+    fn per_channel_bwd_accumulates_per_channel_ds() {
+        // dw layout [2, 3]: rows are channels (group 3)
+        let w = vec![0.05, 0.0, 10.0, 0.26, -0.1, 0.0];
+        let g = vec![1.0; 6];
+        let scales = vec![0.1, 0.2];
+        let mut dw = vec![0.0; 6];
+        let mut ds = vec![0.0f32; 2];
+        fake_quant_bwd_pc(Estimator::Lsq, &w, &g, &scales, 3, -4.0, 3.0, &mut dw, &mut ds);
+        // element 2 (channel 0) is clipped: no dw, but p contributes to ds
+        assert_eq!(dw[2], 0.0);
+        assert!(dw[0] == 1.0 && dw[3] == 1.0);
+        assert!(ds[0] != 0.0 && ds[1] != 0.0);
+        // per-tensor wrapper agrees with the pc core on a single scale
+        let mut dw_a = vec![0.0; 6];
+        let mut ds_a = 0.0f32;
+        fake_quant_bwd(Estimator::Lsq, &w, &g, 0.1, -4.0, 3.0, &mut dw_a, &mut ds_a);
+        let mut dw_b = vec![0.0; 6];
+        let mut ds_b = vec![0.0f32; 1];
+        fake_quant_bwd_pc(Estimator::Lsq, &w, &g, &[0.1], 1, -4.0, 3.0, &mut dw_b, &mut ds_b);
+        assert_eq!(dw_a, dw_b);
+        assert_eq!(ds_a, ds_b[0]);
+    }
+
+    #[test]
+    fn per_channel_osc_freezes_on_channel_grid() {
+        // two dw channels with very different scales; both freeze and pin
+        // to their own channel's grid
+        let scales = vec![0.1f32, 1.0];
+        let mut w = vec![0.26, 0.0, 0.0, 2.6, 0.0, 0.0];
+        let mut st = OscState {
+            f: vec![0.5; 6],
+            b: vec![0.0; 6],
+            fint: vec![0.0; 6],
+            psign: vec![1.0; 6],
+            wintp: vec![2.0, 0.0, 0.0, 2.0, 0.0, 0.0],
+            iema: vec![2.6, 0.0, 0.0, 2.6, 0.0, 0.0],
+        };
+        osc_update_pc(&mut w, &scales, 3, -4.0, 3.0, &mut st, 0.1, 0.05);
+        assert_eq!(st.b[0], 1.0);
+        assert_eq!(st.b[3], 1.0);
+        assert!((w[0] - 0.1 * st.fint[0]).abs() < 1e-7);
+        assert!((w[3] - 1.0 * st.fint[3]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn per_channel_dampening_matches_scalar_on_uniform_scales() {
+        let w = vec![0.13, -0.22, 0.31, 0.04];
+        let a = dampening_loss(&w, 0.1, -4.0, 3.0);
+        let b = dampening_loss_pc(&w, &[0.1, 0.1], 1, -4.0, 3.0);
+        assert!((a - b).abs() < 1e-7);
+        let mut dwa = vec![0.0; 4];
+        let mut dwb = vec![0.0; 4];
+        dampening_bwd(&w, 0.1, -4.0, 3.0, 0.5, &mut dwa);
+        dampening_bwd_pc(&w, &[0.1, 0.1], 1, -4.0, 3.0, 0.5, &mut dwb);
+        assert_eq!(dwa, dwb);
     }
 
     #[test]

@@ -59,6 +59,16 @@ impl LayerSpec {
             LayerOp::Dw => vec![self.d_out, 3],
         }
     }
+
+    /// Per-channel scale layout `group` (see `kernels::scale_index`):
+    /// dense weights carry one scale per output column (`group = 1`),
+    /// depthwise `[C, 3]` rows one scale per channel row (`group = 3`).
+    pub fn scale_group(&self) -> usize {
+        match self.op {
+            LayerOp::Full => 1,
+            LayerOp::Dw => 3,
+        }
+    }
 }
 
 /// A native model: ordered layers over the synthetic corpus.

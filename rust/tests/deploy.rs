@@ -26,8 +26,10 @@ fn small_data() -> DataCfg {
 }
 
 /// Train a W4/A4 QAT model with the freezing schedule and re-estimated
-/// BN statistics — the state every check below exports.
-fn trained_state(be: &NativeBackend) -> NamedTensors {
+/// BN statistics — the state every check below exports. With
+/// `per_channel` the weight quantizers run one learned LSQ scale per
+/// output channel (the paper's depth-wise regime).
+fn trained_state(be: &NativeBackend, per_channel: bool) -> NamedTensors {
     let data = small_data();
     let trainer = Trainer::new(be);
     let mut fp = RunCfg::fp(MODEL, 60, 0.02, 0);
@@ -36,6 +38,10 @@ fn trained_state(be: &NativeBackend) -> NamedTensors {
     let mut state = run.state;
 
     qat::prepare_qat(be, &mut state, MODEL, BITS, BITS, &data, 0).unwrap();
+    if per_channel {
+        let n = qat::to_per_channel_scales(be, &mut state, MODEL, BITS).unwrap();
+        assert!(n >= 5, "expected every weight tensor converted, got {n}");
+    }
     let mut cfg = RunCfg::qat(MODEL, 80, BITS, 0);
     cfg.quant_a = true;
     cfg.data = data.clone();
@@ -83,7 +89,7 @@ fn agreement(got: &[usize], want: &[usize]) -> f64 {
 #[test]
 fn deploy_roundtrip_suite() {
     let be = NativeBackend::new();
-    let state = trained_state(&be);
+    let state = trained_state(&be, false);
     let (ref_preds, inputs) = reference_preds(&be, &state);
     assert_eq!(ref_preds.len(), 64);
 
@@ -184,6 +190,93 @@ fn deploy_roundtrip_suite() {
         "[deploy] {MODEL} w{BITS}a{BITS}: 100% top-1 agreement over {} samples; {}",
         ref_preds.len(),
         report.summary()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The per-channel acceptance criterion: a w4a4 **per-channel** QAT run
+/// of a depth-wise zoo model exports through QPKG v2, the file
+/// round-trips, and both engine paths (f32-bit-exact and
+/// i32-accumulation, standalone and behind the batched server) reproduce
+/// the fake-quant eval path's top-1 predictions exactly.
+#[test]
+fn per_channel_deploy_roundtrip_suite() {
+    let be = NativeBackend::new();
+    let state = trained_state(&be, true);
+
+    // the trained state really carries per-channel scale vectors
+    let nm = zoo_model(MODEL).unwrap();
+    for l in &nm.layers {
+        let s = state.get(&format!("params/{}.s", l.name)).unwrap();
+        assert_eq!(s.len(), l.d_out, "{} should train per-channel scales", l.name);
+    }
+
+    let (ref_preds, inputs) = reference_preds(&be, &state);
+    assert_eq!(ref_preds.len(), 64);
+
+    let cfg = ExportCfg { bits_w: BITS, bits_a: BITS, quant_a: true };
+    let (dm, report) = export_model(&nm, &state, &cfg).unwrap();
+    assert!(report.frozen_verified > 0, "freezing should engage per-channel: {report:?}");
+    assert!(report.max_offgrid <= 0.5 + 1e-6, "{report:?}");
+    for l in &dm.layers {
+        assert!(l.per_channel(), "{} exported without per-channel scales", l.name);
+        assert_eq!(l.w_scales.len(), l.d_out, "{}", l.name);
+    }
+
+    // ---- QPKG v2 file round-trip --------------------------------------
+    let dir = std::env::temp_dir().join(format!("qat_deploy_pc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model_pc.qpkg");
+    dm.write_qpkg(&path).unwrap();
+    let dm2 = DeployModel::read_qpkg(&path).unwrap();
+    assert_eq!(dm, dm2);
+
+    // the per-channel scale arrays cost d_out f32s per layer but the
+    // packed payload still honours the bits/32 budget
+    let file_bytes = std::fs::metadata(&path).unwrap().len() as f64;
+    let f32_bytes = dm.f32_weight_bytes() as f64;
+    let eps_bytes = (dm.aux_bytes() + 64 * dm.layers.len() + 256) as f64;
+    assert!(file_bytes <= f32_bytes * (8.0 / 32.0) + eps_bytes);
+
+    // ---- both engine paths: 100% top-1 agreement ----------------------
+    let exact = Engine::with_mode(dm.clone(), false);
+    let mut exact_preds = vec![];
+    for x in &inputs {
+        exact_preds.push(exact.predict_batch(x, 1).unwrap()[0]);
+    }
+    assert_eq!(
+        agreement(&exact_preds, &ref_preds),
+        1.0,
+        "per-channel f32-exact engine disagrees with the fake-quant eval path"
+    );
+
+    let int = Engine::new(dm2);
+    let mut int_preds = vec![];
+    for chunk in inputs.chunks(16) {
+        let mut x = Vec::with_capacity(chunk.len() * D_IN);
+        for s in chunk {
+            x.extend_from_slice(s);
+        }
+        int_preds.extend(int.predict_batch(&x, chunk.len()).unwrap());
+    }
+    assert_eq!(
+        agreement(&int_preds, &ref_preds),
+        1.0,
+        "per-channel integer engine disagrees with the fake-quant eval path"
+    );
+
+    // ---- batched serving ----------------------------------------------
+    let scfg = ServeCfg { workers: 4, max_batch: 8, queue_cap: 64 };
+    let sreport = bench_serve(Arc::new(int), &scfg, &inputs).unwrap();
+    assert_eq!(
+        agreement(&sreport.preds, &ref_preds),
+        1.0,
+        "served per-channel predictions disagree with the fake-quant eval path"
+    );
+    eprintln!(
+        "[deploy] {MODEL} w{BITS}a{BITS} per-channel: 100% top-1 agreement over {} samples; {}",
+        ref_preds.len(),
+        sreport.summary()
     );
     std::fs::remove_dir_all(&dir).ok();
 }

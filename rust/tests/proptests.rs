@@ -349,7 +349,7 @@ fn packed_matmul_bitexact_vs_native_kernel() {
         }
         let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
         let (packed, grid_n) = pack_like_export(&w, s, bits);
-        let got = packed_matmul(&x, &packed, m, k, n, s, grid_n);
+        let got = packed_matmul(&x, &packed, m, k, n, &[s], grid_n);
         let want = kernels::quant_matmul(&x, &w, m, k, n, s, gn, gp);
         assert_eq!(got, want, "bits {bits} m {m} k {k} n {n}");
     });
@@ -367,7 +367,7 @@ fn packed_dw_bitexact_vs_interp_order() {
         let x: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
         let w: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.4).collect();
         let (packed, grid_n) = pack_like_export(&w, s, bits);
-        let got = packed_dw(&x, &packed, b, c, s, grid_n);
+        let got = packed_dw(&x, &packed, b, c, &[s], grid_n);
         let wq = kernels::fake_quant(&w, s, gn, gp);
         for bi in 0..b {
             for ci in 0..c {
@@ -402,8 +402,131 @@ fn i32_accumulation_exact_on_power_of_two_scales() {
         let zscale = s_a as f64 * s_w as f64;
         let got: Vec<f32> = acc.iter().map(|&v| (zscale * v as f64) as f32).collect();
         let a_q: Vec<f32> = qa.iter().map(|&c| s_a * c as f32).collect();
-        let want = packed_matmul(&a_q, &packed, m, k, n, s_w, grid_n);
+        let want = packed_matmul(&a_q, &packed, m, k, n, &[s_w], grid_n);
         assert_eq!(got, want, "bits {bits} s_a {s_a} s_w {s_w}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Per-channel round-trip bit-exactness: random per-channel scales at
+// 2/3/4/8 bits -> export encoding -> QPKG v2 bytes -> engine math equals
+// the per-channel fake-quant eval math, to the bit.
+
+/// Random positive per-channel scale vector.
+fn random_scales(rng: &mut Pcg32, n_ch: usize) -> Vec<f32> {
+    (0..n_ch).map(|_| rng.uniform(5e-3, 0.5)).collect()
+}
+
+#[test]
+fn per_channel_dequant_matches_fake_quant_pc_exactly() {
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::runtime::native::kernels::fake_quant_pc;
+    for_random_cases(200, "pc_dequant", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        // both layouts: dense columns (group 1) and dw rows (group 3)
+        for group in [1usize, 3] {
+            let n_ch = 1 + rng.below(8);
+            let rows = 1 + rng.below(20);
+            let len = if group == 1 { rows * n_ch } else { n_ch * 3 };
+            let scales = random_scales(rng, n_ch);
+            let w: Vec<f32> = (0..len).map(|_| rng.normal() * 2.0).collect();
+            let (packed, grid_n) = snap_and_pack_pc(&w, &scales, group, bits).unwrap();
+            let mut deq = Vec::new();
+            packed.dequant_pc_into(grid_n, &scales, group, &mut deq);
+            assert_eq!(
+                deq,
+                fake_quant_pc(&w, &scales, group, gn, gp),
+                "bits {bits} group {group}"
+            );
+        }
+    });
+}
+
+#[test]
+fn per_channel_qpkg_v2_roundtrip_is_engine_bitexact() {
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::deploy::format::{DeployLayer, DeployModel, DeployOp};
+    use oscillations_qat::runtime::native::kernels::fake_quant_pc;
+    for_random_cases(60, "pc_qpkg_roundtrip", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        // one full layer (hw chosen so d_in = hw*hw*3) + one dw layer
+        let hw = 1 + rng.below(3);
+        let d_in = hw * hw * 3;
+        let c = 2 + rng.below(6);
+        let full_scales = random_scales(rng, c);
+        let dw_scales = random_scales(rng, c);
+        let w_full: Vec<f32> = (0..d_in * c).map(|_| rng.normal() * 0.5).collect();
+        let w_dw: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.5).collect();
+        let (p_full, grid_n) = snap_and_pack_pc(&w_full, &full_scales, 1, bits).unwrap();
+        let (p_dw, _) = snap_and_pack_pc(&w_dw, &dw_scales, 3, bits).unwrap();
+        let layer = |name: &str, op, d_in, weights, scales: &Vec<f32>| DeployLayer {
+            name: name.into(),
+            op,
+            d_in,
+            d_out: c,
+            relu: false,
+            aq: false,
+            act_bits: 8,
+            a_scale: 1.0,
+            w_bits: bits,
+            w_scales: scales.clone(),
+            weights,
+            bias: None,
+            requant: None,
+        };
+        let dm = DeployModel {
+            name: "pcprop".into(),
+            input_hw: hw,
+            num_classes: c,
+            quant_a: false,
+            bits_w: bits,
+            bits_a: 8,
+            layers: vec![
+                layer("full", DeployOp::Full, d_in, p_full, &full_scales),
+                layer("dw", DeployOp::Dw, c, p_dw, &dw_scales),
+            ],
+        };
+        // QPKG v2 byte round-trip preserves everything
+        let dm2 = DeployModel::from_bytes(&dm.to_bytes()).expect("v2 roundtrip");
+        assert_eq!(dm, dm2);
+        // engine forward == per-channel fake-quant reference math, bit
+        // for bit (same loop order as the native interpreter)
+        let b = 1 + rng.below(3);
+        let mut x: Vec<f32> = (0..b * d_in).map(|_| rng.normal()).collect();
+        for v in x.iter_mut() {
+            if rng.next_f32() < 0.25 {
+                *v = 0.0;
+            }
+        }
+        let got = oscillations_qat::deploy::Engine::new(dm2).forward_batch(&x, b).unwrap();
+        let wq_full = fake_quant_pc(&w_full, &full_scales, 1, gn, gp);
+        let wq_dw = fake_quant_pc(&w_dw, &dw_scales, 3, gn, gp);
+        let mut mid = vec![0.0f32; b * c];
+        for bi in 0..b {
+            for kk in 0..d_in {
+                let a = x[bi * d_in + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..c {
+                    mid[bi * c + j] += a * wq_full[kk * c + j];
+                }
+            }
+        }
+        let mut want = vec![0.0f32; b * c];
+        for bi in 0..b {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for t in 0..3usize {
+                    let j = (ci + t + c - 1) % c;
+                    acc += wq_dw[ci * 3 + t] * mid[bi * c + j];
+                }
+                want[bi * c + ci] = acc;
+            }
+        }
+        assert_eq!(got, want, "bits {bits} c {c} hw {hw}");
     });
 }
 

@@ -1,0 +1,73 @@
+//! QPKG backward compatibility: a **committed version-1 fixture**
+//! (written by the PR-2 era scalar-scale serializer; layout pinned in
+//! `deploy/format.rs`) must keep loading after the format moved to
+//! version 2, upgrading its per-layer `f32 w_scale` to a one-element
+//! scale vector — and re-saving it must produce a valid v2 file with
+//! identical content.
+
+use oscillations_qat::deploy::format::{DeployModel, DeployOp};
+use std::path::PathBuf;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_v1.qpkg")
+}
+
+#[test]
+fn committed_v1_fixture_loads_and_upgrades() {
+    let m = DeployModel::read_qpkg(&fixture_path()).expect("v1 fixture must load");
+
+    // header fields survive
+    assert_eq!(m.name, "tiny");
+    assert_eq!(m.input_hw, 2);
+    assert_eq!(m.num_classes, 3);
+    assert!(m.quant_a);
+    assert_eq!(m.bits_w, 3);
+    assert_eq!(m.bits_a, 3);
+    assert_eq!(m.layers.len(), 2);
+
+    // layer 0: dense stem with a folded-BN requant, scalar scale upgraded
+    let stem = &m.layers[0];
+    assert_eq!(stem.name, "stem");
+    assert_eq!(stem.op, DeployOp::Full);
+    assert_eq!((stem.d_in, stem.d_out), (12, 3));
+    assert!(stem.relu && !stem.aq);
+    assert_eq!(stem.w_bits, 3);
+    assert_eq!(stem.w_scales, vec![0.1], "v1 scalar must upgrade to a 1-vector");
+    assert!(!stem.per_channel());
+    assert_eq!(stem.a_scale, 1.0);
+    let rq = stem.requant.as_ref().expect("stem requant");
+    assert_eq!(rq.mult, vec![1.0, 0.5, 2.0]);
+    assert_eq!(rq.add, vec![0.0, -0.1, 0.2]);
+    assert!(stem.bias.is_none());
+    // packed 3-bit codes decode to the values the v1 writer packed
+    let codes = stem.weights.unpack();
+    assert_eq!(codes.len(), 36);
+    for (i, &c) in codes.iter().enumerate() {
+        assert_eq!(c, (i % 8) as u32, "code {i}");
+    }
+
+    // layer 1: depthwise head with bias, quantized activations
+    let head = &m.layers[1];
+    assert_eq!(head.name, "head");
+    assert_eq!(head.op, DeployOp::Dw);
+    assert!(head.aq && !head.relu);
+    assert_eq!(head.w_bits, 4);
+    assert_eq!(head.act_bits, 3);
+    assert_eq!(head.w_scales, vec![0.2]);
+    assert_eq!(head.a_scale, 0.05);
+    assert_eq!(head.bias.as_deref(), Some(&[0.1, 0.2, 0.3][..]));
+    assert!(head.requant.is_none());
+    assert_eq!(head.weights.unpack(), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+
+    // re-serializing writes version 2 and round-trips the same model
+    let v2_bytes = m.to_bytes();
+    assert_eq!(&v2_bytes[..4], b"QPKG");
+    assert_eq!(u32::from_le_bytes(v2_bytes[4..8].try_into().unwrap()), 2);
+    let m2 = DeployModel::from_bytes(&v2_bytes).expect("upgraded model must round-trip");
+    assert_eq!(m, m2);
+
+    // and the raw fixture really is version 1 on disk
+    let raw = std::fs::read(fixture_path()).unwrap();
+    assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 1);
+    assert_ne!(raw, v2_bytes, "v2 layout must differ from the v1 bytes");
+}
