@@ -63,7 +63,14 @@ fn main() -> Result<()> {
     let info = be.index().model(model)?.clone();
     let hyper = q.hyper();
     let ds = Dataset::new(data.clone());
+    // decode-once: the packed payloads are unpacked one time here, and
+    // every serving worker below shares the same cached planes
     let engine = Arc::new(Engine::new(dm));
+    println!(
+        "prepared planes: {} B cached on top of {} B packed",
+        engine.prepared().plane_bytes(),
+        engine.model().packed_weight_bytes()
+    );
     let d_in = engine.model().d_in();
     let (mut agree, mut total) = (0usize, 0usize);
     let mut inputs: Vec<Vec<f32>> = vec![];

@@ -100,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     println!();
     if let Some(nm) = oscillations_qat::runtime::native::model::zoo_model("mbv2") {
         use oscillations_qat::deploy::export::{export_model, ExportCfg};
-        use oscillations_qat::deploy::Engine;
+        use oscillations_qat::deploy::{Engine, EngineOpts};
         use oscillations_qat::tensor::Tensor;
         // quant_a on so the i32-accumulation path actually runs
         let ecfg = ExportCfg { bits_w: 3, bits_a: 3, quant_a: true };
@@ -114,17 +114,27 @@ fn main() -> anyhow::Result<()> {
         let small = Dataset::new(DataCfg { val_size: 16, ..Default::default() });
         let batch = small.val_batches().remove(0);
         let b = batch.x.shape[0];
-        for (label, int_accum) in
-            [("deploy: engine f32-exact, batch 16", false), ("deploy: engine i32-accum, batch 16", true)]
-        {
-            let eng = Engine::with_mode(dm.clone(), int_accum);
+        // prepared (decode-once planes) vs streaming (re-decode per call)
+        // in both accumulation modes, plus scoped-thread batch splitting
+        let one = EngineOpts { threads: 1, prepared: true };
+        let streaming = EngineOpts { threads: 1, prepared: false };
+        let mt = EngineOpts { threads: 2, prepared: true };
+        for (label, int_accum, opts) in [
+            ("deploy: engine f32-exact streaming, batch 16", false, streaming),
+            ("deploy: engine f32-exact prepared, batch 16", false, one),
+            ("deploy: engine i32-accum streaming, batch 16", true, streaming),
+            ("deploy: engine i32-accum prepared, batch 16", true, one),
+            ("deploy: engine i32-accum prepared t2, batch 16", true, mt),
+        ] {
+            let eng = Engine::with_opts(dm.clone(), int_accum, opts);
             let s = bench_for(label, 1, Duration::from_secs(3), || {
                 let _ = eng.forward_batch(&batch.x.data, b).expect("deploy fwd");
             });
             println!("{}  ({:.0} img/s)", s.report(), s.per_sec(b as f64));
         }
         // per-channel export of the same state: the engine pays one scale
-        // lookup per weight decode; this row tracks that overhead
+        // lookup per plane decode at prepare time; this row tracks the
+        // steady-state (decode-once) per-channel cost
         let mut pc_state = state.clone();
         for l in &nm.layers {
             let sc: Vec<f32> = (0..l.d_out).map(|c| 0.02 + 1e-4 * c as f32).collect();
@@ -132,7 +142,12 @@ fn main() -> anyhow::Result<()> {
         }
         let (dm_pc, _) = export_model(&nm, &pc_state, &ecfg)?;
         let eng = Engine::new(dm_pc);
-        let label = "deploy: engine i32 per-channel, batch 16";
+        println!(
+            "deploy: mbv2 pc prepared planes {} B cached on top of {} B packed",
+            eng.prepared().plane_bytes(),
+            eng.model().packed_weight_bytes()
+        );
+        let label = "deploy: engine i32 per-channel prepared, batch 16";
         let s = bench_for(label, 1, Duration::from_secs(3), || {
             let _ = eng.forward_batch(&batch.x.data, b).expect("deploy fwd pc");
         });

@@ -22,7 +22,8 @@ use std::collections::BTreeMap;
 
 /// Options that never take a value. Keep in sync with the `args.flag()`
 /// call sites in `main.rs` (and declare new boolean options here).
-pub const BOOL_FLAGS: &[&str] = &["quick", "fp", "quant-a", "smoke", "exact", "per-channel"];
+pub const BOOL_FLAGS: &[&str] =
+    &["quick", "fp", "quant-a", "smoke", "exact", "per-channel", "streaming"];
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -91,6 +92,10 @@ impl Args {
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
@@ -201,6 +206,18 @@ mod tests {
         let a = Args::parse_with_flags(argv, &["dry-run"]);
         assert!(a.flag("dry-run"));
         assert_eq!(a.positional, vec!["target".to_string()]);
+    }
+
+    #[test]
+    fn usize_values() {
+        let a = parse("serve --threads 4");
+        assert_eq!(a.usize_or("threads", 1), 4);
+        assert_eq!(a.usize_or("missing", 2), 2);
+        // declared flags still keep the next token positional
+        let a = parse("serve --streaming m.qpkg --threads 3");
+        assert!(a.flag("streaming"));
+        assert_eq!(a.usize_or("threads", 1), 3);
+        assert_eq!(a.positional, vec!["m.qpkg".to_string()]);
     }
 
     #[test]

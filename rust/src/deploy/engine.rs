@@ -1,40 +1,198 @@
 //! The packed low-bit inference engine.
 //!
-//! Two execution paths per layer, both reading weights straight out of
-//! the bit-packed QPKG payload:
+//! The execution core is a **decode-once [`PreparedModel`]**: at QPKG
+//! load time every layer's packed payload is decoded exactly once — into
+//! a per-channel-dequantized f32 plane (`s_c * grid_int`, the operand of
+//! the float path) and, for quantized-activation layers, a signed i32
+//! grid-integer plane (the operand of the integer path). Forward calls
+//! then run **cache-blocked, register-tiled kernels** straight over the
+//! cached planes; nothing touches the bitstream on the hot path. The
+//! pre-cache behaviour (re-decode per call) survives behind
+//! [`EngineOpts::prepared`] `= false` for benchmarking the difference.
 //!
-//! * **f32 path** ([`packed_matmul`] / [`packed_dw`]) — weights are
-//!   dequantized on the fly (`s_c * grid_int`, one exact multiply with
-//!   the channel's scale) and the accumulation replays the native
-//!   interpreter's loop order including its `a == 0.0` skip, so the
-//!   output is **bit-exact** against the native fake-quant kernels over
-//!   per-tensor *and* per-channel scale vectors. This is the path for
-//!   layers whose input activations are not quantized (the stem, and
-//!   every layer of a weight-only run).
-//! * **i32 path** ([`packed_matmul_i32`] / [`packed_dw_i32`]) — input
-//!   activations arrive as unsigned grid codes, weights as signed grid
-//!   integers, and the dot product accumulates in i32 (exact integer
-//!   arithmetic, no rounding at all); one per-channel requantization
-//!   multiply (`s_a * s_w[c] * acc`, in f64) brings the result back to
-//!   the real scale — per-channel weight scales factor out of each
-//!   output channel's dot product, so the stored integers never change.
-//!   Worst case here (255 x 127 x 768-deep) stays far inside i32 range.
+//! Two execution paths per layer:
+//!
+//! * **f32 path** ([`matmul_f32`] / [`dw_f32`]) — the accumulation
+//!   replays the native interpreter's term order per output element
+//!   (`kk` ascending, same `a == 0.0` skip), so the output is
+//!   **bit-exact** against the native fake-quant kernels over per-tensor
+//!   *and* per-channel scale vectors. Blocking and register tiling only
+//!   reorder *which* output element is updated next, never the terms
+//!   within one element. This is the path for layers whose input
+//!   activations are not quantized (the stem, and every layer of a
+//!   weight-only run).
+//! * **i32 path** ([`matmul_i32`] / [`dw_i32`]) — input activations
+//!   arrive as unsigned grid codes, weights as signed grid integers, and
+//!   the dot product accumulates in i32 (exact integer arithmetic, no
+//!   rounding at all); one per-channel requantization multiply
+//!   (`s_a * s_w[c] * acc`, in f64) brings the result back to the real
+//!   scale — per-channel weight scales factor out of each output
+//!   channel's dot product, so the stored integers never change. Worst
+//!   case here (255 x 127 x 768-deep) stays far inside i32 range.
+//!
+//! Batches parallelize over rows: [`EngineOpts::threads`] splits the
+//! batch into contiguous row chunks and runs the full layer stack on
+//! each under `std::thread::scope` (no extra deps, nothing outlives the
+//! call). Samples are independent, so the split is bit-exact by
+//! construction; serving workers share one `Arc<PreparedModel>` and
+//! never re-decode.
 //!
 //! After the linear op the folded-BN requant affine (`mult[c]*z+add[c]`),
 //! bias and ReLU are applied per channel — there is no batch-norm op and
 //! no running statistic left at inference time.
 
-use super::format::{DeployModel, DeployOp};
+use super::format::{DeployLayer, DeployModel, DeployOp};
 use super::packed::Packed;
 use crate::runtime::native::kernels;
 use anyhow::Result;
+use std::sync::Arc;
 
 pub use crate::tensor::argmax;
 
-/// `x [m,k] @ dequant(w) [k,n]`, bit-exact vs `kernels::quant_matmul`
-/// (per-tensor `scales = [s]`) / `kernels::fake_quant_pc` + the same
-/// loop order (same `a == 0.0` skip). `scales` holds one scale or one
-/// per output column.
+/// k-panel height of the blocked matmul kernels: a `KB x n` slab of the
+/// weight plane is reused across every batch row before moving on.
+const KB: usize = 64;
+
+/// One blocked matmul kernel per element type: the KB-panel blocking,
+/// 2-way register tiling, zero-skip arms and tail are shared so the f32
+/// and i32 kernels cannot drift apart. The fused arm's two *sequential*
+/// adds per element keep the f32 term order identical to two separate
+/// axpy passes (half the output-row traffic, same rounding); for i32
+/// every order is exact anyway.
+macro_rules! blocked_matmul_impl {
+    ($(#[$meta:meta])* $name:ident, $ty:ty, $zero:expr) => {
+        $(#[$meta])*
+        pub fn $name(x: &[$ty], w: &[$ty], m: usize, k: usize, n: usize, out: &mut [$ty]) {
+            debug_assert_eq!(w.len(), k * n);
+            debug_assert_eq!(x.len(), m * k);
+            debug_assert_eq!(out.len(), m * n);
+            out.fill($zero);
+            for k0 in (0..k).step_by(KB) {
+                let k1 = (k0 + KB).min(k);
+                for i in 0..m {
+                    let arow = &x[i * k..(i + 1) * k];
+                    let orow = &mut out[i * n..(i + 1) * n];
+                    let mut kk = k0;
+                    while kk + 1 < k1 {
+                        let (a0, a1) = (arow[kk], arow[kk + 1]);
+                        let r0 = &w[kk * n..(kk + 1) * n];
+                        let r1 = &w[(kk + 1) * n..(kk + 2) * n];
+                        match (a0 != $zero, a1 != $zero) {
+                            (true, true) => {
+                                for j in 0..n {
+                                    let t = orow[j] + a0 * r0[j];
+                                    orow[j] = t + a1 * r1[j];
+                                }
+                            }
+                            (true, false) => {
+                                for j in 0..n {
+                                    orow[j] += a0 * r0[j];
+                                }
+                            }
+                            (false, true) => {
+                                for j in 0..n {
+                                    orow[j] += a1 * r1[j];
+                                }
+                            }
+                            (false, false) => {}
+                        }
+                        kk += 2;
+                    }
+                    if kk < k1 {
+                        let a = arow[kk];
+                        if a != $zero {
+                            let row = &w[kk * n..(kk + 1) * n];
+                            for j in 0..n {
+                                orow[j] += a * row[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    };
+}
+
+blocked_matmul_impl!(
+    /// `x [m,k] @ wq [k,n]` over a decoded (dequantized) weight plane,
+    /// accumulating into `out [m,n]`. Bit-exact vs `kernels::quant_matmul`
+    /// / `kernels::fake_quant_pc` + the interpreter loop: per output
+    /// element the terms are added in ascending `kk` with the same
+    /// `a == 0.0` skip. Cache-blocked over `kk` (KB-panels) and
+    /// register-tiled two `kk` rows at a time (one load/store of the
+    /// output row per pair).
+    matmul_f32,
+    f32,
+    0.0f32
+);
+blocked_matmul_impl!(
+    /// Integer twin of [`matmul_f32`]: unsigned activation codes x signed
+    /// weight integers from a decoded plane, i32 accumulation (exact, so
+    /// blocking needs no order care). Zero codes are skipped.
+    matmul_i32,
+    i32,
+    0i32
+);
+
+/// One circular depthwise 3-tap kernel per element type (shared peeling
+/// logic, see the f32 instantiation for the order contract).
+macro_rules! blocked_dw_impl {
+    ($(#[$meta:meta])* $name:ident, $ty:ty, $zero:expr) => {
+        $(#[$meta])*
+        pub fn $name(x: &[$ty], w: &[$ty], b: usize, c_dim: usize, out: &mut [$ty]) {
+            debug_assert_eq!(w.len(), c_dim * 3);
+            debug_assert_eq!(x.len(), b * c_dim);
+            debug_assert_eq!(out.len(), b * c_dim);
+            if c_dim == 0 {
+                return;
+            }
+            for bi in 0..b {
+                let arow = &x[bi * c_dim..(bi + 1) * c_dim];
+                let orow = &mut out[bi * c_dim..(bi + 1) * c_dim];
+                let tap = |c: usize, jm1: usize, j0: usize, jp1: usize| -> $ty {
+                    let w3 = &w[c * 3..c * 3 + 3];
+                    let mut acc = $zero;
+                    acc += w3[0] * arow[jm1];
+                    acc += w3[1] * arow[j0];
+                    acc += w3[2] * arow[jp1];
+                    acc
+                };
+                orow[0] = tap(0, c_dim - 1, 0, 1 % c_dim);
+                for c in 1..c_dim.saturating_sub(1) {
+                    orow[c] = tap(c, c - 1, c, c + 1);
+                }
+                if c_dim > 1 {
+                    orow[c_dim - 1] = tap(c_dim - 1, c_dim - 2, c_dim - 1, 0);
+                }
+            }
+        }
+    };
+}
+
+blocked_dw_impl!(
+    /// Circular depthwise 3-tap conv over a decoded weight plane,
+    /// mirroring the interpreter's tap order (`t = 0, 1, 2` onto
+    /// `c-1, c, c+1` mod C) exactly — the accumulator starts at zero and
+    /// adds the taps in `t` order, so the f32 rounding sequence is the
+    /// scalar reference's. The two wrap-around channels are peeled so
+    /// the interior loop is branch- and modulo-free contiguous access.
+    dw_f32,
+    f32,
+    0.0f32
+);
+blocked_dw_impl!(
+    /// Integer circular depthwise 3-tap conv over a decoded plane with
+    /// i32 accumulation, wrap channels peeled like [`dw_f32`].
+    dw_i32,
+    i32,
+    0i32
+);
+
+/// `x [m,k] @ dequant(w) [k,n]` with a **streaming** decode: the packed
+/// payload is bulk-decoded on every call, then the blocked kernel runs.
+/// Kept as the pre-cache reference path (and for one-shot callers);
+/// bit-exact vs `kernels::quant_matmul` / `kernels::fake_quant_pc`.
+/// `scales` holds one scale or one per output column.
 pub fn packed_matmul(
     x: &[f32],
     w: &Packed,
@@ -49,25 +207,12 @@ pub fn packed_matmul(
     let mut wq = Vec::new();
     w.dequant_pc_into(grid_n, scales, 1, &mut wq);
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let a = x[i * k + kk];
-            if a == 0.0 {
-                continue;
-            }
-            let row = &wq[kk * n..(kk + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += a * row[j];
-            }
-        }
-    }
+    matmul_f32(x, &wq, m, k, n, &mut out);
     out
 }
 
-/// Circular depthwise 3-tap conv with on-the-fly dequantized weights
-/// (`scales`: one scale or one per channel row), mirroring the native
-/// interpreter's loop exactly.
+/// Streaming-decode circular depthwise 3-tap conv (`scales`: one scale
+/// or one per channel row), mirroring the native interpreter exactly.
 pub fn packed_dw(
     x: &[f32],
     w: &Packed,
@@ -81,24 +226,14 @@ pub fn packed_dw(
     let mut wq = Vec::new();
     w.dequant_pc_into(grid_n, scales, 3, &mut wq);
     let mut out = vec![0.0f32; b * c_dim];
-    for bi in 0..b {
-        let arow = &x[bi * c_dim..(bi + 1) * c_dim];
-        let orow = &mut out[bi * c_dim..(bi + 1) * c_dim];
-        for c in 0..c_dim {
-            let mut acc = 0.0f32;
-            for t in 0..3usize {
-                let j = (c + t + c_dim - 1) % c_dim;
-                acc += wq[c * 3 + t] * arow[j];
-            }
-            orow[c] = acc;
-        }
-    }
+    dw_f32(x, &wq, b, c_dim, &mut out);
     out
 }
 
-/// Integer matmul: unsigned activation codes x signed weight integers,
-/// i32 accumulation. Zero codes are skipped (the integer twin of the
-/// float path's `a == 0.0` fast path — `a_q == 0` iff its code is 0).
+/// Streaming-decode integer matmul: unsigned activation codes x signed
+/// weight integers, i32 accumulation. Zero codes are skipped (the
+/// integer twin of the float path's `a == 0.0` fast path — `a_q == 0`
+/// iff its code is 0).
 pub fn packed_matmul_i32(
     qa: &[i32],
     w: &Packed,
@@ -111,78 +246,210 @@ pub fn packed_matmul_i32(
     let mut wi = Vec::new();
     w.ints_into(grid_n, &mut wi);
     let mut out = vec![0i32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let a = qa[i * k + kk];
-            if a == 0 {
-                continue;
-            }
-            let row = &wi[kk * n..(kk + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += a * row[j];
-            }
-        }
-    }
+    matmul_i32(qa, &wi, m, k, n, &mut out);
     out
 }
 
-/// Integer circular depthwise 3-tap conv with i32 accumulation.
+/// Streaming-decode integer circular depthwise 3-tap conv.
 pub fn packed_dw_i32(qa: &[i32], w: &Packed, b: usize, c_dim: usize, grid_n: i32) -> Vec<i32> {
     debug_assert_eq!(w.len, c_dim * 3);
     let mut wi = Vec::new();
     w.ints_into(grid_n, &mut wi);
     let mut out = vec![0i32; b * c_dim];
-    for bi in 0..b {
-        let arow = &qa[bi * c_dim..(bi + 1) * c_dim];
-        let orow = &mut out[bi * c_dim..(bi + 1) * c_dim];
-        for c in 0..c_dim {
-            let mut acc = 0i32;
-            for t in 0..3usize {
-                let j = (c + t + c_dim - 1) % c_dim;
-                acc += wi[c * 3 + t] * arow[j];
-            }
-            orow[c] = acc;
-        }
-    }
+    dw_i32(qa, &wi, b, c_dim, &mut out);
     out
 }
 
-/// Inference over a [`DeployModel`].
-pub struct Engine {
-    model: DeployModel,
-    /// use the i32 accumulation path on quantized-activation layers
-    /// (false = f32 path everywhere, the closest mirror of simulated eval)
-    pub int_accum: bool,
+/// One layer's decode-once weight planes.
+#[derive(Debug, Clone)]
+pub struct PreparedLayer {
+    /// per-channel-dequantized f32 weights (`s_c * grid_int`), the float
+    /// path's operand — decoded once at prepare time
+    pub wq: Vec<f32>,
+    /// signed grid integers, the i32 path's operand; only materialized
+    /// for quantized-activation layers (the only ones that run it)
+    pub wi: Option<Vec<i32>>,
 }
 
-impl Engine {
-    /// Engine with the integer fast path on (the deployment default).
-    pub fn new(model: DeployModel) -> Self {
-        Engine { model, int_accum: true }
+/// A [`DeployModel`] plus its decode-once weight planes. Build one at
+/// load time ([`DeployModel::prepare`]) and share it across serving
+/// workers behind an `Arc` — every forward then runs on cached planes
+/// and the packed bitstream is never touched again.
+///
+/// Memory-vs-latency tradeoff: the planes cost up to 8 bytes per weight
+/// (f32 + i32) on top of the `bits/8`-byte payload, traded for never
+/// paying the decode on the hot path ([`PreparedModel::plane_bytes`]
+/// reports the exact overhead).
+#[derive(Debug, Clone)]
+pub struct PreparedModel {
+    model: DeployModel,
+    layers: Vec<PreparedLayer>,
+}
+
+impl PreparedModel {
+    /// Decode every layer's packed payload exactly once.
+    pub fn new(model: DeployModel) -> PreparedModel {
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| {
+                let grid_n = l.grid_n_int();
+                let mut wq = Vec::new();
+                l.weights.dequant_pc_into(grid_n, &l.w_scales, l.scale_group(), &mut wq);
+                let wi = l.aq.then(|| {
+                    let mut v = Vec::new();
+                    l.weights.ints_into(grid_n, &mut v);
+                    v
+                });
+                PreparedLayer { wq, wi }
+            })
+            .collect();
+        PreparedModel { model, layers }
     }
 
-    pub fn with_mode(model: DeployModel, int_accum: bool) -> Self {
-        Engine { model, int_accum }
+    /// A prepared-model shell with **no cached planes** (zero decode,
+    /// zero plane memory) for engines that serve in streaming mode
+    /// (`EngineOpts::prepared = false`). The engine falls back to the
+    /// per-call streaming decode for any layer whose plane is absent, so
+    /// this is safe — just slow — even if `prepared` is flipped on.
+    pub fn unprepared(model: DeployModel) -> PreparedModel {
+        let layers = model
+            .layers
+            .iter()
+            .map(|_| PreparedLayer { wq: Vec::new(), wi: None })
+            .collect();
+        PreparedModel { model, layers }
     }
 
     pub fn model(&self) -> &DeployModel {
         &self.model
     }
 
+    pub fn layers(&self) -> &[PreparedLayer] {
+        &self.layers
+    }
+
+    /// Bytes the cached planes occupy on top of the packed payload.
+    pub fn plane_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|p| p.wq.len() * 4 + p.wi.as_ref().map_or(0, |v| v.len() * 4))
+            .sum()
+    }
+}
+
+/// Execution knobs of one [`Engine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineOpts {
+    /// batch-row worker threads per forward call (1 = inline, no spawn)
+    pub threads: usize,
+    /// run from the decode-once cached planes; `false` replays the
+    /// pre-cache streaming decode on every call (benchmark reference)
+    pub prepared: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { threads: 1, prepared: true }
+    }
+}
+
+/// Inference over a [`PreparedModel`].
+pub struct Engine {
+    prepared: Arc<PreparedModel>,
+    /// use the i32 accumulation path on quantized-activation layers
+    /// (false = f32 path everywhere, the closest mirror of simulated eval)
+    pub int_accum: bool,
+    pub opts: EngineOpts,
+}
+
+impl Engine {
+    /// Engine with the integer fast path on (the deployment default).
+    pub fn new(model: DeployModel) -> Self {
+        Self::with_opts(model, true, EngineOpts::default())
+    }
+
+    pub fn with_mode(model: DeployModel, int_accum: bool) -> Self {
+        Self::with_opts(model, int_accum, EngineOpts::default())
+    }
+
+    /// With `opts.prepared` the payloads are decoded once here; in
+    /// streaming mode no planes are materialized at all (zero plane
+    /// memory — the forward re-decodes per call).
+    pub fn with_opts(model: DeployModel, int_accum: bool, opts: EngineOpts) -> Self {
+        let prepared = if opts.prepared {
+            PreparedModel::new(model)
+        } else {
+            PreparedModel::unprepared(model)
+        };
+        Self::from_prepared(Arc::new(prepared), int_accum, opts)
+    }
+
+    /// Share an already-prepared model (serving worker pools pass the
+    /// same `Arc<PreparedModel>` to every engine instead of re-decoding).
+    pub fn from_prepared(prepared: Arc<PreparedModel>, int_accum: bool, opts: EngineOpts) -> Self {
+        Engine { prepared, int_accum, opts }
+    }
+
+    pub fn model(&self) -> &DeployModel {
+        self.prepared.model()
+    }
+
+    pub fn prepared(&self) -> &Arc<PreparedModel> {
+        &self.prepared
+    }
+
     /// Forward `b` samples (`x` is `[b, input_hw*input_hw*3]` row-major
     /// flattened NHWC, same as the training `batch/x`); returns logits
-    /// `[b, num_classes]`.
+    /// `[b, num_classes]`. With `opts.threads > 1` the batch rows are
+    /// split into contiguous chunks, one scoped thread each; samples are
+    /// independent, so the result is bit-identical to the 1-thread run.
     pub fn forward_batch(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        let d_in = self.model().d_in();
         anyhow::ensure!(
-            x.len() == b * self.model.d_in(),
+            x.len() == b * d_in,
             "engine: input has {} elements, want {}x{}",
             x.len(),
             b,
-            self.model.d_in()
+            d_in
         );
+        let threads = self.opts.threads.max(1).min(b.max(1));
+        if threads <= 1 {
+            return self.forward_chunk(x, b);
+        }
+        let nc = self.model().num_classes;
+        let rows = (b + threads - 1) / threads;
+        let mut out = vec![0.0f32; b * nc];
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = x
+                .chunks(rows * d_in)
+                .zip(out.chunks_mut(rows * nc))
+                .map(|(xc, oc)| {
+                    s.spawn(move || -> Result<()> {
+                        let logits = self.forward_chunk(xc, xc.len() / d_in)?;
+                        oc.copy_from_slice(&logits);
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("engine worker thread panicked")))
+                })
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(out)
+    }
+
+    /// The full layer stack over one contiguous row chunk.
+    fn forward_chunk(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
         let mut act = x.to_vec();
-        for l in &self.model.layers {
+        for (l, pl) in self.prepared.model.layers.iter().zip(self.prepared.layers.iter()) {
             let (d_in, d_out) = (l.d_in, l.d_out);
             anyhow::ensure!(
                 act.len() == b * d_in,
@@ -192,18 +459,12 @@ impl Engine {
                 b,
                 d_in
             );
-            let grid_n = l.grid_n_int();
             let mut z = if l.aq {
                 // input activation codes on the unsigned LSQ grid
                 let codes = kernels::int_weights(&act, l.a_scale, 0.0, l.act_p());
                 if self.int_accum {
                     let qa: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
-                    let acc = match l.op {
-                        DeployOp::Full => {
-                            packed_matmul_i32(&qa, &l.weights, b, d_in, d_out, grid_n)
-                        }
-                        DeployOp::Dw => packed_dw_i32(&qa, &l.weights, b, d_out, grid_n),
-                    };
+                    let acc = self.linear_i32(l, pl, &qa, b);
                     // one per-channel requantization multiply back to the
                     // real scale: output idx -> channel idx % d_out
                     let sa = l.a_scale as f64;
@@ -215,22 +476,10 @@ impl Engine {
                         .collect()
                 } else {
                     let a_q: Vec<f32> = codes.iter().map(|&c| l.a_scale * c).collect();
-                    match l.op {
-                        DeployOp::Full => {
-                            packed_matmul(&a_q, &l.weights, b, d_in, d_out, &l.w_scales, grid_n)
-                        }
-                        DeployOp::Dw => {
-                            packed_dw(&a_q, &l.weights, b, d_out, &l.w_scales, grid_n)
-                        }
-                    }
+                    self.linear_f32(l, pl, &a_q, b)
                 }
             } else {
-                match l.op {
-                    DeployOp::Full => {
-                        packed_matmul(&act, &l.weights, b, d_in, d_out, &l.w_scales, grid_n)
-                    }
-                    DeployOp::Dw => packed_dw(&act, &l.weights, b, d_out, &l.w_scales, grid_n),
-                }
+                self.linear_f32(l, pl, &act, b)
             };
             if let Some(bias) = &l.bias {
                 for bi in 0..b {
@@ -259,10 +508,54 @@ impl Engine {
         Ok(act)
     }
 
+    /// One f32-path linear op: cached plane when prepared (and the plane
+    /// exists — an [`PreparedModel::unprepared`] shell has none),
+    /// streaming decode otherwise.
+    fn linear_f32(&self, l: &DeployLayer, pl: &PreparedLayer, x: &[f32], b: usize) -> Vec<f32> {
+        if self.opts.prepared && pl.wq.len() == l.weights.len {
+            let mut out = vec![0.0f32; b * l.d_out];
+            match l.op {
+                DeployOp::Full => matmul_f32(x, &pl.wq, b, l.d_in, l.d_out, &mut out),
+                DeployOp::Dw => dw_f32(x, &pl.wq, b, l.d_out, &mut out),
+            }
+            out
+        } else {
+            match l.op {
+                DeployOp::Full => {
+                    packed_matmul(x, &l.weights, b, l.d_in, l.d_out, &l.w_scales, l.grid_n_int())
+                }
+                DeployOp::Dw => {
+                    packed_dw(x, &l.weights, b, l.d_out, &l.w_scales, l.grid_n_int())
+                }
+            }
+        }
+    }
+
+    /// One i32-path linear op: cached integer plane when prepared and
+    /// materialized, streaming decode otherwise.
+    fn linear_i32(&self, l: &DeployLayer, pl: &PreparedLayer, qa: &[i32], b: usize) -> Vec<i32> {
+        match (self.opts.prepared, pl.wi.as_ref()) {
+            (true, Some(wi)) => {
+                let mut out = vec![0i32; b * l.d_out];
+                match l.op {
+                    DeployOp::Full => matmul_i32(qa, wi, b, l.d_in, l.d_out, &mut out),
+                    DeployOp::Dw => dw_i32(qa, wi, b, l.d_out, &mut out),
+                }
+                out
+            }
+            _ => match l.op {
+                DeployOp::Full => {
+                    packed_matmul_i32(qa, &l.weights, b, l.d_in, l.d_out, l.grid_n_int())
+                }
+                DeployOp::Dw => packed_dw_i32(qa, &l.weights, b, l.d_out, l.grid_n_int()),
+            },
+        }
+    }
+
     /// Top-1 class per sample (first index on ties, like `Tensor::argmax`).
     pub fn predict_batch(&self, x: &[f32], b: usize) -> Result<Vec<usize>> {
         let logits = self.forward_batch(x, b)?;
-        let nc = self.model.num_classes;
+        let nc = self.model().num_classes;
         Ok((0..b).map(|i| argmax(&logits[i * nc..(i + 1) * nc])).collect())
     }
 }
@@ -277,6 +570,104 @@ mod tests {
     fn pack_weights(w: &[f32], s: f32, bits: u32) -> (Packed, i32) {
         // the exporter's own mapping, so these tests cannot drift from it
         crate::deploy::export::snap_and_pack(w, s, bits).unwrap()
+    }
+
+    /// The pre-blocking scalar reference: plain triple loop, `kk`
+    /// ascending, `a == 0.0` skipped — the order contract the blocked
+    /// kernel must preserve per output element.
+    fn matmul_f32_scalar(x: &[f32], wq: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = x[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += a * wq[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn dw_scalar(x: &[f32], wq: &[f32], b: usize, c_dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; b * c_dim];
+        for bi in 0..b {
+            for c in 0..c_dim {
+                let mut acc = 0.0f32;
+                for t in 0..3usize {
+                    let j = (c + t + c_dim - 1) % c_dim;
+                    acc += wq[c * 3 + t] * x[bi * c_dim + j];
+                }
+                out[bi * c_dim + c] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_bitexact_vs_scalar_reference() {
+        let mut rng = Pcg32::new(7, 0xb10c);
+        // odd k exercises the 2-way tail; k > KB exercises panel edges
+        for (m, k, n) in [(1usize, 5usize, 3usize), (3, 17, 5), (4, 65, 7), (2, 130, 9)] {
+            let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            for i in (0..x.len()).step_by(3) {
+                x[i] = 0.0; // exercise every zero-skip arm
+            }
+            let wq: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+            let mut got = vec![0.0f32; m * n];
+            matmul_f32(&x, &wq, m, k, n, &mut got);
+            assert_eq!(got, matmul_f32_scalar(&x, &wq, m, k, n), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn unrolled_dw_bitexact_vs_modulo_reference() {
+        let mut rng = Pcg32::new(8, 0xd0);
+        for c_dim in [1usize, 2, 3, 4, 9, 17] {
+            let b = 3usize;
+            let x: Vec<f32> = (0..b * c_dim).map(|_| rng.normal()).collect();
+            let wq: Vec<f32> = (0..c_dim * 3).map(|_| rng.normal() * 0.3).collect();
+            let mut got = vec![0.0f32; b * c_dim];
+            dw_f32(&x, &wq, b, c_dim, &mut got);
+            assert_eq!(got, dw_scalar(&x, &wq, b, c_dim), "c_dim {c_dim}");
+        }
+    }
+
+    #[test]
+    fn integer_kernels_match_scalar_loops() {
+        let mut rng = Pcg32::new(9, 0x132);
+        let (m, k, n) = (3usize, 33, 6);
+        let qa: Vec<i32> = (0..m * k).map(|_| rng.below(16) as i32 - 1).collect();
+        let wi: Vec<i32> = (0..k * n).map(|_| rng.below(15) as i32 - 7).collect();
+        let mut got = vec![0i32; m * n];
+        matmul_i32(&qa, &wi, m, k, n, &mut got);
+        let mut want = vec![0i32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[i * n + j] += qa[i * k + kk] * wi[kk * n + j];
+                }
+            }
+        }
+        assert_eq!(got, want);
+
+        let c_dim = 9usize;
+        let qa: Vec<i32> = (0..m * c_dim).map(|_| rng.below(16) as i32).collect();
+        let wi: Vec<i32> = (0..c_dim * 3).map(|_| rng.below(15) as i32 - 7).collect();
+        let mut got = vec![0i32; m * c_dim];
+        dw_i32(&qa, &wi, m, c_dim, &mut got);
+        for bi in 0..m {
+            for c in 0..c_dim {
+                let mut acc = 0i32;
+                for t in 0..3usize {
+                    let j = (c + t + c_dim - 1) % c_dim;
+                    acc += wi[c * 3 + t] * qa[bi * c_dim + j];
+                }
+                assert_eq!(got[bi * c_dim + c], acc, "[{bi},{c}]");
+            }
+        }
     }
 
     #[test]
@@ -314,29 +705,14 @@ mod tests {
             // reference: per-channel fake-quant then the same loop order
             let (gn, gp) = weight_grid(bits);
             let wq = fake_quant_pc(&w, &scales, 1, gn, gp);
-            let mut want = vec![0.0f32; m * n];
-            for i in 0..m {
-                for kk in 0..k {
-                    let a = x[i * k + kk];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    for j in 0..n {
-                        want[i * n + j] += a * wq[kk * n + j];
-                    }
-                }
-            }
+            let want = matmul_f32_scalar(&x, &wq, m, k, n);
             assert_eq!(got, want, "bits {bits}");
         }
     }
 
-    #[test]
-    fn i32_per_channel_requant_composes_with_bn_affine() {
-        use crate::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+    fn tiny_pc_model() -> DeployModel {
         use crate::deploy::export::snap_and_pack_pc;
-        // power-of-two scales: every f32 op is exact, so the int-accum
-        // engine must agree with the f32-exact engine to the bit even
-        // with per-channel weight scales + a folded BN affine on top
+        use crate::deploy::format::Requant;
         let (d_in, d_out) = (12usize, 3usize);
         let scales = vec![0.5f32, 0.25, 0.125];
         let mut rng = Pcg32::new(9, 0x77);
@@ -362,7 +738,7 @@ mod tests {
                 add: vec![0.5, -0.25, 0.0],
             }),
         };
-        let dm = DeployModel {
+        DeployModel {
             name: "pc".into(),
             input_hw: 2,
             num_classes: 3,
@@ -370,11 +746,83 @@ mod tests {
             bits_w: 4,
             bits_a: 3,
             layers: vec![layer],
-        };
-        let x: Vec<f32> = (0..2 * d_in).map(|_| rng.below(8) as f32 * 0.5).collect();
+        }
+    }
+
+    #[test]
+    fn i32_per_channel_requant_composes_with_bn_affine() {
+        // power-of-two scales: every f32 op is exact, so the int-accum
+        // engine must agree with the f32-exact engine to the bit even
+        // with per-channel weight scales + a folded BN affine on top
+        let dm = tiny_pc_model();
+        let mut rng = Pcg32::new(10, 0x78);
+        let x: Vec<f32> = (0..2 * 12).map(|_| rng.below(8) as f32 * 0.5).collect();
         let exact = Engine::with_mode(dm.clone(), false).forward_batch(&x, 2).unwrap();
         let int = Engine::with_mode(dm, true).forward_batch(&x, 2).unwrap();
         assert_eq!(exact, int);
+    }
+
+    #[test]
+    fn prepared_streaming_and_threaded_forwards_agree() {
+        // the decode-once planes, the per-call streaming decode, and the
+        // scoped-thread batch split must all produce identical logits
+        let dm = tiny_pc_model();
+        let mut rng = Pcg32::new(12, 0x99);
+        let b = 7usize; // odd batch: uneven final thread chunk
+        let x: Vec<f32> = (0..b * 12).map(|_| rng.below(8) as f32 * 0.5).collect();
+        for int_accum in [false, true] {
+            let prepared = Engine::with_opts(dm.clone(), int_accum, EngineOpts::default())
+                .forward_batch(&x, b)
+                .unwrap();
+            let streaming = Engine::with_opts(
+                dm.clone(),
+                int_accum,
+                EngineOpts { threads: 1, prepared: false },
+            )
+            .forward_batch(&x, b)
+            .unwrap();
+            assert_eq!(prepared, streaming, "int_accum {int_accum}");
+            // a plane-less shell (streaming serve mode) must agree too,
+            // even if `prepared` is (mis)set: the engine falls back to
+            // the streaming decode when a plane is absent
+            for prep_flag in [false, true] {
+                let shell = Engine::from_prepared(
+                    Arc::new(PreparedModel::unprepared(dm.clone())),
+                    int_accum,
+                    EngineOpts { threads: 1, prepared: prep_flag },
+                )
+                .forward_batch(&x, b)
+                .unwrap();
+                assert_eq!(prepared, shell, "int_accum {int_accum} shell prep {prep_flag}");
+            }
+            for threads in [2usize, 3, 16] {
+                let mt = Engine::with_opts(
+                    dm.clone(),
+                    int_accum,
+                    EngineOpts { threads, prepared: true },
+                )
+                .forward_batch(&x, b)
+                .unwrap();
+                assert_eq!(prepared, mt, "int_accum {int_accum} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_model_caches_expected_planes() {
+        let dm = tiny_pc_model();
+        let pm = PreparedModel::new(dm);
+        assert_eq!(pm.layers().len(), 1);
+        let pl = &pm.layers()[0];
+        assert_eq!(pl.wq.len(), 36);
+        // aq layer: integer plane materialized, and consistent with wq
+        let wi = pl.wi.as_ref().unwrap();
+        assert_eq!(wi.len(), 36);
+        for (i, (&q, &f)) in wi.iter().zip(&pl.wq).enumerate() {
+            let s = pm.model().layers[0].w_scale_of(i % 3);
+            assert_eq!(f, s * q as f32, "plane mismatch at {i}");
+        }
+        assert_eq!(pm.plane_bytes(), 36 * 8);
     }
 
     #[test]
@@ -389,16 +837,7 @@ mod tests {
         let (packed, grid_n) = pack_weights(&w, s, bits);
         let got = packed_dw(&x, &packed, b, c, &[s], grid_n);
         let wq = kernels::fake_quant(&w, s, gn, gp);
-        for bi in 0..b {
-            for ci in 0..c {
-                let mut acc = 0.0f32;
-                for t in 0..3usize {
-                    let j = (ci + t + c - 1) % c;
-                    acc += wq[ci * 3 + t] * x[bi * c + j];
-                }
-                assert_eq!(got[bi * c + ci], acc, "[{bi},{ci}]");
-            }
-        }
+        assert_eq!(got, dw_scalar(&x, &wq, b, c));
     }
 
     #[test]

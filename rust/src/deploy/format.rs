@@ -384,6 +384,19 @@ impl DeployModel {
         f.read_to_end(&mut buf)?;
         Self::from_bytes(&buf)
     }
+
+    /// Load-time prepare hook: decode every layer's packed payload
+    /// exactly once into the engine's cached weight planes (see
+    /// [`super::engine::PreparedModel`]). Serving stacks call this right
+    /// after the QPKG load and share the result behind an `Arc`.
+    pub fn prepare(self) -> super::engine::PreparedModel {
+        super::engine::PreparedModel::new(self)
+    }
+
+    /// [`DeployModel::read_qpkg`] followed by [`DeployModel::prepare`].
+    pub fn read_qpkg_prepared(path: &Path) -> Result<super::engine::PreparedModel> {
+        Ok(Self::read_qpkg(path)?.prepare())
+    }
 }
 
 fn put_str(buf: &mut Vec<u8>, s: &str) {
@@ -619,6 +632,20 @@ mod tests {
         let mut m = sample();
         m.layers[0].d_out = 5; // codes no longer match 12x5 either
         assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn prepare_hook_decodes_planes_at_load() {
+        let m = sample();
+        let pm = m.clone().prepare();
+        assert_eq!(pm.model(), &m);
+        assert_eq!(pm.layers().len(), 2);
+        // stem (aq = false): f32 plane only; head (aq = true): both
+        assert_eq!(pm.layers()[0].wq.len(), 36);
+        assert!(pm.layers()[0].wi.is_none());
+        assert_eq!(pm.layers()[1].wq.len(), 9);
+        assert!(pm.layers()[1].wi.is_some());
+        assert_eq!(pm.plane_bytes(), 36 * 4 + 9 * 8);
     }
 
     #[test]

@@ -12,12 +12,21 @@
 //!   target width.
 //! * [`format`] — the versioned QPKG on-disk model format and the
 //!   [`format::DeployModel`] it round-trips.
-//! * [`packed`] — the bit-packed code vectors (2x int4 per byte, ...).
-//! * [`engine`] — the packed-weight inference engine: an f32 path
-//!   bit-exact against the native backend's fake-quant kernels, and an
-//!   i32-accumulation path for quantized-activation layers.
+//! * [`packed`] — the bit-packed code vectors (2x int4 per byte, ...)
+//!   with a bulk byte-level LUT decoder (whole bytes per table lookup,
+//!   u64-window chunks for the odd widths).
+//! * [`engine`] — the decode-once inference engine: QPKG load prepares a
+//!   [`engine::PreparedModel`] (each payload decoded exactly once into
+//!   cached f32/i32 weight planes), forwards run cache-blocked
+//!   register-tiled kernels over the planes — an f32 path bit-exact
+//!   against the native backend's fake-quant kernels, and an
+//!   i32-accumulation path for quantized-activation layers — and
+//!   [`engine::EngineOpts::threads`] splits batch rows across scoped
+//!   threads.
 //! * [`serve`] — a multi-threaded dynamically-batching request server
-//!   plus the `BENCH_serve.json` throughput/latency benchmark.
+//!   (workers share one `Arc` of the engine and its prepared planes)
+//!   plus the `BENCH_serve.json` throughput/latency benchmark with
+//!   p50/p95/p99 per-request latency percentiles.
 //! * [`trajectory`] — the CI perf-trajectory harness: deploy kernel
 //!   micro-benchmarks merged with the serve report into a
 //!   schema-versioned `BENCH_deploy.json`, gated against a committed
@@ -43,7 +52,7 @@ pub mod packed;
 pub mod serve;
 pub mod trajectory;
 
-pub use engine::Engine;
+pub use engine::{Engine, EngineOpts, PreparedModel};
 pub use export::{export_model, ExportCfg, ExportReport};
 pub use format::{DeployLayer, DeployModel, DeployOp, Requant};
 pub use packed::Packed;

@@ -11,8 +11,39 @@
 //! Codes are limited to 8 bits (the repo's widest grid), so one code
 //! spans at most two bytes and the accessors never need more than a
 //! 16-bit window.
+//!
+//! **Decoding is bulk, not per-element.** [`Packed::get`] extracts one
+//! code with bit arithmetic, but every whole-payload decoder
+//! ([`Packed::unpack`], [`Packed::ints_into`], [`Packed::dequant_pc_into`])
+//! runs through one byte-level core: widths that divide a byte (1/2/4/8
+//! bit) emit all of a byte's codes from a 256-entry lookup table in one
+//! indexed load, and the odd widths (3/5/6/7 bit) load a whole
+//! byte-aligned chunk (e.g. 3 bytes = eight 3-bit codes) into a u64
+//! window and shift the codes out — no per-element byte/shift
+//! computation, no per-element bounds checks. The bulk core is proven
+//! bit-identical to the `get(i)` loop by proptest for every width.
 
 use anyhow::Result;
+
+/// `LUT[b][j]` = the `j`-th `BITS`-wide code of byte `b` (LSB-first).
+const fn build_lut<const CODES: usize>(bits: u32) -> [[u8; CODES]; 256] {
+    let mask = ((1u32 << bits) - 1) as usize;
+    let mut t = [[0u8; CODES]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut j = 0usize;
+        while j < CODES {
+            t[b][j] = ((b >> (j * bits as usize)) & mask) as u8;
+            j += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+static LUT1: [[u8; 8]; 256] = build_lut::<8>(1);
+static LUT2: [[u8; 4]; 256] = build_lut::<4>(2);
+static LUT4: [[u8; 2]; 256] = build_lut::<2>(4);
 
 /// A bit-packed vector of unsigned codes, each `bits` wide.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,18 +87,105 @@ impl Packed {
         ((lo | hi) >> shift) & ((1u32 << self.bits) - 1)
     }
 
+    /// The bulk byte-level decode core: emit every code in order through
+    /// `emit`, whole bytes (or whole byte-aligned chunks for the odd
+    /// widths) at a time. Bit-identical to `(0..len).map(|i| get(i))`.
+    #[inline]
+    fn decode_with(&self, mut emit: impl FnMut(u32)) {
+        match self.bits {
+            8 => {
+                for &b in &self.bytes[..self.len] {
+                    emit(b as u32);
+                }
+            }
+            1 | 2 | 4 => {
+                let cpb = 8 / self.bits as usize; // codes per byte
+                let full = self.len / cpb;
+                match self.bits {
+                    1 => {
+                        for &b in &self.bytes[..full] {
+                            for &c in &LUT1[b as usize] {
+                                emit(c as u32);
+                            }
+                        }
+                    }
+                    2 => {
+                        for &b in &self.bytes[..full] {
+                            for &c in &LUT2[b as usize] {
+                                emit(c as u32);
+                            }
+                        }
+                    }
+                    _ => {
+                        for &b in &self.bytes[..full] {
+                            for &c in &LUT4[b as usize] {
+                                emit(c as u32);
+                            }
+                        }
+                    }
+                }
+                for i in full * cpb..self.len {
+                    emit(self.get(i));
+                }
+            }
+            bits => {
+                // odd widths: the smallest byte-aligned chunk is
+                // lcm(bits, 8) bits — load it into a u64 window once and
+                // shift all its codes out
+                let bits = bits as usize;
+                let (chunk_bytes, chunk_codes) = match bits {
+                    3 => (3usize, 8usize),
+                    5 => (5, 8),
+                    6 => (3, 4),
+                    7 => (7, 8),
+                    _ => (0, 0), // unreachable for valid payloads
+                };
+                if chunk_codes == 0 {
+                    for i in 0..self.len {
+                        emit(self.get(i));
+                    }
+                    return;
+                }
+                let mask = (1u64 << bits) - 1;
+                let chunks = self.len / chunk_codes;
+                for ch in 0..chunks {
+                    let mut window = 0u64;
+                    for (i, &b) in
+                        self.bytes[ch * chunk_bytes..ch * chunk_bytes + chunk_bytes].iter().enumerate()
+                    {
+                        window |= (b as u64) << (8 * i);
+                    }
+                    for j in 0..chunk_codes {
+                        emit(((window >> (j * bits)) & mask) as u32);
+                    }
+                }
+                for i in chunks * chunk_codes..self.len {
+                    emit(self.get(i));
+                }
+            }
+        }
+    }
+
+    /// All codes, decoded through the bulk core into `out` (pre-sized,
+    /// no reallocation).
+    pub fn unpack_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve_exact(self.len);
+        self.decode_with(|c| out.push(c));
+    }
+
     /// All codes, unpacked.
     pub fn unpack(&self) -> Vec<u32> {
-        (0..self.len).map(|i| self.get(i)).collect()
+        let mut out = Vec::new();
+        self.unpack_into(&mut out);
+        out
     }
 
     /// Decode to signed grid integers (`code + grid_n`).
     pub fn ints_into(&self, grid_n: i32, out: &mut Vec<i32>) {
         out.clear();
-        out.reserve(self.len);
-        for i in 0..self.len {
-            out.push(self.get(i) as i32 + grid_n);
-        }
+        out.reserve_exact(self.len);
+        self.decode_with(|c| out.push(c as i32 + grid_n));
     }
 
     /// Decode to the fake-quant weight values `scale * (code + grid_n)`.
@@ -87,13 +205,24 @@ impl Packed {
     /// `kernels::fake_quant_pc` for on-grid weights.
     pub fn dequant_pc_into(&self, grid_n: i32, scales: &[f32], group: usize, out: &mut Vec<f32>) {
         out.clear();
-        out.reserve(self.len);
+        out.reserve_exact(self.len);
         let ns = scales.len().max(1);
         let g = group.max(1);
-        for i in 0..self.len {
-            let s = scales[(i / g) % ns];
-            out.push(s * ((self.get(i) as i32 + grid_n) as f32));
-        }
+        // walk the (i / g) % ns scale index incrementally instead of
+        // dividing per element
+        let mut ci = 0usize;
+        let mut left = g;
+        self.decode_with(|c| {
+            out.push(scales[ci] * ((c as i32 + grid_n) as f32));
+            left -= 1;
+            if left == 0 {
+                left = g;
+                ci += 1;
+                if ci == ns {
+                    ci = 0;
+                }
+            }
+        });
     }
 
     /// Payload size in bytes.
@@ -115,6 +244,24 @@ mod tests {
             assert_eq!(p.len, codes.len());
             assert_eq!(p.bytes.len(), (codes.len() * bits as usize + 7) / 8);
             assert_eq!(p.unpack(), codes, "width {bits}");
+        }
+    }
+
+    #[test]
+    fn bulk_decode_matches_get_loop() {
+        // odd lengths leave partial chunks/bytes: the bulk core's tail
+        // path must agree with per-element extraction at every length
+        for bits in 1..=8u32 {
+            let mask = (1u32 << bits) - 1;
+            for len in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 23, 40, 41, 53] {
+                let codes: Vec<u32> = (0..len as u32).map(|i| (i * 13 + 5) & mask).collect();
+                let p = Packed::pack(&codes, bits).unwrap();
+                let by_get: Vec<u32> = (0..p.len).map(|i| p.get(i)).collect();
+                let mut bulk = Vec::new();
+                p.unpack_into(&mut bulk);
+                assert_eq!(bulk, by_get, "width {bits} len {len}");
+                assert!(bulk.capacity() >= len, "unpack_into must pre-size");
+            }
         }
     }
 
@@ -173,5 +320,25 @@ mod tests {
         p.dequant_into(-4, 0.3, &mut a);
         p.dequant_pc_into(-4, &[0.3], 1, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn per_channel_decode_walks_scale_index_like_kernels() {
+        // long payload across chunk boundaries: the incremental channel
+        // walk must equal the (i / g) % ns closed form for every width
+        for bits in [2u32, 3, 4, 8] {
+            let mask = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..61u32).map(|i| (i * 11 + 2) & mask).collect();
+            let p = Packed::pack(&codes, bits).unwrap();
+            for (ns, g) in [(1usize, 1usize), (4, 1), (4, 3), (7, 2)] {
+                let scales: Vec<f32> = (0..ns).map(|c| 0.1 + 0.05 * c as f32).collect();
+                let mut got = Vec::new();
+                p.dequant_pc_into(-4, &scales, g, &mut got);
+                let want: Vec<f32> = (0..p.len)
+                    .map(|i| scales[(i / g) % ns] * ((p.get(i) as i32 - 4) as f32))
+                    .collect();
+                assert_eq!(got, want, "bits {bits} ns {ns} g {g}");
+            }
+        }
     }
 }

@@ -4,14 +4,25 @@
 //! The `bench-trajectory` CI job runs the serve smoke benchmark (which
 //! writes `BENCH_serve.json`) and then `bench-deploy --smoke`, which:
 //!
-//! 1. micro-benchmarks the packed kernels (f32 per-channel matmul / dw,
-//!    i32-accumulation twins) and a full packed-engine forward on a
-//!    per-channel w4a4 export of a depth-wise zoo model,
+//! 1. micro-benchmarks the packed kernels in **both decode regimes** —
+//!    streaming (`packed_*`: bulk-decode the payload on every call, the
+//!    pre-cache behaviour) and prepared (`prepared_*`: decode once, run
+//!    the blocked kernels over cached planes) — plus a full
+//!    packed-engine forward on a per-channel w4a4 export of a
+//!    depth-wise zoo model in three configurations: streaming decode,
+//!    prepared (decode-once), and prepared with `--threads` scoped
+//!    batch-row workers,
 //! 2. merges the serve report into one schema-versioned
 //!    `BENCH_deploy.json` (uploaded as the per-commit artifact),
-//! 3. compares every throughput metric against the committed
-//!    `BENCH_baseline.json` and **fails the job** when any metric drops
-//!    by more than the allowed fraction (default 25%).
+//! 3. refuses to emit a report that lost its prepared-path rows
+//!    ([`DeployBenchReport::missing_required_rows`] — a gate hole, the
+//!    CLI exits non-zero), prints the streaming→prepared and 1→N-thread
+//!    speedups ([`DeployBenchReport::speedup_summary`], also appended to
+//!    the CI job summary), and
+//! 4. compares every throughput metric against the committed
+//!    `BENCH_baseline.json` — plus the serve **p95 tail latency**, gated
+//!    in the opposite direction — and **fails the job** when any metric
+//!    regresses by more than the allowed fraction (default 25%).
 //!
 //! The baseline file is a conservative floor (committed numbers are
 //! deliberately below what a developer laptop measures) so runner
@@ -19,7 +30,10 @@
 //! still trip it; refresh it by committing a CI-produced
 //! `BENCH_deploy.json` when the trajectory legitimately shifts.
 
-use super::engine::{packed_dw, packed_dw_i32, packed_matmul, packed_matmul_i32, Engine};
+use super::engine::{
+    dw_f32, dw_i32, matmul_f32, matmul_i32, packed_dw, packed_dw_i32, packed_matmul,
+    packed_matmul_i32, Engine, EngineOpts,
+};
 use super::export::{export_model, snap_and_pack_pc, ExportCfg};
 use crate::bench::bench_for;
 use crate::json::{self, Json};
@@ -35,6 +49,29 @@ use std::time::Duration;
 /// the report changes; the regression gate refuses to compare reports
 /// across schema versions.
 pub const SCHEMA_VERSION: u32 = 1;
+
+/// Bench rows that must be present in every report: losing one (renamed
+/// bench, dead code path) would silently blind the perf gate to the
+/// decode-once engine, so `bench-deploy` fails when any is missing.
+pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
+    "prepared_matmul_f32_pc",
+    "prepared_matmul_i32",
+    "prepared_dw_f32_pc",
+    "prepared_dw_i32",
+    "engine_forward_pc_w4a4",
+    "engine_forward_pc_w4a4_mt",
+];
+
+/// (streaming row, prepared row) pairs whose ratio is the decode-once /
+/// threading speedup surfaced in the CI job summary.
+const SPEEDUP_PAIRS: &[(&str, &str, &str)] = &[
+    ("packed_matmul_f32_pc", "prepared_matmul_f32_pc", "matmul f32-pc decode-once"),
+    ("packed_matmul_i32", "prepared_matmul_i32", "matmul i32 decode-once"),
+    ("packed_dw_f32_pc", "prepared_dw_f32_pc", "dw f32-pc decode-once"),
+    ("packed_dw_i32", "prepared_dw_i32", "dw i32 decode-once"),
+    ("engine_forward_pc_w4a4_streaming", "engine_forward_pc_w4a4", "engine forward decode-once"),
+    ("engine_forward_pc_w4a4", "engine_forward_pc_w4a4_mt", "engine forward 1 -> N threads"),
+];
 
 /// One micro-bench row.
 #[derive(Debug, Clone)]
@@ -84,13 +121,53 @@ impl DeployBenchReport {
     pub fn merge_serve(&mut self, serve: Json) {
         self.serve = Some(serve);
     }
+
+    fn row(&self, name: &str) -> Option<&KernelBenchRow> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+
+    /// Prepared-path rows ([`REQUIRED_PREPARED_ROWS`]) absent from this
+    /// report. Non-empty = the perf gate lost sight of the decode-once
+    /// engine and `bench-deploy` must fail.
+    pub fn missing_required_rows(&self) -> Vec<String> {
+        REQUIRED_PREPARED_ROWS
+            .iter()
+            .filter(|name| self.row(name).is_none())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Human/CI-summary rendering of the streaming→prepared (and
+    /// 1→N-thread) throughput deltas, one `old -> new (x speedup)` line
+    /// per pair present in the report.
+    pub fn speedup_summary(&self) -> String {
+        let mut lines = Vec::new();
+        for (old, new, label) in SPEEDUP_PAIRS {
+            let (Some(o), Some(n)) = (self.row(old), self.row(new)) else { continue };
+            if o.per_sec <= 0.0 {
+                continue;
+            }
+            lines.push(format!(
+                "{label}: {:.3e}/s -> {:.3e}/s ({:.2}x)",
+                o.per_sec,
+                n.per_sec,
+                n.per_sec / o.per_sec
+            ));
+        }
+        lines.join("\n")
+    }
 }
 
-/// Micro-benchmark the packed deploy kernels and a full engine forward.
-/// `smoke` shrinks the per-bench time budget for CI.
-pub fn run_deploy_microbench(smoke: bool) -> Result<DeployBenchReport> {
+/// Micro-benchmark the packed deploy kernels (streaming and prepared
+/// decode regimes) and the full engine forward (streaming / prepared /
+/// `threads`-way prepared). `smoke` shrinks the per-bench time budget
+/// for CI.
+pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchReport> {
     let budget = if smoke { Duration::from_millis(250) } else { Duration::from_secs(2) };
     let warmup = if smoke { 1 } else { 2 };
+    // honored as given (0 -> 1): the _mt row measures exactly the thread
+    // count the caller asked for, degenerating to a 1-thread re-run
+    let threads = threads.max(1);
     let mut rng = Pcg32::new(42, 0xbe);
     let mut rows: Vec<KernelBenchRow> = Vec::new();
     let mut push = |name: &str, per_iter_items: f64, stats: crate::bench::BenchStats| {
@@ -108,15 +185,32 @@ pub fn run_deploy_microbench(smoke: bool) -> Result<DeployBenchReport> {
     let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
     let (packed, grid_n) = snap_and_pack_pc(&w, &scales, 1, 4)?;
     let items = (m * k * n) as f64;
-    let s = bench_for("packed_matmul", warmup, budget, || {
+    let s = bench_for("packed_matmul_f32_pc", warmup, budget, || {
         std::hint::black_box(packed_matmul(&x, &packed, m, k, n, &scales, grid_n));
     });
     push("packed_matmul_f32_pc", items, s);
+    // prepared: the decode happens once, outside the timed region
+    let mut wq = Vec::new();
+    packed.dequant_pc_into(grid_n, &scales, 1, &mut wq);
+    let mut out_f = vec![0.0f32; m * n];
+    let s = bench_for("prepared_matmul_f32_pc", warmup, budget, || {
+        matmul_f32(&x, &wq, m, k, n, &mut out_f);
+        std::hint::black_box(&out_f);
+    });
+    push("prepared_matmul_f32_pc", items, s);
     let qa: Vec<i32> = (0..m * k).map(|_| rng.below(15) as i32).collect();
     let s = bench_for("packed_matmul_i32", warmup, budget, || {
         std::hint::black_box(packed_matmul_i32(&qa, &packed, m, k, n, grid_n));
     });
     push("packed_matmul_i32", items, s);
+    let mut wi = Vec::new();
+    packed.ints_into(grid_n, &mut wi);
+    let mut out_i = vec![0i32; m * n];
+    let s = bench_for("prepared_matmul_i32", warmup, budget, || {
+        matmul_i32(&qa, &wi, m, k, n, &mut out_i);
+        std::hint::black_box(&out_i);
+    });
+    push("prepared_matmul_i32", items, s);
 
     // --- packed depthwise, per-channel scales --------------------------
     let (b, c) = (16usize, 256);
@@ -125,15 +219,31 @@ pub fn run_deploy_microbench(smoke: bool) -> Result<DeployBenchReport> {
     let xd: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
     let (packed_d, grid_nd) = snap_and_pack_pc(&wd, &dw_scales, 3, 4)?;
     let items = (b * c * 3) as f64;
-    let s = bench_for("packed_dw", warmup, budget, || {
+    let s = bench_for("packed_dw_f32_pc", warmup, budget, || {
         std::hint::black_box(packed_dw(&xd, &packed_d, b, c, &dw_scales, grid_nd));
     });
     push("packed_dw_f32_pc", items, s);
+    let mut wqd = Vec::new();
+    packed_d.dequant_pc_into(grid_nd, &dw_scales, 3, &mut wqd);
+    let mut out_fd = vec![0.0f32; b * c];
+    let s = bench_for("prepared_dw_f32_pc", warmup, budget, || {
+        dw_f32(&xd, &wqd, b, c, &mut out_fd);
+        std::hint::black_box(&out_fd);
+    });
+    push("prepared_dw_f32_pc", items, s);
     let qad: Vec<i32> = (0..b * c).map(|_| rng.below(15) as i32).collect();
     let s = bench_for("packed_dw_i32", warmup, budget, || {
         std::hint::black_box(packed_dw_i32(&qad, &packed_d, b, c, grid_nd));
     });
     push("packed_dw_i32", items, s);
+    let mut wid = Vec::new();
+    packed_d.ints_into(grid_nd, &mut wid);
+    let mut out_id = vec![0i32; b * c];
+    let s = bench_for("prepared_dw_i32", warmup, budget, || {
+        dw_i32(&qad, &wid, b, c, &mut out_id);
+        std::hint::black_box(&out_id);
+    });
+    push("prepared_dw_i32", items, s);
 
     // --- full engine forward on a per-channel w4a4 depth-wise export ---
     let nm = zoo_model("efflite").context("efflite in the zoo")?;
@@ -143,14 +253,23 @@ pub fn run_deploy_microbench(smoke: bool) -> Result<DeployBenchReport> {
         state.insert(format!("params/{}.s", l.name), Tensor::new(vec![l.d_out], sc));
     }
     let (dm, _) = export_model(&nm, &state, &ExportCfg { bits_w: 4, bits_a: 4, quant_a: true })?;
-    let eng = Engine::new(dm);
     let batch = 16usize;
-    let d_in = eng.model().d_in();
+    let d_in = dm.d_in();
     let xe: Vec<f32> = (0..batch * d_in).map(|_| rng.normal().abs()).collect();
-    let s = bench_for("engine_forward", warmup, budget, || {
-        std::hint::black_box(eng.forward_batch(&xe, batch).expect("engine fwd"));
-    });
-    push("engine_forward_pc_w4a4", batch as f64, s);
+    for (row, opts) in [
+        (
+            "engine_forward_pc_w4a4_streaming",
+            EngineOpts { threads: 1, prepared: false },
+        ),
+        ("engine_forward_pc_w4a4", EngineOpts { threads: 1, prepared: true }),
+        ("engine_forward_pc_w4a4_mt", EngineOpts { threads, prepared: true }),
+    ] {
+        let eng = Engine::with_opts(dm.clone(), true, opts);
+        let s = bench_for(row, warmup, budget, || {
+            std::hint::black_box(eng.forward_batch(&xe, batch).expect("engine fwd"));
+        });
+        push(row, batch as f64, s);
+    }
 
     Ok(DeployBenchReport { schema_version: SCHEMA_VERSION, smoke, kernels: rows, serve: None })
 }
@@ -158,8 +277,10 @@ pub fn run_deploy_microbench(smoke: bool) -> Result<DeployBenchReport> {
 /// Compare a current report against a baseline: every throughput metric
 /// present in **both** (each `kernels.<name>.per_sec`, plus
 /// `serve.throughput_rps`) must be at least `(1 - max_drop)` of the
-/// baseline value. Returns the list of violations (empty = pass); bails
-/// when the schema versions differ (the numbers would not be comparable).
+/// baseline value, and the serve tail latency (`serve.p95_ms`, lower is
+/// better) must not exceed `(1 + max_drop)` of its baseline. Returns the
+/// list of violations (empty = pass); bails when the schema versions
+/// differ (the numbers would not be comparable).
 pub fn check_regression(current: &Json, baseline: &Json, max_drop: f64) -> Result<Vec<String>> {
     let cur_v = current.get("schema_version").as_f64().unwrap_or(-1.0);
     let base_v = baseline.get("schema_version").as_f64().unwrap_or(-1.0);
@@ -202,6 +323,25 @@ pub fn check_regression(current: &Json, baseline: &Json, max_drop: f64) -> Resul
         current.get("serve").get("throughput_rps").as_f64(),
         baseline.get("serve").get("throughput_rps").as_f64(),
     );
+    // tail latency gates in the opposite direction: lower is better, so
+    // the current p95 must stay under (1 + max_drop) x baseline
+    if let Some(base_p95) = baseline.get("serve").get("p95_ms").as_f64().filter(|&b| b > 0.0) {
+        let ceiling = 1.0 + max_drop;
+        match current.get("serve").get("p95_ms").as_f64() {
+            None => violations.push(
+                "serve.p95_ms: present in the baseline but missing from the current report — \
+                 rename the baseline entry or restore the latency percentiles"
+                    .to_string(),
+            ),
+            Some(cur) if cur > base_p95 * ceiling => violations.push(format!(
+                "serve.p95_ms: {cur:.2}ms is {:.0}% of baseline {base_p95:.2}ms \
+                 (tail-latency ceiling {:.0}%)",
+                100.0 * cur / base_p95,
+                100.0 * ceiling
+            )),
+            Some(_) => {}
+        }
+    }
     Ok(violations)
 }
 
@@ -227,6 +367,15 @@ mod tests {
         Json::Obj(o)
     }
 
+    fn with_p95(mut j: Json, p95: f64) -> Json {
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(s)) = o.get_mut("serve") {
+                s.insert("p95_ms".to_string(), Json::Num(p95));
+            }
+        }
+        j
+    }
+
     #[test]
     fn regression_gate_trips_only_past_the_floor() {
         let base = report_json(1000.0, Some(200.0), 1.0);
@@ -250,6 +399,31 @@ mod tests {
         assert!(v[0].contains("missing from the current report"), "{v:?}");
         // schema mismatch refuses to compare at all
         assert!(check_regression(&ok, &report_json(1000.0, None, 2.0), 0.25).is_err());
+    }
+
+    #[test]
+    fn tail_latency_gate_is_inverted() {
+        let base = with_p95(report_json(1000.0, Some(200.0), 1.0), 10.0);
+        // faster tail: fine
+        let ok = with_p95(report_json(1000.0, Some(200.0), 1.0), 8.0);
+        assert!(check_regression(&ok, &base, 0.25).unwrap().is_empty());
+        // 20% slower tail is inside the 25% ceiling
+        let ok = with_p95(report_json(1000.0, Some(200.0), 1.0), 12.0);
+        assert!(check_regression(&ok, &base, 0.25).unwrap().is_empty());
+        // 50% slower tail trips the gate
+        let bad = with_p95(report_json(1000.0, Some(200.0), 1.0), 15.0);
+        let v = check_regression(&bad, &base, 0.25).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("p95_ms"), "{v:?}");
+        // dropping the percentile from the current report is a gate hole
+        let cur_no_p95 = report_json(1000.0, Some(200.0), 1.0);
+        let v = check_regression(&cur_no_p95, &base, 0.25).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("p95_ms") && v[0].contains("missing"), "{v:?}");
+        // a current report with p95 vs a baseline without is not compared
+        let base_no_p95 = report_json(1000.0, Some(200.0), 1.0);
+        let cur = with_p95(report_json(1000.0, Some(200.0), 1.0), 99.0);
+        assert!(check_regression(&cur, &base_no_p95, 0.25).unwrap().is_empty());
     }
 
     #[test]
@@ -279,8 +453,33 @@ mod tests {
     }
 
     #[test]
+    fn required_rows_and_speedup_summary() {
+        let mk = |name: &str, per_sec: f64| KernelBenchRow {
+            name: name.into(),
+            per_sec,
+            mean_ns: 1.0,
+        };
+        let mut r = DeployBenchReport {
+            schema_version: SCHEMA_VERSION,
+            smoke: true,
+            kernels: vec![mk("packed_matmul_f32_pc", 100.0)],
+            serve: None,
+        };
+        // all prepared rows missing
+        assert_eq!(r.missing_required_rows().len(), REQUIRED_PREPARED_ROWS.len());
+        for name in REQUIRED_PREPARED_ROWS {
+            r.kernels.push(mk(name, 400.0));
+        }
+        assert!(r.missing_required_rows().is_empty());
+        // the summary reports the 4x streaming -> prepared delta
+        let s = r.speedup_summary();
+        assert!(s.contains("matmul f32-pc decode-once"), "{s}");
+        assert!(s.contains("4.00x"), "{s}");
+    }
+
+    #[test]
     fn microbench_smoke_produces_all_rows() {
-        let r = run_deploy_microbench(true).unwrap();
+        let r = run_deploy_microbench(true, 2).unwrap();
         assert_eq!(r.schema_version, SCHEMA_VERSION);
         assert!(r.smoke);
         let names: Vec<&str> = r.kernels.iter().map(|k| k.name.as_str()).collect();
@@ -289,12 +488,20 @@ mod tests {
             "packed_matmul_i32",
             "packed_dw_f32_pc",
             "packed_dw_i32",
+            "prepared_matmul_f32_pc",
+            "prepared_matmul_i32",
+            "prepared_dw_f32_pc",
+            "prepared_dw_i32",
+            "engine_forward_pc_w4a4_streaming",
             "engine_forward_pc_w4a4",
+            "engine_forward_pc_w4a4_mt",
         ] {
             assert!(names.contains(&want), "missing {want} in {names:?}");
         }
         for k in &r.kernels {
             assert!(k.per_sec > 0.0 && k.mean_ns > 0.0, "{k:?}");
         }
+        assert!(r.missing_required_rows().is_empty());
+        assert!(!r.speedup_summary().is_empty());
     }
 }

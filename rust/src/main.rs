@@ -38,15 +38,19 @@ USAGE: oscillations-qat <subcommand> [flags]
   export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a --per-channel] [--out m.qpkg]
             [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
   serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
-            [--exact] [--smoke] [--bench-out BENCH_serve.json]
+            [--threads N] [--exact] [--streaming] [--smoke]
+            [--bench-out BENCH_serve.json]
   toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
   suite     [--quick]       run everything in one process
   bench-step / bench-kernels
-  bench-deploy  [--smoke] [--serve-json BENCH_serve.json] [--out BENCH_deploy.json]
+  bench-deploy  [--smoke] [--threads 2] [--serve-json BENCH_serve.json]
+                [--out BENCH_deploy.json]
                 [--baseline BENCH_baseline.json --max-regress 0.25]
-                deploy micro-bench -> merged perf-trajectory report; exits
-                non-zero when any throughput drops past the baseline floor
+                deploy micro-bench (streaming + prepared decode, 1 and N
+                threads) -> merged perf-trajectory report; exits non-zero
+                when a prepared-path row is missing or any throughput
+                drops past the baseline floor
 
 Common flags: --backend auto|pjrt|native   (native needs no artifacts)
               --artifacts artifacts --results results --ckpts ckpts
@@ -238,13 +242,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use oscillations_qat::data::{DataCfg, Dataset};
     use oscillations_qat::deploy::format::DeployModel;
     use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
-    use oscillations_qat::deploy::Engine;
+    use oscillations_qat::deploy::{Engine, EngineOpts};
     use std::sync::Arc;
 
     let qpkg = args.str_or("qpkg", "");
     anyhow::ensure!(!qpkg.is_empty(), "serve needs --qpkg <model.qpkg> (see `export`)");
+    let opts = EngineOpts {
+        threads: args.usize_or("threads", 1).max(1),
+        prepared: !args.flag("streaming"),
+    };
+    // load-time prepare: with_opts decodes the packed payloads exactly
+    // once (every worker shares the planes through the Arc); --streaming
+    // skips the decode entirely and re-decodes per call
     let dm = DeployModel::read_qpkg(&PathBuf::from(&qpkg))?;
-    let engine = Arc::new(Engine::with_mode(dm, !args.flag("exact")));
+    let engine = Arc::new(Engine::with_opts(dm, !args.flag("exact"), opts));
+    if opts.prepared {
+        eprintln!(
+            "[serve] prepared planes: {} B cached on top of {} B packed ({} threads/forward)",
+            engine.prepared().plane_bytes(),
+            engine.model().packed_weight_bytes(),
+            opts.threads
+        );
+    } else {
+        eprintln!(
+            "[serve] streaming decode: no cached planes, {} B packed re-decoded per call \
+             ({} threads/forward)",
+            engine.model().packed_weight_bytes(),
+            opts.threads
+        );
+    }
 
     let smoke = args.flag("smoke");
     let requests = args.u64_or("requests", if smoke { 256 } else { 2048 }) as usize;
@@ -360,9 +386,38 @@ fn cmd_bench_deploy(args: &Args) -> Result<()> {
     use oscillations_qat::json;
 
     let smoke = args.flag("smoke");
-    let mut report = run_deploy_microbench(smoke)?;
+    let threads = args.usize_or("threads", 2);
+    let mut report = run_deploy_microbench(smoke, threads)?;
     for k in &report.kernels {
-        println!("{:<26} {:>14.0} items/s  mean {:>10.0} ns", k.name, k.per_sec, k.mean_ns);
+        println!("{:<34} {:>14.0} items/s  mean {:>10.0} ns", k.name, k.per_sec, k.mean_ns);
+    }
+
+    // a report that lost its prepared-path rows would blind the perf
+    // gate to the decode-once engine — fail before writing anything
+    let missing = report.missing_required_rows();
+    anyhow::ensure!(
+        missing.is_empty(),
+        "bench-deploy report is missing required prepared-path rows: {missing:?}"
+    );
+
+    // streaming -> prepared / 1 -> N-thread deltas, also appended to the
+    // GitHub Actions job summary when running in CI
+    let speedups = report.speedup_summary();
+    if !speedups.is_empty() {
+        println!("-- decode-once / threading speedups --\n{speedups}");
+        if let Ok(summary_path) = std::env::var("GITHUB_STEP_SUMMARY") {
+            let md = format!(
+                "### bench-deploy kernel throughput deltas\n\n```\n{speedups}\n```\n"
+            );
+            if let Err(e) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&summary_path)
+                .and_then(|mut f| std::io::Write::write_all(&mut f, md.as_bytes()))
+            {
+                eprintln!("[bench-deploy] could not append job summary: {e}");
+            }
+        }
     }
 
     // merge the serve smoke bench, when present, into one trajectory file

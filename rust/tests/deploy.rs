@@ -11,7 +11,7 @@ use oscillations_qat::data::{DataCfg, Dataset};
 use oscillations_qat::deploy::export::{export_model, ExportCfg};
 use oscillations_qat::deploy::format::DeployModel;
 use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
-use oscillations_qat::deploy::Engine;
+use oscillations_qat::deploy::{Engine, EngineOpts};
 use oscillations_qat::runtime::native::model::zoo_model;
 use oscillations_qat::runtime::{Backend, NativeBackend};
 use oscillations_qat::state::NamedTensors;
@@ -84,6 +84,35 @@ fn agreement(got: &[usize], want: &[usize]) -> f64 {
     assert_eq!(got.len(), want.len());
     let hits = got.iter().zip(want).filter(|(a, b)| a == b).count();
     hits as f64 / want.len().max(1) as f64
+}
+
+/// Engine thread count of the suite, `QAT_ENGINE_THREADS` (default 1):
+/// the CI test matrix runs this suite once at the default and once at 2
+/// so the scoped-thread path is exercised on every PR.
+fn engine_threads() -> usize {
+    std::env::var("QAT_ENGINE_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+fn engine_opts() -> EngineOpts {
+    EngineOpts { threads: engine_threads(), prepared: true }
+}
+
+/// Chunked batch prediction over the whole input set (the serving-shaped
+/// access pattern every engine-mode check below shares).
+fn predict_all(eng: &Engine, inputs: &[Vec<f32>]) -> Vec<usize> {
+    let mut preds = Vec::with_capacity(inputs.len());
+    for chunk in inputs.chunks(16) {
+        let mut x = Vec::with_capacity(chunk.len() * D_IN);
+        for s in chunk {
+            x.extend_from_slice(s);
+        }
+        preds.extend(eng.predict_batch(&x, chunk.len()).unwrap());
+    }
+    preds
 }
 
 #[test]
@@ -159,21 +188,26 @@ fn deploy_roundtrip_suite() {
         "f32-exact engine disagrees with the fake-quant eval path"
     );
 
-    // i32-accumulation mode (the deployment path), batched
-    let int = Engine::new(dm2);
-    let mut int_preds = vec![];
-    for chunk in inputs.chunks(16) {
-        let mut x = Vec::with_capacity(chunk.len() * D_IN);
-        for s in chunk {
-            x.extend_from_slice(s);
-        }
-        int_preds.extend(int.predict_batch(&x, chunk.len()).unwrap());
-    }
+    // i32-accumulation mode (the deployment path), batched, at the
+    // matrix-selected thread count
+    let int = Engine::with_opts(dm2.clone(), true, engine_opts());
+    let int_preds = predict_all(&int, &inputs);
     assert_eq!(
         agreement(&int_preds, &ref_preds),
         1.0,
         "integer engine disagrees with the fake-quant eval path"
     );
+
+    // decode-once planes, streaming decode, and the scoped-thread batch
+    // split must all reproduce the same predictions
+    for (label, opts) in [
+        ("streaming", EngineOpts { threads: 1, prepared: false }),
+        ("threads=2", EngineOpts { threads: 2, prepared: true }),
+    ] {
+        let eng = Engine::with_opts(dm2.clone(), true, opts);
+        let preds = predict_all(&eng, &inputs);
+        assert_eq!(preds, int_preds, "{label} engine drifted from the prepared engine");
+    }
 
     // ---- batched serving front-end ------------------------------------
     let scfg = ServeCfg { workers: 4, max_batch: 8, queue_cap: 64 };
@@ -250,20 +284,24 @@ fn per_channel_deploy_roundtrip_suite() {
         "per-channel f32-exact engine disagrees with the fake-quant eval path"
     );
 
-    let int = Engine::new(dm2);
-    let mut int_preds = vec![];
-    for chunk in inputs.chunks(16) {
-        let mut x = Vec::with_capacity(chunk.len() * D_IN);
-        for s in chunk {
-            x.extend_from_slice(s);
-        }
-        int_preds.extend(int.predict_batch(&x, chunk.len()).unwrap());
-    }
+    let int = Engine::with_opts(dm2.clone(), true, engine_opts());
+    let int_preds = predict_all(&int, &inputs);
     assert_eq!(
         agreement(&int_preds, &ref_preds),
         1.0,
         "per-channel integer engine disagrees with the fake-quant eval path"
     );
+
+    // the threaded and streaming engines reproduce the same predictions
+    // on the per-channel export too
+    for (label, opts) in [
+        ("streaming", EngineOpts { threads: 1, prepared: false }),
+        ("threads=2", EngineOpts { threads: 2, prepared: true }),
+    ] {
+        let eng = Engine::with_opts(dm2.clone(), true, opts);
+        let preds = predict_all(&eng, &inputs);
+        assert_eq!(preds, int_preds, "per-channel {label} engine drifted");
+    }
 
     // ---- batched serving ----------------------------------------------
     let scfg = ServeCfg { workers: 4, max_batch: 8, queue_cap: 64 };

@@ -9,7 +9,10 @@
 use oscillations_qat::analysis::histogram::Histogram;
 use oscillations_qat::analysis::kl::gaussian_kl;
 use oscillations_qat::coordinator::Schedule;
-use oscillations_qat::deploy::engine::{packed_dw, packed_matmul, packed_matmul_i32};
+use oscillations_qat::deploy::engine::{
+    dw_f32, dw_i32, matmul_f32, matmul_i32, packed_dw, packed_matmul, packed_matmul_i32,
+    EngineOpts,
+};
 use oscillations_qat::deploy::packed::Packed;
 use oscillations_qat::json;
 use oscillations_qat::quant::{self, range_est};
@@ -316,6 +319,110 @@ fn packed_roundtrip_arbitrary_codes() {
 }
 
 #[test]
+fn bulk_lut_decoder_bitexact_vs_get_loop() {
+    // the byte-level bulk decoder (LUT bytes for 1/2/4/8-bit, u64-window
+    // chunks for 3/5/6/7-bit) must reproduce per-element `get(i)` for
+    // every width and for odd lengths that straddle bytes and chunks
+    for_random_cases(300, "bulk_decode", |rng| {
+        let bits = 1 + rng.below(8) as u32;
+        // lengths deliberately off every chunk multiple (8-code chunks,
+        // 2/4/8-code bytes): n mod lcm is uniform over the cases
+        let n = 1 + rng.below(97);
+        let codes: Vec<u32> = (0..n).map(|_| rng.below(1usize << bits) as u32).collect();
+        let p = Packed::pack(&codes, bits).unwrap();
+        let by_get: Vec<u32> = (0..p.len).map(|i| p.get(i)).collect();
+        let mut bulk = Vec::new();
+        p.unpack_into(&mut bulk);
+        assert_eq!(bulk, by_get, "bits {bits} n {n}");
+        // the signed-int bulk decode is the same stream plus the offset
+        let grid_n = -(1i32 << (bits - 1));
+        let mut ints = Vec::new();
+        p.ints_into(grid_n, &mut ints);
+        let want: Vec<i32> = by_get.iter().map(|&c| c as i32 + grid_n).collect();
+        assert_eq!(ints, want, "bits {bits} n {n}");
+    });
+}
+
+#[test]
+fn blocked_kernels_bitexact_vs_scalar_reference() {
+    // the cache-blocked, register-tiled plane kernels must equal the
+    // plain scalar loops to the bit: the f32 pair because the per-output
+    // accumulation order (kk ascending, a == 0.0 skip) is preserved, the
+    // i32 pair because integer arithmetic is exact
+    for_random_cases(150, "blocked_kernels", |rng| {
+        let (m, k, n) = (1 + rng.below(5), 1 + rng.below(150), 1 + rng.below(9));
+        let mut x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        for v in x.iter_mut() {
+            if rng.next_f32() < 0.3 {
+                *v = 0.0;
+            }
+        }
+        let wq: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let mut got = vec![0.0f32; m * n];
+        matmul_f32(&x, &wq, m, k, n, &mut got);
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = x[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    want[i * n + j] += a * wq[kk * n + j];
+                }
+            }
+        }
+        assert_eq!(got, want, "matmul_f32 {m}x{k}x{n}");
+
+        let qa: Vec<i32> = (0..m * k).map(|_| rng.below(16) as i32 - 2).collect();
+        let wi: Vec<i32> = (0..k * n).map(|_| rng.below(255) as i32 - 127).collect();
+        let mut got = vec![0i32; m * n];
+        matmul_i32(&qa, &wi, m, k, n, &mut got);
+        let mut want = vec![0i32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[i * n + j] += qa[i * k + kk] * wi[kk * n + j];
+                }
+            }
+        }
+        assert_eq!(got, want, "matmul_i32 {m}x{k}x{n}");
+
+        // unrolled circular dw (wrap channels peeled) vs the modulo loop
+        let c = 1 + rng.below(20);
+        let b = 1 + rng.below(4);
+        let xd: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
+        let wd: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.4).collect();
+        let mut got = vec![0.0f32; b * c];
+        dw_f32(&xd, &wd, b, c, &mut got);
+        for bi in 0..b {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for t in 0..3usize {
+                    let j = (ci + t + c - 1) % c;
+                    acc += wd[ci * 3 + t] * xd[bi * c + j];
+                }
+                assert_eq!(got[bi * c + ci], acc, "dw_f32 c {c} [{bi},{ci}]");
+            }
+        }
+        let qd: Vec<i32> = (0..b * c).map(|_| rng.below(16) as i32).collect();
+        let wdi: Vec<i32> = (0..c * 3).map(|_| rng.below(15) as i32 - 7).collect();
+        let mut got = vec![0i32; b * c];
+        dw_i32(&qd, &wdi, b, c, &mut got);
+        for bi in 0..b {
+            for ci in 0..c {
+                let mut acc = 0i32;
+                for t in 0..3usize {
+                    let j = (ci + t + c - 1) % c;
+                    acc += wdi[ci * 3 + t] * qd[bi * c + j];
+                }
+                assert_eq!(got[bi * c + ci], acc, "dw_i32 c {c} [{bi},{ci}]");
+            }
+        }
+    });
+}
+
+#[test]
 fn packed_dequant_matches_fake_quant_exactly() {
     // the engine's on-the-fly dequant must reproduce the fake-quant
     // weights bit for bit on every grid the runtime uses
@@ -527,6 +634,99 @@ fn per_channel_qpkg_v2_roundtrip_is_engine_bitexact() {
             }
         }
         assert_eq!(got, want, "bits {bits} c {c} hw {hw}");
+    });
+}
+
+#[test]
+fn prepared_threaded_engine_bitexact_vs_streaming() {
+    // decode-once planes, per-call streaming decode, and the scoped
+    // batch-row thread split are three routes through identical
+    // arithmetic: the logits must agree to the bit in both accumulation
+    // modes, on random per-channel models with quantized activations
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+    for_random_cases(40, "engine_modes", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let hw = 1 + rng.below(3);
+        let d_in = hw * hw * 3;
+        let c = 2 + rng.below(6);
+        let full_scales = random_scales(rng, c);
+        let dw_scales = random_scales(rng, c);
+        let w_full: Vec<f32> = (0..d_in * c).map(|_| rng.normal() * 0.5).collect();
+        let w_dw: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.5).collect();
+        let (p_full, _) = snap_and_pack_pc(&w_full, &full_scales, 1, bits).unwrap();
+        let (p_dw, _) = snap_and_pack_pc(&w_dw, &dw_scales, 3, bits).unwrap();
+        let dm = DeployModel {
+            name: "modes".into(),
+            input_hw: hw,
+            num_classes: c,
+            quant_a: true,
+            bits_w: bits,
+            bits_a: bits,
+            layers: vec![
+                DeployLayer {
+                    name: "full".into(),
+                    op: DeployOp::Full,
+                    d_in,
+                    d_out: c,
+                    relu: true,
+                    aq: false,
+                    act_bits: 8,
+                    a_scale: 1.0,
+                    w_bits: bits,
+                    w_scales: full_scales.clone(),
+                    weights: p_full,
+                    bias: Some((0..c).map(|_| rng.normal() * 0.1).collect()),
+                    requant: Some(Requant {
+                        mult: (0..c).map(|_| rng.uniform(0.5, 2.0)).collect(),
+                        add: (0..c).map(|_| rng.normal() * 0.1).collect(),
+                    }),
+                },
+                DeployLayer {
+                    name: "dw".into(),
+                    op: DeployOp::Dw,
+                    d_in: c,
+                    d_out: c,
+                    relu: false,
+                    aq: true,
+                    act_bits: bits,
+                    a_scale: rng.uniform(0.01, 0.3),
+                    w_bits: bits,
+                    w_scales: dw_scales.clone(),
+                    weights: p_dw,
+                    bias: None,
+                    requant: None,
+                },
+            ],
+        };
+        let b = 1 + rng.below(6);
+        let x: Vec<f32> = (0..b * d_in).map(|_| rng.normal()).collect();
+        for int_accum in [false, true] {
+            let streaming = oscillations_qat::deploy::Engine::with_opts(
+                dm.clone(),
+                int_accum,
+                EngineOpts { threads: 1, prepared: false },
+            )
+            .forward_batch(&x, b)
+            .unwrap();
+            let prepared = oscillations_qat::deploy::Engine::with_opts(
+                dm.clone(),
+                int_accum,
+                EngineOpts::default(),
+            )
+            .forward_batch(&x, b)
+            .unwrap();
+            assert_eq!(streaming, prepared, "bits {bits} int_accum {int_accum}");
+            let threads = 2 + rng.below(3);
+            let mt = oscillations_qat::deploy::Engine::with_opts(
+                dm.clone(),
+                int_accum,
+                EngineOpts { threads, prepared: true },
+            )
+            .forward_batch(&x, b)
+            .unwrap();
+            assert_eq!(prepared, mt, "bits {bits} int_accum {int_accum} threads {threads}");
+        }
     });
 }
 
