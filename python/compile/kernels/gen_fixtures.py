@@ -1,10 +1,10 @@
 """Generate golden-parity JSON fixtures from the pure-jnp kernel oracles.
 
 The native Rust backend must match ``ref.py`` numerically; this script
-freezes small input/output vectors for the three hot-path kernels
-(fake-quant, Algorithm-1 osc-update, quant-matmul) into
-``rust/tests/fixtures/*.json``, where ``rust/tests/golden.rs`` asserts the
-native kernels agree within 1e-5.
+freezes small input/output vectors for the hot-path kernels (fake-quant,
+per-channel fake-quant, per-channel activation requant, Algorithm-1
+osc-update, quant-matmul) into ``rust/tests/fixtures/*.json``, where
+``rust/tests/golden.rs`` asserts the native kernels agree within 1e-5.
 
 Run from the repo root (requires jax):
 
@@ -16,6 +16,7 @@ from __future__ import annotations
 import json
 import os
 import sys
+import zlib
 
 import numpy as np
 
@@ -79,6 +80,51 @@ def osc_update_cases(rng):
     return {"kernel": "osc_update", "cases": cases}
 
 
+def fake_quant_pc_cases(rng):
+    cases = []
+    # (n, p, group, n_scales, rows): dense-column and depthwise-row
+    # layouts, plus a one-scale case that must equal the scalar kernel
+    for n, p, group, n_scales, rows in [
+        (-4, 3, 1, 6, 9),    # dense [9, 6] columns
+        (-8, 7, 3, 10, 10),  # depthwise [10, 3] rows
+        (-4, 3, 1, 1, 16),   # per-tensor degenerate
+        (-128, 127, 1, 4, 8),
+    ]:
+        size = rows * (3 if group == 3 else n_scales)
+        w = _f32(rng.normal(size=size) * 1.2)
+        scales = _f32(rng.uniform(0.02, 0.4, size=n_scales))
+        out = ref.fake_quant_pc_ref(w, scales, group, n, p)
+        ints = ref.int_weights_pc_ref(w, scales, group, n, p)
+        cases.append(
+            {
+                "w": _lst(w), "scales": _lst(scales), "group": group,
+                "n": n, "p": p, "out": _lst(out), "ints": _lst(ints),
+            }
+        )
+    return {"kernel": "fake_quant_pc", "cases": cases}
+
+
+def act_requant_pc_cases(rng):
+    cases = []
+    # (p, b, d, n_scales): per-channel and per-tensor activation scales
+    for p, b, d, n_scales in [
+        (7, 4, 10, 10),
+        (15, 3, 8, 8),
+        (7, 5, 6, 1),    # per-tensor degenerate
+        (255, 2, 12, 12),
+    ]:
+        a = _f32(np.abs(rng.normal(size=(b, d))) * 1.5 - 0.2)
+        scales = _f32(rng.uniform(0.02, 0.4, size=n_scales))
+        codes, a_q = ref.act_requant_pc_ref(a, scales, np.float32(p))
+        cases.append(
+            {
+                "a": _lst(a), "a_shape": [b, d], "scales": _lst(scales),
+                "p": p, "codes": _lst(codes), "out": _lst(a_q),
+            }
+        )
+    return {"kernel": "act_requant_pc", "cases": cases}
+
+
 def quant_matmul_cases(rng):
     cases = []
     for s, n, p, (mm, kk, nn) in [
@@ -102,12 +148,21 @@ def quant_matmul_cases(rng):
 
 def main():
     os.makedirs(OUT_DIR, exist_ok=True)
-    rng = np.random.default_rng(20220707)
-    for name, payload in [
-        ("fake_quant", fake_quant_cases(rng)),
-        ("osc_update", osc_update_cases(rng)),
-        ("quant_matmul", quant_matmul_cases(rng)),
+    # One generator per payload, seeded from the fixture name: adding a
+    # new kernel's cases cannot shift the rng stream of the existing
+    # committed fixtures (crc32 is stable across Python runs, unlike
+    # hash()).
+    def rng_for(name):
+        return np.random.default_rng([20220707, zlib.crc32(name.encode())])
+
+    for name, gen in [
+        ("fake_quant", fake_quant_cases),
+        ("fake_quant_pc", fake_quant_pc_cases),
+        ("act_requant_pc", act_requant_pc_cases),
+        ("osc_update", osc_update_cases),
+        ("quant_matmul", quant_matmul_cases),
     ]:
+        payload = gen(rng_for(name))
         path = os.path.join(OUT_DIR, f"{name}.json")
         with open(path, "w") as fh:
             json.dump(payload, fh, indent=1)

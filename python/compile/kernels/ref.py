@@ -88,6 +88,53 @@ def quant_matmul_ref(x, w, s, n, p):
     return x @ fake_quant_ref(w, s, n, p)
 
 
+def _pc_scales(shape, scales, group):
+    """Broadcast a per-channel scale vector over a flat tensor.
+
+    Element ``i`` belongs to channel ``(i // group) % n_scales`` — the
+    ``scale_index`` layout rule shared with the Rust kernels: dense
+    ``[d_in, d_out]`` columns use ``group = 1`` / ``n_scales = d_out``;
+    depthwise ``[C, 3]`` rows use ``group = 3`` / ``n_scales = C``;
+    a one-element ``scales`` reproduces the per-tensor rule.
+    """
+    scales = jnp.asarray(scales).reshape(-1)
+    size = 1
+    for d in shape:
+        size *= d
+    idx = (jnp.arange(size) // group) % scales.size
+    return scales[idx].reshape(shape)
+
+
+def fake_quant_pc_ref(w, scales, group, n, p):
+    """Per-channel LSQ fake quantization: element ``i`` is quantized on
+    its channel's grid, ``s_c * clip(round(w / s_c), n, p)``."""
+    w = jnp.asarray(w)
+    s = _pc_scales(w.shape, scales, group)
+    return s * jnp.clip(jnp.round(w / s), n, p)
+
+
+def int_weights_pc_ref(w, scales, group, n, p):
+    """Per-channel integer (grid-index) representation of ``w``."""
+    w = jnp.asarray(w)
+    s = _pc_scales(w.shape, scales, group)
+    return jnp.clip(jnp.round(w / s), n, p)
+
+
+def act_requant_pc_ref(a, scales, p):
+    """Per-channel activation quantization on the unsigned grid [0, p].
+
+    ``a`` is a ``[B, d]`` row-major activation; element ``i`` belongs to
+    input channel ``i % n_scales`` (``n_scales`` is 1 for per-tensor or
+    ``d`` for per-channel). Returns ``(codes, a_q)`` — the unsigned grid
+    codes ``clip(round(a / s_c), 0, p)`` and the requantized activations
+    ``s_c * codes`` the engine feeds to its f32 kernels.
+    """
+    a = jnp.asarray(a)
+    s = _pc_scales(a.shape, scales, 1)
+    codes = jnp.clip(jnp.round(a / s), 0.0, p)
+    return codes, s * codes
+
+
 def dampening_loss_ref(w, s, n, p):
     """Oscillation-dampening regularizer (eq. 5), per-tensor sum.
 

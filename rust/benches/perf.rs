@@ -152,6 +152,24 @@ fn main() -> anyhow::Result<()> {
             let _ = eng.forward_batch(&batch.x.data, b).expect("deploy fwd pc");
         });
         println!("{}  ({:.0} img/s)", s.report(), s.per_sec(b as f64));
+
+        // QPKG v3 default: per-channel activation scales on every aq
+        // site; those layers run the exact-f32 route (no per-output-
+        // channel integer requant exists), so this row tracks the
+        // per-channel-default serving cost against the rows above
+        for l in &nm.layers {
+            if l.aq {
+                let sa: Vec<f32> = (0..l.d_in).map(|j| 0.02 + 1e-4 * j as f32).collect();
+                pc_state.insert(format!("params/{}.as", l.name), Tensor::new(vec![l.d_in], sa));
+            }
+        }
+        let (dm_pcact, _) = export_model(&nm, &pc_state, &ecfg)?;
+        let eng = Engine::new(dm_pcact);
+        let label = "deploy: engine pc-act (v3) prepared, batch 16";
+        let s = bench_for(label, 1, Duration::from_secs(3), || {
+            let _ = eng.forward_batch(&batch.x.data, b).expect("deploy fwd pcact");
+        });
+        println!("{}  ({:.0} img/s)", s.report(), s.per_sec(b as f64));
     }
 
     if be.compile_seconds() > 0.0 {

@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 /// Options that never take a value. Keep in sync with the `args.flag()`
 /// call sites in `main.rs` (and declare new boolean options here).
 pub const BOOL_FLAGS: &[&str] =
-    &["quick", "fp", "quant-a", "smoke", "exact", "per-channel", "streaming"];
+    &["quick", "fp", "quant-a", "smoke", "exact", "per-channel", "per-tensor", "streaming"];
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {

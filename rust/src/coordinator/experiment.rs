@@ -63,9 +63,10 @@ pub struct QatSpec {
     pub bits_w: u32,
     pub bits_a: u32,
     pub quant_a: bool,
-    /// per-channel LSQ weight scales (one learned scale per output
-    /// channel — the paper's regime for depthwise models) instead of one
-    /// scale per tensor
+    /// per-channel LSQ scales — one learned weight scale per output
+    /// channel and one learned activation scale per input channel (the
+    /// paper's regime for depthwise models). **Default since QPKG v3**;
+    /// `--per-tensor` restores the legacy single-scale behaviour.
     pub per_channel: bool,
     pub lam: Schedule,
     pub f_th: Schedule,
@@ -81,7 +82,7 @@ impl QatSpec {
             bits_w: bits,
             bits_a: 8,
             quant_a: false,
-            per_channel: false,
+            per_channel: true,
             lam: Schedule::Const(0.0),
             f_th: Schedule::Const(1.1),
             seed,
@@ -122,18 +123,30 @@ impl<'rt> Lab<'rt> {
         prepare_qat(self.rt, &mut state, &spec.model, spec.bits_w, spec.bits_a,
                     &self.data, spec.seed)?;
         if spec.per_channel {
-            // the PJRT artifacts were compiled against scalar params/*.s
-            // inputs; feeding [d_out] vectors would die deep inside XLA
-            // with an opaque reshape error, so refuse up front
-            anyhow::ensure!(
-                self.rt.kind() == "native",
-                "--per-channel requires the native backend (the {} backend's compiled \
-                 artifacts expect scalar weight scales)",
-                self.rt.kind()
-            );
-            let n = super::qat::to_per_channel_scales(self.rt, &mut state, &spec.model,
-                                                      spec.bits_w)?;
-            eprintln!("[lab] {}: {} weight tensors on per-channel scales", spec.model, n);
+            // The PJRT artifacts were compiled against scalar params/*.s
+            // and params/*.as inputs; feeding [d_out]/[d_in] vectors
+            // would die deep inside XLA with an opaque reshape error.
+            // Per-channel is the *default* now, so a non-native backend
+            // downgrades to the per-tensor legacy quantizers with a loud
+            // warning instead of hard-failing every table/figure command
+            // on an artifact-backed setup.
+            if self.rt.kind() == "native" {
+                let n = super::qat::to_per_channel_scales(self.rt, &mut state, &spec.model,
+                                                          spec.bits_w, spec.bits_a, &self.data,
+                                                          spec.seed)?;
+                eprintln!(
+                    "[lab] {}: {} weight tensors (and the activation sites) on per-channel scales",
+                    spec.model, n
+                );
+            } else {
+                eprintln!(
+                    "[lab] WARNING: the {} backend's compiled artifacts expect scalar \
+                     quantizer scales — running {} with per-tensor (legacy) quantizers \
+                     instead of the per-channel default",
+                    self.rt.kind(),
+                    spec.model
+                );
+            }
         }
 
         let mut cfg = RunCfg::qat(&spec.model, self.qat_steps, spec.bits_w, spec.seed);
@@ -343,22 +356,16 @@ impl<'rt> Lab<'rt> {
             osc::OSC_METRIC_TH, n_w, p_w,
         );
         eprintln!("[table3] {} oscillating-weight candidates", cands.len());
-        let scale_of = |state: &NamedTensors, tensor: &str| -> f32 {
-            let wname = tensor.strip_prefix("params/").unwrap_or(tensor);
-            state
-                .get(&format!("params/{}", osc::weight_scale_of(wname)))
-                .map(|t| t.item())
-                .unwrap_or(1.0)
-        };
 
-        // SR: stochastic samples weighted by time-in-state
+        // SR: stochastic samples weighted by time-in-state (candidates
+        // carry their own channel's scale, so per-channel runs land every
+        // sampled latent on the right grid)
         let mut rng = Pcg32::new(seed, 0x5a);
         let mut losses = vec![];
         let mut best_state: Option<(f64, NamedTensors)> = None;
         for _ in 0..10 {
             let mut s = base.state.clone();
-            let sc = |t: &str| scale_of(&base.state, t);
-            sampler::sample_assignment(&mut s, &mut cands, &mut rng, sc);
+            sampler::sample_assignment(&mut s, &mut cands, &mut rng);
             let l = evaluator.train_loss(&s, &self.data, seed, loss_batches, q)?.loss;
             if best_state.as_ref().map(|(bl, _)| l < *bl).unwrap_or(true) {
                 best_state = Some((l, s));
@@ -383,13 +390,11 @@ impl<'rt> Lab<'rt> {
         let anneal_cfg = AnnealCfg { iters: 250, seed, flips: 4, ..Default::default() };
         let (best_assign, ada_loss, _) = adaround::anneal(&mut cands, &anneal_cfg, |cs| {
             let mut s = base_state.clone();
-            let sc = |t: &str| scale_of(&base_state, t);
-            adaround::apply_assignment(&mut s, cs, sc);
+            adaround::apply_assignment(&mut s, cs);
             Ok(evaluator.train_loss(&s, &self.data, seed, loss_batches, q)?.loss)
         })?;
         let mut ada_state = base.state.clone();
-        let sc = |t: &str| scale_of(&base.state, t);
-        adaround::apply_assignment(&mut ada_state, &best_assign, sc);
+        adaround::apply_assignment(&mut ada_state, &best_assign);
         bn_restim::reestimate(self.rt, &mut ada_state, model, q, &self.data, seed,
                               self.bn_batches)?;
         let ada_acc = evaluator.eval_val(&ada_state, &self.data, q)?.acc;

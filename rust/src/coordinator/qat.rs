@@ -17,12 +17,15 @@ use super::evaluator::EvalQuant;
 use super::trainer::{RunCfg, Trainer};
 use crate::data::{DataCfg, Dataset};
 use crate::osc::weight_scale_of;
-use crate::quant::range_est::{lsq_act_scale, mse_weight_scale, mse_weight_scale_pc};
+use crate::quant::range_est::{
+    lsq_act_scale, lsq_act_scale_pc, mse_weight_scale, mse_weight_scale_pc,
+};
 use crate::quant::{act_grid, weight_grid};
 use crate::runtime::Backend;
 use crate::state::{Checkpoint, NamedTensors};
 use crate::tensor::{round_ties_even, Tensor};
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Load (or train + cache) the FP-pretrained state for (model, seed).
@@ -57,6 +60,57 @@ fn grid_for(wq: &str, bits_w: u32) -> (f32, f32) {
         "8bit" => weight_grid(8),
         _ => weight_grid(bits_w),
     }
+}
+
+/// Batches one calibration sweep averages over.
+const CALIB_BATCHES: u64 = 4;
+
+/// One calibration sweep: `CALIB_BATCHES` train batches through the
+/// bnstats artifact with quantizers off, averaging per-site scalar E|x|
+/// (`.absmean`) and — where the backend emits them — per-input-channel
+/// E|x| vectors (`.absmean_pc`). Shared by [`prepare_qat`] (scalar
+/// scales) and [`to_per_channel_scales`] (per-channel upgrade), which
+/// run at different points of the workflow and therefore each need a
+/// fresh pass over the current state.
+#[allow(clippy::type_complexity)]
+fn calibrate_absmeans(
+    rt: &dyn Backend,
+    state: &NamedTensors,
+    bn_name: &str,
+    data: &DataCfg,
+    seed: u64,
+) -> Result<(BTreeMap<String, f32>, BTreeMap<String, Vec<f32>>)> {
+    let ds = Dataset::new(DataCfg { seed, ..data.clone() });
+    let hyper = EvalQuant::fp().hyper(); // calibrate on unquantized activations
+    let mut scalar_sums: BTreeMap<String, f64> = Default::default();
+    let mut pc_sums: BTreeMap<String, Vec<f64>> = Default::default();
+    for i in 0..CALIB_BATCHES {
+        let b = ds.train_batch(seed ^ 0xca11b, i);
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", b.x);
+        io.insert("batch/y", b.y);
+        let out = rt.execute(bn_name, &[state, &io, &hyper])?;
+        for (k, v) in &out.map {
+            if let Some(site) = k.strip_suffix(".absmean_pc") {
+                let acc = pc_sums
+                    .entry(site.to_string())
+                    .or_insert_with(|| vec![0.0f64; v.len()]);
+                for (a, &x) in acc.iter_mut().zip(v.data.iter()) {
+                    *a += x as f64;
+                }
+            } else if let Some(site) = k.strip_suffix(".absmean") {
+                *scalar_sums.entry(site.to_string()).or_default() += v.item() as f64;
+            }
+        }
+    }
+    let n = CALIB_BATCHES as f64;
+    Ok((
+        scalar_sums.into_iter().map(|(k, s)| (k, (s / n) as f32)).collect(),
+        pc_sums
+            .into_iter()
+            .map(|(k, v)| (k, v.into_iter().map(|s| (s / n) as f32).collect()))
+            .collect(),
+    ))
 }
 
 /// Prepare a state for QAT: range-estimate scales, calibrate activation
@@ -98,24 +152,8 @@ pub fn prepare_qat(
 
     // (2) activation scales from a calibration pass.
     let bn_name = info.artifacts.get("bnstats").context("bnstats artifact")?;
-    let ds = Dataset::new(DataCfg { seed, ..data.clone() });
-    let hyper = EvalQuant::fp().hyper(); // calibrate on unquantized activations
-    let mut sums: std::collections::BTreeMap<String, f64> = Default::default();
-    const CALIB_BATCHES: u64 = 4;
-    for i in 0..CALIB_BATCHES {
-        let b = ds.train_batch(seed ^ 0xca11b, i);
-        let mut io = NamedTensors::new();
-        io.insert("batch/x", b.x);
-        io.insert("batch/y", b.y);
-        let out = rt.execute(bn_name, &[state, &io, &hyper])?;
-        for (k, v) in &out.map {
-            if let Some(site) = k.strip_suffix(".absmean") {
-                *sums.entry(site.to_string()).or_default() += v.item() as f64;
-            }
-        }
-    }
-    for (site, sum) in sums {
-        let abs_mean = (sum / CALIB_BATCHES as f64) as f32;
+    let (abs_means, _) = calibrate_absmeans(rt, state, bn_name, data, seed)?;
+    for (site, abs_mean) in abs_means {
         let p_a = match info.layers.get(&site).map(|l| l.wq.as_str()) {
             Some("8bit") => act_grid(8),
             _ => act_grid(bits_a),
@@ -152,23 +190,36 @@ pub fn prepare_qat(
     Ok(())
 }
 
-/// Upgrade a prepared QAT state to **per-channel** LSQ weight scales:
-/// every quantized weight tensor's scalar `params/{layer}.s` is replaced
-/// by a `[d_out]` vector (one MSE-grid-searched scale per output channel
-/// — for depthwise layers one per channel row), its SGD momentum buffer
-/// is resized to match, and the Algorithm-1 oscillation state of the
-/// low-bit tensors is re-seeded on the new per-channel grids (the
-/// per-channel twin of `prepare_qat` step 3). Call after [`prepare_qat`];
-/// returns the number of tensors converted.
+/// Upgrade a prepared QAT state to **per-channel** LSQ scales, weights
+/// *and* activations:
+///
+/// * every quantized weight tensor's scalar `params/{layer}.s` is
+///   replaced by a `[d_out]` vector (one MSE-grid-searched scale per
+///   output channel — for depthwise layers one per channel row), its SGD
+///   momentum buffer is resized to match, and the Algorithm-1
+///   oscillation state of the low-bit tensors is re-seeded on the new
+///   per-channel grids (the per-channel twin of `prepare_qat` step 3);
+/// * every activation-quantizer scalar `params/{layer}.as` is replaced
+///   by a `[d_in]` vector via a fresh calibration pass (the bnstats
+///   artifact's per-input-channel `.absmean_pc` outputs fed through
+///   `lsq_act_scale_pc`), with its momentum buffer resized to match.
+///   Backends whose bnstats artifact predates the per-channel outputs
+///   (compiled PJRT graphs) keep their scalar activation scales.
+///
+/// Call after [`prepare_qat`]; returns the number of weight tensors
+/// converted.
 ///
 /// The native interpreter, Algorithm-1 bookkeeping, deploy export and
-/// packed engine all read the scale tensor's length, so the same state
+/// packed engine all read the scale tensors' lengths, so the same state
 /// flows through the whole stack untouched afterwards.
 pub fn to_per_channel_scales(
     rt: &dyn Backend,
     state: &mut NamedTensors,
     model: &str,
     bits_w: u32,
+    bits_a: u32,
+    data: &DataCfg,
+    seed: u64,
 ) -> Result<usize> {
     let info = rt.index().model(model)?.clone();
     let mut converted = 0usize;
@@ -218,6 +269,28 @@ pub fn to_per_channel_scales(
         converted += 1;
     }
     anyhow::ensure!(converted > 0, "to_per_channel_scales: no quantized weight tensors found");
+
+    // --- activation scales: scalar -> [d_in] per-input-channel vectors ---
+    // Fresh calibration pass over the *current* state (this function
+    // also upgrades standalone checkpoints, so it cannot reuse a pass
+    // `prepare_qat` may or may not have run), collecting the per-channel
+    // E|x| the native bnstats artifact emits as `{site}.absmean_pc`.
+    let bn_name = info.artifacts.get("bnstats").context("bnstats artifact")?;
+    let (_, pc_means) = calibrate_absmeans(rt, state, bn_name, data, seed)?;
+    for (site, means) in pc_means {
+        let key = format!("params/{site}.as");
+        if state.get(&key).is_none() {
+            continue;
+        }
+        let p_a = match info.layers.get(&site).map(|l| l.wq.as_str()) {
+            Some("8bit") => act_grid(8),
+            _ => act_grid(bits_a),
+        };
+        let scales = lsq_act_scale_pc(&means, p_a);
+        let n_ch = scales.len();
+        state.insert(key, Tensor::new(vec![n_ch], scales));
+        state.insert(format!("opt/{site}.as"), Tensor::zeros(&[n_ch]));
+    }
     Ok(converted)
 }
 

@@ -25,10 +25,23 @@
 //!   arrive as unsigned grid codes, weights as signed grid integers, and
 //!   the dot product accumulates in i32 (exact integer arithmetic, no
 //!   rounding at all); one per-channel requantization multiply
-//!   (`s_a * s_w[c] * acc`, in f64) brings the result back to the real
-//!   scale — per-channel weight scales factor out of each output
-//!   channel's dot product, so the stored integers never change. Worst
-//!   case here (255 x 127 x 768-deep) stays far inside i32 range.
+//!   (`s_a * s_w[c] * acc`, in f64 — **composed with the folded-BN
+//!   affine's `mult[c]` into a single per-output-channel factor** when
+//!   the layer carries a requant and no bias) brings the result back to
+//!   the real scale — per-channel weight scales factor out of each
+//!   output channel's dot product, so the stored integers never change.
+//!   Worst case here (255 x 127 x 768-deep) stays far inside i32 range.
+//!
+//! **Per-channel activation scales** (QPKG v3, `n_a_scales = d_in`)
+//! quantize each input channel on its own grid. A per-input-channel
+//! scale does *not* factor out of the dot product, so no exact
+//! per-output-channel integer requant exists for such layers; the engine
+//! runs them through the f32 route with the interpreter's exact
+//! arithmetic (`a_q[i] = s_a[i % d_in] * code_i` over the dequantized
+//! plane), which keeps every mode — prepared, streaming, threaded, and
+//! both accumulation settings — bit-exact vs the fake-quant reference.
+//! Layers whose activation scale stays per-tensor keep the full i32
+//! fast path.
 //!
 //! Batches parallelize over rows: [`EngineOpts::threads`] splits the
 //! batch into contiguous row chunks and runs the full layer stack on
@@ -354,6 +367,25 @@ impl Default for EngineOpts {
     }
 }
 
+/// Resolve a `--threads` CLI value — the single resolution rule shared
+/// by `serve` and `bench-deploy`:
+///
+/// * no value -> `default`;
+/// * `"auto"` -> [`std::thread::available_parallelism`] (falling back to
+///   `default` if the platform cannot report it);
+/// * a number -> that number, clamped to >= 1;
+/// * anything else -> `default`.
+pub fn resolve_threads(spec: Option<&str>, default: usize) -> usize {
+    let default = default.max(1);
+    match spec {
+        None => default,
+        Some("auto") => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(default),
+        Some(v) => v.parse::<usize>().map(|n| n.max(1)).unwrap_or(default),
+    }
+}
+
 /// Inference over a [`PreparedModel`].
 pub struct Engine {
     prepared: Arc<PreparedModel>,
@@ -459,23 +491,61 @@ impl Engine {
                 b,
                 d_in
             );
+            let mut requant_applied = false;
             let mut z = if l.aq {
-                // input activation codes on the unsigned LSQ grid
-                let codes = kernels::int_weights(&act, l.a_scale, 0.0, l.act_p());
-                if self.int_accum {
+                // input activation codes on the unsigned LSQ grid; the
+                // scales are per-tensor or per-input-channel (element `i`
+                // of the `[b, d_in]` chunk belongs to channel `i % d_in`,
+                // the same layout rule the interpreter applies)
+                let codes = kernels::int_weights_pc(&act, &l.a_scales, 1, 0.0, l.act_p());
+                if self.int_accum && !l.per_channel_act() {
                     let qa: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
                     let acc = self.linear_i32(l, pl, &qa, b);
-                    // one per-channel requantization multiply back to the
-                    // real scale: output idx -> channel idx % d_out
-                    let sa = l.a_scale as f64;
-                    let zscales: Vec<f64> =
-                        (0..d_out).map(|c| sa * l.w_scale_of(c) as f64).collect();
-                    acc.iter()
-                        .enumerate()
-                        .map(|(idx, &v)| (zscales[idx % d_out] * v as f64) as f32)
-                        .collect()
+                    let sa = l.a_scales[0] as f64;
+                    if let (Some(rq), None) = (&l.requant, &l.bias) {
+                        // the per-channel requant composes with the
+                        // folded-BN affine: one f64 multiply
+                        // `s_a * s_w[c] * mult[c]` per output channel
+                        // takes the i32 accumulator straight to the
+                        // BN-scaled range (no intermediate f32 rounding)
+                        let mult: Vec<f64> = (0..d_out)
+                            .map(|c| sa * l.w_scale_of(c) as f64 * rq.mult[c] as f64)
+                            .collect();
+                        requant_applied = true;
+                        acc.iter()
+                            .enumerate()
+                            .map(|(idx, &v)| {
+                                let c = idx % d_out;
+                                (mult[c] * v as f64) as f32 + rq.add[c]
+                            })
+                            .collect()
+                    } else {
+                        // one per-channel requantization multiply back to
+                        // the real scale: output idx -> channel idx % d_out
+                        let zscales: Vec<f64> =
+                            (0..d_out).map(|c| sa * l.w_scale_of(c) as f64).collect();
+                        acc.iter()
+                            .enumerate()
+                            .map(|(idx, &v)| (zscales[idx % d_out] * v as f64) as f32)
+                            .collect()
+                    }
                 } else {
-                    let a_q: Vec<f32> = codes.iter().map(|&c| l.a_scale * c).collect();
+                    // Per-channel activation scales do not factor out of
+                    // the dot product (every input channel carries its
+                    // own s_a[j]), so no per-output-channel integer
+                    // requant exists; instead this path replays the
+                    // interpreter's exact f32 arithmetic —
+                    // `a_q[i] = s_a[i % d_in] * code_i`, then the blocked
+                    // kernels over the dequantized plane — and is
+                    // bit-exact vs the fake-quant reference by
+                    // construction. (Per-tensor scales land here too in
+                    // f32-exact mode.)
+                    let ns = l.a_scales.len();
+                    let a_q: Vec<f32> = codes
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &c)| l.a_scales[i % ns] * c)
+                        .collect();
                     self.linear_f32(l, pl, &a_q, b)
                 }
             } else {
@@ -489,10 +559,12 @@ impl Engine {
                 }
             }
             if let Some(rq) = &l.requant {
-                for bi in 0..b {
-                    for c in 0..d_out {
-                        let idx = bi * d_out + c;
-                        z[idx] = rq.mult[c] * z[idx] + rq.add[c];
+                if !requant_applied {
+                    for bi in 0..b {
+                        for c in 0..d_out {
+                            let idx = bi * d_out + c;
+                            z[idx] = rq.mult[c] * z[idx] + rq.add[c];
+                        }
                     }
                 }
             }
@@ -728,7 +800,7 @@ mod tests {
             relu: false,
             aq: true,
             act_bits: 3,
-            a_scale: 0.5,
+            a_scales: vec![0.5],
             w_bits: 4,
             w_scales: scales.clone(),
             weights: packed,
@@ -746,6 +818,89 @@ mod tests {
             bits_w: 4,
             bits_a: 3,
             layers: vec![layer],
+        }
+    }
+
+    /// `tiny_pc_model` without bias (so the i32 requant composes with
+    /// the BN affine into one per-channel factor).
+    fn tiny_pc_model_no_bias() -> DeployModel {
+        let mut m = tiny_pc_model();
+        m.layers[0].bias = None;
+        m
+    }
+
+    /// `tiny_pc_model` with per-input-channel activation scales (QPKG
+    /// v3): power-of-two values so every f32 op stays exact.
+    fn tiny_pcact_model() -> DeployModel {
+        let mut m = tiny_pc_model();
+        m.layers[0].a_scales = (0..12).map(|j| if j % 2 == 0 { 0.5 } else { 0.25 }).collect();
+        m
+    }
+
+    #[test]
+    fn thread_spec_resolution_rule() {
+        assert_eq!(resolve_threads(None, 2), 2);
+        assert_eq!(resolve_threads(Some("4"), 1), 4);
+        assert_eq!(resolve_threads(Some("0"), 1), 1, "numbers clamp to >= 1");
+        assert_eq!(resolve_threads(Some("nope"), 3), 3, "garbage falls back");
+        assert_eq!(resolve_threads(None, 0), 1, "default clamps to >= 1");
+        let auto = resolve_threads(Some("auto"), 1);
+        assert!(auto >= 1, "auto resolves to the machine's parallelism");
+    }
+
+    #[test]
+    fn composed_requant_matches_sequential_on_pow2() {
+        // without a bias the i32 path folds s_a*s_w[c] into the BN
+        // affine's mult[c]; on power-of-two scales every op is exact, so
+        // the composed path must equal the f32-exact engine to the bit
+        let dm = tiny_pc_model_no_bias();
+        let mut rng = Pcg32::new(17, 0x99);
+        let x: Vec<f32> = (0..3 * 12).map(|_| rng.below(8) as f32 * 0.5).collect();
+        let exact = Engine::with_mode(dm.clone(), false).forward_batch(&x, 3).unwrap();
+        let int = Engine::with_mode(dm, true).forward_batch(&x, 3).unwrap();
+        assert_eq!(exact, int);
+    }
+
+    #[test]
+    fn per_channel_act_engine_is_exact_and_mode_stable() {
+        // per-channel activation scales: the engine replays the
+        // interpreter's f32 arithmetic in every mode — int-accum,
+        // f32-exact, prepared, streaming, threaded — bit-identically
+        let dm = tiny_pcact_model();
+        let mut rng = Pcg32::new(18, 0x9a);
+        let b = 5usize;
+        let x: Vec<f32> = (0..b * 12).map(|_| rng.below(8) as f32 * 0.5).collect();
+        let reference = {
+            // interpreter math: per-channel act fake-quant then the
+            // scalar-order matmul over per-channel fake-quant weights
+            let l = &dm.layers[0];
+            let codes = kernels::int_weights_pc(&x, &l.a_scales, 1, 0.0, l.act_p());
+            let a_q: Vec<f32> =
+                codes.iter().enumerate().map(|(i, &c)| l.a_scales[i % 12] * c).collect();
+            let mut w = Vec::new();
+            l.weights.dequant_pc_into(l.grid_n_int(), &l.w_scales, 1, &mut w);
+            let mut out = matmul_f32_scalar(&a_q, &w, b, 12, 3);
+            for bi in 0..b {
+                for c in 0..3 {
+                    let idx = bi * 3 + c;
+                    out[idx] += l.bias.as_ref().unwrap()[c];
+                    let rq = l.requant.as_ref().unwrap();
+                    out[idx] = rq.mult[c] * out[idx] + rq.add[c];
+                }
+            }
+            out
+        };
+        for int_accum in [false, true] {
+            for opts in [
+                EngineOpts::default(),
+                EngineOpts { threads: 1, prepared: false },
+                EngineOpts { threads: 3, prepared: true },
+            ] {
+                let got = Engine::with_opts(dm.clone(), int_accum, opts)
+                    .forward_batch(&x, b)
+                    .unwrap();
+                assert_eq!(got, reference, "int_accum {int_accum} opts {opts:?}");
+            }
         }
     }
 

@@ -186,14 +186,21 @@ pub fn export_model(
 
         let aq = l.aq && cfg.quant_a;
         let act_bits = if l.wq == "8bit" { 8 } else { cfg.bits_a };
-        let a_scale = if aq {
-            state
+        // per-tensor (scalar) or per-input-channel ([d_in]) LSQ scales
+        let a_scales: Vec<f32> = if aq {
+            let as_t = state
                 .expect(&format!("params/{}.as", l.name))
-                .with_context(|| format!("export {}: activation scale", l.name))?
-                .item()
-                .max(1e-8)
+                .with_context(|| format!("export {}: activation scale", l.name))?;
+            anyhow::ensure!(
+                as_t.len() == 1 || as_t.len() == l.d_in,
+                "export {}: {} activation scales for {} input channels",
+                l.name,
+                as_t.len(),
+                l.d_in
+            );
+            as_t.data.iter().map(|&v| v.max(1e-8)).collect()
         } else {
-            1.0
+            vec![1.0]
         };
 
         report.total_weights += q.len();
@@ -210,7 +217,7 @@ pub fn export_model(
             relu: l.relu,
             aq,
             act_bits,
-            a_scale,
+            a_scales,
             w_bits,
             w_scales,
             weights: packed,
@@ -309,6 +316,48 @@ mod tests {
         // QPKG v2 round-trip preserves the scale arrays
         let dm2 = crate::deploy::format::DeployModel::from_bytes(&dm.to_bytes()).unwrap();
         assert_eq!(dm, dm2);
+    }
+
+    #[test]
+    fn per_channel_activation_export_roundtrips() {
+        let m = zoo_model("efflite").unwrap();
+        let mut state = m.initial_state();
+        for l in &m.layers {
+            if l.aq {
+                let scales: Vec<f32> = (0..l.d_in).map(|j| 0.02 + 1e-3 * j as f32).collect();
+                state.insert(
+                    format!("params/{}.as", l.name),
+                    crate::tensor::Tensor::new(vec![l.d_in], scales),
+                );
+            }
+        }
+        let cfg = ExportCfg { bits_w: 4, bits_a: 4, quant_a: true };
+        let (dm, _) = export_model(&m, &state, &cfg).unwrap();
+        for (dl, nl) in dm.layers.iter().zip(&m.layers) {
+            if nl.aq {
+                assert!(dl.per_channel_act(), "{}", nl.name);
+                assert_eq!(dl.a_scales.len(), nl.d_in, "{}", nl.name);
+                assert_eq!(dl.a_scale_of(1), 0.02 + 1e-3);
+            } else {
+                assert_eq!(dl.a_scales, vec![1.0], "{}", nl.name);
+            }
+        }
+        // QPKG v3 round-trip preserves the activation scale arrays
+        let dm2 = crate::deploy::format::DeployModel::from_bytes(&dm.to_bytes()).unwrap();
+        assert_eq!(dm, dm2);
+    }
+
+    #[test]
+    fn export_rejects_bad_act_scale_count() {
+        let m = zoo_model("efflite").unwrap();
+        let mut state = m.initial_state();
+        let l = m.layers.iter().find(|l| l.aq).unwrap();
+        state.insert(
+            format!("params/{}.as", l.name),
+            crate::tensor::Tensor::new(vec![2], vec![0.1, 0.2]), // d_in != 2
+        );
+        let cfg = ExportCfg { bits_w: 4, bits_a: 4, quant_a: true };
+        assert!(export_model(&m, &state, &cfg).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! running-stat updates survive the export — this struct is everything
 //! inference needs and nothing else.
 //!
-//! QPKG binary layout (all little-endian, version 2):
+//! QPKG binary layout (all little-endian, version 3):
 //!
 //! ```text
 //! magic  'QPKG'  | u32 version | u16 name_len + name
@@ -19,19 +19,23 @@
 //!   u8 op (0 = full matmul, 1 = depthwise 3-tap)
 //!   u8 relu | u8 aq | u8 has_bias | u8 has_requant
 //!   u32 d_in | u32 d_out | u32 w_bits | u32 act_bits
-//!   u32 n_w_scales | [f32 w_scales; n_w_scales] | f32 a_scale
+//!   u32 n_w_scales | [f32 w_scales; n_w_scales]
+//!   u32 n_a_scales | [f32 a_scales; n_a_scales]
 //!   [f32 bias; d_out]               (if has_bias)
 //!   [f32 mult; d_out] [f32 add; d_out]   (if has_requant)
 //!   u32 n_codes | u32 n_bytes | packed weight bitstream
 //! ```
 //!
 //! `n_w_scales` is 1 (per-tensor LSQ) or `d_out` (per-channel LSQ, one
-//! scale per output channel — for depthwise layers one per channel row).
-//! **Version negotiation:** the writer always emits version 2; the reader
-//! accepts version 1 files (whose layer record carries a single
-//! `f32 w_scale` where v2 puts the scale array) and upgrades them in
-//! memory to a one-element scale vector, so every v1 artifact keeps
-//! loading unchanged.
+//! scale per output channel — for depthwise layers one per channel row);
+//! `n_a_scales` is 1 (per-tensor activation LSQ) or `d_in` (per-channel,
+//! one scale per input channel of the layer).
+//! **Version negotiation:** the writer always emits version 3; the reader
+//! accepts version 2 files (whose layer record carries a single
+//! `f32 a_scale` where v3 puts the counted scale array) and version 1
+//! files (a single `f32 w_scale` *and* a single `f32 a_scale`), upgrading
+//! both in memory to one-element scale vectors, so every older artifact
+//! keeps loading unchanged.
 
 use super::packed::Packed;
 use crate::quant::{act_grid, weight_grid};
@@ -41,7 +45,7 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"QPKG";
 /// Version the writer emits.
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 /// Oldest version the reader still accepts (upgraded on load).
 const MIN_VERSION: u32 = 1;
 
@@ -72,7 +76,9 @@ pub struct DeployLayer {
     /// input activations are quantized (unsigned LSQ grid `[0, act_p]`)
     pub aq: bool,
     pub act_bits: u32,
-    pub a_scale: f32,
+    /// LSQ activation scales: one element (per-tensor) or `d_in`
+    /// elements (per-channel, one per input channel)
+    pub a_scales: Vec<f32>,
     pub w_bits: u32,
     /// LSQ weight scales: one element (per-tensor) or `d_out` elements
     /// (per-channel, one per output channel / depthwise channel row)
@@ -104,6 +110,11 @@ impl DeployLayer {
         self.w_scales.len() > 1
     }
 
+    /// Whether the layer carries per-channel activation scales.
+    pub fn per_channel_act(&self) -> bool {
+        self.a_scales.len() > 1
+    }
+
     /// Channel layout `group` of the packed weight payload (see
     /// `kernels::scale_index`): dense `[d_in, d_out]` codes map to their
     /// output column (`group = 1`), depthwise `[C, 3]` rows to their
@@ -118,6 +129,11 @@ impl DeployLayer {
     /// Weight scale of output channel `c` (per-tensor scales broadcast).
     pub fn w_scale_of(&self, c: usize) -> f32 {
         self.w_scales[c % self.w_scales.len()]
+    }
+
+    /// Activation scale of input channel `j` (per-tensor broadcast).
+    pub fn a_scale_of(&self, j: usize) -> f32 {
+        self.a_scales[j % self.a_scales.len()]
     }
 }
 
@@ -159,7 +175,8 @@ impl DeployModel {
     pub fn aux_bytes(&self) -> usize {
         let mut n = 0usize;
         for l in &self.layers {
-            n += 4 + (l.w_scales.len() + 1) * 4; // scale count + scales + a_scale
+            // two scale counts + both scale arrays
+            n += 8 + (l.w_scales.len() + l.a_scales.len()) * 4;
             if let Some(b) = &l.bias {
                 n += b.len() * 4;
             }
@@ -200,7 +217,8 @@ impl DeployModel {
             buf.extend_from_slice(&l.act_bits.to_le_bytes());
             buf.extend_from_slice(&(l.w_scales.len() as u32).to_le_bytes());
             put_f32s(&mut buf, &l.w_scales);
-            buf.extend_from_slice(&l.a_scale.to_le_bytes());
+            buf.extend_from_slice(&(l.a_scales.len() as u32).to_le_bytes());
+            put_f32s(&mut buf, &l.a_scales);
             if let Some(b) = &l.bias {
                 put_f32s(&mut buf, b);
             }
@@ -261,7 +279,7 @@ impl DeployModel {
             let w_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             let act_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             anyhow::ensure!((1..=8).contains(&w_bits), "layer {lname}: w_bits {w_bits}");
-            // v1 carries one f32 weight scale, v2 a counted scale array
+            // v1 carries one f32 weight scale, v2+ a counted scale array
             // (1 = per-tensor, d_out = per-channel)
             let w_scales = if version >= 2 {
                 let n_scales = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
@@ -273,7 +291,18 @@ impl DeployModel {
             } else {
                 vec![f32::from_le_bytes(take(&mut pos, 4)?.try_into()?)]
             };
-            let a_scale = f32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            // v1/v2 carry one f32 activation scale, v3 a counted array
+            // (1 = per-tensor, d_in = per-input-channel)
+            let a_scales = if version >= 3 {
+                let n_scales = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                anyhow::ensure!(
+                    n_scales == 1 || n_scales == d_in,
+                    "layer {lname}: {n_scales} activation scales for {d_in} input channels"
+                );
+                get_f32s(buf, &mut pos, n_scales)?
+            } else {
+                vec![f32::from_le_bytes(take(&mut pos, 4)?.try_into()?)]
+            };
             // the engine divides by these scales; the exporter writes
             // them clamped to >= 1e-8, so demand the symmetric invariant
             // instead of serving NaN/inf logits from a corrupt file
@@ -283,10 +312,12 @@ impl DeployModel {
                     "layer {lname}: weight scale [{c}] = {s}"
                 );
             }
-            anyhow::ensure!(
-                a_scale.is_finite() && a_scale > 0.0,
-                "layer {lname}: activation scale {a_scale}"
-            );
+            for (c, &s) in a_scales.iter().enumerate() {
+                anyhow::ensure!(
+                    s.is_finite() && s > 0.0,
+                    "layer {lname}: activation scale [{c}] = {s}"
+                );
+            }
             let bias = if has_bias { Some(get_f32s(buf, &mut pos, d_out)?) } else { None };
             let requant = if has_requant {
                 Some(Requant {
@@ -329,7 +360,7 @@ impl DeployModel {
                 relu,
                 aq,
                 act_bits,
-                a_scale,
+                a_scales,
                 w_bits,
                 w_scales,
                 weights: Packed { bits: w_bits, len: n_codes, bytes },
@@ -460,7 +491,7 @@ mod tests {
                     relu: true,
                     aq: false,
                     act_bits: 8,
-                    a_scale: 1.0,
+                    a_scales: vec![1.0],
                     w_bits: 3,
                     w_scales: vec![0.1],
                     weights: Packed::pack(&codes, 3).unwrap(),
@@ -478,7 +509,7 @@ mod tests {
                     relu: false,
                     aq: true,
                     act_bits: 3,
-                    a_scale: 0.05,
+                    a_scales: vec![0.05],
                     w_bits: 4,
                     w_scales: vec![0.2],
                     weights: Packed::pack(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 4).unwrap(),
@@ -494,6 +525,14 @@ mod tests {
         let mut m = sample();
         m.layers[0].w_scales = vec![0.1, 0.07, 0.2];
         m.layers[1].w_scales = vec![0.2, 0.15, 0.3];
+        m
+    }
+
+    /// The per-channel sample with per-channel **activation** scales on
+    /// the quantized-activation head (d_in = 3).
+    fn sample_per_channel_act() -> DeployModel {
+        let mut m = sample_per_channel();
+        m.layers[1].a_scales = vec![0.05, 0.04, 0.06];
         m
     }
 
@@ -525,7 +564,52 @@ mod tests {
             buf.extend_from_slice(&l.w_bits.to_le_bytes());
             buf.extend_from_slice(&l.act_bits.to_le_bytes());
             buf.extend_from_slice(&l.w_scales[0].to_le_bytes());
-            buf.extend_from_slice(&l.a_scale.to_le_bytes());
+            buf.extend_from_slice(&l.a_scales[0].to_le_bytes());
+            if let Some(b) = &l.bias {
+                put_f32s(&mut buf, b);
+            }
+            if let Some(r) = &l.requant {
+                put_f32s(&mut buf, &r.mult);
+                put_f32s(&mut buf, &r.add);
+            }
+            buf.extend_from_slice(&(l.weights.len as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.weights.bytes.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&l.weights.bytes);
+        }
+        buf
+    }
+
+    /// Serialize a model in the **version 2** layout (counted w_scales
+    /// array, single f32 a_scale per layer) — the PR-3 era writer, whose
+    /// files the reader must keep accepting.
+    fn v2_bytes(m: &DeployModel) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        put_str(&mut buf, &m.name);
+        buf.extend_from_slice(&(m.input_hw as u32).to_le_bytes());
+        buf.extend_from_slice(&(m.num_classes as u32).to_le_bytes());
+        buf.push(m.quant_a as u8);
+        buf.extend_from_slice(&m.bits_w.to_le_bytes());
+        buf.extend_from_slice(&m.bits_a.to_le_bytes());
+        buf.extend_from_slice(&(m.layers.len() as u32).to_le_bytes());
+        for l in &m.layers {
+            put_str(&mut buf, &l.name);
+            buf.push(match l.op {
+                DeployOp::Full => 0,
+                DeployOp::Dw => 1,
+            });
+            buf.push(l.relu as u8);
+            buf.push(l.aq as u8);
+            buf.push(l.bias.is_some() as u8);
+            buf.push(l.requant.is_some() as u8);
+            buf.extend_from_slice(&(l.d_in as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.d_out as u32).to_le_bytes());
+            buf.extend_from_slice(&l.w_bits.to_le_bytes());
+            buf.extend_from_slice(&l.act_bits.to_le_bytes());
+            buf.extend_from_slice(&(l.w_scales.len() as u32).to_le_bytes());
+            put_f32s(&mut buf, &l.w_scales);
+            buf.extend_from_slice(&l.a_scales[0].to_le_bytes());
             if let Some(b) = &l.bias {
                 put_f32s(&mut buf, b);
             }
@@ -549,7 +633,7 @@ mod tests {
     }
 
     #[test]
-    fn qpkg_v2_roundtrips_per_channel_scales() {
+    fn qpkg_v3_roundtrips_per_channel_scales() {
         let m = sample_per_channel();
         let m2 = DeployModel::from_bytes(&m.to_bytes()).unwrap();
         assert_eq!(m, m2);
@@ -559,29 +643,64 @@ mod tests {
     }
 
     #[test]
-    fn v1_layout_upgrades_to_scale_vector() {
+    fn qpkg_v3_roundtrips_per_channel_activation_scales() {
+        let m = sample_per_channel_act();
+        let m2 = DeployModel::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m, m2);
+        assert!(!m2.layers[0].per_channel_act());
+        assert!(m2.layers[1].per_channel_act());
+        assert_eq!(m2.layers[1].a_scale_of(1), 0.04);
+        assert_eq!(m2.layers[1].a_scale_of(2), 0.06);
+        // per-tensor activation scales broadcast
+        assert_eq!(m2.layers[0].a_scale_of(7), 1.0);
+    }
+
+    #[test]
+    fn v1_layout_upgrades_to_scale_vectors() {
         let m = sample();
         let old = v1_bytes(&m);
         let loaded = DeployModel::from_bytes(&old).unwrap();
-        // the in-memory upgrade is exactly the v2 model with one-element
-        // scale vectors — i.e. the same struct the v2 writer round-trips
+        // the in-memory upgrade is exactly the v3 model with one-element
+        // scale vectors — i.e. the same struct the v3 writer round-trips
         assert_eq!(loaded, m);
         assert!(!loaded.layers[0].per_channel());
+        assert!(!loaded.layers[1].per_channel_act());
         assert_eq!(loaded.layers[0].w_scales, vec![0.1]);
-        // and re-saving silently upgrades the file to v2
+        assert_eq!(loaded.layers[1].a_scales, vec![0.05]);
+        // and re-saving silently upgrades the file to v3
+        let resaved = DeployModel::from_bytes(&loaded.to_bytes()).unwrap();
+        assert_eq!(resaved, m);
+    }
+
+    #[test]
+    fn v2_layout_upgrades_activation_scale_to_vector() {
+        // v2 carries per-channel w_scales but a single f32 a_scale
+        let m = sample_per_channel();
+        let old = v2_bytes(&m);
+        let loaded = DeployModel::from_bytes(&old).unwrap();
+        assert_eq!(loaded, m);
+        assert!(loaded.layers[0].per_channel());
+        assert_eq!(loaded.layers[1].a_scales, vec![0.05]);
         let resaved = DeployModel::from_bytes(&loaded.to_bytes()).unwrap();
         assert_eq!(resaved, m);
     }
 
     #[test]
     fn qpkg_rejects_bad_scale_counts() {
-        // scale count must be 1 or d_out
+        // weight scale count must be 1 or d_out
         let mut m = sample();
         m.layers[0].w_scales = vec![0.1, 0.2]; // d_out = 3
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // activation scale count must be 1 or d_in
+        let mut m = sample();
+        m.layers[1].a_scales = vec![0.05, 0.04]; // d_in = 3
         assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
         // non-positive per-channel scale entries are rejected
         let mut m = sample_per_channel();
         m.layers[0].w_scales[1] = 0.0;
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        let mut m = sample_per_channel_act();
+        m.layers[1].a_scales[1] = f32::NAN;
         assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
         // future versions are refused outright
         let mut bytes = sample().to_bytes();

@@ -32,10 +32,16 @@
 //!   schema-versioned `BENCH_deploy.json`, gated against a committed
 //!   baseline.
 //!
-//! Weight scales are per-tensor or **per-channel** (QPKG version 2, one
-//! scale per output channel) end-to-end: the exporter snaps each channel
-//! to its own grid, and the engine dequantizes / requantizes with the
-//! channel's scale in both execution paths.
+//! Weight scales are per-tensor or **per-channel** (one scale per output
+//! channel) end-to-end: the exporter snaps each channel to its own grid,
+//! and the engine dequantizes / requantizes with the channel's scale in
+//! both execution paths. Activation scales are likewise per-tensor or
+//! **per-input-channel** (QPKG version 3, `n_a_scales = d_in`); layers
+//! with a per-tensor activation scale keep the exact i32 fast path
+//! (requant composed with the folded-BN affine), while per-channel
+//! activation layers replay the interpreter's exact f32 arithmetic (see
+//! [`engine`] — a per-input-channel scale cannot factor out of the dot
+//! product).
 //!
 //! Typical flow (also `examples/deploy_pipeline.rs` and the `export` /
 //! `serve` CLI subcommands):
@@ -52,7 +58,7 @@ pub mod packed;
 pub mod serve;
 pub mod trajectory;
 
-pub use engine::{Engine, EngineOpts, PreparedModel};
+pub use engine::{resolve_threads, Engine, EngineOpts, PreparedModel};
 pub use export::{export_model, ExportCfg, ExportReport};
 pub use format::{DeployLayer, DeployModel, DeployOp, Requant};
 pub use packed::Packed;

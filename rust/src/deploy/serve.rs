@@ -392,7 +392,7 @@ mod tests {
                 relu: false,
                 aq: false,
                 act_bits: 8,
-                a_scale: 1.0,
+                a_scales: vec![1.0],
                 w_bits: 3,
                 w_scales: vec![0.5],
                 weights: Packed::pack(&codes, 3).unwrap(),
@@ -442,7 +442,7 @@ mod tests {
             relu: false,
             aq: false,
             act_bits: 8,
-            a_scale: 1.0,
+            a_scales: vec![1.0],
             w_bits: 3,
             w_scales: vec![0.5],
             weights: Packed::pack(&[0u32; 21], 3).unwrap(),

@@ -11,7 +11,9 @@
 //!    packed-engine forward on a per-channel w4a4 export of a
 //!    depth-wise zoo model in three configurations: streaming decode,
 //!    prepared (decode-once), and prepared with `--threads` scoped
-//!    batch-row workers,
+//!    batch-row workers — plus the same three on a **QPKG v3
+//!    per-channel-activation** export (`engine_forward_pcact_*`, the
+//!    per-channel-default configuration's exact-f32 route),
 //! 2. merges the serve report into one schema-versioned
 //!    `BENCH_deploy.json` (uploaded as the per-commit artifact),
 //! 3. refuses to emit a report that lost its prepared-path rows
@@ -52,7 +54,9 @@ pub const SCHEMA_VERSION: u32 = 1;
 
 /// Bench rows that must be present in every report: losing one (renamed
 /// bench, dead code path) would silently blind the perf gate to the
-/// decode-once engine, so `bench-deploy` fails when any is missing.
+/// decode-once engine — or, for the `pcact` rows, to the QPKG v3
+/// per-channel-activation forward — so `bench-deploy` fails when any is
+/// missing.
 pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
     "prepared_matmul_f32_pc",
     "prepared_matmul_i32",
@@ -60,6 +64,8 @@ pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
     "prepared_dw_i32",
     "engine_forward_pc_w4a4",
     "engine_forward_pc_w4a4_mt",
+    "engine_forward_pcact_w4a4",
+    "engine_forward_pcact_w4a4_mt",
 ];
 
 /// (streaming row, prepared row) pairs whose ratio is the decode-once /
@@ -71,6 +77,16 @@ const SPEEDUP_PAIRS: &[(&str, &str, &str)] = &[
     ("packed_dw_i32", "prepared_dw_i32", "dw i32 decode-once"),
     ("engine_forward_pc_w4a4_streaming", "engine_forward_pc_w4a4", "engine forward decode-once"),
     ("engine_forward_pc_w4a4", "engine_forward_pc_w4a4_mt", "engine forward 1 -> N threads"),
+    (
+        "engine_forward_pcact_w4a4_streaming",
+        "engine_forward_pcact_w4a4",
+        "pc-act engine forward decode-once",
+    ),
+    (
+        "engine_forward_pcact_w4a4",
+        "engine_forward_pcact_w4a4_mt",
+        "pc-act engine forward 1 -> N threads",
+    ),
 ];
 
 /// One micro-bench row.
@@ -267,6 +283,34 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
         let eng = Engine::with_opts(dm.clone(), true, opts);
         let s = bench_for(row, warmup, budget, || {
             std::hint::black_box(eng.forward_batch(&xe, batch).expect("engine fwd"));
+        });
+        push(row, batch as f64, s);
+    }
+
+    // --- engine forward with per-channel activation scales (QPKG v3) ---
+    // the same export with [d_in] activation-scale vectors on every
+    // quantized-activation site: these layers run the exact f32 route
+    // (no per-output-channel integer requant exists for them), so this
+    // row tracks the v3 default configuration's real serving cost
+    for l in &nm.layers {
+        if l.aq {
+            let sa: Vec<f32> = (0..l.d_in).map(|_| rng.uniform(0.02, 0.2)).collect();
+            state.insert(format!("params/{}.as", l.name), Tensor::new(vec![l.d_in], sa));
+        }
+    }
+    let (dm_pcact, _) =
+        export_model(&nm, &state, &ExportCfg { bits_w: 4, bits_a: 4, quant_a: true })?;
+    for (row, opts) in [
+        (
+            "engine_forward_pcact_w4a4_streaming",
+            EngineOpts { threads: 1, prepared: false },
+        ),
+        ("engine_forward_pcact_w4a4", EngineOpts { threads: 1, prepared: true }),
+        ("engine_forward_pcact_w4a4_mt", EngineOpts { threads, prepared: true }),
+    ] {
+        let eng = Engine::with_opts(dm_pcact.clone(), true, opts);
+        let s = bench_for(row, warmup, budget, || {
+            std::hint::black_box(eng.forward_batch(&xe, batch).expect("engine fwd pcact"));
         });
         push(row, batch as f64, s);
     }
@@ -495,6 +539,9 @@ mod tests {
             "engine_forward_pc_w4a4_streaming",
             "engine_forward_pc_w4a4",
             "engine_forward_pc_w4a4_mt",
+            "engine_forward_pcact_w4a4_streaming",
+            "engine_forward_pcact_w4a4",
+            "engine_forward_pcact_w4a4_mt",
         ] {
             assert!(names.contains(&want), "missing {want} in {names:?}");
         }

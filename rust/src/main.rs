@@ -32,19 +32,20 @@ const USAGE: &str = "oscillations-qat — QAT oscillation study (Nagel et al., I
 USAGE: oscillations-qat <subcommand> [flags]
 
   train     --model mbv2 --estimator lsq --steps 400 --bits-w 3 [--bits-a 3 --quant-a]
-            [--per-channel] [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0]
-            [--fp-steps 600]
+            [--per-tensor] [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0]
+            [--fp-steps 600]   (per-channel LSQ scales are the default;
+            --per-tensor restores the legacy single-scale quantizers)
   eval      --model mbv2 --ckpt ckpts/<tag>.qtns --bits-w 3 [--fp | --quant-a]
-  export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a --per-channel] [--out m.qpkg]
+  export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a --per-tensor] [--out m.qpkg]
             [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
   serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
-            [--threads N] [--exact] [--streaming] [--smoke]
+            [--threads N|auto] [--exact] [--streaming] [--smoke]
             [--bench-out BENCH_serve.json]
   toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
   suite     [--quick]       run everything in one process
   bench-step / bench-kernels
-  bench-deploy  [--smoke] [--threads 2] [--serve-json BENCH_serve.json]
+  bench-deploy  [--smoke] [--threads N|auto] [--serve-json BENCH_serve.json]
                 [--out BENCH_deploy.json]
                 [--baseline BENCH_baseline.json --max-regress 0.25]
                 deploy micro-bench (streaming + prepared decode, 1 and N
@@ -137,7 +138,9 @@ fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
         bits_w: args.u32_or("bits-w", 3),
         bits_a: args.u32_or("bits-a", args.u32_or("bits-w", 3)),
         quant_a: args.flag("quant-a"),
-        per_channel: args.flag("per-channel"),
+        // per-channel is the default; --per-tensor is the escape hatch
+        // (--per-channel is still accepted as an explicit no-op)
+        per_channel: !args.flag("per-tensor"),
         lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
         f_th: Schedule::parse(&args.str_or("f-th", "1.1")).expect("bad --f-th"),
         seed: args.u64_or("seed", 0),
@@ -206,7 +209,7 @@ fn cmd_export(lab: &Lab, args: &Args) -> Result<()> {
             bits_w,
             bits_a,
             quant_a,
-            per_channel: args.flag("per-channel"),
+            per_channel: !args.flag("per-tensor"),
             lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
             f_th: Schedule::parse(&args.str_or("f-th", "cos(0.04,0.01)")).expect("bad --f-th"),
             seed: args.u64_or("seed", 0),
@@ -242,13 +245,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use oscillations_qat::data::{DataCfg, Dataset};
     use oscillations_qat::deploy::format::DeployModel;
     use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
-    use oscillations_qat::deploy::{Engine, EngineOpts};
+    use oscillations_qat::deploy::{resolve_threads, Engine, EngineOpts};
     use std::sync::Arc;
 
     let qpkg = args.str_or("qpkg", "");
     anyhow::ensure!(!qpkg.is_empty(), "serve needs --qpkg <model.qpkg> (see `export`)");
     let opts = EngineOpts {
-        threads: args.usize_or("threads", 1).max(1),
+        threads: resolve_threads(args.get("threads"), 1),
         prepared: !args.flag("streaming"),
     };
     // load-time prepare: with_opts decodes the packed payloads exactly
@@ -382,11 +385,12 @@ fn cmd_bench_step(rt: &dyn Backend, args: &Args) -> Result<()> {
 }
 
 fn cmd_bench_deploy(args: &Args) -> Result<()> {
+    use oscillations_qat::deploy::resolve_threads;
     use oscillations_qat::deploy::trajectory::{check_regression, run_deploy_microbench};
     use oscillations_qat::json;
 
     let smoke = args.flag("smoke");
-    let threads = args.usize_or("threads", 2);
+    let threads = resolve_threads(args.get("threads"), 2);
     let mut report = run_deploy_microbench(smoke, threads)?;
     for k in &report.kernels {
         println!("{:<34} {:>14.0} items/s  mean {:>10.0} ns", k.name, k.per_sec, k.mean_ns);

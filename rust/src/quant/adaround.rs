@@ -7,7 +7,15 @@
 //! exactly that: Metropolis simulated annealing over per-weight up/down
 //! bits, with the loss evaluated through the compiled eval artifact on a
 //! fixed set of training batches.
+//!
+//! Scales may be per-tensor (scalar `params/{layer}.s`) or **per-channel**
+//! (`[d_out]` vectors): each candidate resolves and carries *its own
+//! channel's* step size at collection time (`osc::scale_for` applies the
+//! `kernels::scale_index` layout rule — dense `[d_in, d_out]` columns vs
+//! depthwise `[C, 3]` rows), so Table-3 assignments land every latent on
+//! its channel's grid.
 
+use crate::osc::scale_for;
 use crate::rng::Pcg32;
 use crate::state::NamedTensors;
 use crate::tensor::round_ties_even;
@@ -25,13 +33,15 @@ pub struct Candidate {
     pub up: bool,
     /// probability weight spent in the up state (from the integer EMA)
     pub p_up: f32,
+    /// this element's LSQ step size (its channel's, when per-channel)
+    pub scale: f32,
 }
 
 /// Collect oscillating-weight candidates from a trained state.
 ///
 /// A weight qualifies if its tracked oscillation frequency exceeds
 /// `f_threshold`. Its two states bracket the integer EMA; the current
-/// assignment is read from the latent weight.
+/// assignment is read from the latent weight on its channel's grid.
 pub fn collect_candidates(
     state: &NamedTensors,
     lowbit: &[String],
@@ -49,14 +59,16 @@ pub fn collect_candidates(
         ) else {
             continue;
         };
-        let s = state
+        // scalar (per-tensor) or [d_out] (per-channel) step sizes
+        let scales: Vec<f32> = state
             .get(&format!("params/{}", scale_of(name)))
-            .map(|t| t.item())
-            .unwrap_or(1.0);
+            .map(|t| t.data.clone())
+            .unwrap_or_else(|| vec![1.0]);
         for i in 0..w.len() {
             if f.data[i] <= f_threshold {
                 continue;
             }
+            let s = scale_for(&w.shape, &scales, i);
             let ema = iema.data[i];
             let down = ema.floor().clamp(n, p - 1.0);
             let cur = round_ties_even(w.data[i] / s).clamp(n, p);
@@ -67,24 +79,22 @@ pub fn collect_candidates(
                 down,
                 up: cur > down + 0.5,
                 p_up,
+                scale: s,
             });
         }
     }
     out
 }
 
-/// Write an assignment into a copy of the state (latent weights moved to
-/// the chosen grid point so the graph's fake-quant reproduces it exactly).
-pub fn apply_assignment(
-    state: &mut NamedTensors,
-    cands: &[Candidate],
-    scale_lookup: impl Fn(&str) -> f32,
-) {
+/// Write an assignment into a copy of the state: each latent weight moves
+/// to the chosen grid point **on its own channel's grid** (`c.scale`), so
+/// the graph's (per-tensor or per-channel) fake-quant reproduces it
+/// exactly.
+pub fn apply_assignment(state: &mut NamedTensors, cands: &[Candidate]) {
     for c in cands {
-        let s = scale_lookup(&c.tensor);
         let int = if c.up { c.down + 1.0 } else { c.down };
         if let Some(t) = state.map.get_mut(&c.tensor) {
-            t.data[c.index] = s * int;
+            t.data[c.index] = c.scale * int;
         }
     }
 }
@@ -171,16 +181,20 @@ mod tests {
         (s, vec!["l.w".to_string()])
     }
 
+    fn scale_name(n: &str) -> String {
+        format!("{}.s", &n[..n.len() - 2])
+    }
+
     #[test]
     fn collects_only_oscillating() {
         let (s, lb) = toy_state();
-        let c = collect_candidates(&s, &lb, |n| format!("{}.s", &n[..n.len() - 2]),
-                                   0.02, -4.0, 3.0);
+        let c = collect_candidates(&s, &lb, scale_name, 0.02, -4.0, 3.0);
         assert_eq!(c.len(), 2);
         assert_eq!(c[0].index, 0);
         assert_eq!(c[0].down, 0.0);
         assert!((c[0].p_up - 0.7).abs() < 1e-6);
         assert!(c[0].up); // latent 0.1/0.1 = 1 > 0.5
+        assert_eq!(c[0].scale, 0.1);
         assert_eq!(c[1].index, 2);
         assert_eq!(c[1].down, 2.0);
     }
@@ -195,6 +209,7 @@ mod tests {
                 down: 0.0,
                 up: false,
                 p_up: 0.5,
+                scale: 0.1,
             })
             .collect();
         let target: Vec<bool> = (0..12).map(|i| i % 3 == 0).collect();
@@ -209,10 +224,52 @@ mod tests {
     #[test]
     fn apply_assignment_moves_latents() {
         let (mut s, lb) = toy_state();
-        let mut c = collect_candidates(&s, &lb, |n| format!("{}.s", &n[..n.len() - 2]),
-                                       0.02, -4.0, 3.0);
+        let mut c = collect_candidates(&s, &lb, scale_name, 0.02, -4.0, 3.0);
         c[0].up = false;
-        apply_assignment(&mut s, &c, |_| 0.1);
+        apply_assignment(&mut s, &c);
         assert!((s.get("params/l.w").unwrap().data[0] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_channel_candidates_carry_their_channels_scale() {
+        // depthwise-shaped [2, 3] weights with per-channel scales: row 0
+        // on s = 0.1, row 1 on s = 1.0; every element oscillates
+        let mut s = NamedTensors::new();
+        s.insert(
+            "params/d.w",
+            Tensor::new(vec![2, 3], vec![0.1, 0.2, -0.1, 1.0, 2.0, -1.0]),
+        );
+        s.insert("params/d.s", Tensor::new(vec![2], vec![0.1, 1.0]));
+        s.insert("osc/d.w#f", Tensor::new(vec![2, 3], vec![0.9; 6]));
+        s.insert(
+            "osc/d.w#iema",
+            Tensor::new(vec![2, 3], vec![1.3, 2.3, -1.3, 1.3, 2.3, -1.3]),
+        );
+        let lb = vec!["d.w".to_string()];
+        let cands = collect_candidates(&s, &lb, scale_name, 0.02, -4.0, 3.0);
+        assert_eq!(cands.len(), 6);
+        for c in &cands[..3] {
+            assert_eq!(c.scale, 0.1, "row 0 uses channel 0's scale");
+        }
+        for c in &cands[3..] {
+            assert_eq!(c.scale, 1.0, "row 1 uses channel 1's scale");
+        }
+        // rows see the same latent pattern on their own grids, so the
+        // up/down reads agree across channels
+        for (a, b) in cands[..3].iter().zip(&cands[3..]) {
+            assert_eq!(a.up, b.up);
+            assert_eq!(a.down, b.down);
+        }
+        // applying an assignment lands each latent on its channel's grid
+        let mut assigned = cands.clone();
+        for (i, c) in assigned.iter_mut().enumerate() {
+            c.up = i % 2 == 0;
+        }
+        apply_assignment(&mut s, &assigned);
+        let w = s.get("params/d.w").unwrap().clone();
+        for (c, got) in assigned.iter().zip(&w.data) {
+            let int = if c.up { c.down + 1.0 } else { c.down };
+            assert_eq!(*got, c.scale * int, "index {}", c.index);
+        }
     }
 }

@@ -53,6 +53,15 @@ pub fn lsq_act_scale(abs_mean: f32, p: f32) -> f32 {
     (2.0 * abs_mean / p.max(1.0).sqrt()).max(1e-4)
 }
 
+/// Per-channel LSQ activation scales from per-channel calibration
+/// mean-|x| values (one entry per input channel of the site, as emitted
+/// by the bnstats artifact's `.absmean_pc` output) — the per-channel
+/// twin of [`lsq_act_scale`]. A channel that saw no signal during
+/// calibration gets the same 1e-4 floor the scalar rule applies.
+pub fn lsq_act_scale_pc(abs_means: &[f32], p: f32) -> Vec<f32> {
+    abs_means.iter().map(|&m| lsq_act_scale(m, p)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,5 +121,15 @@ mod tests {
         assert!(lsq_act_scale(0.0, 7.0) > 0.0);
         let s = lsq_act_scale(0.5, 7.0);
         assert!((s - 2.0 * 0.5 / 7.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn act_scale_pc_maps_channels_independently() {
+        let s = lsq_act_scale_pc(&[0.0, 0.5, 2.0], 7.0);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], 1e-4, "dead channel gets the floor");
+        assert!((s[1] - lsq_act_scale(0.5, 7.0)).abs() < 1e-9);
+        assert!((s[2] - lsq_act_scale(2.0, 7.0)).abs() < 1e-9);
+        assert!(s[1] < s[2], "scale grows with the channel's magnitude");
     }
 }

@@ -10,16 +10,13 @@ use crate::rng::Pcg32;
 use crate::state::NamedTensors;
 
 /// Draw one stochastic sample of the oscillating weights into `state`.
-pub fn sample_assignment(
-    state: &mut NamedTensors,
-    cands: &mut [Candidate],
-    rng: &mut Pcg32,
-    scale_lookup: impl Fn(&str) -> f32,
-) {
+/// Each candidate carries its own (per-tensor or per-channel) step size,
+/// so the sampled latents land on their channel's grid.
+pub fn sample_assignment(state: &mut NamedTensors, cands: &mut [Candidate], rng: &mut Pcg32) {
     for c in cands.iter_mut() {
         c.up = rng.next_f32() < c.p_up;
     }
-    apply_assignment(state, cands, scale_lookup);
+    apply_assignment(state, cands);
 }
 
 /// Summary statistics over sampled losses.
@@ -47,8 +44,22 @@ mod tests {
     fn sample_respects_probabilities() {
         let mut rng = Pcg32::new(0, 0);
         let mut cands: Vec<Candidate> = vec![
-            Candidate { tensor: "params/x".into(), index: 0, down: 0.0, up: false, p_up: 1.0 },
-            Candidate { tensor: "params/x".into(), index: 1, down: 0.0, up: true, p_up: 0.0 },
+            Candidate {
+                tensor: "params/x".into(),
+                index: 0,
+                down: 0.0,
+                up: false,
+                p_up: 1.0,
+                scale: 0.1,
+            },
+            Candidate {
+                tensor: "params/x".into(),
+                index: 1,
+                down: 0.0,
+                up: true,
+                p_up: 0.0,
+                scale: 0.1,
+            },
         ];
         let mut ups = [0u32; 2];
         for _ in 0..200 {

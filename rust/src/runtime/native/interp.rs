@@ -20,7 +20,7 @@ use super::kernels::{self, Estimator, OscState};
 use super::model::{LayerOp, NativeModel};
 use crate::runtime::resolve;
 use crate::state::NamedTensors;
-use crate::tensor::{round_ties_even, Tensor};
+use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 
 /// Batch-norm variance epsilon, shared with the deploy export's BN fold.
@@ -82,8 +82,12 @@ struct LayerFwd {
     xhat: Vec<f32>,
     /// post-BN post-activation output, [B * d_out]
     out: Vec<f32>,
-    /// act-quant bookkeeping
-    act_scale: f32,
+    /// act-quant bookkeeping: one scale (per-tensor) or one per input
+    /// channel (`[d_in]`, element `i` of a `[B, d_in]` activation uses
+    /// `act_scales[i % d_in]`), plus the scale tensor's shape (the
+    /// gradient tensor must mirror it)
+    act_scales: Vec<f32>,
+    act_scale_shape: Vec<usize>,
     act_p: f32,
     act_quantized: bool,
     /// weight-quant bookkeeping: one scale (per-tensor) or one per
@@ -136,15 +140,26 @@ fn forward(
         let a_in = act;
 
         // --- input activation fake-quant (unsigned LSQ grid [0, p]) ---
+        // The scale tensor is a scalar (per-tensor LSQ) or a [d_in]
+        // vector (per-channel LSQ, one scale per input channel).
         let act_quantized = l.aq && h.aq_on;
         let act_p = if l.wq == "8bit" { 255.0 } else { h.p_a };
-        let act_scale = if act_quantized {
-            scalar(sources, &format!("params/{}.as", l.name))?.max(1e-8)
+        let (act_scales, act_scale_shape) = if act_quantized {
+            let as_t = req(sources, &format!("params/{}.as", l.name))?;
+            anyhow::ensure!(
+                as_t.len() == 1 || as_t.len() == d_in,
+                "layer {}: {} activation scales for {} input channels",
+                l.name,
+                as_t.len(),
+                d_in
+            );
+            let scales: Vec<f32> = as_t.data.iter().map(|&v| v.max(1e-8)).collect();
+            (scales, as_t.shape.clone())
         } else {
-            1.0
+            (vec![1.0], vec![])
         };
         let a_q = if act_quantized {
-            kernels::fake_quant(&a_in, act_scale, 0.0, act_p)
+            kernels::fake_quant_pc(&a_in, &act_scales, 1, 0.0, act_p)
         } else {
             a_in.clone()
         };
@@ -259,7 +274,8 @@ fn forward(
             bn_var,
             xhat,
             out,
-            act_scale,
+            act_scales,
+            act_scale_shape,
             act_p,
             act_quantized,
             w_scales,
@@ -522,25 +538,24 @@ pub fn train_step(
         }
         grads.insert(format!("{}.w", l.name), Tensor::new(w.shape.clone(), dw));
 
-        // input activation fake-quant backward (unsigned LSQ)
+        // input activation fake-quant backward (unsigned LSQ); the
+        // step-size gradient mirrors the scale tensor (scalar or
+        // per-channel vector), with per-channel 1/sqrt(N_c*p) scaling
         if cache.act_quantized {
-            let sa = cache.act_scale;
-            let p = cache.act_p;
-            let gscale = 1.0 / ((cache.a_in.len() as f32).max(1.0) * p.max(1.0)).sqrt();
-            let mut dsa = 0.0f32;
+            let mut dsa = vec![0.0f32; cache.act_scales.len()];
             let mut da_in = vec![0.0f32; b * d_in];
-            for i in 0..cache.a_in.len() {
-                let r = cache.a_in[i] / sa;
-                if r < 0.0 {
-                    // clipped at zero: no gradient to a, none to the scale
-                } else if r > p {
-                    dsa += da_q[i] * p * gscale;
-                } else {
-                    dsa += da_q[i] * (round_ties_even(r) - r) * gscale;
-                    da_in[i] = da_q[i];
-                }
-            }
-            grads.insert(format!("{}.as", l.name), Tensor::scalar(dsa));
+            kernels::act_quant_bwd_pc(
+                &cache.a_in,
+                &da_q,
+                &cache.act_scales,
+                cache.act_p,
+                &mut da_in,
+                &mut dsa,
+            );
+            grads.insert(
+                format!("{}.as", l.name),
+                Tensor::new(cache.act_scale_shape.clone(), dsa),
+            );
             dact = da_in;
         } else {
             dact = da_q;
@@ -714,6 +729,19 @@ pub fn bnstats_step(model: &NativeModel, sources: &[&NamedTensors]) -> Result<Na
             let n = (b * l.d_in) as f32;
             let absmean = cache.a_in.iter().map(|x| x.abs()).sum::<f32>() / n.max(1.0);
             out.insert(format!("{}.absmean", l.name), Tensor::scalar(absmean));
+            // per-input-channel E|x| for per-channel activation-scale
+            // calibration (qat::to_per_channel_scales)
+            let mut pc = vec![0.0f32; l.d_in];
+            for bi in 0..b {
+                for (j, acc) in pc.iter_mut().enumerate() {
+                    *acc += cache.a_in[bi * l.d_in + j].abs();
+                }
+            }
+            let binv = 1.0 / (b as f32).max(1.0);
+            for v in pc.iter_mut() {
+                *v *= binv;
+            }
+            out.insert(format!("{}.absmean_pc", l.name), Tensor::new(vec![l.d_in], pc));
         }
     }
     Ok(out)
@@ -821,5 +849,60 @@ mod tests {
         assert!(out.get("head.absmean").is_some());
         let am = out.get("b1.dw.absmean").unwrap().item();
         assert!(am > 0.0 && am.is_finite());
+        // per-channel calibration output: one E|x| per input channel,
+        // whose mean equals the scalar absmean
+        let pc = out.get("b1.dw.absmean_pc").unwrap();
+        let d_in = m.layers.iter().find(|l| l.name == "b1.dw").unwrap().d_in;
+        assert_eq!(pc.len(), d_in);
+        let mean = pc.data.iter().sum::<f32>() / d_in as f32;
+        assert!((mean - am).abs() < 1e-4, "pc mean {mean} vs scalar {am}");
+        assert!(pc.data.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn per_channel_activation_scales_round_trip_training() {
+        // replace every act scale with a [d_in] vector: train_step must
+        // run, keep state keys stable, and keep the vector shape on the
+        // updated scale + its momentum
+        let models = zoo();
+        let m = &models[3]; // efflite
+        let mut state = m.initial_state();
+        for l in &m.layers {
+            if l.aq {
+                state.insert(
+                    format!("params/{}.as", l.name),
+                    Tensor::new(vec![l.d_in], vec![0.5; l.d_in]),
+                );
+                state.insert(format!("opt/{}.as", l.name), Tensor::zeros(&[l.d_in]));
+            }
+        }
+        let mut hm = hyper_map(true);
+        hm.insert("hyper/aq_on", Tensor::scalar(1.0));
+        let ds = crate::data::Dataset::new(Default::default());
+        let bch = ds.train_batch(0, 0);
+        let mut io = NamedTensors::new();
+        io.insert("batch/x", bch.x);
+        io.insert("batch/y", bch.y);
+        let n_keys = state.len();
+        let out = train_step(m, Estimator::Lsq, &[&state, &io, &hm]).unwrap();
+        let mut next = NamedTensors::new();
+        for (k, v) in out.map {
+            if let Some(rest) = k.strip_prefix("state/") {
+                next.insert(rest.to_string(), v);
+            }
+        }
+        assert_eq!(next.len(), n_keys, "state keys must round-trip");
+        for l in &m.layers {
+            if l.aq {
+                let s = next.get(&format!("params/{}.as", l.name)).unwrap();
+                assert_eq!(s.len(), l.d_in, "{} act scale stays per-channel", l.name);
+                assert!(s.data.iter().all(|&v| v > 0.0), "{} scales positive", l.name);
+                let mom = next.get(&format!("opt/{}.as", l.name)).unwrap();
+                assert_eq!(mom.len(), l.d_in);
+            }
+        }
+        // eval with the same per-channel scales also runs
+        let ev = eval_step(m, &[&next, &batch(m), &hm]).unwrap();
+        assert!(ev.expect("loss").unwrap().item().is_finite());
     }
 }

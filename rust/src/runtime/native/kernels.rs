@@ -333,6 +333,44 @@ pub fn fake_quant_bwd(
     );
 }
 
+/// Backward through the **activation** fake-quantizer (unsigned LSQ grid
+/// `[0, p]`) with per-channel scales: activations are `[B, d_in]`
+/// row-major, element `i` belongs to channel `i % n_scales` (`n_scales`
+/// is 1 for per-tensor or `d_in` for per-channel). Maps the gradient
+/// w.r.t. the quantized activation (`g`) to the input gradient `da`
+/// (STE gated to the `[0, p]` clip range) and accumulates the LSQ
+/// step-size gradient of channel `c` into `ds[c]` with the per-channel
+/// gradient scaling `1/sqrt(N_c * p)`, `N_c = a.len() / n_scales` — the
+/// activation twin of [`fake_quant_bwd_pc`]'s LSQ rule. With a single
+/// scale this reproduces the per-tensor activation backward bit for bit.
+pub fn act_quant_bwd_pc(
+    a: &[f32],
+    g: &[f32],
+    scales: &[f32],
+    p: f32,
+    da: &mut [f32],
+    ds: &mut [f32],
+) {
+    let ns = scales.len().max(1);
+    debug_assert_eq!(ds.len(), scales.len(), "ds must have one slot per scale");
+    debug_assert_eq!(da.len(), a.len());
+    debug_assert_eq!(g.len(), a.len());
+    let per_ch = (a.len() / ns) as f32;
+    let gscale = 1.0 / (per_ch.max(1.0) * p.max(1.0)).sqrt();
+    for i in 0..a.len() {
+        let c = i % ns;
+        let r = a[i] / scales[c];
+        if r < 0.0 {
+            // clipped at zero: no gradient to a, none to the scale
+        } else if r > p {
+            ds[c] += g[i] * p * gscale;
+        } else {
+            ds[c] += g[i] * (round_ties_even(r) - r) * gscale;
+            da[i] = g[i];
+        }
+    }
+}
+
 /// Gradient of the dampening regularizer (eq. 5) w.r.t. the latent weight
 /// with per-channel scales: `2 (w - fq(w; s_c))` inside the channel's
 /// clip range (stop-gradient through fq), 0 outside. Accumulates
@@ -546,6 +584,35 @@ mod tests {
         dampening_bwd(&w, 0.1, -4.0, 3.0, 0.5, &mut dwa);
         dampening_bwd_pc(&w, &[0.1, 0.1], 1, -4.0, 3.0, 0.5, &mut dwb);
         assert_eq!(dwa, dwb);
+    }
+
+    #[test]
+    fn act_bwd_per_channel_matches_scalar_on_one_scale() {
+        // [2, 3] activations on a binary-exact grid (s = 0.25, p = 7):
+        // r = [-2, 3.2, 40, 0, 1.2, 7.2] covers the clip-at-zero,
+        // in-range and clip-at-p arms
+        let a = vec![-0.5, 0.8, 10.0, 0.0, 0.3, 1.8];
+        let g = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = 7.0f32;
+        // per-tensor: one scale slot, N_c = a.len()
+        let mut da_s = vec![0.0; 6];
+        let mut ds_s = vec![0.0f32; 1];
+        act_quant_bwd_pc(&a, &g, &[0.25], p, &mut da_s, &mut ds_s);
+        assert_eq!(da_s, vec![0.0, 2.0, 0.0, 4.0, 5.0, 0.0]);
+        let gscale = 1.0 / (6.0f32 * p).sqrt();
+        // 2*(3-3.2) + 3*7 + 4*0 + 5*(1-1.2) + 6*7 = 61.6
+        assert!((ds_s[0] - 61.6 * gscale).abs() < 1e-4, "{ds_s:?}");
+        // per-channel: 3 channels, each accumulates only its own columns
+        let scales = vec![0.25f32; 3];
+        let mut da_c = vec![0.0; 6];
+        let mut ds_c = vec![0.0f32; 3];
+        act_quant_bwd_pc(&a, &g, &scales, p, &mut da_c, &mut ds_c);
+        assert_eq!(da_c, da_s, "uniform per-channel scales keep the STE gate");
+        // N_c = 2 per channel instead of 6: gscale grows by sqrt(3)
+        let gscale_c = 1.0 / (2.0f32 * p).sqrt();
+        assert!((ds_c[0] - 0.0).abs() < 1e-6);
+        assert!((ds_c[1] - (2.0 * -0.2 + 5.0 * -0.2) * gscale_c).abs() < 1e-4, "{ds_c:?}");
+        assert!((ds_c[2] - (3.0 * 7.0 + 6.0 * 7.0) * gscale_c).abs() < 1e-4, "{ds_c:?}");
     }
 
     #[test]

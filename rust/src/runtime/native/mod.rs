@@ -254,6 +254,12 @@ impl Backend for NativeBackend {
                     }
                     if l.aq {
                         outs.push(scalar(&format!("{}.absmean", l.name)));
+                        // per-input-channel E|x| for per-channel
+                        // activation-scale calibration
+                        outs.push(TensorSpec {
+                            name: format!("{}.absmean_pc", l.name),
+                            shape: vec![l.d_in],
+                        });
                     }
                 }
                 outs

@@ -27,8 +27,10 @@ fn small_data() -> DataCfg {
 
 /// Train a W4/A4 QAT model with the freezing schedule and re-estimated
 /// BN statistics — the state every check below exports. With
-/// `per_channel` the weight quantizers run one learned LSQ scale per
-/// output channel (the paper's depth-wise regime).
+/// `per_channel` the quantizers run the v3 default regime: one learned
+/// LSQ weight scale per output channel *and* one learned activation
+/// scale per input channel (the paper's depth-wise operating point);
+/// without it, the `--per-tensor` legacy single-scale quantizers.
 fn trained_state(be: &NativeBackend, per_channel: bool) -> NamedTensors {
     let data = small_data();
     let trainer = Trainer::new(be);
@@ -39,7 +41,7 @@ fn trained_state(be: &NativeBackend, per_channel: bool) -> NamedTensors {
 
     qat::prepare_qat(be, &mut state, MODEL, BITS, BITS, &data, 0).unwrap();
     if per_channel {
-        let n = qat::to_per_channel_scales(be, &mut state, MODEL, BITS).unwrap();
+        let n = qat::to_per_channel_scales(be, &mut state, MODEL, BITS, BITS, &data, 0).unwrap();
         assert!(n >= 5, "expected every weight tensor converted, got {n}");
     }
     let mut cfg = RunCfg::qat(MODEL, 80, BITS, 0);
@@ -228,9 +230,10 @@ fn deploy_roundtrip_suite() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
-/// The per-channel acceptance criterion: a w4a4 **per-channel** QAT run
-/// of a depth-wise zoo model exports through QPKG v2, the file
-/// round-trips, and both engine paths (f32-bit-exact and
+/// The per-channel acceptance criterion: a w4a4 QAT run of a depth-wise
+/// zoo model in the **v3 default regime** — per-channel weight scales
+/// *and* per-channel activation scales — exports through QPKG v3, the
+/// file round-trips, and both engine paths (f32-bit-exact and
 /// i32-accumulation, standalone and behind the batched server) reproduce
 /// the fake-quant eval path's top-1 predictions exactly.
 #[test]
@@ -238,11 +241,16 @@ fn per_channel_deploy_roundtrip_suite() {
     let be = NativeBackend::new();
     let state = trained_state(&be, true);
 
-    // the trained state really carries per-channel scale vectors
+    // the trained state really carries per-channel scale vectors, for
+    // weights ([d_out]) and for activation sites ([d_in])
     let nm = zoo_model(MODEL).unwrap();
     for l in &nm.layers {
         let s = state.get(&format!("params/{}.s", l.name)).unwrap();
         assert_eq!(s.len(), l.d_out, "{} should train per-channel scales", l.name);
+        if l.aq {
+            let sa = state.get(&format!("params/{}.as", l.name)).unwrap();
+            assert_eq!(sa.len(), l.d_in, "{} should train per-channel act scales", l.name);
+        }
     }
 
     let (ref_preds, inputs) = reference_preds(&be, &state);
@@ -252,16 +260,26 @@ fn per_channel_deploy_roundtrip_suite() {
     let (dm, report) = export_model(&nm, &state, &cfg).unwrap();
     assert!(report.frozen_verified > 0, "freezing should engage per-channel: {report:?}");
     assert!(report.max_offgrid <= 0.5 + 1e-6, "{report:?}");
-    for l in &dm.layers {
-        assert!(l.per_channel(), "{} exported without per-channel scales", l.name);
-        assert_eq!(l.w_scales.len(), l.d_out, "{}", l.name);
+    for (dl, nl) in dm.layers.iter().zip(&nm.layers) {
+        assert!(dl.per_channel(), "{} exported without per-channel scales", dl.name);
+        assert_eq!(dl.w_scales.len(), dl.d_out, "{}", dl.name);
+        if nl.aq {
+            assert!(dl.per_channel_act(), "{} lost its per-channel act scales", dl.name);
+            assert_eq!(dl.a_scales.len(), dl.d_in, "{}", dl.name);
+        }
     }
 
-    // ---- QPKG v2 file round-trip --------------------------------------
+    // ---- QPKG v3 file round-trip --------------------------------------
     let dir = std::env::temp_dir().join(format!("qat_deploy_pc_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("model_pc.qpkg");
     dm.write_qpkg(&path).unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(raw[4..8].try_into().unwrap()),
+        3,
+        "per-channel-activation exports are version 3 on disk"
+    );
     let dm2 = DeployModel::read_qpkg(&path).unwrap();
     assert_eq!(dm, dm2);
 
@@ -312,7 +330,8 @@ fn per_channel_deploy_roundtrip_suite() {
         "served per-channel predictions disagree with the fake-quant eval path"
     );
     eprintln!(
-        "[deploy] {MODEL} w{BITS}a{BITS} per-channel: 100% top-1 agreement over {} samples; {}",
+        "[deploy] {MODEL} w{BITS}a{BITS} per-channel (v3 weights+activations): \
+         100% top-1 agreement over {} samples; {}",
         ref_preds.len(),
         sreport.summary()
     );

@@ -60,6 +60,47 @@ fn fake_quant_matches_ref_fixtures() {
 }
 
 #[test]
+fn fake_quant_pc_matches_ref_fixtures() {
+    let fx = fixture("fake_quant_pc");
+    let cases = fx.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let w = vecf(case, "w");
+        let scales = vecf(case, "scales");
+        let group = scalarf(case, "group") as usize;
+        let (n, p) = (scalarf(case, "n"), scalarf(case, "p"));
+        let got = kernels::fake_quant_pc(&w, &scales, group, n, p);
+        assert_close("fake_quant_pc", ci, &got, &vecf(case, "out"));
+        let ints = kernels::int_weights_pc(&w, &scales, group, n, p);
+        assert_close("int_weights_pc", ci, &ints, &vecf(case, "ints"));
+    }
+}
+
+#[test]
+fn act_requant_pc_matches_ref_fixtures() {
+    // the per-channel activation requant path the interpreter and the
+    // deploy engine share: codes = clip(round(a / s_c), 0, p) with
+    // channel c = i % n_scales, then a_q = s_c * code
+    let fx = fixture("act_requant_pc");
+    let cases = fx.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let a = vecf(case, "a");
+        let scales = vecf(case, "scales");
+        let p = scalarf(case, "p");
+        let codes = kernels::int_weights_pc(&a, &scales, 1, 0.0, p);
+        assert_close("act_requant_pc.codes", ci, &codes, &vecf(case, "codes"));
+        let ns = scales.len();
+        let a_q: Vec<f32> =
+            codes.iter().enumerate().map(|(i, &c)| scales[i % ns] * c).collect();
+        assert_close("act_requant_pc.out", ci, &a_q, &vecf(case, "out"));
+        // the fused form is the same function
+        let fq = kernels::fake_quant_pc(&a, &scales, 1, 0.0, p);
+        assert_close("act_requant_pc.fused", ci, &fq, &vecf(case, "out"));
+    }
+}
+
+#[test]
 fn osc_update_matches_ref_fixtures() {
     let fx = fixture("osc_update");
     let cases = fx.get("cases").as_arr().unwrap();

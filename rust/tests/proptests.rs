@@ -576,7 +576,7 @@ fn per_channel_qpkg_v2_roundtrip_is_engine_bitexact() {
             relu: false,
             aq: false,
             act_bits: 8,
-            a_scale: 1.0,
+            a_scales: vec![1.0],
             w_bits: bits,
             w_scales: scales.clone(),
             weights,
@@ -672,7 +672,7 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
                     relu: true,
                     aq: false,
                     act_bits: 8,
-                    a_scale: 1.0,
+                    a_scales: vec![1.0],
                     w_bits: bits,
                     w_scales: full_scales.clone(),
                     weights: p_full,
@@ -690,7 +690,7 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
                     relu: false,
                     aq: true,
                     act_bits: bits,
-                    a_scale: rng.uniform(0.01, 0.3),
+                    a_scales: vec![rng.uniform(0.01, 0.3)],
                     w_bits: bits,
                     w_scales: dw_scales.clone(),
                     weights: p_dw,
@@ -726,6 +726,199 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
             .forward_batch(&x, b)
             .unwrap();
             assert_eq!(prepared, mt, "bits {bits} int_accum {int_accum} threads {threads}");
+        }
+    });
+}
+
+#[test]
+fn per_channel_activation_engine_bitexact_vs_interp_math() {
+    // QPKG v3: per-input-channel activation scales on every quantized-
+    // activation site. The engine (prepared, streaming, threaded, both
+    // accumulation modes) must reproduce the interpreter's fake-quant
+    // arithmetic to the bit: per-channel act fake-quant, then the scalar
+    // loop order over per-channel fake-quant weights.
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+    use oscillations_qat::runtime::native::kernels::fake_quant_pc;
+    for_random_cases(40, "pcact_engine", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let act_p = quant::act_grid(bits);
+        let hw = 1 + rng.below(3);
+        let d_in = hw * hw * 3;
+        let c = 2 + rng.below(6);
+        let full_scales = random_scales(rng, c);
+        let dw_scales = random_scales(rng, c);
+        // per-channel activation scales on BOTH quantized sites
+        let a1: Vec<f32> = (0..d_in).map(|_| rng.uniform(0.01, 0.4)).collect();
+        let a2: Vec<f32> = (0..c).map(|_| rng.uniform(0.01, 0.4)).collect();
+        let w_full: Vec<f32> = (0..d_in * c).map(|_| rng.normal() * 0.5).collect();
+        let w_dw: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.5).collect();
+        let (p_full, _) = snap_and_pack_pc(&w_full, &full_scales, 1, bits).unwrap();
+        let (p_dw, _) = snap_and_pack_pc(&w_dw, &dw_scales, 3, bits).unwrap();
+        let requant = Requant {
+            mult: (0..c).map(|_| rng.uniform(0.5, 2.0)).collect(),
+            add: (0..c).map(|_| rng.normal() * 0.1).collect(),
+        };
+        let dm = DeployModel {
+            name: "pcact".into(),
+            input_hw: hw,
+            num_classes: c,
+            quant_a: true,
+            bits_w: bits,
+            bits_a: bits,
+            layers: vec![
+                DeployLayer {
+                    name: "full".into(),
+                    op: DeployOp::Full,
+                    d_in,
+                    d_out: c,
+                    relu: true,
+                    aq: true,
+                    act_bits: bits,
+                    a_scales: a1.clone(),
+                    w_bits: bits,
+                    w_scales: full_scales.clone(),
+                    weights: p_full,
+                    bias: None,
+                    requant: Some(requant.clone()),
+                },
+                DeployLayer {
+                    name: "dw".into(),
+                    op: DeployOp::Dw,
+                    d_in: c,
+                    d_out: c,
+                    relu: false,
+                    aq: true,
+                    act_bits: bits,
+                    a_scales: a2.clone(),
+                    w_bits: bits,
+                    w_scales: dw_scales.clone(),
+                    weights: p_dw,
+                    bias: None,
+                    requant: None,
+                },
+            ],
+        };
+        // the v3 byte round-trip preserves the activation scale arrays
+        let dm2 = oscillations_qat::deploy::format::DeployModel::from_bytes(&dm.to_bytes())
+            .expect("v3 roundtrip");
+        assert_eq!(dm, dm2);
+
+        let b = 1 + rng.below(4);
+        let x: Vec<f32> = (0..b * d_in).map(|_| rng.normal()).collect();
+
+        // ---- interpreter-math reference ----
+        let wq_full = fake_quant_pc(&w_full, &full_scales, 1, gn, gp);
+        let wq_dw = fake_quant_pc(&w_dw, &dw_scales, 3, gn, gp);
+        let aq1 = fake_quant_pc(&x, &a1, 1, 0.0, act_p);
+        let mut mid = vec![0.0f32; b * c];
+        for bi in 0..b {
+            for kk in 0..d_in {
+                let a = aq1[bi * d_in + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..c {
+                    mid[bi * c + j] += a * wq_full[kk * c + j];
+                }
+            }
+        }
+        for bi in 0..b {
+            for j in 0..c {
+                let idx = bi * c + j;
+                mid[idx] = requant.mult[j] * mid[idx] + requant.add[j];
+                if mid[idx] < 0.0 {
+                    mid[idx] = 0.0;
+                }
+            }
+        }
+        let aq2 = fake_quant_pc(&mid, &a2, 1, 0.0, act_p);
+        let mut want = vec![0.0f32; b * c];
+        for bi in 0..b {
+            for ci in 0..c {
+                let mut acc = 0.0f32;
+                for t in 0..3usize {
+                    let j = (ci + t + c - 1) % c;
+                    acc += wq_dw[ci * 3 + t] * aq2[bi * c + j];
+                }
+                want[bi * c + ci] = acc;
+            }
+        }
+
+        // ---- every engine mode reproduces it to the bit ----
+        for int_accum in [false, true] {
+            for opts in [
+                EngineOpts::default(),
+                EngineOpts { threads: 1, prepared: false },
+                EngineOpts { threads: 2 + rng.below(3), prepared: true },
+            ] {
+                let got = oscillations_qat::deploy::Engine::with_opts(dm.clone(), int_accum, opts)
+                    .forward_batch(&x, b)
+                    .unwrap();
+                assert_eq!(got, want, "bits {bits} int_accum {int_accum} opts {opts:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn adaround_pc_assignment_lands_on_channel_grid() {
+    // per-channel Table-3 machinery: candidates collected from a state
+    // with [d_out] scale vectors carry their own channel's step size, and
+    // a sampled assignment lands every latent exactly on that channel's
+    // grid.
+    use oscillations_qat::quant::{adaround, sampler};
+    for_random_cases(60, "adaround_pc", |rng| {
+        // skip C = 3: a square [3, 3] tensor with 3 scales is the
+        // documented `osc::scale_for` ambiguity (resolves to columns) and
+        // no zoo layer has it — dw widths are 32..64
+        let c = match 2 + rng.below(8) {
+            3 => 4,
+            other => other,
+        };
+        let scales: Vec<f32> = (0..c).map(|_| rng.uniform(0.01, 0.5)).collect();
+        let (n, p) = quant::weight_grid(3);
+        let w: Vec<f32> = (0..c * 3).map(|_| rng.normal() * 0.5).collect();
+        let mut s = NamedTensors::new();
+        s.insert("params/d.w", Tensor::new(vec![c, 3], w));
+        s.insert("params/d.s", Tensor::new(vec![c], scales.clone()));
+        s.insert(
+            "osc/d.w#f",
+            Tensor::new(vec![c, 3], (0..c * 3).map(|_| rng.uniform(0.0, 0.1)).collect()),
+        );
+        s.insert(
+            "osc/d.w#iema",
+            Tensor::new(vec![c, 3], (0..c * 3).map(|_| rng.uniform(-3.5, 2.5)).collect()),
+        );
+        let lb = vec!["d.w".to_string()];
+        let mut cands = adaround::collect_candidates(
+            &s,
+            &lb,
+            |name| format!("{}.s", &name[..name.len() - 2]),
+            0.05,
+            n,
+            p,
+        );
+        // each candidate resolved its own channel's scale ([C, 3] rows)
+        for cand in &cands {
+            assert_eq!(
+                cand.scale,
+                scales[cand.index / 3],
+                "candidate {} wrong channel scale",
+                cand.index
+            );
+        }
+        // a stochastic sample lands every candidate latent on its grid
+        let mut srng = Pcg32::new(rng.next_u32() as u64, 0xad);
+        sampler::sample_assignment(&mut s, &mut cands, &mut srng);
+        let w2 = s.get("params/d.w").unwrap();
+        for cand in &cands {
+            let int = if cand.up { cand.down + 1.0 } else { cand.down };
+            assert!(int >= n && int <= p, "assignment escaped the grid");
+            assert_eq!(w2.data[cand.index], cand.scale * int, "index {}", cand.index);
+            let r = w2.data[cand.index] / cand.scale;
+            assert!((r - round_ties_even(r)).abs() < 1e-4, "latent off-grid: {r}");
         }
     });
 }

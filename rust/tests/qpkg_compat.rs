@@ -1,22 +1,28 @@
-//! QPKG backward compatibility: a **committed version-1 fixture**
-//! (written by the PR-2 era scalar-scale serializer; layout pinned in
-//! `deploy/format.rs`) must keep loading after the format moved to
-//! version 2, upgrading its per-layer `f32 w_scale` to a one-element
-//! scale vector — and re-saving it must produce a valid v2 file with
-//! identical content.
+//! QPKG backward compatibility: **committed fixtures for every historic
+//! version** must keep loading after the format moved to version 3.
+//!
+//! * `tiny_v1.qpkg` — PR-2 era scalar-scale serializer (single `f32
+//!   w_scale` + single `f32 a_scale` per layer);
+//! * `tiny_v2.qpkg` — PR-3 era serializer (counted per-channel
+//!   `w_scales` array + single `f32 a_scale` per layer).
+//!
+//! The v1 -> v3 and v2 -> v3 upgrade matrix checks header fields, the
+//! upgraded scale-array lengths (weight *and* activation), the packed
+//! codes, and that the dequantized weight planes are **bit-identical**
+//! after the upgrade; re-saving any upgraded model must produce a valid
+//! version-3 file with identical content.
 
 use oscillations_qat::deploy::format::{DeployModel, DeployOp};
 use std::path::PathBuf;
 
-fn fixture_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_v1.qpkg")
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(format!("tests/fixtures/{name}"))
 }
 
-#[test]
-fn committed_v1_fixture_loads_and_upgrades() {
-    let m = DeployModel::read_qpkg(&fixture_path()).expect("v1 fixture must load");
-
-    // header fields survive
+/// Header + structure assertions shared by every upgraded fixture: both
+/// files describe the same tiny two-layer model, differing only in their
+/// scale payloads.
+fn assert_common_structure(m: &DeployModel) {
     assert_eq!(m.name, "tiny");
     assert_eq!(m.input_hw, 2);
     assert_eq!(m.num_classes, 3);
@@ -25,49 +31,127 @@ fn committed_v1_fixture_loads_and_upgrades() {
     assert_eq!(m.bits_a, 3);
     assert_eq!(m.layers.len(), 2);
 
-    // layer 0: dense stem with a folded-BN requant, scalar scale upgraded
     let stem = &m.layers[0];
     assert_eq!(stem.name, "stem");
     assert_eq!(stem.op, DeployOp::Full);
     assert_eq!((stem.d_in, stem.d_out), (12, 3));
     assert!(stem.relu && !stem.aq);
     assert_eq!(stem.w_bits, 3);
-    assert_eq!(stem.w_scales, vec![0.1], "v1 scalar must upgrade to a 1-vector");
-    assert!(!stem.per_channel());
-    assert_eq!(stem.a_scale, 1.0);
+    assert_eq!(stem.act_bits, 8);
     let rq = stem.requant.as_ref().expect("stem requant");
     assert_eq!(rq.mult, vec![1.0, 0.5, 2.0]);
     assert_eq!(rq.add, vec![0.0, -0.1, 0.2]);
     assert!(stem.bias.is_none());
-    // packed 3-bit codes decode to the values the v1 writer packed
     let codes = stem.weights.unpack();
     assert_eq!(codes.len(), 36);
     for (i, &c) in codes.iter().enumerate() {
-        assert_eq!(c, (i % 8) as u32, "code {i}");
+        assert_eq!(c, (i % 8) as u32, "stem code {i}");
     }
 
-    // layer 1: depthwise head with bias, quantized activations
     let head = &m.layers[1];
     assert_eq!(head.name, "head");
     assert_eq!(head.op, DeployOp::Dw);
     assert!(head.aq && !head.relu);
     assert_eq!(head.w_bits, 4);
     assert_eq!(head.act_bits, 3);
-    assert_eq!(head.w_scales, vec![0.2]);
-    assert_eq!(head.a_scale, 0.05);
     assert_eq!(head.bias.as_deref(), Some(&[0.1, 0.2, 0.3][..]));
     assert!(head.requant.is_none());
     assert_eq!(head.weights.unpack(), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+}
 
-    // re-serializing writes version 2 and round-trips the same model
-    let v2_bytes = m.to_bytes();
-    assert_eq!(&v2_bytes[..4], b"QPKG");
-    assert_eq!(u32::from_le_bytes(v2_bytes[4..8].try_into().unwrap()), 2);
-    let m2 = DeployModel::from_bytes(&v2_bytes).expect("upgraded model must round-trip");
-    assert_eq!(m, m2);
+/// Re-serializing an upgraded model must emit version 3 bytes that load
+/// back to the identical struct.
+fn assert_resaves_as_v3(m: &DeployModel, raw: &[u8]) {
+    let v3_bytes = m.to_bytes();
+    assert_eq!(&v3_bytes[..4], b"QPKG");
+    assert_eq!(u32::from_le_bytes(v3_bytes[4..8].try_into().unwrap()), 3);
+    let m2 = DeployModel::from_bytes(&v3_bytes).expect("upgraded model must round-trip");
+    assert_eq!(m, &m2);
+    assert_ne!(raw, &v3_bytes[..], "v3 layout must differ from the fixture bytes");
+}
+
+/// The dequantized weight planes of an upgraded model, layer by layer —
+/// the bit pattern the engine actually serves from.
+fn dequant_planes(m: &DeployModel) -> Vec<Vec<f32>> {
+    m.layers
+        .iter()
+        .map(|l| {
+            let mut out = Vec::new();
+            l.weights
+                .dequant_pc_into(l.grid_n_int(), &l.w_scales, l.scale_group(), &mut out);
+            out
+        })
+        .collect()
+}
+
+#[test]
+fn committed_v1_fixture_loads_and_upgrades() {
+    let path = fixture_path("tiny_v1.qpkg");
+    let m = DeployModel::read_qpkg(&path).expect("v1 fixture must load");
+    assert_common_structure(&m);
+
+    // v1 scalars upgrade to one-element scale vectors, weight and act
+    assert_eq!(m.layers[0].w_scales, vec![0.1], "v1 w_scale must upgrade to a 1-vector");
+    assert!(!m.layers[0].per_channel());
+    assert_eq!(m.layers[0].a_scales, vec![1.0]);
+    assert!(!m.layers[0].per_channel_act());
+    assert_eq!(m.layers[1].w_scales, vec![0.2]);
+    assert_eq!(m.layers[1].a_scales, vec![0.05], "v1 a_scale must upgrade to a 1-vector");
 
     // and the raw fixture really is version 1 on disk
-    let raw = std::fs::read(fixture_path()).unwrap();
+    let raw = std::fs::read(&path).unwrap();
     assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 1);
-    assert_ne!(raw, v2_bytes, "v2 layout must differ from the v1 bytes");
+    assert_resaves_as_v3(&m, &raw);
+}
+
+#[test]
+fn committed_v2_fixture_loads_and_upgrades() {
+    let path = fixture_path("tiny_v2.qpkg");
+    let m = DeployModel::read_qpkg(&path).expect("v2 fixture must load");
+    assert_common_structure(&m);
+
+    // v2 carries per-channel weight scales already; its single f32
+    // a_scale upgrades to a one-element vector
+    assert_eq!(m.layers[0].w_scales, vec![0.1, 0.07, 0.2]);
+    assert!(m.layers[0].per_channel());
+    assert_eq!(m.layers[0].a_scales, vec![1.0]);
+    assert_eq!(m.layers[1].w_scales, vec![0.2, 0.15, 0.3]);
+    assert!(m.layers[1].per_channel());
+    assert_eq!(m.layers[1].a_scales, vec![0.05]);
+    assert!(!m.layers[1].per_channel_act());
+    assert_eq!(m.layers[1].w_scale_of(1), 0.15);
+
+    let raw = std::fs::read(&path).unwrap();
+    assert_eq!(u32::from_le_bytes(raw[4..8].try_into().unwrap()), 2);
+    assert_resaves_as_v3(&m, &raw);
+}
+
+#[test]
+fn upgrade_matrix_preserves_dequant_planes_bit_for_bit() {
+    // the engine's operand is the dequantized weight plane: after any
+    // upgrade (v1 -> v3, v2 -> v3, and the re-saved v3 of each) the
+    // planes must be bit-identical to the in-memory model's
+    for name in ["tiny_v1.qpkg", "tiny_v2.qpkg"] {
+        let m = DeployModel::read_qpkg(&fixture_path(name)).unwrap();
+        let planes = dequant_planes(&m);
+        assert_eq!(planes[0].len(), 36, "{name}");
+        assert_eq!(planes[1].len(), 9, "{name}");
+        // resave as v3 and reload: planes unchanged to the bit
+        let m3 = DeployModel::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(planes, dequant_planes(&m3), "{name} planes drifted across the upgrade");
+        // spot-check the mapping: code c dequantizes to s_c * (c + gn)
+        let stem = &m.layers[0];
+        let gn = stem.grid_n_int();
+        for (i, &v) in planes[0].iter().enumerate() {
+            let s = stem.w_scales[i % stem.w_scales.len()];
+            let want = s * (stem.weights.get(i) as i32 + gn) as f32;
+            assert_eq!(v, want, "{name} stem plane [{i}]");
+        }
+    }
+    // the two fixtures describe the same codes; only the v2 per-channel
+    // scales change the plane values
+    let m1 = DeployModel::read_qpkg(&fixture_path("tiny_v1.qpkg")).unwrap();
+    let m2 = DeployModel::read_qpkg(&fixture_path("tiny_v2.qpkg")).unwrap();
+    assert_eq!(m1.layers[0].weights, m2.layers[0].weights);
+    assert_ne!(dequant_planes(&m1)[0], dequant_planes(&m2)[0]);
 }
