@@ -20,10 +20,21 @@
 
 use std::collections::BTreeMap;
 
-/// Options that never take a value. Keep in sync with the `args.flag()`
-/// call sites in `main.rs` (and declare new boolean options here).
-pub const BOOL_FLAGS: &[&str] =
-    &["quick", "fp", "quant-a", "smoke", "exact", "per-channel", "per-tensor", "streaming"];
+/// Options that never take a value. Kept in sync with the `args.flag()`
+/// call sites in `main.rs` — the `bool_flags_match_main_rs_call_sites`
+/// test below enforces both directions, so a new flag can't silently
+/// eat a positional.
+pub const BOOL_FLAGS: &[&str] = &[
+    "quick",
+    "fp",
+    "quant-a",
+    "smoke",
+    "exact",
+    "per-channel",
+    "per-tensor",
+    "streaming",
+    "no-http",
+];
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -232,5 +243,43 @@ mod tests {
         let a = parse("");
         assert_eq!(a.subcommand, None);
         assert_eq!(a.str_or("x", "d"), "d");
+    }
+
+    /// Enforce the "keep in sync with main.rs" comment on [`BOOL_FLAGS`]:
+    /// every flag consumed via `args.flag("...")` in main.rs must be
+    /// declared, and every declared flag must have a call site. An
+    /// undeclared flag would silently eat the next positional argument
+    /// (`serve --no-http m.qpkg` parsing `no-http = "m.qpkg"`).
+    #[test]
+    fn bool_flags_match_main_rs_call_sites() {
+        let main_src = include_str!("main.rs");
+        let mut consumed: Vec<&str> = Vec::new();
+        let needle = ".flag(\"";
+        for (at, _) in main_src.match_indices(needle) {
+            let rest = &main_src[at + needle.len()..];
+            let end = rest.find('"').expect("unterminated .flag(\" literal in main.rs");
+            let name = &rest[..end];
+            if !consumed.contains(&name) {
+                consumed.push(name);
+            }
+        }
+        assert!(
+            !consumed.is_empty(),
+            "found no .flag(\"...\") call sites in main.rs — did the scan break?"
+        );
+        for name in &consumed {
+            assert!(
+                BOOL_FLAGS.contains(name),
+                "main.rs consumes --{name} via args.flag() but BOOL_FLAGS does not \
+                 declare it; the parser would let --{name} eat the next positional"
+            );
+        }
+        for name in BOOL_FLAGS {
+            assert!(
+                consumed.contains(name),
+                "BOOL_FLAGS declares --{name} but main.rs never consumes it via \
+                 args.flag(); remove it or wire it up"
+            );
+        }
     }
 }

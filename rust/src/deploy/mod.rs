@@ -25,12 +25,18 @@
 //!   threads.
 //! * [`serve`] — a multi-threaded dynamically-batching request server
 //!   (workers share one `Arc` of the engine and its prepared planes)
-//!   plus the `BENCH_serve.json` throughput/latency benchmark with
-//!   p50/p95/p99 per-request latency percentiles.
+//!   behind an HTTP/1.1 network front-end
+//!   ([`serve::ingress::HttpServer`]: nonblocking accept/readiness
+//!   polling over `std::net`, keep-alive, a zero-copy lazy JSON request
+//!   codec, per-request deadlines answering 503, bounded-queue load
+//!   shedding, and a response cache) — plus the `BENCH_serve.json`
+//!   throughput/latency benchmark with p50/p95/p99 per-request latency
+//!   percentiles and the network rows (keep-alive vs connection-churn
+//!   throughput, overload p99).
 //! * [`trajectory`] — the CI perf-trajectory harness: deploy kernel
 //!   micro-benchmarks merged with the serve report into a
 //!   schema-versioned `BENCH_deploy.json`, gated against a committed
-//!   baseline.
+//!   baseline (throughput floors, tail-latency ceilings).
 //!
 //! Weight scales are per-tensor or **per-channel** (one scale per output
 //! channel) end-to-end: the exporter snaps each channel to its own grid,
@@ -62,5 +68,7 @@ pub use engine::{resolve_threads, Engine, EngineOpts, PreparedModel};
 pub use export::{export_model, ExportCfg, ExportReport};
 pub use format::{DeployLayer, DeployModel, DeployOp, Requant};
 pub use packed::Packed;
-pub use serve::{bench_serve, Server, ServeCfg, ServeReport};
+pub use serve::{
+    bench_http, bench_serve, BatchForward, HttpCfg, HttpServer, ServeCfg, ServeReport, Server,
+};
 pub use trajectory::{check_regression, run_deploy_microbench, DeployBenchReport};

@@ -1,0 +1,160 @@
+//! FIFO-bounded response cache for repeated queries.
+//!
+//! Keyed on an FNV-1a hash of the model name plus the exact input bit
+//! patterns (`f32::to_bits`, so `-0.0` and `0.0` are distinct keys and
+//! NaN payloads can't poison equality). Predictions are deterministic
+//! for a fixed packed model, so a hash hit can serve the cached
+//! response without re-running the engine; a (astronomically unlikely)
+//! 64-bit collision would serve the colliding entry's prediction —
+//! acceptable for a serving cache, not for correctness-critical paths.
+
+use std::collections::{HashMap, VecDeque};
+
+/// The cached subset of a response (latency/batch metadata is
+/// per-request, not cacheable).
+#[derive(Debug, Clone)]
+pub struct CachedResponse {
+    pub pred: usize,
+    pub logits: Vec<f32>,
+}
+
+/// Bounded map with FIFO eviction: inserting past `cap` evicts the
+/// oldest key. No recency tracking — repeated-query traffic is bursty
+/// enough that FIFO captures it without per-hit bookkeeping.
+#[derive(Debug)]
+pub struct ResponseCache {
+    cap: usize,
+    map: HashMap<u64, CachedResponse>,
+    order: VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ResponseCache {
+    pub fn new(cap: usize) -> ResponseCache {
+        ResponseCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// FNV-1a over the model name and input bit patterns.
+    pub fn key(model: &str, input: &[f32]) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        for &b in model.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h ^= 0xff; // separator so ("ab", [..]) != ("a", [b-led input])
+        h = h.wrapping_mul(PRIME);
+        for &v in input {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        }
+        h
+    }
+
+    pub fn get(&mut self, key: u64) -> Option<CachedResponse> {
+        match self.map.get(&key) {
+            Some(v) => {
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, key: u64, v: CachedResponse) {
+        if self.map.insert(key, v).is_some() {
+            return; // overwrite: already in the order queue
+        }
+        self.order.push_back(key);
+        while self.map.len() > self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_put_and_counters() {
+        let mut c = ResponseCache::new(8);
+        let k = ResponseCache::key("tiny", &[1.0, 2.0]);
+        assert!(c.get(k).is_none());
+        c.put(k, CachedResponse { pred: 2, logits: vec![0.0, 0.0, 1.0] });
+        let hit = c.get(k).expect("hit");
+        assert_eq!(hit.pred, 2);
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn keys_separate_model_and_bits() {
+        let a = ResponseCache::key("m", &[1.0]);
+        assert_ne!(a, ResponseCache::key("n", &[1.0]));
+        assert_ne!(a, ResponseCache::key("m", &[1.0 + f32::EPSILON]));
+        assert_ne!(ResponseCache::key("m", &[0.0]), ResponseCache::key("m", &[-0.0]));
+        assert_eq!(a, ResponseCache::key("m", &[1.0]));
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_at_cap() {
+        let mut c = ResponseCache::new(2);
+        let keys: Vec<u64> = (0..3).map(|i| ResponseCache::key("m", &[i as f32])).collect();
+        for &k in &keys {
+            c.put(k, CachedResponse { pred: 0, logits: vec![] });
+        }
+        assert_eq!(c.len(), 2);
+        assert!(c.get(keys[0]).is_none(), "oldest entry must be evicted");
+        assert!(c.get(keys[1]).is_some());
+        assert!(c.get(keys[2]).is_some());
+    }
+
+    #[test]
+    fn overwrite_does_not_grow_order_queue() {
+        let mut c = ResponseCache::new(2);
+        let k = ResponseCache::key("m", &[5.0]);
+        for pred in 0..10 {
+            c.put(k, CachedResponse { pred, logits: vec![] });
+        }
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(k).unwrap().pred, 9);
+        // the repeatedly-overwritten key must not evict itself
+        let k2 = ResponseCache::key("m", &[6.0]);
+        c.put(k2, CachedResponse { pred: 1, logits: vec![] });
+        assert!(c.get(k).is_some());
+        assert!(c.get(k2).is_some());
+    }
+}

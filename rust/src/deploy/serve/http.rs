@@ -1,0 +1,591 @@
+//! HTTP/1.1 wire handling + the zero-copy lazy JSON request codec.
+//!
+//! Parsing is incremental: the ingress poller feeds whatever bytes a
+//! nonblocking read produced into [`parse_request`], which answers
+//! `NeedMore` until a full head+body is buffered. Responses are
+//! written with explicit `Content-Length` (no chunked encoding), so
+//! keep-alive framing is trivial on both sides.
+//!
+//! The request codec never builds a [`crate::json::Json`] tree: a
+//! predict body is one object whose only interesting fields are
+//! `model` (small string), `input` (a large float array — the bulk of
+//! the bytes), and optionally `deadline_ms`. [`lazy_field`] scans the
+//! top-level object for one key, skipping other values structurally,
+//! and [`lazy_f32s`] parses the float array straight out of the byte
+//! span — no intermediate `Json::Num` boxing per element. The
+//! `http_json_lazy` vs `http_json_tree` microbench rows quantify the
+//! win.
+
+use crate::json;
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::ops::Range;
+
+/// Headers larger than this are refused with 431.
+pub const MAX_HEAD: usize = 16 * 1024;
+
+/// One parsed request head (+ located body) inside the connection's
+/// read buffer. Ranges index into the buffer passed to
+/// [`parse_request`]; `consumed` is how many bytes the request spans
+/// so the poller can drain them and keep any pipelined remainder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedReq {
+    pub method: String,
+    /// path with any `?query` stripped
+    pub path: String,
+    pub keep_alive: bool,
+    /// `X-Deadline-Ms` header when present
+    pub deadline_ms: Option<u64>,
+    pub content_len: usize,
+    pub body: Range<usize>,
+    pub consumed: usize,
+}
+
+/// Incremental parse outcome.
+#[derive(Debug)]
+pub enum Parse {
+    /// not enough bytes buffered yet
+    NeedMore,
+    /// malformed or over-limit; answer `status` and close
+    Bad { status: u16, msg: String },
+    Ready(ParsedReq),
+}
+
+fn bad(status: u16, msg: &str) -> Parse {
+    Parse::Bad { status, msg: msg.to_string() }
+}
+
+/// Find the end of the header block: `\r\n\r\n` (or bare `\n\n` from
+/// sloppy clients). Returns (head_end, body_start).
+fn head_end(buf: &[u8]) -> Option<(usize, usize)> {
+    for i in 0..buf.len().saturating_sub(1) {
+        if buf[i] == b'\n' {
+            if buf[i + 1] == b'\n' {
+                return Some((i + 1, i + 2));
+            }
+            if i + 3 < buf.len() + 1 && buf[i + 1] == b'\r' && buf.get(i + 2) == Some(&b'\n') {
+                return Some((i + 1, i + 3));
+            }
+        }
+    }
+    None
+}
+
+/// Parse one request from the front of `buf`. `max_body` caps the
+/// declared `Content-Length` (413 beyond it).
+pub fn parse_request(buf: &[u8], max_body: usize) -> Parse {
+    let Some((head_stop, body_start)) = head_end(buf) else {
+        if buf.len() > MAX_HEAD {
+            return bad(431, "header block too large");
+        }
+        return Parse::NeedMore;
+    };
+    if head_stop > MAX_HEAD {
+        return bad(431, "header block too large");
+    }
+    let Ok(head) = std::str::from_utf8(&buf[..head_stop]) else {
+        return bad(400, "non-utf8 header block");
+    };
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let req_line = lines.next().unwrap_or("");
+    let mut parts = req_line.split(' ').filter(|p| !p.is_empty());
+    let (Some(method), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return bad(400, "malformed request line");
+    };
+    if !version.starts_with("HTTP/1.") {
+        return bad(505, "only HTTP/1.x is supported");
+    }
+    // keep-alive is the HTTP/1.1 default; 1.0 defaults to close
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_len = 0usize;
+    let mut deadline_ms = None;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        } else if name.eq_ignore_ascii_case("content-length") {
+            match value.parse::<usize>() {
+                Ok(n) => content_len = n,
+                Err(_) => return bad(400, "bad content-length"),
+            }
+        } else if name.eq_ignore_ascii_case("x-deadline-ms") {
+            match value.parse::<u64>() {
+                Ok(n) => deadline_ms = Some(n),
+                Err(_) => return bad(400, "bad x-deadline-ms"),
+            }
+        }
+    }
+    if content_len > max_body {
+        return bad(413, "request body too large");
+    }
+    if buf.len() < body_start + content_len {
+        return Parse::NeedMore;
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    Parse::Ready(ParsedReq {
+        method: method.to_string(),
+        path,
+        keep_alive,
+        deadline_ms,
+        content_len,
+        body: body_start..body_start + content_len,
+        consumed: body_start + content_len,
+    })
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Append one full response (head + body) to `out`.
+pub fn write_response(
+    out: &mut Vec<u8>,
+    status: u16,
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+    body: &[u8],
+) {
+    out.extend_from_slice(format!("HTTP/1.1 {} {}\r\n", status, status_text(status)).as_bytes());
+    out.extend_from_slice(b"Content-Type: application/json\r\n");
+    out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+    out.extend_from_slice(if keep_alive {
+        b"Connection: keep-alive\r\n"
+    } else {
+        b"Connection: close\r\n"
+    });
+    for (k, v) in extra {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+}
+
+/// JSON error-body helper: `{"error":"..."}`.
+pub fn error_body(msg: &str) -> Vec<u8> {
+    let mut s = String::from("{\"error\":");
+    let mut q = String::new();
+    json_escape_into(&mut q, msg);
+    s.push_str(&q);
+    s.push('}');
+    s.into_bytes()
+}
+
+fn json_escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+// ---------------------------------------------------------------------------
+// lazy JSON request codec
+// ---------------------------------------------------------------------------
+
+fn lazy_err<T>(at: usize, msg: &str) -> Result<T, String> {
+    Err(format!("body byte {at}: {msg}"))
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Span of the raw string token starting at `i` (which must be `"`),
+/// honoring backslash escapes. Returns (content_range, one_past_close).
+fn raw_string_span(b: &[u8], i: usize) -> Result<(Range<usize>, usize), String> {
+    if b.get(i) != Some(&b'"') {
+        return lazy_err(i, "expected string");
+    }
+    let start = i + 1;
+    let mut j = start;
+    while j < b.len() {
+        match b[j] {
+            b'"' => return Ok((start..j, j + 1)),
+            b'\\' => j += 2,
+            _ => j += 1,
+        }
+    }
+    lazy_err(i, "unterminated string")
+}
+
+/// One-past-the-end of the JSON value starting at `i`, without decoding
+/// it: strings skip by escape-aware scan, containers by depth counting,
+/// scalars by token-character run.
+fn skip_value(b: &[u8], i: usize) -> Result<usize, String> {
+    let i = skip_ws(b, i);
+    match b.get(i) {
+        None => lazy_err(i, "expected value"),
+        Some(b'"') => raw_string_span(b, i).map(|(_, end)| end),
+        Some(&open @ (b'{' | b'[')) => {
+            let close = if open == b'{' { b'}' } else { b']' };
+            let mut depth = 0usize;
+            let mut j = i;
+            while j < b.len() {
+                match b[j] {
+                    b'"' => {
+                        let (_, end) = raw_string_span(b, j)?;
+                        j = end;
+                        continue;
+                    }
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            if b[j] != close {
+                                return lazy_err(j, "mismatched bracket");
+                            }
+                            return Ok(j + 1);
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            lazy_err(i, "unterminated container")
+        }
+        Some(_) => {
+            // number / true / false / null: consume the token run
+            let mut j = i;
+            while j < b.len()
+                && matches!(b[j],
+                    b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E'
+                    | b'a'..=b'z' | b'A'..=b'Z')
+            {
+                j += 1;
+            }
+            if j == i {
+                lazy_err(i, "expected value")
+            } else {
+                Ok(j)
+            }
+        }
+    }
+}
+
+/// Scan the top-level object in `b` for `key` and return the byte range
+/// of its raw value, or `None` when absent. Keys containing escape
+/// sequences are compared raw (so an escaped spelling of `key` won't
+/// match — predict-request keys are plain ASCII).
+pub fn lazy_field(b: &[u8], key: &str) -> Result<Option<Range<usize>>, String> {
+    let mut i = skip_ws(b, 0);
+    if b.get(i) != Some(&b'{') {
+        return lazy_err(i, "expected top-level object");
+    }
+    i = skip_ws(b, i + 1);
+    if b.get(i) == Some(&b'}') {
+        return Ok(None);
+    }
+    loop {
+        let (kspan, after_key) = raw_string_span(b, i)?;
+        i = skip_ws(b, after_key);
+        if b.get(i) != Some(&b':') {
+            return lazy_err(i, "expected ':'");
+        }
+        i = skip_ws(b, i + 1);
+        let vstart = i;
+        let vend = skip_value(b, i)?;
+        if &b[kspan.clone()] == key.as_bytes() {
+            return Ok(Some(vstart..vend));
+        }
+        i = skip_ws(b, vend);
+        match b.get(i) {
+            Some(b',') => i = skip_ws(b, i + 1),
+            Some(b'}') => return Ok(None),
+            _ => return lazy_err(i, "expected ',' or '}'"),
+        }
+    }
+}
+
+/// Parse `key`'s value as a flat float array, straight from the bytes.
+pub fn lazy_f32s(b: &[u8], key: &str) -> Result<Option<Vec<f32>>, String> {
+    let Some(span) = lazy_field(b, key)? else { return Ok(None) };
+    let v = &b[span.clone()];
+    let mut i = skip_ws(v, 0);
+    if v.get(i) != Some(&b'[') {
+        return lazy_err(span.start + i, "expected array");
+    }
+    i = skip_ws(v, i + 1);
+    let mut out = Vec::new();
+    if v.get(i) == Some(&b']') {
+        return Ok(Some(out));
+    }
+    loop {
+        let start = i;
+        while i < v.len() && matches!(v[i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+            i += 1;
+        }
+        let tok = std::str::from_utf8(&v[start..i]).map_err(|_| "non-utf8 number".to_string())?;
+        let f: f32 = tok
+            .parse()
+            .map_err(|_| format!("body byte {}: bad number {tok:?}", span.start + start))?;
+        out.push(f);
+        i = skip_ws(v, i);
+        match v.get(i) {
+            Some(b',') => i = skip_ws(v, i + 1),
+            Some(b']') => return Ok(Some(out)),
+            _ => return lazy_err(span.start + i, "expected ',' or ']'"),
+        }
+    }
+}
+
+/// Parse `key`'s value as a string (full escape decoding via the tree
+/// parser's string routine — surrogate pairs included).
+pub fn lazy_str(b: &[u8], key: &str) -> Result<Option<String>, String> {
+    let Some(span) = lazy_field(b, key)? else { return Ok(None) };
+    let at = skip_ws(b, span.start);
+    let (s, _) = json::decode_str_at(b, at).map_err(|e| e.to_string())?;
+    Ok(Some(s))
+}
+
+/// Parse `key`'s value as a non-negative integer.
+pub fn lazy_u64(b: &[u8], key: &str) -> Result<Option<u64>, String> {
+    let Some(span) = lazy_field(b, key)? else { return Ok(None) };
+    let tok = std::str::from_utf8(&b[span.clone()])
+        .map_err(|_| "non-utf8 number".to_string())?
+        .trim();
+    tok.parse::<u64>()
+        .map(Some)
+        .map_err(|_| format!("body byte {}: expected integer, got {tok:?}", span.start))
+}
+
+// ---------------------------------------------------------------------------
+// tiny client helpers (tests + benchmarks)
+// ---------------------------------------------------------------------------
+
+/// Format a POST request with a JSON body (client side).
+pub fn format_request(path: &str, body: &[u8], headers: &[(&str, &str)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 128);
+    out.extend_from_slice(format!("POST {path} HTTP/1.1\r\n").as_bytes());
+    out.extend_from_slice(b"Host: localhost\r\n");
+    out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+    for (k, v) in headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    out
+}
+
+/// One response read by the test/bench client.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// case-insensitive header lookup
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+}
+
+/// Blocking-read one full response off `stream` (requires the server's
+/// explicit `Content-Length` framing).
+pub fn read_response(stream: &mut impl Read) -> std::io::Result<ClientResponse> {
+    let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let (stop, body_start) = loop {
+        if let Some(found) = head_end(&buf) {
+            break found;
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-head"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..stop]).map_err(|_| bad("non-utf8 head"))?;
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+    let content_len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| bad("missing content-length"))?;
+    let mut body = buf[body_start..].to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_len);
+    Ok(ClientResponse { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_bytes(body: &str, extra: &str) -> Vec<u8> {
+        format!(
+            "POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n{extra}\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    #[test]
+    fn parses_full_request_with_keepalive_default() {
+        let b = req_bytes(r#"{"input":[1,2]}"#, "");
+        let Parse::Ready(r) = parse_request(&b, 1 << 20) else { panic!("not ready") };
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/predict");
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(&b[r.body.clone()], br#"{"input":[1,2]}"#);
+        assert_eq!(r.consumed, b.len());
+        assert_eq!(r.deadline_ms, None);
+    }
+
+    #[test]
+    fn connection_close_and_deadline_header() {
+        let b = req_bytes("{}", "Connection: close\r\nX-Deadline-Ms: 250\r\n");
+        let Parse::Ready(r) = parse_request(&b, 1 << 20) else { panic!("not ready") };
+        assert!(!r.keep_alive);
+        assert_eq!(r.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let b = b"GET /healthz HTTP/1.0\r\n\r\n".to_vec();
+        let Parse::Ready(r) = parse_request(&b, 1 << 20) else { panic!("not ready") };
+        assert!(!r.keep_alive);
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.content_len, 0);
+    }
+
+    #[test]
+    fn needs_more_until_complete() {
+        let full = req_bytes(r#"{"input":[1]}"#, "");
+        for cut in [3, 10, full.len() - 5, full.len() - 1] {
+            assert!(
+                matches!(parse_request(&full[..cut], 1 << 20), Parse::NeedMore),
+                "cut {cut}"
+            );
+        }
+        assert!(matches!(parse_request(&full, 1 << 20), Parse::Ready(_)));
+    }
+
+    #[test]
+    fn strips_query_and_caps_body() {
+        let b = b"GET /stats?verbose=1 HTTP/1.1\r\n\r\n".to_vec();
+        let Parse::Ready(r) = parse_request(&b, 1 << 20) else { panic!("not ready") };
+        assert_eq!(r.path, "/stats");
+        let big = req_bytes("{}", "");
+        match parse_request(&big, 1) {
+            Parse::Bad { status, .. } => assert_eq!(status, 413),
+            other => panic!("expected 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut b = b"POST / HTTP/1.1\r\n".to_vec();
+        b.extend_from_slice(format!("X-Junk: {}\r\n", "j".repeat(MAX_HEAD)).as_bytes());
+        match parse_request(&b, 1 << 20) {
+            Parse::Bad { status, .. } => assert_eq!(status, 431),
+            other => panic!("expected 431, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_reader() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, true, &[("X-Cache", "hit")], br#"{"pred":2}"#);
+        let mut cur = std::io::Cursor::new(out);
+        let r = read_response(&mut cur).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.header("x-cache"), Some("hit"));
+        assert_eq!(r.header("connection"), Some("keep-alive"));
+        assert_eq!(r.body, br#"{"pred":2}"#);
+    }
+
+    #[test]
+    fn lazy_matches_tree_extraction() {
+        let body = br#"{ "model" : "tiny", "deadline_ms": 40,
+                        "meta": {"a":[1,{"b":"}]\""}]},
+                        "input": [1.0, -2.5, 3e-1, 4, 0.125] }"#;
+        let tree = crate::json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(lazy_str(body, "model").unwrap().as_deref(), tree.get("model").as_str());
+        assert_eq!(lazy_u64(body, "deadline_ms").unwrap(), Some(40));
+        let lazy: Vec<f32> = lazy_f32s(body, "input").unwrap().unwrap();
+        let treed: Vec<f32> = tree
+            .get("input")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(lazy, treed);
+        // absent keys are None, not errors — including keys that only
+        // appear nested (the scan is strictly top-level)
+        assert_eq!(lazy_field(body, "absent").unwrap(), None);
+        assert_eq!(lazy_field(body, "a").unwrap(), None);
+        assert_eq!(lazy_field(body, "b").unwrap(), None);
+    }
+
+    #[test]
+    fn lazy_str_decodes_astral_model_names() {
+        let body = "{\"model\":\"\\ud83d\\ude00net\",\"input\":[1]}".as_bytes();
+        assert_eq!(lazy_str(body, "model").unwrap().as_deref(), Some("😀net"));
+    }
+
+    #[test]
+    fn lazy_rejects_malformed_bodies() {
+        assert!(lazy_field(b"[1,2]", "x").is_err(), "top level must be an object");
+        assert!(lazy_field(br#"{"a" 1}"#, "a").is_err());
+        assert!(lazy_f32s(br#"{"input": [1, "x"]}"#, "input").is_err());
+        assert!(lazy_f32s(br#"{"input": 3}"#, "input").is_err());
+        assert!(lazy_u64(br#"{"deadline_ms": -4}"#, "deadline_ms").is_err());
+        assert!(lazy_field(br#"{"a": "unterminated"#, "a").is_err());
+    }
+
+    #[test]
+    fn error_body_is_valid_json() {
+        let b = error_body("bad \"input\"\nwidth");
+        let j = crate::json::parse(std::str::from_utf8(&b).unwrap()).unwrap();
+        assert_eq!(j.get("error").as_str(), Some("bad \"input\"\nwidth"));
+    }
+}

@@ -1,0 +1,877 @@
+//! Nonblocking TCP ingress: accept loop, readiness polling, and the
+//! HTTP front-end event loop over the batching [`Server`].
+//!
+//! Dependency-light by design: a single event-loop thread drives
+//! nonblocking `std::net` sockets — accept until `WouldBlock`, then for
+//! every connection flush pending writes, poll the in-flight response
+//! channel, read whatever bytes arrived, and parse/route complete
+//! requests. When one full sweep makes no progress the loop sleeps a
+//! few hundred microseconds instead of spinning. That is a hand-rolled
+//! readiness poller, not epoll — plenty for the benchmark fleet sizes
+//! this repo serves (hundreds of connections), and zero new deps.
+//!
+//! Robustness properties the raw channel server lacked:
+//! - **deadlines**: a request carrying `X-Deadline-Ms` (or a
+//!   `deadline_ms` body field, or the server default) answers `503`
+//!   once the budget passes instead of queueing forever; an explicit
+//!   budget of `0` sheds immediately and deterministically
+//! - **admission control**: the bounded ingress queue sheds with a fast
+//!   `503` + `X-Shed: queue` under overload rather than collapsing
+//! - **response cache**: repeated queries (same model + input bits) are
+//!   answered from the FIFO [`ResponseCache`] without touching the pool
+//! - **fail-fast on a dead pool**: a panicked worker pool turns into
+//!   `503` + connection close, never a hang
+
+use super::cache::{CachedResponse, ResponseCache};
+use super::http::{self, Parse, ParsedReq};
+use super::{percentile, BatchForward, ServeCfg, Server};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// HTTP front-end knobs (the pool behind it is shaped by [`ServeCfg`]).
+#[derive(Debug, Clone)]
+pub struct HttpCfg {
+    /// bind address; port 0 picks an ephemeral port
+    pub addr: String,
+    /// deadline applied when a request carries none (0 = no deadline)
+    pub default_deadline_ms: u64,
+    /// response-cache capacity (0 disables the cache)
+    pub cache_cap: usize,
+    /// connections beyond this are answered 503 and closed
+    pub max_conns: usize,
+    /// request bodies beyond this are answered 413
+    pub max_body: usize,
+    /// idle keep-alive connections are dropped after this long
+    pub idle_timeout: Duration,
+}
+
+impl Default for HttpCfg {
+    fn default() -> Self {
+        HttpCfg {
+            addr: "127.0.0.1:0".to_string(),
+            default_deadline_ms: 0,
+            cache_cap: 1024,
+            max_conns: 256,
+            max_body: 4 << 20,
+            idle_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Front-end counters (the pool's own counters live in `ServeStats`).
+#[derive(Debug, Default)]
+pub struct HttpStats {
+    pub conns: AtomicU64,
+    pub reqs: AtomicU64,
+    pub ok: AtomicU64,
+    /// 4xx answers (malformed bodies, unknown models, bad widths)
+    pub bad: AtomicU64,
+    /// 503s from full-queue admission control
+    pub shed_queue: AtomicU64,
+    /// 503s from expired deadlines
+    pub shed_deadline: AtomicU64,
+    pub cache_hits: AtomicU64,
+    /// 500s (engine failure mid-batch)
+    pub failed: AtomicU64,
+}
+
+impl HttpStats {
+    fn to_json_body(&self) -> Vec<u8> {
+        let pairs = [
+            ("conns", &self.conns),
+            ("reqs", &self.reqs),
+            ("ok", &self.ok),
+            ("bad", &self.bad),
+            ("shed_queue", &self.shed_queue),
+            ("shed_deadline", &self.shed_deadline),
+            ("cache_hits", &self.cache_hits),
+            ("failed", &self.failed),
+        ];
+        let mut s = String::from("{");
+        for (i, (k, v)) in pairs.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\"{k}\":{}", v.load(Ordering::Relaxed)));
+        }
+        s.push('}');
+        s.into_bytes()
+    }
+}
+
+/// A running HTTP front-end (event-loop thread + batching pool).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: JoinHandle<()>,
+    stats: Arc<HttpStats>,
+}
+
+impl HttpServer {
+    /// Bind `http_cfg.addr`, spawn the event loop (which owns a
+    /// [`Server`] pool over `fwd`), and return once accepting.
+    pub fn start(
+        fwd: Arc<dyn BatchForward>,
+        serve_cfg: &ServeCfg,
+        http_cfg: &HttpCfg,
+    ) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&http_cfg.addr)
+            .with_context(|| format!("bind {}", http_cfg.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(HttpStats::default());
+        let serve_cfg = serve_cfg.clone();
+        let cfg = http_cfg.clone();
+        let loop_stop = stop.clone();
+        let loop_stats = stats.clone();
+        let thread = std::thread::spawn(move || {
+            event_loop(listener, fwd, serve_cfg, cfg, loop_stop, loop_stats);
+        });
+        Ok(HttpServer { addr, stop, thread, stats })
+    }
+
+    /// The bound address (with the resolved ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &HttpStats {
+        &self.stats
+    }
+
+    /// Signal the event loop and join it (drains the pool too).
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = self.thread.join();
+    }
+}
+
+/// The in-flight request of one connection: the pool's response channel
+/// plus everything needed to render the answer.
+struct Pending {
+    rx: mpsc::Receiver<super::Response>,
+    deadline: Option<Instant>,
+    keep_alive: bool,
+    cache_key: Option<u64>,
+}
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pending: Option<Pending>,
+    last_active: Instant,
+    close_after_write: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn queue(&mut self, status: u16, keep_alive: bool, extra: &[(&str, &str)], body: &[u8]) {
+        http::write_response(&mut self.wbuf, status, keep_alive, extra, body);
+        if !keep_alive {
+            self.close_after_write = true;
+        }
+    }
+}
+
+fn predict_body(pred: usize, logits: &[f32], batch_size: usize, cached: bool) -> Vec<u8> {
+    let mut s = format!("{{\"pred\":{pred},\"logits\":[");
+    for (i, v) in logits.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str(&format!("],\"batch_size\":{batch_size},\"cached\":{cached}}}"));
+    s.into_bytes()
+}
+
+struct EventLoop {
+    server: Server,
+    fwd: Arc<dyn BatchForward>,
+    cache: Option<ResponseCache>,
+    cfg: HttpCfg,
+    stats: Arc<HttpStats>,
+}
+
+impl EventLoop {
+    /// Route one complete request: either queues a response into the
+    /// write buffer or parks a [`Pending`] on the connection.
+    fn route(&mut self, conn: &mut Conn, req: &ParsedReq, body: &[u8]) {
+        self.stats.reqs.fetch_add(1, Ordering::Relaxed);
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/predict" | "/predict") => self.predict(conn, req, body),
+            ("GET", "/healthz") => {
+                let b = format!(
+                    "{{\"ok\":true,\"model\":{},\"pool_dead\":{}}}",
+                    json_quote(self.fwd.model_name()),
+                    self.server.is_dead()
+                );
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                conn.queue(200, req.keep_alive, &[], b.as_bytes());
+            }
+            ("GET", "/stats") => {
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                let b = self.stats.to_json_body();
+                conn.queue(200, req.keep_alive, &[], &b);
+            }
+            ("POST" | "GET", _) => {
+                self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                conn.queue(404, req.keep_alive, &[], &http::error_body("no such route"));
+            }
+            _ => {
+                self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                conn.queue(405, req.keep_alive, &[], &http::error_body("method not allowed"));
+            }
+        }
+    }
+
+    fn predict(&mut self, conn: &mut Conn, req: &ParsedReq, body: &[u8]) {
+        let ka = req.keep_alive;
+        let mut bad = |conn: &mut Conn, status: u16, msg: &str| {
+            self.stats.bad.fetch_add(1, Ordering::Relaxed);
+            conn.queue(status, ka, &[], &http::error_body(msg));
+        };
+        // model: optional; when present it must name the served model
+        match http::lazy_str(body, "model") {
+            Err(e) => return bad(conn, 400, &format!("bad model field: {e}")),
+            Ok(Some(m)) if m != self.fwd.model_name() => {
+                return bad(conn, 404, &format!("unknown model {m:?}"))
+            }
+            Ok(_) => {}
+        }
+        let input = match http::lazy_f32s(body, "input") {
+            Err(e) => return bad(conn, 400, &format!("bad input field: {e}")),
+            Ok(None) => return bad(conn, 400, "missing input field"),
+            Ok(Some(x)) => x,
+        };
+        let d_in = self.fwd.d_in();
+        if input.len() != d_in {
+            return bad(
+                conn,
+                400,
+                &format!("input has {} features, model wants {d_in}", input.len()),
+            );
+        }
+        // deadline priority: header, then body field, then server default
+        let requested_ms = match req.deadline_ms {
+            Some(ms) => Some(ms),
+            None => match http::lazy_u64(body, "deadline_ms") {
+                Err(e) => return bad(conn, 400, &format!("bad deadline_ms field: {e}")),
+                Ok(v) => v,
+            },
+        };
+        let effective_ms = requested_ms.or_else(|| {
+            (self.cfg.default_deadline_ms > 0).then_some(self.cfg.default_deadline_ms)
+        });
+        // an explicit zero budget is already expired: shed deterministically
+        if effective_ms == Some(0) {
+            self.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            conn.queue(
+                503,
+                ka,
+                &[("X-Shed", "deadline")],
+                &http::error_body("deadline expired"),
+            );
+            return;
+        }
+        let deadline = effective_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        let cache_key = self
+            .cache
+            .as_ref()
+            .map(|_| ResponseCache::key(self.fwd.model_name(), &input));
+        if let (Some(cache), Some(key)) = (self.cache.as_mut(), cache_key) {
+            if let Some(hit) = cache.get(key) {
+                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                let b = predict_body(hit.pred, &hit.logits, 0, true);
+                conn.queue(200, ka, &[("X-Cache", "hit")], &b);
+                return;
+            }
+        }
+        match self.server.try_submit(input, deadline) {
+            Ok(Some(rx)) => {
+                conn.pending = Some(Pending { rx, deadline, keep_alive: ka, cache_key });
+            }
+            Ok(None) => {
+                // queue full: shed with a fast error instead of blocking
+                self.stats.shed_queue.fetch_add(1, Ordering::Relaxed);
+                conn.queue(503, ka, &[("X-Shed", "queue")], &http::error_body("server overloaded"));
+            }
+            Err(e) => {
+                // dead pool (or rejected input): fail fast and close
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                conn.queue(503, false, &[], &http::error_body(&format!("{e:#}")));
+            }
+        }
+    }
+
+    /// Poll a connection's in-flight response. Returns true on progress.
+    fn poll_pending(&mut self, conn: &mut Conn) -> bool {
+        let Some(p) = &conn.pending else { return false };
+        match p.rx.try_recv() {
+            Ok(resp) => {
+                let p = conn.pending.take().expect("pending just matched");
+                if let (Some(cache), Some(key)) = (self.cache.as_mut(), p.cache_key) {
+                    cache.put(key, CachedResponse { pred: resp.pred, logits: resp.logits.clone() });
+                }
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                let b = predict_body(resp.pred, &resp.logits, resp.batch_size, false);
+                conn.queue(200, p.keep_alive, &[("X-Cache", "miss")], &b);
+                true
+            }
+            Err(mpsc::TryRecvError::Empty) => {
+                // enforce the deadline from the ingress clock too, so a
+                // stalled pool can't hold a deadlined request hostage
+                if p.deadline.is_some_and(|d| Instant::now() > d) {
+                    let p = conn.pending.take().expect("pending just matched");
+                    self.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    conn.queue(
+                        503,
+                        p.keep_alive,
+                        &[("X-Shed", "deadline")],
+                        &http::error_body("deadline expired"),
+                    );
+                    true
+                } else {
+                    false
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                // the job was dropped: expired in the worker (answer 503)
+                // or its batch failed in the engine (answer 500 + close)
+                let p = conn.pending.take().expect("pending just matched");
+                if p.deadline.is_some() {
+                    self.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    conn.queue(
+                        503,
+                        p.keep_alive,
+                        &[("X-Shed", "deadline")],
+                        &http::error_body("deadline expired"),
+                    );
+                } else {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    conn.queue(500, false, &[], &http::error_body("inference failed"));
+                }
+                true
+            }
+        }
+    }
+}
+
+fn json_quote(s: &str) -> String {
+    crate::json::to_string(&crate::json::Json::Str(s.to_string()))
+}
+
+fn event_loop(
+    listener: TcpListener,
+    fwd: Arc<dyn BatchForward>,
+    serve_cfg: ServeCfg,
+    cfg: HttpCfg,
+    stop: Arc<AtomicBool>,
+    stats: Arc<HttpStats>,
+) {
+    let server = Server::start_with(fwd.clone(), &serve_cfg);
+    let cache = (cfg.cache_cap > 0).then(|| ResponseCache::new(cfg.cache_cap));
+    let mut el = EventLoop { server, fwd, cache, cfg, stats };
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut chunk = [0u8; 16 * 1024];
+    while !stop.load(Ordering::Acquire) {
+        let mut progress = false;
+        // 1. accept everything that's ready
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progress = true;
+                    el.stats.conns.fetch_add(1, Ordering::Relaxed);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let mut conn = Conn {
+                        stream,
+                        rbuf: Vec::new(),
+                        wbuf: Vec::new(),
+                        wpos: 0,
+                        pending: None,
+                        last_active: Instant::now(),
+                        close_after_write: false,
+                        dead: false,
+                    };
+                    if conns.len() >= el.cfg.max_conns {
+                        conn.queue(503, false, &[], &http::error_body("too many connections"));
+                    }
+                    conns.push(conn);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        // 2. sweep every connection
+        for conn in conns.iter_mut() {
+            // flush queued response bytes (partial-write safe)
+            while conn.wpos < conn.wbuf.len() {
+                match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => {
+                        conn.dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.wpos += n;
+                        conn.last_active = Instant::now();
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            if conn.wpos == conn.wbuf.len() && !conn.wbuf.is_empty() {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+                if conn.close_after_write {
+                    conn.dead = true;
+                }
+            }
+            if conn.dead {
+                continue;
+            }
+            // poll the in-flight response
+            if el.poll_pending(conn) {
+                progress = true;
+                conn.last_active = Instant::now();
+            }
+            // read whatever arrived
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        // peer closed its write side; finish what's queued
+                        if conn.pending.is_none() && conn.wbuf.is_empty() {
+                            conn.dead = true;
+                        }
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&chunk[..n]);
+                        conn.last_active = Instant::now();
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            if conn.dead {
+                continue;
+            }
+            // parse + route complete requests, one in-flight at a time so
+            // pipelined responses keep request order
+            while conn.pending.is_none() && !conn.close_after_write {
+                match http::parse_request(&conn.rbuf, el.cfg.max_body) {
+                    Parse::NeedMore => break,
+                    Parse::Bad { status, msg } => {
+                        el.stats.bad.fetch_add(1, Ordering::Relaxed);
+                        conn.rbuf.clear();
+                        conn.queue(status, false, &[], &http::error_body(&msg));
+                        progress = true;
+                        break;
+                    }
+                    Parse::Ready(req) => {
+                        let body: Vec<u8> = conn.rbuf[req.body.clone()].to_vec();
+                        conn.rbuf.drain(..req.consumed);
+                        el.route(conn, &req, &body);
+                        progress = true;
+                    }
+                }
+            }
+        }
+        // 3. drop dead and idle connections
+        let idle = el.cfg.idle_timeout;
+        conns.retain(|c| {
+            !c.dead
+                && !(c.pending.is_none()
+                    && c.wbuf.is_empty()
+                    && c.last_active.elapsed() > idle)
+        });
+        if !progress {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+    drop(conns);
+    el.server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// network-level benchmark
+// ---------------------------------------------------------------------------
+
+/// Network benchmark rows merged into BENCH_serve.json.
+#[derive(Debug, Clone)]
+pub struct HttpBenchReport {
+    pub keepalive_requests: usize,
+    pub keepalive_rps: f64,
+    pub keepalive_p99_ms: f64,
+    pub churn_requests: usize,
+    pub churn_rps: f64,
+    pub overload_requests: usize,
+    pub overload_ok: usize,
+    pub overload_shed: usize,
+    pub overload_p99_ms: f64,
+}
+
+impl HttpBenchReport {
+    /// Flat `http_*` keys, merged beside the channel-level serve rows.
+    pub fn merge_into(&self, o: &mut BTreeMap<String, crate::json::Json>) {
+        use crate::json::Json;
+        o.insert("http_keepalive_requests".into(), Json::Num(self.keepalive_requests as f64));
+        o.insert("http_keepalive_rps".into(), Json::Num(self.keepalive_rps));
+        o.insert("http_keepalive_p99_ms".into(), Json::Num(self.keepalive_p99_ms));
+        o.insert("http_churn_requests".into(), Json::Num(self.churn_requests as f64));
+        o.insert("http_churn_rps".into(), Json::Num(self.churn_rps));
+        o.insert("http_overload_requests".into(), Json::Num(self.overload_requests as f64));
+        o.insert("http_overload_ok".into(), Json::Num(self.overload_ok as f64));
+        o.insert("http_overload_shed".into(), Json::Num(self.overload_shed as f64));
+        o.insert("http_overload_p99_ms".into(), Json::Num(self.overload_p99_ms));
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "http: keep-alive {:.0} req/s (p99 {:.2}ms, {} reqs), churn {:.0} req/s ({} reqs), \
+             overload p99 {:.2}ms ({} ok / {} shed of {})",
+            self.keepalive_rps,
+            self.keepalive_p99_ms,
+            self.keepalive_requests,
+            self.churn_rps,
+            self.churn_requests,
+            self.overload_p99_ms,
+            self.overload_ok,
+            self.overload_shed,
+            self.overload_requests
+        )
+    }
+}
+
+fn bench_input(d_in: usize, seed: usize) -> Vec<f32> {
+    (0..d_in).map(|i| ((seed * 31 + i * 7) % 13) as f32 * 0.25).collect()
+}
+
+fn bench_body(model: &str, input: &[f32]) -> Vec<u8> {
+    let mut s = format!("{{\"model\":{},\"input\":[", json_quote(model));
+    for (i, v) in input.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s.into_bytes()
+}
+
+fn send_one(
+    stream: &mut TcpStream,
+    path: &str,
+    body: &[u8],
+) -> std::io::Result<(u16, Duration)> {
+    let req = http::format_request(path, body, &[]);
+    let t0 = Instant::now();
+    stream.write_all(&req)?;
+    let resp = http::read_response(stream)?;
+    Ok((resp.status, t0.elapsed()))
+}
+
+/// A [`BatchForward`] wrapper that slows every batch down, to model a
+/// heavier engine than the microscopic bench model and make the
+/// overload scenario actually saturate the queue.
+struct Throttled {
+    inner: Arc<dyn BatchForward>,
+    delay: Duration,
+}
+
+impl BatchForward for Throttled {
+    fn d_in(&self) -> usize {
+        self.inner.d_in()
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn model_name(&self) -> &str {
+        self.inner.model_name()
+    }
+    fn forward_batch(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.forward_batch(x, b)
+    }
+}
+
+/// The three network scenarios: keep-alive throughput, connection-churn
+/// throughput, and tail latency under ~2x queue-capacity overload.
+pub fn bench_http(
+    fwd: Arc<dyn BatchForward>,
+    serve_cfg: &ServeCfg,
+    smoke: bool,
+) -> Result<HttpBenchReport> {
+    let model = fwd.model_name().to_string();
+    let d_in = fwd.d_in();
+    // cache off: the benchmark measures the serving path, not the cache
+    let http_cfg = HttpCfg { cache_cap: 0, ..HttpCfg::default() };
+
+    // --- scenario 1: keep-alive connections, sequential requests each
+    let (n_conns, per_conn) = if smoke { (3, 32) } else { (4, 192) };
+    let srv = HttpServer::start(fwd.clone(), serve_cfg, &http_cfg)?;
+    let addr = srv.addr();
+    let t0 = Instant::now();
+    let mut ka_lat: Vec<f64> = std::thread::scope(|s| -> Result<Vec<f64>> {
+        let handles: Vec<_> = (0..n_conns)
+            .map(|c| {
+                let model = model.clone();
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut stream = TcpStream::connect(addr).context("connect")?;
+                    let _ = stream.set_nodelay(true);
+                    let mut lat = Vec::with_capacity(per_conn);
+                    for r in 0..per_conn {
+                        let body = bench_body(&model, &bench_input(d_in, c * per_conn + r));
+                        let (status, dt) = send_one(&mut stream, "/v1/predict", &body)?;
+                        anyhow::ensure!(status == 200, "keep-alive request got {status}");
+                        lat.push(dt.as_secs_f64() * 1e3);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("client thread panicked")?);
+        }
+        Ok(all)
+    })?;
+    let ka_wall = t0.elapsed().as_secs_f64();
+    srv.stop();
+    ka_lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let keepalive_requests = n_conns * per_conn;
+    let keepalive_rps = keepalive_requests as f64 / ka_wall.max(1e-9);
+    let keepalive_p99_ms = percentile(&ka_lat, 0.99);
+
+    // --- scenario 2: one fresh connection per request (churn)
+    let (churn_conns, churn_per) = if smoke { (3, 16) } else { (4, 64) };
+    let srv = HttpServer::start(fwd.clone(), serve_cfg, &http_cfg)?;
+    let addr = srv.addr();
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = (0..churn_conns)
+            .map(|c| {
+                let model = model.clone();
+                s.spawn(move || -> Result<()> {
+                    for r in 0..churn_per {
+                        let mut stream = TcpStream::connect(addr).context("connect")?;
+                        let _ = stream.set_nodelay(true);
+                        let body = bench_body(&model, &bench_input(d_in, c * churn_per + r));
+                        let (status, _) = send_one(&mut stream, "/v1/predict", &body)?;
+                        anyhow::ensure!(status == 200, "churn request got {status}");
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let churn_wall = t0.elapsed().as_secs_f64();
+    srv.stop();
+    let churn_requests = churn_conns * churn_per;
+    let churn_rps = churn_requests as f64 / churn_wall.max(1e-9);
+
+    // --- scenario 3: overload at ~2x queue capacity. A throttled
+    // forward (so the tiny bench model behaves like a real engine) with
+    // a deliberately small queue; twice that many concurrent clients.
+    // Every answer must be a 200 or a fast 503 — the p99 over *all*
+    // requests is the row the baseline gates (bounded, no collapse).
+    let q = if smoke { 4 } else { 8 };
+    let throttled: Arc<dyn BatchForward> = Arc::new(Throttled {
+        inner: fwd,
+        delay: Duration::from_millis(2),
+    });
+    let overload_serve = ServeCfg { workers: 1, max_batch: 1, queue_cap: q };
+    let srv = HttpServer::start(throttled, &overload_serve, &http_cfg)?;
+    let addr = srv.addr();
+    let clients = 2 * (q + 4); // ~2x the pool's total in-flight capacity
+    let per_client = if smoke { 4 } else { 8 };
+    let results: Vec<(u16, f64)> = std::thread::scope(|s| -> Result<Vec<(u16, f64)>> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let model = model.clone();
+                s.spawn(move || -> Result<Vec<(u16, f64)>> {
+                    let mut stream = TcpStream::connect(addr).context("connect")?;
+                    let _ = stream.set_nodelay(true);
+                    let mut out = Vec::with_capacity(per_client);
+                    for r in 0..per_client {
+                        let body = bench_body(&model, &bench_input(d_in, c * per_client + r));
+                        let (status, dt) = send_one(&mut stream, "/v1/predict", &body)?;
+                        anyhow::ensure!(
+                            status == 200 || status == 503,
+                            "overload request got {status}"
+                        );
+                        out.push((status, dt.as_secs_f64() * 1e3));
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("client thread panicked")?);
+        }
+        Ok(all)
+    })?;
+    srv.stop();
+    let overload_ok = results.iter().filter(|(s, _)| *s == 200).count();
+    let overload_shed = results.len() - overload_ok;
+    let mut ov_lat: Vec<f64> = results.iter().map(|(_, l)| *l).collect();
+    ov_lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let overload_p99_ms = percentile(&ov_lat, 0.99);
+
+    Ok(HttpBenchReport {
+        keepalive_requests,
+        keepalive_rps,
+        keepalive_p99_ms,
+        churn_requests,
+        churn_rps,
+        overload_requests: results.len(),
+        overload_ok,
+        overload_shed,
+        overload_p99_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{one_hot_block, tiny_model};
+    use super::*;
+    use crate::deploy::engine::Engine;
+
+    fn start_tiny(serve: &ServeCfg, http_cfg: &HttpCfg) -> HttpServer {
+        let engine: Arc<dyn BatchForward> = Arc::new(Engine::new(tiny_model()));
+        HttpServer::start(engine, serve, http_cfg).expect("server start")
+    }
+
+    fn predict_req(input: &[f32], extra: &[(&str, &str)]) -> Vec<u8> {
+        http::format_request("/v1/predict", &bench_body("tiny", input), extra)
+    }
+
+    #[test]
+    fn keepalive_connection_serves_multiple_predictions() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        for c in 0..3 {
+            stream.write_all(&predict_req(&one_hot_block(c), &[])).unwrap();
+            let resp = http::read_response(&mut stream).unwrap();
+            assert_eq!(resp.status, 200);
+            let j = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(j.get("pred").as_usize(), Some(c), "class {c}");
+            assert_eq!(j.get("logits").as_arr().unwrap().len(), 3);
+            assert_eq!(resp.header("connection"), Some("keep-alive"));
+        }
+        assert_eq!(srv.stats().ok.load(Ordering::Relaxed), 3);
+        srv.stop();
+    }
+
+    #[test]
+    fn zero_deadline_sheds_with_503() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        stream
+            .write_all(&predict_req(&one_hot_block(0), &[("X-Deadline-Ms", "0")]))
+            .unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("x-shed"), Some("deadline"));
+        // the connection survives the shed: a normal request still works
+        stream.write_all(&predict_req(&one_hot_block(2), &[])).unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(srv.stats().shed_deadline.load(Ordering::Relaxed), 1);
+        srv.stop();
+    }
+
+    #[test]
+    fn repeated_query_hits_the_cache() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        stream.write_all(&predict_req(&one_hot_block(1), &[])).unwrap();
+        let first = http::read_response(&mut stream).unwrap();
+        assert_eq!(first.status, 200);
+        assert_eq!(first.header("x-cache"), Some("miss"));
+        stream.write_all(&predict_req(&one_hot_block(1), &[])).unwrap();
+        let second = http::read_response(&mut stream).unwrap();
+        assert_eq!(second.status, 200);
+        assert_eq!(second.header("x-cache"), Some("hit"));
+        let j = crate::json::parse(std::str::from_utf8(&second.body).unwrap()).unwrap();
+        assert_eq!(j.get("pred").as_usize(), Some(1));
+        assert_eq!(j.get("cached"), &crate::json::Json::Bool(true));
+        assert_eq!(srv.stats().cache_hits.load(Ordering::Relaxed), 1);
+        srv.stop();
+    }
+
+    #[test]
+    fn bad_requests_get_4xx_not_hangs() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        // wrong width
+        stream.write_all(&predict_req(&[1.0, 2.0], &[])).unwrap();
+        assert_eq!(http::read_response(&mut stream).unwrap().status, 400);
+        // wrong model name
+        let body = bench_body("other-model", &one_hot_block(0));
+        stream
+            .write_all(&http::format_request("/v1/predict", &body, &[]))
+            .unwrap();
+        assert_eq!(http::read_response(&mut stream).unwrap().status, 404);
+        // unknown route
+        stream
+            .write_all(&http::format_request("/nope", b"{}", &[]))
+            .unwrap();
+        assert_eq!(http::read_response(&mut stream).unwrap().status, 404);
+        // healthz still fine on the same connection
+        stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let h = http::read_response(&mut stream).unwrap();
+        assert_eq!(h.status, 200);
+        srv.stop();
+    }
+
+    #[test]
+    fn bench_http_smoke_reports_all_rows() {
+        let engine: Arc<dyn BatchForward> = Arc::new(Engine::new(tiny_model()));
+        let report = bench_http(engine, &ServeCfg::default(), true).unwrap();
+        assert!(report.keepalive_rps > 0.0);
+        assert!(report.churn_rps > 0.0);
+        assert!(report.keepalive_p99_ms > 0.0);
+        assert!(report.overload_p99_ms > 0.0);
+        assert_eq!(report.overload_ok + report.overload_shed, report.overload_requests);
+        assert!(report.overload_ok > 0, "overload run must still serve some requests");
+        let mut o = BTreeMap::new();
+        report.merge_into(&mut o);
+        for key in [
+            "http_keepalive_rps",
+            "http_churn_rps",
+            "http_overload_p99_ms",
+            "http_overload_shed",
+        ] {
+            assert!(o.contains_key(key), "missing merged row {key}");
+        }
+    }
+}

@@ -1,0 +1,866 @@
+//! Batched serving core + the HTTP/1.1 network front-end.
+//!
+//! Architecture (std channels + threads + nonblocking sockets, no
+//! external deps):
+//!
+//! ```text
+//! TCP clients --> [ingress] nonblocking accept/readiness poller
+//!                    |   HTTP/1.1 keep-alive parsing ([http]),
+//!                    |   lazy JSON request codec, per-request
+//!                    |   deadlines, queue admission control,
+//!                    |   response cache ([cache])
+//!                    v
+//! submit()/try_submit() --> ingress queue (bounded sync_channel)
+//!                 |
+//!              batcher thread: drains up to max_batch queued requests
+//!                 |            into one dynamic batch
+//!              dispatch channel
+//!                 |
+//!              worker pool (N threads, shared Mutex<Receiver>):
+//!                 drop expired jobs -> concatenate inputs ->
+//!                 forward_batch -> one Response per request
+//! ```
+//!
+//! The engine decodes each packed payload exactly once at load time
+//! (`DeployModel::prepare`); every worker clones one `Arc` whose shared
+//! `PreparedModel` planes serve all requests, so no request — and no
+//! batch — ever re-decodes weights. Dynamic batching then amortizes the
+//! remaining per-call overhead and keeps the blocked kernels fed with
+//! multi-row batches.
+//!
+//! The worker pool runs behind the small [`BatchForward`] trait (the
+//! packed [`Engine`] in production; tests substitute slow or panicking
+//! forwards), and the pool **detects its own death**: if the batcher or
+//! every worker exits — a panicking forward, for instance — a shared
+//! flag flips and [`Server::submit`] returns an error instead of
+//! blocking forever on a queue nobody drains.
+//!
+//! [`bench_serve`] drives a full open-loop benchmark over the channel
+//! core and renders the `BENCH_serve.json` report the CI perf
+//! trajectory tracks; [`ingress::bench_http`] adds the network-level
+//! rows (keep-alive vs connection churn, overload p99) on top.
+
+pub mod cache;
+pub mod http;
+pub mod ingress;
+
+pub use cache::{CachedResponse, ResponseCache};
+pub use ingress::{bench_http, HttpBenchReport, HttpCfg, HttpServer, HttpStats};
+
+use super::engine::{argmax, Engine};
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// The inference surface the serving pool drives. Production uses the
+/// packed [`Engine`]; tests plug in slow/panicking stand-ins to pin the
+/// pool's overload and failure behaviour.
+pub trait BatchForward: Send + Sync {
+    /// width of one input row
+    fn d_in(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    /// served model identifier (HTTP requests may name it explicitly)
+    fn model_name(&self) -> &str;
+    /// forward `b` rows of `d_in()` features; returns `[b*num_classes]`
+    /// logits row-major
+    fn forward_batch(&self, x: &[f32], b: usize) -> Result<Vec<f32>>;
+}
+
+impl BatchForward for Engine {
+    fn d_in(&self) -> usize {
+        self.model().d_in()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.model().num_classes
+    }
+
+    fn model_name(&self) -> &str {
+        &self.model().name
+    }
+
+    fn forward_batch(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        Engine::forward_batch(self, x, b)
+    }
+}
+
+/// Serving knobs.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// inference worker threads
+    pub workers: usize,
+    /// largest dynamic batch one worker runs
+    pub max_batch: usize,
+    /// ingress queue capacity: `submit` blocks when full (backpressure),
+    /// `try_submit` sheds (admission control)
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { workers: 4, max_batch: 16, queue_cap: 1024 }
+    }
+}
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    /// submit-to-response wall time
+    pub latency: Duration,
+    /// size of the dynamic batch this request rode in
+    pub batch_size: usize,
+}
+
+struct Job {
+    id: u64,
+    x: Vec<f32>,
+    t0: Instant,
+    /// drop unserved (closing the response channel) once this passes
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Shared serving counters.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    /// requests whose batch failed in the engine (their responses never
+    /// arrive — clients observe the closed channel)
+    pub failed: AtomicU64,
+    /// requests dropped unserved because their deadline passed while
+    /// queued (the HTTP front-end answers 503 from its own clock; raw
+    /// channel clients observe the closed response channel)
+    pub expired: AtomicU64,
+    /// most recent engine failure (jobs of a failed batch are dropped,
+    /// which closes their response channels; the cause is kept here)
+    pub last_error: Mutex<Option<String>>,
+}
+
+/// Flips the shared dead flag when the watched thread exits — by
+/// `return` or by panic unwind alike. Workers share one alive counter
+/// (the pool dies when the *last* worker exits); the batcher kills the
+/// pool on its own.
+struct PoolGuard {
+    dead: Arc<AtomicBool>,
+    alive: Option<Arc<AtomicUsize>>,
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        match &self.alive {
+            None => self.dead.store(true, Ordering::Release),
+            Some(alive) => {
+                if alive.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    self.dead.store(true, Ordering::Release);
+                }
+            }
+        }
+    }
+}
+
+/// A running server: batcher + worker pool around one shared forward.
+pub struct Server {
+    ingress: mpsc::SyncSender<Job>,
+    batcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<ServeStats>,
+    /// true once the batcher or the whole worker pool has exited;
+    /// submits fail fast instead of queueing for a dead pool
+    dead: Arc<AtomicBool>,
+    next_id: AtomicU64,
+    d_in: usize,
+}
+
+impl Server {
+    /// Spawn the batcher and worker threads over the packed engine.
+    pub fn start(engine: Arc<Engine>, cfg: &ServeCfg) -> Server {
+        Self::start_with(engine as Arc<dyn BatchForward>, cfg)
+    }
+
+    /// Spawn over any [`BatchForward`] implementation.
+    pub fn start_with(fwd: Arc<dyn BatchForward>, cfg: &ServeCfg) -> Server {
+        let d_in = fwd.d_in();
+        let num_classes = fwd.num_classes();
+        let max_batch = cfg.max_batch.max(1);
+        let n_workers = cfg.workers.max(1);
+        let stats = Arc::new(ServeStats::default());
+        let dead = Arc::new(AtomicBool::new(false));
+        let workers_alive = Arc::new(AtomicUsize::new(n_workers));
+
+        let (in_tx, in_rx) = mpsc::sync_channel::<Job>(cfg.queue_cap.max(1));
+        let (disp_tx, disp_rx) = mpsc::sync_channel::<Vec<Job>>(n_workers * 2);
+
+        let batcher_stats = stats.clone();
+        let batcher_guard = PoolGuard { dead: dead.clone(), alive: None };
+        let batcher = std::thread::spawn(move || {
+            let _guard = batcher_guard;
+            while let Ok(first) = in_rx.recv() {
+                let mut batch = vec![first];
+                while batch.len() < max_batch {
+                    match in_rx.try_recv() {
+                        Ok(job) => batch.push(job),
+                        Err(_) => break,
+                    }
+                }
+                batcher_stats.batches.fetch_add(1, Ordering::Relaxed);
+                if disp_tx.send(batch).is_err() {
+                    return; // workers gone (the guard flags the pool dead)
+                }
+            }
+            // ingress closed: disp_tx drops here and the workers drain out
+        });
+
+        let disp_rx = Arc::new(Mutex::new(disp_rx));
+        let workers = (0..n_workers)
+            .map(|_| {
+                let rx = disp_rx.clone();
+                let f = fwd.clone();
+                let st = stats.clone();
+                let guard = PoolGuard { dead: dead.clone(), alive: Some(workers_alive.clone()) };
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    loop {
+                        let got = rx.lock().expect("dispatch lock").recv();
+                        let Ok(jobs) = got else { return };
+                        // deadline shedding: a job whose deadline passed
+                        // while queued is dropped before it costs compute
+                        let now = Instant::now();
+                        let mut live = Vec::with_capacity(jobs.len());
+                        for j in jobs {
+                            if j.deadline.is_some_and(|d| now > d) {
+                                st.expired.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                live.push(j);
+                            }
+                        }
+                        if live.is_empty() {
+                            continue;
+                        }
+                        let b = live.len();
+                        let mut x = Vec::with_capacity(b * d_in);
+                        for j in &live {
+                            x.extend_from_slice(&j.x);
+                        }
+                        match f.forward_batch(&x, b) {
+                            Ok(logits) => {
+                                for (i, job) in live.into_iter().enumerate() {
+                                    let row = &logits[i * num_classes..(i + 1) * num_classes];
+                                    let resp = Response {
+                                        id: job.id,
+                                        pred: argmax(row),
+                                        logits: row.to_vec(),
+                                        latency: job.t0.elapsed(),
+                                        batch_size: b,
+                                    };
+                                    st.requests.fetch_add(1, Ordering::Relaxed);
+                                    let _ = job.tx.send(resp);
+                                }
+                            }
+                            Err(e) => {
+                                // dropping the jobs closes their response
+                                // channels; clients observe the failure and
+                                // the cause + count are preserved so the
+                                // front-end can fail loudly (non-zero exit)
+                                eprintln!("[serve] batch of {b} failed: {e}");
+                                st.failed.fetch_add(b as u64, Ordering::Relaxed);
+                                *st.last_error.lock().expect("stats lock") = Some(e.to_string());
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        Server {
+            ingress: in_tx,
+            batcher,
+            workers,
+            stats,
+            dead,
+            next_id: AtomicU64::new(0),
+            d_in,
+        }
+    }
+
+    /// True once the batcher or every worker has exited (a panicking
+    /// forward, for instance): the pool will never serve again.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Acquire)
+    }
+
+    fn make_job(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<(Job, mpsc::Receiver<Response>)> {
+        anyhow::ensure!(
+            x.len() == self.d_in,
+            "serve: request has {} features, model wants {}",
+            x.len(),
+            self.d_in
+        );
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Ok((Job { id, x, t0: Instant::now(), deadline, tx }, rx))
+    }
+
+    /// Enqueue one request; the returned channel yields its [`Response`].
+    /// Blocks when the ingress queue is full (backpressure) — but errors
+    /// out instead of blocking forever if the pool has died, so a
+    /// panicked worker pool can never strand its clients.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.submit_deadline(x, None)
+    }
+
+    /// [`Server::submit`] with a deadline: the job is dropped unserved
+    /// (its response channel closes) if the deadline passes in the queue.
+    pub fn submit_deadline(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Response>> {
+        let (mut job, rx) = self.make_job(x, deadline)?;
+        loop {
+            anyhow::ensure!(
+                !self.is_dead(),
+                "serving pool is dead (batcher or every worker exited)"
+            );
+            match self.ingress.try_send(job) {
+                Ok(()) => return Ok(rx),
+                Err(mpsc::TrySendError::Full(j)) => {
+                    job = j;
+                    // bounded backpressure wait, re-checking pool health
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    anyhow::bail!("server is shut down")
+                }
+            }
+        }
+    }
+
+    /// Non-blocking admission: `Ok(None)` when the queue is full (the
+    /// caller sheds load with a fast error instead of queueing), `Err`
+    /// when the pool is dead or the input is malformed.
+    pub fn try_submit(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        anyhow::ensure!(
+            !self.is_dead(),
+            "serving pool is dead (batcher or every worker exited)"
+        );
+        let (job, rx) = self.make_job(x, deadline)?;
+        match self.ingress.try_send(job) {
+            Ok(()) => Ok(Some(rx)),
+            Err(mpsc::TrySendError::Full(_)) => Ok(None),
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                anyhow::bail!("server is shut down")
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Drain and stop: closes the ingress, joins the batcher and every
+    /// worker, and returns (batches, requests) served.
+    pub fn shutdown(self) -> (u64, u64) {
+        let Server { ingress, batcher, workers, stats, .. } = self;
+        drop(ingress);
+        let _ = batcher.join();
+        for w in workers {
+            let _ = w.join();
+        }
+        (stats.batches.load(Ordering::Relaxed), stats.requests.load(Ordering::Relaxed))
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample, with the
+/// rank rounded **up**: the smallest element such that at least `q` of
+/// the sample is at or below it. The truncating `((n-1)*q) as usize`
+/// pick this replaces collapsed p95/p99 toward p50 at small n (n=8 put
+/// both p95 and p99 on index 6).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let rank = (sorted.len() as f64 * q).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One serving benchmark result (rendered into BENCH_serve.json).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub backend_mode: String,
+    pub requests: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    pub mean_batch: f64,
+    pub batches: u64,
+    /// per-request top-1 predictions, submit order
+    pub preds: Vec<usize>,
+    /// network-level rows ([`ingress::bench_http`]), merged into the
+    /// same BENCH_serve.json when the front-end benchmark also ran
+    pub http: Option<HttpBenchReport>,
+}
+
+impl ServeReport {
+    /// JSON object (predictions excluded — they are test surface, not
+    /// a perf metric).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("model".to_string(), Json::Str(self.model.clone()));
+        o.insert("backend_mode".to_string(), Json::Str(self.backend_mode.clone()));
+        o.insert("requests".to_string(), Json::Num(self.requests as f64));
+        o.insert("workers".to_string(), Json::Num(self.workers as f64));
+        o.insert("max_batch".to_string(), Json::Num(self.max_batch as f64));
+        o.insert("wall_s".to_string(), Json::Num(self.wall_s));
+        o.insert("throughput_rps".to_string(), Json::Num(self.throughput_rps));
+        o.insert("p50_ms".to_string(), Json::Num(self.p50_ms));
+        o.insert("p95_ms".to_string(), Json::Num(self.p95_ms));
+        o.insert("p99_ms".to_string(), Json::Num(self.p99_ms));
+        o.insert("mean_ms".to_string(), Json::Num(self.mean_ms));
+        o.insert("max_ms".to_string(), Json::Num(self.max_ms));
+        o.insert("mean_batch".to_string(), Json::Num(self.mean_batch));
+        o.insert("batches".to_string(), Json::Num(self.batches as f64));
+        if let Some(h) = &self.http {
+            h.merge_into(&mut o);
+        }
+        Json::Obj(o)
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, crate::json::to_string(&self.to_json()))
+            .with_context(|| format!("write {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} [{}]: {} requests, {:.0} req/s, p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms, \
+             mean batch {:.1} over {} batches ({} workers, max_batch {})",
+            self.model,
+            self.backend_mode,
+            self.requests,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_batch,
+            self.batches,
+            self.workers,
+            self.max_batch
+        );
+        if let Some(h) = &self.http {
+            s.push('\n');
+            s.push_str(&h.summary());
+        }
+        s
+    }
+}
+
+/// Open-loop throughput/latency benchmark: submit every input as its own
+/// request, collect every response, report percentiles.
+pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> Result<ServeReport> {
+    anyhow::ensure!(!inputs.is_empty(), "bench_serve: no inputs");
+    let model = engine.model().name.clone();
+    let mode = {
+        let base = if engine.int_accum { "int-accum" } else { "f32-exact" };
+        let mut m = String::from(base);
+        if !engine.opts.prepared {
+            m.push_str("-streaming");
+        }
+        if engine.opts.threads > 1 {
+            m.push_str(&format!("-t{}", engine.opts.threads));
+        }
+        m
+    };
+    let server = Server::start(engine, cfg);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(inputs.len());
+    for x in inputs {
+        rxs.push(server.submit(x.clone())?);
+    }
+    let mut preds = Vec::with_capacity(inputs.len());
+    let mut lat_ms = Vec::with_capacity(inputs.len());
+    let mut batch_sum = 0usize;
+    for rx in &rxs {
+        let r = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => {
+                let cause = server
+                    .stats()
+                    .last_error
+                    .lock()
+                    .expect("stats lock")
+                    .clone()
+                    .unwrap_or_else(|| "response channel closed".into());
+                return Err(anyhow::anyhow!("serve response lost: {cause}"));
+            }
+        };
+        preds.push(r.pred);
+        lat_ms.push(r.latency.as_secs_f64() * 1e3);
+        batch_sum += r.batch_size;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let failed = server.stats().failed.load(Ordering::Relaxed);
+    let (batches, served) = server.shutdown();
+    // a benchmark with any failed request must error out (the CI smoke
+    // job exits non-zero on it), never report a rosy partial number
+    anyhow::ensure!(failed == 0, "{failed} requests failed in the engine");
+    anyhow::ensure!(
+        served as usize == inputs.len(),
+        "served {served} of {} requests",
+        inputs.len()
+    );
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len().max(1) as f64;
+    Ok(ServeReport {
+        model,
+        backend_mode: mode,
+        requests: inputs.len(),
+        workers: cfg.workers.max(1),
+        max_batch: cfg.max_batch.max(1),
+        wall_s: wall,
+        throughput_rps: inputs.len() as f64 / wall.max(1e-9),
+        p50_ms: percentile(&lat_ms, 0.5),
+        p95_ms: percentile(&lat_ms, 0.95),
+        p99_ms: percentile(&lat_ms, 0.99),
+        mean_ms,
+        max_ms: *lat_ms.last().expect("non-empty latencies"),
+        mean_batch: batch_sum as f64 / inputs.len().max(1) as f64,
+        batches,
+        preds,
+        http: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+    use crate::deploy::packed::Packed;
+
+    /// 12-feature identity-flavoured single-layer model: hw=2 so d_in =
+    /// 2*2*3 = 12, 3 output classes.
+    pub(crate) fn tiny_model() -> DeployModel {
+        // weights [12, 3] on a 3-bit grid, s = 0.5: class c sums feature
+        // block c (features 4c..4c+4 get weight +1 = code 5)
+        let mut codes = vec![4u32; 12 * 3]; // grid int 0
+        for c in 0..3usize {
+            for f in 0..4usize {
+                codes[(c * 4 + f) * 3 + c] = 6; // grid int +2 -> weight 1.0
+            }
+        }
+        DeployModel {
+            name: "tiny".into(),
+            input_hw: 2,
+            num_classes: 3,
+            quant_a: false,
+            bits_w: 3,
+            bits_a: 8,
+            layers: vec![DeployLayer {
+                name: "head".into(),
+                op: DeployOp::Full,
+                d_in: 12,
+                d_out: 3,
+                relu: false,
+                aq: false,
+                act_bits: 8,
+                a_scales: vec![1.0],
+                w_bits: 3,
+                w_scales: vec![0.5],
+                weights: Packed::pack(&codes, 3).unwrap(),
+                bias: None,
+                requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
+            }],
+        }
+    }
+
+    pub(crate) fn one_hot_block(c: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; 12];
+        for f in 0..4 {
+            x[c * 4 + f] = 1.0;
+        }
+        x
+    }
+
+    #[test]
+    fn server_routes_batched_requests() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let server = Server::start(engine, &ServeCfg { workers: 3, max_batch: 4, queue_cap: 64 });
+        let rxs: Vec<_> = (0..30)
+            .map(|i| server.submit(one_hot_block(i % 3)).unwrap())
+            .collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.pred, i % 3, "request {i}");
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+            assert_eq!(r.logits.len(), 3);
+        }
+        let (batches, requests) = server.shutdown();
+        assert_eq!(requests, 30);
+        assert!(batches >= 8, "max_batch 4 needs >= 8 batches for 30 requests");
+    }
+
+    /// A structurally broken model (layer widths don't chain — only
+    /// constructible directly, the QPKG loader rejects it) whose engine
+    /// forward fails cleanly on every batch: the second layer expects 7
+    /// inputs but the first emits 3.
+    fn broken_model() -> DeployModel {
+        let mut m = tiny_model();
+        m.layers.push(DeployLayer {
+            name: "bad".into(),
+            op: DeployOp::Full,
+            d_in: 7,
+            d_out: 3,
+            relu: false,
+            aq: false,
+            act_bits: 8,
+            a_scales: vec![1.0],
+            w_bits: 3,
+            w_scales: vec![0.5],
+            weights: Packed::pack(&[0u32; 21], 3).unwrap(),
+            bias: None,
+            requant: None,
+        });
+        m
+    }
+
+    #[test]
+    fn failed_batches_surface_as_bench_errors() {
+        let engine = Arc::new(Engine::new(broken_model()));
+        let inputs: Vec<Vec<f32>> = (0..8).map(|i| one_hot_block(i % 3)).collect();
+        let err = bench_serve(engine, &ServeCfg::default(), &inputs)
+            .expect_err("engine failures must fail the benchmark");
+        // the failure cause is surfaced, not swallowed
+        assert!(format!("{err:#}").contains("serve response lost"), "{err:#}");
+        // and the failed-request counter records the drops
+        let engine = Arc::new(Engine::new(broken_model()));
+        let server = Server::start(engine, &ServeCfg { workers: 1, max_batch: 4, queue_cap: 8 });
+        let rx = server.submit(one_hot_block(0)).unwrap();
+        assert!(rx.recv().is_err(), "response channel must close on failure");
+        assert!(server.stats().failed.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    /// A forward that panics on every batch: the whole worker pool dies.
+    struct PanickingForward;
+
+    impl BatchForward for PanickingForward {
+        fn d_in(&self) -> usize {
+            12
+        }
+        fn num_classes(&self) -> usize {
+            3
+        }
+        fn model_name(&self) -> &str {
+            "panicker"
+        }
+        fn forward_batch(&self, _x: &[f32], _b: usize) -> Result<Vec<f32>> {
+            panic!("engine hard-crashed");
+        }
+    }
+
+    /// Regression: `submit` used to block forever once the worker pool
+    /// had died with the ingress queue full — nobody drained the queue
+    /// and nothing reported the death. The pool-health flag must turn
+    /// that hang into a fast error.
+    #[test]
+    fn submit_errors_instead_of_hanging_when_pool_dies() {
+        let server = Arc::new(Server::start_with(
+            Arc::new(PanickingForward),
+            &ServeCfg { workers: 2, max_batch: 2, queue_cap: 2 },
+        ));
+        // every accepted job's batch panics its worker; responses never
+        // arrive and the channel closes
+        let rx = server.submit(vec![0.0; 12]).unwrap();
+        assert!(rx.recv().is_err(), "response channel must close when the worker dies");
+        // keep submitting: once both workers have panicked the pool is
+        // dead and submit must return an error in bounded time rather
+        // than blocking on the full, undrained queue. Run it in a thread
+        // so a regression fails the test instead of hanging it.
+        let srv = server.clone();
+        let h = std::thread::spawn(move || {
+            let deadline = Instant::now() + Duration::from_secs(20);
+            loop {
+                match srv.submit(vec![0.0; 12]) {
+                    Ok(rx) => {
+                        let _ = rx.recv(); // lost response; keep pushing
+                    }
+                    Err(e) => return format!("{e:#}"),
+                }
+                assert!(
+                    Instant::now() < deadline,
+                    "submit kept succeeding against a dead pool"
+                );
+            }
+        });
+        let msg = h.join().expect("prober thread must not hang or panic");
+        assert!(
+            msg.contains("dead") || msg.contains("shut down"),
+            "unexpected submit error: {msg}"
+        );
+        assert!(server.is_dead());
+        // try_submit fails fast on the same dead pool
+        assert!(server.try_submit(vec![0.0; 12], None).is_err());
+    }
+
+    #[test]
+    fn try_submit_sheds_when_queue_is_full() {
+        // a forward that blocks until released, so the queue backs up
+        struct StallForward(Mutex<mpsc::Receiver<()>>);
+        impl BatchForward for StallForward {
+            fn d_in(&self) -> usize {
+                4
+            }
+            fn num_classes(&self) -> usize {
+                2
+            }
+            fn model_name(&self) -> &str {
+                "stall"
+            }
+            fn forward_batch(&self, _x: &[f32], b: usize) -> Result<Vec<f32>> {
+                let _ = self.0.lock().expect("gate lock").recv();
+                Ok(vec![0.0; b * 2])
+            }
+        }
+        let (gate_tx, gate_rx) = mpsc::channel();
+        let server = Server::start_with(
+            Arc::new(StallForward(Mutex::new(gate_rx))),
+            &ServeCfg { workers: 1, max_batch: 1, queue_cap: 2 },
+        );
+        // fill: one in-flight batch, the batcher holding one, the queue
+        // behind them — keep admitting until the queue reports full
+        let mut admitted = Vec::new();
+        let t0 = Instant::now();
+        let mut shed = false;
+        while Instant::now() - t0 < Duration::from_secs(10) {
+            match server.try_submit(vec![0.0; 4], None).unwrap() {
+                Some(rx) => admitted.push(rx),
+                None => {
+                    shed = true;
+                    break;
+                }
+            }
+        }
+        assert!(shed, "bounded queue must eventually shed instead of admitting forever");
+        // release the workers; every admitted request completes
+        for _ in 0..admitted.len() + 4 {
+            let _ = gate_tx.send(());
+        }
+        drop(gate_tx);
+        for rx in &admitted {
+            assert!(rx.recv().is_ok());
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_jobs_are_dropped_unserved() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let server = Server::start(engine, &ServeCfg { workers: 1, max_batch: 4, queue_cap: 8 });
+        // a deadline already in the past: the worker drops the job and
+        // the response channel closes
+        let rx = server
+            .submit_deadline(one_hot_block(0), Some(Instant::now() - Duration::from_millis(5)))
+            .unwrap();
+        assert!(rx.recv().is_err(), "expired job must be dropped unserved");
+        // a generous deadline serves normally
+        let rx = server
+            .submit_deadline(one_hot_block(1), Some(Instant::now() + Duration::from_secs(30)))
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().pred, 1);
+        assert_eq!(server.stats().expired.load(Ordering::Relaxed), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn threaded_engine_serves_identical_predictions() {
+        use crate::deploy::engine::EngineOpts;
+        let inputs: Vec<Vec<f32>> = (0..24).map(|i| one_hot_block(i % 3)).collect();
+        let cfg = ServeCfg { workers: 2, max_batch: 8, queue_cap: 32 };
+        let base = bench_serve(Arc::new(Engine::new(tiny_model())), &cfg, &inputs).unwrap();
+        let eng = Engine::with_opts(tiny_model(), true, EngineOpts { threads: 2, prepared: true });
+        let mt = bench_serve(Arc::new(eng), &cfg, &inputs).unwrap();
+        assert_eq!(base.preds, mt.preds);
+        assert!(mt.backend_mode.ends_with("-t2"), "{}", mt.backend_mode);
+    }
+
+    #[test]
+    fn submit_rejects_wrong_width() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let server = Server::start(engine, &ServeCfg::default());
+        assert!(server.submit(vec![0.0; 5]).is_err());
+        server.shutdown();
+    }
+
+    /// Regression: the old `((n-1) as f64 * q) as usize` truncating pick
+    /// collapsed p95/p99 toward p50 at small n (n=8 put both on index 6,
+    /// below the max). Nearest-rank with rounding-up keeps the tail.
+    #[test]
+    fn percentile_nearest_rank_does_not_collapse_at_small_n() {
+        let small: Vec<f64> = (1..=8).map(|v| v as f64).collect();
+        assert_eq!(percentile(&small, 0.5), 4.0);
+        assert_eq!(percentile(&small, 0.95), 8.0, "p95 of n=8 is the max");
+        assert_eq!(percentile(&small, 0.99), 8.0, "p99 of n=8 is the max");
+        assert!(percentile(&small, 0.99) > percentile(&small, 0.5));
+        // larger n separates the ranks: nearest-rank lands exactly
+        let big: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&big, 0.5), 50.0);
+        assert_eq!(percentile(&big, 0.95), 95.0);
+        assert_eq!(percentile(&big, 0.99), 99.0);
+        assert_eq!(percentile(&big, 1.0), 100.0);
+        // degenerate cases stay in range
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert_eq!(percentile(&big, 0.0), 1.0);
+    }
+
+    #[test]
+    fn bench_serve_reports_and_roundtrips_json() {
+        let engine = Arc::new(Engine::new(tiny_model()));
+        let inputs: Vec<Vec<f32>> = (0..40).map(|i| one_hot_block(i % 3)).collect();
+        let cfg = ServeCfg { workers: 2, max_batch: 8, queue_cap: 16 };
+        let report = bench_serve(engine, &cfg, &inputs).unwrap();
+        assert_eq!(report.requests, 40);
+        assert_eq!(report.preds.len(), 40);
+        for (i, &p) in report.preds.iter().enumerate() {
+            assert_eq!(p, i % 3);
+        }
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p50_ms <= report.p95_ms + 1e-9);
+        assert!(report.p95_ms <= report.p99_ms + 1e-9);
+        assert!(report.p99_ms <= report.max_ms + 1e-9);
+        assert!(report.mean_ms > 0.0 && report.mean_ms <= report.max_ms + 1e-9);
+        assert!(report.mean_batch >= 1.0);
+        let j = report.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(40));
+        // tail-latency fields ride in BENCH_serve.json for future gates
+        assert_eq!(j.get("p99_ms").as_f64(), Some(report.p99_ms));
+        assert_eq!(j.get("mean_ms").as_f64(), Some(report.mean_ms));
+        let dir = std::env::temp_dir().join("qat_serve_bench");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("BENCH_serve.json");
+        report.write_json(&p).unwrap();
+        let parsed = crate::json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(parsed.get("model").as_str(), Some("tiny"));
+    }
+}

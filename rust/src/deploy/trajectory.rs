@@ -13,18 +13,26 @@
 //!    prepared (decode-once), and prepared with `--threads` scoped
 //!    batch-row workers — plus the same three on a **QPKG v3
 //!    per-channel-activation** export (`engine_forward_pcact_*`, the
-//!    per-channel-default configuration's exact-f32 route),
-//! 2. merges the serve report into one schema-versioned
-//!    `BENCH_deploy.json` (uploaded as the per-commit artifact),
-//! 3. refuses to emit a report that lost its prepared-path rows
+//!    per-channel-default configuration's exact-f32 route) — plus the
+//!    HTTP request codec (`http_json_lazy` vs `http_json_tree`: the
+//!    zero-copy field scan against a full `Json`-tree parse of the same
+//!    predict body),
+//! 2. merges the serve report — which since the HTTP front-end landed
+//!    also carries the network rows (`http_keepalive_rps`,
+//!    `http_churn_rps`, `http_overload_p99_ms`) — into one
+//!    schema-versioned `BENCH_deploy.json` (uploaded as the per-commit
+//!    artifact),
+//! 3. refuses to emit a report that lost a required kernel row or, once
+//!    the serve report is merged, a required serve field
 //!    ([`DeployBenchReport::missing_required_rows`] — a gate hole, the
 //!    CLI exits non-zero), prints the streaming→prepared and 1→N-thread
 //!    speedups ([`DeployBenchReport::speedup_summary`], also appended to
 //!    the CI job summary), and
 //! 4. compares every throughput metric against the committed
-//!    `BENCH_baseline.json` — plus the serve **p95 tail latency**, gated
-//!    in the opposite direction — and **fails the job** when any metric
-//!    regresses by more than the allowed fraction (default 25%).
+//!    `BENCH_baseline.json` — plus the tail latencies (`serve.p95_ms`,
+//!    `serve.http_overload_p99_ms`), gated in the opposite direction —
+//!    and **fails the job** when any metric regresses by more than the
+//!    allowed fraction (default 25%).
 //!
 //! The baseline file is a conservative floor (committed numbers are
 //! deliberately below what a developer laptop measures) so runner
@@ -66,7 +74,26 @@ pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
     "engine_forward_pc_w4a4_mt",
     "engine_forward_pcact_w4a4",
     "engine_forward_pcact_w4a4_mt",
+    "http_json_lazy",
 ];
+
+/// Serve-report fields that must be present once a serve report is
+/// merged: the channel-level throughput/tail rows plus the HTTP
+/// front-end rows (keep-alive vs churn throughput, overload p99).
+pub const REQUIRED_SERVE_FIELDS: &[&str] = &[
+    "throughput_rps",
+    "p95_ms",
+    "http_keepalive_rps",
+    "http_churn_rps",
+    "http_overload_p99_ms",
+];
+
+/// Serve metrics gated as throughput (higher is better, floor below).
+pub const SERVE_THROUGHPUT_METRICS: &[&str] =
+    &["throughput_rps", "http_keepalive_rps", "http_churn_rps"];
+
+/// Serve metrics gated as tail latency (lower is better, ceiling above).
+pub const SERVE_LATENCY_METRICS: &[&str] = &["p95_ms", "http_overload_p99_ms"];
 
 /// (streaming row, prepared row) pairs whose ratio is the decode-once /
 /// threading speedup surfaced in the CI job summary.
@@ -77,6 +104,7 @@ const SPEEDUP_PAIRS: &[(&str, &str, &str)] = &[
     ("packed_dw_i32", "prepared_dw_i32", "dw i32 decode-once"),
     ("engine_forward_pc_w4a4_streaming", "engine_forward_pc_w4a4", "engine forward decode-once"),
     ("engine_forward_pc_w4a4", "engine_forward_pc_w4a4_mt", "engine forward 1 -> N threads"),
+    ("http_json_tree", "http_json_lazy", "request json lazy-scan vs tree"),
     (
         "engine_forward_pcact_w4a4_streaming",
         "engine_forward_pcact_w4a4",
@@ -142,15 +170,25 @@ impl DeployBenchReport {
         self.kernels.iter().find(|k| k.name == name)
     }
 
-    /// Prepared-path rows ([`REQUIRED_PREPARED_ROWS`]) absent from this
-    /// report. Non-empty = the perf gate lost sight of the decode-once
-    /// engine and `bench-deploy` must fail.
+    /// Required rows absent from this report: the prepared-path /
+    /// codec kernel rows ([`REQUIRED_PREPARED_ROWS`]) always, and the
+    /// serve fields ([`REQUIRED_SERVE_FIELDS`], `serve.`-prefixed) once
+    /// a serve report is merged. Non-empty = the perf gate lost sight
+    /// of a tracked path and `bench-deploy` must fail.
     pub fn missing_required_rows(&self) -> Vec<String> {
-        REQUIRED_PREPARED_ROWS
+        let mut missing: Vec<String> = REQUIRED_PREPARED_ROWS
             .iter()
             .filter(|name| self.row(name).is_none())
             .map(|s| s.to_string())
-            .collect()
+            .collect();
+        if let Some(serve) = &self.serve {
+            for field in REQUIRED_SERVE_FIELDS {
+                if serve.get(field).as_f64().is_none() {
+                    missing.push(format!("serve.{field}"));
+                }
+            }
+        }
+        missing
     }
 
     /// Human/CI-summary rendering of the streaming→prepared (and
@@ -315,16 +353,96 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
         push(row, batch as f64, s);
     }
 
+    // --- HTTP request codec: lazy field scan vs full tree parse --------
+    // a realistic predict body: stem-width input array plus the small
+    // fields the server actually reads, and one it skips over
+    let d_req = 768usize;
+    let req_input: Vec<f32> = (0..d_req).map(|_| rng.normal()).collect();
+    let mut body = String::from(
+        "{\"model\":\"efflite_w4a4\",\"deadline_ms\":40,\
+         \"meta\":{\"client\":\"bench\",\"tags\":[1,2,3]},\"input\":[",
+    );
+    for (i, v) in req_input.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!("{v}"));
+    }
+    body.push_str("]}");
+    let body_bytes = body.as_bytes().to_vec();
+    let s = bench_for("http_json_lazy", warmup, budget, || {
+        let x = super::serve::http::lazy_f32s(&body_bytes, "input")
+            .expect("lazy scan")
+            .expect("input present");
+        let m = super::serve::http::lazy_str(&body_bytes, "model")
+            .expect("lazy scan")
+            .expect("model present");
+        std::hint::black_box((x, m));
+    });
+    push("http_json_lazy", 1.0, s);
+    let s = bench_for("http_json_tree", warmup, budget, || {
+        let j = json::parse(&body).expect("tree parse");
+        let x: Vec<f32> = j
+            .get("input")
+            .as_arr()
+            .expect("input array")
+            .iter()
+            .map(|v| v.as_f64().expect("number") as f32)
+            .collect();
+        let m = j.get("model").as_str().expect("model").to_string();
+        std::hint::black_box((x, m));
+    });
+    push("http_json_tree", 1.0, s);
+
     Ok(DeployBenchReport { schema_version: SCHEMA_VERSION, smoke, kernels: rows, serve: None })
 }
 
+/// Build a conservative committed-baseline candidate from a measured
+/// report: every throughput metric floored at `floor_frac` of the
+/// measured value, every tail-latency metric ceilinged at `ceil_mult`
+/// of it. `bench-deploy --emit-baseline` writes this next to the run's
+/// `BENCH_deploy.json` so refreshing `BENCH_baseline.json` is a
+/// copy-after-eyeballing instead of hand-derived arithmetic.
+pub fn baseline_from_report(report: &Json, floor_frac: f64, ceil_mult: f64) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("schema_version".to_string(), report.get("schema_version").clone());
+    o.insert("smoke".to_string(), report.get("smoke").clone());
+    let mut kernels = BTreeMap::new();
+    if let Some(ks) = report.get("kernels").as_obj() {
+        for (name, row) in ks {
+            if let Some(per_sec) = row.get("per_sec").as_f64() {
+                let mut r = BTreeMap::new();
+                r.insert("per_sec".to_string(), Json::Num(per_sec * floor_frac));
+                kernels.insert(name.clone(), Json::Obj(r));
+            }
+        }
+    }
+    o.insert("kernels".to_string(), Json::Obj(kernels));
+    if report.get("serve").as_obj().is_some() {
+        let mut s = BTreeMap::new();
+        for m in SERVE_THROUGHPUT_METRICS {
+            if let Some(v) = report.get("serve").get(m).as_f64() {
+                s.insert(m.to_string(), Json::Num(v * floor_frac));
+            }
+        }
+        for m in SERVE_LATENCY_METRICS {
+            if let Some(v) = report.get("serve").get(m).as_f64() {
+                s.insert(m.to_string(), Json::Num(v * ceil_mult));
+            }
+        }
+        o.insert("serve".to_string(), Json::Obj(s));
+    }
+    Json::Obj(o)
+}
+
 /// Compare a current report against a baseline: every throughput metric
-/// present in **both** (each `kernels.<name>.per_sec`, plus
-/// `serve.throughput_rps`) must be at least `(1 - max_drop)` of the
-/// baseline value, and the serve tail latency (`serve.p95_ms`, lower is
-/// better) must not exceed `(1 + max_drop)` of its baseline. Returns the
-/// list of violations (empty = pass); bails when the schema versions
-/// differ (the numbers would not be comparable).
+/// present in **both** (each `kernels.<name>.per_sec`, plus the
+/// [`SERVE_THROUGHPUT_METRICS`]) must be at least `(1 - max_drop)` of
+/// the baseline value, and the tail latencies
+/// ([`SERVE_LATENCY_METRICS`], lower is better) must not exceed
+/// `(1 + max_drop)` of theirs. Returns the list of violations (empty =
+/// pass); bails when the schema versions differ (the numbers would not
+/// be comparable).
 pub fn check_regression(current: &Json, baseline: &Json, max_drop: f64) -> Result<Vec<String>> {
     let cur_v = current.get("schema_version").as_f64().unwrap_or(-1.0);
     let base_v = baseline.get("schema_version").as_f64().unwrap_or(-1.0);
@@ -362,25 +480,30 @@ pub fn check_regression(current: &Json, baseline: &Json, max_drop: f64) -> Resul
             );
         }
     }
-    check(
-        "serve.throughput_rps",
-        current.get("serve").get("throughput_rps").as_f64(),
-        baseline.get("serve").get("throughput_rps").as_f64(),
-    );
-    // tail latency gates in the opposite direction: lower is better, so
-    // the current p95 must stay under (1 + max_drop) x baseline
-    if let Some(base_p95) = baseline.get("serve").get("p95_ms").as_f64().filter(|&b| b > 0.0) {
-        let ceiling = 1.0 + max_drop;
-        match current.get("serve").get("p95_ms").as_f64() {
-            None => violations.push(
-                "serve.p95_ms: present in the baseline but missing from the current report — \
+    for metric in SERVE_THROUGHPUT_METRICS {
+        check(
+            &format!("serve.{metric}"),
+            current.get("serve").get(metric).as_f64(),
+            baseline.get("serve").get(metric).as_f64(),
+        );
+    }
+    // tail latencies gate in the opposite direction: lower is better, so
+    // the current value must stay under (1 + max_drop) x baseline
+    let ceiling = 1.0 + max_drop;
+    for metric in SERVE_LATENCY_METRICS {
+        let Some(base) = baseline.get("serve").get(metric).as_f64().filter(|&b| b > 0.0)
+        else {
+            continue;
+        };
+        match current.get("serve").get(metric).as_f64() {
+            None => violations.push(format!(
+                "serve.{metric}: present in the baseline but missing from the current report — \
                  rename the baseline entry or restore the latency percentiles"
-                    .to_string(),
-            ),
-            Some(cur) if cur > base_p95 * ceiling => violations.push(format!(
-                "serve.p95_ms: {cur:.2}ms is {:.0}% of baseline {base_p95:.2}ms \
+            )),
+            Some(cur) if cur > base * ceiling => violations.push(format!(
+                "serve.{metric}: {cur:.2}ms is {:.0}% of baseline {base:.2}ms \
                  (tail-latency ceiling {:.0}%)",
-                100.0 * cur / base_p95,
+                100.0 * cur / base,
                 100.0 * ceiling
             )),
             Some(_) => {}
@@ -542,6 +665,8 @@ mod tests {
             "engine_forward_pcact_w4a4_streaming",
             "engine_forward_pcact_w4a4",
             "engine_forward_pcact_w4a4_mt",
+            "http_json_lazy",
+            "http_json_tree",
         ] {
             assert!(names.contains(&want), "missing {want} in {names:?}");
         }
@@ -550,5 +675,102 @@ mod tests {
         }
         assert!(r.missing_required_rows().is_empty());
         assert!(!r.speedup_summary().is_empty());
+    }
+
+    #[test]
+    fn merged_serve_report_must_carry_http_rows() {
+        let mk = |name: &str| KernelBenchRow { name: name.into(), per_sec: 1.0, mean_ns: 1.0 };
+        let mut r = DeployBenchReport {
+            schema_version: SCHEMA_VERSION,
+            smoke: true,
+            kernels: REQUIRED_PREPARED_ROWS.iter().map(|n| mk(n)).collect(),
+            serve: None,
+        };
+        // without a merged serve report, only the kernel rows are checked
+        assert!(r.missing_required_rows().is_empty());
+        // a serve report missing the HTTP rows is a gate hole
+        let mut s = BTreeMap::new();
+        s.insert("throughput_rps".to_string(), Json::Num(100.0));
+        s.insert("p95_ms".to_string(), Json::Num(4.0));
+        r.merge_serve(Json::Obj(s.clone()));
+        let missing = r.missing_required_rows();
+        assert_eq!(
+            missing,
+            vec![
+                "serve.http_keepalive_rps".to_string(),
+                "serve.http_churn_rps".to_string(),
+                "serve.http_overload_p99_ms".to_string(),
+            ],
+            "{missing:?}"
+        );
+        // with all required fields the report passes
+        s.insert("http_keepalive_rps".to_string(), Json::Num(50.0));
+        s.insert("http_churn_rps".to_string(), Json::Num(20.0));
+        s.insert("http_overload_p99_ms".to_string(), Json::Num(100.0));
+        r.merge_serve(Json::Obj(s));
+        assert!(r.missing_required_rows().is_empty());
+    }
+
+    #[test]
+    fn http_serve_metrics_gate_in_both_directions() {
+        let serve = |ka: f64, p99: f64| {
+            let mut s = BTreeMap::new();
+            s.insert("http_keepalive_rps".to_string(), Json::Num(ka));
+            s.insert("http_overload_p99_ms".to_string(), Json::Num(p99));
+            let mut o = BTreeMap::new();
+            o.insert("schema_version".to_string(), Json::Num(1.0));
+            o.insert("serve".to_string(), Json::Obj(s));
+            Json::Obj(o)
+        };
+        let base = serve(100.0, 100.0);
+        assert!(check_regression(&serve(90.0, 110.0), &base, 0.25).unwrap().is_empty());
+        // keep-alive throughput below the floor trips
+        let v = check_regression(&serve(50.0, 100.0), &base, 0.25).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("http_keepalive_rps"), "{v:?}");
+        // overload p99 above the ceiling trips (inverted gate)
+        let v = check_regression(&serve(100.0, 200.0), &base, 0.25).unwrap();
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("http_overload_p99_ms"), "{v:?}");
+    }
+
+    #[test]
+    fn baseline_from_report_applies_margins() {
+        let mut kernels = BTreeMap::new();
+        let mut row = BTreeMap::new();
+        row.insert("per_sec".to_string(), Json::Num(1000.0));
+        row.insert("mean_ns".to_string(), Json::Num(5.0));
+        kernels.insert("http_json_lazy".to_string(), Json::Obj(row));
+        let mut s = BTreeMap::new();
+        s.insert("throughput_rps".to_string(), Json::Num(200.0));
+        s.insert("p95_ms".to_string(), Json::Num(10.0));
+        s.insert("http_overload_p99_ms".to_string(), Json::Num(50.0));
+        s.insert("preds_are_not_metrics".to_string(), Json::Str("x".into()));
+        let mut o = BTreeMap::new();
+        o.insert("schema_version".to_string(), Json::Num(1.0));
+        o.insert("smoke".to_string(), Json::Bool(true));
+        o.insert("kernels".to_string(), Json::Obj(kernels));
+        o.insert("serve".to_string(), Json::Obj(s));
+        let report = Json::Obj(o);
+
+        let b = baseline_from_report(&report, 0.5, 2.0);
+        assert_eq!(b.get("schema_version").as_f64(), Some(1.0));
+        assert_eq!(
+            b.get("kernels").get("http_json_lazy").get("per_sec").as_f64(),
+            Some(500.0),
+            "throughput floor = 0.5x measured"
+        );
+        // mean_ns is not a gated metric and is not carried over
+        assert_eq!(b.get("kernels").get("http_json_lazy").get("mean_ns").as_f64(), None);
+        assert_eq!(b.get("serve").get("throughput_rps").as_f64(), Some(100.0));
+        assert_eq!(
+            b.get("serve").get("p95_ms").as_f64(),
+            Some(20.0),
+            "latency ceiling = 2x measured"
+        );
+        assert_eq!(b.get("serve").get("http_overload_p99_ms").as_f64(), Some(100.0));
+        assert_eq!(b.get("serve").get("preds_are_not_metrics"), &Json::Null);
+        // the emitted baseline passes the gate against its own report
+        assert!(check_regression(&report, &b, 0.25).unwrap().is_empty());
     }
 }

@@ -2,9 +2,11 @@
 //!
 //! The offline crate cache has no serde, so the coordinator carries its own
 //! small JSON implementation for the artifact manifests (`*.manifest.json`,
-//! `index.json`) and the JSONL metrics sink. It supports the full JSON
-//! grammar except exotic number forms; strings handle the standard escape
-//! set plus `\uXXXX` (BMP only — manifests are ASCII in practice).
+//! `index.json`), the JSONL metrics sink, and the HTTP serving codec. It
+//! supports the full JSON grammar except exotic number forms; strings
+//! handle the standard escape set plus `\uXXXX` including surrogate
+//! pairs (astral-plane characters arrive from real HTTP clients), and
+//! lone surrogates are rejected as parse errors.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -146,6 +148,19 @@ impl<'a> Parser<'a> {
             .ok_or(JsonError { pos: start, msg: "bad number".into() })
     }
 
+    /// Read 4 hex digits at byte offset `at`.
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        if at + 4 > self.b.len() {
+            return Err(JsonError { pos: self.pos, msg: "bad \\u escape".into() });
+        }
+        let hex = &self.b[at..at + 4];
+        if !hex.iter().all(|c| c.is_ascii_hexdigit()) {
+            return Err(JsonError { pos: at, msg: "bad \\u escape".into() });
+        }
+        let s = std::str::from_utf8(hex).expect("ascii hex digits");
+        Ok(u32::from_str_radix(s, 16).expect("validated hex"))
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.eat(b'"')?;
         let mut out = String::new();
@@ -168,20 +183,31 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.b.len() {
-                                return self.err("bad \\u escape");
+                            let cp = self.hex4(self.pos + 1)?;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // high surrogate: a low-surrogate escape
+                                // must follow immediately
+                                let next = self.pos + 5;
+                                if self.b.get(next) != Some(&b'\\')
+                                    || self.b.get(next + 1) != Some(&b'u')
+                                {
+                                    return self.err("unpaired surrogate");
+                                }
+                                let lo = self.hex4(next + 2)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return self.err("unpaired surrogate");
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(char::from_u32(c).expect("valid astral scalar"));
+                                // land on the pair's last hex digit; the
+                                // shared += 1 below steps past it
+                                self.pos = next + 5;
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                return self.err("unpaired surrogate");
+                            } else {
+                                out.push(char::from_u32(cp).expect("non-surrogate BMP scalar"));
+                                self.pos += 4;
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| JsonError {
-                                        pos: self.pos,
-                                        msg: "bad \\u escape".into(),
-                                    })?;
-                            let cp = u32::from_str_radix(hex, 16).map_err(|_| {
-                                JsonError { pos: self.pos, msg: "bad \\u escape".into() }
-                            })?;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
                         }
                         _ => return self.err("bad escape"),
                     }
@@ -258,6 +284,16 @@ impl<'a> Parser<'a> {
             }
         }
     }
+}
+
+/// Decode the JSON string token starting at byte `at` of `b` (which
+/// must be an opening quote). Returns the decoded string and the offset
+/// one past the closing quote — the hook the lazy HTTP request codec
+/// uses to decode a single field without parsing the whole document.
+pub(crate) fn decode_str_at(b: &[u8], at: usize) -> Result<(String, usize), JsonError> {
+    let mut p = Parser { b, pos: at };
+    let s = p.string()?;
+    Ok((s, p.pos))
 }
 
 /// Parse a complete JSON document.
@@ -372,5 +408,53 @@ mod tests {
     fn escapes() {
         let j = parse("\"a\\u0041b\"").unwrap();
         assert_eq!(j.as_str(), Some("aAb"));
+    }
+
+    /// Regression: surrogate escape pairs used to decode as two U+FFFD
+    /// replacement characters instead of the astral-plane scalar.
+    #[test]
+    fn surrogate_pairs_decode_to_astral_chars() {
+        let j = parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(j.as_str(), Some("😀"));
+        let j = parse("\"x\\ud834\\udd1ey\"").unwrap();
+        assert_eq!(j.as_str(), Some("x𝄞y")); // U+1D11E musical G clef
+    }
+
+    #[test]
+    fn lone_surrogates_are_parse_errors() {
+        for src in [
+            "\"\\ud83d\"",          // lone high
+            "\"\\ude00\"",          // lone low
+            "\"\\ud83d \\ude00\"",  // pair split by a space
+            "\"\\ud83dx\"",         // high followed by plain text
+            "\"\\ud83d\\u0041\"",   // high followed by a BMP escape
+            "\"\\ud83d\\ud83d\"",   // high followed by another high
+        ] {
+            let err = parse(src).expect_err(src);
+            assert!(err.msg.contains("unpaired surrogate"), "{src}: {err}");
+        }
+    }
+
+    #[test]
+    fn astral_strings_roundtrip() {
+        let j = Json::Str("naïve 😀 𝄞 text".to_string());
+        let j2 = parse(&to_string(&j)).unwrap();
+        assert_eq!(j, j2);
+        // and via an object value, as the serving codec sees them
+        let src = "{\"model\":\"\\ud83d\\ude00net\"}";
+        let j = parse(src).unwrap();
+        assert_eq!(j.get("model").as_str(), Some("😀net"));
+        let j2 = parse(&to_string(&j)).unwrap();
+        assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn decode_str_at_reports_end_offset() {
+        let b = br#"{"k": "a\u0041\ud83d\ude00" , "z": 1}"#;
+        let at = 6; // opening quote of the value
+        let (s, end) = decode_str_at(b, at).unwrap();
+        assert_eq!(s, "aA😀");
+        assert_eq!(b[end - 1], b'"');
+        assert_eq!(&b[end..end + 2], b" ,");
     }
 }

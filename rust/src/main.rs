@@ -40,7 +40,13 @@ USAGE: oscillations-qat <subcommand> [flags]
             [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
   serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
             [--threads N|auto] [--exact] [--streaming] [--smoke]
-            [--bench-out BENCH_serve.json]
+            [--no-http] [--bench-out BENCH_serve.json]
+            benchmark mode (default): channel-level serve bench plus the
+            HTTP front-end rows (keep-alive vs churn, overload p99);
+            --no-http skips the network scenarios
+            --listen 127.0.0.1:8090 [--deadline-ms 0 --cache-cap 1024]
+            [--queue-cap 1024]   run the HTTP/1.1 front-end instead:
+            POST /v1/predict {\"input\":[...]}, GET /healthz, GET /stats
   toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
   suite     [--quick]       run everything in one process
@@ -48,10 +54,13 @@ USAGE: oscillations-qat <subcommand> [flags]
   bench-deploy  [--smoke] [--threads N|auto] [--serve-json BENCH_serve.json]
                 [--out BENCH_deploy.json]
                 [--baseline BENCH_baseline.json --max-regress 0.25]
+                [--emit-baseline BENCH_baseline_suggested.json]
                 deploy micro-bench (streaming + prepared decode, 1 and N
-                threads) -> merged perf-trajectory report; exits non-zero
-                when a prepared-path row is missing or any throughput
-                drops past the baseline floor
+                threads, lazy vs tree request JSON) -> merged
+                perf-trajectory report; exits non-zero when a required
+                row is missing, any throughput drops past the baseline
+                floor, or a latency ceiling is exceeded; --emit-baseline
+                writes conservative floors from this run's numbers
 
 Common flags: --backend auto|pjrt|native   (native needs no artifacts)
               --artifacts artifacts --results results --ckpts ckpts
@@ -139,8 +148,8 @@ fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
         bits_a: args.u32_or("bits-a", args.u32_or("bits-w", 3)),
         quant_a: args.flag("quant-a"),
         // per-channel is the default; --per-tensor is the escape hatch
-        // (--per-channel is still accepted as an explicit no-op)
-        per_channel: !args.flag("per-tensor"),
+        // (--per-channel is still accepted as an explicit confirmation)
+        per_channel: args.flag("per-channel") || !args.flag("per-tensor"),
         lam: Schedule::parse(&args.str_or("lam", "0")).expect("bad --lam"),
         f_th: Schedule::parse(&args.str_or("f-th", "1.1")).expect("bad --f-th"),
         seed: args.u64_or("seed", 0),
@@ -244,7 +253,9 @@ fn cmd_export(lab: &Lab, args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     use oscillations_qat::data::{DataCfg, Dataset};
     use oscillations_qat::deploy::format::DeployModel;
-    use oscillations_qat::deploy::serve::{bench_serve, ServeCfg};
+    use oscillations_qat::deploy::serve::{
+        bench_http, bench_serve, BatchForward, HttpCfg, HttpServer, ServeCfg,
+    };
     use oscillations_qat::deploy::{resolve_threads, Engine, EngineOpts};
     use std::sync::Arc;
 
@@ -283,6 +294,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.u64_or("queue-cap", 1024) as usize,
     };
 
+    // --listen: run the HTTP/1.1 front-end until killed instead of
+    // benchmarking
+    if let Some(listen) = args.get("listen") {
+        let http_cfg = HttpCfg {
+            addr: listen.to_string(),
+            default_deadline_ms: args.u64_or("deadline-ms", 0),
+            cache_cap: args.usize_or("cache-cap", 1024),
+            ..HttpCfg::default()
+        };
+        let fwd: Arc<dyn BatchForward> = engine;
+        let srv = HttpServer::start(fwd, &cfg, &http_cfg)?;
+        println!(
+            "[serve] listening on http://{} — POST /v1/predict {{\"input\":[...]}}, \
+             GET /healthz, GET /stats (deadline default {}ms, cache {} entries)",
+            srv.addr(),
+            http_cfg.default_deadline_ms,
+            http_cfg.cache_cap
+        );
+        loop {
+            std::thread::park();
+        }
+    }
+
     // request stream: individual samples from the deterministic val
     // split, generated once and cycled to the requested count
     let d_in = engine.model().d_in();
@@ -299,7 +333,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let inputs: Vec<Vec<f32>> =
         (0..requests).map(|i| samples[i % samples.len()].clone()).collect();
 
-    let report = bench_serve(engine, &cfg, &inputs)?;
+    let mut report = bench_serve(engine.clone(), &cfg, &inputs)?;
+    // network-level scenarios over the same engine (--no-http skips)
+    if !args.flag("no-http") {
+        let fwd: Arc<dyn BatchForward> = engine;
+        report.http = Some(bench_http(fwd, &cfg, smoke)?);
+    }
     println!("{}", report.summary());
     let out = PathBuf::from(args.str_or("bench-out", "BENCH_serve.json"));
     report.write_json(&out)?;
@@ -386,7 +425,9 @@ fn cmd_bench_step(rt: &dyn Backend, args: &Args) -> Result<()> {
 
 fn cmd_bench_deploy(args: &Args) -> Result<()> {
     use oscillations_qat::deploy::resolve_threads;
-    use oscillations_qat::deploy::trajectory::{check_regression, run_deploy_microbench};
+    use oscillations_qat::deploy::trajectory::{
+        baseline_from_report, check_regression, run_deploy_microbench,
+    };
     use oscillations_qat::json;
 
     let smoke = args.flag("smoke");
@@ -395,14 +436,6 @@ fn cmd_bench_deploy(args: &Args) -> Result<()> {
     for k in &report.kernels {
         println!("{:<34} {:>14.0} items/s  mean {:>10.0} ns", k.name, k.per_sec, k.mean_ns);
     }
-
-    // a report that lost its prepared-path rows would blind the perf
-    // gate to the decode-once engine — fail before writing anything
-    let missing = report.missing_required_rows();
-    anyhow::ensure!(
-        missing.is_empty(),
-        "bench-deploy report is missing required prepared-path rows: {missing:?}"
-    );
 
     // streaming -> prepared / 1 -> N-thread deltas, also appended to the
     // GitHub Actions job summary when running in CI
@@ -437,9 +470,28 @@ fn cmd_bench_deploy(args: &Args) -> Result<()> {
         report.merge_serve(parsed);
     }
 
+    // a report that lost its prepared-path kernel rows — or, once the
+    // serve report is merged, its serve/HTTP rows — would blind the perf
+    // gate; fail before writing anything. (This runs after the merge so
+    // the required serve fields are actually validated.)
+    let missing = report.missing_required_rows();
+    anyhow::ensure!(
+        missing.is_empty(),
+        "bench-deploy report is missing required rows: {missing:?}"
+    );
+
     let out = PathBuf::from(args.str_or("out", "BENCH_deploy.json"));
     report.write_json(&out)?;
     println!("trajectory report -> {}", out.display());
+
+    // suggested-baseline artifact: this run's numbers with conservative
+    // margins, ready to commit as BENCH_baseline.json after eyeballing
+    if let Some(path) = args.get("emit-baseline") {
+        let suggested = baseline_from_report(&report.to_json(), 0.5, 2.0);
+        std::fs::write(path, json::to_string(&suggested))
+            .map_err(|e| anyhow::anyhow!("write {path}: {e}"))?;
+        println!("suggested baseline (0.5x floors / 2x latency ceilings) -> {path}");
+    }
 
     // regression gate against the committed baseline
     if let Some(baseline_path) = args.get("baseline") {

@@ -1,0 +1,280 @@
+//! End-to-end HTTP serving tests over a real TCP socket: keep-alive
+//! request/response cycles with correct predictions, deadline 503s,
+//! load shedding at ~2x queue capacity with fast bounded errors, and
+//! the repeated-query response cache.
+
+use anyhow::Result;
+use oscillations_qat::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+use oscillations_qat::deploy::packed::Packed;
+use oscillations_qat::deploy::serve::http::{format_request, read_response};
+use oscillations_qat::deploy::serve::{BatchForward, HttpCfg, HttpServer, ServeCfg};
+use oscillations_qat::deploy::Engine;
+use oscillations_qat::json;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// 12-feature single-layer model on a 3-bit grid: class `c` sums
+/// feature block `c` (same construction as the serve unit tests, built
+/// through the public format API here).
+fn tiny_model() -> DeployModel {
+    let mut codes = vec![4u32; 12 * 3]; // grid int 0
+    for c in 0..3usize {
+        for f in 0..4usize {
+            codes[(c * 4 + f) * 3 + c] = 6; // grid int +2 -> weight 1.0
+        }
+    }
+    DeployModel {
+        name: "tiny".into(),
+        input_hw: 2,
+        num_classes: 3,
+        quant_a: false,
+        bits_w: 3,
+        bits_a: 8,
+        layers: vec![DeployLayer {
+            name: "head".into(),
+            op: DeployOp::Full,
+            d_in: 12,
+            d_out: 3,
+            relu: false,
+            aq: false,
+            act_bits: 8,
+            a_scales: vec![1.0],
+            w_bits: 3,
+            w_scales: vec![0.5],
+            weights: Packed::pack(&codes, 3).unwrap(),
+            bias: None,
+            requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
+        }],
+    }
+}
+
+fn one_hot_block(c: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; 12];
+    for f in 0..4 {
+        x[c * 4 + f] = 1.0;
+    }
+    x
+}
+
+fn body_for(input: &[f32]) -> Vec<u8> {
+    let mut s = String::from("{\"model\":\"tiny\",\"input\":[");
+    for (i, v) in input.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s.into_bytes()
+}
+
+fn start_tiny(serve: &ServeCfg, http: &HttpCfg) -> HttpServer {
+    let fwd: Arc<dyn BatchForward> = Arc::new(Engine::new(tiny_model()));
+    HttpServer::start(fwd, serve, http).expect("http server start")
+}
+
+#[test]
+fn keepalive_connection_serves_correct_predictions() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    // several requests over ONE connection, each answered in order
+    for round in 0..2 {
+        for c in 0..3 {
+            let req = format_request("/v1/predict", &body_for(&one_hot_block(c)), &[]);
+            stream.write_all(&req).unwrap();
+            let resp = read_response(&mut stream).unwrap();
+            assert_eq!(resp.status, 200, "round {round} class {c}");
+            assert_eq!(resp.header("connection"), Some("keep-alive"));
+            let j = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+            assert_eq!(j.get("pred").as_usize(), Some(c), "round {round} class {c}");
+            assert_eq!(j.get("logits").as_arr().unwrap().len(), 3);
+        }
+    }
+    assert!(srv.stats().ok.load(std::sync::atomic::Ordering::Relaxed) >= 6);
+    srv.stop();
+}
+
+#[test]
+fn expired_deadline_returns_503_not_a_hang() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    // an explicit zero budget is already expired: deterministic 503
+    let req = format_request(
+        "/v1/predict",
+        &body_for(&one_hot_block(0)),
+        &[("X-Deadline-Ms", "0")],
+    );
+    let t0 = Instant::now();
+    stream.write_all(&req).unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 503);
+    assert_eq!(resp.header("x-shed"), Some("deadline"));
+    assert!(t0.elapsed() < Duration::from_secs(5), "shed must be fast");
+    // the keep-alive connection survives and still serves
+    stream
+        .write_all(&format_request("/v1/predict", &body_for(&one_hot_block(2)), &[]))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    srv.stop();
+}
+
+/// A forward that takes a long, fixed time per batch — stands in for a
+/// heavy model so overload and deadline behaviour is observable.
+struct SlowForward {
+    delay: Duration,
+}
+
+impl BatchForward for SlowForward {
+    fn d_in(&self) -> usize {
+        12
+    }
+    fn num_classes(&self) -> usize {
+        3
+    }
+    fn model_name(&self) -> &str {
+        "tiny"
+    }
+    fn forward_batch(&self, _x: &[f32], b: usize) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok((0..b * 3).map(|i| (i % 3) as f32).collect())
+    }
+}
+
+#[test]
+fn deadlined_request_behind_a_stalled_pool_gets_a_fast_503() {
+    let fwd: Arc<dyn BatchForward> = Arc::new(SlowForward { delay: Duration::from_millis(400) });
+    let serve = ServeCfg { workers: 1, max_batch: 1, queue_cap: 8 };
+    let http = HttpCfg { cache_cap: 0, ..HttpCfg::default() };
+    let srv = HttpServer::start(fwd, &serve, &http).unwrap();
+    // request A occupies the single worker for 400ms
+    let mut a = TcpStream::connect(srv.addr()).unwrap();
+    a.write_all(&format_request("/v1/predict", &body_for(&one_hot_block(0)), &[]))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // A is in the worker now
+    // request B has a 50ms budget: it expires while queued and must be
+    // answered 503 long before the worker frees up
+    let mut b = TcpStream::connect(srv.addr()).unwrap();
+    let t0 = Instant::now();
+    b.write_all(&format_request(
+        "/v1/predict",
+        &body_for(&one_hot_block(1)),
+        &[("X-Deadline-Ms", "50")],
+    ))
+    .unwrap();
+    let resp = read_response(&mut b).unwrap();
+    let waited = t0.elapsed();
+    assert_eq!(resp.status, 503, "queued past its deadline");
+    assert_eq!(resp.header("x-shed"), Some("deadline"));
+    assert!(
+        waited < Duration::from_millis(280),
+        "deadline 503 took {waited:?}, must not wait out the 400ms worker"
+    );
+    // A still completes normally
+    let resp = read_response(&mut a).unwrap();
+    assert_eq!(resp.status, 200);
+    srv.stop();
+}
+
+#[test]
+fn overload_at_twice_queue_capacity_sheds_fast() {
+    let fwd: Arc<dyn BatchForward> = Arc::new(SlowForward { delay: Duration::from_millis(60) });
+    // single slow worker, tiny queue: total in-flight capacity is
+    // queue(2) + batcher(1) + dispatch(2) + worker(1) = 6
+    let serve = ServeCfg { workers: 1, max_batch: 1, queue_cap: 2 };
+    let http = HttpCfg { cache_cap: 0, ..HttpCfg::default() };
+    let srv = HttpServer::start(fwd, &serve, &http).unwrap();
+    let addr = srv.addr();
+    let clients = 12; // ~2x capacity
+    let barrier = Barrier::new(clients);
+    let results: Vec<(u16, Option<String>, Duration)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let _ = stream.set_nodelay(true);
+                    let req =
+                        format_request("/v1/predict", &body_for(&one_hot_block(c % 3)), &[]);
+                    barrier.wait(); // all clients fire at once
+                    let t0 = Instant::now();
+                    stream.write_all(&req).unwrap();
+                    let resp = read_response(&mut stream).unwrap();
+                    (resp.status, resp.header("x-shed").map(String::from), t0.elapsed())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    srv.stop();
+    let ok = results.iter().filter(|(s, ..)| *s == 200).count();
+    let shed: Vec<_> = results.iter().filter(|(s, ..)| *s == 503).collect();
+    assert_eq!(ok + shed.len(), clients, "only 200s and 503s: {results:?}");
+    assert!(ok >= 1, "the pool must still serve under overload: {results:?}");
+    assert!(
+        !shed.is_empty(),
+        "2x queue capacity must shed at least one request: {results:?}"
+    );
+    for (_, hdr, _) in &shed {
+        assert_eq!(hdr.as_deref(), Some("queue"), "{results:?}");
+    }
+    // shed answers are fast errors — far under the ~360ms it would take
+    // the single 60ms worker to drain the whole fleet
+    for (status, _, lat) in &results {
+        if *status == 503 {
+            assert!(*lat < Duration::from_millis(200), "slow shed: {lat:?}");
+        }
+    }
+}
+
+#[test]
+fn repeated_query_is_served_from_the_cache() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    let req = format_request("/v1/predict", &body_for(&one_hot_block(1)), &[]);
+    stream.write_all(&req).unwrap();
+    let first = read_response(&mut stream).unwrap();
+    assert_eq!(first.status, 200);
+    assert_eq!(first.header("x-cache"), Some("miss"));
+    // byte-identical query: answered from the cache, same prediction
+    stream.write_all(&req).unwrap();
+    let second = read_response(&mut stream).unwrap();
+    assert_eq!(second.status, 200);
+    assert_eq!(second.header("x-cache"), Some("hit"));
+    let j1 = json::parse(std::str::from_utf8(&first.body).unwrap()).unwrap();
+    let j2 = json::parse(std::str::from_utf8(&second.body).unwrap()).unwrap();
+    assert_eq!(j1.get("pred").as_usize(), j2.get("pred").as_usize());
+    assert_eq!(j2.get("cached"), &json::Json::Bool(true));
+    assert_eq!(srv.stats().cache_hits.load(std::sync::atomic::Ordering::Relaxed), 1);
+    srv.stop();
+}
+
+#[test]
+fn health_stats_and_malformed_requests() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+    let h = read_response(&mut stream).unwrap();
+    assert_eq!(h.status, 200);
+    let j = json::parse(std::str::from_utf8(&h.body).unwrap()).unwrap();
+    assert_eq!(j.get("model").as_str(), Some("tiny"));
+    // malformed JSON body -> 400, connection still usable afterwards
+    stream
+        .write_all(&format_request("/v1/predict", b"{\"input\": [1, 2", &[]))
+        .unwrap();
+    assert_eq!(read_response(&mut stream).unwrap().status, 400);
+    // wrong input width -> 400
+    stream
+        .write_all(&format_request("/v1/predict", &body_for(&[1.0, 2.0]), &[]))
+        .unwrap();
+    assert_eq!(read_response(&mut stream).unwrap().status, 400);
+    // stats endpoint reflects the traffic
+    stream.write_all(b"GET /stats HTTP/1.1\r\n\r\n").unwrap();
+    let st = read_response(&mut stream).unwrap();
+    assert_eq!(st.status, 200);
+    let j = json::parse(std::str::from_utf8(&st.body).unwrap()).unwrap();
+    assert!(j.get("bad").as_usize().unwrap_or(0) >= 2, "{j:?}");
+    srv.stop();
+}
