@@ -116,9 +116,9 @@ fn main() -> anyhow::Result<()> {
         let b = batch.x.shape[0];
         // prepared (decode-once planes) vs streaming (re-decode per call)
         // in both accumulation modes, plus scoped-thread batch splitting
-        let one = EngineOpts { threads: 1, prepared: true };
-        let streaming = EngineOpts { threads: 1, prepared: false };
-        let mt = EngineOpts { threads: 2, prepared: true };
+        let one = EngineOpts::default();
+        let streaming = EngineOpts { prepared: false, ..Default::default() };
+        let mt = EngineOpts { threads: 2, ..Default::default() };
         for (label, int_accum, opts) in [
             ("deploy: engine f32-exact streaming, batch 16", false, streaming),
             ("deploy: engine f32-exact prepared, batch 16", false, one),

@@ -34,6 +34,7 @@ pub const BOOL_FLAGS: &[&str] = &[
     "per-tensor",
     "streaming",
     "no-http",
+    "layer-timing",
 ];
 
 #[derive(Debug, Clone, Default)]
@@ -228,6 +229,16 @@ mod tests {
         let a = parse("serve --streaming m.qpkg --threads 3");
         assert!(a.flag("streaming"));
         assert_eq!(a.usize_or("threads", 1), 3);
+        assert_eq!(a.positional, vec!["m.qpkg".to_string()]);
+    }
+
+    #[test]
+    fn layer_timing_is_a_flag_and_telemetry_takes_a_value() {
+        // --layer-timing must not eat the qpkg positional; --telemetry
+        // is a valued option, not a declared flag
+        let a = parse("serve --layer-timing m.qpkg --telemetry run.jsonl");
+        assert!(a.flag("layer-timing"));
+        assert_eq!(a.get("telemetry"), Some("run.jsonl"));
         assert_eq!(a.positional, vec!["m.qpkg".to_string()]);
     }
 

@@ -72,6 +72,8 @@ pub struct QatSpec {
     pub f_th: Schedule,
     pub seed: u64,
     pub trace: Option<(String, usize)>,
+    /// JSONL telemetry path, forwarded to [`RunCfg::telemetry`]
+    pub telemetry: Option<String>,
 }
 
 impl QatSpec {
@@ -87,6 +89,7 @@ impl QatSpec {
             f_th: Schedule::Const(1.1),
             seed,
             trace: None,
+            telemetry: None,
         }
     }
 
@@ -162,6 +165,7 @@ impl<'rt> Lab<'rt> {
         cfg.lam = spec.lam;
         cfg.f_th = spec.f_th;
         cfg.trace = spec.trace.clone();
+        cfg.telemetry = spec.telemetry.clone();
         cfg.data = self.data.clone();
 
         let trainer = Trainer::new(self.rt);

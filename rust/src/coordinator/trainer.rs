@@ -4,13 +4,17 @@
 
 use super::schedule::Schedule;
 use crate::data::{DataCfg, Dataset, Loader};
+use crate::json::Json;
 use crate::metrics::History;
+use crate::obs::events::num;
+use crate::obs::EventSink;
 use crate::osc::{self, TraceRecord};
 use crate::quant::{act_grid, weight_grid};
 use crate::runtime::Backend;
 use crate::state::NamedTensors;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 
 /// Everything one training run needs.
 #[derive(Debug, Clone)]
@@ -37,6 +41,9 @@ pub struct RunCfg {
     pub log_every: u64,
     /// Fig-2 style trace: capture (weight tensor, first k weights) each step
     pub trace: Option<(String, usize)>,
+    /// JSONL telemetry path (`--telemetry`): per-epoch `qat_step`,
+    /// per-layer `qat_layer` and `bn_drift` records for `obs-report`
+    pub telemetry: Option<String>,
     pub data: DataCfg,
 }
 
@@ -60,6 +67,7 @@ impl RunCfg {
             seed,
             log_every: 20,
             trace: None,
+            telemetry: None,
             data: DataCfg::default(),
         }
     }
@@ -141,6 +149,16 @@ impl<'rt> Trainer<'rt> {
         let dataset = Dataset::new(data_cfg);
         let loader = Loader::new(dataset, cfg.seed, 4);
 
+        let sink = EventSink::from_opt(cfg.telemetry.as_deref())
+            .with_context(|| format!("open telemetry file {:?}", cfg.telemetry))?;
+        // per-layer telemetry walks the model's quantized-tensor list
+        let lowbit: Vec<String> = if sink.enabled() {
+            self.rt.index().model(&cfg.model)?.lowbit.clone()
+        } else {
+            Vec::new()
+        };
+        let mut prev_bn: BTreeMap<String, (Vec<f32>, Vec<f32>)> = BTreeMap::new();
+
         let (n_w, p_w) = weight_grid(cfg.bits_w);
         let mut history = History::new(&[
             "step", "loss", "ce", "damp", "acc", "osc_frac", "frozen_frac", "lr",
@@ -200,6 +218,37 @@ impl<'rt> Trainer<'rt> {
                     cfg.lam.at(x) as f64,
                     cfg.f_th.at(x) as f64,
                 ]);
+                if sink.enabled() {
+                    sink.emit(
+                        "qat_step",
+                        &[
+                            ("step", num(step as f64)),
+                            ("loss", num(get("loss"))),
+                            ("acc", num(get("acc"))),
+                            ("osc_frac", num(get("osc_frac"))),
+                            ("frozen_frac", num(get("frozen_frac"))),
+                            ("lr", num(cfg.lr.at(x) as f64)),
+                            ("lam", num(cfg.lam.at(x) as f64)),
+                            ("f_th", num(cfg.f_th.at(x) as f64)),
+                        ],
+                    );
+                    for t in &osc::summarize(&state, &lowbit).per_tensor {
+                        let d = osc::boundary_distances(&state, &t.name, n_w, p_w);
+                        let mean_b = d.iter().map(|v| v.abs() as f64).sum::<f64>()
+                            / d.len().max(1) as f64;
+                        sink.emit(
+                            "qat_layer",
+                            &[
+                                ("step", num(step as f64)),
+                                ("layer", Json::Str(t.name.clone())),
+                                ("osc", num(t.osc_pct() / 100.0)),
+                                ("frozen", num(t.frozen_pct() / 100.0)),
+                                ("boundary", num(mean_b)),
+                            ],
+                        );
+                    }
+                    emit_bn_drift(&sink, &state, &mut prev_bn, step);
+                }
             }
             if step + 1 == cfg.steps {
                 let final_metrics = metrics;
@@ -222,4 +271,50 @@ impl<'rt> Trainer<'rt> {
             final_metrics: vec![],
         })
     }
+}
+
+/// Emit one `bn_drift` record per BN layer: mean |Δ| of the running
+/// mean/var since the previous emission (the first emission only seeds
+/// the baseline). Large drift flags the layers whose EMA statistics
+/// oscillating weights corrupt (§3.2 — why BN re-estimation matters).
+fn emit_bn_drift(
+    sink: &EventSink,
+    state: &NamedTensors,
+    prev: &mut BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    step: u64,
+) {
+    let layers: Vec<String> = state
+        .map
+        .keys()
+        .filter_map(|k| k.strip_prefix("bn/")?.strip_suffix(".bn_m"))
+        .map(|s| s.to_string())
+        .collect();
+    for layer in layers {
+        let (Some(m), Some(v)) = (
+            state.get(&format!("bn/{layer}.bn_m")),
+            state.get(&format!("bn/{layer}.bn_v")),
+        ) else {
+            continue;
+        };
+        if let Some((pm, pv)) = prev.get(&layer) {
+            sink.emit(
+                "bn_drift",
+                &[
+                    ("step", num(step as f64)),
+                    ("layer", Json::Str(layer.clone())),
+                    ("dm", num(mean_abs_diff(&m.data, pm))),
+                    ("dv", num(mean_abs_diff(&v.data, pv))),
+                ],
+            );
+        }
+        prev.insert(layer, (m.data.clone(), v.data.clone()));
+    }
+}
+
+fn mean_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    if n == 0 {
+        return 0.0;
+    }
+    (0..n).map(|i| (a[i] - b[i]).abs() as f64).sum::<f64>() / n as f64
 }

@@ -58,7 +58,9 @@ use super::format::{DeployLayer, DeployModel, DeployOp};
 use super::packed::Packed;
 use crate::runtime::native::kernels;
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 pub use crate::tensor::argmax;
 
@@ -359,11 +361,14 @@ pub struct EngineOpts {
     /// run from the decode-once cached planes; `false` replays the
     /// pre-cache streaming decode on every call (benchmark reference)
     pub prepared: bool,
+    /// accumulate per-layer wall time (`--layer-timing`); off-path cost
+    /// is one bool test per layer — no clock read, no atomic
+    pub layer_timing: bool,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { threads: 1, prepared: true }
+        EngineOpts { threads: 1, prepared: true, layer_timing: false }
     }
 }
 
@@ -393,6 +398,11 @@ pub struct Engine {
     /// (false = f32 path everywhere, the closest mirror of simulated eval)
     pub int_accum: bool,
     pub opts: EngineOpts,
+    /// per-layer accumulated wall time / call count, allocated only when
+    /// `opts.layer_timing` is on (empty otherwise); atomics because the
+    /// threaded forward's row chunks time the same layers concurrently
+    layer_ns: Vec<AtomicU64>,
+    layer_calls: Vec<AtomicU64>,
 }
 
 impl Engine {
@@ -420,7 +430,30 @@ impl Engine {
     /// Share an already-prepared model (serving worker pools pass the
     /// same `Arc<PreparedModel>` to every engine instead of re-decoding).
     pub fn from_prepared(prepared: Arc<PreparedModel>, int_accum: bool, opts: EngineOpts) -> Self {
-        Engine { prepared, int_accum, opts }
+        let slots = if opts.layer_timing { prepared.model().layers.len() } else { 0 };
+        Engine {
+            prepared,
+            int_accum,
+            opts,
+            layer_ns: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+            layer_calls: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Per-layer accumulated compute time since construction; empty when
+    /// `opts.layer_timing` is off.
+    pub fn layer_timing_summary(&self) -> Vec<crate::obs::LayerTime> {
+        self.prepared
+            .model()
+            .layers
+            .iter()
+            .zip(self.layer_ns.iter().zip(self.layer_calls.iter()))
+            .map(|(l, (ns, calls))| crate::obs::LayerTime {
+                name: l.name.clone(),
+                calls: calls.load(Ordering::Relaxed),
+                total_ns: ns.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     pub fn model(&self) -> &DeployModel {
@@ -481,7 +514,10 @@ impl Engine {
     /// The full layer stack over one contiguous row chunk.
     fn forward_chunk(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
         let mut act = x.to_vec();
-        for (l, pl) in self.prepared.model.layers.iter().zip(self.prepared.layers.iter()) {
+        for (li, (l, pl)) in
+            self.prepared.model.layers.iter().zip(self.prepared.layers.iter()).enumerate()
+        {
+            let t0 = if self.opts.layer_timing { Some(Instant::now()) } else { None };
             let (d_in, d_out) = (l.d_in, l.d_out);
             anyhow::ensure!(
                 act.len() == b * d_in,
@@ -576,6 +612,10 @@ impl Engine {
                 }
             }
             act = z;
+            if let Some(t0) = t0 {
+                self.layer_ns[li].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                self.layer_calls[li].fetch_add(1, Ordering::Relaxed);
+            }
         }
         Ok(act)
     }
@@ -893,8 +933,8 @@ mod tests {
         for int_accum in [false, true] {
             for opts in [
                 EngineOpts::default(),
-                EngineOpts { threads: 1, prepared: false },
-                EngineOpts { threads: 3, prepared: true },
+                EngineOpts { prepared: false, ..Default::default() },
+                EngineOpts { threads: 3, ..Default::default() },
             ] {
                 let got = Engine::with_opts(dm.clone(), int_accum, opts)
                     .forward_batch(&x, b)
@@ -932,7 +972,7 @@ mod tests {
             let streaming = Engine::with_opts(
                 dm.clone(),
                 int_accum,
-                EngineOpts { threads: 1, prepared: false },
+                EngineOpts { prepared: false, ..Default::default() },
             )
             .forward_batch(&x, b)
             .unwrap();
@@ -944,7 +984,7 @@ mod tests {
                 let shell = Engine::from_prepared(
                     Arc::new(PreparedModel::unprepared(dm.clone())),
                     int_accum,
-                    EngineOpts { threads: 1, prepared: prep_flag },
+                    EngineOpts { prepared: prep_flag, ..Default::default() },
                 )
                 .forward_batch(&x, b)
                 .unwrap();
@@ -954,7 +994,7 @@ mod tests {
                 let mt = Engine::with_opts(
                     dm.clone(),
                     int_accum,
-                    EngineOpts { threads, prepared: true },
+                    EngineOpts { threads, ..Default::default() },
                 )
                 .forward_batch(&x, b)
                 .unwrap();

@@ -154,7 +154,7 @@ fn status_text(status: u16) -> &'static str {
     }
 }
 
-/// Append one full response (head + body) to `out`.
+/// Append one full JSON response (head + body) to `out`.
 pub fn write_response(
     out: &mut Vec<u8>,
     status: u16,
@@ -162,8 +162,21 @@ pub fn write_response(
     extra: &[(&str, &str)],
     body: &[u8],
 ) {
+    write_response_with_type(out, status, keep_alive, extra, "application/json", body);
+}
+
+/// Append one full response with an explicit `Content-Type` (the
+/// `/metrics` route serves Prometheus text, everything else JSON).
+pub fn write_response_with_type(
+    out: &mut Vec<u8>,
+    status: u16,
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+    content_type: &str,
+    body: &[u8],
+) {
     out.extend_from_slice(format!("HTTP/1.1 {} {}\r\n", status, status_text(status)).as_bytes());
-    out.extend_from_slice(b"Content-Type: application/json\r\n");
+    out.extend_from_slice(format!("Content-Type: {content_type}\r\n").as_bytes());
     out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
     out.extend_from_slice(if keep_alive {
         b"Connection: keep-alive\r\n"
@@ -540,6 +553,18 @@ mod tests {
         assert_eq!(r.header("x-cache"), Some("hit"));
         assert_eq!(r.header("connection"), Some("keep-alive"));
         assert_eq!(r.body, br#"{"pred":2}"#);
+    }
+
+    #[test]
+    fn typed_response_carries_content_type() {
+        let mut out = Vec::new();
+        let ct = "text/plain; version=0.0.4";
+        write_response_with_type(&mut out, 200, false, &[], ct, b"x 1\n");
+        let mut cur = std::io::Cursor::new(out);
+        let r = read_response(&mut cur).unwrap();
+        assert_eq!(r.header("content-type"), Some(ct));
+        assert_eq!(r.header("connection"), Some("close"));
+        assert_eq!(r.body, b"x 1\n");
     }
 
     #[test]

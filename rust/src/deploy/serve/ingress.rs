@@ -24,7 +24,8 @@
 
 use super::cache::{CachedResponse, ResponseCache};
 use super::http::{self, Parse, ParsedReq};
-use super::{percentile, BatchForward, ServeCfg, Server};
+use super::{finite_or_zero, percentile, BatchForward, ServeCfg, Server};
+use crate::obs::{Histogram, Registry};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -77,32 +78,18 @@ pub struct HttpStats {
     /// 503s from expired deadlines
     pub shed_deadline: AtomicU64,
     pub cache_hits: AtomicU64,
+    /// predict answers computed by the pool (the `X-Cache: miss` path)
+    pub cache_misses: AtomicU64,
     /// 500s (engine failure mid-batch)
     pub failed: AtomicU64,
-}
-
-impl HttpStats {
-    fn to_json_body(&self) -> Vec<u8> {
-        let pairs = [
-            ("conns", &self.conns),
-            ("reqs", &self.reqs),
-            ("ok", &self.ok),
-            ("bad", &self.bad),
-            ("shed_queue", &self.shed_queue),
-            ("shed_deadline", &self.shed_deadline),
-            ("cache_hits", &self.cache_hits),
-            ("failed", &self.failed),
-        ];
-        let mut s = String::from("{");
-        for (i, (k, v)) in pairs.iter().enumerate() {
-            if i > 0 {
-                s.push(',');
-            }
-            s.push_str(&format!("\"{k}\":{}", v.load(Ordering::Relaxed)));
-        }
-        s.push('}');
-        s.into_bytes()
-    }
+    /// currently open connections (a gauge; `conns` is cumulative)
+    pub open_conns: AtomicU64,
+    /// end-to-end predict latency, request routed → response queued
+    pub latency: Arc<Histogram>,
+    /// head+body parse time per complete request
+    pub parse_s: Arc<Histogram>,
+    /// duration of each nonblocking response-write burst
+    pub write_s: Arc<Histogram>,
 }
 
 /// A running HTTP front-end (event-loop thread + batching pool).
@@ -160,6 +147,8 @@ struct Pending {
     deadline: Option<Instant>,
     keep_alive: bool,
     cache_key: Option<u64>,
+    /// when the request was routed — closes the latency histogram
+    t0: Instant,
 }
 
 struct Conn {
@@ -176,6 +165,15 @@ struct Conn {
 impl Conn {
     fn queue(&mut self, status: u16, keep_alive: bool, extra: &[(&str, &str)], body: &[u8]) {
         http::write_response(&mut self.wbuf, status, keep_alive, extra, body);
+        if !keep_alive {
+            self.close_after_write = true;
+        }
+    }
+
+    /// Like [`Conn::queue`] but with an explicit content type (the
+    /// `/metrics` route serves Prometheus text, not JSON).
+    fn queue_typed(&mut self, status: u16, keep_alive: bool, ctype: &str, body: &[u8]) {
+        http::write_response_with_type(&mut self.wbuf, status, keep_alive, &[], ctype, body);
         if !keep_alive {
             self.close_after_write = true;
         }
@@ -200,9 +198,81 @@ struct EventLoop {
     cache: Option<ResponseCache>,
     cfg: HttpCfg,
     stats: Arc<HttpStats>,
+    /// `/metrics` registry; stage histograms are adopted at startup,
+    /// counters/gauges are synced from the atomics at scrape time
+    registry: Registry,
 }
 
 impl EventLoop {
+    /// One merged `/stats` document: front-end counters, the pool's
+    /// counters under `pool_*` keys, the most recent engine error, and
+    /// live request-latency percentiles. Keys stay flat so existing
+    /// scrapers of the old front-end-only document keep working.
+    fn stats_body(&self) -> Vec<u8> {
+        let st = &self.stats;
+        let ps = self.server.stats();
+        let pairs = [
+            ("conns", &st.conns),
+            ("reqs", &st.reqs),
+            ("ok", &st.ok),
+            ("bad", &st.bad),
+            ("shed_queue", &st.shed_queue),
+            ("shed_deadline", &st.shed_deadline),
+            ("cache_hits", &st.cache_hits),
+            ("cache_misses", &st.cache_misses),
+            ("failed", &st.failed),
+            ("open_conns", &st.open_conns),
+            ("pool_batches", &ps.batches),
+            ("pool_requests", &ps.requests),
+            ("pool_failed", &ps.failed),
+            ("pool_expired", &ps.expired),
+        ];
+        let mut s = String::from("{");
+        for (k, v) in pairs.iter() {
+            s.push_str(&format!("\"{k}\":{},", v.load(Ordering::Relaxed)));
+        }
+        let snap = st.latency.snapshot();
+        for (k, q) in [("p50_ms", 0.5), ("p95_ms", 0.95), ("p99_ms", 0.99)] {
+            s.push_str(&format!("\"{k}\":{},", finite_or_zero(snap.percentile(q) * 1e3)));
+        }
+        match ps.last_error.lock().expect("stats lock").as_deref() {
+            Some(e) => s.push_str(&format!("\"last_error\":{}", json_quote(e))),
+            None => s.push_str("\"last_error\":null"),
+        }
+        s.push('}');
+        s.into_bytes()
+    }
+
+    /// Render the Prometheus text exposition: sync counters and gauges
+    /// from their source-of-truth atomics, then render the registry
+    /// (the adopted stage histograms are always live).
+    fn metrics_body(&self) -> Vec<u8> {
+        let st = &self.stats;
+        let ps = self.server.stats();
+        let counters = [
+            ("qat_http_requests_total", "requests received", &st.reqs),
+            ("qat_http_ok_total", "2xx responses", &st.ok),
+            ("qat_http_bad_total", "4xx responses", &st.bad),
+            ("qat_http_shed_queue_total", "503s from queue admission control", &st.shed_queue),
+            ("qat_http_shed_deadline_total", "503s from expired deadlines", &st.shed_deadline),
+            ("qat_http_cache_hits_total", "cache-served predict answers", &st.cache_hits),
+            ("qat_http_cache_misses_total", "pool-served predict answers", &st.cache_misses),
+            ("qat_http_failed_total", "5xx responses", &st.failed),
+            ("qat_http_connections_total", "connections accepted", &st.conns),
+            ("qat_pool_batches_total", "pool batches executed", &ps.batches),
+            ("qat_pool_requests_total", "pool jobs admitted", &ps.requests),
+            ("qat_pool_failed_total", "pool jobs failed in the engine", &ps.failed),
+            ("qat_pool_expired_total", "pool jobs expired unserved", &ps.expired),
+        ];
+        for (name, help, src) in counters {
+            self.registry.counter(name, help).store(src.load(Ordering::Relaxed));
+        }
+        self.registry
+            .gauge("qat_http_open_connections", "currently open connections")
+            .set(st.open_conns.load(Ordering::Relaxed) as f64);
+        self.registry.render().into_bytes()
+    }
+
     /// Route one complete request: either queues a response into the
     /// write buffer or parks a [`Pending`] on the connection.
     fn route(&mut self, conn: &mut Conn, req: &ParsedReq, body: &[u8]) {
@@ -220,8 +290,13 @@ impl EventLoop {
             }
             ("GET", "/stats") => {
                 self.stats.ok.fetch_add(1, Ordering::Relaxed);
-                let b = self.stats.to_json_body();
+                let b = self.stats_body();
                 conn.queue(200, req.keep_alive, &[], &b);
+            }
+            ("GET", "/metrics") => {
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                let b = self.metrics_body();
+                conn.queue_typed(200, req.keep_alive, "text/plain; version=0.0.4", &b);
             }
             ("POST" | "GET", _) => {
                 self.stats.bad.fetch_add(1, Ordering::Relaxed);
@@ -235,6 +310,7 @@ impl EventLoop {
     }
 
     fn predict(&mut self, conn: &mut Conn, req: &ParsedReq, body: &[u8]) {
+        let t0 = Instant::now();
         let ka = req.keep_alive;
         let mut bad = |conn: &mut Conn, status: u16, msg: &str| {
             self.stats.bad.fetch_add(1, Ordering::Relaxed);
@@ -294,12 +370,13 @@ impl EventLoop {
                 self.stats.ok.fetch_add(1, Ordering::Relaxed);
                 let b = predict_body(hit.pred, &hit.logits, 0, true);
                 conn.queue(200, ka, &[("X-Cache", "hit")], &b);
+                self.stats.latency.record(t0.elapsed().as_secs_f64());
                 return;
             }
         }
         match self.server.try_submit(input, deadline) {
             Ok(Some(rx)) => {
-                conn.pending = Some(Pending { rx, deadline, keep_alive: ka, cache_key });
+                conn.pending = Some(Pending { rx, deadline, keep_alive: ka, cache_key, t0 });
             }
             Ok(None) => {
                 // queue full: shed with a fast error instead of blocking
@@ -324,8 +401,10 @@ impl EventLoop {
                     cache.put(key, CachedResponse { pred: resp.pred, logits: resp.logits.clone() });
                 }
                 self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                self.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
                 let b = predict_body(resp.pred, &resp.logits, resp.batch_size, false);
                 conn.queue(200, p.keep_alive, &[("X-Cache", "miss")], &b);
+                self.stats.latency.record(p.t0.elapsed().as_secs_f64());
                 true
             }
             Err(mpsc::TryRecvError::Empty) => {
@@ -340,6 +419,7 @@ impl EventLoop {
                         &[("X-Shed", "deadline")],
                         &http::error_body("deadline expired"),
                     );
+                    self.stats.latency.record(p.t0.elapsed().as_secs_f64());
                     true
                 } else {
                     false
@@ -361,6 +441,7 @@ impl EventLoop {
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
                     conn.queue(500, false, &[], &http::error_body("inference failed"));
                 }
+                self.stats.latency.record(p.t0.elapsed().as_secs_f64());
                 true
             }
         }
@@ -381,7 +462,18 @@ fn event_loop(
 ) {
     let server = Server::start_with(fwd.clone(), &serve_cfg);
     let cache = (cfg.cache_cap > 0).then(|| ResponseCache::new(cfg.cache_cap));
-    let mut el = EventLoop { server, fwd, cache, cfg, stats };
+    let registry = Registry::default();
+    let adopt = [
+        ("qat_request_latency_seconds", "predict latency, routed to answered", &stats.latency),
+        ("qat_stage_parse_seconds", "head+body parse time per request", &stats.parse_s),
+        ("qat_stage_write_seconds", "response write-burst duration", &stats.write_s),
+        ("qat_stage_queue_seconds", "pool queue+batch wait per job", &server.stats().queue_wait),
+        ("qat_stage_compute_seconds", "engine forward time per batch", &server.stats().compute),
+    ];
+    for (name, help, h) in adopt {
+        registry.adopt_histogram(name, help, h.clone());
+    }
+    let mut el = EventLoop { server, fwd, cache, cfg, stats, registry };
     let mut conns: Vec<Conn> = Vec::new();
     let mut chunk = [0u8; 16 * 1024];
     while !stop.load(Ordering::Acquire) {
@@ -392,6 +484,7 @@ fn event_loop(
                 Ok((stream, _)) => {
                     progress = true;
                     el.stats.conns.fetch_add(1, Ordering::Relaxed);
+                    el.stats.open_conns.fetch_add(1, Ordering::Relaxed);
                     if stream.set_nonblocking(true).is_err() {
                         continue;
                     }
@@ -419,6 +512,8 @@ fn event_loop(
         // 2. sweep every connection
         for conn in conns.iter_mut() {
             // flush queued response bytes (partial-write safe)
+            let wstart = conn.wpos;
+            let wt0 = (conn.wpos < conn.wbuf.len()).then(Instant::now);
             while conn.wpos < conn.wbuf.len() {
                 match conn.stream.write(&conn.wbuf[conn.wpos..]) {
                     Ok(0) => {
@@ -436,6 +531,11 @@ fn event_loop(
                         conn.dead = true;
                         break;
                     }
+                }
+            }
+            if let Some(t0) = wt0 {
+                if conn.wpos > wstart {
+                    el.stats.write_s.record(t0.elapsed().as_secs_f64());
                 }
             }
             if conn.wpos == conn.wbuf.len() && !conn.wbuf.is_empty() {
@@ -482,6 +582,7 @@ fn event_loop(
             // parse + route complete requests, one in-flight at a time so
             // pipelined responses keep request order
             while conn.pending.is_none() && !conn.close_after_write {
+                let pt0 = Instant::now();
                 match http::parse_request(&conn.rbuf, el.cfg.max_body) {
                     Parse::NeedMore => break,
                     Parse::Bad { status, msg } => {
@@ -492,6 +593,7 @@ fn event_loop(
                         break;
                     }
                     Parse::Ready(req) => {
+                        el.stats.parse_s.record(pt0.elapsed().as_secs_f64());
                         let body: Vec<u8> = conn.rbuf[req.body.clone()].to_vec();
                         conn.rbuf.drain(..req.consumed);
                         el.route(conn, &req, &body);
@@ -502,12 +604,17 @@ fn event_loop(
         }
         // 3. drop dead and idle connections
         let idle = el.cfg.idle_timeout;
+        let before = conns.len();
         conns.retain(|c| {
             !c.dead
                 && !(c.pending.is_none()
                     && c.wbuf.is_empty()
                     && c.last_active.elapsed() > idle)
         });
+        let dropped = (before - conns.len()) as u64;
+        if dropped > 0 {
+            el.stats.open_conns.fetch_sub(dropped, Ordering::Relaxed);
+        }
         if !progress {
             std::thread::sleep(Duration::from_micros(300));
         }
@@ -538,15 +645,17 @@ impl HttpBenchReport {
     /// Flat `http_*` keys, merged beside the channel-level serve rows.
     pub fn merge_into(&self, o: &mut BTreeMap<String, crate::json::Json>) {
         use crate::json::Json;
+        let ka_p99 = finite_or_zero(self.keepalive_p99_ms);
+        let ov_p99 = finite_or_zero(self.overload_p99_ms);
         o.insert("http_keepalive_requests".into(), Json::Num(self.keepalive_requests as f64));
         o.insert("http_keepalive_rps".into(), Json::Num(self.keepalive_rps));
-        o.insert("http_keepalive_p99_ms".into(), Json::Num(self.keepalive_p99_ms));
+        o.insert("http_keepalive_p99_ms".into(), Json::Num(ka_p99));
         o.insert("http_churn_requests".into(), Json::Num(self.churn_requests as f64));
         o.insert("http_churn_rps".into(), Json::Num(self.churn_rps));
         o.insert("http_overload_requests".into(), Json::Num(self.overload_requests as f64));
         o.insert("http_overload_ok".into(), Json::Num(self.overload_ok as f64));
         o.insert("http_overload_shed".into(), Json::Num(self.overload_shed as f64));
-        o.insert("http_overload_p99_ms".into(), Json::Num(self.overload_p99_ms));
+        o.insert("http_overload_p99_ms".into(), Json::Num(ov_p99));
     }
 
     pub fn summary(&self) -> String {
@@ -850,6 +959,50 @@ mod tests {
         stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
         let h = http::read_response(&mut stream).unwrap();
         assert_eq!(h.status, 200);
+        srv.stop();
+    }
+
+    #[test]
+    fn merged_stats_and_metrics_expose_front_end_and_pool() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        // one pool-served answer, then the same query from the cache
+        for _ in 0..2 {
+            stream.write_all(&predict_req(&one_hot_block(0), &[])).unwrap();
+            assert_eq!(http::read_response(&mut stream).unwrap().status, 200);
+        }
+        stream.write_all(b"GET /stats HTTP/1.1\r\n\r\n").unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        let j = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("cache_hits").as_usize(), Some(1));
+        assert_eq!(j.get("cache_misses").as_usize(), Some(1));
+        assert_eq!(j.get("pool_requests").as_usize(), Some(1));
+        assert_eq!(j.get("pool_batches").as_usize(), Some(1));
+        assert_eq!(j.get("open_conns").as_usize(), Some(1));
+        assert_eq!(j.get("last_error"), &crate::json::Json::Null);
+        assert!(j.get("p99_ms").as_f64().unwrap() >= j.get("p50_ms").as_f64().unwrap());
+        stream.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let m = http::read_response(&mut stream).unwrap();
+        assert_eq!(m.status, 200);
+        assert_eq!(m.header("content-type"), Some("text/plain; version=0.0.4"));
+        let text = std::str::from_utf8(&m.body).unwrap();
+        for needle in [
+            "# TYPE qat_http_requests_total counter",
+            "qat_http_requests_total 4",
+            "qat_http_cache_hits_total 1",
+            "qat_http_cache_misses_total 1",
+            "qat_pool_requests_total 1",
+            "# TYPE qat_request_latency_seconds histogram",
+            "qat_request_latency_seconds_count 2",
+            "qat_stage_queue_seconds_count 1",
+            "qat_stage_compute_seconds_count 1",
+            "qat_http_open_connections 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        assert!(text.contains("_bucket{le=\"+Inf\"}"), "{text}");
         srv.stop();
     }
 

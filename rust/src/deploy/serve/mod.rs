@@ -49,6 +49,7 @@ pub use ingress::{bench_http, HttpBenchReport, HttpCfg, HttpServer, HttpStats};
 
 use super::engine::{argmax, Engine};
 use crate::json::Json;
+use crate::obs::Histogram;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -143,6 +144,12 @@ pub struct ServeStats {
     /// most recent engine failure (jobs of a failed batch are dropped,
     /// which closes their response channels; the cause is kept here)
     pub last_error: Mutex<Option<String>>,
+    /// seconds a job waited from submit to compute start (the queue +
+    /// batching stage); `Arc` so the ingress can adopt the same
+    /// histogram into its `/metrics` registry
+    pub queue_wait: Arc<Histogram>,
+    /// seconds one `forward_batch` call took (per batch, not per job)
+    pub compute: Arc<Histogram>,
 }
 
 /// Flips the shared dead flag when the watched thread exits — by
@@ -239,6 +246,7 @@ impl Server {
                             if j.deadline.is_some_and(|d| now > d) {
                                 st.expired.fetch_add(1, Ordering::Relaxed);
                             } else {
+                                st.queue_wait.record(now.duration_since(j.t0).as_secs_f64());
                                 live.push(j);
                             }
                         }
@@ -250,7 +258,10 @@ impl Server {
                         for j in &live {
                             x.extend_from_slice(&j.x);
                         }
-                        match f.forward_batch(&x, b) {
+                        let tc = Instant::now();
+                        let result = f.forward_batch(&x, b);
+                        st.compute.record(tc.elapsed().as_secs_f64());
+                        match result {
                             Ok(logits) => {
                                 for (i, job) in live.into_iter().enumerate() {
                                     let row = &logits[i * num_classes..(i + 1) * num_classes];
@@ -392,10 +403,28 @@ impl Server {
 /// the sample is at or below it. The truncating `((n-1)*q) as usize`
 /// pick this replaces collapsed p95/p99 toward p50 at small n (n=8 put
 /// both p95 and p99 on index 6).
+///
+/// An empty sample returns `NaN` — the explicit no-sample marker — so a
+/// bench/overload leg where every request was shed reports instead of
+/// panicking; serializers must map it to a 0-count row, never emit it
+/// as a JSON number ([`finite_or_zero`]).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     let rank = (sorted.len() as f64 * q).ceil() as usize;
     sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// NaN/±inf → 0.0: the serialization guard for latency metrics, since
+/// `json::to_string` would print a bare `NaN` (invalid JSON). A 0 row
+/// with `requests == 0` reads unambiguously as "no samples".
+pub fn finite_or_zero(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
 }
 
 /// One serving benchmark result (rendered into BENCH_serve.json).
@@ -415,6 +444,13 @@ pub struct ServeReport {
     pub max_ms: f64,
     pub mean_batch: f64,
     pub batches: u64,
+    /// live log-bucket-histogram percentiles over the same latencies —
+    /// the `obs::Histogram` cross-check of the exact sort-based rows
+    /// above, gated alongside them so in-process measurement can't
+    /// silently diverge from offline measurement
+    pub hist_p50_ms: f64,
+    pub hist_p95_ms: f64,
+    pub hist_p99_ms: f64,
     /// per-request top-1 predictions, submit order
     pub preds: Vec<usize>,
     /// network-level rows ([`ingress::bench_http`]), merged into the
@@ -434,11 +470,16 @@ impl ServeReport {
         o.insert("max_batch".to_string(), Json::Num(self.max_batch as f64));
         o.insert("wall_s".to_string(), Json::Num(self.wall_s));
         o.insert("throughput_rps".to_string(), Json::Num(self.throughput_rps));
-        o.insert("p50_ms".to_string(), Json::Num(self.p50_ms));
-        o.insert("p95_ms".to_string(), Json::Num(self.p95_ms));
-        o.insert("p99_ms".to_string(), Json::Num(self.p99_ms));
-        o.insert("mean_ms".to_string(), Json::Num(self.mean_ms));
-        o.insert("max_ms".to_string(), Json::Num(self.max_ms));
+        // latency rows go through the NaN -> 0 guard: an all-shed run
+        // yields no samples and a bare NaN is not valid JSON
+        o.insert("p50_ms".to_string(), Json::Num(finite_or_zero(self.p50_ms)));
+        o.insert("p95_ms".to_string(), Json::Num(finite_or_zero(self.p95_ms)));
+        o.insert("p99_ms".to_string(), Json::Num(finite_or_zero(self.p99_ms)));
+        o.insert("mean_ms".to_string(), Json::Num(finite_or_zero(self.mean_ms)));
+        o.insert("max_ms".to_string(), Json::Num(finite_or_zero(self.max_ms)));
+        o.insert("hist_p50_ms".to_string(), Json::Num(finite_or_zero(self.hist_p50_ms)));
+        o.insert("hist_p95_ms".to_string(), Json::Num(finite_or_zero(self.hist_p95_ms)));
+        o.insert("hist_p99_ms".to_string(), Json::Num(finite_or_zero(self.hist_p99_ms)));
         o.insert("mean_batch".to_string(), Json::Num(self.mean_batch));
         o.insert("batches".to_string(), Json::Num(self.batches as f64));
         if let Some(h) = &self.http {
@@ -502,6 +543,9 @@ pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> 
     let mut preds = Vec::with_capacity(inputs.len());
     let mut lat_ms = Vec::with_capacity(inputs.len());
     let mut batch_sum = 0usize;
+    // the live histogram twin: fed the same per-request latencies, its
+    // bucket-derived percentiles ride next to the exact ones in the gate
+    let hist = Histogram::new();
     for rx in &rxs {
         let r = match rx.recv() {
             Ok(r) => r,
@@ -518,6 +562,7 @@ pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> 
         };
         preds.push(r.pred);
         lat_ms.push(r.latency.as_secs_f64() * 1e3);
+        hist.record(r.latency.as_secs_f64());
         batch_sum += r.batch_size;
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -546,6 +591,9 @@ pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> 
         p99_ms: percentile(&lat_ms, 0.99),
         mean_ms,
         max_ms: *lat_ms.last().expect("non-empty latencies"),
+        hist_p50_ms: hist.percentile(0.5) * 1e3,
+        hist_p95_ms: hist.percentile(0.95) * 1e3,
+        hist_p99_ms: hist.percentile(0.99) * 1e3,
         mean_batch: batch_sum as f64 / inputs.len().max(1) as f64,
         batches,
         preds,
@@ -616,9 +664,14 @@ mod tests {
             assert!(r.batch_size >= 1 && r.batch_size <= 4);
             assert_eq!(r.logits.len(), 3);
         }
+        // the worker loop feeds the stage histograms: one queue-wait
+        // sample per served job, one compute sample per batch
+        assert_eq!(server.stats().queue_wait.count(), 30);
+        let compute_batches = server.stats().compute.count();
         let (batches, requests) = server.shutdown();
         assert_eq!(requests, 30);
         assert!(batches >= 8, "max_batch 4 needs >= 8 batches for 30 requests");
+        assert_eq!(compute_batches, batches);
     }
 
     /// A structurally broken model (layer widths don't chain — only
@@ -799,7 +852,8 @@ mod tests {
         let inputs: Vec<Vec<f32>> = (0..24).map(|i| one_hot_block(i % 3)).collect();
         let cfg = ServeCfg { workers: 2, max_batch: 8, queue_cap: 32 };
         let base = bench_serve(Arc::new(Engine::new(tiny_model())), &cfg, &inputs).unwrap();
-        let eng = Engine::with_opts(tiny_model(), true, EngineOpts { threads: 2, prepared: true });
+        let opts = EngineOpts { threads: 2, ..Default::default() };
+        let eng = Engine::with_opts(tiny_model(), true, opts);
         let mt = bench_serve(Arc::new(eng), &cfg, &inputs).unwrap();
         assert_eq!(base.preds, mt.preds);
         assert!(mt.backend_mode.ends_with("-t2"), "{}", mt.backend_mode);
@@ -834,6 +888,20 @@ mod tests {
         assert_eq!(percentile(&big, 0.0), 1.0);
     }
 
+    /// Regression: `percentile(&[], q)` used to assert — an overload
+    /// bench leg where every request is shed panicked instead of
+    /// reporting. NaN is the no-sample marker and the serialization
+    /// guard turns it into a 0 row.
+    #[test]
+    fn empty_sample_percentile_is_nan_not_panic() {
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert!(percentile(&[], q).is_nan(), "q={q}");
+        }
+        assert_eq!(finite_or_zero(f64::NAN), 0.0);
+        assert_eq!(finite_or_zero(f64::INFINITY), 0.0);
+        assert_eq!(finite_or_zero(3.25), 3.25);
+    }
+
     #[test]
     fn bench_serve_reports_and_roundtrips_json() {
         let engine = Arc::new(Engine::new(tiny_model()));
@@ -851,11 +919,18 @@ mod tests {
         assert!(report.p99_ms <= report.max_ms + 1e-9);
         assert!(report.mean_ms > 0.0 && report.mean_ms <= report.max_ms + 1e-9);
         assert!(report.mean_batch >= 1.0);
+        // the live-histogram cross-check rows track the exact rows to
+        // within the log-bucket resolution (upper edge: >= exact, and
+        // no more than one √2 bucket above)
+        assert!(report.hist_p95_ms >= report.p95_ms * (1.0 - 1e-12), "{report:?}");
+        assert!(report.hist_p95_ms <= report.max_ms * std::f64::consts::SQRT_2 + 1e-9);
+        assert!(report.hist_p50_ms <= report.hist_p95_ms + 1e-9);
         let j = report.to_json();
         assert_eq!(j.get("requests").as_usize(), Some(40));
         // tail-latency fields ride in BENCH_serve.json for future gates
         assert_eq!(j.get("p99_ms").as_f64(), Some(report.p99_ms));
         assert_eq!(j.get("mean_ms").as_f64(), Some(report.mean_ms));
+        assert_eq!(j.get("hist_p95_ms").as_f64(), Some(report.hist_p95_ms));
         let dir = std::env::temp_dir().join("qat_serve_bench");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("BENCH_serve.json");

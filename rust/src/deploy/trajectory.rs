@@ -79,13 +79,16 @@ pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
 
 /// Serve-report fields that must be present once a serve report is
 /// merged: the channel-level throughput/tail rows plus the HTTP
-/// front-end rows (keep-alive vs churn throughput, overload p99).
+/// front-end rows (keep-alive vs churn throughput, overload p99) and
+/// the live-histogram p95 cross-check row (`hist_p95_ms`, the
+/// `obs::Histogram` twin of the offline sort-based `p95_ms`).
 pub const REQUIRED_SERVE_FIELDS: &[&str] = &[
     "throughput_rps",
     "p95_ms",
     "http_keepalive_rps",
     "http_churn_rps",
     "http_overload_p99_ms",
+    "hist_p95_ms",
 ];
 
 /// Serve metrics gated as throughput (higher is better, floor below).
@@ -93,7 +96,9 @@ pub const SERVE_THROUGHPUT_METRICS: &[&str] =
     &["throughput_rps", "http_keepalive_rps", "http_churn_rps"];
 
 /// Serve metrics gated as tail latency (lower is better, ceiling above).
-pub const SERVE_LATENCY_METRICS: &[&str] = &["p95_ms", "http_overload_p99_ms"];
+/// `hist_p95_ms` gates the in-process histogram measurement alongside
+/// the offline percentile so the two paths can't silently diverge.
+pub const SERVE_LATENCY_METRICS: &[&str] = &["p95_ms", "http_overload_p99_ms", "hist_p95_ms"];
 
 /// (streaming row, prepared row) pairs whose ratio is the decode-once /
 /// threading speedup surfaced in the CI job summary.
@@ -313,10 +318,10 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
     for (row, opts) in [
         (
             "engine_forward_pc_w4a4_streaming",
-            EngineOpts { threads: 1, prepared: false },
+            EngineOpts { prepared: false, ..Default::default() },
         ),
-        ("engine_forward_pc_w4a4", EngineOpts { threads: 1, prepared: true }),
-        ("engine_forward_pc_w4a4_mt", EngineOpts { threads, prepared: true }),
+        ("engine_forward_pc_w4a4", EngineOpts::default()),
+        ("engine_forward_pc_w4a4_mt", EngineOpts { threads, ..Default::default() }),
     ] {
         let eng = Engine::with_opts(dm.clone(), true, opts);
         let s = bench_for(row, warmup, budget, || {
@@ -341,10 +346,10 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
     for (row, opts) in [
         (
             "engine_forward_pcact_w4a4_streaming",
-            EngineOpts { threads: 1, prepared: false },
+            EngineOpts { prepared: false, ..Default::default() },
         ),
-        ("engine_forward_pcact_w4a4", EngineOpts { threads: 1, prepared: true }),
-        ("engine_forward_pcact_w4a4_mt", EngineOpts { threads, prepared: true }),
+        ("engine_forward_pcact_w4a4", EngineOpts::default()),
+        ("engine_forward_pcact_w4a4_mt", EngineOpts { threads, ..Default::default() }),
     ] {
         let eng = Engine::with_opts(dm_pcact.clone(), true, opts);
         let s = bench_for(row, warmup, budget, || {
@@ -700,6 +705,7 @@ mod tests {
                 "serve.http_keepalive_rps".to_string(),
                 "serve.http_churn_rps".to_string(),
                 "serve.http_overload_p99_ms".to_string(),
+                "serve.hist_p95_ms".to_string(),
             ],
             "{missing:?}"
         );
@@ -707,6 +713,7 @@ mod tests {
         s.insert("http_keepalive_rps".to_string(), Json::Num(50.0));
         s.insert("http_churn_rps".to_string(), Json::Num(20.0));
         s.insert("http_overload_p99_ms".to_string(), Json::Num(100.0));
+        s.insert("hist_p95_ms".to_string(), Json::Num(4.2));
         r.merge_serve(Json::Obj(s));
         assert!(r.missing_required_rows().is_empty());
     }

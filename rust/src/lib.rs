@@ -39,6 +39,7 @@ pub mod data;
 pub mod deploy;
 pub mod json;
 pub mod metrics;
+pub mod obs;
 pub mod osc;
 pub mod quant;
 pub mod rng;

@@ -33,20 +33,28 @@ USAGE: oscillations-qat <subcommand> [flags]
 
   train     --model mbv2 --estimator lsq --steps 400 --bits-w 3 [--bits-a 3 --quant-a]
             [--per-tensor] [--lam cos(0,0.01)] [--f-th cos(0.04,0.01)] [--seed 0]
-            [--fp-steps 600]   (per-channel LSQ scales are the default;
-            --per-tensor restores the legacy single-scale quantizers)
+            [--fp-steps 600] [--telemetry run.jsonl]
+            (per-channel LSQ scales are the default; --per-tensor restores
+            the legacy single-scale quantizers; --telemetry streams
+            qat_step/qat_layer/bn_drift JSONL records for obs-report)
   eval      --model mbv2 --ckpt ckpts/<tag>.qtns --bits-w 3 [--fp | --quant-a]
   export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a --per-tensor] [--out m.qpkg]
             [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
   serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
             [--threads N|auto] [--exact] [--streaming] [--smoke]
             [--no-http] [--bench-out BENCH_serve.json]
+            [--layer-timing] [--telemetry serve.jsonl]
             benchmark mode (default): channel-level serve bench plus the
             HTTP front-end rows (keep-alive vs churn, overload p99);
-            --no-http skips the network scenarios
+            --no-http skips the network scenarios; --layer-timing turns
+            on per-layer engine timing (reported via --telemetry)
             --listen 127.0.0.1:8090 [--deadline-ms 0 --cache-cap 1024]
             [--queue-cap 1024]   run the HTTP/1.1 front-end instead:
-            POST /v1/predict {\"input\":[...]}, GET /healthz, GET /stats
+            POST /v1/predict {\"input\":[...]}, GET /healthz, GET /stats,
+            GET /metrics (Prometheus text exposition)
+  obs-report  <run.jsonl>   summarize a --telemetry JSONL stream (freeze
+            timeline, top oscillating layers, BN drift, serve rows,
+            per-layer compute time)
   toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
   suite     [--quick]       run everything in one process
@@ -92,9 +100,12 @@ fn main() -> Result<()> {
         return Ok(());
     };
 
-    // toy needs no backend
+    // toy and obs-report need no backend
     if cmd == "toy" {
         return cmd_toy(&args);
+    }
+    if cmd == "obs-report" {
+        return cmd_obs_report(&args);
     }
 
     let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -154,6 +165,7 @@ fn cmd_train(lab: &Lab, args: &Args) -> Result<()> {
         f_th: Schedule::parse(&args.str_or("f-th", "1.1")).expect("bad --f-th"),
         seed: args.u64_or("seed", 0),
         trace: args.get("trace-weight").map(|w| (w.to_string(), 9)),
+        telemetry: args.get("telemetry").map(String::from),
     };
     let out = lab.run_qat(&spec)?;
     println!(
@@ -223,6 +235,7 @@ fn cmd_export(lab: &Lab, args: &Args) -> Result<()> {
             f_th: Schedule::parse(&args.str_or("f-th", "cos(0.04,0.01)")).expect("bad --f-th"),
             seed: args.u64_or("seed", 0),
             trace: None,
+            telemetry: args.get("telemetry").map(String::from),
         };
         let (outcome, dm, report) = lab.run_qat_and_export(&spec)?;
         println!(
@@ -264,6 +277,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = EngineOpts {
         threads: resolve_threads(args.get("threads"), 1),
         prepared: !args.flag("streaming"),
+        layer_timing: args.flag("layer-timing"),
     };
     // load-time prepare: with_opts decodes the packed payloads exactly
     // once (every worker shares the planes through the Arc); --streaming
@@ -307,7 +321,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let srv = HttpServer::start(fwd, &cfg, &http_cfg)?;
         println!(
             "[serve] listening on http://{} — POST /v1/predict {{\"input\":[...]}}, \
-             GET /healthz, GET /stats (deadline default {}ms, cache {} entries)",
+             GET /healthz, GET /stats, GET /metrics (deadline default {}ms, cache {} entries)",
             srv.addr(),
             http_cfg.default_deadline_ms,
             http_cfg.cache_cap
@@ -336,13 +350,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut report = bench_serve(engine.clone(), &cfg, &inputs)?;
     // network-level scenarios over the same engine (--no-http skips)
     if !args.flag("no-http") {
-        let fwd: Arc<dyn BatchForward> = engine;
+        let fwd: Arc<dyn BatchForward> = engine.clone();
         report.http = Some(bench_http(fwd, &cfg, smoke)?);
     }
     println!("{}", report.summary());
     let out = PathBuf::from(args.str_or("bench-out", "BENCH_serve.json"));
     report.write_json(&out)?;
     println!("report -> {}", out.display());
+
+    // --telemetry: stream the bench rows (and, with --layer-timing, the
+    // per-layer engine times) as JSONL for `obs-report`
+    if let Some(path) = args.get("telemetry") {
+        use oscillations_qat::json::Json;
+        use oscillations_qat::obs::events::num;
+        use oscillations_qat::obs::EventSink;
+        let sink = EventSink::to_path(path)?;
+        sink.emit(
+            "serve_bench",
+            &[
+                ("name", Json::Str("channel_serve".into())),
+                ("throughput_rps", num(report.throughput_rps)),
+                ("p50_ms", num(report.p50_ms)),
+                ("p95_ms", num(report.p95_ms)),
+                ("p99_ms", num(report.p99_ms)),
+                ("hist_p95_ms", num(report.hist_p95_ms)),
+                ("mean_batch", num(report.mean_batch)),
+            ],
+        );
+        if let Some(h) = &report.http {
+            sink.emit(
+                "serve_bench",
+                &[
+                    ("name", Json::Str("http".into())),
+                    ("keepalive_rps", num(h.keepalive_rps)),
+                    ("churn_rps", num(h.churn_rps)),
+                    ("overload_p99_ms", num(h.overload_p99_ms)),
+                    ("overload_shed", num(h.overload_shed as f64)),
+                ],
+            );
+        }
+        for lt in engine.layer_timing_summary() {
+            sink.emit(
+                "layer_timing",
+                &[
+                    ("layer", Json::Str(lt.name.clone())),
+                    ("calls", num(lt.calls as f64)),
+                    ("total_ns", num(lt.total_ns as f64)),
+                ],
+            );
+        }
+        println!("telemetry -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_obs_report(args: &Args) -> Result<()> {
+    let path = args.get("file").map(String::from).or_else(|| {
+        args.positional.first().cloned()
+    });
+    let Some(path) = path else {
+        anyhow::bail!("obs-report needs a telemetry file: obs-report <run.jsonl>");
+    };
+    let text = oscillations_qat::obs::report::report_file(&path)
+        .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+    print!("{text}");
     Ok(())
 }
 

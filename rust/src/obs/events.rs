@@ -1,0 +1,106 @@
+//! Structured JSONL telemetry sink.
+//!
+//! One self-describing JSON object per line; every record carries
+//! `kind` (the record shape) and `t_ms` (milliseconds since the sink
+//! was opened). The trainer emits `qat_step`/`qat_layer`/`bn_drift`
+//! records, the serve bench emits `serve_bench`/`layer_timing` —
+//! `obs::report` consumes all of them.
+//!
+//! A disabled sink (`--telemetry` not given) is a no-op whose `emit`
+//! never formats anything, so telemetry costs nothing when off.
+
+use crate::json::{self, Json};
+use std::fs::File;
+use std::io::Write as _;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// JSONL event sink. Cheap to share behind `&` — writes are serialized
+/// by an internal mutex.
+pub struct EventSink {
+    out: Mutex<Option<File>>,
+    t0: Instant,
+}
+
+impl EventSink {
+    /// A sink that drops everything (`enabled()` is false).
+    pub fn disabled() -> Self {
+        EventSink { out: Mutex::new(None), t0: Instant::now() }
+    }
+
+    /// Open (truncate) `path` for writing.
+    pub fn to_path(path: &str) -> std::io::Result<Self> {
+        let f = File::create(path)?;
+        Ok(EventSink { out: Mutex::new(Some(f)), t0: Instant::now() })
+    }
+
+    /// `--telemetry` plumbing: `None` → disabled sink.
+    pub fn from_opt(path: Option<&str>) -> std::io::Result<Self> {
+        match path {
+            Some(p) => Self::to_path(p),
+            None => Ok(Self::disabled()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.out.lock().expect("event sink lock").is_some()
+    }
+
+    /// Append one record. `fields` are merged after `kind`/`t_ms`
+    /// (keys sort in the output, per `json.rs`). Write errors are
+    /// swallowed — telemetry must never take down the workload.
+    pub fn emit(&self, kind: &str, fields: &[(&str, Json)]) {
+        let mut guard = self.out.lock().expect("event sink lock");
+        let Some(f) = guard.as_mut() else { return };
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("kind".to_string(), Json::Str(kind.to_string()));
+        obj.insert("t_ms".to_string(), num(self.t0.elapsed().as_secs_f64() * 1e3));
+        for (k, v) in fields {
+            obj.insert((*k).to_string(), v.clone());
+        }
+        let mut line = json::to_string(&Json::Obj(obj));
+        line.push('\n');
+        let _ = f.write_all(line.as_bytes());
+    }
+}
+
+/// Finite-safe number: `json.rs` would happily print `NaN`/`inf`
+/// (invalid JSON), so every numeric event field goes through here.
+pub fn num(v: f64) -> Json {
+    Json::Num(if v.is_finite() { v } else { 0.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_is_a_noop() {
+        let s = EventSink::disabled();
+        assert!(!s.enabled());
+        s.emit("x", &[("a", num(1.0))]); // must not panic
+    }
+
+    #[test]
+    fn emits_one_parseable_object_per_line() {
+        let dir = std::env::temp_dir().join(format!("obs_ev_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let s = EventSink::to_path(path.to_str().unwrap()).unwrap();
+        assert!(s.enabled());
+        s.emit("qat_step", &[("step", num(3.0)), ("loss", num(0.25))]);
+        s.emit("qat_layer", &[("layer", Json::Str("l0.w".into())), ("osc", num(f64::NAN))]);
+        drop(s);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let a = json::parse(lines[0]).unwrap();
+        assert_eq!(a.get("kind").as_str(), Some("qat_step"));
+        assert_eq!(a.get("step").as_f64(), Some(3.0));
+        assert!(a.get("t_ms").as_f64().unwrap() >= 0.0);
+        // NaN was sanitized to 0 and the line still parses
+        let b = json::parse(lines[1]).unwrap();
+        assert_eq!(b.get("osc").as_f64(), Some(0.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,415 @@
+//! Atomic metric primitives + the Prometheus-text registry.
+//!
+//! Everything here is lock-free on the record path: counters and gauges
+//! are single atomics, histograms are fixed arrays of atomic buckets.
+//! The only mutex sits in [`Registry`]'s name table, taken on
+//! registration and scrape — never per sample.
+//!
+//! The histogram is **log-bucketed**: 64 buckets whose upper edges grow
+//! by √2 from 1µs, covering ~1µs .. ~36min of latency with ≤ one
+//! bucket (≤ ~41%) of relative error. Percentiles are derived
+//! nearest-rank over the bucket counts and return the containing
+//! bucket's upper edge — validated against the exact sort-based
+//! `deploy::serve::percentile` (see the tests here and the proptest in
+//! `tests/proptests.rs`). An empty histogram reports `NaN`, the same
+//! no-sample marker the hardened `serve::percentile` uses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counter. `store` exists so scrape time can sync a registry
+/// counter from an external source-of-truth atomic (e.g. `HttpStats`).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins f64 gauge (bit-stored in one atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of finite buckets; one more overflow bucket rides behind them.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Upper edge of the first bucket, in seconds (1µs).
+const HIST_LO: f64 = 1e-6;
+
+/// Upper bucket edges in seconds, ascending: `HIST_LO * (√2)^i`.
+/// Computed once — every histogram shares the same geometry, which is
+/// what makes snapshots mergeable across histograms of the same name.
+pub fn bucket_edges() -> &'static [f64; HIST_BUCKETS] {
+    static EDGES: OnceLock<[f64; HIST_BUCKETS]> = OnceLock::new();
+    EDGES.get_or_init(|| {
+        let mut e = [0.0; HIST_BUCKETS];
+        for (i, v) in e.iter_mut().enumerate() {
+            *v = HIST_LO * 2f64.powf(i as f64 / 2.0);
+        }
+        e
+    })
+}
+
+/// Bucket index for a value: the first bucket whose upper edge is >= v
+/// (`HIST_BUCKETS` = the overflow bucket). `partition_point` on the
+/// shared edge table keeps `record` and `percentile` consistent with
+/// each other by construction — no float-log fuzz at bucket borders.
+fn bucket_of(secs: f64) -> usize {
+    bucket_edges().partition_point(|&e| secs > e)
+}
+
+/// Lock-free log-bucketed latency histogram (values in seconds).
+#[derive(Debug)]
+pub struct Histogram {
+    /// `HIST_BUCKETS` finite buckets + 1 overflow bucket
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..=HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample (seconds). Negative/NaN samples clamp into the
+    /// first bucket rather than being dropped — a sample happened.
+    pub fn record(&self, secs: f64) {
+        let secs = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        self.buckets[bucket_of(secs)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough copy for scraping/merging. Relaxed loads: a
+    /// scrape racing a record may see the bucket before the count (or
+    /// vice versa) — off-by-one-sample, which exposition tolerates.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_seconds: self.sum_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+
+    /// Nearest-rank percentile from the live buckets; `NaN` when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        self.snapshot().percentile(q)
+    }
+}
+
+/// A point-in-time copy of one histogram's buckets, mergeable with
+/// other snapshots of the same geometry (all histograms here share it).
+#[derive(Debug, Clone, Default)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_seconds: f64,
+}
+
+impl HistogramSnapshot {
+    /// Add another snapshot's samples into this one (e.g. folding
+    /// per-worker histograms into a pool-wide view).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_seconds += other.sum_seconds;
+    }
+
+    /// Nearest-rank percentile (rank rounded up, like
+    /// `deploy::serve::percentile`): the upper edge of the bucket
+    /// holding the rank-th sample. `NaN` marks an empty sample — the
+    /// caller serializes it as a 0-count row, never as a number.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let edges = bucket_edges();
+                // the overflow bucket has no finite edge; report the
+                // largest finite one (the floor of the true value)
+                return edges[i.min(HIST_BUCKETS - 1)];
+            }
+        }
+        bucket_edges()[HIST_BUCKETS - 1]
+    }
+
+    pub fn mean_seconds(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum_seconds / self.count as f64
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Named metric table rendering Prometheus text exposition. Metrics are
+/// `Arc`-shared: `counter`/`gauge`/`histogram` get-or-create (so call
+/// sites need no registration phase), and `adopt_histogram` registers a
+/// histogram that lives somewhere else (e.g. inside `ServeStats`) so
+/// the hot path records without ever touching the registry.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, (String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().expect("registry lock");
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::Counter(Arc::new(Counter::default()))));
+        match &entry.1 {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().expect("registry lock");
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::Gauge(Arc::new(Gauge::default()))));
+        match &entry.1 {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().expect("registry lock");
+        let entry = m.entry(name.to_string()).or_insert_with(|| {
+            (help.to_string(), Metric::Histogram(Arc::new(Histogram::new())))
+        });
+        match &entry.1 {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    /// Register an externally-owned histogram under `name` (the owner
+    /// keeps recording into its own `Arc`; scrapes see it live).
+    pub fn adopt_histogram(&self, name: &str, help: &str, h: Arc<Histogram>) {
+        let mut m = self.metrics.lock().expect("registry lock");
+        m.insert(name.to_string(), (help.to_string(), Metric::Histogram(h)));
+    }
+
+    /// Prometheus text exposition (version 0.0.4): `# HELP`/`# TYPE`
+    /// per family; histograms render cumulative `_bucket{le=...}` rows
+    /// plus `_sum`/`_count`.
+    pub fn render(&self) -> String {
+        let m = self.metrics.lock().expect("registry lock");
+        let mut out = String::new();
+        for (name, (help, metric)) in m.iter() {
+            if !help.is_empty() {
+                let _ = writeln!(out, "# HELP {name} {help}");
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = writeln!(out, "# TYPE {name} histogram");
+                    let snap = h.snapshot();
+                    let edges = bucket_edges();
+                    let mut cum = 0u64;
+                    for (i, &edge) in edges.iter().enumerate() {
+                        cum += snap.buckets.get(i).copied().unwrap_or(0);
+                        let _ = writeln!(out, "{name}_bucket{{le=\"{edge}\"}} {cum}");
+                    }
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", snap.count);
+                    let _ = writeln!(out, "{name}_sum {}", snap.sum_seconds);
+                    let _ = writeln!(out, "{name}_count {}", snap.count);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::serve::percentile as exact_percentile;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.store(17);
+        assert_eq!(c.get(), 17);
+        let g = Gauge::default();
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn bucket_edges_are_sorted_and_bucketing_is_consistent() {
+        let edges = bucket_edges();
+        for w in edges.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // a value strictly inside bucket i maps to i; the edge itself
+        // belongs to its own bucket (le = "less or equal")
+        for (i, &e) in edges.iter().enumerate() {
+            assert_eq!(bucket_of(e), i, "edge {e} must close bucket {i}");
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(f64::MAX), HIST_BUCKETS, "overflow bucket");
+    }
+
+    #[test]
+    fn empty_histogram_reports_nan_not_panic() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.percentile(0.5).is_nan());
+        assert!(h.snapshot().mean_seconds().is_nan());
+    }
+
+    #[test]
+    fn percentiles_stay_within_one_bucket_of_exact() {
+        let mut rng = Pcg32::new(3, 0x0b5);
+        for n in [1usize, 2, 7, 100, 999] {
+            let h = Histogram::new();
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| (rng.uniform(1e-5, 0.5) as f64).powi(2) + 1e-6)
+                .collect();
+            for &x in &xs {
+                h.record(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.95, 0.99] {
+                let exact = exact_percentile(&xs, q);
+                let approx = h.percentile(q);
+                let (be, ba) = (bucket_of(exact), bucket_of(approx));
+                assert!(
+                    be.abs_diff(ba) <= 1,
+                    "n={n} q={q}: exact {exact} (bucket {be}) vs hist {approx} (bucket {ba})"
+                );
+                // the reported edge is an upper bound of the true value
+                assert!(approx >= exact * (1.0 - 1e-12), "n={n} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshots_merge_additively() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for i in 0..50 {
+            a.record(1e-4 * (i + 1) as f64);
+            b.record(1e-2 * (i + 1) as f64);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.count, 100);
+        let sum = a.snapshot().sum_seconds + b.snapshot().sum_seconds;
+        assert!((merged.sum_seconds - sum).abs() < 1e-9);
+        // the merged p99 lands in b's (slower) range
+        assert!(merged.percentile(0.99) > a.percentile(0.99));
+    }
+
+    #[test]
+    fn registry_renders_valid_exposition() {
+        let r = Registry::new();
+        r.counter("qat_test_total", "test counter").add(3);
+        r.gauge("qat_test_gauge", "test gauge").set(1.5);
+        let h = r.histogram("qat_test_seconds", "test histogram");
+        h.record(0.002);
+        h.record(0.004);
+        let text = r.render();
+        assert!(text.contains("# TYPE qat_test_total counter"), "{text}");
+        assert!(text.contains("qat_test_total 3"), "{text}");
+        assert!(text.contains("# TYPE qat_test_gauge gauge"), "{text}");
+        assert!(text.contains("qat_test_gauge 1.5"), "{text}");
+        assert!(text.contains("# TYPE qat_test_seconds histogram"), "{text}");
+        assert!(text.contains("qat_test_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("qat_test_seconds_count 2"), "{text}");
+        // bucket rows are cumulative and end at the total count
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("qat_test_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-cumulative bucket row: {line}");
+            last = v;
+        }
+        assert_eq!(last, 2);
+        // get-or-create returns the same underlying metric
+        assert_eq!(r.counter("qat_test_total", "").get(), 3);
+    }
+
+    #[test]
+    fn adopted_histogram_is_scraped_live() {
+        let r = Registry::new();
+        let h = Arc::new(Histogram::new());
+        r.adopt_histogram("qat_adopted_seconds", "externally owned", h.clone());
+        h.record(0.01);
+        let text = r.render();
+        assert!(text.contains("qat_adopted_seconds_count 1"), "{text}");
+    }
+}

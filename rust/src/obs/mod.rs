@@ -1,0 +1,33 @@
+//! Unified observability: metrics registry, stage tracing, and the
+//! structured telemetry event stream — shared by training and serving.
+//!
+//! Zero new dependencies, by the same rule as the rest of the repo:
+//!
+//! * [`metrics`] — atomic [`metrics::Counter`]s / [`metrics::Gauge`]s
+//!   and lock-free log-bucketed [`metrics::Histogram`]s behind a
+//!   [`metrics::Registry`] that renders Prometheus text exposition
+//!   (the `GET /metrics` route of the HTTP ingress).
+//! * [`trace`] — per-request stage timing support
+//!   (accept→parse→queue→batch→compute→write stopwatches threaded
+//!   through the ingress and the batching pool) plus the per-layer
+//!   engine timing summary behind `EngineOpts::layer_timing`.
+//! * [`events`] — the JSONL telemetry sink (`--telemetry PATH` on
+//!   `train` and `serve`): one self-describing JSON object per line,
+//!   fed per-epoch per-layer oscillation frequency, frozen fraction,
+//!   boundary distance and BN-drift records by the QAT trainer.
+//! * [`report`] — the `obs-report` CLI summarizer over a telemetry
+//!   file: top oscillating layers, freeze timeline, latency breakdown.
+//!
+//! The histograms are the live twin of the offline sort-based
+//! percentiles in `deploy::serve`: `bench-deploy` carries both as
+//! cross-check rows so in-process and offline measurement can be
+//! compared by the regression gate.
+
+pub mod events;
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+pub use events::EventSink;
+pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use trace::{LayerTime, Stopwatch};

@@ -1,0 +1,199 @@
+//! `obs-report`: summarize a telemetry JSONL file into a terminal
+//! report — freeze timeline, top oscillating layers, BN drift, serve
+//! bench rows, and the per-layer compute-time table.
+//!
+//! The reader is deliberately forgiving: unknown `kind`s and
+//! unparseable lines are counted and skipped, so a report can always be
+//! produced from a partially-written file (e.g. a live training run).
+
+use crate::json::{self, Json};
+use crate::obs::trace::{layer_table, LayerTime};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Summarize the telemetry file at `path`.
+pub fn report_file(path: &str) -> std::io::Result<String> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(report_from_str(&text))
+}
+
+/// Summarize telemetry JSONL text. Never fails: bad lines are skipped
+/// (and counted), an empty stream yields an explicit empty report.
+pub fn report_from_str(text: &str) -> String {
+    let mut steps: Vec<Json> = Vec::new();
+    // latest qat_layer / bn_drift record per layer (later lines win)
+    let mut layers: BTreeMap<String, Json> = BTreeMap::new();
+    let mut drifts: BTreeMap<String, Json> = BTreeMap::new();
+    let mut serve_rows: Vec<Json> = Vec::new();
+    let mut timing: Vec<LayerTime> = Vec::new();
+    let mut skipped = 0usize;
+    let mut total = 0usize;
+
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        total += 1;
+        let Ok(j) = json::parse(line) else {
+            skipped += 1;
+            continue;
+        };
+        match j.get("kind").as_str() {
+            Some("qat_step") => steps.push(j),
+            Some("qat_layer") => {
+                if let Some(name) = j.get("layer").as_str() {
+                    layers.insert(name.to_string(), j.clone());
+                }
+            }
+            Some("bn_drift") => {
+                if let Some(name) = j.get("layer").as_str() {
+                    drifts.insert(name.to_string(), j.clone());
+                }
+            }
+            Some("serve_bench") => serve_rows.push(j),
+            Some("layer_timing") => {
+                timing.push(LayerTime {
+                    name: j.get("layer").as_str().unwrap_or("?").to_string(),
+                    calls: j.get("calls").as_f64().unwrap_or(0.0) as u64,
+                    total_ns: j.get("total_ns").as_f64().unwrap_or(0.0) as u64,
+                });
+            }
+            _ => skipped += 1,
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "telemetry report: {total} records ({skipped} skipped)");
+    if total == 0 {
+        out.push_str("(empty telemetry stream)\n");
+        return out;
+    }
+
+    if !steps.is_empty() {
+        let _ = writeln!(out, "\n== freeze timeline ({} steps logged) ==", steps.len());
+        let _ = writeln!(
+            out,
+            "{:>8} {:>10} {:>8} {:>8} {:>9}",
+            "step", "loss", "acc", "osc%", "frozen%"
+        );
+        // downsample long runs to ~20 evenly spaced rows, keeping the last
+        let stride = (steps.len() / 20).max(1);
+        for (i, s) in steps.iter().enumerate() {
+            if i % stride != 0 && i + 1 != steps.len() {
+                continue;
+            }
+            let g = |k: &str| s.get(k).as_f64().unwrap_or(0.0);
+            let _ = writeln!(
+                out,
+                "{:>8} {:>10.4} {:>8.4} {:>8.2} {:>9.2}",
+                g("step") as u64,
+                g("loss"),
+                g("acc"),
+                100.0 * g("osc_frac"),
+                100.0 * g("frozen_frac"),
+            );
+        }
+    }
+
+    if !layers.is_empty() {
+        let mut rows: Vec<(&String, &Json)> = layers.iter().collect();
+        rows.sort_by(|a, b| {
+            let (oa, ob) = (
+                a.1.get("osc").as_f64().unwrap_or(0.0),
+                b.1.get("osc").as_f64().unwrap_or(0.0),
+            );
+            ob.partial_cmp(&oa).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let _ = writeln!(out, "\n== top oscillating layers (latest record per layer) ==");
+        let _ = writeln!(
+            out,
+            "{:<28} {:>8} {:>9} {:>10}",
+            "layer", "osc%", "frozen%", "boundary"
+        );
+        for (name, j) in rows.iter().take(10) {
+            let g = |k: &str| j.get(k).as_f64().unwrap_or(0.0);
+            let _ = writeln!(
+                out,
+                "{:<28} {:>8.2} {:>9.2} {:>10.4}",
+                name,
+                100.0 * g("osc"),
+                100.0 * g("frozen"),
+                g("boundary"),
+            );
+        }
+    }
+
+    if !drifts.is_empty() {
+        let _ = writeln!(out, "\n== BN drift (latest record per layer) ==");
+        let _ = writeln!(out, "{:<28} {:>12} {:>12}", "layer", "d_mean", "d_var");
+        for (name, j) in drifts.iter() {
+            let g = |k: &str| j.get(k).as_f64().unwrap_or(0.0);
+            let _ = writeln!(out, "{:<28} {:>12.6} {:>12.6}", name, g("dm"), g("dv"));
+        }
+    }
+
+    if !serve_rows.is_empty() {
+        let _ = writeln!(out, "\n== serve bench ==");
+        for j in &serve_rows {
+            let name = j.get("name").as_str().unwrap_or("?");
+            let mut parts: Vec<String> = Vec::new();
+            if let Some(o) = j.as_obj() {
+                for (k, v) in o {
+                    if matches!(k.as_str(), "kind" | "t_ms" | "name") {
+                        continue;
+                    }
+                    if let Some(n) = v.as_f64() {
+                        parts.push(format!("{k}={n:.3}"));
+                    }
+                }
+            }
+            let _ = writeln!(out, "{name:<24} {}", parts.join("  "));
+        }
+    }
+
+    if !timing.is_empty() {
+        let _ = writeln!(out, "\n== per-layer compute time ==");
+        out.push_str(&layer_table(&timing));
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stream_reports_itself() {
+        let r = report_from_str("");
+        assert!(r.contains("0 records"), "{r}");
+        assert!(r.contains("empty telemetry stream"), "{r}");
+    }
+
+    #[test]
+    fn summarizes_all_record_kinds_and_skips_garbage() {
+        let src = concat!(
+            r#"{"kind":"qat_step","step":0,"loss":1.5,"acc":0.1,"osc_frac":0.2,"frozen_frac":0}"#, "\n",
+            r#"{"kind":"qat_step","step":50,"loss":0.6,"acc":0.8,"osc_frac":0.05,"frozen_frac":0.4}"#, "\n",
+            r#"{"kind":"qat_layer","layer":"l0.w","osc":0.01,"frozen":0.5,"boundary":0.12}"#, "\n",
+            r#"{"kind":"qat_layer","layer":"l1.w","osc":0.30,"frozen":0.1,"boundary":0.02}"#, "\n",
+            r#"{"kind":"qat_layer","layer":"l1.w","osc":0.40,"frozen":0.2,"boundary":0.01}"#, "\n",
+            r#"{"kind":"bn_drift","layer":"l0","dm":0.001,"dv":0.0002}"#, "\n",
+            r#"{"kind":"serve_bench","name":"keepalive","rps":1200.5,"p95_ms":3.2}"#, "\n",
+            r#"{"kind":"layer_timing","layer":"l1.w","calls":8,"total_ns":4000000}"#, "\n",
+            "not json at all\n",
+        );
+        let r = report_from_str(src);
+        assert!(r.contains("9 records (1 skipped)"), "{r}");
+        assert!(r.contains("freeze timeline (2 steps logged)"), "{r}");
+        // latest qat_layer record per layer wins, sorted osc-desc
+        let l1 = r.find("l1.w").unwrap();
+        let l0 = r.find("l0.w").unwrap();
+        assert!(l1 < l0, "l1.w (osc 40%) ranks above l0.w:\n{r}");
+        assert!(r.contains("40.00"), "latest l1.w record used:\n{r}");
+        assert!(r.contains("BN drift"), "{r}");
+        assert!(r.contains("keepalive"), "{r}");
+        assert!(r.contains("rps=1200.500"), "{r}");
+        assert!(r.contains("per-layer compute time"), "{r}");
+    }
+}

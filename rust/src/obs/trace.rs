@@ -1,0 +1,124 @@
+//! Stage timing helpers: the request-path stopwatch and the per-layer
+//! engine timing summary.
+//!
+//! The ingress and pool time each stage of a request's life
+//! (accept→parse→queue→batch→compute→write) into the stage histograms
+//! of `obs::metrics` — this module only carries the tiny clock
+//! plumbing, so the hot paths stay free of metric bookkeeping beyond a
+//! single `Instant::now()` per stage boundary.
+
+use std::time::Instant;
+
+/// Restartable stopwatch over `Instant`. `lap()` returns the seconds
+/// since the last lap (or construction) and restarts, so consecutive
+/// laps partition a request's life into disjoint stages.
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Seconds since the last lap; resets the lap origin.
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.0).as_secs_f64();
+        self.0 = now;
+        dt
+    }
+
+    /// Seconds since construction/last lap, without resetting.
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulated compute time of one model layer, as reported by
+/// `Engine::layer_timing_summary()` when `EngineOpts::layer_timing`
+/// is on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerTime {
+    pub name: String,
+    pub calls: u64,
+    pub total_ns: u64,
+}
+
+impl LayerTime {
+    pub fn total_ms(&self) -> f64 {
+        self.total_ns as f64 * 1e-6
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.calls == 0 {
+            return 0.0;
+        }
+        self.total_ns as f64 * 1e-3 / self.calls as f64
+    }
+}
+
+/// Fixed-width text table over a layer timing summary, sorted by total
+/// time descending — the shape `obs-report` and `serve --bench` print.
+pub fn layer_table(rows: &[LayerTime]) -> String {
+    let mut rows: Vec<&LayerTime> = rows.iter().collect();
+    rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+    let total: u64 = rows.iter().map(|r| r.total_ns).sum();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>8} {:>12} {:>10} {:>6}\n",
+        "layer", "calls", "total_ms", "mean_us", "share"
+    ));
+    for r in rows {
+        let share = if total > 0 { 100.0 * r.total_ns as f64 / total as f64 } else { 0.0 };
+        out.push_str(&format!(
+            "{:<28} {:>8} {:>12.3} {:>10.2} {:>5.1}%\n",
+            r.name,
+            r.calls,
+            r.total_ms(),
+            r.mean_us(),
+            share
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_laps_partition_elapsed_time() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let a = sw.lap();
+        let b = sw.lap();
+        assert!(a >= 0.002, "first lap covers the sleep: {a}");
+        assert!(b < a, "second lap restarts from the first: {b} vs {a}");
+    }
+
+    #[test]
+    fn layer_table_sorts_by_total_and_reports_share() {
+        let rows = vec![
+            LayerTime { name: "l0.small".into(), calls: 10, total_ns: 1_000_000 },
+            LayerTime { name: "l1.big".into(), calls: 10, total_ns: 3_000_000 },
+        ];
+        let t = layer_table(&rows);
+        let big = t.find("l1.big").unwrap();
+        let small = t.find("l0.small").unwrap();
+        assert!(big < small, "rows sorted by total desc:\n{t}");
+        assert!(t.contains("75.0%"), "share column:\n{t}");
+        assert!(rows[1].mean_us() > 299.0 && rows[1].mean_us() < 301.0);
+    }
+
+    #[test]
+    fn empty_layer_table_is_just_the_header() {
+        let t = layer_table(&[]);
+        assert_eq!(t.lines().count(), 1);
+    }
+}

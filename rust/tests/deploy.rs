@@ -100,7 +100,7 @@ fn engine_threads() -> usize {
 }
 
 fn engine_opts() -> EngineOpts {
-    EngineOpts { threads: engine_threads(), prepared: true }
+    EngineOpts { threads: engine_threads(), ..Default::default() }
 }
 
 /// Chunked batch prediction over the whole input set (the serving-shaped
@@ -203,8 +203,8 @@ fn deploy_roundtrip_suite() {
     // decode-once planes, streaming decode, and the scoped-thread batch
     // split must all reproduce the same predictions
     for (label, opts) in [
-        ("streaming", EngineOpts { threads: 1, prepared: false }),
-        ("threads=2", EngineOpts { threads: 2, prepared: true }),
+        ("streaming", EngineOpts { prepared: false, ..Default::default() }),
+        ("threads=2", EngineOpts { threads: 2, ..Default::default() }),
     ] {
         let eng = Engine::with_opts(dm2.clone(), true, opts);
         let preds = predict_all(&eng, &inputs);
@@ -313,8 +313,8 @@ fn per_channel_deploy_roundtrip_suite() {
     // the threaded and streaming engines reproduce the same predictions
     // on the per-channel export too
     for (label, opts) in [
-        ("streaming", EngineOpts { threads: 1, prepared: false }),
-        ("threads=2", EngineOpts { threads: 2, prepared: true }),
+        ("streaming", EngineOpts { prepared: false, ..Default::default() }),
+        ("threads=2", EngineOpts { threads: 2, ..Default::default() }),
     ] {
         let eng = Engine::with_opts(dm2.clone(), true, opts);
         let preds = predict_all(&eng, &inputs);

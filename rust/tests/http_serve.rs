@@ -278,3 +278,50 @@ fn health_stats_and_malformed_requests() {
     assert!(j.get("bad").as_usize().unwrap_or(0) >= 2, "{j:?}");
     srv.stop();
 }
+
+#[test]
+fn metrics_endpoint_exposes_prometheus_text() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    // one real predict so latency + every stage histogram has a sample
+    stream
+        .write_all(&format_request("/v1/predict", &body_for(&one_hot_block(0)), &[]))
+        .unwrap();
+    assert_eq!(read_response(&mut stream).unwrap().status, 200);
+    stream.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("content-type"), Some("text/plain; version=0.0.4"));
+    let text = std::str::from_utf8(&resp.body).unwrap();
+    for needle in [
+        "# TYPE qat_http_requests_total counter",
+        "qat_http_cache_misses_total 1",
+        "qat_pool_requests_total 1",
+        "qat_pool_batches_total 1",
+        "# TYPE qat_http_open_connections gauge",
+        "qat_http_open_connections 1",
+        "# TYPE qat_request_latency_seconds histogram",
+        "qat_request_latency_seconds_count 1",
+        "qat_request_latency_seconds_bucket{le=\"+Inf\"} 1",
+        "qat_stage_queue_seconds_count 1",
+        "qat_stage_compute_seconds_count 1",
+        "qat_stage_parse_seconds_count",
+        "qat_stage_write_seconds_count",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    // bucket rows are cumulative and the +Inf row closes at the count
+    let mut last = 0u64;
+    let mut rows = 0;
+    let bucket_rows =
+        text.lines().filter(|l| l.starts_with("qat_request_latency_seconds_bucket"));
+    for line in bucket_rows {
+        let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v >= last, "non-cumulative bucket row: {line}");
+        last = v;
+        rows += 1;
+    }
+    assert!(rows > 10, "expected the full edge table, got {rows} rows");
+    assert_eq!(last, 1, "+Inf row must equal the sample count");
+    srv.stop();
+}

@@ -8,6 +8,7 @@
 
 use oscillations_qat::analysis::histogram::Histogram;
 use oscillations_qat::analysis::kl::gaussian_kl;
+use oscillations_qat::deploy::serve::percentile as exact_percentile;
 use oscillations_qat::coordinator::Schedule;
 use oscillations_qat::deploy::engine::{
     dw_f32, dw_i32, matmul_f32, matmul_i32, packed_dw, packed_matmul, packed_matmul_i32,
@@ -15,6 +16,8 @@ use oscillations_qat::deploy::engine::{
 };
 use oscillations_qat::deploy::packed::Packed;
 use oscillations_qat::json;
+use oscillations_qat::obs::metrics::bucket_edges;
+use oscillations_qat::obs::Histogram as ObsHistogram;
 use oscillations_qat::quant::{self, range_est};
 use oscillations_qat::rng::Pcg32;
 use oscillations_qat::runtime::native::kernels::{self, OscState};
@@ -174,6 +177,40 @@ fn histogram_conserves_mass() {
         assert_eq!(binned + h.clipped, h.total);
         assert_eq!(h.total, n as u64);
     });
+}
+
+#[test]
+fn obs_histogram_percentiles_within_one_bucket_of_exact() {
+    // the live log-bucketed latency histogram (obs::metrics) must agree
+    // with the exact sort-based serve::percentile to within one √2
+    // bucket at every sample size from 1 to ~10k; the bucket upper edge
+    // it reports may over-state the true value but never under-state it
+    for_random_cases(30, "obs_hist_pcts", |rng| {
+        let n = 1 + rng.below(10_000);
+        let h = ObsHistogram::new();
+        let mut xs: Vec<f64> = (0..n)
+            .map(|_| (rng.uniform(0.0, 1.0) as f64).powi(3) * 2.0 + 1e-6)
+            .collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // same edge-table indexing the histogram itself uses
+        let bucket = |v: f64| bucket_edges().partition_point(|&e| v > e);
+        for q in [0.5, 0.95, 0.99] {
+            let exact = exact_percentile(&xs, q);
+            let approx = h.percentile(q);
+            assert!(approx.is_finite(), "n={n} q={q}: non-finite {approx}");
+            let (be, ba) = (bucket(exact), bucket(approx));
+            assert!(
+                be.abs_diff(ba) <= 1,
+                "n={n} q={q}: exact {exact} (bucket {be}) vs hist {approx} (bucket {ba})"
+            );
+            assert!(approx >= exact * (1.0 - 1e-12), "n={n} q={q}: {approx} < {exact}");
+        }
+    });
+    // empty histograms mirror serve::percentile's NaN no-sample marker
+    assert!(ObsHistogram::new().percentile(0.5).is_nan());
 }
 
 // ---------------------------------------------------------------------
@@ -705,7 +742,7 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
             let streaming = oscillations_qat::deploy::Engine::with_opts(
                 dm.clone(),
                 int_accum,
-                EngineOpts { threads: 1, prepared: false },
+                EngineOpts { prepared: false, ..Default::default() },
             )
             .forward_batch(&x, b)
             .unwrap();
@@ -721,7 +758,7 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
             let mt = oscillations_qat::deploy::Engine::with_opts(
                 dm.clone(),
                 int_accum,
-                EngineOpts { threads, prepared: true },
+                EngineOpts { threads, ..Default::default() },
             )
             .forward_batch(&x, b)
             .unwrap();
@@ -850,8 +887,8 @@ fn per_channel_activation_engine_bitexact_vs_interp_math() {
         for int_accum in [false, true] {
             for opts in [
                 EngineOpts::default(),
-                EngineOpts { threads: 1, prepared: false },
-                EngineOpts { threads: 2 + rng.below(3), prepared: true },
+                EngineOpts { prepared: false, ..Default::default() },
+                EngineOpts { threads: 2 + rng.below(3), ..Default::default() },
             ] {
                 let got = oscillations_qat::deploy::Engine::with_opts(dm.clone(), int_accum, opts)
                     .forward_batch(&x, b)
