@@ -34,6 +34,7 @@ pub const BOOL_FLAGS: &[&str] = &[
     "per-tensor",
     "streaming",
     "no-http",
+    "no-fleet",
     "layer-timing",
 ];
 
@@ -41,6 +42,10 @@ pub const BOOL_FLAGS: &[&str] = &[
 pub struct Args {
     pub subcommand: Option<String>,
     pub options: BTreeMap<String, String>,
+    /// every `--key value` binding in argv order, duplicates included —
+    /// the map above keeps last-wins semantics, this keeps repeatable
+    /// options (`--model a=x.qpkg --model b=y.qpkg`)
+    pub occurrences: Vec<(String, String)>,
     pub positional: Vec<String>,
 }
 
@@ -65,20 +70,21 @@ impl Args {
             }
             if !opts_done {
                 if let Some(key) = arg.strip_prefix("--") {
-                    if let Some((k, v)) = key.split_once('=') {
-                        out.options.insert(k.to_string(), v.to_string());
+                    let (k, v) = if let Some((k, v)) = key.split_once('=') {
+                        (k.to_string(), v.to_string())
                     } else if bool_flags.contains(&key) {
-                        out.options.insert(key.to_string(), "true".to_string());
+                        (key.to_string(), "true".to_string())
                     } else if iter
                         .peek()
                         .map(|n| !n.starts_with("--"))
                         .unwrap_or(false)
                     {
-                        let v = iter.next().unwrap();
-                        out.options.insert(key.to_string(), v);
+                        (key.to_string(), iter.next().unwrap())
                     } else {
-                        out.options.insert(key.to_string(), "true".to_string());
-                    }
+                        (key.to_string(), "true".to_string())
+                    };
+                    out.options.insert(k.clone(), v.clone());
+                    out.occurrences.push((k, v));
                     continue;
                 }
             }
@@ -97,6 +103,17 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value bound to `key`, in argv order (repeatable options:
+    /// `--model a=x.qpkg --model b=y.qpkg` yields both bindings, where
+    /// [`Args::get`] would only see the last).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -240,6 +257,21 @@ mod tests {
         assert!(a.flag("layer-timing"));
         assert_eq!(a.get("telemetry"), Some("run.jsonl"));
         assert_eq!(a.positional, vec!["m.qpkg".to_string()]);
+    }
+
+    #[test]
+    fn repeatable_options_keep_every_occurrence() {
+        let a = parse("serve --model a=x.qpkg --model b=y.qpkg --mem-budget-mb 64");
+        assert_eq!(a.get_all("model"), vec!["a=x.qpkg", "b=y.qpkg"]);
+        // the map keeps last-wins for single-value readers
+        assert_eq!(a.get("model"), Some("b=y.qpkg"));
+        assert_eq!(a.u64_or("mem-budget-mb", 0), 64);
+        // = form and valued form mix; flags don't pollute occurrences of
+        // other keys
+        let a = parse("serve --model=a=x.qpkg --no-fleet --model b=y.qpkg");
+        assert_eq!(a.get_all("model"), vec!["a=x.qpkg", "b=y.qpkg"]);
+        assert!(a.flag("no-fleet"));
+        assert_eq!(a.get_all("missing"), Vec::<&str>::new());
     }
 
     #[test]

@@ -31,8 +31,18 @@
 //!   codec, per-request deadlines answering 503, bounded-queue load
 //!   shedding, and a response cache) — plus the `BENCH_serve.json`
 //!   throughput/latency benchmark with p50/p95/p99 per-request latency
-//!   percentiles and the network rows (keep-alive vs connection-churn
-//!   throughput, overload p99).
+//!   percentiles, the network rows (keep-alive vs connection-churn
+//!   throughput, overload p99), and the fleet rows (throughput at 2/4/8
+//!   resident models, hot-swap p99 spike).
+//! * [`serve::registry`] — the multi-model fleet:
+//!   [`serve::ModelRegistry`] holds N QPKG models behind one ingress
+//!   (resource routes `/v1/models/{id}/...`), each with its own worker
+//!   pool (one model's overload sheds only its own requests), a
+//!   prepared-plane memory budget with LRU demotion to streaming mode
+//!   and promotion back on traffic, and zero-downtime hot-swap
+//!   (`POST /v1/models/{id}/load`: in-flight requests drain on the old
+//!   engine, the cutover is atomic, old planes drop at the last
+//!   reference).
 //! * [`trajectory`] — the CI perf-trajectory harness: deploy kernel
 //!   micro-benchmarks merged with the serve report into a
 //!   schema-versioned `BENCH_deploy.json`, gated against a committed
@@ -69,6 +79,7 @@ pub use export::{export_model, ExportCfg, ExportReport};
 pub use format::{DeployLayer, DeployModel, DeployOp, Requant};
 pub use packed::Packed;
 pub use serve::{
-    bench_http, bench_serve, BatchForward, HttpCfg, HttpServer, ServeCfg, ServeReport, Server,
+    bench_fleet, bench_http, bench_serve, BatchForward, EngineCfg, FleetBenchReport, HttpCfg,
+    HttpServer, LoadOutcome, ModelRegistry, RegistryCfg, ServeCfg, ServeReport, Server,
 };
 pub use trajectory::{check_regression, run_deploy_microbench, DeployBenchReport};

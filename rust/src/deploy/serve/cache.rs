@@ -1,8 +1,13 @@
 //! FIFO-bounded response cache for repeated queries.
 //!
-//! Keyed on an FNV-1a hash of the model name plus the exact input bit
-//! patterns (`f32::to_bits`, so `-0.0` and `0.0` are distinct keys and
-//! NaN payloads can't poison equality). Predictions are deterministic
+//! Keyed on an FNV-1a hash of the model id, the model's QPKG **content
+//! fingerprint**, and the exact input bit patterns (`f32::to_bits`, so
+//! `-0.0` and `0.0` are distinct keys and NaN payloads can't poison
+//! equality). The content fingerprint is what makes hot-swap safe: a
+//! `POST /v1/models/{id}/load` replaces the model under the same id,
+//! and because the swapped-in QPKG hashes differently, every key the
+//! old version populated simply stops matching — stale predictions can
+//! never be served for the new weights. Predictions are deterministic
 //! for a fixed packed model, so a hash hit can serve the cached
 //! response without re-running the engine; a (astronomically unlikely)
 //! 64-bit collision would serve the colliding entry's prediction —
@@ -41,17 +46,33 @@ impl ResponseCache {
         }
     }
 
-    /// FNV-1a over the model name and input bit patterns.
-    pub fn key(model: &str, input: &[f32]) -> u64 {
+    /// FNV-1a over raw bytes — the content-identity fingerprint for a
+    /// serialized QPKG payload (and the primitive [`ResponseCache::key`]
+    /// builds on).
+    pub fn fingerprint(bytes: &[u8]) -> u64 {
         const OFFSET: u64 = 0xcbf29ce484222325;
         const PRIME: u64 = 0x100000001b3;
         let mut h = OFFSET;
-        for &b in model.as_bytes() {
+        for &b in bytes {
             h ^= b as u64;
             h = h.wrapping_mul(PRIME);
         }
+        h
+    }
+
+    /// FNV-1a over the model id, its QPKG content fingerprint, and the
+    /// input bit patterns. Including `content_id` means a hot-swapped
+    /// model version implicitly invalidates every key the old version
+    /// wrote — same id, different content, different keys.
+    pub fn key(model: &str, content_id: u64, input: &[f32]) -> u64 {
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = Self::fingerprint(model.as_bytes());
         h ^= 0xff; // separator so ("ab", [..]) != ("a", [b-led input])
         h = h.wrapping_mul(PRIME);
+        for b in content_id.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
         for &v in input {
             for b in v.to_bits().to_le_bytes() {
                 h ^= b as u64;
@@ -112,7 +133,7 @@ mod tests {
     #[test]
     fn hit_after_put_and_counters() {
         let mut c = ResponseCache::new(8);
-        let k = ResponseCache::key("tiny", &[1.0, 2.0]);
+        let k = ResponseCache::key("tiny", 7, &[1.0, 2.0]);
         assert!(c.get(k).is_none());
         c.put(k, CachedResponse { pred: 2, logits: vec![0.0, 0.0, 1.0] });
         let hit = c.get(k).expect("hit");
@@ -122,17 +143,35 @@ mod tests {
 
     #[test]
     fn keys_separate_model_and_bits() {
-        let a = ResponseCache::key("m", &[1.0]);
-        assert_ne!(a, ResponseCache::key("n", &[1.0]));
-        assert_ne!(a, ResponseCache::key("m", &[1.0 + f32::EPSILON]));
-        assert_ne!(ResponseCache::key("m", &[0.0]), ResponseCache::key("m", &[-0.0]));
-        assert_eq!(a, ResponseCache::key("m", &[1.0]));
+        let a = ResponseCache::key("m", 1, &[1.0]);
+        assert_ne!(a, ResponseCache::key("n", 1, &[1.0]));
+        assert_ne!(a, ResponseCache::key("m", 1, &[1.0 + f32::EPSILON]));
+        assert_ne!(ResponseCache::key("m", 1, &[0.0]), ResponseCache::key("m", 1, &[-0.0]));
+        assert_eq!(a, ResponseCache::key("m", 1, &[1.0]));
+    }
+
+    /// The hot-swap guarantee: same id + same input but a different
+    /// content fingerprint must key to a different slot, so a swapped
+    /// model version can never read the old version's cached answer.
+    #[test]
+    fn keys_separate_content_versions() {
+        let v1 = ResponseCache::fingerprint(b"qpkg bytes v1");
+        let v2 = ResponseCache::fingerprint(b"qpkg bytes v2");
+        assert_ne!(v1, v2);
+        let input = [1.0f32, 0.0, 0.5];
+        assert_ne!(
+            ResponseCache::key("m", v1, &input),
+            ResponseCache::key("m", v2, &input)
+        );
+        // and the fingerprint itself is deterministic
+        assert_eq!(v1, ResponseCache::fingerprint(b"qpkg bytes v1"));
     }
 
     #[test]
     fn fifo_evicts_oldest_at_cap() {
         let mut c = ResponseCache::new(2);
-        let keys: Vec<u64> = (0..3).map(|i| ResponseCache::key("m", &[i as f32])).collect();
+        let keys: Vec<u64> =
+            (0..3).map(|i| ResponseCache::key("m", 0, &[i as f32])).collect();
         for &k in &keys {
             c.put(k, CachedResponse { pred: 0, logits: vec![] });
         }
@@ -145,14 +184,14 @@ mod tests {
     #[test]
     fn overwrite_does_not_grow_order_queue() {
         let mut c = ResponseCache::new(2);
-        let k = ResponseCache::key("m", &[5.0]);
+        let k = ResponseCache::key("m", 0, &[5.0]);
         for pred in 0..10 {
             c.put(k, CachedResponse { pred, logits: vec![] });
         }
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(k).unwrap().pred, 9);
         // the repeatedly-overwritten key must not evict itself
-        let k2 = ResponseCache::key("m", &[6.0]);
+        let k2 = ResponseCache::key("m", 0, &[6.0]);
         c.put(k2, CachedResponse { pred: 1, logits: vec![] });
         assert!(c.get(k).is_some());
         assert!(c.get(k2).is_some());

@@ -190,14 +190,48 @@ pub fn write_response_with_type(
     out.extend_from_slice(body);
 }
 
-/// JSON error-body helper: `{"error":"..."}`.
-pub fn error_body(msg: &str) -> Vec<u8> {
-    let mut s = String::from("{\"error\":");
-    let mut q = String::new();
-    json_escape_into(&mut q, msg);
-    s.push_str(&q);
-    s.push('}');
+/// Structured JSON error body, one schema for every error the ingress
+/// can answer:
+///
+/// ```json
+/// {"error":{"code":"model_not_found","message":"...","model":"mbv2"|null}}
+/// ```
+///
+/// `code` is a stable machine-readable slug (clients switch on it;
+/// `message` is human-oriented and may change), `model` is the model id
+/// the request resolved to when one was resolved. The stable codes:
+/// `model_not_found`, `bad_input_width`, `deadline_exceeded`,
+/// `queue_full`, `pool_dead`, `bad_request`, `route_not_found`,
+/// `method_not_allowed`, `inference_failed`, `load_failed`,
+/// `not_swappable`, `too_many_connections`, plus the parse-layer slugs
+/// from [`status_code_slug`].
+pub fn error_body(code: &str, msg: &str, model: Option<&str>) -> Vec<u8> {
+    let mut s = String::from("{\"error\":{\"code\":");
+    json_escape_into(&mut s, code);
+    s.push_str(",\"message\":");
+    json_escape_into(&mut s, msg);
+    s.push_str(",\"model\":");
+    match model {
+        Some(m) => json_escape_into(&mut s, m),
+        None => s.push_str("null"),
+    }
+    s.push_str("}}");
     s.into_bytes()
+}
+
+/// Stable error-code slug for a parse-layer rejection status (the
+/// [`Parse::Bad`] path, where no route ever ran).
+pub fn status_code_slug(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "route_not_found",
+        405 => "method_not_allowed",
+        413 => "payload_too_large",
+        431 => "header_too_large",
+        503 => "unavailable",
+        505 => "http_version_unsupported",
+        _ => "internal_error",
+    }
 }
 
 fn json_escape_into(out: &mut String, s: &str) {
@@ -395,8 +429,19 @@ pub fn lazy_u64(b: &[u8], key: &str) -> Result<Option<u64>, String> {
 
 /// Format a POST request with a JSON body (client side).
 pub fn format_request(path: &str, body: &[u8], headers: &[(&str, &str)]) -> Vec<u8> {
+    format_request_method("POST", path, body, headers)
+}
+
+/// [`format_request`] with an explicit method (the resource-oriented
+/// fleet routes add GETs beyond the hand-written healthz probes).
+pub fn format_request_method(
+    method: &str,
+    path: &str,
+    body: &[u8],
+    headers: &[(&str, &str)],
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(body.len() + 128);
-    out.extend_from_slice(format!("POST {path} HTTP/1.1\r\n").as_bytes());
+    out.extend_from_slice(format!("{method} {path} HTTP/1.1\r\n").as_bytes());
     out.extend_from_slice(b"Host: localhost\r\n");
     out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
     for (k, v) in headers {
@@ -609,8 +654,28 @@ mod tests {
 
     #[test]
     fn error_body_is_valid_json() {
-        let b = error_body("bad \"input\"\nwidth");
+        let b = error_body("bad_input_width", "bad \"input\"\nwidth", Some("mbv2"));
         let j = crate::json::parse(std::str::from_utf8(&b).unwrap()).unwrap();
-        assert_eq!(j.get("error").as_str(), Some("bad \"input\"\nwidth"));
+        let e = j.get("error");
+        assert_eq!(e.get("code").as_str(), Some("bad_input_width"));
+        assert_eq!(e.get("message").as_str(), Some("bad \"input\"\nwidth"));
+        assert_eq!(e.get("model").as_str(), Some("mbv2"));
+        // no model resolved -> null, not a missing key
+        let b = error_body("route_not_found", "no such route", None);
+        let j = crate::json::parse(std::str::from_utf8(&b).unwrap()).unwrap();
+        assert_eq!(j.get("error").get("model"), &crate::json::Json::Null);
+    }
+
+    #[test]
+    fn method_aware_request_formatting() {
+        let req = format_request_method("GET", "/v1/models", b"", &[]);
+        let Parse::Ready(r) = parse_request(&req, 1 << 20) else { panic!("not ready") };
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/models");
+        assert_eq!(r.content_len, 0);
+        // the POST shorthand is unchanged
+        let req = format_request("/v1/predict", b"{}", &[]);
+        let Parse::Ready(r) = parse_request(&req, 1 << 20) else { panic!("not ready") };
+        assert_eq!(r.method, "POST");
     }
 }

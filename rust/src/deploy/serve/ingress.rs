@@ -1,5 +1,5 @@
 //! Nonblocking TCP ingress: accept loop, readiness polling, and the
-//! HTTP front-end event loop over the batching [`Server`].
+//! HTTP front-end event loop over the multi-model [`ModelRegistry`].
 //!
 //! Dependency-light by design: a single event-loop thread drives
 //! nonblocking `std::net` sockets — accept until `WouldBlock`, then for
@@ -10,32 +10,55 @@
 //! readiness poller, not epoll — plenty for the benchmark fleet sizes
 //! this repo serves (hundreds of connections), and zero new deps.
 //!
+//! The API surface is resource-oriented:
+//!
+//! | route | meaning |
+//! |---|---|
+//! | `POST /v1/models/{id}/predict` | predict against model `id` |
+//! | `GET /v1/models` | list resident models (mode, version, bytes) |
+//! | `GET /v1/models/{id}` | one model's detail document |
+//! | `POST /v1/models/{id}/load` | zero-downtime hot-swap (body `{"qpkg": path}`) |
+//! | `POST /v1/predict` | **deprecated** alias: `model` body field routes; answers `Deprecation: true` |
+//!
+//! Every error answers one structured JSON shape —
+//! `{"error":{"code":..,"message":..,"model":..}}` — with stable
+//! machine-readable codes (`model_not_found`, `bad_input_width`,
+//! `deadline_exceeded`, `queue_full`, `pool_dead`, ...); the `X-Shed`
+//! headers ride alongside unchanged.
+//!
 //! Robustness properties the raw channel server lacked:
 //! - **deadlines**: a request carrying `X-Deadline-Ms` (or a
 //!   `deadline_ms` body field, or the server default) answers `503`
 //!   once the budget passes instead of queueing forever; an explicit
 //!   budget of `0` sheds immediately and deterministically
-//! - **admission control**: the bounded ingress queue sheds with a fast
-//!   `503` + `X-Shed: queue` under overload rather than collapsing
-//! - **response cache**: repeated queries (same model + input bits) are
-//!   answered from the FIFO [`ResponseCache`] without touching the pool
+//! - **admission control**: each model's bounded ingress queue sheds
+//!   with a fast `503` + `X-Shed: queue` under overload rather than
+//!   collapsing — and because pools are per-model, one model's spike
+//!   sheds its own traffic without starving the rest of the fleet
+//! - **response cache**: repeated queries (same model + QPKG content +
+//!   input bits) are answered from the FIFO [`ResponseCache`] without
+//!   touching any pool; hot-swaps change the content fingerprint, so
+//!   stale answers can never survive a swap
 //! - **fail-fast on a dead pool**: a panicked worker pool turns into
 //!   `503` + connection close, never a hang
 
 use super::cache::{CachedResponse, ResponseCache};
 use super::http::{self, Parse, ParsedReq};
-use super::{finite_or_zero, percentile, BatchForward, ServeCfg, Server};
+use super::registry::{ModelRegistry, RegistryCfg};
+use super::{finite_or_zero, percentile, BatchForward, ServeCfg};
 use crate::obs::{Histogram, Registry};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// HTTP front-end knobs (the pool behind it is shaped by [`ServeCfg`]).
+/// HTTP front-end knobs (the pools behind it are shaped by [`ServeCfg`]
+/// via [`RegistryCfg`]).
 #[derive(Debug, Clone)]
 pub struct HttpCfg {
     /// bind address; port 0 picks an ephemeral port
@@ -65,7 +88,8 @@ impl Default for HttpCfg {
     }
 }
 
-/// Front-end counters (the pool's own counters live in `ServeStats`).
+/// Front-end counters (each pool's own counters live in its
+/// `ServeStats`; `/stats` and `/metrics` expose the fleet sums).
 #[derive(Debug, Default)]
 pub struct HttpStats {
     pub conns: AtomicU64,
@@ -78,7 +102,7 @@ pub struct HttpStats {
     /// 503s from expired deadlines
     pub shed_deadline: AtomicU64,
     pub cache_hits: AtomicU64,
-    /// predict answers computed by the pool (the `X-Cache: miss` path)
+    /// predict answers computed by a pool (the `X-Cache: miss` path)
     pub cache_misses: AtomicU64,
     /// 500s (engine failure mid-batch)
     pub failed: AtomicU64,
@@ -92,7 +116,7 @@ pub struct HttpStats {
     pub write_s: Arc<Histogram>,
 }
 
-/// A running HTTP front-end (event-loop thread + batching pool).
+/// A running HTTP front-end (event-loop thread + per-model pools).
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -101,25 +125,34 @@ pub struct HttpServer {
 }
 
 impl HttpServer {
-    /// Bind `http_cfg.addr`, spawn the event loop (which owns a
-    /// [`Server`] pool over `fwd`), and return once accepting.
+    /// Single-model convenience: wrap `fwd` as the only (external,
+    /// non-swappable) registry entry and serve it. The legacy
+    /// constructor every pre-fleet caller and test uses.
     pub fn start(
         fwd: Arc<dyn BatchForward>,
         serve_cfg: &ServeCfg,
         http_cfg: &HttpCfg,
     ) -> Result<HttpServer> {
+        let mut models =
+            ModelRegistry::new(RegistryCfg { serve: serve_cfg.clone(), ..RegistryCfg::default() });
+        models.add_external(fwd)?;
+        Self::start_registry(models, http_cfg)
+    }
+
+    /// Bind `http_cfg.addr`, spawn the event loop (which owns the
+    /// registry and every per-model pool), and return once accepting.
+    pub fn start_registry(models: ModelRegistry, http_cfg: &HttpCfg) -> Result<HttpServer> {
         let listener = TcpListener::bind(&http_cfg.addr)
             .with_context(|| format!("bind {}", http_cfg.addr))?;
         listener.set_nonblocking(true).context("nonblocking listener")?;
         let addr = listener.local_addr().context("local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(HttpStats::default());
-        let serve_cfg = serve_cfg.clone();
         let cfg = http_cfg.clone();
         let loop_stop = stop.clone();
         let loop_stats = stats.clone();
         let thread = std::thread::spawn(move || {
-            event_loop(listener, fwd, serve_cfg, cfg, loop_stop, loop_stats);
+            event_loop(listener, models, cfg, loop_stop, loop_stats);
         });
         Ok(HttpServer { addr, stop, thread, stats })
     }
@@ -133,7 +166,7 @@ impl HttpServer {
         &self.stats
     }
 
-    /// Signal the event loop and join it (drains the pool too).
+    /// Signal the event loop and join it (drains every pool too).
     pub fn stop(self) {
         self.stop.store(true, Ordering::Release);
         let _ = self.thread.join();
@@ -149,6 +182,10 @@ struct Pending {
     cache_key: Option<u64>,
     /// when the request was routed — closes the latency histogram
     t0: Instant,
+    /// answered with `Deprecation: true` (legacy `/v1/predict` alias)
+    deprecated: bool,
+    /// registry index of the model this request rode on
+    model_ix: usize,
 }
 
 struct Conn {
@@ -192,50 +229,90 @@ fn predict_body(pred: usize, logits: &[f32], batch_size: usize, cached: bool) ->
     s.into_bytes()
 }
 
+/// Response headers: the deprecation marker (legacy alias only) plus
+/// whatever route-specific extras (`X-Shed`, `X-Cache`) apply.
+fn resp_headers(
+    deprecated: bool,
+    extra: &[(&'static str, &'static str)],
+) -> Vec<(&'static str, &'static str)> {
+    let mut v = Vec::with_capacity(extra.len() + 1);
+    if deprecated {
+        v.push(("Deprecation", "true"));
+    }
+    v.extend_from_slice(extra);
+    v
+}
+
+/// Prometheus label-value escaping (backslash, quote, newline).
+fn label_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
 struct EventLoop {
-    server: Server,
-    fwd: Arc<dyn BatchForward>,
+    /// the fleet: per-model pools, LRU plane budget, hot-swap
+    models: ModelRegistry,
     cache: Option<ResponseCache>,
     cfg: HttpCfg,
     stats: Arc<HttpStats>,
     /// `/metrics` registry; stage histograms are adopted at startup,
-    /// counters/gauges are synced from the atomics at scrape time
+    /// counters/gauges are synced from their sources at scrape time
     registry: Registry,
 }
 
 impl EventLoop {
-    /// One merged `/stats` document: front-end counters, the pool's
-    /// counters under `pool_*` keys, the most recent engine error, and
-    /// live request-latency percentiles. Keys stay flat so existing
-    /// scrapers of the old front-end-only document keep working.
+    /// Fleet-summed pool counters + the most recent engine error across
+    /// every pool (first entry reporting one wins — entries are checked
+    /// in listing order).
+    fn pool_totals(&self) -> (u64, u64, u64, u64, Option<String>) {
+        let (mut batches, mut requests, mut failed, mut expired) = (0u64, 0u64, 0u64, 0u64);
+        let mut last_error = None;
+        for e in self.models.iter() {
+            let ps = e.pool().stats();
+            batches += ps.batches.load(Ordering::Relaxed);
+            requests += ps.requests.load(Ordering::Relaxed);
+            failed += ps.failed.load(Ordering::Relaxed);
+            expired += ps.expired.load(Ordering::Relaxed);
+            if last_error.is_none() {
+                last_error = ps.last_error.lock().expect("stats lock").clone();
+            }
+        }
+        (batches, requests, failed, expired, last_error)
+    }
+
+    /// One merged `/stats` document: front-end counters, fleet-summed
+    /// pool counters under `pool_*` keys, the most recent engine error,
+    /// and live request-latency percentiles. Keys stay flat so existing
+    /// scrapers of the old single-model document keep working.
     fn stats_body(&self) -> Vec<u8> {
         let st = &self.stats;
-        let ps = self.server.stats();
-        let pairs = [
-            ("conns", &st.conns),
-            ("reqs", &st.reqs),
-            ("ok", &st.ok),
-            ("bad", &st.bad),
-            ("shed_queue", &st.shed_queue),
-            ("shed_deadline", &st.shed_deadline),
-            ("cache_hits", &st.cache_hits),
-            ("cache_misses", &st.cache_misses),
-            ("failed", &st.failed),
-            ("open_conns", &st.open_conns),
-            ("pool_batches", &ps.batches),
-            ("pool_requests", &ps.requests),
-            ("pool_failed", &ps.failed),
-            ("pool_expired", &ps.expired),
+        let (pool_batches, pool_requests, pool_failed, pool_expired, last_error) =
+            self.pool_totals();
+        let pairs: [(&str, u64); 15] = [
+            ("conns", st.conns.load(Ordering::Relaxed)),
+            ("reqs", st.reqs.load(Ordering::Relaxed)),
+            ("ok", st.ok.load(Ordering::Relaxed)),
+            ("bad", st.bad.load(Ordering::Relaxed)),
+            ("shed_queue", st.shed_queue.load(Ordering::Relaxed)),
+            ("shed_deadline", st.shed_deadline.load(Ordering::Relaxed)),
+            ("cache_hits", st.cache_hits.load(Ordering::Relaxed)),
+            ("cache_misses", st.cache_misses.load(Ordering::Relaxed)),
+            ("failed", st.failed.load(Ordering::Relaxed)),
+            ("open_conns", st.open_conns.load(Ordering::Relaxed)),
+            ("models", self.models.len() as u64),
+            ("pool_batches", pool_batches),
+            ("pool_requests", pool_requests),
+            ("pool_failed", pool_failed),
+            ("pool_expired", pool_expired),
         ];
         let mut s = String::from("{");
         for (k, v) in pairs.iter() {
-            s.push_str(&format!("\"{k}\":{},", v.load(Ordering::Relaxed)));
+            s.push_str(&format!("\"{k}\":{v},"));
         }
         let snap = st.latency.snapshot();
         for (k, q) in [("p50_ms", 0.5), ("p95_ms", 0.95), ("p99_ms", 0.99)] {
             s.push_str(&format!("\"{k}\":{},", finite_or_zero(snap.percentile(q) * 1e3)));
         }
-        match ps.last_error.lock().expect("stats lock").as_deref() {
+        match last_error.as_deref() {
             Some(e) => s.push_str(&format!("\"last_error\":{}", json_quote(e))),
             None => s.push_str("\"last_error\":null"),
         }
@@ -244,33 +321,106 @@ impl EventLoop {
     }
 
     /// Render the Prometheus text exposition: sync counters and gauges
-    /// from their source-of-truth atomics, then render the registry
-    /// (the adopted stage histograms are always live).
+    /// from their sources of truth (front-end atomics, fleet-summed
+    /// pool counters, registry residency gauges), render the registry
+    /// (the adopted stage histograms are always live), then append the
+    /// per-model labeled series the unlabeled registry can't hold.
     fn metrics_body(&self) -> Vec<u8> {
         let st = &self.stats;
-        let ps = self.server.stats();
-        let counters = [
-            ("qat_http_requests_total", "requests received", &st.reqs),
-            ("qat_http_ok_total", "2xx responses", &st.ok),
-            ("qat_http_bad_total", "4xx responses", &st.bad),
-            ("qat_http_shed_queue_total", "503s from queue admission control", &st.shed_queue),
-            ("qat_http_shed_deadline_total", "503s from expired deadlines", &st.shed_deadline),
-            ("qat_http_cache_hits_total", "cache-served predict answers", &st.cache_hits),
-            ("qat_http_cache_misses_total", "pool-served predict answers", &st.cache_misses),
-            ("qat_http_failed_total", "5xx responses", &st.failed),
-            ("qat_http_connections_total", "connections accepted", &st.conns),
-            ("qat_pool_batches_total", "pool batches executed", &ps.batches),
-            ("qat_pool_requests_total", "pool jobs admitted", &ps.requests),
-            ("qat_pool_failed_total", "pool jobs failed in the engine", &ps.failed),
-            ("qat_pool_expired_total", "pool jobs expired unserved", &ps.expired),
+        let (pool_batches, pool_requests, pool_failed, pool_expired, _) = self.pool_totals();
+        let counts = self.models.counts();
+        let counters: [(&str, &str, u64); 16] = [
+            ("qat_http_requests_total", "requests received", st.reqs.load(Ordering::Relaxed)),
+            ("qat_http_ok_total", "2xx responses", st.ok.load(Ordering::Relaxed)),
+            ("qat_http_bad_total", "4xx responses", st.bad.load(Ordering::Relaxed)),
+            (
+                "qat_http_shed_queue_total",
+                "503s from queue admission control",
+                st.shed_queue.load(Ordering::Relaxed),
+            ),
+            (
+                "qat_http_shed_deadline_total",
+                "503s from expired deadlines",
+                st.shed_deadline.load(Ordering::Relaxed),
+            ),
+            (
+                "qat_http_cache_hits_total",
+                "cache-served predict answers",
+                st.cache_hits.load(Ordering::Relaxed),
+            ),
+            (
+                "qat_http_cache_misses_total",
+                "pool-served predict answers",
+                st.cache_misses.load(Ordering::Relaxed),
+            ),
+            ("qat_http_failed_total", "5xx responses", st.failed.load(Ordering::Relaxed)),
+            ("qat_http_connections_total", "connections accepted", st.conns.load(Ordering::Relaxed)),
+            ("qat_pool_batches_total", "pool batches executed (fleet sum)", pool_batches),
+            ("qat_pool_requests_total", "pool jobs admitted (fleet sum)", pool_requests),
+            ("qat_pool_failed_total", "pool jobs failed in the engine (fleet sum)", pool_failed),
+            ("qat_pool_expired_total", "pool jobs expired unserved (fleet sum)", pool_expired),
+            ("qat_registry_swaps_total", "hot-swap cutovers", counts.swaps),
+            ("qat_registry_demotions_total", "prepared->streaming demotions", counts.demotions),
+            ("qat_registry_promotions_total", "streaming->prepared promotions", counts.promotions),
         ];
-        for (name, help, src) in counters {
-            self.registry.counter(name, help).store(src.load(Ordering::Relaxed));
+        for (name, help, v) in counters {
+            self.registry.counter(name, help).store(v);
         }
         self.registry
             .gauge("qat_http_open_connections", "currently open connections")
             .set(st.open_conns.load(Ordering::Relaxed) as f64);
-        self.registry.render().into_bytes()
+        self.registry
+            .gauge("qat_registry_models", "resident models")
+            .set(self.models.len() as f64);
+        self.registry
+            .gauge("qat_registry_prepared", "models with prepared planes resident")
+            .set(counts.prepared as f64);
+        self.registry
+            .gauge("qat_registry_streaming", "models demoted to streaming mode")
+            .set(counts.streaming as f64);
+        self.registry
+            .gauge("qat_registry_plane_bytes", "prepared plane bytes resident")
+            .set(self.models.prepared_bytes() as f64);
+        let mut text = self.registry.render();
+        // per-model labeled series: the obs registry is unlabeled by
+        // design, so the fleet dimension is appended by hand
+        text.push_str("# HELP qat_model_requests_total requests routed per model\n");
+        text.push_str("# TYPE qat_model_requests_total counter\n");
+        for e in self.models.iter() {
+            text.push_str(&format!(
+                "qat_model_requests_total{{model=\"{}\"}} {}\n",
+                label_escape(e.id()),
+                e.requests()
+            ));
+        }
+        text.push_str("# HELP qat_model_ok_total 200 answers per model\n");
+        text.push_str("# TYPE qat_model_ok_total counter\n");
+        for e in self.models.iter() {
+            text.push_str(&format!(
+                "qat_model_ok_total{{model=\"{}\"}} {}\n",
+                label_escape(e.id()),
+                e.ok()
+            ));
+        }
+        text.push_str("# HELP qat_model_prepared 1 when the model's planes are resident\n");
+        text.push_str("# TYPE qat_model_prepared gauge\n");
+        for e in self.models.iter() {
+            let v = if e.mode_str() == "streaming" { 0 } else { 1 };
+            text.push_str(&format!(
+                "qat_model_prepared{{model=\"{}\"}} {v}\n",
+                label_escape(e.id())
+            ));
+        }
+        text.push_str("# HELP qat_model_plane_bytes prepared-plane cost per model\n");
+        text.push_str("# TYPE qat_model_plane_bytes gauge\n");
+        for e in self.models.iter() {
+            text.push_str(&format!(
+                "qat_model_plane_bytes{{model=\"{}\"}} {}\n",
+                label_escape(e.id()),
+                e.plane_cost()
+            ));
+        }
+        text.into_bytes()
     }
 
     /// Route one complete request: either queues a response into the
@@ -278,12 +428,14 @@ impl EventLoop {
     fn route(&mut self, conn: &mut Conn, req: &ParsedReq, body: &[u8]) {
         self.stats.reqs.fetch_add(1, Ordering::Relaxed);
         match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/v1/predict" | "/predict") => self.predict(conn, req, body),
+            // legacy alias: body `model` field routes; deprecated
+            ("POST", "/v1/predict" | "/predict") => self.predict(conn, req, body, None, true),
             ("GET", "/healthz") => {
                 let b = format!(
-                    "{{\"ok\":true,\"model\":{},\"pool_dead\":{}}}",
-                    json_quote(self.fwd.model_name()),
-                    self.server.is_dead()
+                    "{{\"ok\":true,\"model\":{},\"models\":{},\"pool_dead\":{}}}",
+                    json_quote(self.models.default_id().unwrap_or("")),
+                    self.models.len(),
+                    self.models.any_dead()
                 );
                 self.stats.ok.fetch_add(1, Ordering::Relaxed);
                 conn.queue(200, req.keep_alive, &[], b.as_bytes());
@@ -298,50 +450,159 @@ impl EventLoop {
                 let b = self.metrics_body();
                 conn.queue_typed(200, req.keep_alive, "text/plain; version=0.0.4", &b);
             }
+            ("GET", "/v1/models") => {
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                let b = crate::json::to_string(&self.models.list_json());
+                conn.queue(200, req.keep_alive, &[], b.as_bytes());
+            }
+            (method, path) if path.starts_with("/v1/models/") => {
+                let rest = &path["/v1/models/".len()..];
+                match (method, rest.split_once('/')) {
+                    ("POST", Some((id, "predict"))) => self.predict(conn, req, body, Some(id), false),
+                    ("POST", Some((id, "load"))) => self.load_model(conn, req, id, body),
+                    ("GET", None) if !rest.is_empty() => match self.models.index_of(rest) {
+                        Some(ix) => {
+                            self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                            let b = crate::json::to_string(&self.models.detail_json(ix));
+                            conn.queue(200, req.keep_alive, &[], b.as_bytes());
+                        }
+                        None => {
+                            self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                            conn.queue(
+                                404,
+                                req.keep_alive,
+                                &[],
+                                &http::error_body(
+                                    "model_not_found",
+                                    &format!("unknown model {rest:?}"),
+                                    Some(rest),
+                                ),
+                            );
+                        }
+                    },
+                    ("GET" | "POST", _) => {
+                        self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                        conn.queue(
+                            404,
+                            req.keep_alive,
+                            &[],
+                            &http::error_body("route_not_found", "no such route", None),
+                        );
+                    }
+                    _ => {
+                        self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                        conn.queue(
+                            405,
+                            req.keep_alive,
+                            &[],
+                            &http::error_body("method_not_allowed", "method not allowed", None),
+                        );
+                    }
+                }
+            }
             ("POST" | "GET", _) => {
                 self.stats.bad.fetch_add(1, Ordering::Relaxed);
-                conn.queue(404, req.keep_alive, &[], &http::error_body("no such route"));
+                conn.queue(
+                    404,
+                    req.keep_alive,
+                    &[],
+                    &http::error_body("route_not_found", "no such route", None),
+                );
             }
             _ => {
                 self.stats.bad.fetch_add(1, Ordering::Relaxed);
-                conn.queue(405, req.keep_alive, &[], &http::error_body("method not allowed"));
+                conn.queue(
+                    405,
+                    req.keep_alive,
+                    &[],
+                    &http::error_body("method_not_allowed", "method not allowed", None),
+                );
             }
         }
     }
 
-    fn predict(&mut self, conn: &mut Conn, req: &ParsedReq, body: &[u8]) {
+    /// `POST /v1/models/{id}/predict` (resource route) and the legacy
+    /// `/v1/predict` alias (`path_id: None`, `deprecated: true`). Model
+    /// resolution order: path id, then body `model` field, then the
+    /// registry default.
+    fn predict(
+        &mut self,
+        conn: &mut Conn,
+        req: &ParsedReq,
+        body: &[u8],
+        path_id: Option<&str>,
+        deprecated: bool,
+    ) {
         let t0 = Instant::now();
         let ka = req.keep_alive;
-        let mut bad = |conn: &mut Conn, status: u16, msg: &str| {
-            self.stats.bad.fetch_add(1, Ordering::Relaxed);
-            conn.queue(status, ka, &[], &http::error_body(msg));
+        let stats = &self.stats;
+        let bad = |conn: &mut Conn, status: u16, code: &str, msg: &str, model: Option<&str>| {
+            stats.bad.fetch_add(1, Ordering::Relaxed);
+            let hdrs = resp_headers(deprecated, &[]);
+            conn.queue(status, ka, &hdrs, &http::error_body(code, msg, model));
         };
-        // model: optional; when present it must name the served model
-        match http::lazy_str(body, "model") {
-            Err(e) => return bad(conn, 400, &format!("bad model field: {e}")),
-            Ok(Some(m)) if m != self.fwd.model_name() => {
-                return bad(conn, 404, &format!("unknown model {m:?}"))
+        let body_model = match http::lazy_str(body, "model") {
+            Err(e) => return bad(conn, 400, "bad_request", &format!("bad model field: {e}"), None),
+            Ok(m) => m,
+        };
+        let id: String = match path_id {
+            Some(p) => {
+                // a body model field on the resource route must agree
+                // with the path — a contradiction is a client bug
+                if let Some(m) = &body_model {
+                    if m != p {
+                        return bad(
+                            conn,
+                            400,
+                            "bad_request",
+                            &format!("body model {m:?} contradicts path id {p:?}"),
+                            Some(p),
+                        );
+                    }
+                }
+                p.to_string()
             }
-            Ok(_) => {}
-        }
+            None => match body_model {
+                Some(m) => m,
+                None => match self.models.default_id() {
+                    Some(d) => d.to_string(),
+                    None => return bad(conn, 404, "model_not_found", "no models loaded", None),
+                },
+            },
+        };
+        let Some(ix) = self.models.index_of(&id) else {
+            return bad(conn, 404, "model_not_found", &format!("unknown model {id:?}"), Some(&id));
+        };
         let input = match http::lazy_f32s(body, "input") {
-            Err(e) => return bad(conn, 400, &format!("bad input field: {e}")),
-            Ok(None) => return bad(conn, 400, "missing input field"),
+            Err(e) => {
+                return bad(conn, 400, "bad_request", &format!("bad input field: {e}"), Some(&id))
+            }
+            Ok(None) => return bad(conn, 400, "bad_request", "missing input field", Some(&id)),
             Ok(Some(x)) => x,
         };
-        let d_in = self.fwd.d_in();
+        let d_in = self.models.entry(ix).d_in();
         if input.len() != d_in {
             return bad(
                 conn,
                 400,
+                "bad_input_width",
                 &format!("input has {} features, model wants {d_in}", input.len()),
+                Some(&id),
             );
         }
         // deadline priority: header, then body field, then server default
         let requested_ms = match req.deadline_ms {
             Some(ms) => Some(ms),
             None => match http::lazy_u64(body, "deadline_ms") {
-                Err(e) => return bad(conn, 400, &format!("bad deadline_ms field: {e}")),
+                Err(e) => {
+                    return bad(
+                        conn,
+                        400,
+                        "bad_request",
+                        &format!("bad deadline_ms field: {e}"),
+                        Some(&id),
+                    )
+                }
                 Ok(v) => v,
             },
         };
@@ -351,42 +612,115 @@ impl EventLoop {
         // an explicit zero budget is already expired: shed deterministically
         if effective_ms == Some(0) {
             self.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            let hdrs = resp_headers(deprecated, &[("X-Shed", "deadline")]);
             conn.queue(
                 503,
                 ka,
-                &[("X-Shed", "deadline")],
-                &http::error_body("deadline expired"),
+                &hdrs,
+                &http::error_body("deadline_exceeded", "deadline expired", Some(&id)),
             );
             return;
         }
         let deadline = effective_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        // the routed request counts for LRU residency (and may promote
+        // a streaming model whose traffic is back)
+        self.models.touch_ix(ix);
         let cache_key = self
             .cache
             .as_ref()
-            .map(|_| ResponseCache::key(self.fwd.model_name(), &input));
+            .map(|_| ResponseCache::key(&id, self.models.entry(ix).content_id(), &input));
         if let (Some(cache), Some(key)) = (self.cache.as_mut(), cache_key) {
             if let Some(hit) = cache.get(key) {
                 self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                 self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                self.models.mark_ok_ix(ix);
                 let b = predict_body(hit.pred, &hit.logits, 0, true);
-                conn.queue(200, ka, &[("X-Cache", "hit")], &b);
+                let hdrs = resp_headers(deprecated, &[("X-Cache", "hit")]);
+                conn.queue(200, ka, &hdrs, &b);
                 self.stats.latency.record(t0.elapsed().as_secs_f64());
                 return;
             }
         }
-        match self.server.try_submit(input, deadline) {
+        match self.models.entry(ix).pool().try_submit(input, deadline) {
             Ok(Some(rx)) => {
-                conn.pending = Some(Pending { rx, deadline, keep_alive: ka, cache_key, t0 });
+                conn.pending = Some(Pending {
+                    rx,
+                    deadline,
+                    keep_alive: ka,
+                    cache_key,
+                    t0,
+                    deprecated,
+                    model_ix: ix,
+                });
             }
             Ok(None) => {
-                // queue full: shed with a fast error instead of blocking
+                // this model's queue is full: shed its own traffic with
+                // a fast error — the rest of the fleet is unaffected
                 self.stats.shed_queue.fetch_add(1, Ordering::Relaxed);
-                conn.queue(503, ka, &[("X-Shed", "queue")], &http::error_body("server overloaded"));
+                let hdrs = resp_headers(deprecated, &[("X-Shed", "queue")]);
+                conn.queue(
+                    503,
+                    ka,
+                    &hdrs,
+                    &http::error_body("queue_full", "server overloaded", Some(&id)),
+                );
             }
             Err(e) => {
-                // dead pool (or rejected input): fail fast and close
+                // dead pool: fail fast and close
                 self.stats.failed.fetch_add(1, Ordering::Relaxed);
-                conn.queue(503, false, &[], &http::error_body(&format!("{e:#}")));
+                let hdrs = resp_headers(deprecated, &[]);
+                conn.queue(503, false, &hdrs, &http::error_body("pool_dead", &format!("{e:#}"), Some(&id)));
+            }
+        }
+    }
+
+    /// `POST /v1/models/{id}/load`: zero-downtime hot-swap (existing
+    /// id) or cold load (new id) of the QPKG named by the body's
+    /// `qpkg` field.
+    fn load_model(&mut self, conn: &mut Conn, req: &ParsedReq, id: &str, body: &[u8]) {
+        let ka = req.keep_alive;
+        let path = match http::lazy_str(body, "qpkg") {
+            Err(e) => {
+                self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                conn.queue(
+                    400,
+                    ka,
+                    &[],
+                    &http::error_body("bad_request", &format!("bad qpkg field: {e}"), Some(id)),
+                );
+                return;
+            }
+            Ok(None) => {
+                self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                conn.queue(
+                    400,
+                    ka,
+                    &[],
+                    &http::error_body("bad_request", "missing qpkg field", Some(id)),
+                );
+                return;
+            }
+            Ok(Some(p)) => p,
+        };
+        match self.models.load_qpkg(id, Path::new(&path)) {
+            Ok(out) => {
+                self.stats.ok.fetch_add(1, Ordering::Relaxed);
+                let b = format!(
+                    "{{\"ok\":true,\"id\":{},\"version\":{},\"mode\":{},\"plane_bytes\":{},\"content\":{}}}",
+                    json_quote(&out.id),
+                    out.version,
+                    json_quote(if out.prepared { "prepared" } else { "streaming" }),
+                    out.plane_bytes,
+                    json_quote(&format!("{:016x}", out.content_id)),
+                );
+                conn.queue(200, ka, &[], b.as_bytes());
+            }
+            Err(e) => {
+                self.stats.bad.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("{e:#}");
+                let code =
+                    if msg.contains("not hot-swappable") { "not_swappable" } else { "load_failed" };
+                conn.queue(400, ka, &[], &http::error_body(code, &msg, Some(id)));
             }
         }
     }
@@ -400,10 +734,12 @@ impl EventLoop {
                 if let (Some(cache), Some(key)) = (self.cache.as_mut(), p.cache_key) {
                     cache.put(key, CachedResponse { pred: resp.pred, logits: resp.logits.clone() });
                 }
+                self.models.mark_ok_ix(p.model_ix);
                 self.stats.ok.fetch_add(1, Ordering::Relaxed);
                 self.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
                 let b = predict_body(resp.pred, &resp.logits, resp.batch_size, false);
-                conn.queue(200, p.keep_alive, &[("X-Cache", "miss")], &b);
+                let hdrs = resp_headers(p.deprecated, &[("X-Cache", "miss")]);
+                conn.queue(200, p.keep_alive, &hdrs, &b);
                 self.stats.latency.record(p.t0.elapsed().as_secs_f64());
                 true
             }
@@ -412,12 +748,14 @@ impl EventLoop {
                 // stalled pool can't hold a deadlined request hostage
                 if p.deadline.is_some_and(|d| Instant::now() > d) {
                     let p = conn.pending.take().expect("pending just matched");
+                    let id = self.models.entry(p.model_ix).id();
                     self.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    let hdrs = resp_headers(p.deprecated, &[("X-Shed", "deadline")]);
                     conn.queue(
                         503,
                         p.keep_alive,
-                        &[("X-Shed", "deadline")],
-                        &http::error_body("deadline expired"),
+                        &hdrs,
+                        &http::error_body("deadline_exceeded", "deadline expired", Some(id)),
                     );
                     self.stats.latency.record(p.t0.elapsed().as_secs_f64());
                     true
@@ -429,17 +767,25 @@ impl EventLoop {
                 // the job was dropped: expired in the worker (answer 503)
                 // or its batch failed in the engine (answer 500 + close)
                 let p = conn.pending.take().expect("pending just matched");
+                let id = self.models.entry(p.model_ix).id();
                 if p.deadline.is_some() {
                     self.stats.shed_deadline.fetch_add(1, Ordering::Relaxed);
+                    let hdrs = resp_headers(p.deprecated, &[("X-Shed", "deadline")]);
                     conn.queue(
                         503,
                         p.keep_alive,
-                        &[("X-Shed", "deadline")],
-                        &http::error_body("deadline expired"),
+                        &hdrs,
+                        &http::error_body("deadline_exceeded", "deadline expired", Some(id)),
                     );
                 } else {
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
-                    conn.queue(500, false, &[], &http::error_body("inference failed"));
+                    let hdrs = resp_headers(p.deprecated, &[]);
+                    conn.queue(
+                        500,
+                        false,
+                        &hdrs,
+                        &http::error_body("inference_failed", "inference failed", Some(id)),
+                    );
                 }
                 self.stats.latency.record(p.t0.elapsed().as_secs_f64());
                 true
@@ -454,26 +800,27 @@ fn json_quote(s: &str) -> String {
 
 fn event_loop(
     listener: TcpListener,
-    fwd: Arc<dyn BatchForward>,
-    serve_cfg: ServeCfg,
+    models: ModelRegistry,
     cfg: HttpCfg,
     stop: Arc<AtomicBool>,
     stats: Arc<HttpStats>,
 ) {
-    let server = Server::start_with(fwd.clone(), &serve_cfg);
     let cache = (cfg.cache_cap > 0).then(|| ResponseCache::new(cfg.cache_cap));
     let registry = Registry::default();
+    // the two stage histograms are fleet-shared: every per-model pool
+    // feeds the same pair, so adopting them once covers the whole fleet
+    let (stage_queue, stage_compute) = models.stage_histograms();
     let adopt = [
-        ("qat_request_latency_seconds", "predict latency, routed to answered", &stats.latency),
-        ("qat_stage_parse_seconds", "head+body parse time per request", &stats.parse_s),
-        ("qat_stage_write_seconds", "response write-burst duration", &stats.write_s),
-        ("qat_stage_queue_seconds", "pool queue+batch wait per job", &server.stats().queue_wait),
-        ("qat_stage_compute_seconds", "engine forward time per batch", &server.stats().compute),
+        ("qat_request_latency_seconds", "predict latency, routed to answered", stats.latency.clone()),
+        ("qat_stage_parse_seconds", "head+body parse time per request", stats.parse_s.clone()),
+        ("qat_stage_write_seconds", "response write-burst duration", stats.write_s.clone()),
+        ("qat_stage_queue_seconds", "pool queue+batch wait per job", stage_queue),
+        ("qat_stage_compute_seconds", "engine forward time per batch", stage_compute),
     ];
     for (name, help, h) in adopt {
-        registry.adopt_histogram(name, help, h.clone());
+        registry.adopt_histogram(name, help, h);
     }
-    let mut el = EventLoop { server, fwd, cache, cfg, stats, registry };
+    let mut el = EventLoop { models, cache, cfg, stats, registry };
     let mut conns: Vec<Conn> = Vec::new();
     let mut chunk = [0u8; 16 * 1024];
     while !stop.load(Ordering::Acquire) {
@@ -500,7 +847,12 @@ fn event_loop(
                         dead: false,
                     };
                     if conns.len() >= el.cfg.max_conns {
-                        conn.queue(503, false, &[], &http::error_body("too many connections"));
+                        conn.queue(
+                            503,
+                            false,
+                            &[],
+                            &http::error_body("too_many_connections", "too many connections", None),
+                        );
                     }
                     conns.push(conn);
                 }
@@ -588,7 +940,12 @@ fn event_loop(
                     Parse::Bad { status, msg } => {
                         el.stats.bad.fetch_add(1, Ordering::Relaxed);
                         conn.rbuf.clear();
-                        conn.queue(status, false, &[], &http::error_body(&msg));
+                        conn.queue(
+                            status,
+                            false,
+                            &[],
+                            &http::error_body(http::status_code_slug(status), &msg, None),
+                        );
                         progress = true;
                         break;
                     }
@@ -620,7 +977,7 @@ fn event_loop(
         }
     }
     drop(conns);
-    el.server.shutdown();
+    el.models.shutdown();
 }
 
 // ---------------------------------------------------------------------------
@@ -675,7 +1032,7 @@ impl HttpBenchReport {
     }
 }
 
-fn bench_input(d_in: usize, seed: usize) -> Vec<f32> {
+pub(crate) fn bench_input(d_in: usize, seed: usize) -> Vec<f32> {
     (0..d_in).map(|i| ((seed * 31 + i * 7) % 13) as f32 * 0.25).collect()
 }
 
@@ -883,6 +1240,25 @@ mod tests {
         http::format_request("/v1/predict", &bench_body("tiny", input), extra)
     }
 
+    /// Body without a `model` field, for the resource route (the path
+    /// carries the id there).
+    fn input_only_body(input: &[f32]) -> Vec<u8> {
+        let mut s = String::from("{\"input\":[");
+        for (i, v) in input.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{v}"));
+        }
+        s.push_str("]}");
+        s.into_bytes()
+    }
+
+    fn error_code(resp: &http::ClientResponse) -> String {
+        let j = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        j.get("error").get("code").as_str().expect("error.code").to_string()
+    }
+
     #[test]
     fn keepalive_connection_serves_multiple_predictions() {
         let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
@@ -910,6 +1286,7 @@ mod tests {
         let resp = http::read_response(&mut stream).unwrap();
         assert_eq!(resp.status, 503);
         assert_eq!(resp.header("x-shed"), Some("deadline"));
+        assert_eq!(error_code(&resp), "deadline_exceeded");
         // the connection survives the shed: a normal request still works
         stream.write_all(&predict_req(&one_hot_block(2), &[])).unwrap();
         let resp = http::read_response(&mut stream).unwrap();
@@ -962,6 +1339,97 @@ mod tests {
         srv.stop();
     }
 
+    /// The structured error schema: stable machine-readable codes under
+    /// `error.code`, the offending model under `error.model`.
+    #[test]
+    fn errors_carry_stable_codes() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        // wrong width -> bad_input_width
+        stream.write_all(&predict_req(&[1.0, 2.0], &[])).unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 400);
+        assert_eq!(error_code(&resp), "bad_input_width");
+        let j = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("error").get("model").as_str(), Some("tiny"));
+        // unknown model -> model_not_found (legacy + resource routes)
+        let body = bench_body("nope", &one_hot_block(0));
+        stream.write_all(&http::format_request("/v1/predict", &body, &[])).unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (404, "model_not_found".into()));
+        stream
+            .write_all(&http::format_request(
+                "/v1/models/nope/predict",
+                &input_only_body(&one_hot_block(0)),
+                &[],
+            ))
+            .unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (404, "model_not_found".into()));
+        // unknown route -> route_not_found
+        stream.write_all(&http::format_request("/nope", b"{}", &[])).unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (404, "route_not_found".into()));
+        // missing input -> bad_request
+        stream.write_all(&http::format_request("/v1/predict", b"{}", &[])).unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (400, "bad_request".into()));
+        srv.stop();
+    }
+
+    /// The resource routes: `/v1/models/{id}/predict` serves without a
+    /// body model field, `/v1/models` lists the fleet, and only the
+    /// legacy alias carries `Deprecation: true`.
+    #[test]
+    fn resource_routes_serve_and_legacy_is_deprecated() {
+        let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        // resource route: no Deprecation header
+        stream
+            .write_all(&http::format_request(
+                "/v1/models/tiny/predict",
+                &input_only_body(&one_hot_block(2)),
+                &[],
+            ))
+            .unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("deprecation"), None);
+        let j = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("pred").as_usize(), Some(2));
+        // legacy alias answers the same prediction, flagged deprecated
+        stream.write_all(&predict_req(&one_hot_block(2), &[])).unwrap();
+        let legacy = http::read_response(&mut stream).unwrap();
+        assert_eq!(legacy.status, 200);
+        assert_eq!(legacy.header("deprecation"), Some("true"));
+        // a contradictory body model on the resource route is rejected
+        stream
+            .write_all(&http::format_request(
+                "/v1/models/tiny/predict",
+                &bench_body("other", &one_hot_block(0)),
+                &[],
+            ))
+            .unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (400, "bad_request".into()));
+        // fleet listing + model detail
+        stream.write_all(b"GET /v1/models HTTP/1.1\r\n\r\n").unwrap();
+        let list = http::read_response(&mut stream).unwrap();
+        assert_eq!(list.status, 200);
+        let j = crate::json::parse(std::str::from_utf8(&list.body).unwrap()).unwrap();
+        let models = j.get("models").as_arr().expect("models array");
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("id").as_str(), Some("tiny"));
+        assert_eq!(models[0].get("mode").as_str(), Some("external"));
+        stream.write_all(b"GET /v1/models/tiny HTTP/1.1\r\n\r\n").unwrap();
+        let detail = http::read_response(&mut stream).unwrap();
+        assert_eq!(detail.status, 200);
+        let j = crate::json::parse(std::str::from_utf8(&detail.body).unwrap()).unwrap();
+        assert_eq!(j.get("id").as_str(), Some("tiny"));
+        assert_eq!(j.get("d_in").as_usize(), Some(12));
+        srv.stop();
+    }
+
     #[test]
     fn merged_stats_and_metrics_expose_front_end_and_pool() {
         let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
@@ -981,6 +1449,7 @@ mod tests {
         assert_eq!(j.get("pool_requests").as_usize(), Some(1));
         assert_eq!(j.get("pool_batches").as_usize(), Some(1));
         assert_eq!(j.get("open_conns").as_usize(), Some(1));
+        assert_eq!(j.get("models").as_usize(), Some(1));
         assert_eq!(j.get("last_error"), &crate::json::Json::Null);
         assert!(j.get("p99_ms").as_f64().unwrap() >= j.get("p50_ms").as_f64().unwrap());
         stream.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap();
@@ -999,10 +1468,76 @@ mod tests {
             "qat_stage_queue_seconds_count 1",
             "qat_stage_compute_seconds_count 1",
             "qat_http_open_connections 1",
+            "qat_registry_models 1",
+            "# TYPE qat_model_requests_total counter",
+            "qat_model_requests_total{model=\"tiny\"} 2",
+            "qat_model_ok_total{model=\"tiny\"} 2",
+            "qat_model_prepared{model=\"tiny\"} 1",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
         assert!(text.contains("_bucket{le=\"+Inf\"}"), "{text}");
+        srv.stop();
+    }
+
+    /// The hot-swap cache guarantee end to end: a swapped model must
+    /// never answer from the old version's cache entries — same id,
+    /// same input, new content, fresh miss, new prediction.
+    #[test]
+    fn hot_swap_invalidates_cache_and_keeps_serving() {
+        use crate::deploy::packed::Packed;
+        let mut models = ModelRegistry::new(RegistryCfg::default());
+        models.insert_model("m", tiny_model()).unwrap();
+        let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        let req = http::format_request(
+            "/v1/models/m/predict",
+            &input_only_body(&one_hot_block(0)),
+            &[],
+        );
+        // miss, then hit, on v1
+        stream.write_all(&req).unwrap();
+        let r1 = http::read_response(&mut stream).unwrap();
+        assert_eq!((r1.status, r1.header("x-cache")), (200, Some("miss")));
+        let j = crate::json::parse(std::str::from_utf8(&r1.body).unwrap()).unwrap();
+        assert_eq!(j.get("pred").as_usize(), Some(0));
+        stream.write_all(&req).unwrap();
+        let r2 = http::read_response(&mut stream).unwrap();
+        assert_eq!((r2.status, r2.header("x-cache")), (200, Some("hit")));
+        // hot-swap to a rotated model: one_hot(0) now predicts class 1
+        let mut v2 = tiny_model();
+        v2.name = "m_v2".into();
+        let mut codes = vec![4u32; 12 * 3];
+        for c in 0..3usize {
+            for f in 0..4usize {
+                codes[(c * 4 + f) * 3 + (c + 1) % 3] = 6;
+            }
+        }
+        v2.layers[0].weights = Packed::pack(&codes, 3).unwrap();
+        let dir = std::env::temp_dir().join("qat_ingress_swap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m_v2.qpkg");
+        v2.write_qpkg(&p).unwrap();
+        let load_body = format!("{{\"qpkg\":{}}}", json_quote(&p.display().to_string()));
+        stream
+            .write_all(&http::format_request("/v1/models/m/load", load_body.as_bytes(), &[]))
+            .unwrap();
+        let loaded = http::read_response(&mut stream).unwrap();
+        assert_eq!(loaded.status, 200, "{:?}", std::str::from_utf8(&loaded.body));
+        let j = crate::json::parse(std::str::from_utf8(&loaded.body).unwrap()).unwrap();
+        assert_eq!(j.get("version").as_usize(), Some(2));
+        // same id + input: fresh miss (content changed), new prediction
+        stream.write_all(&req).unwrap();
+        let r3 = http::read_response(&mut stream).unwrap();
+        assert_eq!((r3.status, r3.header("x-cache")), (200, Some("miss")));
+        let j = crate::json::parse(std::str::from_utf8(&r3.body).unwrap()).unwrap();
+        assert_eq!(j.get("pred").as_usize(), Some(1), "swapped weights must serve");
+        // a load body without the qpkg field is rejected cleanly
+        stream
+            .write_all(&http::format_request("/v1/models/m/load", b"{}", &[]))
+            .unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (400, "bad_request".into()));
         srv.stop();
     }
 

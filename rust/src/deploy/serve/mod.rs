@@ -38,14 +38,26 @@
 //! [`bench_serve`] drives a full open-loop benchmark over the channel
 //! core and renders the `BENCH_serve.json` report the CI perf
 //! trajectory tracks; [`ingress::bench_http`] adds the network-level
-//! rows (keep-alive vs connection churn, overload p99) on top.
+//! rows (keep-alive vs connection churn, overload p99) on top, and
+//! [`registry::bench_fleet`] the multi-model rows (aggregate rps at
+//! 2/4/8 resident models, hot-swap p99 spike).
+//!
+//! Multi-model serving lives in [`registry`]: a [`ModelRegistry`] holds
+//! N models behind one ingress — each with its **own** bounded queue +
+//! worker pool (so one model's overload sheds its own 503s) — under a
+//! prepared-plane memory budget with LRU demotion to streaming mode,
+//! and supports zero-downtime hot-swap of a model's QPKG.
 
 pub mod cache;
 pub mod http;
 pub mod ingress;
+pub mod registry;
 
 pub use cache::{CachedResponse, ResponseCache};
 pub use ingress::{bench_http, HttpBenchReport, HttpCfg, HttpServer, HttpStats};
+pub use registry::{
+    bench_fleet, EngineCfg, FleetBenchReport, LoadOutcome, ModelEntry, ModelRegistry, RegistryCfg,
+};
 
 use super::engine::{argmax, Engine};
 use crate::json::Json;
@@ -152,6 +164,17 @@ pub struct ServeStats {
     pub compute: Arc<Histogram>,
 }
 
+impl ServeStats {
+    /// Stats whose stage histograms are shared externally: the fleet
+    /// registry hands every per-model pool the same two histograms so
+    /// the ingress `/metrics` page keeps one aggregate
+    /// `qat_stage_queue_seconds` / `qat_stage_compute_seconds` pair
+    /// while counters stay per-pool.
+    pub fn with_stage_histograms(queue_wait: Arc<Histogram>, compute: Arc<Histogram>) -> Self {
+        ServeStats { queue_wait, compute, ..ServeStats::default() }
+    }
+}
+
 /// Flips the shared dead flag when the watched thread exits — by
 /// `return` or by panic unwind alike. Workers share one alive counter
 /// (the pool dies when the *last* worker exits); the batcher kills the
@@ -184,7 +207,9 @@ pub struct Server {
     /// submits fail fast instead of queueing for a dead pool
     dead: Arc<AtomicBool>,
     next_id: AtomicU64,
-    d_in: usize,
+    /// kept for admission-time shape checks — read live (not captured at
+    /// start) so a hot-swapped forward enforces its own input width
+    fwd: Arc<dyn BatchForward>,
 }
 
 impl Server {
@@ -195,11 +220,16 @@ impl Server {
 
     /// Spawn over any [`BatchForward`] implementation.
     pub fn start_with(fwd: Arc<dyn BatchForward>, cfg: &ServeCfg) -> Server {
-        let d_in = fwd.d_in();
-        let num_classes = fwd.num_classes();
+        Self::start_with_stats(fwd, cfg, ServeStats::default())
+    }
+
+    /// [`Server::start_with`] with caller-provided stats — the fleet
+    /// registry injects [`ServeStats::with_stage_histograms`] so every
+    /// per-model pool feeds the same aggregate stage histograms.
+    pub fn start_with_stats(fwd: Arc<dyn BatchForward>, cfg: &ServeCfg, stats: ServeStats) -> Server {
         let max_batch = cfg.max_batch.max(1);
         let n_workers = cfg.workers.max(1);
-        let stats = Arc::new(ServeStats::default());
+        let stats = Arc::new(stats);
         let dead = Arc::new(AtomicBool::new(false));
         let workers_alive = Arc::new(AtomicUsize::new(n_workers));
 
@@ -254,7 +284,7 @@ impl Server {
                             continue;
                         }
                         let b = live.len();
-                        let mut x = Vec::with_capacity(b * d_in);
+                        let mut x = Vec::with_capacity(b * live[0].x.len());
                         for j in &live {
                             x.extend_from_slice(&j.x);
                         }
@@ -263,6 +293,11 @@ impl Server {
                         st.compute.record(tc.elapsed().as_secs_f64());
                         match result {
                             Ok(logits) => {
+                                // derive the row width from the returned
+                                // logits, not a startup capture: a swapped
+                                // forward may legally change num_classes
+                                // between batches
+                                let num_classes = logits.len() / b;
                                 for (i, job) in live.into_iter().enumerate() {
                                     let row = &logits[i * num_classes..(i + 1) * num_classes];
                                     let resp = Response {
@@ -298,7 +333,7 @@ impl Server {
             stats,
             dead,
             next_id: AtomicU64::new(0),
-            d_in,
+            fwd,
         }
     }
 
@@ -313,11 +348,11 @@ impl Server {
         x: Vec<f32>,
         deadline: Option<Instant>,
     ) -> Result<(Job, mpsc::Receiver<Response>)> {
+        let d_in = self.fwd.d_in();
         anyhow::ensure!(
-            x.len() == self.d_in,
-            "serve: request has {} features, model wants {}",
+            x.len() == d_in,
+            "serve: request has {} features, model wants {d_in}",
             x.len(),
-            self.d_in
         );
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -456,6 +491,9 @@ pub struct ServeReport {
     /// network-level rows ([`ingress::bench_http`]), merged into the
     /// same BENCH_serve.json when the front-end benchmark also ran
     pub http: Option<HttpBenchReport>,
+    /// multi-model fleet rows ([`registry::bench_fleet`]): aggregate
+    /// throughput at 2/4/8 resident models + the hot-swap p99 spike
+    pub fleet: Option<FleetBenchReport>,
 }
 
 impl ServeReport {
@@ -485,6 +523,9 @@ impl ServeReport {
         if let Some(h) = &self.http {
             h.merge_into(&mut o);
         }
+        if let Some(f) = &self.fleet {
+            f.merge_into(&mut o);
+        }
         Json::Obj(o)
     }
 
@@ -513,6 +554,10 @@ impl ServeReport {
         if let Some(h) = &self.http {
             s.push('\n');
             s.push_str(&h.summary());
+        }
+        if let Some(f) = &self.fleet {
+            s.push('\n');
+            s.push_str(&f.summary());
         }
         s
     }
@@ -598,6 +643,7 @@ pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> 
         batches,
         preds,
         http: None,
+        fleet: None,
     })
 }
 

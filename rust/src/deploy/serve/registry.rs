@@ -1,0 +1,1016 @@
+//! Multi-model fleet registry: N QPKG models resident behind one
+//! ingress, routed by model id.
+//!
+//! Three properties the single-model server could not offer:
+//!
+//! - **Per-model pool isolation.** Every entry owns its own bounded
+//!   queue + batcher + worker pool ([`Server`]), so one model's traffic
+//!   spike fills *its* queue and sheds *its* 503s — the rest of the
+//!   fleet keeps serving. All pools feed the same two stage histograms
+//!   (`qat_stage_queue_seconds` / `qat_stage_compute_seconds`) so the
+//!   `/metrics` page stays one aggregate exposition.
+//! - **A memory-budgeted prepared-plane cache.** Decoded weight planes
+//!   are the dominant resident cost (`PreparedModel::plane_bytes`). The
+//!   registry keeps the total under `RegistryCfg::mem_budget` by
+//!   demoting the least-recently-used model to streaming mode (packed
+//!   codes decoded per forward — slower, but tiny) and promoting it
+//!   back when its traffic returns. Promotion only steals planes from
+//!   entries *colder than the claimant*, so round-robin traffic over an
+//!   over-budget fleet settles instead of thrashing rebuilds.
+//! - **Zero-downtime hot-swap.** [`ModelRegistry::load_qpkg`] on an
+//!   existing id builds the new engine off-path, then atomically
+//!   replaces the `Arc<Engine>` inside the entry's [`SwapForward`].
+//!   In-flight batches hold the old `Arc` and drain on the old planes;
+//!   queued and future requests get the new version; the old planes
+//!   free at the last reference. Nothing is dropped, nothing blocks.
+//!   The QPKG content fingerprint rides into the response-cache key, so
+//!   a swap implicitly invalidates every cached answer of the old
+//!   version ([`ResponseCache::key`]).
+//!
+//! [`bench_fleet`] produces the gated rows: aggregate throughput at
+//! 2/4/8 resident models and the p99 latency spike while hot-swaps cut
+//! over under load.
+
+use super::cache::ResponseCache;
+use super::http;
+use super::ingress::{HttpCfg, HttpServer};
+use super::{finite_or_zero, percentile, BatchForward, ServeCfg, ServeStats, Server};
+use crate::deploy::engine::{Engine, EngineOpts, PreparedModel};
+use crate::deploy::format::DeployModel;
+use crate::json::Json;
+use crate::obs::Histogram;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+/// How each entry's engine is built (the registry rebuilds engines on
+/// demote/promote/swap, so it owns the construction knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCfg {
+    /// integer-accumulation fast path (false = f32-exact reference)
+    pub int_accum: bool,
+    /// intra-batch threads per engine
+    pub threads: usize,
+    /// per-layer timing counters
+    pub layer_timing: bool,
+}
+
+impl Default for EngineCfg {
+    fn default() -> Self {
+        EngineCfg { int_accum: true, threads: 1, layer_timing: false }
+    }
+}
+
+/// Fleet configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RegistryCfg {
+    /// per-model pool shape (every entry gets its own pool of this shape)
+    pub serve: ServeCfg,
+    pub engine: EngineCfg,
+    /// total prepared-plane byte budget across the fleet; `None` is
+    /// unlimited, `Some(0)` forces every model to streaming mode
+    pub mem_budget: Option<usize>,
+}
+
+/// The swappable forward an entry's pool drives: readers clone the
+/// inner `Arc<Engine>` under a read lock, a swap write-locks and
+/// replaces it. An in-flight `forward_batch` keeps its clone alive, so
+/// cutover never interrupts a running batch and the old planes drop at
+/// the last reference.
+pub struct SwapForward {
+    id: String,
+    inner: RwLock<Arc<Engine>>,
+}
+
+impl SwapForward {
+    fn new(id: String, engine: Engine) -> Self {
+        SwapForward { id, inner: RwLock::new(Arc::new(engine)) }
+    }
+
+    /// The current engine (cloned `Arc`; survives a concurrent swap).
+    pub fn engine(&self) -> Arc<Engine> {
+        self.inner.read().expect("swap lock").clone()
+    }
+
+    fn set(&self, engine: Arc<Engine>) {
+        *self.inner.write().expect("swap lock") = engine;
+    }
+}
+
+impl BatchForward for SwapForward {
+    fn d_in(&self) -> usize {
+        self.engine().model().d_in()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.engine().model().num_classes
+    }
+
+    /// The registry id, not the QPKG-internal name: routing identity is
+    /// stable across hot-swaps even if the payload renames itself.
+    fn model_name(&self) -> &str {
+        &self.id
+    }
+
+    fn forward_batch(&self, x: &[f32], b: usize) -> Result<Vec<f32>> {
+        self.engine().forward_batch(x, b)
+    }
+}
+
+/// QPKG-backed state of one entry (everything a demote/promote/swap
+/// rebuild needs).
+struct QpkgBacking {
+    swap: Arc<SwapForward>,
+    /// retained source model so promote can re-decode planes
+    model: DeployModel,
+    /// FNV-1a fingerprint of the serialized QPKG bytes — the cache-key
+    /// component that makes hot-swap stale-proof
+    content_id: u64,
+    /// bumped on every successful load over this id
+    version: u64,
+    prepared: bool,
+    /// plane cost when prepared (stable across demotion)
+    plane_bytes: usize,
+    source: String,
+}
+
+enum Backing {
+    /// caller-provided forward (tests, wrappers): not swappable, not
+    /// budget-managed
+    External(Arc<dyn BatchForward>),
+    Qpkg(QpkgBacking),
+}
+
+/// One resident model: its backing, its own serving pool, and the
+/// LRU/traffic bookkeeping the ingress event loop maintains.
+pub struct ModelEntry {
+    id: String,
+    backing: Backing,
+    pool: Server,
+    last_used: u64,
+    requests: u64,
+    ok: u64,
+}
+
+impl ModelEntry {
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn pool(&self) -> &Server {
+        &self.pool
+    }
+
+    pub fn d_in(&self) -> usize {
+        match &self.backing {
+            Backing::External(f) => f.d_in(),
+            Backing::Qpkg(b) => b.swap.d_in(),
+        }
+    }
+
+    /// Cache-key content identity (0 for external forwards, which have
+    /// no content to fingerprint and never swap).
+    pub fn content_id(&self) -> u64 {
+        match &self.backing {
+            Backing::External(_) => 0,
+            Backing::Qpkg(b) => b.content_id,
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        match &self.backing {
+            Backing::External(_) => 0,
+            Backing::Qpkg(b) => b.version,
+        }
+    }
+
+    pub fn mode_str(&self) -> &'static str {
+        match &self.backing {
+            Backing::External(_) => "external",
+            Backing::Qpkg(b) if b.prepared => "prepared",
+            Backing::Qpkg(_) => "streaming",
+        }
+    }
+
+    /// Prepared-plane cost in bytes (what residency costs, whether or
+    /// not the planes are currently resident).
+    pub fn plane_cost(&self) -> usize {
+        match &self.backing {
+            Backing::External(_) => 0,
+            Backing::Qpkg(b) => b.plane_bytes,
+        }
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    pub fn ok(&self) -> u64 {
+        self.ok
+    }
+
+    fn summary_json(&self, is_default: bool) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("id".to_string(), Json::Str(self.id.clone()));
+        o.insert("mode".to_string(), Json::Str(self.mode_str().to_string()));
+        o.insert("default".to_string(), Json::Bool(is_default));
+        o.insert("version".to_string(), Json::Num(self.version() as f64));
+        o.insert("plane_bytes".to_string(), Json::Num(self.plane_cost() as f64));
+        o.insert("requests".to_string(), Json::Num(self.requests as f64));
+        o.insert("pool_dead".to_string(), Json::Bool(self.pool.is_dead()));
+        if let Backing::Qpkg(b) = &self.backing {
+            o.insert("content".to_string(), Json::Str(format!("{:016x}", b.content_id)));
+            o.insert("bits_w".to_string(), Json::Num(b.model.bits_w as f64));
+            o.insert("bits_a".to_string(), Json::Num(b.model.bits_a as f64));
+        }
+        Json::Obj(o)
+    }
+
+    fn detail_json(&self, is_default: bool) -> Json {
+        let mut j = self.summary_json(is_default);
+        if let Json::Obj(o) = &mut j {
+            o.insert("d_in".to_string(), Json::Num(self.d_in() as f64));
+            o.insert("ok".to_string(), Json::Num(self.ok as f64));
+            if let Backing::Qpkg(b) = &self.backing {
+                o.insert("num_classes".to_string(), Json::Num(b.model.num_classes as f64));
+                o.insert("layers".to_string(), Json::Num(b.model.layers.len() as f64));
+                o.insert(
+                    "packed_bytes".to_string(),
+                    Json::Num(b.model.packed_weight_bytes() as f64),
+                );
+                o.insert("source".to_string(), Json::Str(b.source.clone()));
+            }
+        }
+        j
+    }
+}
+
+/// What a load/swap produced (CLI banner + `/load` response body).
+#[derive(Debug, Clone)]
+pub struct LoadOutcome {
+    pub id: String,
+    pub version: u64,
+    pub prepared: bool,
+    pub plane_bytes: usize,
+    pub content_id: u64,
+}
+
+/// Fleet residency counts for the registry gauges.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RegistryCounts {
+    pub prepared: usize,
+    pub streaming: usize,
+    pub external: usize,
+    pub swaps: u64,
+    pub demotions: u64,
+    pub promotions: u64,
+}
+
+/// Prepared-plane cost of a model **without** decoding the planes:
+/// mirrors [`PreparedModel::plane_bytes`] (one f32 plane always, plus
+/// an i32 plane for activation-quantized layers).
+pub fn plane_cost(dm: &DeployModel) -> usize {
+    dm.layers
+        .iter()
+        .map(|l| l.weights.len * 4 * if l.aq { 2 } else { 1 })
+        .sum()
+}
+
+fn build_engine(dm: DeployModel, prepared: bool, ec: &EngineCfg) -> Engine {
+    let pm = if prepared { PreparedModel::new(dm) } else { PreparedModel::unprepared(dm) };
+    let opts = EngineOpts { threads: ec.threads, prepared, layer_timing: ec.layer_timing };
+    Engine::from_prepared(Arc::new(pm), ec.int_accum, opts)
+}
+
+/// The fleet: ordered model entries (insertion order is the public
+/// listing order; indices are stable because entries are never
+/// removed, only demoted), an LRU clock, and the shared stage
+/// histograms every per-model pool feeds.
+pub struct ModelRegistry {
+    cfg: RegistryCfg,
+    entries: Vec<ModelEntry>,
+    default_id: Option<String>,
+    /// monotone LRU clock, bumped per routed request
+    tick: u64,
+    swaps: u64,
+    demotions: u64,
+    promotions: u64,
+    stage_queue: Arc<Histogram>,
+    stage_compute: Arc<Histogram>,
+}
+
+impl ModelRegistry {
+    pub fn new(cfg: RegistryCfg) -> Self {
+        ModelRegistry {
+            cfg,
+            entries: Vec::new(),
+            default_id: None,
+            tick: 0,
+            swaps: 0,
+            demotions: 0,
+            promotions: 0,
+            stage_queue: Arc::new(Histogram::new()),
+            stage_compute: Arc::new(Histogram::new()),
+        }
+    }
+
+    /// The fleet-wide stage histograms (the ingress adopts these into
+    /// its `/metrics` registry once, covering every pool).
+    pub fn stage_histograms(&self) -> (Arc<Histogram>, Arc<Histogram>) {
+        (self.stage_queue.clone(), self.stage_compute.clone())
+    }
+
+    fn start_pool(&self, fwd: Arc<dyn BatchForward>) -> Server {
+        let stats =
+            ServeStats::with_stage_histograms(self.stage_queue.clone(), self.stage_compute.clone());
+        Server::start_with_stats(fwd, &self.cfg.serve, stats)
+    }
+
+    /// Register a caller-managed forward under its own `model_name`.
+    /// External entries route and serve like any other but cannot be
+    /// hot-swapped and never count against the plane budget.
+    pub fn add_external(&mut self, fwd: Arc<dyn BatchForward>) -> Result<()> {
+        let id = fwd.model_name().to_string();
+        anyhow::ensure!(self.index_of(&id).is_none(), "duplicate model id {id:?}");
+        let pool = self.start_pool(fwd.clone());
+        self.tick += 1;
+        self.entries.push(ModelEntry {
+            id: id.clone(),
+            backing: Backing::External(fwd),
+            pool,
+            last_used: self.tick,
+            requests: 0,
+            ok: 0,
+        });
+        if self.default_id.is_none() {
+            self.default_id = Some(id);
+        }
+        Ok(())
+    }
+
+    /// Load (new id) or hot-swap (existing id) a QPKG file.
+    pub fn load_qpkg(&mut self, id: &str, path: &Path) -> Result<LoadOutcome> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("read qpkg {}", path.display()))?;
+        let dm = DeployModel::from_bytes(&bytes)
+            .with_context(|| format!("parse qpkg {}", path.display()))?;
+        let content_id = ResponseCache::fingerprint(&bytes);
+        self.install(id, dm, content_id, path.display().to_string())
+    }
+
+    /// Register an in-memory model (tests + benchmarks); content
+    /// identity is fingerprinted off its serialized form, exactly as a
+    /// file load would.
+    pub fn insert_model(&mut self, id: &str, dm: DeployModel) -> Result<LoadOutcome> {
+        let content_id = ResponseCache::fingerprint(&dm.to_bytes());
+        self.install(id, dm, content_id, "(inline)".to_string())
+    }
+
+    fn install(
+        &mut self,
+        id: &str,
+        dm: DeployModel,
+        content_id: u64,
+        source: String,
+    ) -> Result<LoadOutcome> {
+        let cost = plane_cost(&dm);
+        let existing = self.index_of(id);
+        if let Some(ix) = existing {
+            anyhow::ensure!(
+                matches!(self.entries[ix].backing, Backing::Qpkg(_)),
+                "model {id:?} is not hot-swappable (externally managed forward)"
+            );
+        }
+        // an explicit load outranks residency history: anything colder
+        // than "now" may be demoted to make room
+        let prepared = self.ensure_budget(existing, cost, u64::MAX);
+        let engine = build_engine(dm.clone(), prepared, &self.cfg.engine);
+        let version = match existing {
+            Some(ix) => {
+                let Backing::Qpkg(b) = &mut self.entries[ix].backing else { unreachable!() };
+                // atomic cutover: queued + future requests see the new
+                // engine, in-flight batches drain on their old Arc, old
+                // planes free at the last reference
+                b.swap.set(Arc::new(engine));
+                b.model = dm;
+                b.content_id = content_id;
+                b.version += 1;
+                b.prepared = prepared;
+                b.plane_bytes = cost;
+                b.source = source;
+                let v = b.version;
+                self.swaps += 1;
+                v
+            }
+            None => {
+                let swap = Arc::new(SwapForward::new(id.to_string(), engine));
+                let pool = self.start_pool(swap.clone() as Arc<dyn BatchForward>);
+                self.tick += 1;
+                self.entries.push(ModelEntry {
+                    id: id.to_string(),
+                    backing: Backing::Qpkg(QpkgBacking {
+                        swap,
+                        model: dm,
+                        content_id,
+                        version: 1,
+                        prepared,
+                        plane_bytes: cost,
+                        source,
+                    }),
+                    pool,
+                    last_used: self.tick,
+                    requests: 0,
+                    ok: 0,
+                });
+                if self.default_id.is_none() {
+                    self.default_id = Some(id.to_string());
+                }
+                1
+            }
+        };
+        Ok(LoadOutcome { id: id.to_string(), version, prepared, plane_bytes: cost, content_id })
+    }
+
+    /// Make room for `want` prepared bytes on behalf of `skip` (which
+    /// never demotes itself). Only entries whose `last_used` is below
+    /// `colder_than` are demotable — the anti-thrash rule: promotion on
+    /// traffic may only steal planes from strictly colder models, so an
+    /// over-budget round-robin doesn't rebuild engines every request.
+    /// Returns whether `want` bytes fit (demoting as needed); demotes
+    /// nothing when it can't succeed.
+    fn ensure_budget(&mut self, skip: Option<usize>, want: usize, colder_than: u64) -> bool {
+        let Some(budget) = self.cfg.mem_budget else { return true };
+        if want > budget {
+            return false;
+        }
+        let mut used = 0usize;
+        let mut reclaimable = 0usize;
+        for (i, e) in self.entries.iter().enumerate() {
+            if Some(i) == skip {
+                continue;
+            }
+            if let Backing::Qpkg(b) = &e.backing {
+                if b.prepared {
+                    used += b.plane_bytes;
+                    if e.last_used < colder_than {
+                        reclaimable += b.plane_bytes;
+                    }
+                }
+            }
+        }
+        if used + want <= budget {
+            return true;
+        }
+        if used.saturating_sub(reclaimable) + want > budget {
+            return false;
+        }
+        while used + want > budget {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(i, e)| {
+                    Some(*i) != skip
+                        && e.last_used < colder_than
+                        && matches!(&e.backing, Backing::Qpkg(b) if b.prepared)
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            let Some(ix) = victim else { return false };
+            used -= self.entries[ix].plane_cost();
+            self.demote(ix);
+        }
+        true
+    }
+
+    fn demote(&mut self, ix: usize) {
+        let ec = self.cfg.engine;
+        let id = self.entries[ix].id.clone();
+        let Backing::Qpkg(b) = &mut self.entries[ix].backing else { return };
+        if !b.prepared {
+            return;
+        }
+        b.swap.set(Arc::new(build_engine(b.model.clone(), false, &ec)));
+        b.prepared = false;
+        let freed = b.plane_bytes;
+        self.demotions += 1;
+        eprintln!("[fleet] demoted model {id:?} to streaming ({freed} plane bytes freed)");
+    }
+
+    fn promote(&mut self, ix: usize) {
+        let ec = self.cfg.engine;
+        let id = self.entries[ix].id.clone();
+        let Backing::Qpkg(b) = &mut self.entries[ix].backing else { return };
+        if b.prepared {
+            return;
+        }
+        b.swap.set(Arc::new(build_engine(b.model.clone(), true, &ec)));
+        b.prepared = true;
+        let bytes = b.plane_bytes;
+        self.promotions += 1;
+        eprintln!("[fleet] promoted model {id:?} to prepared planes ({bytes} bytes resident)");
+    }
+
+    /// Record one routed request: bumps the LRU clock + per-model
+    /// counter, and promotes a streaming entry back to prepared planes
+    /// when the budget allows (stealing only from colder entries).
+    pub fn touch_ix(&mut self, ix: usize) {
+        let prev = self.entries[ix].last_used;
+        self.tick += 1;
+        self.entries[ix].last_used = self.tick;
+        self.entries[ix].requests += 1;
+        let wants = match &self.entries[ix].backing {
+            Backing::Qpkg(b) if !b.prepared => Some(b.plane_bytes),
+            _ => None,
+        };
+        if let Some(cost) = wants {
+            if self.ensure_budget(Some(ix), cost, prev) {
+                self.promote(ix);
+            }
+        }
+    }
+
+    /// Record one 200 answer attributed to entry `ix` (pool- or
+    /// cache-served alike).
+    pub fn mark_ok_ix(&mut self, ix: usize) {
+        self.entries[ix].ok += 1;
+    }
+
+    pub fn index_of(&self, id: &str) -> Option<usize> {
+        self.entries.iter().position(|e| e.id == id)
+    }
+
+    pub fn entry(&self, ix: usize) -> &ModelEntry {
+        &self.entries[ix]
+    }
+
+    pub fn default_id(&self) -> Option<&str> {
+        self.default_id.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.entries.iter()
+    }
+
+    /// True when any entry's pool has died (a panicked worker fleet).
+    pub fn any_dead(&self) -> bool {
+        self.entries.iter().any(|e| e.pool.is_dead())
+    }
+
+    pub fn mem_budget(&self) -> Option<usize> {
+        self.cfg.mem_budget
+    }
+
+    /// Total plane bytes currently resident (prepared entries only).
+    pub fn prepared_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .filter_map(|e| match &e.backing {
+                Backing::Qpkg(b) if b.prepared => Some(b.plane_bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    pub fn counts(&self) -> RegistryCounts {
+        let mut c = RegistryCounts {
+            swaps: self.swaps,
+            demotions: self.demotions,
+            promotions: self.promotions,
+            ..RegistryCounts::default()
+        };
+        for e in &self.entries {
+            match &e.backing {
+                Backing::External(_) => c.external += 1,
+                Backing::Qpkg(b) if b.prepared => c.prepared += 1,
+                Backing::Qpkg(_) => c.streaming += 1,
+            }
+        }
+        c
+    }
+
+    /// `GET /v1/models` body.
+    pub fn list_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let models: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| e.summary_json(self.default_id.as_deref() == Some(e.id.as_str())))
+            .collect();
+        o.insert("models".to_string(), Json::Arr(models));
+        match self.cfg.mem_budget {
+            Some(b) => o.insert("mem_budget_bytes".to_string(), Json::Num(b as f64)),
+            None => o.insert("mem_budget_bytes".to_string(), Json::Null),
+        };
+        o.insert("prepared_bytes".to_string(), Json::Num(self.prepared_bytes() as f64));
+        Json::Obj(o)
+    }
+
+    /// `GET /v1/models/{id}` body.
+    pub fn detail_json(&self, ix: usize) -> Json {
+        let e = &self.entries[ix];
+        e.detail_json(self.default_id.as_deref() == Some(e.id.as_str()))
+    }
+
+    /// Drain and stop every pool; returns fleet-total (batches,
+    /// requests).
+    pub fn shutdown(self) -> (u64, u64) {
+        let (mut batches, mut requests) = (0u64, 0u64);
+        for e in self.entries {
+            let (b, r) = e.pool.shutdown();
+            batches += b;
+            requests += r;
+        }
+        (batches, requests)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet benchmark
+// ---------------------------------------------------------------------------
+
+/// Fleet rows merged into BENCH_serve.json beside the `http_*` rows.
+#[derive(Debug, Clone)]
+pub struct FleetBenchReport {
+    /// (resident models, aggregate requests/sec) for N in {2, 4, 8}
+    pub fleet_rps: Vec<(usize, f64)>,
+    pub swap_requests: usize,
+    pub swap_count: usize,
+    /// p99 predict latency across every request issued while hot-swaps
+    /// were cutting over under load — the swap-induced spike the
+    /// baseline bounds from above
+    pub swap_p99_spike_ms: f64,
+}
+
+impl FleetBenchReport {
+    pub fn merge_into(&self, o: &mut BTreeMap<String, Json>) {
+        for (n, rps) in &self.fleet_rps {
+            o.insert(format!("fleet_rps_{n}"), Json::Num(finite_or_zero(*rps)));
+        }
+        o.insert("swap_requests".to_string(), Json::Num(self.swap_requests as f64));
+        o.insert("swap_count".to_string(), Json::Num(self.swap_count as f64));
+        o.insert(
+            "swap_p99_spike_ms".to_string(),
+            Json::Num(finite_or_zero(self.swap_p99_spike_ms)),
+        );
+    }
+
+    pub fn summary(&self) -> String {
+        let rows: Vec<String> = self
+            .fleet_rps
+            .iter()
+            .map(|(n, r)| format!("{n} models {r:.0} req/s"))
+            .collect();
+        format!(
+            "fleet: {}; hot-swap p99 {:.2}ms ({} requests across {} swaps, zero drops)",
+            rows.join(", "),
+            self.swap_p99_spike_ms,
+            self.swap_requests,
+            self.swap_count
+        )
+    }
+}
+
+fn fleet_input(d_in: usize, seed: usize) -> Vec<f32> {
+    (0..d_in).map(|i| ((seed * 31 + i * 7) % 13) as f32 * 0.25).collect()
+}
+
+fn fleet_body(input: &[f32]) -> Vec<u8> {
+    let mut s = String::from("{\"input\":[");
+    for (i, v) in input.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s.into_bytes()
+}
+
+fn json_quote(s: &str) -> String {
+    crate::json::to_string(&Json::Str(s.to_string()))
+}
+
+fn send_fleet_request(
+    stream: &mut TcpStream,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, Duration)> {
+    let req = http::format_request(path, body, &[]);
+    let t0 = Instant::now();
+    stream.write_all(&req).context("write request")?;
+    let resp = http::read_response(stream).context("read response")?;
+    Ok((resp.status, t0.elapsed()))
+}
+
+/// The two fleet scenarios behind the gated rows:
+///
+/// 1. **Aggregate throughput at N ∈ {2, 4, 8} resident models** — N
+///    renamed copies of `dm` (distinct content ids), clients
+///    round-robining `/v1/models/{id}/predict` across the fleet.
+/// 2. **Hot-swap spike** — clients hammer one model while the bench
+///    alternates two QPKG versions through `/v1/models/{id}/load`;
+///    every request must answer 200 (zero drops) and the p99 over all
+///    of them is the gated spike row.
+pub fn bench_fleet(dm: &DeployModel, serve_cfg: &ServeCfg, smoke: bool) -> Result<FleetBenchReport> {
+    // cache off: the rows measure the serving path, not the cache
+    let http_cfg = HttpCfg { cache_cap: 0, ..HttpCfg::default() };
+    let d_in = dm.d_in();
+
+    let mut fleet_rps = Vec::new();
+    for n in [2usize, 4, 8] {
+        let mut models =
+            ModelRegistry::new(RegistryCfg { serve: serve_cfg.clone(), ..RegistryCfg::default() });
+        for i in 0..n {
+            let mut m = dm.clone();
+            m.name = format!("{}_r{i}", m.name);
+            models.insert_model(&format!("m{i}"), m)?;
+        }
+        let srv = HttpServer::start_registry(models, &http_cfg)?;
+        let addr = srv.addr();
+        let clients = n.min(4);
+        let per_client = if smoke { 24 } else { 96 };
+        let t0 = Instant::now();
+        std::thread::scope(|s| -> Result<()> {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    s.spawn(move || -> Result<()> {
+                        let mut stream = TcpStream::connect(addr).context("connect")?;
+                        let _ = stream.set_nodelay(true);
+                        for r in 0..per_client {
+                            let k = (c + r * clients) % n;
+                            let body = fleet_body(&fleet_input(d_in, c * per_client + r));
+                            let (status, _) = send_fleet_request(
+                                &mut stream,
+                                &format!("/v1/models/m{k}/predict"),
+                                &body,
+                            )?;
+                            anyhow::ensure!(status == 200, "fleet request got {status}");
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("client thread panicked")?;
+            }
+            Ok(())
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        srv.stop();
+        fleet_rps.push((n, (clients * per_client) as f64 / wall.max(1e-9)));
+    }
+
+    // --- hot-swap under load
+    let dir = std::env::temp_dir().join("qat_fleet_bench");
+    std::fs::create_dir_all(&dir).context("create bench dir")?;
+    let mut v1 = dm.clone();
+    v1.name = format!("{}_v1", dm.name);
+    let mut v2 = dm.clone();
+    v2.name = format!("{}_v2", dm.name);
+    let p1 = dir.join("swap_v1.qpkg");
+    let p2 = dir.join("swap_v2.qpkg");
+    v1.write_qpkg(&p1)?;
+    v2.write_qpkg(&p2)?;
+    let mut models =
+        ModelRegistry::new(RegistryCfg { serve: serve_cfg.clone(), ..RegistryCfg::default() });
+    models.load_qpkg("swap", &p1)?;
+    let srv = HttpServer::start_registry(models, &http_cfg)?;
+    let addr = srv.addr();
+    let clients = 2usize;
+    let per_client = if smoke { 40 } else { 160 };
+    let swap_count = if smoke { 4 } else { 12 };
+    let mut lat: Vec<f64> = std::thread::scope(|s| -> Result<Vec<f64>> {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || -> Result<Vec<f64>> {
+                    let mut stream = TcpStream::connect(addr).context("connect")?;
+                    let _ = stream.set_nodelay(true);
+                    let mut lat = Vec::with_capacity(per_client);
+                    for r in 0..per_client {
+                        let body = fleet_body(&fleet_input(d_in, c * per_client + r));
+                        let (status, dt) =
+                            send_fleet_request(&mut stream, "/v1/models/swap/predict", &body)?;
+                        // the hot-swap guarantee: zero drops mid-swap
+                        anyhow::ensure!(status == 200, "mid-swap predict got {status}");
+                        lat.push(dt.as_secs_f64() * 1e3);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        // alternate versions while the clients run
+        let mut admin = TcpStream::connect(addr).context("connect admin")?;
+        let _ = admin.set_nodelay(true);
+        let paths = [&p2, &p1];
+        for sw in 0..swap_count {
+            std::thread::sleep(Duration::from_millis(5));
+            let body = format!("{{\"qpkg\":{}}}", json_quote(&paths[sw % 2].display().to_string()));
+            let (status, _) =
+                send_fleet_request(&mut admin, "/v1/models/swap/load", body.as_bytes())?;
+            anyhow::ensure!(status == 200, "hot-swap load got {status}");
+        }
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().expect("client thread panicked")?);
+        }
+        Ok(all)
+    })?;
+    srv.stop();
+    lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    Ok(FleetBenchReport {
+        fleet_rps,
+        swap_requests: clients * per_client,
+        swap_count,
+        swap_p99_spike_ms: percentile(&lat, 0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::{one_hot_block, tiny_model};
+    use super::*;
+    use crate::deploy::format::DeployModel;
+
+    /// `tiny_model` with the class mapping rotated: `one_hot_block(c)`
+    /// predicts `(c + rot) % 3`.
+    fn rot_model(name: &str, rot: usize) -> DeployModel {
+        use crate::deploy::packed::Packed;
+        let mut m = tiny_model();
+        m.name = name.to_string();
+        let mut codes = vec![4u32; 12 * 3];
+        for c in 0..3usize {
+            for f in 0..4usize {
+                codes[(c * 4 + f) * 3 + (c + rot) % 3] = 6;
+            }
+        }
+        m.layers[0].weights = Packed::pack(&codes, 3).unwrap();
+        m
+    }
+
+    fn pred_of(reg: &ModelRegistry, id: &str, c: usize) -> usize {
+        let ix = reg.index_of(id).expect("known id");
+        let rx = reg.entry(ix).pool().submit(one_hot_block(c)).unwrap();
+        rx.recv().unwrap().pred
+    }
+
+    #[test]
+    fn plane_cost_matches_prepared_model() {
+        let m = tiny_model();
+        assert_eq!(plane_cost(&m), PreparedModel::new(m.clone()).plane_bytes());
+        assert!(plane_cost(&m) > 0);
+    }
+
+    #[test]
+    fn budget_demotes_lru_and_promotes_on_traffic() {
+        let cost = plane_cost(&tiny_model());
+        let mut reg = ModelRegistry::new(RegistryCfg {
+            mem_budget: Some(2 * cost),
+            ..RegistryCfg::default()
+        });
+        for id in ["a", "b", "c"] {
+            let out = reg.insert_model(id, rot_model(id, 0)).unwrap();
+            assert_eq!(out.version, 1);
+        }
+        // three models, room for two: the LRU ("a", loaded first) was
+        // demoted to make room for "c"
+        let mode = |reg: &ModelRegistry, id: &str| {
+            reg.entry(reg.index_of(id).unwrap()).mode_str().to_string()
+        };
+        assert_eq!(mode(&reg, "a"), "streaming");
+        assert_eq!(mode(&reg, "b"), "prepared");
+        assert_eq!(mode(&reg, "c"), "prepared");
+        assert_eq!(reg.counts().demotions, 1);
+        assert_eq!(reg.prepared_bytes(), 2 * cost);
+        // the streaming model still serves, bit-exact
+        assert_eq!(pred_of(&reg, "a", 1), 1);
+        // one touch: "a" is now the warmest, but its *previous*
+        // recency was coldest, so nothing colder exists to steal from
+        let a = reg.index_of("a").unwrap();
+        reg.touch_ix(a);
+        assert_eq!(mode(&reg, "a"), "streaming");
+        // sustained traffic: the second touch finds "b"/"c" colder
+        // than "a"'s previous touch, demotes the LRU of them, and
+        // promotes "a" back to prepared planes
+        reg.touch_ix(a);
+        assert_eq!(mode(&reg, "a"), "prepared");
+        assert_eq!(mode(&reg, "b"), "streaming");
+        assert_eq!(mode(&reg, "c"), "prepared");
+        let counts = reg.counts();
+        assert_eq!(counts.promotions, 1);
+        assert_eq!(counts.demotions, 2);
+        assert_eq!((counts.prepared, counts.streaming), (2, 1));
+        // predictions survive the residency churn
+        assert_eq!(pred_of(&reg, "a", 2), 2);
+        assert_eq!(pred_of(&reg, "b", 0), 0);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn a_model_too_big_for_the_budget_stays_streaming() {
+        let cost = plane_cost(&tiny_model());
+        let mut reg = ModelRegistry::new(RegistryCfg {
+            mem_budget: Some(cost - 1),
+            ..RegistryCfg::default()
+        });
+        let out = reg.insert_model("m", tiny_model()).unwrap();
+        assert!(!out.prepared);
+        assert_eq!(reg.entry(0).mode_str(), "streaming");
+        assert_eq!(pred_of(&reg, "m", 0), 0);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn hot_swap_bumps_version_and_serves_the_new_weights() {
+        let dir = std::env::temp_dir().join("qat_registry_swap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut reg = ModelRegistry::new(RegistryCfg::default());
+        let out = reg.insert_model("m", rot_model("m_v1", 0)).unwrap();
+        assert_eq!((out.version, out.prepared), (1, true));
+        assert_eq!(pred_of(&reg, "m", 0), 0);
+        // swap in the rotated version through the file path
+        let p = dir.join("m_v2.qpkg");
+        rot_model("m_v2", 1).write_qpkg(&p).unwrap();
+        let swapped = reg.load_qpkg("m", &p).unwrap();
+        assert_eq!(swapped.version, 2);
+        assert_ne!(swapped.content_id, out.content_id, "content identity must change");
+        assert_eq!(reg.counts().swaps, 1);
+        // same pool, same id, new weights: class 0 now maps to 1
+        assert_eq!(pred_of(&reg, "m", 0), 1);
+        assert_eq!(pred_of(&reg, "m", 2), 0);
+        // the entry reports the new version in the listing
+        let ix = reg.index_of("m").unwrap();
+        let j = reg.detail_json(ix);
+        assert_eq!(j.get("version").as_usize(), Some(2));
+        assert_eq!(j.get("mode").as_str(), Some("prepared"));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn external_entries_reject_swap() {
+        use crate::deploy::engine::Engine;
+        let mut reg = ModelRegistry::new(RegistryCfg::default());
+        reg.add_external(Arc::new(Engine::new(tiny_model()))).unwrap();
+        assert_eq!(reg.default_id(), Some("tiny"));
+        assert_eq!(reg.entry(0).mode_str(), "external");
+        let err = reg
+            .insert_model("tiny", rot_model("x", 1))
+            .expect_err("external entries must not be swappable");
+        assert!(format!("{err:#}").contains("not hot-swappable"), "{err:#}");
+        // duplicate external ids are rejected too
+        assert!(reg.add_external(Arc::new(Engine::new(tiny_model()))).is_err());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn list_json_reports_the_fleet() {
+        let cost = plane_cost(&tiny_model());
+        let mut reg = ModelRegistry::new(RegistryCfg {
+            mem_budget: Some(2 * cost),
+            ..RegistryCfg::default()
+        });
+        for id in ["a", "b", "c"] {
+            reg.insert_model(id, rot_model(id, 0)).unwrap();
+        }
+        let j = reg.list_json();
+        let models = j.get("models").as_arr().expect("models array");
+        assert_eq!(models.len(), 3);
+        assert_eq!(models[0].get("id").as_str(), Some("a"));
+        assert_eq!(models[0].get("mode").as_str(), Some("streaming"));
+        assert_eq!(models[0].get("default"), &Json::Bool(true));
+        assert_eq!(models[1].get("mode").as_str(), Some("prepared"));
+        assert_eq!(models[1].get("plane_bytes").as_usize(), Some(cost));
+        assert_eq!(models[1].get("bits_w").as_usize(), Some(3));
+        assert_eq!(j.get("mem_budget_bytes").as_usize(), Some(2 * cost));
+        assert_eq!(j.get("prepared_bytes").as_usize(), Some(2 * cost));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn bench_fleet_smoke_reports_all_rows() {
+        let report = bench_fleet(&tiny_model(), &ServeCfg::default(), true).unwrap();
+        assert_eq!(report.fleet_rps.len(), 3);
+        for (n, rps) in &report.fleet_rps {
+            assert!(*rps > 0.0, "fleet_rps_{n} must be positive");
+        }
+        assert!(report.swap_p99_spike_ms > 0.0);
+        assert!(report.swap_count > 0);
+        let mut o = BTreeMap::new();
+        report.merge_into(&mut o);
+        for key in ["fleet_rps_2", "fleet_rps_4", "fleet_rps_8", "swap_p99_spike_ms"] {
+            assert!(o.contains_key(key), "missing merged fleet row {key}");
+        }
+    }
+}

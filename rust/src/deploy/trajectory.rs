@@ -89,16 +89,31 @@ pub const REQUIRED_SERVE_FIELDS: &[&str] = &[
     "http_churn_rps",
     "http_overload_p99_ms",
     "hist_p95_ms",
+    "fleet_rps_2",
+    "fleet_rps_4",
+    "fleet_rps_8",
+    "swap_p99_spike_ms",
 ];
 
 /// Serve metrics gated as throughput (higher is better, floor below).
-pub const SERVE_THROUGHPUT_METRICS: &[&str] =
-    &["throughput_rps", "http_keepalive_rps", "http_churn_rps"];
+/// The `fleet_rps_{n}` rows track aggregate ingress throughput with n
+/// resident models, each behind its own worker pool.
+pub const SERVE_THROUGHPUT_METRICS: &[&str] = &[
+    "throughput_rps",
+    "http_keepalive_rps",
+    "http_churn_rps",
+    "fleet_rps_2",
+    "fleet_rps_4",
+    "fleet_rps_8",
+];
 
 /// Serve metrics gated as tail latency (lower is better, ceiling above).
 /// `hist_p95_ms` gates the in-process histogram measurement alongside
-/// the offline percentile so the two paths can't silently diverge.
-pub const SERVE_LATENCY_METRICS: &[&str] = &["p95_ms", "http_overload_p99_ms", "hist_p95_ms"];
+/// the offline percentile so the two paths can't silently diverge;
+/// `swap_p99_spike_ms` bounds the tail while hot-swaps cut over under
+/// live traffic.
+pub const SERVE_LATENCY_METRICS: &[&str] =
+    &["p95_ms", "http_overload_p99_ms", "hist_p95_ms", "swap_p99_spike_ms"];
 
 /// (streaming row, prepared row) pairs whose ratio is the decode-once /
 /// threading speedup surfaced in the CI job summary.
@@ -706,6 +721,10 @@ mod tests {
                 "serve.http_churn_rps".to_string(),
                 "serve.http_overload_p99_ms".to_string(),
                 "serve.hist_p95_ms".to_string(),
+                "serve.fleet_rps_2".to_string(),
+                "serve.fleet_rps_4".to_string(),
+                "serve.fleet_rps_8".to_string(),
+                "serve.swap_p99_spike_ms".to_string(),
             ],
             "{missing:?}"
         );
@@ -714,6 +733,10 @@ mod tests {
         s.insert("http_churn_rps".to_string(), Json::Num(20.0));
         s.insert("http_overload_p99_ms".to_string(), Json::Num(100.0));
         s.insert("hist_p95_ms".to_string(), Json::Num(4.2));
+        s.insert("fleet_rps_2".to_string(), Json::Num(80.0));
+        s.insert("fleet_rps_4".to_string(), Json::Num(70.0));
+        s.insert("fleet_rps_8".to_string(), Json::Num(60.0));
+        s.insert("swap_p99_spike_ms".to_string(), Json::Num(25.0));
         r.merge_serve(Json::Obj(s));
         assert!(r.missing_required_rows().is_empty());
     }

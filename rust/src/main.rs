@@ -40,18 +40,26 @@ USAGE: oscillations-qat <subcommand> [flags]
   eval      --model mbv2 --ckpt ckpts/<tag>.qtns --bits-w 3 [--fp | --quant-a]
   export    --model mbv2 --bits-w 3 [--bits-a 3 --quant-a --per-tensor] [--out m.qpkg]
             [--ckpt state.qtns]   (no --ckpt: run the QAT pipeline first)
-  serve     --qpkg m.qpkg [--requests 2048 --workers 4 --max-batch 16]
+  serve     --model id=path.qpkg (repeatable) | --qpkg m.qpkg | m.qpkg
+            (a bare --qpkg / positional QPKG is sugar for
+            --model default=path.qpkg)
+            [--requests 2048 --workers 4 --max-batch 16]
             [--threads N|auto] [--exact] [--streaming] [--smoke]
-            [--no-http] [--bench-out BENCH_serve.json]
+            [--no-http] [--no-fleet] [--bench-out BENCH_serve.json]
             [--layer-timing] [--telemetry serve.jsonl]
             benchmark mode (default): channel-level serve bench plus the
-            HTTP front-end rows (keep-alive vs churn, overload p99);
-            --no-http skips the network scenarios; --layer-timing turns
+            HTTP front-end rows (keep-alive vs churn, overload p99) and
+            the fleet rows (throughput at 2/4/8 resident models,
+            hot-swap p99 spike); --no-http skips the network scenarios,
+            --no-fleet skips just the fleet rows; --layer-timing turns
             on per-layer engine timing (reported via --telemetry)
-            --listen 127.0.0.1:8090 [--deadline-ms 0 --cache-cap 1024]
-            [--queue-cap 1024]   run the HTTP/1.1 front-end instead:
-            POST /v1/predict {\"input\":[...]}, GET /healthz, GET /stats,
-            GET /metrics (Prometheus text exposition)
+            --listen 127.0.0.1:8090 [--mem-budget-mb N] [--deadline-ms 0]
+            [--cache-cap 1024] [--queue-cap 1024]   run the HTTP/1.1
+            front-end instead: POST /v1/models/{id}/predict, GET
+            /v1/models[/{id}], POST /v1/models/{id}/load (hot-swap),
+            legacy POST /v1/predict (Deprecation: true), GET /healthz,
+            GET /stats, GET /metrics; --mem-budget-mb caps total
+            prepared-plane bytes (LRU demotion to streaming)
   obs-report  <run.jsonl>   summarize a --telemetry JSONL stream (freeze
             timeline, top oscillating layers, BN drift, serve rows,
             per-layer compute time)
@@ -267,22 +275,116 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use oscillations_qat::data::{DataCfg, Dataset};
     use oscillations_qat::deploy::format::DeployModel;
     use oscillations_qat::deploy::serve::{
-        bench_http, bench_serve, BatchForward, HttpCfg, HttpServer, ServeCfg,
+        bench_fleet, bench_http, bench_serve, BatchForward, EngineCfg, HttpCfg, HttpServer,
+        ModelRegistry, RegistryCfg, ServeCfg,
     };
     use oscillations_qat::deploy::{resolve_threads, Engine, EngineOpts};
+    use std::path::Path;
     use std::sync::Arc;
 
+    // fleet spec: repeatable `--model id=path.qpkg`; `--qpkg m.qpkg` or a
+    // bare positional QPKG is sugar for `--model default=path`
+    let mut specs: Vec<(String, String)> = Vec::new();
     let qpkg = args.str_or("qpkg", "");
-    anyhow::ensure!(!qpkg.is_empty(), "serve needs --qpkg <model.qpkg> (see `export`)");
+    let qpkg =
+        if qpkg.is_empty() { args.positional.first().cloned().unwrap_or_default() } else { qpkg };
+    if !qpkg.is_empty() {
+        specs.push(("default".to_string(), qpkg));
+    }
+    for spec in args.get_all("model") {
+        let Some((id, path)) = spec.split_once('=') else {
+            anyhow::bail!("--model wants id=path.qpkg, got {spec:?}");
+        };
+        anyhow::ensure!(
+            !id.is_empty() && !path.is_empty(),
+            "--model wants id=path.qpkg, got {spec:?}"
+        );
+        specs.push((id.to_string(), path.to_string()));
+    }
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "serve needs --qpkg <model.qpkg> or --model id=path.qpkg (see `export`)"
+    );
+
+    let threads = resolve_threads(args.get("threads"), 1);
+    let smoke = args.flag("smoke");
+    let requests = args.u64_or("requests", if smoke { 256 } else { 2048 }) as usize;
+    let cfg = ServeCfg {
+        workers: args.u64_or("workers", 4) as usize,
+        max_batch: args.u64_or("max-batch", 16) as usize,
+        queue_cap: args.u64_or("queue-cap", 1024) as usize,
+    };
+
+    // --listen: run the HTTP/1.1 front-end until killed instead of
+    // benchmarking. The fleet registry owns every model: each entry gets
+    // its own worker pool, --mem-budget-mb caps the total prepared-plane
+    // bytes (LRU demotion to streaming), and POST /v1/models/{id}/load
+    // hot-swaps an entry in place.
+    if let Some(listen) = args.get("listen") {
+        let mem_budget = if args.flag("streaming") {
+            // honor the single-model flag fleet-wide: budget 0 keeps
+            // every entry in streaming mode
+            Some(0)
+        } else {
+            args.get("mem-budget-mb")
+                .and_then(|v| v.parse::<usize>().ok())
+                .map(|mb| mb * 1024 * 1024)
+        };
+        let engine_cfg = EngineCfg {
+            int_accum: !args.flag("exact"),
+            threads,
+            layer_timing: args.flag("layer-timing"),
+        };
+        let mut models =
+            ModelRegistry::new(RegistryCfg { serve: cfg.clone(), engine: engine_cfg, mem_budget });
+        for (id, path) in &specs {
+            let out = models.load_qpkg(id, Path::new(path))?;
+            eprintln!(
+                "[serve] model {id}: {} v{} ({} plane bytes) <- {path}",
+                if out.prepared { "prepared" } else { "streaming" },
+                out.version,
+                out.plane_bytes
+            );
+        }
+        let http_cfg = HttpCfg {
+            addr: listen.to_string(),
+            default_deadline_ms: args.u64_or("deadline-ms", 0),
+            cache_cap: args.usize_or("cache-cap", 1024),
+            ..HttpCfg::default()
+        };
+        let n_models = models.len();
+        let srv = HttpServer::start_registry(models, &http_cfg)?;
+        println!(
+            "[serve] fleet of {} listening on http://{} — POST /v1/models/{{id}}/predict, \
+             GET /v1/models[/{{id}}], POST /v1/models/{{id}}/load; legacy POST /v1/predict \
+             (Deprecation: true); GET /healthz, /stats, /metrics \
+             (deadline default {}ms, cache {} entries{})",
+            n_models,
+            srv.addr(),
+            http_cfg.default_deadline_ms,
+            http_cfg.cache_cap,
+            match mem_budget {
+                Some(b) => format!(", plane budget {b} B"),
+                None => String::new(),
+            }
+        );
+        loop {
+            std::thread::park();
+        }
+    }
+
+    // benchmark mode: the channel/HTTP rows measure one engine (the
+    // first spec); the fleet rows clone it into 2/4/8 registry entries
     let opts = EngineOpts {
-        threads: resolve_threads(args.get("threads"), 1),
+        threads,
         prepared: !args.flag("streaming"),
         layer_timing: args.flag("layer-timing"),
     };
     // load-time prepare: with_opts decodes the packed payloads exactly
     // once (every worker shares the planes through the Arc); --streaming
     // skips the decode entirely and re-decodes per call
-    let dm = DeployModel::read_qpkg(&PathBuf::from(&qpkg))?;
+    let dm = DeployModel::read_qpkg(&PathBuf::from(&specs[0].1))?;
+    let fleet_dm = dm.clone();
     let engine = Arc::new(Engine::with_opts(dm, !args.flag("exact"), opts));
     if opts.prepared {
         eprintln!(
@@ -298,37 +400,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
             engine.model().packed_weight_bytes(),
             opts.threads
         );
-    }
-
-    let smoke = args.flag("smoke");
-    let requests = args.u64_or("requests", if smoke { 256 } else { 2048 }) as usize;
-    let cfg = ServeCfg {
-        workers: args.u64_or("workers", 4) as usize,
-        max_batch: args.u64_or("max-batch", 16) as usize,
-        queue_cap: args.u64_or("queue-cap", 1024) as usize,
-    };
-
-    // --listen: run the HTTP/1.1 front-end until killed instead of
-    // benchmarking
-    if let Some(listen) = args.get("listen") {
-        let http_cfg = HttpCfg {
-            addr: listen.to_string(),
-            default_deadline_ms: args.u64_or("deadline-ms", 0),
-            cache_cap: args.usize_or("cache-cap", 1024),
-            ..HttpCfg::default()
-        };
-        let fwd: Arc<dyn BatchForward> = engine;
-        let srv = HttpServer::start(fwd, &cfg, &http_cfg)?;
-        println!(
-            "[serve] listening on http://{} — POST /v1/predict {{\"input\":[...]}}, \
-             GET /healthz, GET /stats, GET /metrics (deadline default {}ms, cache {} entries)",
-            srv.addr(),
-            http_cfg.default_deadline_ms,
-            http_cfg.cache_cap
-        );
-        loop {
-            std::thread::park();
-        }
     }
 
     // request stream: individual samples from the deterministic val
@@ -352,6 +423,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !args.flag("no-http") {
         let fwd: Arc<dyn BatchForward> = engine.clone();
         report.http = Some(bench_http(fwd, &cfg, smoke)?);
+        // fleet scenarios: throughput with 2/4/8 resident model clones
+        // and the hot-swap p99 spike (--no-fleet skips just these)
+        if !args.flag("no-fleet") {
+            report.fleet = Some(bench_fleet(&fleet_dm, &cfg, smoke)?);
+        }
     }
     println!("{}", report.summary());
     let out = PathBuf::from(args.str_or("bench-out", "BENCH_serve.json"));
@@ -386,6 +462,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     ("churn_rps", num(h.churn_rps)),
                     ("overload_p99_ms", num(h.overload_p99_ms)),
                     ("overload_shed", num(h.overload_shed as f64)),
+                ],
+            );
+        }
+        if let Some(f) = &report.fleet {
+            let rps_for = |n: usize| {
+                f.fleet_rps.iter().find(|(m, _)| *m == n).map(|(_, r)| *r).unwrap_or(0.0)
+            };
+            sink.emit(
+                "serve_bench",
+                &[
+                    ("name", Json::Str("fleet".into())),
+                    ("fleet_rps_2", num(rps_for(2))),
+                    ("fleet_rps_4", num(rps_for(4))),
+                    ("fleet_rps_8", num(rps_for(8))),
+                    ("swap_requests", num(f.swap_requests as f64)),
+                    ("swap_p99_spike_ms", num(f.swap_p99_spike_ms)),
                 ],
             );
         }

@@ -1,0 +1,332 @@
+//! End-to-end multi-model fleet tests over a real TCP socket: several
+//! resident models answering concurrently with bit-exact per-model
+//! predictions, LRU plane demotion under a too-small memory budget
+//! (observed through `GET /v1/models`), zero-downtime hot-swap under
+//! live traffic with no stale cache hits, and the deprecated
+//! `/v1/predict` alias answering `Deprecation: true`.
+
+use oscillations_qat::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+use oscillations_qat::deploy::packed::Packed;
+use oscillations_qat::deploy::serve::http::{format_request, read_response};
+use oscillations_qat::deploy::serve::registry::plane_cost;
+use oscillations_qat::deploy::serve::{
+    BatchForward, EngineCfg, HttpCfg, HttpServer, ModelRegistry, RegistryCfg, ServeCfg,
+};
+use oscillations_qat::deploy::Engine;
+use oscillations_qat::json;
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// 12-feature single-layer model on a 3-bit grid where feature block
+/// `c` drives class `(c + rot) % 3` — three rotations give three
+/// distinguishable models that share one plane cost.
+fn rot_model(name: &str, rot: usize) -> DeployModel {
+    let mut codes = vec![4u32; 12 * 3]; // grid int 0
+    for c in 0..3usize {
+        for f in 0..4usize {
+            codes[(c * 4 + f) * 3 + (c + rot) % 3] = 6; // grid int +2 -> weight 1.0
+        }
+    }
+    DeployModel {
+        name: name.into(),
+        input_hw: 2,
+        num_classes: 3,
+        quant_a: false,
+        bits_w: 3,
+        bits_a: 8,
+        layers: vec![DeployLayer {
+            name: "head".into(),
+            op: DeployOp::Full,
+            d_in: 12,
+            d_out: 3,
+            relu: false,
+            aq: false,
+            act_bits: 8,
+            a_scales: vec![1.0],
+            w_bits: 3,
+            w_scales: vec![0.5],
+            weights: Packed::pack(&codes, 3).unwrap(),
+            bias: None,
+            requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
+        }],
+    }
+}
+
+fn one_hot_block(c: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; 12];
+    for f in 0..4 {
+        x[c * 4 + f] = 1.0;
+    }
+    x
+}
+
+/// `{"input":[...]}` — the resource routes carry the model in the path.
+fn input_body(input: &[f32]) -> Vec<u8> {
+    let mut s = String::from("{\"input\":[");
+    for (i, v) in input.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s.into_bytes()
+}
+
+fn registry(mem_budget: Option<usize>) -> ModelRegistry {
+    ModelRegistry::new(RegistryCfg {
+        serve: ServeCfg::default(),
+        engine: EngineCfg::default(),
+        mem_budget,
+    })
+}
+
+fn parse_body(resp: &oscillations_qat::deploy::serve::http::ClientResponse) -> json::Json {
+    json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+}
+
+/// The fleet listing as `(id, mode)` pairs, fetched over the wire.
+fn fleet_modes(stream: &mut TcpStream) -> Vec<(String, String)> {
+    stream.write_all(b"GET /v1/models HTTP/1.1\r\n\r\n").unwrap();
+    let resp = read_response(stream).unwrap();
+    assert_eq!(resp.status, 200);
+    let j = parse_body(&resp);
+    j.get("models")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| {
+            (
+                m.get("id").as_str().unwrap().to_string(),
+                m.get("mode").as_str().unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn three_resident_models_answer_concurrently_and_bit_exactly() {
+    let mut models = registry(None);
+    for rot in 0..3usize {
+        models.insert_model(&format!("m{rot}"), rot_model(&format!("rot{rot}"), rot)).unwrap();
+    }
+    let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+    let addr = srv.addr();
+    // the ground truth each fleet answer must match to the bit
+    let refs: Vec<Engine> = (0..3).map(|rot| Engine::new(rot_model("ref", rot))).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3usize)
+            .map(|rot| {
+                let expect = &refs[rot];
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    for round in 0..8 {
+                        let c = round % 3;
+                        let req = format_request(
+                            &format!("/v1/models/m{rot}/predict"),
+                            &input_body(&one_hot_block(c)),
+                            &[],
+                        );
+                        stream.write_all(&req).unwrap();
+                        let resp = read_response(&mut stream).unwrap();
+                        assert_eq!(resp.status, 200, "m{rot} round {round}");
+                        let j = parse_body(&resp);
+                        assert_eq!(j.get("pred").as_usize(), Some((c + rot) % 3), "m{rot}");
+                        let got: Vec<f32> = j
+                            .get("logits")
+                            .as_arr()
+                            .unwrap()
+                            .iter()
+                            .map(|v| v.as_f64().unwrap() as f32)
+                            .collect();
+                        let want = expect.forward_batch(&one_hot_block(c), 1).unwrap();
+                        assert_eq!(got, want, "m{rot} logits must match a direct forward");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    srv.stop();
+}
+
+#[test]
+fn too_small_budget_demotes_lru_and_traffic_promotes_it_back() {
+    let dm = rot_model("rot0", 0);
+    let cost = plane_cost(&dm);
+    assert!(cost > 0);
+    // room for exactly two resident plane sets
+    let mut models = registry(Some(2 * cost));
+    for rot in 0..3usize {
+        models.insert_model(&format!("m{rot}"), rot_model(&format!("rot{rot}"), rot)).unwrap();
+    }
+    let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    // installing m2 had to steal m0's planes (m0 was least recently used)
+    let modes = fleet_modes(&mut stream);
+    assert_eq!(
+        modes,
+        vec![
+            ("m0".to_string(), "streaming".to_string()),
+            ("m1".to_string(), "prepared".to_string()),
+            ("m2".to_string(), "prepared".to_string()),
+        ],
+        "{modes:?}"
+    );
+    // streaming entries still answer correctly
+    for (send, expect_pred) in [(0usize, 0usize), (1, 1)] {
+        let req = format_request("/v1/models/m0/predict", &input_body(&one_hot_block(send)), &[]);
+        stream.write_all(&req).unwrap();
+        let resp = read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(parse_body(&resp).get("pred").as_usize(), Some(expect_pred));
+    }
+    // two hits made m0 the hottest entry: it won its planes back from
+    // the now-coldest m1
+    let modes = fleet_modes(&mut stream);
+    assert_eq!(
+        modes,
+        vec![
+            ("m0".to_string(), "prepared".to_string()),
+            ("m1".to_string(), "streaming".to_string()),
+            ("m2".to_string(), "prepared".to_string()),
+        ],
+        "{modes:?}"
+    );
+    srv.stop();
+}
+
+#[test]
+fn hot_swap_under_live_traffic_drops_nothing_and_serves_no_stale_answers() {
+    let dir = std::env::temp_dir().join("qat_http_fleet_swap");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1: PathBuf = dir.join("swap_v1.qpkg");
+    let p2: PathBuf = dir.join("swap_v2.qpkg");
+    rot_model("swap_v1", 0).write_qpkg(&p1).unwrap();
+    rot_model("swap_v2", 1).write_qpkg(&p2).unwrap();
+
+    let mut models = registry(None);
+    models.load_qpkg("m", &p1).unwrap();
+    let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+    let addr = srv.addr();
+
+    // prime the response cache on version 1. The probe input is scaled
+    // so its bytes never collide with the workers' traffic below — a
+    // worker answer must not refill the cache slot this test watches.
+    let probe_input: Vec<f32> = one_hot_block(0).iter().map(|v| v * 2.0).collect();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let probe = format_request("/v1/models/m/predict", &input_body(&probe_input), &[]);
+    stream.write_all(&probe).unwrap();
+    let first = read_response(&mut stream).unwrap();
+    assert_eq!(first.status, 200);
+    assert_eq!(first.header("x-cache"), Some("miss"));
+    assert_eq!(parse_body(&first).get("pred").as_usize(), Some(0));
+    stream.write_all(&probe).unwrap();
+    let hit = read_response(&mut stream).unwrap();
+    assert_eq!(hit.header("x-cache"), Some("hit"));
+
+    // live traffic while the admin connection swaps v1 <-> v2: every
+    // request must answer 200 with one of the two valid predictions
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let workers: Vec<_> = (0..2usize)
+            .map(|w| {
+                let done = &done;
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let mut n = 0u32;
+                    while !done.load(Ordering::Relaxed) || n < 20 {
+                        let c = (n as usize) % 3;
+                        let req = format_request(
+                            "/v1/models/m/predict",
+                            &input_body(&one_hot_block(c)),
+                            &[],
+                        );
+                        stream.write_all(&req).unwrap();
+                        let resp = read_response(&mut stream).unwrap();
+                        assert_eq!(resp.status, 200, "worker {w} req {n} dropped mid-swap");
+                        let pred = parse_body(&resp).get("pred").as_usize().unwrap();
+                        assert!(
+                            pred == c || pred == (c + 1) % 3,
+                            "worker {w} req {n}: pred {pred} matches neither version"
+                        );
+                        n += 1;
+                    }
+                })
+            })
+            .collect();
+        let mut admin = TcpStream::connect(addr).unwrap();
+        // v2, v1, v2: three cutovers under traffic, landing on rot-1
+        for round in 0..3 {
+            let path = if round % 2 == 0 { &p2 } else { &p1 };
+            let body = format!("{{\"qpkg\":\"{}\"}}", path.display());
+            admin
+                .write_all(&format_request("/v1/models/m/load", body.as_bytes(), &[]))
+                .unwrap();
+            let resp = read_response(&mut admin).unwrap();
+            assert_eq!(resp.status, 200, "swap {round}");
+            assert_eq!(
+                parse_body(&resp).get("version").as_usize(),
+                Some(round + 2),
+                "swap {round}"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        done.store(true, Ordering::Relaxed);
+        for h in workers {
+            h.join().unwrap();
+        }
+    });
+
+    // the fleet landed on version 4 = rot-1 weights: the primed query
+    // must be recomputed (new content id keys the cache), not replayed
+    stream.write_all(&probe).unwrap();
+    let fresh = read_response(&mut stream).unwrap();
+    assert_eq!(fresh.status, 200);
+    assert_eq!(fresh.header("x-cache"), Some("miss"), "stale cache hit after swap");
+    assert_eq!(parse_body(&fresh).get("pred").as_usize(), Some(1));
+    srv.stop();
+}
+
+#[test]
+fn legacy_predict_alias_routes_by_body_model_and_answers_deprecation() {
+    let mut models = registry(None);
+    models.insert_model("m0", rot_model("rot0", 0)).unwrap();
+    models.insert_model("m1", rot_model("rot1", 1)).unwrap();
+    let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    // resource route: no deprecation marker
+    let req = format_request("/v1/models/m1/predict", &input_body(&one_hot_block(0)), &[]);
+    stream.write_all(&req).unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("deprecation"), None);
+    assert_eq!(parse_body(&resp).get("pred").as_usize(), Some(1));
+    // legacy alias: the body's model field routes, Deprecation: true
+    let mut body = String::from("{\"model\":\"m1\",\"input\":[");
+    for (i, v) in one_hot_block(2).iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str(&format!("{v}"));
+    }
+    body.push_str("]}");
+    stream.write_all(&format_request("/v1/predict", body.as_bytes(), &[])).unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("deprecation"), Some("true"));
+    assert_eq!(parse_body(&resp).get("pred").as_usize(), Some(0)); // (2 + 1) % 3
+    // legacy alias with no body model falls back to the default entry (m0)
+    stream
+        .write_all(&format_request("/v1/predict", &input_body(&one_hot_block(2)), &[]))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(parse_body(&resp).get("pred").as_usize(), Some(2));
+    srv.stop();
+}

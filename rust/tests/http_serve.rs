@@ -279,6 +279,94 @@ fn health_stats_and_malformed_requests() {
     srv.stop();
 }
 
+/// The stable machine-readable code from a unified error body
+/// `{"error":{"code","message","model"}}`.
+fn error_code(resp: &oscillations_qat::deploy::serve::http::ClientResponse) -> String {
+    let j = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    j.get("error").get("code").as_str().unwrap_or("").to_string()
+}
+
+#[test]
+fn error_responses_carry_stable_codes_end_to_end() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    // wrong input width -> bad_input_width, and the body names the model
+    stream
+        .write_all(&format_request("/v1/predict", &body_for(&[1.0, 2.0]), &[]))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp), "bad_input_width");
+    let j = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+    assert_eq!(j.get("error").get("model").as_str(), Some("tiny"));
+    // unknown model id -> model_not_found on both routing surfaces
+    stream
+        .write_all(&format_request(
+            "/v1/predict",
+            b"{\"model\":\"nope\",\"input\":[1]}",
+            &[],
+        ))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp), "model_not_found");
+    // the resource route carries the model in the path alone (a body
+    // model field contradicting the path would be a 400 instead)
+    stream
+        .write_all(&format_request(
+            "/v1/models/nope/predict",
+            b"{\"input\":[1,2,3]}",
+            &[],
+        ))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp), "model_not_found");
+    // an already-expired deadline -> deadline_exceeded with the shed header
+    stream
+        .write_all(&format_request(
+            "/v1/predict",
+            &body_for(&one_hot_block(0)),
+            &[("X-Deadline-Ms", "0")],
+        ))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 503);
+    assert_eq!(resp.header("x-shed"), Some("deadline"));
+    assert_eq!(error_code(&resp), "deadline_exceeded");
+    // unknown path -> route_not_found
+    stream
+        .write_all(&format_request("/v1/nope", &body_for(&one_hot_block(0)), &[]))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp), "route_not_found");
+    srv.stop();
+}
+
+#[test]
+fn legacy_predict_alias_answers_deprecation_and_resource_route_does_not() {
+    let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
+    let mut stream = TcpStream::connect(srv.addr()).unwrap();
+    stream
+        .write_all(&format_request("/v1/predict", &body_for(&one_hot_block(1)), &[]))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("deprecation"), Some("true"));
+    stream
+        .write_all(&format_request(
+            "/v1/models/tiny/predict",
+            &body_for(&one_hot_block(1)),
+            &[],
+        ))
+        .unwrap();
+    let resp = read_response(&mut stream).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("deprecation"), None);
+    srv.stop();
+}
+
 #[test]
 fn metrics_endpoint_exposes_prometheus_text() {
     let srv = start_tiny(&ServeCfg::default(), &HttpCfg::default());
