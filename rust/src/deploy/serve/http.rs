@@ -201,10 +201,12 @@ pub fn write_response_with_type(
 /// `message` is human-oriented and may change), `model` is the model id
 /// the request resolved to when one was resolved. The stable codes:
 /// `model_not_found`, `bad_input_width`, `deadline_exceeded`,
-/// `queue_full`, `pool_dead`, `bad_request`, `route_not_found`,
-/// `method_not_allowed`, `inference_failed`, `load_failed`,
-/// `not_swappable`, `too_many_connections`, plus the parse-layer slugs
-/// from [`status_code_slug`].
+/// `queue_full`, `pool_dead`, `shard_restarting` (a sharded pool's
+/// children are all mid-restart — retryable, connection kept),
+/// `bad_request`, `route_not_found`, `method_not_allowed`,
+/// `inference_failed`, `load_failed`, `not_swappable`,
+/// `too_many_connections`, plus the parse-layer slugs from
+/// [`status_code_slug`].
 pub fn error_body(code: &str, msg: &str, model: Option<&str>) -> Vec<u8> {
     let mut s = String::from("{\"error\":{\"code\":");
     json_escape_into(&mut s, code);

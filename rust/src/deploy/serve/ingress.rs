@@ -120,6 +120,8 @@ pub struct HttpStats {
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    drain_ms: Arc<AtomicU64>,
     thread: JoinHandle<()>,
     stats: Arc<HttpStats>,
 }
@@ -147,14 +149,18 @@ impl HttpServer {
         listener.set_nonblocking(true).context("nonblocking listener")?;
         let addr = listener.local_addr().context("local_addr")?;
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
+        let drain_ms = Arc::new(AtomicU64::new(0));
         let stats = Arc::new(HttpStats::default());
         let cfg = http_cfg.clone();
         let loop_stop = stop.clone();
+        let loop_drain = draining.clone();
+        let loop_drain_ms = drain_ms.clone();
         let loop_stats = stats.clone();
         let thread = std::thread::spawn(move || {
-            event_loop(listener, models, cfg, loop_stop, loop_stats);
+            event_loop(listener, models, cfg, loop_stop, loop_drain, loop_drain_ms, loop_stats);
         });
-        Ok(HttpServer { addr, stop, thread, stats })
+        Ok(HttpServer { addr, stop, draining, drain_ms, thread, stats })
     }
 
     /// The bound address (with the resolved ephemeral port).
@@ -169,6 +175,18 @@ impl HttpServer {
     /// Signal the event loop and join it (drains every pool too).
     pub fn stop(self) {
         self.stop.store(true, Ordering::Release);
+        let _ = self.thread.join();
+    }
+
+    /// Graceful shutdown: close the listener (no new connections),
+    /// answer every in-flight request — or let its deadline shed it —
+    /// within `timeout`, then tear the fleet down (shard children get
+    /// protocol `Shutdown` frames before any SIGKILL). This is what
+    /// `serve --listen` runs on SIGTERM/SIGINT, bounded by
+    /// `--drain-ms`.
+    pub fn drain(self, timeout: Duration) {
+        self.drain_ms.store(timeout.as_millis() as u64, Ordering::Release);
+        self.draining.store(true, Ordering::Release);
         let _ = self.thread.join();
     }
 }
@@ -186,6 +204,9 @@ struct Pending {
     deprecated: bool,
     /// registry index of the model this request rode on
     model_ix: usize,
+    /// rode a sharded pool — a dropped channel means a crashed child
+    /// mid-restart (retryable 503), not a dead in-process pool
+    sharded: bool,
 }
 
 struct Conn {
@@ -241,11 +262,6 @@ fn resp_headers(
     }
     v.extend_from_slice(extra);
     v
-}
-
-/// Prometheus label-value escaping (backslash, quote, newline).
-fn label_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
 struct EventLoop {
@@ -322,9 +338,9 @@ impl EventLoop {
 
     /// Render the Prometheus text exposition: sync counters and gauges
     /// from their sources of truth (front-end atomics, fleet-summed
-    /// pool counters, registry residency gauges), render the registry
-    /// (the adopted stage histograms are always live), then append the
-    /// per-model labeled series the unlabeled registry can't hold.
+    /// pool counters, registry residency gauges, per-model and
+    /// per-shard labeled series), then render the registry — the
+    /// adopted stage histograms are always live.
     fn metrics_body(&self) -> Vec<u8> {
         let st = &self.stats;
         let (pool_batches, pool_requests, pool_failed, pool_expired, _) = self.pool_totals();
@@ -381,46 +397,50 @@ impl EventLoop {
         self.registry
             .gauge("qat_registry_plane_bytes", "prepared plane bytes resident")
             .set(self.models.prepared_bytes() as f64);
-        let mut text = self.registry.render();
-        // per-model labeled series: the obs registry is unlabeled by
-        // design, so the fleet dimension is appended by hand
-        text.push_str("# HELP qat_model_requests_total requests routed per model\n");
-        text.push_str("# TYPE qat_model_requests_total counter\n");
+        // per-model (and, for sharded entries, per-shard-pool) labeled
+        // series, synced through the registry's labeled families
         for e in self.models.iter() {
-            text.push_str(&format!(
-                "qat_model_requests_total{{model=\"{}\"}} {}\n",
-                label_escape(e.id()),
-                e.requests()
-            ));
+            let lbl = [("model", e.id())];
+            self.registry
+                .counter_with("qat_model_requests_total", "requests routed per model", &lbl)
+                .store(e.requests());
+            self.registry
+                .counter_with("qat_model_ok_total", "200 answers per model", &lbl)
+                .store(e.ok());
+            self.registry
+                .gauge_with("qat_model_prepared", "1 when the model's planes are resident", &lbl)
+                .set(if e.mode_str() == "streaming" { 0.0 } else { 1.0 });
+            self.registry
+                .gauge_with("qat_model_plane_bytes", "prepared-plane cost per model", &lbl)
+                .set(e.plane_cost() as f64);
+            if let Some(sp) = e.pool().shard() {
+                self.registry
+                    .gauge_with("qat_shard_up", "live shard children per model", &lbl)
+                    .set(sp.up_count() as f64);
+                self.registry
+                    .counter_with(
+                        "qat_shard_restarts_total",
+                        "shard children respawned after a crash or stall",
+                        &lbl,
+                    )
+                    .store(sp.restarts());
+                self.registry
+                    .counter_with(
+                        "qat_shard_failovers_total",
+                        "orphaned requests replayed onto a sibling shard",
+                        &lbl,
+                    )
+                    .store(sp.failovers());
+                self.registry
+                    .counter_with(
+                        "qat_shard_dropped_total",
+                        "orphaned requests dropped (retry budget or idempotency)",
+                        &lbl,
+                    )
+                    .store(sp.dropped());
+            }
         }
-        text.push_str("# HELP qat_model_ok_total 200 answers per model\n");
-        text.push_str("# TYPE qat_model_ok_total counter\n");
-        for e in self.models.iter() {
-            text.push_str(&format!(
-                "qat_model_ok_total{{model=\"{}\"}} {}\n",
-                label_escape(e.id()),
-                e.ok()
-            ));
-        }
-        text.push_str("# HELP qat_model_prepared 1 when the model's planes are resident\n");
-        text.push_str("# TYPE qat_model_prepared gauge\n");
-        for e in self.models.iter() {
-            let v = if e.mode_str() == "streaming" { 0 } else { 1 };
-            text.push_str(&format!(
-                "qat_model_prepared{{model=\"{}\"}} {v}\n",
-                label_escape(e.id())
-            ));
-        }
-        text.push_str("# HELP qat_model_plane_bytes prepared-plane cost per model\n");
-        text.push_str("# TYPE qat_model_plane_bytes gauge\n");
-        for e in self.models.iter() {
-            text.push_str(&format!(
-                "qat_model_plane_bytes{{model=\"{}\"}} {}\n",
-                label_escape(e.id()),
-                e.plane_cost()
-            ));
-        }
-        text.into_bytes()
+        self.registry.render().into_bytes()
     }
 
     /// Route one complete request: either queues a response into the
@@ -641,6 +661,7 @@ impl EventLoop {
                 return;
             }
         }
+        let sharded = self.models.entry(ix).pool().is_sharded();
         match self.models.entry(ix).pool().try_submit(input, deadline) {
             Ok(Some(rx)) => {
                 conn.pending = Some(Pending {
@@ -651,6 +672,7 @@ impl EventLoop {
                     t0,
                     deprecated,
                     model_ix: ix,
+                    sharded,
                 });
             }
             Ok(None) => {
@@ -663,6 +685,19 @@ impl EventLoop {
                     ka,
                     &hdrs,
                     &http::error_body("queue_full", "server overloaded", Some(&id)),
+                );
+            }
+            Err(e) if sharded => {
+                // every shard child is mid-restart: the supervisor is
+                // respawning them, so this is a retryable 503 on a
+                // connection worth keeping — not a dead pool
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                let hdrs = resp_headers(deprecated, &[("X-Shed", "restart")]);
+                conn.queue(
+                    503,
+                    ka,
+                    &hdrs,
+                    &http::error_body("shard_restarting", &format!("{e:#}"), Some(&id)),
                 );
             }
             Err(e) => {
@@ -764,7 +799,9 @@ impl EventLoop {
                 }
             }
             Err(mpsc::TryRecvError::Disconnected) => {
-                // the job was dropped: expired in the worker (answer 503)
+                // the job was dropped: expired in the worker (answer 503),
+                // orphaned by a crashed shard child past its retry budget
+                // (answer a retryable 503 — the supervisor is respawning),
                 // or its batch failed in the engine (answer 500 + close)
                 let p = conn.pending.take().expect("pending just matched");
                 let id = self.models.entry(p.model_ix).id();
@@ -776,6 +813,19 @@ impl EventLoop {
                         p.keep_alive,
                         &hdrs,
                         &http::error_body("deadline_exceeded", "deadline expired", Some(id)),
+                    );
+                } else if p.sharded {
+                    self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                    let hdrs = resp_headers(p.deprecated, &[("X-Shed", "restart")]);
+                    conn.queue(
+                        503,
+                        p.keep_alive,
+                        &hdrs,
+                        &http::error_body(
+                            "shard_restarting",
+                            "shard crashed; restarting",
+                            Some(id),
+                        ),
                     );
                 } else {
                     self.stats.failed.fetch_add(1, Ordering::Relaxed);
@@ -803,6 +853,8 @@ fn event_loop(
     models: ModelRegistry,
     cfg: HttpCfg,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    drain_ms: Arc<AtomicU64>,
     stats: Arc<HttpStats>,
 ) {
     let cache = (cfg.cache_cap > 0).then(|| ResponseCache::new(cfg.cache_cap));
@@ -816,18 +868,31 @@ fn event_loop(
         ("qat_stage_write_seconds", "response write-burst duration", stats.write_s.clone()),
         ("qat_stage_queue_seconds", "pool queue+batch wait per job", stage_queue),
         ("qat_stage_compute_seconds", "engine forward time per batch", stage_compute),
+        (
+            "qat_shard_heartbeat_age_seconds",
+            "interval between shard heartbeats (fleet-wide)",
+            models.shard_heartbeat_histogram(),
+        ),
     ];
     for (name, help, h) in adopt {
         registry.adopt_histogram(name, help, h);
     }
     let mut el = EventLoop { models, cache, cfg, stats, registry };
+    // dropped (closing the socket) when a drain begins
+    let mut listener = Some(listener);
+    let mut drain_deadline: Option<Instant> = None;
     let mut conns: Vec<Conn> = Vec::new();
     let mut chunk = [0u8; 16 * 1024];
     while !stop.load(Ordering::Acquire) {
+        if draining.load(Ordering::Acquire) && drain_deadline.is_none() {
+            listener = None; // no new connections from here on
+            drain_deadline =
+                Some(Instant::now() + Duration::from_millis(drain_ms.load(Ordering::Acquire)));
+        }
         let mut progress = false;
         // 1. accept everything that's ready
-        loop {
-            match listener.accept() {
+        while let Some(l) = &listener {
+            match l.accept() {
                 Ok((stream, _)) => {
                     progress = true;
                     el.stats.conns.fetch_add(1, Ordering::Relaxed);
@@ -972,9 +1037,22 @@ fn event_loop(
         if dropped > 0 {
             el.stats.open_conns.fetch_sub(dropped, Ordering::Relaxed);
         }
+        // 4. a drain ends once every connection is quiescent (no
+        // in-flight response, nothing left to flush) or the budget is
+        // spent — whichever comes first
+        if let Some(dd) = drain_deadline {
+            let quiescent = conns.iter().all(|c| c.pending.is_none() && c.wbuf.is_empty());
+            if quiescent || Instant::now() > dd {
+                break;
+            }
+        }
         if !progress {
             std::thread::sleep(Duration::from_micros(300));
         }
+    }
+    let n_open = conns.len() as u64;
+    if n_open > 0 {
+        el.stats.open_conns.fetch_sub(n_open, Ordering::Relaxed);
     }
     drop(conns);
     el.models.shutdown();
@@ -1539,6 +1617,161 @@ mod tests {
         let resp = http::read_response(&mut stream).unwrap();
         assert_eq!((resp.status, error_code(&resp)), (400, "bad_request".into()));
         srv.stop();
+    }
+
+    /// A sharded entry whose children can never come up answers a
+    /// fast, retryable `shard_restarting` 503 — the connection (and the
+    /// ingress) survives, and `/metrics` carries the shard families.
+    #[test]
+    fn sharded_pool_with_no_children_answers_shard_restarting() {
+        use super::super::shard::{Launcher, ShardCfg};
+        let cfg = RegistryCfg {
+            shard: ShardCfg {
+                shards: 1,
+                // a launcher that drops the child's socket on the floor:
+                // the handshake fails forever, no shard is ever up
+                launcher: Launcher::Thread(Arc::new(|_, _conn| {})),
+                backoff_base: Duration::from_millis(50),
+                backoff_max: Duration::from_millis(200),
+                ..ShardCfg::default()
+            },
+            ..RegistryCfg::default()
+        };
+        let mut models = ModelRegistry::new(cfg);
+        models.insert_model("m", tiny_model()).unwrap();
+        let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        stream
+            .write_all(&http::format_request(
+                "/v1/models/m/predict",
+                &input_only_body(&one_hot_block(0)),
+                &[],
+            ))
+            .unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!((resp.status, error_code(&resp)), (503, "shard_restarting".into()));
+        assert_eq!(resp.header("x-shed"), Some("restart"));
+        // the connection survives the shed: health + metrics still work
+        stream.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(http::read_response(&mut stream).unwrap().status, 200);
+        stream.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let m = http::read_response(&mut stream).unwrap();
+        let text = std::str::from_utf8(&m.body).unwrap();
+        assert!(text.contains("qat_shard_up{model=\"m\"} 0"), "{text}");
+        assert!(text.contains("# TYPE qat_shard_restarts_total counter"), "{text}");
+        assert!(text.contains("# TYPE qat_shard_heartbeat_age_seconds histogram"), "{text}");
+        srv.stop();
+    }
+
+    /// The response cache keys on (id, content fingerprint, input
+    /// bits) — no shard identity — so an answer cached before a shard
+    /// crash keeps hitting after the supervisor restarts the child,
+    /// and the restarted child repopulates under the same fingerprint.
+    #[test]
+    fn cache_keys_survive_shard_restart() {
+        use super::super::shard::supervisor::testutil::healthy_fake;
+        use super::super::shard::{Launcher, ShardCfg};
+        // keep a clone of every live shard connection so the test can
+        // sever it — the supervisor sees the disconnect as a crash
+        let live: Arc<std::sync::Mutex<Vec<TcpStream>>> =
+            Arc::new(std::sync::Mutex::new(Vec::new()));
+        let live_in = Arc::clone(&live);
+        let cfg = RegistryCfg {
+            shard: ShardCfg {
+                shards: 1,
+                launcher: Launcher::Thread(Arc::new(move |_ix, conn: TcpStream| {
+                    live_in.lock().unwrap().push(conn.try_clone().unwrap());
+                    healthy_fake(12, conn);
+                })),
+                backoff_base: Duration::from_millis(20),
+                backoff_max: Duration::from_millis(100),
+                ..ShardCfg::default()
+            },
+            ..RegistryCfg::default()
+        };
+        let mut models = ModelRegistry::new(cfg);
+        models.insert_model("m", tiny_model()).unwrap();
+        let srv = HttpServer::start_registry(models, &HttpCfg::default()).unwrap();
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        let req = http::format_request(
+            "/v1/models/m/predict",
+            &input_only_body(&one_hot_block(1)),
+            &[],
+        );
+        // wait for the shard to come up, then prime the cache
+        let t0 = Instant::now();
+        let first = loop {
+            stream.write_all(&req).unwrap();
+            let resp = http::read_response(&mut stream).unwrap();
+            if resp.status == 200 {
+                break resp;
+            }
+            assert_eq!(resp.status, 503, "unexpected status while the shard spawns");
+            assert!(t0.elapsed() < Duration::from_secs(30), "shard never came up");
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert_eq!(first.header("x-cache"), Some("miss"));
+        stream.write_all(&req).unwrap();
+        assert_eq!(http::read_response(&mut stream).unwrap().header("x-cache"), Some("hit"));
+        // crash the shard: sever its socket from the child side
+        for c in live.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        // an uncached input forces pool traffic; it answers 200 again
+        // once the supervisor has respawned the shard
+        let fresh = http::format_request(
+            "/v1/models/m/predict",
+            &input_only_body(&one_hot_block(2)),
+            &[],
+        );
+        let t0 = Instant::now();
+        loop {
+            stream.write_all(&fresh).unwrap();
+            let resp = http::read_response(&mut stream).unwrap();
+            if resp.status == 200 {
+                assert_eq!(resp.header("x-cache"), Some("miss"));
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "shard never restarted");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // the pre-crash key still hits: the fingerprint carries no
+        // shard identity, so a restart invalidates nothing
+        stream.write_all(&req).unwrap();
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.header("x-cache"), Some("hit"), "cache key changed across restart");
+        assert_eq!(resp.status, 200);
+        srv.stop();
+    }
+
+    /// Graceful drain: the in-flight request is answered before the
+    /// event loop exits, and the listener is closed to new connections.
+    #[test]
+    fn drain_answers_in_flight_and_refuses_new_connections() {
+        // a slow engine so the request is genuinely in flight when the
+        // drain begins
+        let engine: Arc<dyn BatchForward> = Arc::new(Throttled {
+            inner: Arc::new(Engine::new(tiny_model())),
+            delay: Duration::from_millis(150),
+        });
+        let srv = HttpServer::start(engine, &ServeCfg::default(), &HttpCfg::default()).unwrap();
+        let addr = srv.addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&predict_req(&one_hot_block(1), &[])).unwrap();
+        std::thread::sleep(Duration::from_millis(50)); // let it reach the pool
+        let t0 = Instant::now();
+        srv.drain(Duration::from_secs(30));
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "drain must return via quiescence, not the deadline"
+        );
+        // the in-flight answer was flushed before the loop exited
+        let resp = http::read_response(&mut stream).unwrap();
+        assert_eq!(resp.status, 200);
+        let j = crate::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("pred").as_usize(), Some(1));
+        // the listener is gone: new connections are refused
+        assert!(TcpStream::connect(addr).is_err(), "listener must be closed after drain");
     }
 
     #[test]

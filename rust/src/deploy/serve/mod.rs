@@ -52,12 +52,15 @@ pub mod cache;
 pub mod http;
 pub mod ingress;
 pub mod registry;
+pub mod shard;
 
 pub use cache::{CachedResponse, ResponseCache};
 pub use ingress::{bench_http, HttpBenchReport, HttpCfg, HttpServer, HttpStats};
 pub use registry::{
-    bench_fleet, EngineCfg, FleetBenchReport, LoadOutcome, ModelEntry, ModelRegistry, RegistryCfg,
+    bench_fleet, EngineCfg, FleetBenchReport, LoadOutcome, ModelEntry, ModelRegistry, PoolBackend,
+    RegistryCfg,
 };
+pub use shard::{bench_shards, Launcher, ShardBenchReport, ShardCfg, ShardPool};
 
 use super::engine::{argmax, Engine};
 use crate::json::Json;
@@ -494,6 +497,9 @@ pub struct ServeReport {
     /// multi-model fleet rows ([`registry::bench_fleet`]): aggregate
     /// throughput at 2/4/8 resident models + the hot-swap p99 spike
     pub fleet: Option<FleetBenchReport>,
+    /// cross-process shard rows ([`shard::bench_shards`]): 2-shard
+    /// throughput + kill-9 crash-recovery wall time
+    pub shard: Option<ShardBenchReport>,
 }
 
 impl ServeReport {
@@ -525,6 +531,13 @@ impl ServeReport {
         }
         if let Some(f) = &self.fleet {
             f.merge_into(&mut o);
+        }
+        if let Some(s) = &self.shard {
+            let mut rows = BTreeMap::new();
+            s.merge_into(&mut rows);
+            for (k, v) in rows {
+                o.insert(k, Json::Num(finite_or_zero(v)));
+            }
         }
         Json::Obj(o)
     }
@@ -558,6 +571,10 @@ impl ServeReport {
         if let Some(f) = &self.fleet {
             s.push('\n');
             s.push_str(&f.summary());
+        }
+        if let Some(sh) = &self.shard {
+            s.push('\n');
+            s.push_str(&sh.summary());
         }
         s
     }
@@ -644,6 +661,7 @@ pub fn bench_serve(engine: Arc<Engine>, cfg: &ServeCfg, inputs: &[Vec<f32>]) -> 
         preds,
         http: None,
         fleet: None,
+        shard: None,
     })
 }
 

@@ -34,7 +34,8 @@
 use super::cache::ResponseCache;
 use super::http;
 use super::ingress::{HttpCfg, HttpServer};
-use super::{finite_or_zero, percentile, BatchForward, ServeCfg, ServeStats, Server};
+use super::shard::{ShardCfg, ShardPool};
+use super::{finite_or_zero, percentile, BatchForward, Response, ServeCfg, ServeStats, Server};
 use crate::deploy::engine::{Engine, EngineOpts, PreparedModel};
 use crate::deploy::format::DeployModel;
 use crate::json::Json;
@@ -43,8 +44,8 @@ use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::net::TcpStream;
-use std::path::Path;
-use std::sync::{Arc, RwLock};
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc, RwLock};
 use std::time::{Duration, Instant};
 
 /// How each entry's engine is built (the registry rebuilds engines on
@@ -74,6 +75,11 @@ pub struct RegistryCfg {
     /// total prepared-plane byte budget across the fleet; `None` is
     /// unlimited, `Some(0)` forces every model to streaming mode
     pub mem_budget: Option<usize>,
+    /// shard supervision knobs; `shard.shards > 0` moves every
+    /// QPKG-backed entry's pool into child processes (`shard.serve` /
+    /// `shard.threads` are overridden by `serve` / `engine.threads` so
+    /// there is a single source of truth for pool shape)
+    pub shard: ShardCfg,
 }
 
 /// The swappable forward an entry's pool drives: readers clone the
@@ -145,12 +151,79 @@ enum Backing {
     Qpkg(QpkgBacking),
 }
 
+/// The serving backend behind one entry: the classic in-process
+/// batching pool, or a supervised pool of shard child processes
+/// (`--shards N`). Both expose the same admission surface
+/// (`try_submit` / `submit` / `stats`), so the ingress routes without
+/// caring which is behind an id.
+pub enum PoolBackend {
+    InProcess(Server),
+    Sharded(ShardPool),
+}
+
+impl PoolBackend {
+    /// Non-blocking admission: `Ok(None)` = shed (queue full), `Err` =
+    /// pool unusable (dead in-process pool / no shard up / bad input).
+    pub fn try_submit(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        match self {
+            PoolBackend::InProcess(s) => s.try_submit(x, deadline),
+            PoolBackend::Sharded(p) => p.try_submit(x, deadline),
+        }
+    }
+
+    /// Blocking submit (tests and benches).
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        match self {
+            PoolBackend::InProcess(s) => s.submit(x),
+            PoolBackend::Sharded(p) => p.submit(x),
+        }
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        match self {
+            PoolBackend::InProcess(s) => s.stats(),
+            PoolBackend::Sharded(p) => p.stats(),
+        }
+    }
+
+    /// A sharded pool never reports dead: a crashed child is a restart
+    /// in progress, not a permanently wedged pool.
+    pub fn is_dead(&self) -> bool {
+        match self {
+            PoolBackend::InProcess(s) => s.is_dead(),
+            PoolBackend::Sharded(_) => false,
+        }
+    }
+
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, PoolBackend::Sharded(_))
+    }
+
+    pub fn shard(&self) -> Option<&ShardPool> {
+        match self {
+            PoolBackend::Sharded(p) => Some(p),
+            PoolBackend::InProcess(_) => None,
+        }
+    }
+
+    pub fn shutdown(self) -> (u64, u64) {
+        match self {
+            PoolBackend::InProcess(s) => s.shutdown(),
+            PoolBackend::Sharded(p) => p.shutdown(),
+        }
+    }
+}
+
 /// One resident model: its backing, its own serving pool, and the
 /// LRU/traffic bookkeeping the ingress event loop maintains.
 pub struct ModelEntry {
     id: String,
     backing: Backing,
-    pool: Server,
+    pool: PoolBackend,
     last_used: u64,
     requests: u64,
     ok: u64,
@@ -161,7 +234,7 @@ impl ModelEntry {
         &self.id
     }
 
-    pub fn pool(&self) -> &Server {
+    pub fn pool(&self) -> &PoolBackend {
         &self.pool
     }
 
@@ -189,6 +262,9 @@ impl ModelEntry {
     }
 
     pub fn mode_str(&self) -> &'static str {
+        if self.pool.is_sharded() {
+            return "sharded";
+        }
         match &self.backing {
             Backing::External(_) => "external",
             Backing::Qpkg(b) if b.prepared => "prepared",
@@ -222,6 +298,10 @@ impl ModelEntry {
         o.insert("plane_bytes".to_string(), Json::Num(self.plane_cost() as f64));
         o.insert("requests".to_string(), Json::Num(self.requests as f64));
         o.insert("pool_dead".to_string(), Json::Bool(self.pool.is_dead()));
+        if let PoolBackend::Sharded(sp) = &self.pool {
+            o.insert("shards".to_string(), Json::Num(sp.shards() as f64));
+            o.insert("shards_up".to_string(), Json::Num(sp.up_count() as f64));
+        }
         if let Backing::Qpkg(b) = &self.backing {
             o.insert("content".to_string(), Json::Str(format!("{:016x}", b.content_id)));
             o.insert("bits_w".to_string(), Json::Num(b.model.bits_w as f64));
@@ -257,6 +337,8 @@ pub struct LoadOutcome {
     pub prepared: bool,
     pub plane_bytes: usize,
     pub content_id: u64,
+    /// served by child shard processes rather than the in-process pool
+    pub sharded: bool,
 }
 
 /// Fleet residency counts for the registry gauges.
@@ -301,6 +383,8 @@ pub struct ModelRegistry {
     promotions: u64,
     stage_queue: Arc<Histogram>,
     stage_compute: Arc<Histogram>,
+    /// observed heartbeat intervals across every shard of every model
+    shard_hb: Arc<Histogram>,
 }
 
 impl ModelRegistry {
@@ -315,6 +399,7 @@ impl ModelRegistry {
             promotions: 0,
             stage_queue: Arc::new(Histogram::new()),
             stage_compute: Arc::new(Histogram::new()),
+            shard_hb: Arc::new(Histogram::new()),
         }
     }
 
@@ -324,19 +409,63 @@ impl ModelRegistry {
         (self.stage_queue.clone(), self.stage_compute.clone())
     }
 
+    /// Fleet-wide shard heartbeat-interval histogram (adopted by the
+    /// ingress as `qat_shard_heartbeat_age_seconds`).
+    pub fn shard_heartbeat_histogram(&self) -> Arc<Histogram> {
+        self.shard_hb.clone()
+    }
+
+    /// Whether QPKG-backed entries serve from child shard processes.
+    pub fn sharded(&self) -> bool {
+        self.cfg.shard.shards > 0
+    }
+
     fn start_pool(&self, fwd: Arc<dyn BatchForward>) -> Server {
         let stats =
             ServeStats::with_stage_histograms(self.stage_queue.clone(), self.stage_compute.clone());
         Server::start_with_stats(fwd, &self.cfg.serve, stats)
     }
 
+    /// Start the supervised child-process pool for one entry. Pool
+    /// shape and engine threads come from the registry-level `serve` /
+    /// `engine` config so `--workers`-style knobs mean the same thing
+    /// sharded or not.
+    fn start_shard_pool(&self, id: &str, qpkg: PathBuf, d_in: usize) -> Result<ShardPool> {
+        let stats =
+            ServeStats::with_stage_histograms(self.stage_queue.clone(), self.stage_compute.clone());
+        let cfg = ShardCfg {
+            serve: self.cfg.serve.clone(),
+            threads: self.cfg.engine.threads,
+            ..self.cfg.shard.clone()
+        };
+        ShardPool::start(id, qpkg, d_in, cfg, stats, self.shard_hb.clone())
+    }
+
+    /// Shard children load their QPKG from disk; an in-memory model
+    /// (`insert_model`) is first written to a stable temp path. The
+    /// version rides in the filename so a hot-swap never overwrites the
+    /// artifact a still-running child may be re-reading.
+    fn materialize_qpkg(id: &str, version: u64, dm: &DeployModel) -> Result<PathBuf> {
+        let dir = std::env::temp_dir().join("qat_shard_qpkg");
+        std::fs::create_dir_all(&dir).context("create shard qpkg dir")?;
+        let safe: String = id
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        let path = dir.join(format!("{safe}_{}_v{version}.qpkg", std::process::id()));
+        dm.write_qpkg(&path)
+            .with_context(|| format!("materialize qpkg for shard children: {}", path.display()))?;
+        Ok(path)
+    }
+
     /// Register a caller-managed forward under its own `model_name`.
     /// External entries route and serve like any other but cannot be
-    /// hot-swapped and never count against the plane budget.
+    /// hot-swapped, never count against the plane budget, and always
+    /// run in-process (there is no QPKG artifact to hand a shard child).
     pub fn add_external(&mut self, fwd: Arc<dyn BatchForward>) -> Result<()> {
         let id = fwd.model_name().to_string();
         anyhow::ensure!(self.index_of(&id).is_none(), "duplicate model id {id:?}");
-        let pool = self.start_pool(fwd.clone());
+        let pool = PoolBackend::InProcess(self.start_pool(fwd.clone()));
         self.tick += 1;
         self.entries.push(ModelEntry {
             id: id.clone(),
@@ -359,7 +488,7 @@ impl ModelRegistry {
         let dm = DeployModel::from_bytes(&bytes)
             .with_context(|| format!("parse qpkg {}", path.display()))?;
         let content_id = ResponseCache::fingerprint(&bytes);
-        self.install(id, dm, content_id, path.display().to_string())
+        self.install(id, dm, content_id, path.display().to_string(), Some(path))
     }
 
     /// Register an in-memory model (tests + benchmarks); content
@@ -367,7 +496,7 @@ impl ModelRegistry {
     /// file load would.
     pub fn insert_model(&mut self, id: &str, dm: DeployModel) -> Result<LoadOutcome> {
         let content_id = ResponseCache::fingerprint(&dm.to_bytes());
-        self.install(id, dm, content_id, "(inline)".to_string())
+        self.install(id, dm, content_id, "(inline)".to_string(), None)
     }
 
     fn install(
@@ -376,18 +505,31 @@ impl ModelRegistry {
         dm: DeployModel,
         content_id: u64,
         source: String,
+        src_path: Option<&Path>,
     ) -> Result<LoadOutcome> {
         let cost = plane_cost(&dm);
+        let d_in = dm.d_in();
+        let sharded = self.sharded();
         let existing = self.index_of(id);
         if let Some(ix) = existing {
             anyhow::ensure!(
                 matches!(self.entries[ix].backing, Backing::Qpkg(_)),
                 "model {id:?} is not hot-swappable (externally managed forward)"
             );
+            // a shard pool's admission width is fixed for its lifetime
+            // (children validate d_in in the Hello handshake)
+            anyhow::ensure!(
+                !self.entries[ix].pool.is_sharded() || self.entries[ix].d_in() == d_in,
+                "sharded hot-swap cannot change input width ({} -> {})",
+                self.entries[ix].d_in(),
+                d_in,
+            );
         }
         // an explicit load outranks residency history: anything colder
-        // than "now" may be demoted to make room
-        let prepared = self.ensure_budget(existing, cost, u64::MAX);
+        // than "now" may be demoted to make room. Sharded entries keep a
+        // streaming (plane-free) engine in the parent — the prepared
+        // planes live inside the children, outside this budget.
+        let prepared = !sharded && self.ensure_budget(existing, cost, u64::MAX);
         let engine = build_engine(dm.clone(), prepared, &self.cfg.engine);
         let version = match existing {
             Some(ix) => {
@@ -404,11 +546,39 @@ impl ModelRegistry {
                 b.source = source;
                 let v = b.version;
                 self.swaps += 1;
+                if self.entries[ix].pool.is_sharded() {
+                    let path = match src_path {
+                        Some(p) => p.to_path_buf(),
+                        None => {
+                            let Backing::Qpkg(b) = &self.entries[ix].backing else {
+                                unreachable!()
+                            };
+                            Self::materialize_qpkg(id, v, &b.model)?
+                        }
+                    };
+                    if let PoolBackend::Sharded(sp) = &self.entries[ix].pool {
+                        // children drain in-flight work, then respawn on
+                        // the new artifact (rolling, one slot at a time)
+                        sp.swap_qpkg(path);
+                    }
+                }
                 v
             }
             None => {
+                // the swap holds the parent-side engine either way: for
+                // in-process entries it is the serving path, for sharded
+                // entries it is the metadata + hot-swap identity
+                // (streaming, no planes — the children serve)
                 let swap = Arc::new(SwapForward::new(id.to_string(), engine));
-                let pool = self.start_pool(swap.clone() as Arc<dyn BatchForward>);
+                let pool = if sharded {
+                    let path = match src_path {
+                        Some(p) => p.to_path_buf(),
+                        None => Self::materialize_qpkg(id, 1, &dm)?,
+                    };
+                    PoolBackend::Sharded(self.start_shard_pool(id, path, d_in)?)
+                } else {
+                    PoolBackend::InProcess(self.start_pool(swap.clone() as Arc<dyn BatchForward>))
+                };
                 self.tick += 1;
                 self.entries.push(ModelEntry {
                     id: id.to_string(),
@@ -432,7 +602,14 @@ impl ModelRegistry {
                 1
             }
         };
-        Ok(LoadOutcome { id: id.to_string(), version, prepared, plane_bytes: cost, content_id })
+        Ok(LoadOutcome {
+            id: id.to_string(),
+            version,
+            prepared,
+            plane_bytes: cost,
+            content_id,
+            sharded,
+        })
     }
 
     /// Make room for `want` prepared bytes on behalf of `skip` (which
@@ -523,8 +700,12 @@ impl ModelRegistry {
         self.tick += 1;
         self.entries[ix].last_used = self.tick;
         self.entries[ix].requests += 1;
+        // sharded entries never promote: the parent-side engine stays
+        // streaming by design (planes are resident in the children)
         let wants = match &self.entries[ix].backing {
-            Backing::Qpkg(b) if !b.prepared => Some(b.plane_bytes),
+            Backing::Qpkg(b) if !b.prepared && !self.entries[ix].pool.is_sharded() => {
+                Some(b.plane_bytes)
+            }
             _ => None,
         };
         if let Some(cost) = wants {
@@ -995,6 +1176,54 @@ mod tests {
         assert_eq!(models[1].get("bits_w").as_usize(), Some(3));
         assert_eq!(j.get("mem_budget_bytes").as_usize(), Some(2 * cost));
         assert_eq!(j.get("prepared_bytes").as_usize(), Some(2 * cost));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn sharded_entries_serve_through_child_shards_and_roll_on_swap() {
+        use super::super::shard::supervisor::testutil::healthy_fake;
+        use super::super::shard::Launcher;
+        let m = tiny_model();
+        let d_in = m.d_in();
+        let shard = ShardCfg {
+            shards: 2,
+            launcher: Launcher::Thread(Arc::new(move |_, c| healthy_fake(d_in, c))),
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(40),
+            ..ShardCfg::default()
+        };
+        let mut reg = ModelRegistry::new(RegistryCfg { shard, ..RegistryCfg::default() });
+        let out = reg.insert_model("s", m).unwrap();
+        assert!(out.sharded, "outcome must flag the sharded backend");
+        assert!(!out.prepared, "parent-side engine stays streaming");
+        let ix = reg.index_of("s").unwrap();
+        assert_eq!(reg.entry(ix).mode_str(), "sharded");
+        {
+            let sp = reg.entry(ix).pool().shard().expect("sharded backend");
+            assert!(sp.wait_up(2, Duration::from_secs(10)), "shards never came up");
+            let rx = reg.entry(ix).pool().submit(one_hot_block(0)).unwrap();
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("shard answered");
+            assert_eq!(resp.logits.len(), d_in, "fake echoes the input as logits");
+        }
+        let j = reg.detail_json(ix);
+        assert_eq!(j.get("mode").as_str(), Some("sharded"));
+        assert_eq!(j.get("shards").as_usize(), Some(2));
+        assert_eq!(j.get("shards_up").as_usize(), Some(2));
+        // hot-swap: materialized artifact + rolling child restarts
+        let out2 = reg.insert_model("s", rot_model("s_v2", 1)).unwrap();
+        assert_eq!(out2.version, 2);
+        let sp = reg.entry(ix).pool().shard().unwrap();
+        let t0 = Instant::now();
+        while sp.restarts() < 2 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(sp.restarts(), 2, "both children respawn once per swap");
+        assert!(sp.wait_up(2, Duration::from_secs(10)), "swap must end fully up");
+        // width changes are rejected for sharded entries
+        let mut wide = tiny_model();
+        wide.input_hw += 1;
+        let err = reg.insert_model("s", wide).expect_err("width change");
+        assert!(format!("{err:#}").contains("input width"), "{err:#}");
         reg.shutdown();
     }
 

@@ -1,0 +1,154 @@
+//! Cross-process shard serving: fault-isolated worker pools with crash
+//! recovery.
+//!
+//! A model's worker pool can run as child **shard processes** instead
+//! of in-process threads (`--shards N`): the supervisor
+//! ([`supervisor::ShardPool`]) spawns the binary's hidden
+//! `shard-worker` subcommand ([`worker`]), each child loads the QPKG
+//! and serves a length-prefixed binary protocol ([`proto`]) over a
+//! local socket. A panicking engine, allocator stall, or `kill -9`
+//! then takes down one child — the supervisor detects it (heartbeats +
+//! `try_wait` + transport errors), fails orphaned requests over to a
+//! sibling shard (bounded: one retry, idempotent-safe), and respawns
+//! the child with capped exponential backoff behind a restart-storm
+//! circuit breaker. `--shards 0` (default) keeps the in-process pool —
+//! behavior unchanged.
+
+pub mod proto;
+pub mod supervisor;
+pub mod worker;
+
+pub use supervisor::{fault_for, Launcher, ShardCfg, ShardPool};
+pub use worker::run_from_args as run_shard_worker;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::deploy::format::DeployModel;
+use crate::deploy::serve::{ServeCfg, ServeStats};
+use crate::obs::Histogram;
+
+/// Sharded-serving benchmark rows (the `shard_*` serve metrics in
+/// `BENCH_deploy.json`).
+#[derive(Debug, Clone)]
+pub struct ShardBenchReport {
+    /// throughput over 2 shard processes (requests/s)
+    pub shard_rps_2: f64,
+    pub shard_requests: usize,
+    /// wall time from `kill -9` of one shard to both shards serving
+    /// again (crash detection + backoff + respawn + QPKG reload)
+    pub shard_restart_ms: f64,
+    pub shard_failovers: u64,
+    pub shard_restarts: u64,
+}
+
+impl ShardBenchReport {
+    pub fn merge_into(&self, out: &mut BTreeMap<String, f64>) {
+        out.insert("shard_rps_2".into(), self.shard_rps_2);
+        out.insert("shard_requests".into(), self.shard_requests as f64);
+        out.insert("shard_restart_ms".into(), self.shard_restart_ms);
+        out.insert("shard_failovers".into(), self.shard_failovers as f64);
+        out.insert("shard_restarts".into(), self.shard_restarts as f64);
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "shards=2 rps={:.1} ({} reqs)  crash->serving again in {:.0} ms  \
+             failovers={} restarts={}",
+            self.shard_rps_2,
+            self.shard_requests,
+            self.shard_restart_ms,
+            self.shard_failovers,
+            self.shard_restarts,
+        )
+    }
+}
+
+/// Benchmark the sharded path end to end with **real child processes**:
+/// throughput over 2 shards, then a `kill -9` of shard 0 under light
+/// traffic, measuring time back to full strength. Only callable from
+/// the binary (`current_exe` must accept the `shard-worker`
+/// subcommand).
+pub fn bench_shards(
+    qpkg: &Path,
+    serve_cfg: &ServeCfg,
+    threads: usize,
+    smoke: bool,
+) -> Result<ShardBenchReport> {
+    let bytes = std::fs::read(qpkg).with_context(|| format!("read {}", qpkg.display()))?;
+    let dm = DeployModel::from_bytes(&bytes).context("parse qpkg for shard bench")?;
+    let d_in = dm.d_in();
+    drop(dm);
+    let cfg = ShardCfg {
+        shards: 2,
+        serve: serve_cfg.clone(),
+        threads,
+        ..ShardCfg::default()
+    };
+    let pool = ShardPool::start(
+        "bench",
+        qpkg.to_path_buf(),
+        d_in,
+        cfg,
+        ServeStats::default(),
+        Arc::new(Histogram::default()),
+    )?;
+    anyhow::ensure!(
+        pool.wait_up(2, Duration::from_secs(60)),
+        "shard bench: children did not come up in 60s"
+    );
+
+    // --- throughput over both shards
+    let n = if smoke { 64 } else { 512 };
+    let input = |i: usize| -> Vec<f32> {
+        (0..d_in).map(|j| ((i * 31 + j * 7) % 17) as f32 / 16.0).collect()
+    };
+    let t0 = Instant::now();
+    let rxs: Vec<_> =
+        (0..n).map(|i| pool.submit(input(i))).collect::<Result<Vec<_>>>()?;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        rx.recv_timeout(Duration::from_secs(60))
+            .with_context(|| format!("shard bench request {i} unanswered"))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let shard_rps_2 = n as f64 / wall.max(1e-9);
+
+    // --- crash recovery: SIGKILL shard 0, keep light traffic flowing,
+    // measure wall time until both shards serve again
+    pool.kill_shard(0);
+    let t_kill = Instant::now();
+    while pool.up_count() == 2 && t_kill.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    anyhow::ensure!(pool.up_count() < 2, "kill_shard was never acted on");
+    while pool.up_count() < 2 && t_kill.elapsed() < Duration::from_secs(60) {
+        // light traffic keeps the failover path exercised during
+        // recovery; responses are not awaited (dropped receivers are
+        // fine — the supervisor tolerates closed client channels)
+        let _ = pool.try_submit(input(0), None);
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    anyhow::ensure!(
+        pool.up_count() == 2,
+        "killed shard did not come back within 60s"
+    );
+    let shard_restart_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+
+    // prove the recovered pool serves
+    let rx = pool.submit(input(1))?;
+    rx.recv_timeout(Duration::from_secs(30)).context("post-recovery request unanswered")?;
+
+    let report = ShardBenchReport {
+        shard_rps_2,
+        shard_requests: n,
+        shard_restart_ms,
+        shard_failovers: pool.failovers(),
+        shard_restarts: pool.restarts(),
+    };
+    pool.shutdown();
+    Ok(report)
+}

@@ -1,0 +1,496 @@
+//! Length-prefixed binary wire protocol between the shard supervisor
+//! (ingress process) and `shard-worker` child processes.
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! +------+------+---------+------+----------------+---------...
+//! | 0x51 | 0x53 | version | type | payload len u32 | payload
+//! +------+------+---------+------+----------------+---------...
+//! ```
+//!
+//! The 8-byte header carries a two-byte magic (`"QS"`), a protocol
+//! version, a frame type, and the payload length. Payloads are typed
+//! structs with their own strict codecs: every decoder consumes the
+//! payload with a cursor and rejects trailing bytes, truncation,
+//! oversized lengths, and unknown discriminants with a typed
+//! [`ProtoError`] — never a panic. The framing layer is incremental
+//! ([`decode_frame`] returns `Ok(None)` on a partial buffer) so the
+//! supervisor can feed it straight from nonblocking reads, and
+//! [`read_frame`] wraps it for blocking sockets, turning EOF in the
+//! middle of a frame (a killed shard's half-written frame) into a
+//! clean `UnexpectedEof` transport error rather than a hang.
+
+use std::io::Read;
+
+/// Two-byte frame magic: `b"QS"` (QAT shard).
+pub const MAGIC: [u8; 2] = [0x51, 0x53];
+/// Protocol version; bumped on any incompatible wire change.
+pub const VERSION: u8 = 1;
+/// Fixed frame header length: magic(2) + version(1) + type(1) + len(4).
+pub const HEADER_LEN: usize = 8;
+/// Upper bound on a single frame payload (16 MiB) — far above any real
+/// request, low enough that a corrupt length field cannot OOM the
+/// supervisor.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Frame discriminants on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// Child -> supervisor, once after connect: model identity + dims.
+    Hello = 1,
+    /// Supervisor -> child: one prediction request.
+    Request = 2,
+    /// Child -> supervisor: successful answer for a request id.
+    Response = 3,
+    /// Child -> supervisor: terminal per-request error (real answer —
+    /// the supervisor must not fail over on it).
+    Error = 4,
+    /// Child -> supervisor: periodic liveness beacon.
+    Heartbeat = 5,
+    /// Supervisor -> child: drain and exit 0.
+    Shutdown = 6,
+}
+
+impl FrameType {
+    fn from_u8(v: u8) -> Result<Self, ProtoError> {
+        Ok(match v {
+            1 => FrameType::Hello,
+            2 => FrameType::Request,
+            3 => FrameType::Response,
+            4 => FrameType::Error,
+            5 => FrameType::Heartbeat,
+            6 => FrameType::Shutdown,
+            other => return Err(ProtoError::BadType(other)),
+        })
+    }
+}
+
+/// Typed decode failure. Any of these on a live connection means the
+/// peer is broken (or malicious) and the session must be torn down.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// First two bytes were not `b"QS"`.
+    BadMagic,
+    /// Unknown protocol version byte.
+    BadVersion(u8),
+    /// Unknown frame-type byte.
+    BadType(u8),
+    /// Declared payload length exceeds [`MAX_FRAME`].
+    Oversized(usize),
+    /// Payload failed its typed codec (truncated, trailing bytes, bad
+    /// string, ...).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadMagic => write!(f, "bad frame magic"),
+            ProtoError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            ProtoError::BadType(t) => write!(f, "unknown frame type {t}"),
+            ProtoError::Oversized(n) => {
+                write!(f, "frame payload {n} bytes exceeds max {MAX_FRAME}")
+            }
+            ProtoError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Encode one frame (header + payload) into a fresh buffer.
+pub fn encode_frame(ty: FrameType, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME, "oversized frame encoded");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(ty as u8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Incremental frame decoder. `Ok(None)` means the buffer holds only a
+/// partial frame (read more bytes); `Ok(Some((ty, payload, used)))`
+/// borrows the payload out of `buf` — the caller copies what it needs
+/// and then drains `used` bytes from the front.
+pub fn decode_frame(buf: &[u8]) -> Result<Option<(FrameType, &[u8], usize)>, ProtoError> {
+    // validate the header byte-by-byte as it arrives, so garbage is
+    // rejected as early as possible instead of after buffering 8 bytes
+    if !buf.is_empty() && buf[0] != MAGIC[0] {
+        return Err(ProtoError::BadMagic);
+    }
+    if buf.len() >= 2 && buf[1] != MAGIC[1] {
+        return Err(ProtoError::BadMagic);
+    }
+    if buf.len() >= 3 && buf[2] != VERSION {
+        return Err(ProtoError::BadVersion(buf[2]));
+    }
+    if buf.len() >= 4 {
+        FrameType::from_u8(buf[3])?;
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    if len > MAX_FRAME {
+        return Err(ProtoError::Oversized(len));
+    }
+    if buf.len() < HEADER_LEN + len {
+        return Ok(None);
+    }
+    let ty = FrameType::from_u8(buf[3])?;
+    Ok(Some((ty, &buf[HEADER_LEN..HEADER_LEN + len], HEADER_LEN + len)))
+}
+
+/// Blocking frame read for sockets with no read timeout (the reader
+/// thread). `buf` carries leftover bytes between calls. EOF with a
+/// partial frame buffered — the signature of a `kill -9`'d shard — is
+/// an `UnexpectedEof` transport error, not a hang or a panic.
+pub fn read_frame(
+    r: &mut impl Read,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<(FrameType, Vec<u8>)> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        match decode_frame(buf) {
+            Ok(Some((ty, payload, used))) => {
+                let out = payload.to_vec();
+                buf.drain(..used);
+                return Ok((ty, out));
+            }
+            Ok(None) => {}
+            Err(e) => {
+                return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e));
+            }
+        }
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// payload codecs — strict cursor readers over little-endian fields
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ProtoError::Malformed("truncated payload"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, ProtoError> {
+        let b = self.take(n.checked_mul(4).ok_or(ProtoError::Malformed("vector length"))?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn finish(self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::Malformed("trailing bytes"));
+        }
+        Ok(())
+    }
+}
+
+fn put_str_u16(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let n = b.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&b[..n]);
+}
+
+fn get_str_u16(c: &mut Cursor<'_>) -> Result<String, ProtoError> {
+    let n = c.u16()? as usize;
+    let b = c.take(n)?;
+    String::from_utf8(b.to_vec()).map_err(|_| ProtoError::Malformed("non-utf8 string"))
+}
+
+/// Child's introduction, sent once after connect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    pub model: String,
+    pub d_in: u32,
+    pub num_classes: u32,
+    pub plane_bytes: u64,
+    pub pid: u32,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_str_u16(&mut out, &self.model);
+        out.extend_from_slice(&self.d_in.to_le_bytes());
+        out.extend_from_slice(&self.num_classes.to_le_bytes());
+        out.extend_from_slice(&self.plane_bytes.to_le_bytes());
+        out.extend_from_slice(&self.pid.to_le_bytes());
+        out
+    }
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut c = Cursor::new(buf);
+        let model = get_str_u16(&mut c)?;
+        let d_in = c.u32()?;
+        let num_classes = c.u32()?;
+        let plane_bytes = c.u64()?;
+        let pid = c.u32()?;
+        c.finish()?;
+        Ok(Hello { model, d_in, num_classes, plane_bytes, pid })
+    }
+}
+
+/// One prediction request. `deadline_ms` is the remaining budget when
+/// the frame was written (0 = no deadline); `idempotent` gates whether
+/// the supervisor may retry it on a sibling after bytes were written.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub id: u64,
+    pub deadline_ms: u32,
+    pub idempotent: bool,
+    pub input: Vec<f32>,
+}
+
+impl WireRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(17 + 4 * self.input.len());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&self.deadline_ms.to_le_bytes());
+        out.push(u8::from(self.idempotent));
+        out.extend_from_slice(&(self.input.len() as u32).to_le_bytes());
+        for v in &self.input {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut c = Cursor::new(buf);
+        let id = c.u64()?;
+        let deadline_ms = c.u32()?;
+        let flags = c.u8()?;
+        let n = c.u32()? as usize;
+        let input = c.f32s(n)?;
+        c.finish()?;
+        Ok(WireRequest { id, deadline_ms, idempotent: flags & 1 != 0, input })
+    }
+}
+
+/// Successful answer for a request id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireResponse {
+    pub id: u64,
+    pub pred: u32,
+    pub batch: u32,
+    pub latency_us: u64,
+    pub logits: Vec<f32>,
+}
+
+impl WireResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(28 + 4 * self.logits.len());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&self.pred.to_le_bytes());
+        out.extend_from_slice(&self.batch.to_le_bytes());
+        out.extend_from_slice(&self.latency_us.to_le_bytes());
+        out.extend_from_slice(&(self.logits.len() as u32).to_le_bytes());
+        for v in &self.logits {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut c = Cursor::new(buf);
+        let id = c.u64()?;
+        let pred = c.u32()?;
+        let batch = c.u32()?;
+        let latency_us = c.u64()?;
+        let n = c.u32()? as usize;
+        let logits = c.f32s(n)?;
+        c.finish()?;
+        Ok(WireResponse { id, pred, batch, latency_us, logits })
+    }
+}
+
+/// Terminal per-request error from inside the shard (queue full, pool
+/// dead, dropped). A stable machine code, not prose.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub id: u64,
+    pub code: String,
+}
+
+impl WireError {
+    pub fn encode(&self) -> Vec<u8> {
+        let b = self.code.as_bytes();
+        let n = b.len().min(u8::MAX as usize);
+        let mut out = Vec::with_capacity(9 + n);
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.push(n as u8);
+        out.extend_from_slice(&b[..n]);
+        out
+    }
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut c = Cursor::new(buf);
+        let id = c.u64()?;
+        let n = c.u8()? as usize;
+        let b = c.take(n)?;
+        let code = String::from_utf8(b.to_vec())
+            .map_err(|_| ProtoError::Malformed("non-utf8 error code"))?;
+        c.finish()?;
+        Ok(WireError { id, code })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> WireRequest {
+        WireRequest {
+            id: 42,
+            deadline_ms: 1500,
+            idempotent: true,
+            input: vec![0.5, -1.25, 3.0],
+        }
+    }
+
+    #[test]
+    fn frame_round_trips_every_type() {
+        let hello = Hello {
+            model: "efflite".into(),
+            d_in: 12,
+            num_classes: 3,
+            plane_bytes: 4096,
+            pid: 777,
+        };
+        let req = sample_request();
+        let resp = WireResponse {
+            id: 42,
+            pred: 2,
+            batch: 4,
+            latency_us: 1234,
+            logits: vec![0.1, 0.2, 0.9],
+        };
+        let err = WireError { id: 42, code: "queue_full".into() };
+        let cases: Vec<(FrameType, Vec<u8>)> = vec![
+            (FrameType::Hello, hello.encode()),
+            (FrameType::Request, req.encode()),
+            (FrameType::Response, resp.encode()),
+            (FrameType::Error, err.encode()),
+            (FrameType::Heartbeat, Vec::new()),
+            (FrameType::Shutdown, Vec::new()),
+        ];
+        for (ty, payload) in cases {
+            let wire = encode_frame(ty, &payload);
+            let (got_ty, got_payload, used) =
+                decode_frame(&wire).expect("decode ok").expect("complete frame");
+            assert_eq!(got_ty, ty);
+            assert_eq!(got_payload, &payload[..]);
+            assert_eq!(used, wire.len());
+        }
+        assert_eq!(Hello::decode(&hello.encode()).unwrap(), hello);
+        assert_eq!(WireRequest::decode(&req.encode()).unwrap(), req);
+        assert_eq!(WireResponse::decode(&resp.encode()).unwrap(), resp);
+        assert_eq!(WireError::decode(&err.encode()).unwrap(), err);
+    }
+
+    #[test]
+    fn every_truncated_prefix_is_need_more_not_panic() {
+        let wire = encode_frame(FrameType::Request, &sample_request().encode());
+        for cut in 0..wire.len() {
+            let r = decode_frame(&wire[..cut]).expect("prefix of valid frame");
+            assert!(r.is_none(), "prefix of {cut} bytes decoded a frame");
+        }
+    }
+
+    #[test]
+    fn garbage_and_bad_headers_are_typed_errors() {
+        assert_eq!(decode_frame(b"XX"), Err(ProtoError::BadMagic));
+        assert_eq!(decode_frame(&[0x51, 0x00]), Err(ProtoError::BadMagic));
+        assert_eq!(decode_frame(&[0x51, 0x53, 99]), Err(ProtoError::BadVersion(99)));
+        assert_eq!(decode_frame(&[0x51, 0x53, VERSION, 200]), Err(ProtoError::BadType(200)));
+        // oversized declared length is rejected before any allocation
+        let mut wire = encode_frame(FrameType::Heartbeat, &[]);
+        wire[4..8].copy_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert_eq!(decode_frame(&wire), Err(ProtoError::Oversized(MAX_FRAME + 1)));
+    }
+
+    #[test]
+    fn payload_codecs_reject_truncation_and_trailing_bytes() {
+        let enc = sample_request().encode();
+        for cut in 0..enc.len() {
+            assert!(WireRequest::decode(&enc[..cut]).is_err(), "cut {cut}");
+        }
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert_eq!(
+            WireRequest::decode(&padded),
+            Err(ProtoError::Malformed("trailing bytes"))
+        );
+        // a declared vector length far past the buffer must not allocate
+        let huge = WireRequest { id: 1, deadline_ms: 0, idempotent: false, input: vec![] };
+        let mut enc = huge.encode();
+        let n = enc.len();
+        enc[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(WireRequest::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn half_written_frame_from_killed_peer_is_unexpected_eof() {
+        // a shard killed mid-write leaves a prefix of a frame on the
+        // socket; the blocking reader must surface UnexpectedEof, not
+        // hang or misparse
+        let wire = encode_frame(FrameType::Response, &[0u8; 64]);
+        let mut half = std::io::Cursor::new(wire[..wire.len() / 2].to_vec());
+        let mut buf = Vec::new();
+        let err = read_frame(&mut half, &mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn read_frame_reassembles_split_frames() {
+        let a = encode_frame(FrameType::Heartbeat, &[]);
+        let b = encode_frame(FrameType::Error, &WireError { id: 9, code: "x".into() }.encode());
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&a);
+        stream.extend_from_slice(&b);
+        let mut r = std::io::Cursor::new(stream);
+        let mut buf = Vec::new();
+        let (t1, p1) = read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!((t1, p1.len()), (FrameType::Heartbeat, 0));
+        let (t2, p2) = read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!(t2, FrameType::Error);
+        assert_eq!(WireError::decode(&p2).unwrap().code, "x");
+    }
+}

@@ -1,0 +1,1272 @@
+//! Supervisor side of the shard boundary: owns child lifecycle (spawn,
+//! liveness, crash detection), automatic restart with capped
+//! exponential backoff and a restart-storm circuit breaker, and bounded
+//! retry/failover of orphaned requests to sibling shards.
+//!
+//! Topology: per shard slot, one lifecycle thread binds an ephemeral
+//! local listener, spawns the child (which connects back), performs the
+//! [`Hello`] handshake, and then multiplexes requests over the single
+//! connection keyed by request id. Liveness is belt-and-braces:
+//! protocol heartbeats (a stalled worker stops beating), child
+//! `try_wait` (a `kill -9`'d worker is reaped), and reader EOF (a
+//! half-written frame surfaces as a transport error, never a hang).
+//!
+//! Failover policy: a request orphaned by a dying shard is retried at
+//! most **once**, and never after its bytes were written to a shard
+//! unless the request is idempotent. Per-request [`WireError`] frames
+//! are terminal answers from a *healthy* shard and are never retried.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::proto::{encode_frame, read_frame, FrameType, Hello, WireError, WireRequest, WireResponse};
+use crate::deploy::serve::{Response, ServeCfg, ServeStats};
+use crate::obs::Histogram;
+
+/// How shard children are launched. [`Launcher::Thread`] is a test and
+/// bench seam: the "child" is an in-process thread handed the
+/// supervisor end of a real socket, so crash/stall/protocol behavior is
+/// unit-testable without spawning binaries.
+#[derive(Clone)]
+pub enum Launcher {
+    /// Re-invoke the binary with the hidden `shard-worker` subcommand
+    /// (`None` = [`std::env::current_exe`] at spawn time).
+    Process { exe: Option<PathBuf> },
+    /// Run the closure on an in-process thread with the connected
+    /// socket. Cannot be force-killed; the supervisor's connection
+    /// shutdown is what makes a fake exit.
+    Thread(Arc<dyn Fn(usize, TcpStream) + Send + Sync>),
+}
+
+impl std::fmt::Debug for Launcher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Launcher::Process { exe } => write!(f, "Process({exe:?})"),
+            Launcher::Thread(_) => write!(f, "Thread"),
+        }
+    }
+}
+
+/// Shard supervision knobs. `shards == 0` (the default) means no
+/// sharding at all — the registry keeps the in-process pool.
+#[derive(Debug, Clone)]
+pub struct ShardCfg {
+    /// shard processes per model (0 = in-process pool, unchanged)
+    pub shards: usize,
+    /// pool shape handed to each child (workers/max-batch/queue-cap)
+    pub serve: ServeCfg,
+    /// engine threads per child
+    pub threads: usize,
+    pub launcher: Launcher,
+    /// raw `QAT_FAULT_INJECT` value (`model[#ix]=spec;...`), if set
+    pub fault_env: Option<String>,
+    /// heartbeat cadence requested of children
+    pub heartbeat_every: Duration,
+    /// silence longer than this kills and restarts the shard
+    pub heartbeat_timeout: Duration,
+    /// spawned child must connect back within this
+    pub connect_timeout: Duration,
+    /// connected child must finish loading + send Hello within this
+    pub hello_timeout: Duration,
+    /// restart backoff: `base * 2^consecutive_failures`, capped
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// a session this long resets the consecutive-failure counter
+    pub stable_after: Duration,
+    /// circuit breaker: >= `storm_limit` restarts within `storm_window`
+    /// parks the slot for `storm_cooldown` (requests degrade to a fast
+    /// `shard_restarting` error instead of wedging)
+    pub storm_window: Duration,
+    pub storm_limit: usize,
+    pub storm_cooldown: Duration,
+    /// grace a child gets to exit after a Shutdown frame
+    pub shutdown_grace: Duration,
+}
+
+impl Default for ShardCfg {
+    fn default() -> Self {
+        ShardCfg {
+            shards: 0,
+            serve: ServeCfg::default(),
+            threads: 1,
+            launcher: Launcher::Process { exe: None },
+            fault_env: None,
+            heartbeat_every: Duration::from_millis(250),
+            heartbeat_timeout: Duration::from_secs(3),
+            connect_timeout: Duration::from_secs(10),
+            hello_timeout: Duration::from_secs(30),
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(2),
+            stable_after: Duration::from_secs(5),
+            storm_window: Duration::from_secs(10),
+            storm_limit: 5,
+            storm_cooldown: Duration::from_secs(5),
+            shutdown_grace: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Match a `QAT_FAULT_INJECT` rule list (`model[#ix]=spec;...`, `*`
+/// matches any model) against one shard; returns the spec to pass as
+/// `--fault-inject`. Malformed rules are skipped, never fatal.
+pub fn fault_for(env: Option<&str>, model: &str, ix: usize) -> Option<String> {
+    for rule in env?.split(';') {
+        let rule = rule.trim();
+        if rule.is_empty() {
+            continue;
+        }
+        let Some((target, spec)) = rule.split_once('=') else { continue };
+        let (m, sel) = match target.split_once('#') {
+            Some((m, i)) => {
+                let Ok(i) = i.trim().parse::<usize>() else { continue };
+                (m.trim(), Some(i))
+            }
+            None => (target.trim(), None),
+        };
+        let ix_match = match sel {
+            Some(s) => s == ix,
+            None => true,
+        };
+        if (m == "*" || m == model) && ix_match {
+            return Some(spec.trim().to_string());
+        }
+    }
+    None
+}
+
+/// One request in flight toward a shard.
+struct ShardJob {
+    x: Vec<f32>,
+    deadline: Option<Instant>,
+    idempotent: bool,
+    tx: mpsc::Sender<Response>,
+    /// failover budget already spent (max 1 retry)
+    attempts: u32,
+    t0: Instant,
+}
+
+/// One shard slot: the submit-facing surface of a lifecycle thread.
+struct Slot {
+    ix: usize,
+    up: AtomicBool,
+    /// live session's job queue; `None` while (re)starting
+    jobs: Mutex<Option<mpsc::SyncSender<ShardJob>>>,
+    /// hot-swap: finish in-flight work, then respawn on the new QPKG
+    restart_now: AtomicBool,
+    /// chaos/bench: SIGKILL the child (crash path, with backoff)
+    kill_now: AtomicBool,
+}
+
+struct Shared {
+    cfg: ShardCfg,
+    slots: Vec<Arc<Slot>>,
+    /// QPKG the *next* spawned child loads (swapped for hot-reload)
+    qpkg: Mutex<PathBuf>,
+    stop: AtomicBool,
+    restarts: AtomicU64,
+    failovers: AtomicU64,
+    dropped: AtomicU64,
+    hb_hist: Arc<Histogram>,
+    stats: Arc<ServeStats>,
+    model_id: String,
+    d_in: usize,
+}
+
+/// A supervised pool of shard processes serving one model.
+pub struct ShardPool {
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl ShardPool {
+    /// Spawn one lifecycle thread per shard. Does **not** block waiting
+    /// for children to come up — requests before the first Hello get a
+    /// fast "no shard available" error (the ingress's
+    /// `shard_restarting`).
+    pub fn start(
+        model_id: &str,
+        qpkg: PathBuf,
+        d_in: usize,
+        cfg: ShardCfg,
+        stats: ServeStats,
+        hb_hist: Arc<Histogram>,
+    ) -> Result<ShardPool> {
+        let n = cfg.shards.max(1);
+        let slots: Vec<Arc<Slot>> = (0..n)
+            .map(|ix| {
+                Arc::new(Slot {
+                    ix,
+                    up: AtomicBool::new(false),
+                    jobs: Mutex::new(None),
+                    restart_now: AtomicBool::new(false),
+                    kill_now: AtomicBool::new(false),
+                })
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            cfg,
+            slots,
+            qpkg: Mutex::new(qpkg),
+            stop: AtomicBool::new(false),
+            restarts: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            hb_hist,
+            stats: Arc::new(stats),
+            model_id: model_id.to_string(),
+            d_in,
+        });
+        let threads = shared
+            .slots
+            .iter()
+            .map(|slot| {
+                let sh = shared.clone();
+                let slot = slot.clone();
+                std::thread::Builder::new()
+                    .name(format!("shard-{model_id}-{}", slot.ix))
+                    .spawn(move || lifecycle(&sh, &slot))
+                    .context("spawn shard lifecycle thread")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardPool { shared, threads, next: AtomicUsize::new(0) })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.shared.slots.iter().filter(|s| s.up.load(Ordering::Acquire)).count()
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.shared.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.shared.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.shared.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.shared.stats
+    }
+
+    /// Poll until at least `n` shards are serving (tests, benches).
+    pub fn wait_up(&self, n: usize, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.up_count() < n {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
+
+    /// Hot-swap: children spawned from now on load `path`; every live
+    /// shard is asked to finish in-flight work and respawn.
+    pub fn swap_qpkg(&self, path: PathBuf) {
+        *self.shared.qpkg.lock().expect("qpkg lock") = path;
+        for s in &self.shared.slots {
+            s.restart_now.store(true, Ordering::Release);
+        }
+    }
+
+    /// Chaos/bench: SIGKILL shard `ix`'s child (no-op for thread fakes;
+    /// their connection is shut down instead). The crash-recovery path
+    /// — detection, failover, backoff, respawn — runs exactly as for a
+    /// real crash.
+    pub fn kill_shard(&self, ix: usize) {
+        if let Some(s) = self.shared.slots.get(ix) {
+            s.kill_now.store(true, Ordering::Release);
+        }
+    }
+
+    /// Non-blocking admission mirroring `Server::try_submit`:
+    /// `Ok(None)` = every live shard's queue is full (shed), `Err` =
+    /// no shard is up at all (restarting/storm-parked) or bad input.
+    pub fn try_submit(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        self.try_submit_with(x, deadline, true)
+    }
+
+    /// [`ShardPool::try_submit`] with an explicit idempotency marker:
+    /// non-idempotent requests are never replayed onto a sibling once
+    /// their bytes reached a shard.
+    pub fn try_submit_with(
+        &self,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+        idempotent: bool,
+    ) -> Result<Option<mpsc::Receiver<Response>>> {
+        anyhow::ensure!(
+            x.len() == self.shared.d_in,
+            "serve: request has {} features, model wants {}",
+            x.len(),
+            self.shared.d_in,
+        );
+        let (tx, rx) = mpsc::channel();
+        let mut job =
+            Some(ShardJob { x, deadline, idempotent, tx, attempts: 0, t0: Instant::now() });
+        let n = self.shared.slots.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut any_up = false;
+        for k in 0..n {
+            let slot = &self.shared.slots[(start + k) % n];
+            if !slot.up.load(Ordering::Acquire) {
+                continue;
+            }
+            let guard = slot.jobs.lock().expect("slot jobs lock");
+            let Some(jtx) = guard.as_ref() else { continue };
+            any_up = true;
+            match jtx.try_send(job.take().expect("job present")) {
+                Ok(()) => return Ok(Some(rx)),
+                Err(mpsc::TrySendError::Full(j)) | Err(mpsc::TrySendError::Disconnected(j)) => {
+                    job = Some(j);
+                }
+            }
+        }
+        if any_up {
+            Ok(None) // live shards exist but every queue is full: shed
+        } else {
+            anyhow::bail!("no shard available (restarting)")
+        }
+    }
+
+    /// Blocking submit for tests and benches: waits for a shard to come
+    /// up and for queue space, bounded at 30 s.
+    pub fn submit(&self, x: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(
+            x.len() == self.shared.d_in,
+            "serve: request has {} features, model wants {}",
+            x.len(),
+            self.shared.d_in,
+        );
+        let t0 = Instant::now();
+        loop {
+            if let Ok(Some(rx)) = self.try_submit(x.clone(), None) {
+                return Ok(rx);
+            }
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(30),
+                "shard submit timed out: no shard accepted the request in 30s"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Stop every lifecycle thread, shut children down gracefully, and
+    /// return `(batches, requests)` — batches are always 0 here (the
+    /// children batch internally; the supervisor counts requests).
+    pub fn shutdown(self) -> (u64, u64) {
+        self.shared.stop.store(true, Ordering::Release);
+        for t in self.threads {
+            let _ = t.join();
+        }
+        (0, self.shared.stats.requests.load(Ordering::Relaxed))
+    }
+}
+
+/// Child handle abstraction over real processes and thread fakes.
+enum ChildHandle {
+    Proc(std::process::Child),
+    Thread(Option<JoinHandle<()>>),
+}
+
+impl ChildHandle {
+    fn is_exited(&mut self) -> bool {
+        match self {
+            ChildHandle::Proc(c) => matches!(c.try_wait(), Ok(Some(_))),
+            ChildHandle::Thread(h) => match h {
+                Some(h) => h.is_finished(),
+                None => true,
+            },
+        }
+    }
+
+    /// SIGKILL for processes; a no-op for thread fakes (the connection
+    /// shutdown at teardown is what unblocks them).
+    fn kill(&mut self) {
+        if let ChildHandle::Proc(c) = self {
+            let _ = c.kill();
+        }
+    }
+
+    /// Reap the child so no zombies accumulate across restarts. A
+    /// stalled thread fake is deliberately leaked (joining it would
+    /// wedge the supervisor — exactly what this subsystem exists to
+    /// avoid).
+    fn reap(&mut self) {
+        match self {
+            ChildHandle::Proc(c) => {
+                let _ = c.wait();
+            }
+            ChildHandle::Thread(h) => {
+                if h.as_ref().is_some_and(|h| h.is_finished()) {
+                    if let Some(h) = h.take() {
+                        let _ = h.join();
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn sleep_unless_stop(sh: &Shared, d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d && !sh.stop.load(Ordering::Acquire) {
+        std::thread::sleep(Duration::from_millis(10).min(d));
+    }
+}
+
+/// One slot's forever-loop: spawn, serve, tear down, back off, repeat.
+fn lifecycle(sh: &Arc<Shared>, slot: &Arc<Slot>) {
+    let mut consecutive: u32 = 0;
+    let mut recent: VecDeque<Instant> = VecDeque::new();
+    let mut first = true;
+    while !sh.stop.load(Ordering::Acquire) {
+        if !first {
+            sh.restarts.fetch_add(1, Ordering::Relaxed);
+            let now = Instant::now();
+            recent.push_back(now);
+            while recent.front().is_some_and(|t| now.duration_since(*t) > sh.cfg.storm_window) {
+                recent.pop_front();
+            }
+            if recent.len() >= sh.cfg.storm_limit {
+                eprintln!(
+                    "[shard {}/{}] restart storm ({} in {:?}): parking for {:?}",
+                    sh.model_id,
+                    slot.ix,
+                    recent.len(),
+                    sh.cfg.storm_window,
+                    sh.cfg.storm_cooldown,
+                );
+                sleep_unless_stop(sh, sh.cfg.storm_cooldown);
+                recent.clear();
+            }
+            let backoff = sh
+                .cfg
+                .backoff_base
+                .saturating_mul(2u32.saturating_pow(consecutive.min(6)))
+                .min(sh.cfg.backoff_max);
+            sleep_unless_stop(sh, backoff);
+            if sh.stop.load(Ordering::Acquire) {
+                break;
+            }
+        }
+        first = false;
+        let started = Instant::now();
+        match run_one_session(sh, slot) {
+            Ok(()) => consecutive = 0,
+            Err(e) => {
+                eprintln!("[shard {}/{}] session ended: {e:#}", sh.model_id, slot.ix);
+                if started.elapsed() >= sh.cfg.stable_after {
+                    consecutive = 0;
+                } else {
+                    consecutive = consecutive.saturating_add(1);
+                }
+            }
+        }
+    }
+}
+
+fn spawn_child(sh: &Shared, ix: usize, qpkg: &Path, addr: std::net::SocketAddr) -> Result<ChildHandle> {
+    match &sh.cfg.launcher {
+        Launcher::Process { exe } => {
+            let exe = match exe {
+                Some(p) => p.clone(),
+                None => std::env::current_exe().context("resolve current_exe for shard-worker")?,
+            };
+            let mut cmd = std::process::Command::new(exe);
+            cmd.arg("shard-worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--qpkg")
+                .arg(qpkg)
+                .arg("--model-id")
+                .arg(&sh.model_id)
+                .arg("--shard-ix")
+                .arg(ix.to_string())
+                .arg("--workers")
+                .arg(sh.cfg.serve.workers.to_string())
+                .arg("--max-batch")
+                .arg(sh.cfg.serve.max_batch.to_string())
+                .arg("--queue-cap")
+                .arg(sh.cfg.serve.queue_cap.to_string())
+                .arg("--threads")
+                .arg(sh.cfg.threads.to_string())
+                .arg("--heartbeat-ms")
+                .arg(sh.cfg.heartbeat_every.as_millis().to_string())
+                .stdin(std::process::Stdio::null())
+                .stdout(std::process::Stdio::null());
+            if let Some(spec) = fault_for(sh.cfg.fault_env.as_deref(), &sh.model_id, ix) {
+                cmd.arg("--fault-inject").arg(spec);
+            }
+            Ok(ChildHandle::Proc(cmd.spawn().context("spawn shard-worker child")?))
+        }
+        Launcher::Thread(f) => {
+            let f = f.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("shard-fake-{ix}"))
+                .spawn(move || {
+                    if let Ok(c) = TcpStream::connect(addr) {
+                        f(ix, c);
+                    }
+                })
+                .context("spawn shard thread fake")?;
+            Ok(ChildHandle::Thread(Some(h)))
+        }
+    }
+}
+
+/// Run one child session start to finish. `Ok(())` = graceful end
+/// (shutdown or hot-swap restart); `Err` = crash/stall/protocol fault
+/// (the lifecycle loop backs off before respawning).
+fn run_one_session(sh: &Arc<Shared>, slot: &Arc<Slot>) -> Result<()> {
+    let qpkg = sh.qpkg.lock().expect("qpkg lock").clone();
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind shard listener")?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let mut child = spawn_child(sh, slot.ix, &qpkg, addr)?;
+
+    // --- wait for the child to connect back
+    let t0 = Instant::now();
+    let conn = loop {
+        if sh.stop.load(Ordering::Acquire) {
+            child.kill();
+            child.reap();
+            return Ok(());
+        }
+        if child.is_exited() {
+            child.reap();
+            anyhow::bail!("shard exited before connecting");
+        }
+        match listener.accept() {
+            Ok((c, _)) => break c,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if t0.elapsed() > sh.cfg.connect_timeout {
+                    child.kill();
+                    child.reap();
+                    anyhow::bail!("shard did not connect within {:?}", sh.cfg.connect_timeout);
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                child.kill();
+                child.reap();
+                return Err(e).context("accept shard connection");
+            }
+        }
+    };
+    drop(listener);
+    let _ = conn.set_nodelay(true);
+    conn.set_read_timeout(Some(Duration::from_millis(50)))?;
+
+    // --- Hello handshake (the child loads its QPKG before this)
+    let mut rbuf: Vec<u8> = Vec::new();
+    let hello = loop {
+        if sh.stop.load(Ordering::Acquire) {
+            child.kill();
+            child.reap();
+            return Ok(());
+        }
+        if t0.elapsed() > sh.cfg.hello_timeout {
+            child.kill();
+            child.reap();
+            anyhow::bail!("shard sent no Hello within {:?}", sh.cfg.hello_timeout);
+        }
+        match read_hello_step(&conn, &mut rbuf)? {
+            HelloStep::NeedMore => {
+                if child.is_exited() && rbuf.is_empty() {
+                    child.reap();
+                    anyhow::bail!("shard exited before Hello (bad artifact?)");
+                }
+            }
+            HelloStep::Got(h) => break h,
+            HelloStep::Eof => {
+                child.kill();
+                child.reap();
+                anyhow::bail!("shard closed the connection before Hello");
+            }
+        }
+    };
+    if hello.d_in as usize != sh.d_in {
+        child.kill();
+        child.reap();
+        anyhow::bail!(
+            "shard Hello d_in {} does not match registry d_in {}",
+            hello.d_in,
+            sh.d_in,
+        );
+    }
+
+    // --- live session
+    let queue_cap = sh.cfg.serve.queue_cap.max(1);
+    let (jtx, jrx) = mpsc::sync_channel::<ShardJob>(queue_cap);
+    let pending: Arc<Mutex<HashMap<u64, ShardJob>>> = Arc::new(Mutex::new(HashMap::new()));
+    let conn_dead = Arc::new(AtomicBool::new(false));
+    let last_hb = Arc::new(Mutex::new(Instant::now()));
+
+    let reader_conn = conn.try_clone().context("clone shard connection")?;
+    reader_conn.set_read_timeout(None)?;
+    let reader = {
+        let pending = pending.clone();
+        let conn_dead = conn_dead.clone();
+        let last_hb = last_hb.clone();
+        let hb_hist = sh.hb_hist.clone();
+        let stats = sh.stats.clone();
+        let leftover = std::mem::take(&mut rbuf);
+        std::thread::Builder::new()
+            .name(format!("shard-rd-{}-{}", sh.model_id, slot.ix))
+            .spawn(move || reader_loop(reader_conn, leftover, pending, conn_dead, last_hb, hb_hist, stats))
+            .context("spawn shard reader thread")?
+    };
+
+    *slot.jobs.lock().expect("slot jobs lock") = Some(jtx);
+    slot.up.store(true, Ordering::Release);
+    *last_hb.lock().expect("hb lock") = Instant::now();
+
+    let mut next_id: u64 = 0;
+    let mut last_sweep = Instant::now();
+    let mut graceful = false;
+    let mut result: Result<()> = Ok(());
+    use std::io::Write;
+    let mut wconn = &conn;
+    loop {
+        if sh.stop.load(Ordering::Acquire) {
+            let _ = wconn.write_all(&encode_frame(FrameType::Shutdown, &[]));
+            graceful = true;
+            break;
+        }
+        if slot.kill_now.swap(false, Ordering::AcqRel) {
+            child.kill();
+            result = Err(anyhow::anyhow!("killed by supervisor (kill_shard)"));
+            break;
+        }
+        if slot.restart_now.swap(false, Ordering::AcqRel) {
+            let _ = wconn.write_all(&encode_frame(FrameType::Shutdown, &[]));
+            graceful = true;
+            break;
+        }
+        if conn_dead.load(Ordering::Acquire) {
+            result = Err(anyhow::anyhow!("shard connection lost"));
+            break;
+        }
+        if child.is_exited() {
+            result = Err(anyhow::anyhow!("shard process exited"));
+            break;
+        }
+        let hb_age = last_hb.lock().expect("hb lock").elapsed();
+        if hb_age > sh.cfg.heartbeat_timeout {
+            child.kill();
+            result = Err(anyhow::anyhow!("heartbeat silence {hb_age:?} (stalled shard)"));
+            break;
+        }
+        if last_sweep.elapsed() > Duration::from_millis(200) {
+            let now = Instant::now();
+            let mut p = pending.lock().expect("pending lock");
+            let before = p.len();
+            p.retain(|_, j| !j.deadline.is_some_and(|d| now > d));
+            let swept = before - p.len();
+            drop(p);
+            if swept > 0 {
+                sh.stats.expired.fetch_add(swept as u64, Ordering::Relaxed);
+            }
+            last_sweep = now;
+        }
+        match jrx.recv_timeout(Duration::from_millis(20)) {
+            Ok(job) => {
+                let now = Instant::now();
+                if job.deadline.is_some_and(|d| now > d) {
+                    sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                    continue; // dropping the job closes the client channel
+                }
+                let id = next_id;
+                next_id += 1;
+                let deadline_ms = job
+                    .deadline
+                    .map(|d| {
+                        (d.saturating_duration_since(now).as_millis() as u64)
+                            .clamp(1, u64::from(u32::MAX)) as u32
+                    })
+                    .unwrap_or(0);
+                let wire = WireRequest {
+                    id,
+                    deadline_ms,
+                    idempotent: job.idempotent,
+                    input: job.x.clone(),
+                };
+                pending.lock().expect("pending lock").insert(id, job);
+                if let Err(e) = wconn.write_all(&encode_frame(FrameType::Request, &wire.encode())) {
+                    result = Err(anyhow::anyhow!("write to shard failed: {e}"));
+                    break;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                result = Err(anyhow::anyhow!("job queue disconnected"));
+                break;
+            }
+        }
+    }
+
+    // --- teardown: stop admissions, close the socket, reap the child,
+    // then fail orphans over to siblings
+    slot.up.store(false, Ordering::Release);
+    *slot.jobs.lock().expect("slot jobs lock") = None;
+    let _ = conn.shutdown(std::net::Shutdown::Both);
+    if graceful {
+        let t = Instant::now();
+        while !child.is_exited() && t.elapsed() < sh.cfg.shutdown_grace {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    child.kill();
+    child.reap();
+    drop(conn);
+    let _ = reader.join();
+
+    let mut orphans: Vec<(ShardJob, bool)> = pending
+        .lock()
+        .expect("pending lock")
+        .drain()
+        .map(|(_, j)| (j, true)) // bytes reached the shard
+        .collect();
+    while let Ok(j) = jrx.try_recv() {
+        orphans.push((j, false)); // queued, never written
+    }
+    if sh.stop.load(Ordering::Acquire) {
+        // shutting down: dropping the jobs closes their channels
+        drop(orphans);
+    } else {
+        failover(sh, slot.ix, orphans);
+    }
+    result
+}
+
+enum HelloStep {
+    NeedMore,
+    Got(Hello),
+    Eof,
+}
+
+/// One bounded read toward the Hello frame (50 ms read timeout set by
+/// the caller). Protocol garbage instead of a Hello is an error.
+fn read_hello_step(mut conn: &TcpStream, rbuf: &mut Vec<u8>) -> Result<HelloStep> {
+    use std::io::Read;
+    if let Some((ty, payload, used)) = super::proto::decode_frame(rbuf)
+        .map_err(|e| anyhow::anyhow!("shard handshake: {e}"))?
+    {
+        anyhow::ensure!(ty == FrameType::Hello, "expected Hello, got {ty:?}");
+        let hello = Hello::decode(payload).map_err(|e| anyhow::anyhow!("bad Hello: {e}"))?;
+        rbuf.drain(..used);
+        return Ok(HelloStep::Got(hello));
+    }
+    let mut chunk = [0u8; 1024];
+    match conn.read(&mut chunk) {
+        Ok(0) => Ok(HelloStep::Eof),
+        Ok(n) => {
+            rbuf.extend_from_slice(&chunk[..n]);
+            Ok(HelloStep::NeedMore)
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            Ok(HelloStep::NeedMore)
+        }
+        Err(e) => Err(e).context("read shard Hello"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reader_loop(
+    mut conn: TcpStream,
+    mut rbuf: Vec<u8>,
+    pending: Arc<Mutex<HashMap<u64, ShardJob>>>,
+    conn_dead: Arc<AtomicBool>,
+    last_hb: Arc<Mutex<Instant>>,
+    hb_hist: Arc<Histogram>,
+    stats: Arc<ServeStats>,
+) {
+    loop {
+        match read_frame(&mut conn, &mut rbuf) {
+            Ok((FrameType::Heartbeat, _)) => {
+                let mut hb = last_hb.lock().expect("hb lock");
+                hb_hist.record(hb.elapsed().as_secs_f64());
+                *hb = Instant::now();
+            }
+            Ok((FrameType::Response, payload)) => {
+                let Ok(r) = WireResponse::decode(&payload) else {
+                    conn_dead.store(true, Ordering::Release);
+                    return;
+                };
+                if let Some(job) = pending.lock().expect("pending lock").remove(&r.id) {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.tx.send(Response {
+                        id: r.id,
+                        pred: r.pred as usize,
+                        logits: r.logits,
+                        latency: job.t0.elapsed(),
+                        batch_size: r.batch.max(1) as usize,
+                    });
+                }
+            }
+            Ok((FrameType::Error, payload)) => {
+                // a per-request error from a *live* shard is a terminal
+                // answer: close the client channel, never fail over
+                let Ok(e) = WireError::decode(&payload) else {
+                    conn_dead.store(true, Ordering::Release);
+                    return;
+                };
+                if pending.lock().expect("pending lock").remove(&e.id).is_some() {
+                    stats.failed.fetch_add(1, Ordering::Relaxed);
+                    *stats.last_error.lock().expect("stats lock") =
+                        Some(format!("shard error: {}", e.code));
+                }
+            }
+            Ok((FrameType::Hello, _)) => {} // duplicate Hello: ignore
+            Ok((ty, _)) => {
+                eprintln!("[shard] unexpected frame {ty:?} from child");
+                conn_dead.store(true, Ordering::Release);
+                return;
+            }
+            Err(_) => {
+                // EOF / half-written frame / protocol garbage: the
+                // session is over (writer observes conn_dead)
+                conn_dead.store(true, Ordering::Release);
+                return;
+            }
+        }
+    }
+}
+
+/// Re-home requests orphaned by a dying shard. Policy: one retry max;
+/// never replay a non-idempotent request whose bytes were written.
+fn failover(sh: &Arc<Shared>, from_ix: usize, orphans: Vec<(ShardJob, bool)>) {
+    for (mut job, written) in orphans {
+        if job.attempts >= 1 || (written && !job.idempotent) {
+            sh.dropped.fetch_add(1, Ordering::Relaxed);
+            continue; // dropping the job closes the client channel
+        }
+        job.attempts += 1;
+        let n = sh.slots.len();
+        let mut job = Some(job);
+        for k in 0..n {
+            let slot = &sh.slots[(from_ix + 1 + k) % n];
+            if slot.ix == from_ix || !slot.up.load(Ordering::Acquire) {
+                continue;
+            }
+            let guard = slot.jobs.lock().expect("slot jobs lock");
+            let Some(jtx) = guard.as_ref() else { continue };
+            match jtx.try_send(job.take().expect("job present")) {
+                Ok(()) => {
+                    sh.failovers.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                Err(mpsc::TrySendError::Full(j)) | Err(mpsc::TrySendError::Disconnected(j)) => {
+                    job = Some(j);
+                }
+            }
+        }
+        if job.is_some() {
+            sh.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Test-only shard fake shared with registry/ingress tests: a healthy
+/// in-process "child" on the supervisor's socket.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::super::proto::{
+        decode_frame, encode_frame, FrameType, Hello, WireRequest, WireResponse,
+    };
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    /// Serve argmax predictions (logits echo the input) with 25 ms
+    /// heartbeats until Shutdown or disconnect, introducing itself with
+    /// the given input width.
+    pub(crate) fn healthy_fake(d_in: usize, mut conn: TcpStream) {
+        let _ = conn.set_nodelay(true);
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(10)));
+        let hello = Hello {
+            model: "fake".into(),
+            d_in: d_in as u32,
+            num_classes: 3,
+            plane_bytes: 0,
+            pid: 0,
+        };
+        if conn.write_all(&encode_frame(FrameType::Hello, &hello.encode())).is_err() {
+            return;
+        }
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 1024];
+        let mut last_hb = Instant::now();
+        loop {
+            match conn.read(&mut chunk) {
+                Ok(0) => return,
+                Ok(n) => rbuf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(_) => return,
+            }
+            loop {
+                let Ok(frame) = decode_frame(&rbuf) else { return };
+                let Some((ty, payload, used)) = frame else { break };
+                let payload = payload.to_vec();
+                rbuf.drain(..used);
+                match ty {
+                    FrameType::Shutdown => return,
+                    FrameType::Request => {
+                        let Ok(req) = WireRequest::decode(&payload) else { return };
+                        let pred = req
+                            .input
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        let resp = WireResponse {
+                            id: req.id,
+                            pred: pred as u32,
+                            batch: 1,
+                            latency_us: 1,
+                            logits: req.input,
+                        };
+                        if conn
+                            .write_all(&encode_frame(FrameType::Response, &resp.encode()))
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    _ => return,
+                }
+            }
+            if last_hb.elapsed() >= Duration::from_millis(25) {
+                if conn.write_all(&encode_frame(FrameType::Heartbeat, &[])).is_err() {
+                    return;
+                }
+                last_hb = Instant::now();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Behavior of a thread-fake shard for one session.
+    #[derive(Clone, Copy, PartialEq)]
+    enum Fake {
+        /// serve requests (pred = argmax) with heartbeats, forever
+        Healthy,
+        /// send Hello, then close as soon as the first request arrives
+        CrashOnRequest,
+        /// send Hello + one heartbeat, then hold the socket silently
+        Stall,
+    }
+
+    const FAKE_D_IN: usize = 4;
+
+    fn fake_session(behavior: Fake, conn: TcpStream) {
+        use std::io::{Read, Write};
+        let _ = conn.set_nodelay(true);
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(10)));
+        let mut conn = conn;
+        let hello = Hello {
+            model: "fake".into(),
+            d_in: FAKE_D_IN as u32,
+            num_classes: FAKE_D_IN as u32,
+            plane_bytes: 0,
+            pid: 0,
+        };
+        if conn.write_all(&encode_frame(FrameType::Hello, &hello.encode())).is_err() {
+            return;
+        }
+        if behavior == Fake::Stall {
+            let _ = conn.write_all(&encode_frame(FrameType::Heartbeat, &[]));
+            std::thread::sleep(Duration::from_secs(30));
+            return;
+        }
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 1024];
+        let mut last_hb = Instant::now();
+        loop {
+            match conn.read(&mut chunk) {
+                Ok(0) => return,
+                Ok(n) => rbuf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(_) => return,
+            }
+            loop {
+                let Ok(frame) = super::super::proto::decode_frame(&rbuf) else { return };
+                let Some((ty, payload, used)) = frame else { break };
+                let payload = payload.to_vec();
+                rbuf.drain(..used);
+                match ty {
+                    FrameType::Shutdown => return,
+                    FrameType::Request => {
+                        if behavior == Fake::CrashOnRequest {
+                            return; // simulated crash: socket closes
+                        }
+                        let Ok(req) = WireRequest::decode(&payload) else { return };
+                        let pred = req
+                            .input
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        let resp = WireResponse {
+                            id: req.id,
+                            pred: pred as u32,
+                            batch: 1,
+                            latency_us: 1,
+                            logits: req.input,
+                        };
+                        if conn
+                            .write_all(&encode_frame(FrameType::Response, &resp.encode()))
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    _ => return,
+                }
+            }
+            if last_hb.elapsed() >= Duration::from_millis(25) {
+                if conn.write_all(&encode_frame(FrameType::Heartbeat, &[])).is_err() {
+                    return;
+                }
+                last_hb = Instant::now();
+            }
+        }
+    }
+
+    fn fast_cfg(shards: usize, launcher: Launcher) -> ShardCfg {
+        ShardCfg {
+            shards,
+            launcher,
+            heartbeat_every: Duration::from_millis(25),
+            heartbeat_timeout: Duration::from_millis(300),
+            connect_timeout: Duration::from_secs(5),
+            hello_timeout: Duration::from_secs(5),
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(40),
+            stable_after: Duration::from_millis(400),
+            storm_window: Duration::from_millis(500),
+            storm_limit: 4,
+            storm_cooldown: Duration::from_millis(300),
+            shutdown_grace: Duration::from_millis(100),
+            ..ShardCfg::default()
+        }
+    }
+
+    fn start_pool(cfg: ShardCfg) -> ShardPool {
+        ShardPool::start(
+            "fake",
+            PathBuf::from("unused.qpkg"),
+            FAKE_D_IN,
+            cfg,
+            ServeStats::default(),
+            Arc::new(Histogram::default()),
+        )
+        .expect("pool start")
+    }
+
+    fn one_hot(i: usize) -> Vec<f32> {
+        let mut x = vec![0.0; FAKE_D_IN];
+        x[i % FAKE_D_IN] = 1.0;
+        x
+    }
+
+    #[test]
+    fn thread_shards_round_trip_requests() {
+        let launcher = Launcher::Thread(Arc::new(|_, c| fake_session(Fake::Healthy, c)));
+        let pool = start_pool(fast_cfg(2, launcher));
+        assert!(pool.wait_up(2, Duration::from_secs(5)), "shards never came up");
+        for i in 0..8 {
+            let rx = pool.submit(one_hot(i)).expect("submit");
+            let resp = rx.recv_timeout(Duration::from_secs(5)).expect("response");
+            assert_eq!(resp.pred, i % FAKE_D_IN, "request {i}");
+            assert_eq!(resp.logits.len(), FAKE_D_IN);
+        }
+        assert_eq!(pool.stats().requests.load(Ordering::Relaxed), 8);
+        assert_eq!(pool.failovers(), 0);
+        let (_, requests) = pool.shutdown();
+        assert_eq!(requests, 8);
+    }
+
+    #[test]
+    fn crash_fails_over_to_sibling_and_restarts() {
+        // shard crashes only on its first session; respawns are healthy
+        let crashed = Arc::new(AtomicBool::new(false));
+        let flag = crashed.clone();
+        let launcher = Launcher::Thread(Arc::new(move |ix, c| {
+            let b = if ix == 0 && !flag.swap(true, Ordering::AcqRel) {
+                Fake::CrashOnRequest
+            } else {
+                Fake::Healthy
+            };
+            fake_session(b, c);
+        }));
+        let pool = start_pool(fast_cfg(2, launcher));
+        assert!(pool.wait_up(2, Duration::from_secs(5)));
+        // two submits: round-robin puts one on each shard; the one the
+        // crasher ate is replayed onto the sibling (idempotent, 1 retry)
+        let rx_a = pool.submit(one_hot(1)).expect("submit a");
+        let rx_b = pool.submit(one_hot(2)).expect("submit b");
+        let a = rx_a.recv_timeout(Duration::from_secs(10)).expect("a answered");
+        let b = rx_b.recv_timeout(Duration::from_secs(10)).expect("b answered");
+        assert_eq!((a.pred, b.pred), (1, 2));
+        assert_eq!(pool.failovers(), 1, "exactly one orphan replayed");
+        // the crashed slot must come back on its own
+        assert!(pool.wait_up(2, Duration::from_secs(10)), "crashed shard not restarted");
+        assert!(pool.restarts() >= 1);
+        assert_eq!(pool.dropped(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn written_non_idempotent_orphans_are_dropped_not_replayed() {
+        let crashed = Arc::new(AtomicBool::new(false));
+        let flag = crashed.clone();
+        let launcher = Launcher::Thread(Arc::new(move |ix, c| {
+            let b = if ix == 0 && !flag.swap(true, Ordering::AcqRel) {
+                Fake::CrashOnRequest
+            } else {
+                Fake::Healthy
+            };
+            fake_session(b, c);
+        }));
+        let pool = start_pool(fast_cfg(2, launcher));
+        assert!(pool.wait_up(2, Duration::from_secs(5)));
+        let rx_a = pool
+            .try_submit_with(one_hot(1), None, false)
+            .expect("admit a")
+            .expect("queue space a");
+        let rx_b = pool
+            .try_submit_with(one_hot(2), None, false)
+            .expect("admit b")
+            .expect("queue space b");
+        // one request hit the crasher after its bytes were written: it
+        // must surface as a closed channel, not a silent replay
+        let got_a = rx_a.recv_timeout(Duration::from_secs(10));
+        let got_b = rx_b.recv_timeout(Duration::from_secs(10));
+        assert_eq!(
+            got_a.is_ok() as usize + got_b.is_ok() as usize,
+            1,
+            "exactly one of the two non-idempotent requests must be dropped"
+        );
+        assert_eq!(pool.failovers(), 0, "non-idempotent must never fail over");
+        assert_eq!(pool.dropped(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn all_shards_down_is_a_fast_error_and_storm_parks() {
+        // every session dies immediately after Hello-less connect
+        let launcher = Launcher::Thread(Arc::new(|_, _c| {}));
+        let pool = start_pool(fast_cfg(1, launcher));
+        // let it churn through enough failures to trip the breaker
+        let t0 = Instant::now();
+        while pool.restarts() < 4 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(pool.restarts() >= 4, "restart churn never happened");
+        let t = Instant::now();
+        let err = pool.try_submit(one_hot(0), None).expect_err("no shard is up");
+        assert!(t.elapsed() < Duration::from_millis(100), "error must be fast, not a hang");
+        assert!(err.to_string().contains("no shard available"), "{err}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn stalled_shard_is_killed_by_heartbeat_timeout_and_replaced() {
+        let stalled = Arc::new(AtomicBool::new(false));
+        let flag = stalled.clone();
+        let launcher = Launcher::Thread(Arc::new(move |_, c| {
+            let b = if !flag.swap(true, Ordering::AcqRel) { Fake::Stall } else { Fake::Healthy };
+            fake_session(b, c);
+        }));
+        let pool = start_pool(fast_cfg(1, launcher));
+        // first session comes up, then stalls; the heartbeat watchdog
+        // must kill it and the replacement must serve
+        assert!(pool.wait_up(1, Duration::from_secs(5)));
+        let t0 = Instant::now();
+        while pool.restarts() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(pool.restarts() >= 1, "stall never detected");
+        assert!(pool.wait_up(1, Duration::from_secs(10)), "replacement never came up");
+        let rx = pool.submit(one_hot(3)).expect("submit after stall");
+        let resp = rx.recv_timeout(Duration::from_secs(5)).expect("served after stall");
+        assert_eq!(resp.pred, 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn swap_qpkg_restarts_shards_gracefully() {
+        let launcher = Launcher::Thread(Arc::new(|_, c| fake_session(Fake::Healthy, c)));
+        let pool = start_pool(fast_cfg(2, launcher));
+        assert!(pool.wait_up(2, Duration::from_secs(5)));
+        pool.swap_qpkg(PathBuf::from("v2.qpkg"));
+        let t0 = Instant::now();
+        while pool.restarts() < 2 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(pool.restarts(), 2, "both shards respawn once on swap");
+        assert!(pool.wait_up(2, Duration::from_secs(10)));
+        assert_eq!(pool.shared.qpkg.lock().unwrap().clone(), PathBuf::from("v2.qpkg"));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn fault_rules_match_models_and_indices() {
+        assert_eq!(fault_for(None, "m", 0), None);
+        assert_eq!(fault_for(Some("m=panic:0.5"), "m", 0), Some("panic:0.5".into()));
+        assert_eq!(fault_for(Some("m=panic:0.5"), "other", 0), None);
+        assert_eq!(fault_for(Some("*=stall:100"), "anything", 3), Some("stall:100".into()));
+        assert_eq!(fault_for(Some("m#1=stall:100"), "m", 0), None);
+        assert_eq!(fault_for(Some("m#1=stall:100"), "m", 1), Some("stall:100".into()));
+        assert_eq!(
+            fault_for(Some("a=panic:1; b#0=stall:5"), "b", 0),
+            Some("stall:5".into())
+        );
+        // malformed rules are skipped, not fatal
+        assert_eq!(fault_for(Some("garbage;;m#x=stall:5"), "m", 0), None);
+    }
+
+    #[test]
+    fn bad_input_width_is_rejected_at_admission() {
+        let launcher = Launcher::Thread(Arc::new(|_, c| fake_session(Fake::Healthy, c)));
+        let pool = start_pool(fast_cfg(1, launcher));
+        assert!(pool.wait_up(1, Duration::from_secs(5)));
+        let err = pool.try_submit(vec![1.0; FAKE_D_IN + 1], None).expect_err("width");
+        assert!(err.to_string().contains("features"), "{err}");
+        pool.shutdown();
+    }
+}

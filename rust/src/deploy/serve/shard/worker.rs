@@ -1,0 +1,282 @@
+//! Child-process side of the shard boundary: the hidden `shard-worker`
+//! subcommand.
+//!
+//! A shard worker is spawned by the supervisor with `--connect
+//! 127.0.0.1:PORT`, connects back, loads its QPKG **inside the child**
+//! (so a corrupt artifact or a panicking engine can only kill this
+//! process), introduces itself with a [`Hello`] frame, and then serves
+//! [`WireRequest`] frames from its own in-process batching pool,
+//! interleaving [`Heartbeat`](FrameType::Heartbeat) beacons. Faults can
+//! be injected (`--fault-inject panic:p,stall:ms`) for chaos tests:
+//! the stall runs on the serve loop itself, so a stalled worker also
+//! stops heartbeating — exactly how a real allocator stall or OOM
+//! thrash presents to the supervisor.
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::proto::{
+    decode_frame, encode_frame, FrameType, Hello, WireError, WireRequest, WireResponse,
+};
+use crate::cli::Args;
+use crate::deploy::engine::{Engine, EngineOpts, PreparedModel};
+use crate::deploy::format::DeployModel;
+use crate::deploy::serve::{BatchForward, Response, ServeCfg, Server};
+
+/// Fault-injection plan parsed from `--fault-inject panic:p,stall:ms`.
+/// Both knobs are optional and compose: `panic:0.02,stall:500`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultPlan {
+    /// probability a given request panics the whole worker process
+    pub panic_p: f64,
+    /// per-request stall on the serve loop (blocks heartbeats too)
+    pub stall_ms: u64,
+}
+
+impl FaultPlan {
+    /// Parse a spec like `panic:0.5`, `stall:2000`, or
+    /// `panic:0.5,stall:2000`. Unknown or malformed parts are ignored
+    /// (chaos knobs must never make a healthy boot fail).
+    pub fn parse(spec: &str) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let Some((key, val)) = part.split_once(':') else { continue };
+            match key.trim() {
+                "panic" => plan.panic_p = val.trim().parse().unwrap_or(0.0),
+                "stall" => plan.stall_ms = val.trim().parse().unwrap_or(0),
+                _ => {}
+            }
+        }
+        plan
+    }
+
+    fn is_noop(&self) -> bool {
+        self.panic_p <= 0.0 && self.stall_ms == 0
+    }
+}
+
+/// Deterministic-per-process coin flips for `panic:p` (LCG seeded by
+/// pid, so restarted shards don't all panic on the same request index).
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Lcg {
+        Lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+    fn unit(&mut self) -> f64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (self.0 >> 33) as f64 / (1u64 << 31) as f64
+    }
+}
+
+struct WorkerCfg {
+    qpkg: PathBuf,
+    connect: String,
+    model_id: String,
+    serve: ServeCfg,
+    threads: usize,
+    heartbeat: Duration,
+    fault: FaultPlan,
+}
+
+fn cfg_from_args(args: &Args) -> Result<WorkerCfg> {
+    let qpkg = args.get("qpkg").context("shard-worker: --qpkg is required")?;
+    let connect = args.get("connect").context("shard-worker: --connect is required")?;
+    Ok(WorkerCfg {
+        qpkg: PathBuf::from(qpkg),
+        connect: connect.to_string(),
+        model_id: args.str_or("model-id", "model"),
+        serve: ServeCfg {
+            workers: args.usize_or("workers", 2),
+            max_batch: args.usize_or("max-batch", 16),
+            queue_cap: args.usize_or("queue-cap", 256),
+        },
+        threads: args.usize_or("threads", 1),
+        heartbeat: Duration::from_millis(args.u64_or("heartbeat-ms", 250)),
+        fault: args.get("fault-inject").map(FaultPlan::parse).unwrap_or_default(),
+    })
+}
+
+/// Entry point for the hidden `shard-worker` subcommand. Returns only
+/// on a graceful [`Shutdown`](FrameType::Shutdown) or supervisor
+/// disconnect; errors exit the process non-zero and the supervisor
+/// restarts the shard.
+pub fn run_from_args(args: &Args) -> Result<()> {
+    let cfg = cfg_from_args(args)?;
+    run_worker(&cfg)
+}
+
+fn run_worker(cfg: &WorkerCfg) -> Result<()> {
+    // connect FIRST: if the supervisor is already gone there is nothing
+    // to load a model for, and the supervisor learns of a bad artifact
+    // through the missing Hello rather than a connect timeout
+    let mut conn = TcpStream::connect(&cfg.connect)
+        .with_context(|| format!("shard-worker: connect {}", cfg.connect))?;
+    let _ = conn.set_nodelay(true);
+    conn.set_read_timeout(Some(Duration::from_millis(20)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(5)))?;
+
+    let bytes = std::fs::read(&cfg.qpkg)
+        .with_context(|| format!("shard-worker: read {}", cfg.qpkg.display()))?;
+    let dm = DeployModel::from_bytes(&bytes).context("shard-worker: parse qpkg")?;
+    let (d_in, num_classes) = (dm.d_in(), dm.num_classes);
+    let prepared = Arc::new(PreparedModel::new(dm));
+    let plane_bytes = prepared.plane_bytes() as u64;
+    let engine = Engine::from_prepared(
+        prepared,
+        true,
+        EngineOpts { threads: cfg.threads, prepared: true, layer_timing: false },
+    );
+    let pool = Server::start_with(Arc::new(engine) as Arc<dyn BatchForward>, &cfg.serve);
+
+    let hello = Hello {
+        model: cfg.model_id.clone(),
+        d_in: d_in as u32,
+        num_classes: num_classes as u32,
+        plane_bytes,
+        pid: std::process::id(),
+    };
+    write_frame(&mut conn, FrameType::Hello, &hello.encode())?;
+
+    let mut rng = Lcg::new(std::process::id() as u64);
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut pending: Vec<(u64, mpsc::Receiver<Response>)> = Vec::new();
+    let mut last_hb = Instant::now();
+
+    loop {
+        // --- read whatever the supervisor sent (bounded by the timeout)
+        use std::io::Read;
+        match conn.read(&mut chunk) {
+            Ok(0) => return Ok(()), // supervisor gone: exit cleanly
+            Ok(n) => rbuf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e).context("shard-worker: read"),
+        }
+
+        // --- drain complete frames
+        loop {
+            let frame = decode_frame(&rbuf)
+                .map_err(|e| anyhow::anyhow!("shard-worker: bad frame from supervisor: {e}"))?;
+            let Some((ty, payload, used)) = frame else { break };
+            let payload = payload.to_vec();
+            rbuf.drain(..used);
+            match ty {
+                FrameType::Shutdown => return Ok(()),
+                FrameType::Request => {
+                    let req = WireRequest::decode(&payload)
+                        .map_err(|e| anyhow::anyhow!("shard-worker: bad request: {e}"))?;
+                    // fault hooks run on the serve loop itself, so a
+                    // stall also blocks heartbeats — the supervisor sees
+                    // a stalled shard exactly like a wedged real one
+                    if !cfg.fault.is_noop() {
+                        if cfg.fault.stall_ms > 0 {
+                            std::thread::sleep(Duration::from_millis(cfg.fault.stall_ms));
+                        }
+                        if cfg.fault.panic_p > 0.0 && rng.unit() < cfg.fault.panic_p {
+                            panic!("shard-worker: injected panic (--fault-inject)");
+                        }
+                    }
+                    let deadline = (req.deadline_ms > 0)
+                        .then(|| Instant::now() + Duration::from_millis(u64::from(req.deadline_ms)));
+                    match pool.try_submit(req.input, deadline) {
+                        Ok(Some(rx)) => pending.push((req.id, rx)),
+                        Ok(None) => {
+                            let e = WireError { id: req.id, code: "queue_full".into() };
+                            write_frame(&mut conn, FrameType::Error, &e.encode())?;
+                        }
+                        Err(_) => {
+                            // the in-child pool died (worker panic):
+                            // answer this request, then exit non-zero so
+                            // the supervisor respawns a healthy process
+                            let e = WireError { id: req.id, code: "pool_dead".into() };
+                            let _ = write_frame(&mut conn, FrameType::Error, &e.encode());
+                            anyhow::bail!("shard-worker: in-process pool died");
+                        }
+                    }
+                }
+                // supervisor only ever sends Request/Shutdown
+                other => {
+                    anyhow::bail!("shard-worker: unexpected frame {other:?} from supervisor")
+                }
+            }
+        }
+
+        // --- flush finished predictions (out-of-order completion is fine:
+        // frames carry the request id)
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].1.try_recv() {
+                Ok(resp) => {
+                    let (id, _) = pending.swap_remove(i);
+                    let wire = WireResponse {
+                        id,
+                        pred: resp.pred as u32,
+                        batch: resp.batch_size as u32,
+                        latency_us: resp.latency.as_micros() as u64,
+                        logits: resp.logits,
+                    };
+                    write_frame(&mut conn, FrameType::Response, &wire.encode())?;
+                }
+                Err(mpsc::TryRecvError::Empty) => i += 1,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    // deadline-expired or failed batch: channel closed
+                    // without a response — a terminal answer, not a crash
+                    let (id, _) = pending.swap_remove(i);
+                    let e = WireError { id, code: "dropped".into() };
+                    write_frame(&mut conn, FrameType::Error, &e.encode())?;
+                }
+            }
+        }
+
+        // --- liveness beacon
+        if last_hb.elapsed() >= cfg.heartbeat {
+            write_frame(&mut conn, FrameType::Heartbeat, &[])?;
+            last_hb = Instant::now();
+        }
+    }
+}
+
+fn write_frame(conn: &mut TcpStream, ty: FrameType, payload: &[u8]) -> Result<()> {
+    use std::io::Write;
+    conn.write_all(&encode_frame(ty, payload)).context("shard-worker: write")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_combined_specs() {
+        assert_eq!(FaultPlan::parse("panic:0.5"), FaultPlan { panic_p: 0.5, stall_ms: 0 });
+        assert_eq!(FaultPlan::parse("stall:2000"), FaultPlan { panic_p: 0.0, stall_ms: 2000 });
+        assert_eq!(
+            FaultPlan::parse("panic:0.02,stall:500"),
+            FaultPlan { panic_p: 0.02, stall_ms: 500 }
+        );
+        // malformed parts never fail the boot
+        assert_eq!(FaultPlan::parse("garbage"), FaultPlan::default());
+        assert_eq!(FaultPlan::parse("panic:not-a-number"), FaultPlan::default());
+        assert!(FaultPlan::default().is_noop());
+        assert!(!FaultPlan::parse("stall:1").is_noop());
+    }
+
+    #[test]
+    fn lcg_unit_stays_in_range_and_varies() {
+        let mut rng = Lcg::new(1234);
+        let draws: Vec<f64> = (0..64).map(|_| rng.unit()).collect();
+        assert!(draws.iter().all(|v| (0.0..1.0).contains(v)), "{draws:?}");
+        let first = draws[0];
+        assert!(draws.iter().any(|v| (v - first).abs() > 1e-6));
+    }
+}

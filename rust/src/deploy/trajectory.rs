@@ -93,6 +93,8 @@ pub const REQUIRED_SERVE_FIELDS: &[&str] = &[
     "fleet_rps_4",
     "fleet_rps_8",
     "swap_p99_spike_ms",
+    "shard_rps_2",
+    "shard_restart_ms",
 ];
 
 /// Serve metrics gated as throughput (higher is better, floor below).
@@ -105,15 +107,22 @@ pub const SERVE_THROUGHPUT_METRICS: &[&str] = &[
     "fleet_rps_2",
     "fleet_rps_4",
     "fleet_rps_8",
+    "shard_rps_2",
 ];
 
 /// Serve metrics gated as tail latency (lower is better, ceiling above).
 /// `hist_p95_ms` gates the in-process histogram measurement alongside
 /// the offline percentile so the two paths can't silently diverge;
 /// `swap_p99_spike_ms` bounds the tail while hot-swaps cut over under
-/// live traffic.
-pub const SERVE_LATENCY_METRICS: &[&str] =
-    &["p95_ms", "http_overload_p99_ms", "hist_p95_ms", "swap_p99_spike_ms"];
+/// live traffic; `shard_restart_ms` bounds kill-9-to-serving-again
+/// recovery of a shard child.
+pub const SERVE_LATENCY_METRICS: &[&str] = &[
+    "p95_ms",
+    "http_overload_p99_ms",
+    "hist_p95_ms",
+    "swap_p99_spike_ms",
+    "shard_restart_ms",
+];
 
 /// (streaming row, prepared row) pairs whose ratio is the decode-once /
 /// threading speedup surfaced in the CI job summary.
@@ -725,6 +734,8 @@ mod tests {
                 "serve.fleet_rps_4".to_string(),
                 "serve.fleet_rps_8".to_string(),
                 "serve.swap_p99_spike_ms".to_string(),
+                "serve.shard_rps_2".to_string(),
+                "serve.shard_restart_ms".to_string(),
             ],
             "{missing:?}"
         );
@@ -737,6 +748,8 @@ mod tests {
         s.insert("fleet_rps_4".to_string(), Json::Num(70.0));
         s.insert("fleet_rps_8".to_string(), Json::Num(60.0));
         s.insert("swap_p99_spike_ms".to_string(), Json::Num(25.0));
+        s.insert("shard_rps_2".to_string(), Json::Num(40.0));
+        s.insert("shard_restart_ms".to_string(), Json::Num(800.0));
         r.merge_serve(Json::Obj(s));
         assert!(r.missing_required_rows().is_empty());
     }

@@ -20,6 +20,7 @@
 
 use anyhow::Result;
 use oscillations_qat::cli::Args;
+use std::sync::atomic::{AtomicBool, Ordering};
 use oscillations_qat::coordinator::evaluator::{EvalQuant, Evaluator};
 use oscillations_qat::coordinator::experiment::{Lab, QatSpec};
 use oscillations_qat::coordinator::{Schedule, Trainer};
@@ -48,18 +49,26 @@ USAGE: oscillations-qat <subcommand> [flags]
             [--no-http] [--no-fleet] [--bench-out BENCH_serve.json]
             [--layer-timing] [--telemetry serve.jsonl]
             benchmark mode (default): channel-level serve bench plus the
-            HTTP front-end rows (keep-alive vs churn, overload p99) and
-            the fleet rows (throughput at 2/4/8 resident models,
-            hot-swap p99 spike); --no-http skips the network scenarios,
-            --no-fleet skips just the fleet rows; --layer-timing turns
-            on per-layer engine timing (reported via --telemetry)
+            HTTP front-end rows (keep-alive vs churn, overload p99), the
+            fleet rows (throughput at 2/4/8 resident models, hot-swap
+            p99 spike), and the shard rows (2-process throughput,
+            kill -9 recovery time); --no-http skips the network
+            scenarios, --no-fleet skips the fleet + shard rows;
+            --layer-timing turns on per-layer engine timing (reported
+            via --telemetry)
             --listen 127.0.0.1:8090 [--mem-budget-mb N] [--deadline-ms 0]
-            [--cache-cap 1024] [--queue-cap 1024]   run the HTTP/1.1
-            front-end instead: POST /v1/models/{id}/predict, GET
-            /v1/models[/{id}], POST /v1/models/{id}/load (hot-swap),
-            legacy POST /v1/predict (Deprecation: true), GET /healthz,
-            GET /stats, GET /metrics; --mem-budget-mb caps total
-            prepared-plane bytes (LRU demotion to streaming)
+            [--cache-cap 1024] [--queue-cap 1024] [--shards N]
+            [--drain-ms 5000]   run the HTTP/1.1 front-end instead:
+            POST /v1/models/{id}/predict, GET /v1/models[/{id}],
+            POST /v1/models/{id}/load (hot-swap), legacy POST
+            /v1/predict (Deprecation: true), GET /healthz, /stats,
+            /metrics; --mem-budget-mb caps total prepared-plane bytes
+            (LRU demotion to streaming); --shards N runs each model's
+            pool as N fault-isolated child processes with crash
+            recovery and failover (QAT_FAULT_INJECT='model[#ix]=spec;...'
+            injects panic:p / stall:ms faults into matching children);
+            SIGTERM/SIGINT drains in-flight requests within --drain-ms
+            and exits 0
   obs-report  <run.jsonl>   summarize a --telemetry JSONL stream (freeze
             timeline, top oscillating layers, BN drift, serve rows,
             per-layer compute time)
@@ -81,6 +90,29 @@ USAGE: oscillations-qat <subcommand> [flags]
 Common flags: --backend auto|pjrt|native   (native needs no artifacts)
               --artifacts artifacts --results results --ckpts ckpts
               --steps N --fp-steps N --seeds 0,1";
+
+/// Set by the SIGTERM/SIGINT handler; polled by `serve --listen` to
+/// start a graceful drain instead of dying mid-request.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        // an atomic store is async-signal-safe
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    // SIGINT = 2, SIGTERM = 15 (POSIX-mandated numbers on every unix)
+    unsafe {
+        signal(2, on_signal as usize);
+        signal(15, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
 
 fn lab_from_args<'rt>(rt: &'rt dyn Backend, args: &Args) -> Lab<'rt> {
     let mut lab = Lab::new(rt);
@@ -114,6 +146,11 @@ fn main() -> Result<()> {
     }
     if cmd == "obs-report" {
         return cmd_obs_report(&args);
+    }
+    // hidden entry point: `serve --shards N` re-invokes this binary as
+    // `shard-worker --connect ... --qpkg ...` for each child process
+    if cmd == "shard-worker" {
+        return oscillations_qat::deploy::serve::shard::run_shard_worker(&args);
     }
 
     let artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
@@ -275,8 +312,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use oscillations_qat::data::{DataCfg, Dataset};
     use oscillations_qat::deploy::format::DeployModel;
     use oscillations_qat::deploy::serve::{
-        bench_fleet, bench_http, bench_serve, BatchForward, EngineCfg, HttpCfg, HttpServer,
-        ModelRegistry, RegistryCfg, ServeCfg,
+        bench_fleet, bench_http, bench_serve, bench_shards, BatchForward, EngineCfg, HttpCfg,
+        HttpServer, ModelRegistry, RegistryCfg, ServeCfg, ShardCfg,
     };
     use oscillations_qat::deploy::{resolve_threads, Engine, EngineOpts};
     use std::path::Path;
@@ -335,8 +372,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             threads,
             layer_timing: args.flag("layer-timing"),
         };
-        let mut models =
-            ModelRegistry::new(RegistryCfg { serve: cfg.clone(), engine: engine_cfg, mem_budget });
+        // --shards N: each model's pool runs as N child processes with
+        // crash recovery; QAT_FAULT_INJECT seeds chaos-test faults into
+        // matching children (model:ix:panic:p,stall:ms rules)
+        let shards = args.usize_or("shards", 0);
+        let shard = ShardCfg {
+            shards,
+            fault_env: std::env::var("QAT_FAULT_INJECT").ok(),
+            ..ShardCfg::default()
+        };
+        let mut models = ModelRegistry::new(RegistryCfg {
+            serve: cfg.clone(),
+            engine: engine_cfg,
+            mem_budget,
+            shard,
+        });
         for (id, path) in &specs {
             let out = models.load_qpkg(id, Path::new(path))?;
             eprintln!(
@@ -358,7 +408,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "[serve] fleet of {} listening on http://{} — POST /v1/models/{{id}}/predict, \
              GET /v1/models[/{{id}}], POST /v1/models/{{id}}/load; legacy POST /v1/predict \
              (Deprecation: true); GET /healthz, /stats, /metrics \
-             (deadline default {}ms, cache {} entries{})",
+             (deadline default {}ms, cache {} entries{}{})",
             n_models,
             srv.addr(),
             http_cfg.default_deadline_ms,
@@ -366,11 +416,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
             match mem_budget {
                 Some(b) => format!(", plane budget {b} B"),
                 None => String::new(),
-            }
+            },
+            if shards > 0 { format!(", {shards} shard procs/model") } else { String::new() }
         );
-        loop {
-            std::thread::park();
+        // tests and supervisors parse the banner for the bound address;
+        // make sure it is out even when stdout is a pipe
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        // park until SIGTERM/SIGINT, then drain: close the listener,
+        // answer in-flight requests within --drain-ms, shut the fleet
+        // (and any shard children) down, exit 0
+        let drain_ms = args.u64_or("drain-ms", 5000);
+        install_signal_handlers();
+        while !SHUTDOWN.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(50));
         }
+        eprintln!("[serve] shutdown signal: draining ({drain_ms} ms budget)");
+        srv.drain(std::time::Duration::from_millis(drain_ms));
+        eprintln!("[serve] drained");
+        return Ok(());
     }
 
     // benchmark mode: the channel/HTTP rows measure one engine (the
@@ -427,6 +491,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // and the hot-swap p99 spike (--no-fleet skips just these)
         if !args.flag("no-fleet") {
             report.fleet = Some(bench_fleet(&fleet_dm, &cfg, smoke)?);
+            // sharded serving: throughput over 2 real child processes,
+            // then kill -9 one and measure time back to full strength
+            report.shard = Some(bench_shards(Path::new(&specs[0].1), &cfg, threads, smoke)?);
         }
     }
     println!("{}", report.summary());
@@ -478,6 +545,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     ("fleet_rps_8", num(rps_for(8))),
                     ("swap_requests", num(f.swap_requests as f64)),
                     ("swap_p99_spike_ms", num(f.swap_p99_spike_ms)),
+                ],
+            );
+        }
+        if let Some(sh) = &report.shard {
+            sink.emit(
+                "serve_bench",
+                &[
+                    ("name", Json::Str("shard".into())),
+                    ("shard_rps_2", num(sh.shard_rps_2)),
+                    ("shard_restart_ms", num(sh.shard_restart_ms)),
+                    ("shard_failovers", num(sh.shard_failovers as f64)),
+                    ("shard_restarts", num(sh.shard_restarts as f64)),
                 ],
             );
         }

@@ -195,6 +195,29 @@ enum Metric {
     Counter(Arc<Counter>),
     Gauge(Arc<Gauge>),
     Histogram(Arc<Histogram>),
+    /// one family, many labeled series (key = rendered label block)
+    LabeledCounters(BTreeMap<String, Arc<Counter>>),
+    LabeledGauges(BTreeMap<String, Arc<Gauge>>),
+}
+
+/// Prometheus label-value escaping (backslash, quote, newline).
+pub fn label_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// The rendered `{k="v",...}` block that keys one series inside a
+/// labeled family. Label *names* are trusted (call-site literals);
+/// values are escaped.
+fn series_key(labels: &[(&str, &str)]) -> String {
+    let mut s = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{}\"", label_escape(v));
+    }
+    s.push('}');
+    s
 }
 
 /// Named metric table rendering Prometheus text exposition. Metrics are
@@ -245,6 +268,38 @@ impl Registry {
         }
     }
 
+    /// Get-or-create one labeled series inside a counter family. The
+    /// family renders a single `# HELP`/`# TYPE` header followed by one
+    /// sample row per distinct label set (sorted by label block).
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = series_key(labels);
+        let mut m = self.metrics.lock().expect("registry lock");
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::LabeledCounters(BTreeMap::new())));
+        match &mut entry.1 {
+            Metric::LabeledCounters(series) => {
+                series.entry(key).or_insert_with(|| Arc::new(Counter::default())).clone()
+            }
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
+    /// Labeled-gauge twin of [`Registry::counter_with`].
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = series_key(labels);
+        let mut m = self.metrics.lock().expect("registry lock");
+        let entry = m
+            .entry(name.to_string())
+            .or_insert_with(|| (help.to_string(), Metric::LabeledGauges(BTreeMap::new())));
+        match &mut entry.1 {
+            Metric::LabeledGauges(series) => {
+                series.entry(key).or_insert_with(|| Arc::new(Gauge::default())).clone()
+            }
+            _ => panic!("metric {name} already registered with another type"),
+        }
+    }
+
     /// Register an externally-owned histogram under `name` (the owner
     /// keeps recording into its own `Arc`; scrapes see it live).
     pub fn adopt_histogram(&self, name: &str, help: &str, h: Arc<Histogram>) {
@@ -270,6 +325,18 @@ impl Registry {
                 Metric::Gauge(g) => {
                     let _ = writeln!(out, "# TYPE {name} gauge");
                     let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::LabeledCounters(series) => {
+                    let _ = writeln!(out, "# TYPE {name} counter");
+                    for (labels, c) in series {
+                        let _ = writeln!(out, "{name}{labels} {}", c.get());
+                    }
+                }
+                Metric::LabeledGauges(series) => {
+                    let _ = writeln!(out, "# TYPE {name} gauge");
+                    for (labels, g) in series {
+                        let _ = writeln!(out, "{name}{labels} {}", g.get());
+                    }
                 }
                 Metric::Histogram(h) => {
                     let _ = writeln!(out, "# TYPE {name} histogram");
@@ -401,6 +468,24 @@ mod tests {
         assert_eq!(last, 2);
         // get-or-create returns the same underlying metric
         assert_eq!(r.counter("qat_test_total", "").get(), 3);
+    }
+
+    #[test]
+    fn labeled_families_render_one_header_many_series() {
+        let r = Registry::new();
+        r.counter_with("qat_lbl_total", "per-model requests", &[("model", "aux")]).add(2);
+        r.counter_with("qat_lbl_total", "", &[("model", "tiny")]).add(5);
+        r.gauge_with("qat_lbl_up", "per-model liveness", &[("model", "tiny")]).set(1.0);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE qat_lbl_total counter").count(), 1, "{text}");
+        assert!(text.contains("qat_lbl_total{model=\"aux\"} 2"), "{text}");
+        assert!(text.contains("qat_lbl_total{model=\"tiny\"} 5"), "{text}");
+        assert!(text.contains("qat_lbl_up{model=\"tiny\"} 1"), "{text}");
+        // get-or-create: the same label set returns the same series
+        assert_eq!(r.counter_with("qat_lbl_total", "", &[("model", "aux")]).get(), 2);
+        // label values are escaped, never break the exposition line
+        r.gauge_with("qat_lbl_up", "", &[("model", "we\"ird\n")]).set(0.0);
+        assert!(r.render().contains("qat_lbl_up{model=\"we\\\"ird\\n\"} 0"), "escape");
     }
 
     #[test]

@@ -29,5 +29,5 @@ pub mod report;
 pub mod trace;
 
 pub use events::EventSink;
-pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use metrics::{label_escape, Counter, Gauge, Histogram, HistogramSnapshot, Registry};
 pub use trace::{LayerTime, Stopwatch};

@@ -81,6 +81,7 @@ fn registry(mem_budget: Option<usize>) -> ModelRegistry {
         serve: ServeCfg::default(),
         engine: EngineCfg::default(),
         mem_budget,
+        ..RegistryCfg::default()
     })
 }
 

@@ -960,6 +960,130 @@ fn adaround_pc_assignment_lands_on_channel_grid() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Shard wire protocol: the supervisor <-> shard-worker framing must
+// round-trip arbitrary payloads and reject truncated / oversized /
+// garbage input with a typed error — never a panic, never a hang.
+
+#[test]
+fn shard_frames_roundtrip_and_prefixes_never_panic() {
+    use oscillations_qat::deploy::serve::shard::proto::{
+        decode_frame, encode_frame, FrameType, HEADER_LEN,
+    };
+    let types = [
+        FrameType::Hello,
+        FrameType::Request,
+        FrameType::Response,
+        FrameType::Error,
+        FrameType::Heartbeat,
+        FrameType::Shutdown,
+    ];
+    for_random_cases(200, "shard_frame_roundtrip", |rng| {
+        let ty = types[rng.below(types.len())];
+        let payload: Vec<u8> = (0..rng.below(600)).map(|_| rng.below(256) as u8).collect();
+        let frame = encode_frame(ty, &payload);
+        assert_eq!(frame.len(), HEADER_LEN + payload.len());
+        let (got_ty, got_payload, used) =
+            decode_frame(&frame).expect("valid frame").expect("complete frame");
+        assert_eq!(got_ty, ty);
+        assert_eq!(got_payload, &payload[..]);
+        assert_eq!(used, frame.len());
+        // every strict prefix is "need more bytes", never an error: a
+        // slow or killed peer must not be misread as a protocol breach
+        let cut = rng.below(frame.len());
+        assert_eq!(decode_frame(&frame[..cut]).expect("prefix"), None, "cut at {cut}");
+        // trailing bytes of a following frame are left untouched
+        let mut two = frame.clone();
+        two.extend_from_slice(&encode_frame(FrameType::Heartbeat, &[]));
+        let (_, _, used2) = decode_frame(&two).unwrap().unwrap();
+        assert_eq!(used2, frame.len());
+    });
+}
+
+#[test]
+fn shard_frame_decoder_rejects_garbage_without_panicking() {
+    use oscillations_qat::deploy::serve::shard::proto::{
+        decode_frame, FrameType, ProtoError, MAGIC, MAX_FRAME, VERSION,
+    };
+    for_random_cases(300, "shard_frame_garbage", |rng| {
+        // pure noise: must return Ok(None) or a typed error, never panic
+        let noise: Vec<u8> = (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
+        let _ = decode_frame(&noise);
+        if let Some(&b0) = noise.first() {
+            if b0 != MAGIC[0] {
+                assert_eq!(decode_frame(&noise), Err(ProtoError::BadMagic));
+            }
+        }
+        // a declared length beyond MAX_FRAME is rejected from the header
+        // alone — the decoder must not wait for (or allocate) the body
+        let over = (MAX_FRAME + 1 + rng.below(1 << 20)) as u32;
+        let mut hdr = vec![MAGIC[0], MAGIC[1], VERSION, FrameType::Heartbeat as u8];
+        hdr.extend_from_slice(&over.to_le_bytes());
+        assert_eq!(decode_frame(&hdr), Err(ProtoError::Oversized(over as usize)));
+        // unknown version / frame-type bytes are typed errors
+        let bad_ver = [MAGIC[0], MAGIC[1], VERSION + 1 + rng.below(200) as u8];
+        assert!(matches!(decode_frame(&bad_ver), Err(ProtoError::BadVersion(_))));
+        let bad_ty = [MAGIC[0], MAGIC[1], VERSION, 7 + rng.below(200) as u8];
+        assert!(matches!(decode_frame(&bad_ty), Err(ProtoError::BadType(_))));
+    });
+}
+
+#[test]
+fn shard_payload_codecs_roundtrip_and_reject_mutations() {
+    use oscillations_qat::deploy::serve::shard::proto::{Hello, WireRequest, WireResponse};
+    for_random_cases(150, "shard_codec_roundtrip", |rng| {
+        let req = WireRequest {
+            id: rng.next_u32() as u64 | ((rng.next_u32() as u64) << 32),
+            deadline_ms: rng.below(60_000) as u32,
+            idempotent: rng.next_f32() < 0.5,
+            input: (0..rng.below(80)).map(|_| rng.normal()).collect(),
+        };
+        let bytes = req.encode();
+        assert_eq!(WireRequest::decode(&bytes).expect("request roundtrip"), req);
+        let resp = WireResponse {
+            id: req.id,
+            pred: rng.below(10) as u32,
+            batch: 1 + rng.below(16) as u32,
+            latency_us: rng.next_u32() as u64,
+            logits: (0..rng.below(16)).map(|_| rng.normal()).collect(),
+        };
+        let rb = resp.encode();
+        assert_eq!(WireResponse::decode(&rb).expect("response roundtrip"), resp);
+        let hello = Hello {
+            model: (0..rng.below(12)).map(|_| char::from(97 + rng.below(26) as u8)).collect(),
+            d_in: rng.below(4096) as u32,
+            num_classes: 1 + rng.below(64) as u32,
+            plane_bytes: rng.next_u32() as u64,
+            pid: rng.next_u32(),
+        };
+        let hb = hello.encode();
+        assert_eq!(Hello::decode(&hb).expect("hello roundtrip"), hello);
+        // strict codecs: any truncation and any trailing byte is an
+        // error, so a half-written payload can never decode as a shorter
+        // valid message
+        for (name, bytes) in [("request", &bytes), ("response", &rb), ("hello", &hb)] {
+            if !bytes.is_empty() {
+                let cut = rng.below(bytes.len());
+                let truncated = &bytes[..cut];
+                let ok = match name {
+                    "request" => WireRequest::decode(truncated).is_ok(),
+                    "response" => WireResponse::decode(truncated).is_ok(),
+                    _ => Hello::decode(truncated).is_ok(),
+                };
+                assert!(!ok, "{name} accepted a truncated payload (cut {cut})");
+            }
+            let mut padded = bytes.to_vec();
+            padded.push(rng.below(256) as u8);
+            let ok = match name {
+                "request" => WireRequest::decode(&padded).is_ok(),
+                "response" => WireResponse::decode(&padded).is_ok(),
+                _ => Hello::decode(&padded).is_ok(),
+            };
+            assert!(!ok, "{name} accepted trailing bytes");
+        }
+    });
+}
+
 #[test]
 fn toy_oscillation_is_bounded_near_optimum() {
     // invariant: under every estimator the latent weight stays within one

@@ -1,0 +1,330 @@
+//! Chaos tests against the real binary: a 2-model fleet with `--shards
+//! 2` per model keeps serving while one model's shard child is
+//! `kill -9`'d, the supervisor restarts it within its recovery budget,
+//! and SIGTERM drains the whole tree to a clean exit 0. Linux-only:
+//! the tests walk `/proc` to find shard children and send raw signals.
+#![cfg(target_os = "linux")]
+
+use oscillations_qat::deploy::format::{DeployLayer, DeployModel, DeployOp, Requant};
+use oscillations_qat::deploy::packed::Packed;
+use oscillations_qat::deploy::serve::http::{format_request, read_response};
+use oscillations_qat::json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+extern "C" {
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+
+const SIGKILL: i32 = 9;
+const SIGTERM: i32 = 15;
+
+/// 12-feature single-layer model where feature block `c` drives class
+/// `(c + rot) % 3` — same shape the fleet tests use.
+fn rot_model(name: &str, rot: usize) -> DeployModel {
+    let mut codes = vec![4u32; 12 * 3]; // grid int 0
+    for c in 0..3usize {
+        for f in 0..4usize {
+            codes[(c * 4 + f) * 3 + (c + rot) % 3] = 6; // grid int +2 -> weight 1.0
+        }
+    }
+    DeployModel {
+        name: name.into(),
+        input_hw: 2,
+        num_classes: 3,
+        quant_a: false,
+        bits_w: 3,
+        bits_a: 8,
+        layers: vec![DeployLayer {
+            name: "head".into(),
+            op: DeployOp::Full,
+            d_in: 12,
+            d_out: 3,
+            relu: false,
+            aq: false,
+            act_bits: 8,
+            a_scales: vec![1.0],
+            w_bits: 3,
+            w_scales: vec![0.5],
+            weights: Packed::pack(&codes, 3).unwrap(),
+            bias: None,
+            requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
+        }],
+    }
+}
+
+fn one_hot_block(c: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; 12];
+    for f in 0..4 {
+        x[c * 4 + f] = 1.0;
+    }
+    x
+}
+
+fn input_body(input: &[f32]) -> Vec<u8> {
+    let mut s = String::from("{\"input\":[");
+    for (i, v) in input.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s.into_bytes()
+}
+
+/// Kills the serve process tree on drop so a failing assertion never
+/// leaks a listener (SIGTERM first for the drain path, SIGKILL after).
+struct ServeGuard {
+    child: Option<Child>,
+}
+
+impl ServeGuard {
+    fn pid(&self) -> i32 {
+        self.child.as_ref().unwrap().id() as i32
+    }
+
+    /// SIGTERM, then wait for a clean exit (the graceful-drain path).
+    fn terminate(mut self, timeout: Duration) -> std::process::ExitStatus {
+        let mut child = self.child.take().unwrap();
+        unsafe { kill(child.id() as i32, SIGTERM) };
+        let t0 = Instant::now();
+        loop {
+            if let Some(status) = child.try_wait().unwrap() {
+                return status;
+            }
+            assert!(t0.elapsed() < timeout, "serve did not exit within {timeout:?} of SIGTERM");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for ServeGuard {
+    fn drop(&mut self) {
+        if let Some(mut child) = self.child.take() {
+            if child.try_wait().ok().flatten().is_none() {
+                unsafe { kill(child.id() as i32, SIGTERM) };
+                for _ in 0..100 {
+                    if child.try_wait().ok().flatten().is_some() {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// Spawn `serve --listen 127.0.0.1:0 ...` and parse the bound address
+/// out of the startup banner.
+fn spawn_serve(extra: &[&str]) -> (ServeGuard, String) {
+    // unique per call: the two tests here run concurrently in one process
+    static SEQ: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!("qat_shard_chaos_{}_{seq}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pa: PathBuf = dir.join("a.qpkg");
+    let pb: PathBuf = dir.join("b.qpkg");
+    rot_model("rot0", 0).write_qpkg(&pa).unwrap();
+    rot_model("rot1", 1).write_qpkg(&pb).unwrap();
+    let spec_a = format!("a={}", pa.display());
+    let spec_b = format!("b={}", pb.display());
+    let mut child = Command::new(env!("CARGO_BIN_EXE_oscillations-qat"))
+        .args([
+            "serve",
+            "--model",
+            spec_a.as_str(),
+            "--model",
+            spec_b.as_str(),
+            "--listen",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+        ])
+        .args(extra)
+        .env_remove("QAT_FAULT_INJECT")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn serve");
+    let stdout = child.stdout.take().unwrap();
+    let guard = ServeGuard { child: Some(child) };
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before printing its banner")
+            .expect("read banner line");
+        if let Some(rest) = line.split("listening on http://").nth(1) {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+    (guard, addr)
+}
+
+fn get(addr: &str, path: &str) -> oscillations_qat::deploy::serve::http::ClientResponse {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\n\r\n").as_bytes()).unwrap();
+    read_response(&mut s).unwrap()
+}
+
+fn metrics_text(addr: &str) -> String {
+    let resp = get(addr, "/metrics");
+    assert_eq!(resp.status, 200);
+    String::from_utf8_lossy(&resp.body).into_owned()
+}
+
+/// Wait until `/metrics` reports `qat_shard_up{model="<id>"} <want>`.
+fn wait_shards_up(addr: &str, id: &str, want: usize, timeout: Duration) {
+    let needle = format!("qat_shard_up{{model=\"{id}\"}} {want}");
+    let t0 = Instant::now();
+    let mut last = String::new();
+    while t0.elapsed() < timeout {
+        last = metrics_text(addr);
+        if last.contains(&needle) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    panic!("shards of {id} never reached {want} up within {timeout:?}; last scrape:\n{last}");
+}
+
+/// PIDs of live `shard-worker` children of `parent` serving `model`,
+/// found by walking /proc (cmdline + ppid).
+fn shard_pids(parent: i32, model: &str) -> Vec<i32> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir("/proc") else {
+        return out;
+    };
+    for e in entries.flatten() {
+        let Some(pid) = e.file_name().to_str().and_then(|s| s.parse::<i32>().ok()) else {
+            continue;
+        };
+        let Ok(raw) = std::fs::read(format!("/proc/{pid}/cmdline")) else {
+            continue;
+        };
+        let argv: Vec<&str> =
+            raw.split(|&b| b == 0).filter_map(|s| std::str::from_utf8(s).ok()).collect();
+        if !argv.iter().any(|a| *a == "shard-worker") {
+            continue;
+        }
+        if argv.windows(2).find(|w| w[0] == "--model-id").map(|w| w[1]) != Some(model) {
+            continue;
+        }
+        // ppid is the second stat field after the parenthesized comm
+        let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) else {
+            continue;
+        };
+        let ppid: i32 = stat
+            .rsplit(')')
+            .next()
+            .and_then(|rest| rest.split_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(-1);
+        if ppid == parent {
+            out.push(pid);
+        }
+    }
+    out
+}
+
+fn predict(stream: &mut TcpStream, model: &str, c: usize) -> (u16, String) {
+    let req = format_request(
+        &format!("/v1/models/{model}/predict"),
+        &input_body(&one_hot_block(c)),
+        &[],
+    );
+    stream.write_all(&req).unwrap();
+    let resp = read_response(stream).unwrap();
+    let code = json::parse(std::str::from_utf8(&resp.body).unwrap_or("{}"))
+        .ok()
+        .and_then(|j| j.get("error").get("code").as_str().map(String::from))
+        .unwrap_or_default();
+    (resp.status, code)
+}
+
+#[test]
+fn kill_9_of_one_shard_is_invisible_to_the_healthy_model_and_recovers() {
+    let (guard, addr) = spawn_serve(&["--shards", "2", "--drain-ms", "10000"]);
+    // both models fully up (2 shard children each) before the chaos
+    wait_shards_up(&addr, "a", 2, Duration::from_secs(60));
+    wait_shards_up(&addr, "b", 2, Duration::from_secs(60));
+    let victims = shard_pids(guard.pid(), "a");
+    assert_eq!(victims.len(), 2, "expected 2 shard children for model a, got {victims:?}");
+    unsafe { kill(victims[0], SIGKILL) };
+
+    // ~3s of traffic against both models while the supervisor recovers.
+    // The wounded model may shed retryable 503s mid-restart; the healthy
+    // model must not miss a single answer, and nothing may 500 or hang.
+    let mut conn_a = TcpStream::connect(&addr).unwrap();
+    let mut conn_b = TcpStream::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    let (mut n_a, mut ok_a) = (0u32, 0u32);
+    while t0.elapsed() < Duration::from_secs(3) {
+        let c = (n_a as usize) % 3;
+        let (status, code) = predict(&mut conn_a, "a", c);
+        n_a += 1;
+        match status {
+            200 => ok_a += 1,
+            503 => assert!(
+                code == "shard_restarting" || code == "queue_full" || code == "deadline_exceeded",
+                "model a shed with unexpected code {code:?}"
+            ),
+            other => panic!("model a answered {other} ({code}) during recovery"),
+        }
+        let (status, code) = predict(&mut conn_b, "b", c);
+        assert_eq!((status, code.as_str()), (200, ""), "healthy model b was disturbed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(ok_a > 0, "the surviving sibling shard answered nothing ({n_a} sent)");
+
+    // the supervisor respawned the killed child within the budget
+    wait_shards_up(&addr, "a", 2, Duration::from_secs(20));
+    let text = metrics_text(&addr);
+    assert!(text.contains("qat_shard_restarts_total{model=\"a\"} "), "{text}");
+    let healthy = shard_pids(guard.pid(), "a");
+    assert_eq!(healthy.len(), 2, "model a must be back to 2 children: {healthy:?}");
+    assert!(!healthy.contains(&victims[0]), "killed pid cannot still be serving");
+
+    // ingress stayed up throughout
+    assert_eq!(get(&addr, "/healthz").status, 200);
+
+    // SIGTERM drains the whole tree: exit 0 and no orphaned children.
+    // Pids are snapshotted first — once the supervisor dies an orphan
+    // would reparent to init and escape the ppid filter.
+    let pid = guard.pid();
+    let mut children = shard_pids(pid, "a");
+    children.extend(shard_pids(pid, "b"));
+    assert_eq!(children.len(), 4, "expected 4 shard children before drain: {children:?}");
+    let status = guard.terminate(Duration::from_secs(30));
+    assert_eq!(status.code(), Some(0), "graceful drain must exit 0");
+    let still_shard = |pid: i32| {
+        std::fs::read(format!("/proc/{pid}/cmdline"))
+            .map(|raw| raw.split(|&b| b == 0).any(|a| a == &b"shard-worker"[..]))
+            .unwrap_or(false)
+    };
+    let t0 = Instant::now();
+    while children.iter().any(|&c| still_shard(c)) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "shard children were orphaned");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn sigterm_with_in_process_pools_drains_and_exits_zero() {
+    // --shards 0 (default): the unchanged in-process path must also own
+    // the graceful SIGTERM drain
+    let (guard, addr) = spawn_serve(&["--drain-ms", "5000"]);
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let (status, code) = predict(&mut stream, "a", 1);
+    assert_eq!((status, code.as_str()), (200, ""));
+    let status = guard.terminate(Duration::from_secs(30));
+    assert_eq!(status.code(), Some(0), "graceful drain must exit 0");
+    // the listener is gone after the drain
+    assert!(TcpStream::connect(&addr).is_err(), "listener must close on SIGTERM");
+}
