@@ -125,6 +125,33 @@ def act_requant_pc_cases(rng):
     return {"kernel": "act_requant_pc", "cases": cases}
 
 
+def dw_spatial_cases(rng):
+    cases = []
+    # (b, hw_in, channels, stride, pad): "same" padding, a stride-2
+    # downsampler, an unpadded valid conv, and a padded tiny input whose
+    # windows are mostly out of bounds
+    for b, hw_in, channels, stride, pad in [
+        (2, 4, 3, 1, 1),
+        (1, 5, 2, 2, 1),
+        (2, 3, 4, 1, 0),
+        (3, 2, 3, 1, 1),
+    ]:
+        hw_out = (hw_in + 2 * pad - 3) // stride + 1
+        x = _f32(rng.normal(size=(b, hw_in * hw_in * channels)))
+        w = _f32(rng.normal(size=(channels, 3, 3)) * 0.5)
+        g = _f32(rng.normal(size=(b, hw_out * hw_out * channels)))
+        out, dx, dw = ref.dw_spatial_vjp_ref(x, w, g, hw_in, channels, stride, pad)
+        cases.append(
+            {
+                "x": _lst(x), "w": _lst(w), "g": _lst(g),
+                "b": b, "hw_in": hw_in, "channels": channels,
+                "stride": stride, "pad": pad, "hw_out": hw_out,
+                "out": _lst(out), "dx": _lst(dx), "dw": _lst(dw),
+            }
+        )
+    return {"kernel": "dw_spatial", "cases": cases}
+
+
 def quant_matmul_cases(rng):
     cases = []
     for s, n, p, (mm, kk, nn) in [
@@ -161,6 +188,7 @@ def main():
         ("act_requant_pc", act_requant_pc_cases),
         ("osc_update", osc_update_cases),
         ("quant_matmul", quant_matmul_cases),
+        ("dw_spatial", dw_spatial_cases),
     ]:
         payload = gen(rng_for(name))
         path = os.path.join(OUT_DIR, f"{name}.json")

@@ -10,7 +10,9 @@ cases in tests).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+from jax import lax
 
 
 def fake_quant_ref(w, s, n, p):
@@ -133,6 +135,51 @@ def act_requant_pc_ref(a, scales, p):
     s = _pc_scales(a.shape, scales, 1)
     codes = jnp.clip(jnp.round(a / s), 0.0, p)
     return codes, s * codes
+
+
+def dw_spatial_ref(x, w, hw_in, channels, stride, pad):
+    """True 2-D spatial depthwise 3x3 conv over channel-last blocks.
+
+    Args:
+      x: ``[B, hw_in*hw_in*channels]`` flattened channel-last activations
+         (element ``(y*hw_in + x)*C + c``).
+      w: ``[channels, 3, 3]`` depthwise taps, one 3x3 plane per channel.
+      hw_in, channels, stride, pad: the spatial geometry (square input,
+         zero padding).
+
+    Returns:
+      ``[B, hw_out*hw_out*channels]`` with
+      ``hw_out = (hw_in + 2*pad - 3) // stride + 1``.
+    """
+    x = jnp.asarray(x)
+    b = x.shape[0]
+    img = x.reshape(b, hw_in, hw_in, channels)
+    # HWIO with feature_group_count=C: rhs[ky, kx, 0, c] = w[c, ky, kx]
+    rhs = jnp.transpose(jnp.asarray(w).reshape(channels, 3, 3), (1, 2, 0))[:, :, None, :]
+    out = lax.conv_general_dilated(
+        img,
+        rhs,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=channels,
+    )
+    hw_out = (hw_in + 2 * pad - 3) // stride + 1
+    return out.reshape(b, hw_out * hw_out * channels)
+
+
+def dw_spatial_vjp_ref(x, w, g, hw_in, channels, stride, pad):
+    """Forward + vjp of :func:`dw_spatial_ref` under upstream ``g``.
+
+    Returns ``(out, dx, dw)`` — the autodiff gradients the native
+    interpreter's hand-rolled backward must reproduce.
+    """
+    def f(xx, ww):
+        return dw_spatial_ref(xx, ww, hw_in, channels, stride, pad)
+
+    out, vjp = jax.vjp(f, x, w)
+    dx, dw = vjp(g)
+    return out, dx, dw
 
 
 def dampening_loss_ref(w, s, n, p):

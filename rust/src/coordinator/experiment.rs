@@ -2,8 +2,9 @@
 //!
 //! Every driver prints a paper-shaped text table (analysis::report) and
 //! writes CSV under `results/`. The scale knobs (steps, seeds) default to
-//! values that fit a single-core CPU host; EXPERIMENTS.md records the
-//! settings used for the committed results.
+//! values that fit a single-core CPU host; RESULTS.md records the
+//! regeneration protocol and the settings behind any committed numbers
+//! (`suite` writes the settings it ran with to `results/PROVENANCE.txt`).
 
 use super::bn_restim;
 use super::evaluator::{EvalQuant, Evaluator};
@@ -331,6 +332,39 @@ impl<'rt> Lab<'rt> {
     }
 
     // -----------------------------------------------------------------
+    // Spatial-depthwise reference rows: the true 2-D zoo members under
+    // the per-channel default. Not a paper table — this is the
+    // RESULTS.md re-baseline target for the spatial conv path.
+
+    pub fn table_spatial(&self) -> Result<TableRenderer> {
+        let mut table = TableRenderer::new(
+            "Spatial reference: 2-D depthwise zoo, per-channel scales, 4-bit",
+            &["Network", "Quant", "pre-BN", "post-BN", "Osc (%)"],
+        );
+        for model in ["mbv2_2d", "efflite_2d"] {
+            for quant_a in [false, true] {
+                let (pre, post, oscs, _) = self.rows_over_seeds(|seed| {
+                    if quant_a {
+                        QatSpec::full(model, 4, seed)
+                    } else {
+                        QatSpec::weight_only(model, 4, seed)
+                    }
+                })?;
+                let quant = if quant_a { "W4/A4" } else { "W4" };
+                table.row(vec![
+                    model.into(),
+                    quant.into(),
+                    mean_std(&pre),
+                    mean_std(&post),
+                    mean_std(&oscs),
+                ]);
+            }
+        }
+        table.emit(&self.results_dir, "table_spatial");
+        Ok(table)
+    }
+
+    // -----------------------------------------------------------------
     // Table 3: effect of oscillations on training
     // (baseline / SR sampling / AdaRound / freezing)
 
@@ -631,13 +665,14 @@ impl<'rt> Lab<'rt> {
 
     /// Fig 2: integer/latent weight traces of a depthwise layer.
     pub fn fig2(&self) -> Result<TableRenderer> {
-        let model = "mbv2";
+        self.fig2_for("mbv2")
+    }
+
+    /// [`Lab::fig2`] against an explicit zoo model; errors (rather than
+    /// panicking) when the model has no depthwise layer to trace.
+    pub fn fig2_for(&self, model: &str) -> Result<TableRenderer> {
         let info = self.rt.index().model(model)?;
-        let dw = info
-            .depthwise()
-            .first()
-            .map(|s| format!("{s}.w"))
-            .expect("model has depthwise layers");
+        let dw = dw_weight(info, model, 0)?;
         let spec = QatSpec {
             trace: Some((dw.clone(), 9)),
             ..QatSpec::weight_only(model, 3, self.seeds[0])
@@ -676,11 +711,15 @@ impl<'rt> Lab<'rt> {
     /// Figs 3 & 4: latent-weight / boundary-distance histograms for the
     /// baseline (fig3) and for dampening + freezing (fig4).
     pub fn fig34(&self) -> Result<TableRenderer> {
-        let model = "mbv2";
+        self.fig34_for("mbv2")
+    }
+
+    /// [`Lab::fig34`] against an explicit zoo model; errors (rather than
+    /// panicking) when the model has no depthwise layer to histogram.
+    pub fn fig34_for(&self, model: &str) -> Result<TableRenderer> {
         let seed = self.seeds[0];
         let info = self.rt.index().model(model)?;
-        let dws = info.depthwise();
-        let dw = dws.get(1.min(dws.len() - 1)).map(|s| format!("{s}.w")).unwrap();
+        let dw = dw_weight(info, model, 1)?;
         let (n_w, p_w) = weight_grid(3);
 
         let mut table = TableRenderer::new(
@@ -798,4 +837,49 @@ fn interesting_layer(layer: &str) -> bool {
         || layer.starts_with("b5.")
         || layer.starts_with("l2.")
         || layer.starts_with("l5.")
+}
+
+/// The depthwise weight tensor (`"<layer>.w"`) the figure protocols
+/// trace: entry `idx` of the model's depthwise list, clamped to the last
+/// one. A model without any depthwise layer (the resnet18 stand-in) gets
+/// a typed error instead of the panic this used to be (`.expect` in
+/// fig2, an index underflow in fig34).
+fn dw_weight(info: &crate::runtime::manifest::ModelInfo, model: &str, idx: usize) -> Result<String> {
+    let dws = info.depthwise();
+    match dws.get(idx.min(dws.len().saturating_sub(1))) {
+        Some(name) => Ok(format!("{name}.w")),
+        None => anyhow::bail!(
+            "model {model} has no depthwise layers — fig2/fig34 trace depthwise \
+             oscillations; pick a depthwise model (mbv2, mbv3, efflite, mbv2_2d)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+
+    #[test]
+    fn fig_drivers_error_instead_of_panicking_on_dense_models() {
+        // resnet18 is the dense stand-in: no "dw"-kind layer at all.
+        // fig2 used to .expect() and fig34 underflowed `dws.len() - 1`
+        // before .unwrap()-ing; both must now surface a typed error
+        // before any training starts.
+        let rt = NativeBackend::new();
+        let lab = Lab::new(&rt);
+        for result in [lab.fig2_for("resnet18").err(), lab.fig34_for("resnet18").err()] {
+            let err = result.expect("dense model must be rejected");
+            assert!(
+                err.to_string().contains("no depthwise layers"),
+                "unexpected error: {err}"
+            );
+        }
+        // the depthwise-bearing models still resolve a trace target
+        for model in ["mbv2", "mbv2_2d"] {
+            let info = rt.index().model(model).unwrap();
+            assert!(dw_weight(info, model, 0).unwrap().ends_with(".w"));
+            assert!(dw_weight(info, model, 1).unwrap().ends_with(".w"));
+        }
+    }
 }

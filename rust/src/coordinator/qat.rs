@@ -234,7 +234,10 @@ pub fn to_per_channel_scales(
         if n_ch == 0 || w.len() % n_ch != 0 {
             continue;
         }
-        let group = if layer.kind == "dw" { 3 } else { 1 };
+        // elements per scale channel: 1 for dense columns, taps-per-channel
+        // for depthwise rows (3 for the 1-D conv, 9 for spatial 3x3) —
+        // derived from the tensor itself so both dw shapes work
+        let group = if layer.kind == "dw" { w.len() / n_ch } else { 1 };
         let (n, p) = grid_for(&layer.wq, bits_w);
         let scales = mse_weight_scale_pc(&w.data, n_ch, group, n, p);
         let sname = weight_scale_of(&layer.weight);

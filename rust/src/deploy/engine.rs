@@ -32,9 +32,9 @@
 //!   output channel's dot product, so the stored integers never change.
 //!   Worst case here (255 x 127 x 768-deep) stays far inside i32 range.
 //!
-//! **Per-channel activation scales** (QPKG v3, `n_a_scales = d_in`)
+//! **Per-channel activation scales** (since QPKG v3, `n_a_scales = d_in`)
 //! quantize each input channel on its own grid. A per-input-channel
-//! scale does *not* factor out of the dot product, so no exact
+//! scale does *not* factor out of a dense dot product, so no exact
 //! per-output-channel integer requant exists for such layers; the engine
 //! runs them through the f32 route with the interpreter's exact
 //! arithmetic (`a_q[i] = s_a[i % d_in] * code_i` over the dequantized
@@ -42,6 +42,14 @@
 //! both accumulation settings — bit-exact vs the fake-quant reference.
 //! Layers whose activation scale stays per-tensor keep the full i32
 //! fast path.
+//!
+//! **Spatial depthwise layers are the exception** (QPKG v4,
+//! [`dw_spatial_f32`] / [`dw_spatial_i32`]): a 3x3 depthwise receptive
+//! field over the channel-last `[H, W, C]` layout stays entirely inside
+//! one input channel, so the per-channel activation scale `s_a[c]`
+//! factors out of every output element of channel `c` after all — the
+//! exact integer path survives per-channel activation grids there, with
+//! the composed per-output factor `s_a[o % C] * s_w[o % C] * mult[o]`.
 //!
 //! Batches parallelize over rows: [`EngineOpts::threads`] splits the
 //! batch into contiguous row chunks and runs the full layer stack on
@@ -203,6 +211,83 @@ blocked_dw_impl!(
     0i32
 );
 
+/// One spatial depthwise 3x3 kernel per element type. The activation
+/// layout is channel-last `[H, W, C]` flattened (`j = (y*W + x)*C + c`),
+/// the weight plane is `[C, 3, 3]` (`w[c*9 + ky*3 + kx]`). Zero padding
+/// is realised by *skipping* out-of-bounds taps, and per output element
+/// the in-bounds taps accumulate in ascending `(ky, kx)` order — exactly
+/// the native interpreter's term sequence, so the f32 instantiation is
+/// bit-exact against it. The channel loop is innermost: one valid tap
+/// updates a contiguous `C`-run of outputs from a contiguous `C`-run of
+/// inputs, which only reorders *which* output element is touched next,
+/// never the terms within one element.
+macro_rules! spatial_dw_impl {
+    ($(#[$meta:meta])* $name:ident, $ty:ty, $zero:expr) => {
+        $(#[$meta])*
+        #[allow(clippy::too_many_arguments)]
+        pub fn $name(
+            x: &[$ty],
+            w: &[$ty],
+            b: usize,
+            hw_in: usize,
+            c_dim: usize,
+            stride: usize,
+            pad: usize,
+            out: &mut [$ty],
+        ) {
+            let hw_out = (hw_in + 2 * pad - 3) / stride.max(1) + 1;
+            let (d_in, d_out) = (hw_in * hw_in * c_dim, hw_out * hw_out * c_dim);
+            debug_assert_eq!(w.len(), c_dim * 9);
+            debug_assert_eq!(x.len(), b * d_in);
+            debug_assert_eq!(out.len(), b * d_out);
+            out.fill($zero);
+            for bi in 0..b {
+                let arow = &x[bi * d_in..(bi + 1) * d_in];
+                let orow = &mut out[bi * d_out..(bi + 1) * d_out];
+                for yo in 0..hw_out {
+                    for xo in 0..hw_out {
+                        let obase = (yo * hw_out + xo) * c_dim;
+                        for ky in 0..3usize {
+                            let y = yo * stride + ky;
+                            if y < pad || y - pad >= hw_in {
+                                continue; // zero-padded row: tap skipped
+                            }
+                            for kx in 0..3usize {
+                                let xx = xo * stride + kx;
+                                if xx < pad || xx - pad >= hw_in {
+                                    continue; // zero-padded column
+                                }
+                                let jbase = ((y - pad) * hw_in + (xx - pad)) * c_dim;
+                                let t = ky * 3 + kx;
+                                for c in 0..c_dim {
+                                    orow[obase + c] += w[c * 9 + t] * arow[jbase + c];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    };
+}
+
+spatial_dw_impl!(
+    /// Spatial depthwise 3x3 conv over a decoded (dequantized) weight
+    /// plane, bit-exact vs the native interpreter's `DwSpatial` forward
+    /// (ascending `(ky, kx)` tap order, out-of-bounds taps skipped).
+    dw_spatial_f32,
+    f32,
+    0.0f32
+);
+spatial_dw_impl!(
+    /// Integer twin of [`dw_spatial_f32`]: unsigned activation codes x
+    /// signed weight integers, i32 accumulation (exact — worst case
+    /// 9 taps x 255 x 127 stays far inside i32 range).
+    dw_spatial_i32,
+    i32,
+    0i32
+);
+
 /// `x [m,k] @ dequant(w) [k,n]` with a **streaming** decode: the packed
 /// payload is bulk-decoded on every call, then the blocked kernel runs.
 /// Kept as the pre-cache reference path (and for one-shot callers);
@@ -272,6 +357,52 @@ pub fn packed_dw_i32(qa: &[i32], w: &Packed, b: usize, c_dim: usize, grid_n: i32
     w.ints_into(grid_n, &mut wi);
     let mut out = vec![0i32; b * c_dim];
     dw_i32(qa, &wi, b, c_dim, &mut out);
+    out
+}
+
+/// Streaming-decode spatial depthwise 3x3 conv over channel-last
+/// `[H, W, C]` activations (`scales`: one scale or one per channel
+/// plane, `group = 9`), mirroring the native interpreter exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_dw_spatial(
+    x: &[f32],
+    w: &Packed,
+    b: usize,
+    hw_in: usize,
+    c_dim: usize,
+    stride: usize,
+    pad: usize,
+    scales: &[f32],
+    grid_n: i32,
+) -> Vec<f32> {
+    debug_assert_eq!(w.len, c_dim * 9);
+    debug_assert!(scales.len() == 1 || scales.len() == c_dim);
+    let mut wq = Vec::new();
+    w.dequant_pc_into(grid_n, scales, 9, &mut wq);
+    let hw_out = (hw_in + 2 * pad - 3) / stride.max(1) + 1;
+    let mut out = vec![0.0f32; b * hw_out * hw_out * c_dim];
+    dw_spatial_f32(x, &wq, b, hw_in, c_dim, stride, pad, &mut out);
+    out
+}
+
+/// Streaming-decode integer spatial depthwise 3x3 conv.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_dw_spatial_i32(
+    qa: &[i32],
+    w: &Packed,
+    b: usize,
+    hw_in: usize,
+    c_dim: usize,
+    stride: usize,
+    pad: usize,
+    grid_n: i32,
+) -> Vec<i32> {
+    debug_assert_eq!(w.len, c_dim * 9);
+    let mut wi = Vec::new();
+    w.ints_into(grid_n, &mut wi);
+    let hw_out = (hw_in + 2 * pad - 3) / stride.max(1) + 1;
+    let mut out = vec![0i32; b * hw_out * hw_out * c_dim];
+    dw_spatial_i32(qa, &wi, b, hw_in, c_dim, stride, pad, &mut out);
     out
 }
 
@@ -534,32 +665,44 @@ impl Engine {
                 // of the `[b, d_in]` chunk belongs to channel `i % d_in`,
                 // the same layout rule the interpreter applies)
                 let codes = kernels::int_weights_pc(&act, &l.a_scales, 1, 0.0, l.act_p());
-                if self.int_accum && !l.per_channel_act() {
+                if self.int_accum && (!l.per_channel_act() || l.op == DeployOp::DwSpatial) {
                     let qa: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
                     let acc = self.linear_i32(l, pl, &qa, b);
-                    let sa = l.a_scales[0] as f64;
+                    // Per-output composed scale. For dense/circular-dw
+                    // layers the fast path only admits per-tensor act
+                    // scales (`a_scale_of` collapses to `a_scales[0]`);
+                    // a spatial depthwise output element `o` reads only
+                    // its own input channel `o % C`, so the per-channel
+                    // act scale factors out of the dot product there too
+                    // and `a_scale_of(o)` picks exactly that channel's
+                    // scale (`o % n_scales`, the shared layout rule).
                     if let (Some(rq), None) = (&l.requant, &l.bias) {
                         // the per-channel requant composes with the
                         // folded-BN affine: one f64 multiply
-                        // `s_a * s_w[c] * mult[c]` per output channel
+                        // `s_a[o] * s_w[o] * mult[o]` per output element
                         // takes the i32 accumulator straight to the
                         // BN-scaled range (no intermediate f32 rounding)
                         let mult: Vec<f64> = (0..d_out)
-                            .map(|c| sa * l.w_scale_of(c) as f64 * rq.mult[c] as f64)
+                            .map(|o| {
+                                l.a_scale_of(o) as f64
+                                    * l.w_scale_of(o) as f64
+                                    * rq.mult[o] as f64
+                            })
                             .collect();
                         requant_applied = true;
                         acc.iter()
                             .enumerate()
                             .map(|(idx, &v)| {
-                                let c = idx % d_out;
-                                (mult[c] * v as f64) as f32 + rq.add[c]
+                                let o = idx % d_out;
+                                (mult[o] * v as f64) as f32 + rq.add[o]
                             })
                             .collect()
                     } else {
-                        // one per-channel requantization multiply back to
-                        // the real scale: output idx -> channel idx % d_out
-                        let zscales: Vec<f64> =
-                            (0..d_out).map(|c| sa * l.w_scale_of(c) as f64).collect();
+                        // one per-output requantization multiply back to
+                        // the real scale: output idx -> slot idx % d_out
+                        let zscales: Vec<f64> = (0..d_out)
+                            .map(|o| l.a_scale_of(o) as f64 * l.w_scale_of(o) as f64)
+                            .collect();
                         acc.iter()
                             .enumerate()
                             .map(|(idx, &v)| (zscales[idx % d_out] * v as f64) as f32)
@@ -629,6 +772,12 @@ impl Engine {
             match l.op {
                 DeployOp::Full => matmul_f32(x, &pl.wq, b, l.d_in, l.d_out, &mut out),
                 DeployOp::Dw => dw_f32(x, &pl.wq, b, l.d_out, &mut out),
+                DeployOp::DwSpatial => {
+                    let sp = l.spatial.expect("DwSpatial layer without metadata");
+                    dw_spatial_f32(
+                        x, &pl.wq, b, sp.hw_in, sp.channels, sp.stride, sp.pad, &mut out,
+                    )
+                }
             }
             out
         } else {
@@ -638,6 +787,20 @@ impl Engine {
                 }
                 DeployOp::Dw => {
                     packed_dw(x, &l.weights, b, l.d_out, &l.w_scales, l.grid_n_int())
+                }
+                DeployOp::DwSpatial => {
+                    let sp = l.spatial.expect("DwSpatial layer without metadata");
+                    packed_dw_spatial(
+                        x,
+                        &l.weights,
+                        b,
+                        sp.hw_in,
+                        sp.channels,
+                        sp.stride,
+                        sp.pad,
+                        &l.w_scales,
+                        l.grid_n_int(),
+                    )
                 }
             }
         }
@@ -652,6 +815,12 @@ impl Engine {
                 match l.op {
                     DeployOp::Full => matmul_i32(qa, wi, b, l.d_in, l.d_out, &mut out),
                     DeployOp::Dw => dw_i32(qa, wi, b, l.d_out, &mut out),
+                    DeployOp::DwSpatial => {
+                        let sp = l.spatial.expect("DwSpatial layer without metadata");
+                        dw_spatial_i32(
+                            qa, wi, b, sp.hw_in, sp.channels, sp.stride, sp.pad, &mut out,
+                        )
+                    }
                 }
                 out
             }
@@ -660,6 +829,19 @@ impl Engine {
                     packed_matmul_i32(qa, &l.weights, b, l.d_in, l.d_out, l.grid_n_int())
                 }
                 DeployOp::Dw => packed_dw_i32(qa, &l.weights, b, l.d_out, l.grid_n_int()),
+                DeployOp::DwSpatial => {
+                    let sp = l.spatial.expect("DwSpatial layer without metadata");
+                    packed_dw_spatial_i32(
+                        qa,
+                        &l.weights,
+                        b,
+                        sp.hw_in,
+                        sp.channels,
+                        sp.stride,
+                        sp.pad,
+                        l.grid_n_int(),
+                    )
+                }
             },
         }
     }
@@ -849,6 +1031,7 @@ mod tests {
                 mult: vec![2.0, 0.5, 1.0],
                 add: vec![0.5, -0.25, 0.0],
             }),
+            spatial: None,
         };
         DeployModel {
             name: "pc".into(),
@@ -1018,6 +1201,167 @@ mod tests {
             assert_eq!(f, s * q as f32, "plane mismatch at {i}");
         }
         assert_eq!(pm.plane_bytes(), 36 * 8);
+    }
+
+    /// Scalar reference for the spatial depthwise kernels: per output
+    /// element, taps in ascending `(ky, kx)` with out-of-bounds skipped
+    /// — the interpreter's exact term order.
+    #[allow(clippy::too_many_arguments)]
+    fn dw_spatial_scalar(
+        x: &[f32],
+        wq: &[f32],
+        b: usize,
+        hw_in: usize,
+        c_dim: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<f32> {
+        let hw_out = (hw_in + 2 * pad - 3) / stride + 1;
+        let mut out = vec![0.0f32; b * hw_out * hw_out * c_dim];
+        for bi in 0..b {
+            for yo in 0..hw_out {
+                for xo in 0..hw_out {
+                    for c in 0..c_dim {
+                        let mut acc = 0.0f32;
+                        for ky in 0..3usize {
+                            let y = yo * stride + ky;
+                            if y < pad || y - pad >= hw_in {
+                                continue;
+                            }
+                            for kx in 0..3usize {
+                                let xx = xo * stride + kx;
+                                if xx < pad || xx - pad >= hw_in {
+                                    continue;
+                                }
+                                let j = ((y - pad) * hw_in + (xx - pad)) * c_dim + c;
+                                acc +=
+                                    wq[c * 9 + ky * 3 + kx] * x[bi * hw_in * hw_in * c_dim + j];
+                            }
+                        }
+                        out[(bi * hw_out * hw_out + yo * hw_out + xo) * c_dim + c] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn spatial_dw_kernels_match_scalar_reference() {
+        let mut rng = Pcg32::new(31, 0x2d);
+        // geometry sweep: padded same-size, strided downsample, valid
+        // (pad 0) 3x3 -> 1x1, strided valid, and a 1x1 input where every
+        // output tap but the centre falls in the padding
+        for (hw_in, c_dim, stride, pad) in
+            [(4usize, 3usize, 1usize, 1usize), (4, 5, 2, 1), (3, 2, 1, 0), (5, 4, 2, 0), (1, 3, 1, 1)]
+        {
+            let b = 2usize;
+            let hw_out = (hw_in + 2 * pad - 3) / stride + 1;
+            let x: Vec<f32> = (0..b * hw_in * hw_in * c_dim).map(|_| rng.normal()).collect();
+            let wq: Vec<f32> = (0..c_dim * 9).map(|_| rng.normal() * 0.3).collect();
+            let mut got = vec![0.0f32; b * hw_out * hw_out * c_dim];
+            dw_spatial_f32(&x, &wq, b, hw_in, c_dim, stride, pad, &mut got);
+            assert_eq!(
+                got,
+                dw_spatial_scalar(&x, &wq, b, hw_in, c_dim, stride, pad),
+                "f32 {hw_in}x{hw_in}x{c_dim} s{stride} p{pad}"
+            );
+            // integer twin: small codes keep every product exact in f32,
+            // so the f32 scalar reference doubles as the i32 oracle
+            let qa: Vec<i32> =
+                (0..b * hw_in * hw_in * c_dim).map(|_| rng.below(16) as i32).collect();
+            let wi: Vec<i32> = (0..c_dim * 9).map(|_| rng.below(15) as i32 - 7).collect();
+            let mut goti = vec![0i32; b * hw_out * hw_out * c_dim];
+            dw_spatial_i32(&qa, &wi, b, hw_in, c_dim, stride, pad, &mut goti);
+            let xf: Vec<f32> = qa.iter().map(|&v| v as f32).collect();
+            let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
+            let want = dw_spatial_scalar(&xf, &wf, b, hw_in, c_dim, stride, pad);
+            let gotf: Vec<f32> = goti.iter().map(|&v| v as f32).collect();
+            assert_eq!(gotf, want, "i32 {hw_in}x{hw_in}x{c_dim} s{stride} p{pad}");
+        }
+    }
+
+    /// A single spatial depthwise layer (2x2 input, 3 channels, pad 1)
+    /// with per-channel weight AND activation scales on power-of-two
+    /// grids plus a folded-BN requant and no bias: the configuration
+    /// where the QPKG v4 exact-integer fast path must engage despite
+    /// `per_channel_act()`.
+    fn tiny_spatial_model() -> DeployModel {
+        use crate::deploy::export::snap_and_pack_pc;
+        use crate::deploy::format::{DwSpatialMeta, Requant};
+        let (hw, nc) = (2usize, 3usize);
+        let d = hw * hw * nc;
+        let w_scales = vec![0.5f32, 0.25, 0.125];
+        let mut rng = Pcg32::new(23, 0x5b);
+        let w: Vec<f32> = (0..nc * 9)
+            .map(|i| (rng.below(15) as f32 - 7.0) * w_scales[i / 9])
+            .collect();
+        let (packed, _grid_n) = snap_and_pack_pc(&w, &w_scales, 9, 4).unwrap();
+        let layer = DeployLayer {
+            name: "dw2d".into(),
+            op: DeployOp::DwSpatial,
+            d_in: d,
+            d_out: d,
+            relu: true,
+            aq: true,
+            act_bits: 4,
+            a_scales: vec![0.5, 0.25, 0.125],
+            w_bits: 4,
+            w_scales,
+            weights: packed,
+            bias: None,
+            requant: Some(Requant {
+                mult: (0..d).map(|o| if o % 2 == 0 { 2.0 } else { 0.5 }).collect(),
+                add: (0..d).map(|o| -0.25 + 0.25 * (o % 3) as f32).collect(),
+            }),
+            spatial: Some(DwSpatialMeta {
+                kernel: 3,
+                stride: 1,
+                pad: 1,
+                hw_in: hw,
+                channels: nc,
+            }),
+        };
+        DeployModel {
+            name: "sp".into(),
+            input_hw: 2,
+            num_classes: d,
+            quant_a: true,
+            bits_w: 4,
+            bits_a: 4,
+            layers: vec![layer],
+        }
+    }
+
+    #[test]
+    fn spatial_per_channel_act_runs_exact_i32_fast_path() {
+        // power-of-two scales: every f32 op is exact, so the int-accum
+        // engine must agree with the f32-exact engine to the bit — and
+        // it must do so *despite* per-channel activation scales, because
+        // a spatial depthwise output only ever reads its own channel
+        let dm = tiny_spatial_model();
+        let mut rng = Pcg32::new(29, 0xaa);
+        let b = 3usize;
+        // activations already on each channel's pow2 grid (channel of
+        // flat element i is i % 3: d_in = 12 is a multiple of 3)
+        let x: Vec<f32> = (0..b * 12)
+            .map(|i| rng.below(16) as f32 * dm.layers[0].a_scales[i % 3])
+            .collect();
+        let exact = Engine::with_mode(dm.clone(), false).forward_batch(&x, b).unwrap();
+        let int = Engine::with_mode(dm.clone(), true).forward_batch(&x, b).unwrap();
+        assert_eq!(exact, int);
+        // every execution mode agrees bit-for-bit
+        for int_accum in [false, true] {
+            for opts in [
+                EngineOpts { prepared: false, ..Default::default() },
+                EngineOpts { threads: 2, ..Default::default() },
+            ] {
+                let got = Engine::with_opts(dm.clone(), int_accum, opts)
+                    .forward_batch(&x, b)
+                    .unwrap();
+                assert_eq!(got, exact, "int_accum {int_accum} opts {opts:?}");
+            }
+        }
     }
 
     #[test]

@@ -105,13 +105,14 @@ pub fn export_model(
         let s_t = state
             .expect(&format!("params/{}.s", l.name))
             .with_context(|| format!("export {}: weight scale", l.name))?;
-        // per-tensor (scalar) or per-channel ([d_out]) LSQ scales
+        // per-tensor (scalar) or per-channel LSQ scales — one per output
+        // column for dense layers, one per channel for depthwise
         anyhow::ensure!(
-            s_t.len() == 1 || s_t.len() == l.d_out,
+            s_t.len() == 1 || s_t.len() == l.w_channels(),
             "export {}: {} weight scales for {} channels",
             l.name,
             s_t.len(),
-            l.d_out
+            l.w_channels()
         );
         let w_scales: Vec<f32> = s_t.data.iter().map(|&v| v.max(1e-8)).collect();
         let group = l.scale_group();
@@ -186,17 +187,18 @@ pub fn export_model(
 
         let aq = l.aq && cfg.quant_a;
         let act_bits = if l.wq == "8bit" { 8 } else { cfg.bits_a };
-        // per-tensor (scalar) or per-input-channel ([d_in]) LSQ scales
+        // per-tensor (scalar) or per-input-channel LSQ scales — [d_in]
+        // for 1-D layers, [C] for spatial depthwise
         let a_scales: Vec<f32> = if aq {
             let as_t = state
                 .expect(&format!("params/{}.as", l.name))
                 .with_context(|| format!("export {}: activation scale", l.name))?;
             anyhow::ensure!(
-                as_t.len() == 1 || as_t.len() == l.d_in,
+                as_t.len() == 1 || as_t.len() == l.act_channels(),
                 "export {}: {} activation scales for {} input channels",
                 l.name,
                 as_t.len(),
-                l.d_in
+                l.act_channels()
             );
             as_t.data.iter().map(|&v| v.max(1e-8)).collect()
         } else {
@@ -211,6 +213,7 @@ pub fn export_model(
             op: match l.op {
                 LayerOp::Full => DeployOp::Full,
                 LayerOp::Dw => DeployOp::Dw,
+                LayerOp::DwSpatial => DeployOp::DwSpatial,
             },
             d_in: l.d_in,
             d_out: l.d_out,
@@ -223,6 +226,13 @@ pub fn export_model(
             weights: packed,
             bias,
             requant,
+            spatial: l.spatial.map(|sp| super::format::DwSpatialMeta {
+                kernel: crate::runtime::native::model::SpatialSpec::KERNEL,
+                stride: sp.stride,
+                pad: sp.pad,
+                hw_in: sp.hw_in,
+                channels: sp.channels,
+            }),
         });
     }
     report.layers = layers.len();
@@ -343,6 +353,54 @@ mod tests {
             }
         }
         // QPKG v3 round-trip preserves the activation scale arrays
+        let dm2 = crate::deploy::format::DeployModel::from_bytes(&dm.to_bytes()).unwrap();
+        assert_eq!(dm, dm2);
+    }
+
+    #[test]
+    fn spatial_export_roundtrips_qpkg_v4() {
+        let m = zoo_model("efflite_2d").unwrap();
+        let mut state = m.initial_state();
+        // per-channel weight scales (length C on spatial dw layers) and
+        // per-channel activation scales (length C on their inputs)
+        for l in &m.layers {
+            let wc = l.w_channels();
+            let scales: Vec<f32> = (0..wc).map(|c| 0.05 + 0.01 * c as f32).collect();
+            state.insert(format!("params/{}.s", l.name), Tensor::new(vec![wc], scales));
+            if l.aq {
+                let ac = l.act_channels();
+                let ascales: Vec<f32> = (0..ac).map(|j| 0.02 + 1e-3 * j as f32).collect();
+                state.insert(format!("params/{}.as", l.name), Tensor::new(vec![ac], ascales));
+            }
+        }
+        let cfg = ExportCfg { bits_w: 4, bits_a: 4, quant_a: true };
+        let (dm, report) = export_model(&m, &state, &cfg).unwrap();
+        assert_eq!(report.layers, m.layers.len());
+        let (dl, nl) = dm
+            .layers
+            .iter()
+            .zip(&m.layers)
+            .find(|(_, nl)| nl.op == LayerOp::DwSpatial)
+            .unwrap();
+        assert_eq!(dl.op, DeployOp::DwSpatial);
+        let sp = dl.spatial.unwrap();
+        let nsp = nl.spatial.unwrap();
+        assert_eq!(
+            (sp.kernel, sp.stride, sp.pad, sp.hw_in, sp.channels),
+            (3, nsp.stride, nsp.pad, nsp.hw_in, nsp.channels)
+        );
+        assert_eq!(dl.w_scales.len(), nsp.channels);
+        assert_eq!(dl.a_scales.len(), nsp.channels);
+        assert_eq!(dl.weights.len, nsp.channels * 9);
+        // packed codes decode bit-exactly to the group-9 fake-quant
+        let w = state.get(&format!("params/{}.w", nl.name)).unwrap();
+        let (gn, gp) = dl.w_grid();
+        let fq = kernels::fake_quant_pc(&w.data, &dl.w_scales, 9, gn, gp);
+        let mut deq = Vec::new();
+        dl.weights
+            .dequant_pc_into(dl.grid_n_int(), &dl.w_scales, dl.scale_group(), &mut deq);
+        assert_eq!(deq, fq);
+        // QPKG v4 round-trip preserves the spatial metadata
         let dm2 = crate::deploy::format::DeployModel::from_bytes(&dm.to_bytes()).unwrap();
         assert_eq!(dm, dm2);
     }

@@ -9,16 +9,18 @@
 //! running-stat updates survive the export — this struct is everything
 //! inference needs and nothing else.
 //!
-//! QPKG binary layout (all little-endian, version 3):
+//! QPKG binary layout (all little-endian, version 4):
 //!
 //! ```text
 //! magic  'QPKG'  | u32 version | u16 name_len + name
 //! u32 input_hw   | u32 num_classes | u8 quant_a | u32 bits_w | u32 bits_a
 //! u32 n_layers, then per layer:
 //!   u16 name_len + name
-//!   u8 op (0 = full matmul, 1 = depthwise 3-tap)
+//!   u8 op (0 = full matmul, 1 = depthwise 3-tap, 2 = spatial depthwise)
 //!   u8 relu | u8 aq | u8 has_bias | u8 has_requant
 //!   u32 d_in | u32 d_out | u32 w_bits | u32 act_bits
+//!   u32 kernel | u32 stride | u32 pad | u32 hw_in | u32 channels
+//!                                   (spatial metadata, op = 2 only)
 //!   u32 n_w_scales | [f32 w_scales; n_w_scales]
 //!   u32 n_a_scales | [f32 a_scales; n_a_scales]
 //!   [f32 bias; d_out]               (if has_bias)
@@ -26,16 +28,19 @@
 //!   u32 n_codes | u32 n_bytes | packed weight bitstream
 //! ```
 //!
-//! `n_w_scales` is 1 (per-tensor LSQ) or `d_out` (per-channel LSQ, one
-//! scale per output channel — for depthwise layers one per channel row);
-//! `n_a_scales` is 1 (per-tensor activation LSQ) or `d_in` (per-channel,
-//! one scale per input channel of the layer).
-//! **Version negotiation:** the writer always emits version 3; the reader
-//! accepts version 2 files (whose layer record carries a single
-//! `f32 a_scale` where v3 puts the counted scale array) and version 1
-//! files (a single `f32 w_scale` *and* a single `f32 a_scale`), upgrading
-//! both in memory to one-element scale vectors, so every older artifact
-//! keeps loading unchanged.
+//! `n_w_scales` is 1 (per-tensor LSQ) or one per scale channel —
+//! `d_out` for dense/1-D depthwise layers, `channels` for spatial
+//! depthwise (`[C, 3, 3]` planes, one scale per channel plane);
+//! `n_a_scales` is 1 (per-tensor activation LSQ) or one per input
+//! channel — `d_in` for 1-D layers, `channels` for spatial depthwise
+//! (the `[H, W, C]` channel-last input has `C` channels).
+//! **Version negotiation:** the writer always emits version 4 (which
+//! added op tag 2 + the spatial metadata block); the reader accepts
+//! version 3 files (identical layout minus op tag 2), version 2 files
+//! (whose layer record carries a single `f32 a_scale` where v3 puts the
+//! counted scale array) and version 1 files (a single `f32 w_scale`
+//! *and* a single `f32 a_scale`), upgrading all of them in memory, so
+//! every older artifact keeps loading unchanged.
 
 use super::packed::Packed;
 use crate::quant::{act_grid, weight_grid};
@@ -45,7 +50,7 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"QPKG";
 /// Version the writer emits.
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 /// Oldest version the reader still accepts (upgraded on load).
 const MIN_VERSION: u32 = 1;
 
@@ -56,6 +61,29 @@ pub enum DeployOp {
     Full,
     /// circular depthwise 3-tap channel conv, weights `[d_out, 3]`
     Dw,
+    /// true 2-D spatial depthwise conv over an `[H, W, C]` channel-last
+    /// block, weights `[C, k, k]` (QPKG v4)
+    DwSpatial,
+}
+
+/// Spatial geometry of a [`DeployOp::DwSpatial`] layer (QPKG v4 layer
+/// metadata). `kernel` is fixed at 3 today but stored in the file so the
+/// format can grow without another version bump.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DwSpatialMeta {
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// square input side: the layer reads `hw_in * hw_in * channels`
+    pub hw_in: usize,
+    pub channels: usize,
+}
+
+impl DwSpatialMeta {
+    /// Output side length under stride/pad.
+    pub fn hw_out(&self) -> usize {
+        (self.hw_in + 2 * self.pad - self.kernel) / self.stride + 1
+    }
 }
 
 /// Per-channel requantization affine (the folded BN): `y = mult*z + add`.
@@ -87,6 +115,8 @@ pub struct DeployLayer {
     pub weights: Packed,
     pub bias: Option<Vec<f32>>,
     pub requant: Option<Requant>,
+    /// spatial geometry; `Some` iff `op == DeployOp::DwSpatial`
+    pub spatial: Option<DwSpatialMeta>,
 }
 
 impl DeployLayer {
@@ -118,11 +148,32 @@ impl DeployLayer {
     /// Channel layout `group` of the packed weight payload (see
     /// `kernels::scale_index`): dense `[d_in, d_out]` codes map to their
     /// output column (`group = 1`), depthwise `[C, 3]` rows to their
-    /// channel row (`group = 3`).
+    /// channel row (`group = 3`), spatial depthwise `[C, 3, 3]` planes
+    /// to their channel plane (`group = 9`).
     pub fn scale_group(&self) -> usize {
         match self.op {
             DeployOp::Full => 1,
             DeployOp::Dw => 3,
+            DeployOp::DwSpatial => {
+                let sp = self.spatial.expect("DwSpatial layer without metadata");
+                sp.kernel * sp.kernel
+            }
+        }
+    }
+
+    /// Number of weight-scale channels in the per-channel layout.
+    pub fn w_channels(&self) -> usize {
+        match self.op {
+            DeployOp::Full | DeployOp::Dw => self.d_out,
+            DeployOp::DwSpatial => self.spatial.expect("DwSpatial layer without metadata").channels,
+        }
+    }
+
+    /// Number of activation-scale channels admitted on this layer's input.
+    pub fn act_channels(&self) -> usize {
+        match self.op {
+            DeployOp::DwSpatial => self.spatial.expect("DwSpatial layer without metadata").channels,
+            _ => self.d_in,
         }
     }
 
@@ -183,6 +234,10 @@ impl DeployModel {
             if let Some(r) = &l.requant {
                 n += (r.mult.len() + r.add.len()) * 4;
             }
+            if l.spatial.is_some() {
+                // kernel | stride | pad | hw_in | channels
+                n += 20;
+            }
         }
         n
     }
@@ -206,6 +261,7 @@ impl DeployModel {
             buf.push(match l.op {
                 DeployOp::Full => 0,
                 DeployOp::Dw => 1,
+                DeployOp::DwSpatial => 2,
             });
             buf.push(l.relu as u8);
             buf.push(l.aq as u8);
@@ -215,6 +271,14 @@ impl DeployModel {
             buf.extend_from_slice(&(l.d_out as u32).to_le_bytes());
             buf.extend_from_slice(&l.w_bits.to_le_bytes());
             buf.extend_from_slice(&l.act_bits.to_le_bytes());
+            if l.op == DeployOp::DwSpatial {
+                let sp = l.spatial.expect("DwSpatial layer without metadata");
+                buf.extend_from_slice(&(sp.kernel as u32).to_le_bytes());
+                buf.extend_from_slice(&(sp.stride as u32).to_le_bytes());
+                buf.extend_from_slice(&(sp.pad as u32).to_le_bytes());
+                buf.extend_from_slice(&(sp.hw_in as u32).to_le_bytes());
+                buf.extend_from_slice(&(sp.channels as u32).to_le_bytes());
+            }
             buf.extend_from_slice(&(l.w_scales.len() as u32).to_le_bytes());
             put_f32s(&mut buf, &l.w_scales);
             buf.extend_from_slice(&(l.a_scales.len() as u32).to_le_bytes());
@@ -268,6 +332,8 @@ impl DeployModel {
             let op = match take(&mut pos, 1)?[0] {
                 0 => DeployOp::Full,
                 1 => DeployOp::Dw,
+                2 if version >= 4 => DeployOp::DwSpatial,
+                2 => bail!("layer {lname}: spatial depthwise (op tag 2) needs qpkg v4, file is v{version}"),
                 other => bail!("layer {lname}: unknown op tag {other}"),
             };
             let relu = take(&mut pos, 1)?[0] != 0;
@@ -279,25 +345,63 @@ impl DeployModel {
             let w_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             let act_bits = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
             anyhow::ensure!((1..=8).contains(&w_bits), "layer {lname}: w_bits {w_bits}");
+            // v4 spatial metadata: the geometry must reproduce the layer's
+            // flat d_in/d_out exactly, or the engine's tap walk would index
+            // out of bounds on a serving worker instead of failing here
+            let spatial = if op == DeployOp::DwSpatial {
+                let kernel = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                let stride = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                let pad = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                let hw_in = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                let channels = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                anyhow::ensure!(kernel == 3, "layer {lname}: spatial kernel {kernel} (only 3 supported)");
+                anyhow::ensure!(stride >= 1 && stride <= hw_in.max(1), "layer {lname}: spatial stride {stride}");
+                anyhow::ensure!(pad < kernel, "layer {lname}: spatial pad {pad}");
+                anyhow::ensure!(
+                    hw_in >= 1 && hw_in <= 4096 && channels >= 1,
+                    "layer {lname}: spatial geometry {hw_in}x{hw_in}x{channels}"
+                );
+                anyhow::ensure!(
+                    hw_in + 2 * pad >= kernel,
+                    "layer {lname}: {hw_in}+2*{pad} input smaller than the {kernel}x{kernel} kernel"
+                );
+                let sp = DwSpatialMeta { kernel, stride, pad, hw_in, channels };
+                let hw_out = sp.hw_out();
+                anyhow::ensure!(
+                    d_in == hw_in * hw_in * channels,
+                    "layer {lname}: d_in {d_in} != {hw_in}x{hw_in}x{channels}"
+                );
+                anyhow::ensure!(
+                    d_out == hw_out * hw_out * channels,
+                    "layer {lname}: d_out {d_out} != {hw_out}x{hw_out}x{channels}"
+                );
+                Some(sp)
+            } else {
+                None
+            };
+            // per-channel scale-vector lengths: one per output column /
+            // input element for 1-D layers, one per channel for spatial
+            let w_ch = spatial.map(|sp| sp.channels).unwrap_or(d_out);
+            let a_ch = spatial.map(|sp| sp.channels).unwrap_or(d_in);
             // v1 carries one f32 weight scale, v2+ a counted scale array
-            // (1 = per-tensor, d_out = per-channel)
+            // (1 = per-tensor, w_ch = per-channel)
             let w_scales = if version >= 2 {
                 let n_scales = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
                 anyhow::ensure!(
-                    n_scales == 1 || n_scales == d_out,
-                    "layer {lname}: {n_scales} weight scales for {d_out} channels"
+                    n_scales == 1 || n_scales == w_ch,
+                    "layer {lname}: {n_scales} weight scales for {w_ch} channels"
                 );
                 get_f32s(buf, &mut pos, n_scales)?
             } else {
                 vec![f32::from_le_bytes(take(&mut pos, 4)?.try_into()?)]
             };
-            // v1/v2 carry one f32 activation scale, v3 a counted array
-            // (1 = per-tensor, d_in = per-input-channel)
+            // v1/v2 carry one f32 activation scale, v3+ a counted array
+            // (1 = per-tensor, a_ch = per-input-channel)
             let a_scales = if version >= 3 {
                 let n_scales = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
                 anyhow::ensure!(
-                    n_scales == 1 || n_scales == d_in,
-                    "layer {lname}: {n_scales} activation scales for {d_in} input channels"
+                    n_scales == 1 || n_scales == a_ch,
+                    "layer {lname}: {n_scales} activation scales for {a_ch} input channels"
                 );
                 get_f32s(buf, &mut pos, n_scales)?
             } else {
@@ -339,6 +443,10 @@ impl DeployModel {
             let want_codes = match op {
                 DeployOp::Full => d_in * d_out,
                 DeployOp::Dw => d_out * 3,
+                DeployOp::DwSpatial => {
+                    let sp = spatial.expect("spatial meta parsed above");
+                    sp.channels * sp.kernel * sp.kernel
+                }
             };
             anyhow::ensure!(
                 n_codes == want_codes,
@@ -366,6 +474,7 @@ impl DeployModel {
                 weights: Packed { bits: w_bits, len: n_codes, bytes },
                 bias,
                 requant,
+                spatial,
             });
         }
         if pos != buf.len() {
@@ -500,6 +609,7 @@ mod tests {
                         mult: vec![1.0, 0.5, 2.0],
                         add: vec![0.0, -0.1, 0.2],
                     }),
+                    spatial: None,
                 },
                 DeployLayer {
                     name: "head".into(),
@@ -515,6 +625,7 @@ mod tests {
                     weights: Packed::pack(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 4).unwrap(),
                     bias: Some(vec![0.1, 0.2, 0.3]),
                     requant: None,
+                    spatial: None,
                 },
             ],
         }
@@ -536,6 +647,93 @@ mod tests {
         m
     }
 
+    /// A v4 model with a true spatial depthwise interior layer:
+    /// stem [12, 12] -> dw 2x2x3 (stride 1, pad 1 -> 2x2x3) -> head [12, 3],
+    /// per-channel weight + activation scales of length C = 3 on the dw.
+    fn sample_spatial() -> DeployModel {
+        let sp = DwSpatialMeta { kernel: 3, stride: 1, pad: 1, hw_in: 2, channels: 3 };
+        let stem_codes: Vec<u32> = (0..144).map(|i| i % 8).collect();
+        let dw_codes: Vec<u32> = (0..27).map(|i| (i * 5) % 16).collect();
+        let head_codes: Vec<u32> = (0..36).map(|i| (i + 2) % 8).collect();
+        DeployModel {
+            name: "tiny2d".into(),
+            input_hw: 2,
+            num_classes: 3,
+            quant_a: true,
+            bits_w: 4,
+            bits_a: 4,
+            layers: vec![
+                DeployLayer {
+                    name: "stem".into(),
+                    op: DeployOp::Full,
+                    d_in: 12,
+                    d_out: 12,
+                    relu: true,
+                    aq: false,
+                    act_bits: 8,
+                    a_scales: vec![1.0],
+                    w_bits: 3,
+                    w_scales: vec![0.1],
+                    weights: Packed::pack(&stem_codes, 3).unwrap(),
+                    bias: None,
+                    requant: Some(Requant {
+                        mult: vec![1.0; 12],
+                        add: vec![0.0; 12],
+                    }),
+                    spatial: None,
+                },
+                DeployLayer {
+                    name: "b1.dw".into(),
+                    op: DeployOp::DwSpatial,
+                    d_in: 12,
+                    d_out: 12,
+                    relu: true,
+                    aq: true,
+                    act_bits: 4,
+                    a_scales: vec![0.05, 0.04, 0.06],
+                    w_bits: 4,
+                    w_scales: vec![0.2, 0.15, 0.3],
+                    weights: Packed::pack(&dw_codes, 4).unwrap(),
+                    bias: None,
+                    requant: Some(Requant {
+                        mult: (0..12).map(|i| 0.5 + 0.1 * i as f32).collect(),
+                        add: (0..12).map(|i| -0.2 + 0.05 * i as f32).collect(),
+                    }),
+                    spatial: Some(sp),
+                },
+                DeployLayer {
+                    name: "head".into(),
+                    op: DeployOp::Full,
+                    d_in: 12,
+                    d_out: 3,
+                    relu: false,
+                    aq: true,
+                    act_bits: 4,
+                    a_scales: vec![0.03],
+                    w_bits: 3,
+                    w_scales: vec![0.2, 0.15, 0.3],
+                    weights: Packed::pack(&head_codes, 3).unwrap(),
+                    bias: Some(vec![0.1, 0.2, 0.3]),
+                    requant: None,
+                    spatial: None,
+                },
+            ],
+        }
+    }
+
+    /// Serialize a non-spatial model in the **version 3** layout — byte
+    /// identical to v4 except the version word (v4 only added op tag 2
+    /// plus its spatial metadata block, which v3-era layers never carry).
+    fn v3_bytes(m: &DeployModel) -> Vec<u8> {
+        assert!(
+            m.layers.iter().all(|l| l.spatial.is_none()),
+            "v3 cannot carry spatial layers"
+        );
+        let mut buf = m.to_bytes();
+        buf[4..8].copy_from_slice(&3u32.to_le_bytes());
+        buf
+    }
+
     /// Serialize a model in the **version 1** layout (single f32 w_scale
     /// per layer) — the reader must keep accepting these.
     fn v1_bytes(m: &DeployModel) -> Vec<u8> {
@@ -554,6 +752,7 @@ mod tests {
             buf.push(match l.op {
                 DeployOp::Full => 0,
                 DeployOp::Dw => 1,
+                DeployOp::DwSpatial => 2,
             });
             buf.push(l.relu as u8);
             buf.push(l.aq as u8);
@@ -598,6 +797,7 @@ mod tests {
             buf.push(match l.op {
                 DeployOp::Full => 0,
                 DeployOp::Dw => 1,
+                DeployOp::DwSpatial => 2,
             });
             buf.push(l.relu as u8);
             buf.push(l.aq as u8);
@@ -660,14 +860,15 @@ mod tests {
         let m = sample();
         let old = v1_bytes(&m);
         let loaded = DeployModel::from_bytes(&old).unwrap();
-        // the in-memory upgrade is exactly the v3 model with one-element
-        // scale vectors — i.e. the same struct the v3 writer round-trips
+        // the in-memory upgrade is exactly the current model with
+        // one-element scale vectors — the same struct the writer
+        // round-trips
         assert_eq!(loaded, m);
         assert!(!loaded.layers[0].per_channel());
         assert!(!loaded.layers[1].per_channel_act());
         assert_eq!(loaded.layers[0].w_scales, vec![0.1]);
         assert_eq!(loaded.layers[1].a_scales, vec![0.05]);
-        // and re-saving silently upgrades the file to v3
+        // and re-saving silently upgrades the file to the current version
         let resaved = DeployModel::from_bytes(&loaded.to_bytes()).unwrap();
         assert_eq!(resaved, m);
     }
@@ -683,6 +884,70 @@ mod tests {
         assert_eq!(loaded.layers[1].a_scales, vec![0.05]);
         let resaved = DeployModel::from_bytes(&loaded.to_bytes()).unwrap();
         assert_eq!(resaved, m);
+    }
+
+    #[test]
+    fn qpkg_v4_roundtrips_spatial_depthwise() {
+        let m = sample_spatial();
+        let bytes = m.to_bytes();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 4);
+        let m2 = DeployModel::from_bytes(&bytes).unwrap();
+        assert_eq!(m, m2);
+        let dw = &m2.layers[1];
+        assert_eq!(dw.op, DeployOp::DwSpatial);
+        let sp = dw.spatial.unwrap();
+        assert_eq!((sp.kernel, sp.stride, sp.pad, sp.hw_in, sp.channels), (3, 1, 1, 2, 3));
+        assert_eq!(sp.hw_out(), 2);
+        assert_eq!(dw.scale_group(), 9);
+        assert_eq!(dw.w_channels(), 3);
+        assert_eq!(dw.act_channels(), 3);
+        // channel-last: output element o reads channel o % C scales
+        assert_eq!(dw.w_scale_of(4), 0.15);
+        assert_eq!(dw.a_scale_of(5), 0.06);
+    }
+
+    #[test]
+    fn v3_layout_upgrades_to_v4() {
+        // a v3 file (same layout, older version word) loads to the exact
+        // struct the v4 writer round-trips, and re-saving emits v4
+        let m = sample_per_channel_act();
+        let old = v3_bytes(&m);
+        assert_eq!(u32::from_le_bytes(old[4..8].try_into().unwrap()), 3);
+        let loaded = DeployModel::from_bytes(&old).unwrap();
+        assert_eq!(loaded, m);
+        let resaved_bytes = loaded.to_bytes();
+        assert_eq!(u32::from_le_bytes(resaved_bytes[4..8].try_into().unwrap()), 4);
+        assert_eq!(DeployModel::from_bytes(&resaved_bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn qpkg_rejects_spatial_in_pre_v4_files() {
+        // op tag 2 under a v3 version word must fail cleanly, not parse
+        let m = sample_spatial();
+        let mut bytes = m.to_bytes();
+        bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let err = DeployModel::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("needs qpkg v4"), "{err}");
+    }
+
+    #[test]
+    fn qpkg_rejects_bad_spatial_geometry() {
+        // d_in inconsistent with hw_in^2 * channels
+        let mut m = sample_spatial();
+        m.layers[1].spatial = Some(DwSpatialMeta { kernel: 3, stride: 1, pad: 1, hw_in: 3, channels: 3 });
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // non-3 kernel is refused
+        let mut m = sample_spatial();
+        m.layers[1].spatial = Some(DwSpatialMeta { kernel: 5, stride: 1, pad: 1, hw_in: 2, channels: 3 });
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // weight scale count must be 1 or channels (d_out = 12 is wrong)
+        let mut m = sample_spatial();
+        m.layers[1].w_scales = vec![0.1; 12];
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
+        // activation scale count must be 1 or channels
+        let mut m = sample_spatial();
+        m.layers[1].a_scales = vec![0.05; 12];
+        assert!(DeployModel::from_bytes(&m.to_bytes()).is_err());
     }
 
     #[test]

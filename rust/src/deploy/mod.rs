@@ -52,12 +52,13 @@
 //! channel) end-to-end: the exporter snaps each channel to its own grid,
 //! and the engine dequantizes / requantizes with the channel's scale in
 //! both execution paths. Activation scales are likewise per-tensor or
-//! **per-input-channel** (QPKG version 3, `n_a_scales = d_in`); layers
-//! with a per-tensor activation scale keep the exact i32 fast path
-//! (requant composed with the folded-BN affine), while per-channel
-//! activation layers replay the interpreter's exact f32 arithmetic (see
-//! [`engine`] — a per-input-channel scale cannot factor out of the dot
-//! product).
+//! **per-input-channel** (since QPKG version 3, `n_a_scales = d_in`);
+//! layers with a per-tensor activation scale keep the exact i32 fast
+//! path (requant composed with the folded-BN affine), while per-channel
+//! activation dense/1-D layers replay the interpreter's exact f32
+//! arithmetic (see [`engine`] — a per-input-channel scale cannot factor
+//! out of those dot products; spatial depthwise layers, whose receptive
+//! field stays inside one channel, keep the i32 path).
 //!
 //! Typical flow (also `examples/deploy_pipeline.rs` and the `export` /
 //! `serve` CLI subcommands):

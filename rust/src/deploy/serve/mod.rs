@@ -703,6 +703,7 @@ mod tests {
                 weights: Packed::pack(&codes, 3).unwrap(),
                 bias: None,
                 requant: Some(Requant { mult: vec![1.0; 3], add: vec![0.0; 3] }),
+                spatial: None,
             }],
         }
     }
@@ -758,6 +759,7 @@ mod tests {
             weights: Packed::pack(&[0u32; 21], 3).unwrap(),
             bias: None,
             requant: None,
+            spatial: None,
         });
         m
     }

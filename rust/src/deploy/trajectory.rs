@@ -11,9 +11,14 @@
 //!    packed-engine forward on a per-channel w4a4 export of a
 //!    depth-wise zoo model in three configurations: streaming decode,
 //!    prepared (decode-once), and prepared with `--threads` scoped
-//!    batch-row workers — plus the same three on a **QPKG v3
-//!    per-channel-activation** export (`engine_forward_pcact_*`, the
+//!    batch-row workers — plus the same three on a
+//!    **per-channel-activation** export (`engine_forward_pcact_*`, the
 //!    per-channel-default configuration's exact-f32 route) — plus the
+//!    **QPKG v4 spatial-depthwise** rows (`*_dw_spatial_*` kernels and
+//!    `engine_forward_dw2d_w4a4{,_i32}`: the efflite_2d export on the
+//!    f32-exact route and on the exact-integer path that spatial
+//!    depthwise layers keep even with per-channel activation scales) —
+//!    plus the
 //!    HTTP request codec (`http_json_lazy` vs `http_json_tree`: the
 //!    zero-copy field scan against a full `Json`-tree parse of the same
 //!    predict body),
@@ -34,15 +39,19 @@
 //!    and **fails the job** when any metric regresses by more than the
 //!    allowed fraction (default 25%).
 //!
-//! The baseline file is a conservative floor (committed numbers are
-//! deliberately below what a developer laptop measures) so runner
+//! The baseline file follows the `--emit-baseline` shape (throughput
+//! floors ~half a smoke run, latency ceilings ~double) so runner
 //! variance does not flap the gate while order-of-magnitude regressions
-//! still trip it; refresh it by committing a CI-produced
-//! `BENCH_deploy.json` when the trajectory legitimately shifts.
+//! still trip it. The committed values are conservative estimates of an
+//! ubuntu-latest runner's smoke numbers, not a copied measurement —
+//! refresh by committing the `BENCH_baseline_suggested.json` artifact
+//! of a representative CI run whenever the trajectory legitimately
+//! shifts.
 
 use super::engine::{
-    dw_f32, dw_i32, matmul_f32, matmul_i32, packed_dw, packed_dw_i32, packed_matmul,
-    packed_matmul_i32, Engine, EngineOpts,
+    dw_f32, dw_i32, dw_spatial_f32, dw_spatial_i32, matmul_f32, matmul_i32, packed_dw,
+    packed_dw_i32, packed_dw_spatial, packed_dw_spatial_i32, packed_matmul, packed_matmul_i32,
+    Engine, EngineOpts,
 };
 use super::export::{export_model, snap_and_pack_pc, ExportCfg};
 use crate::bench::bench_for;
@@ -62,7 +71,7 @@ pub const SCHEMA_VERSION: u32 = 1;
 
 /// Bench rows that must be present in every report: losing one (renamed
 /// bench, dead code path) would silently blind the perf gate to the
-/// decode-once engine — or, for the `pcact` rows, to the QPKG v3
+/// decode-once engine — or, for the `pcact` rows, to the
 /// per-channel-activation forward — so `bench-deploy` fails when any is
 /// missing.
 pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
@@ -70,10 +79,14 @@ pub const REQUIRED_PREPARED_ROWS: &[&str] = &[
     "prepared_matmul_i32",
     "prepared_dw_f32_pc",
     "prepared_dw_i32",
+    "prepared_dw_spatial_f32_pc",
+    "prepared_dw_spatial_i32",
     "engine_forward_pc_w4a4",
     "engine_forward_pc_w4a4_mt",
     "engine_forward_pcact_w4a4",
     "engine_forward_pcact_w4a4_mt",
+    "engine_forward_dw2d_w4a4",
+    "engine_forward_dw2d_w4a4_i32",
     "http_json_lazy",
 ];
 
@@ -143,6 +156,22 @@ const SPEEDUP_PAIRS: &[(&str, &str, &str)] = &[
         "engine_forward_pcact_w4a4",
         "engine_forward_pcact_w4a4_mt",
         "pc-act engine forward 1 -> N threads",
+    ),
+    (
+        "packed_dw_spatial_f32_pc",
+        "prepared_dw_spatial_f32_pc",
+        "dw-spatial f32-pc decode-once",
+    ),
+    ("packed_dw_spatial_i32", "prepared_dw_spatial_i32", "dw-spatial i32 decode-once"),
+    (
+        "engine_forward_dw2d_w4a4_streaming",
+        "engine_forward_dw2d_w4a4",
+        "dw2d engine forward decode-once",
+    ),
+    (
+        "engine_forward_dw2d_w4a4",
+        "engine_forward_dw2d_w4a4_i32",
+        "dw2d engine forward f32 -> exact-i32",
     ),
 ];
 
@@ -328,6 +357,45 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
     });
     push("prepared_dw_i32", items, s);
 
+    // --- packed spatial depthwise 3x3, per-channel scales (QPKG v4) ----
+    // a MobileNet-ish block shape: 8x8 spatial, 32 channels, same-pad
+    let (bs, hw_s, c_s, stride_s, pad_s) = (16usize, 8usize, 32usize, 1usize, 1usize);
+    let hw_so = (hw_s + 2 * pad_s - 3) / stride_s + 1;
+    let sp_scales: Vec<f32> = (0..c_s).map(|_| rng.uniform(0.01, 0.3)).collect();
+    let ws: Vec<f32> = (0..c_s * 9).map(|_| rng.normal() * 0.3).collect();
+    let xs: Vec<f32> = (0..bs * hw_s * hw_s * c_s).map(|_| rng.normal()).collect();
+    let (packed_s, grid_ns) = snap_and_pack_pc(&ws, &sp_scales, 9, 4)?;
+    let items = (bs * hw_so * hw_so * c_s * 9) as f64;
+    let s = bench_for("packed_dw_spatial_f32_pc", warmup, budget, || {
+        std::hint::black_box(packed_dw_spatial(
+            &xs, &packed_s, bs, hw_s, c_s, stride_s, pad_s, &sp_scales, grid_ns,
+        ));
+    });
+    push("packed_dw_spatial_f32_pc", items, s);
+    let mut wqs = Vec::new();
+    packed_s.dequant_pc_into(grid_ns, &sp_scales, 9, &mut wqs);
+    let mut out_fs = vec![0.0f32; bs * hw_so * hw_so * c_s];
+    let s = bench_for("prepared_dw_spatial_f32_pc", warmup, budget, || {
+        dw_spatial_f32(&xs, &wqs, bs, hw_s, c_s, stride_s, pad_s, &mut out_fs);
+        std::hint::black_box(&out_fs);
+    });
+    push("prepared_dw_spatial_f32_pc", items, s);
+    let qas: Vec<i32> = (0..bs * hw_s * hw_s * c_s).map(|_| rng.below(15) as i32).collect();
+    let s = bench_for("packed_dw_spatial_i32", warmup, budget, || {
+        std::hint::black_box(packed_dw_spatial_i32(
+            &qas, &packed_s, bs, hw_s, c_s, stride_s, pad_s, grid_ns,
+        ));
+    });
+    push("packed_dw_spatial_i32", items, s);
+    let mut wis = Vec::new();
+    packed_s.ints_into(grid_ns, &mut wis);
+    let mut out_is = vec![0i32; bs * hw_so * hw_so * c_s];
+    let s = bench_for("prepared_dw_spatial_i32", warmup, budget, || {
+        dw_spatial_i32(&qas, &wis, bs, hw_s, c_s, stride_s, pad_s, &mut out_is);
+        std::hint::black_box(&out_is);
+    });
+    push("prepared_dw_spatial_i32", items, s);
+
     // --- full engine forward on a per-channel w4a4 depth-wise export ---
     let nm = zoo_model("efflite").context("efflite in the zoo")?;
     let mut state = nm.initial_state();
@@ -354,11 +422,11 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
         push(row, batch as f64, s);
     }
 
-    // --- engine forward with per-channel activation scales (QPKG v3) ---
+    // --- engine forward with per-channel activation scales ---
     // the same export with [d_in] activation-scale vectors on every
-    // quantized-activation site: these layers run the exact f32 route
-    // (no per-output-channel integer requant exists for them), so this
-    // row tracks the v3 default configuration's real serving cost
+    // quantized-activation site: these dense/1-D layers run the exact
+    // f32 route (no per-output-channel integer requant exists for
+    // them), so this row tracks the per-channel default's serving cost
     for l in &nm.layers {
         if l.aq {
             let sa: Vec<f32> = (0..l.d_in).map(|_| rng.uniform(0.02, 0.2)).collect();
@@ -378,6 +446,43 @@ pub fn run_deploy_microbench(smoke: bool, threads: usize) -> Result<DeployBenchR
         let eng = Engine::with_opts(dm_pcact.clone(), true, opts);
         let s = bench_for(row, warmup, budget, || {
             std::hint::black_box(eng.forward_batch(&xe, batch).expect("engine fwd pcact"));
+        });
+        push(row, batch as f64, s);
+    }
+
+    // --- engine forward on a spatial-depthwise export (QPKG v4) -------
+    // efflite_2d with per-channel weight AND activation scales: the
+    // `engine_forward_dw2d_w4a4` row runs the f32-exact route, the
+    // `_i32` row the composed-requant exact-integer path that spatial
+    // depthwise layers keep even under per-channel activation grids
+    let nm2d = zoo_model("efflite_2d").context("efflite_2d in the zoo")?;
+    let mut state2d = nm2d.initial_state();
+    for l in &nm2d.layers {
+        let wc = l.w_channels();
+        let sc: Vec<f32> = (0..wc).map(|_| rng.uniform(0.02, 0.2)).collect();
+        state2d.insert(format!("params/{}.s", l.name), Tensor::new(vec![wc], sc));
+        if l.aq {
+            let ac = l.act_channels();
+            let sa: Vec<f32> = (0..ac).map(|_| rng.uniform(0.02, 0.2)).collect();
+            state2d.insert(format!("params/{}.as", l.name), Tensor::new(vec![ac], sa));
+        }
+    }
+    let (dm_2d, _) =
+        export_model(&nm2d, &state2d, &ExportCfg { bits_w: 4, bits_a: 4, quant_a: true })?;
+    let d_in2d = dm_2d.d_in();
+    let xe2d: Vec<f32> = (0..batch * d_in2d).map(|_| rng.normal().abs()).collect();
+    for (row, int_accum, opts) in [
+        (
+            "engine_forward_dw2d_w4a4_streaming",
+            false,
+            EngineOpts { prepared: false, ..Default::default() },
+        ),
+        ("engine_forward_dw2d_w4a4", false, EngineOpts::default()),
+        ("engine_forward_dw2d_w4a4_i32", true, EngineOpts::default()),
+    ] {
+        let eng = Engine::with_opts(dm_2d.clone(), int_accum, opts);
+        let s = bench_for(row, warmup, budget, || {
+            std::hint::black_box(eng.forward_batch(&xe2d, batch).expect("engine fwd dw2d"));
         });
         push(row, batch as f64, s);
     }
@@ -684,16 +789,23 @@ mod tests {
             "packed_matmul_i32",
             "packed_dw_f32_pc",
             "packed_dw_i32",
+            "packed_dw_spatial_f32_pc",
+            "packed_dw_spatial_i32",
             "prepared_matmul_f32_pc",
             "prepared_matmul_i32",
             "prepared_dw_f32_pc",
             "prepared_dw_i32",
+            "prepared_dw_spatial_f32_pc",
+            "prepared_dw_spatial_i32",
             "engine_forward_pc_w4a4_streaming",
             "engine_forward_pc_w4a4",
             "engine_forward_pc_w4a4_mt",
             "engine_forward_pcact_w4a4_streaming",
             "engine_forward_pcact_w4a4",
             "engine_forward_pcact_w4a4_mt",
+            "engine_forward_dw2d_w4a4_streaming",
+            "engine_forward_dw2d_w4a4",
+            "engine_forward_dw2d_w4a4_i32",
             "http_json_lazy",
             "http_json_tree",
         ] {

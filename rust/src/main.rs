@@ -74,7 +74,11 @@ USAGE: oscillations-qat <subcommand> [flags]
             per-layer compute time)
   toy       [--estimator ste|ewgs|dsq|psg|dampen] [--w-star 0.252] [--lr 0.01]
   table1 .. table8, fig1, fig2, fig34, fig5, fig6
-  suite     [--quick]       run everything in one process
+  table-spatial   reference rows for the 2-D spatial-depthwise zoo
+            (mbv2_2d / efflite_2d) under the per-channel default;
+            see RESULTS.md for the re-baseline protocol
+  suite     [--quick]       run everything in one process; writes the
+            run settings to results/PROVENANCE.txt
   bench-step / bench-kernels
   bench-deploy  [--smoke] [--threads N|auto] [--serve-json BENCH_serve.json]
                 [--out BENCH_deploy.json]
@@ -172,6 +176,7 @@ fn main() -> Result<()> {
         "table6" => drop(lab.table6()?),
         "table7" => drop(lab.table7()?),
         "table8" => drop(lab.table8()?),
+        "table-spatial" | "spatial" => drop(lab.table_spatial()?),
         "fig1" => drop(lab.fig1()?),
         "fig2" => drop(lab.fig2()?),
         "fig34" | "fig3" | "fig4" => drop(lab.fig34()?),
@@ -633,6 +638,20 @@ fn cmd_suite(lab: &Lab) -> Result<()> {
     lab.table6()?;
     lab.table7()?;
     lab.table8()?;
+    lab.table_spatial()?;
+    // Committed reference numbers (RESULTS.md) must carry the settings
+    // they were produced with; a suite run records its own.
+    let prov = format!(
+        "qat_steps={}\nfp_steps={}\nseeds={:?}\nbn_batches={}\nbackend={}\nelapsed_s={:.1}\n",
+        lab.qat_steps,
+        lab.fp_steps,
+        lab.seeds,
+        lab.bn_batches,
+        lab.rt.kind(),
+        t0.elapsed().as_secs_f64()
+    );
+    std::fs::create_dir_all(&lab.results_dir).ok();
+    std::fs::write(lab.results_dir.join("PROVENANCE.txt"), prov)?;
     eprintln!("[suite] everything regenerated in {:.1?}", t0.elapsed());
     Ok(())
 }

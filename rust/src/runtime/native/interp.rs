@@ -140,18 +140,21 @@ fn forward(
         let a_in = act;
 
         // --- input activation fake-quant (unsigned LSQ grid [0, p]) ---
-        // The scale tensor is a scalar (per-tensor LSQ) or a [d_in]
-        // vector (per-channel LSQ, one scale per input channel).
+        // The scale tensor is a scalar (per-tensor LSQ) or a vector of
+        // one scale per input channel — [d_in] for 1-D layers, [C] for
+        // spatial depthwise (channel-last layout makes `i % C` the
+        // channel of flat element `i`, so the same `i % n_scales`
+        // indexing covers both).
         let act_quantized = l.aq && h.aq_on;
         let act_p = if l.wq == "8bit" { 255.0 } else { h.p_a };
         let (act_scales, act_scale_shape) = if act_quantized {
             let as_t = req(sources, &format!("params/{}.as", l.name))?;
             anyhow::ensure!(
-                as_t.len() == 1 || as_t.len() == d_in,
+                as_t.len() == 1 || as_t.len() == l.act_channels(),
                 "layer {}: {} activation scales for {} input channels",
                 l.name,
                 as_t.len(),
-                d_in
+                l.act_channels()
             );
             let scales: Vec<f32> = as_t.data.iter().map(|&v| v.max(1e-8)).collect();
             (scales, as_t.shape.clone())
@@ -213,6 +216,17 @@ fn forward(
                         zrow[c] = acc;
                     }
                 }
+            }
+            LayerOp::DwSpatial => {
+                // true 2-D spatial depthwise 3x3 conv over the [H, W, C]
+                // channel-last block (kernels::dw_spatial_fwd, golden-
+                // tested against the jax oracle); the (ky, kx ascending)
+                // tap order is the bit-exactness contract shared with
+                // the deploy engine's scalar/blocked/streaming kernels.
+                let sp = l.spatial.expect("DwSpatial layer without SpatialSpec");
+                kernels::dw_spatial_fwd(
+                    &a_q, &w_eff, b, sp.hw_in, sp.channels, sp.stride, sp.pad, &mut z,
+                );
             }
         }
         if l.bias {
@@ -499,6 +513,25 @@ pub fn train_step(
                     }
                 }
             }
+            LayerOp::DwSpatial => {
+                // mirror of the forward tap walk (kernels::dw_spatial_bwd,
+                // golden-tested against the jax vjp): every (output, tap)
+                // pair contributes dz*a to the weight grad and dz*w to
+                // the input grad at the same flat index
+                let sp = l.spatial.expect("DwSpatial layer without SpatialSpec");
+                kernels::dw_spatial_bwd(
+                    &cache.a_q,
+                    &cache.w_eff,
+                    &dz,
+                    b,
+                    sp.hw_in,
+                    sp.channels,
+                    sp.stride,
+                    sp.pad,
+                    &mut dw_eff,
+                    &mut da_q,
+                );
+            }
         }
 
         // weight fake-quant backward (estimator) + dampening gradient;
@@ -730,18 +763,22 @@ pub fn bnstats_step(model: &NativeModel, sources: &[&NamedTensors]) -> Result<Na
             let absmean = cache.a_in.iter().map(|x| x.abs()).sum::<f32>() / n.max(1.0);
             out.insert(format!("{}.absmean", l.name), Tensor::scalar(absmean));
             // per-input-channel E|x| for per-channel activation-scale
-            // calibration (qat::to_per_channel_scales)
-            let mut pc = vec![0.0f32; l.d_in];
+            // calibration (qat::to_per_channel_scales). 1-D layers have
+            // one channel per flat input element ([d_in]); spatial
+            // depthwise aggregates over positions into [C] (flat element
+            // j belongs to channel j % C under the channel-last layout).
+            let nc = l.act_channels();
+            let mut pc = vec![0.0f32; nc];
             for bi in 0..b {
-                for (j, acc) in pc.iter_mut().enumerate() {
-                    *acc += cache.a_in[bi * l.d_in + j].abs();
+                for j in 0..l.d_in {
+                    pc[j % nc] += cache.a_in[bi * l.d_in + j].abs();
                 }
             }
-            let binv = 1.0 / (b as f32).max(1.0);
+            let inv = 1.0 / ((b * (l.d_in / nc)) as f32).max(1.0);
             for v in pc.iter_mut() {
-                *v *= binv;
+                *v *= inv;
             }
-            out.insert(format!("{}.absmean_pc", l.name), Tensor::new(vec![l.d_in], pc));
+            out.insert(format!("{}.absmean_pc", l.name), Tensor::new(vec![nc], pc));
         }
     }
     Ok(out)
@@ -857,6 +894,119 @@ mod tests {
         let mean = pc.data.iter().sum::<f32>() / d_in as f32;
         assert!((mean - am).abs() < 1e-4, "pc mean {mean} vs scalar {am}");
         assert!(pc.data.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn spatial_model_trains_and_emits_channel_calibration() {
+        let m = crate::runtime::native::model::zoo_model("mbv2_2d").unwrap();
+        let mut state = m.initial_state();
+        // per-channel activation scales of length C on the spatial dw
+        // layers ([d_in] on the 1-D ones), as to_per_channel_scales makes
+        for l in &m.layers {
+            if l.aq {
+                let nc = l.act_channels();
+                state.insert(format!("params/{}.as", l.name), Tensor::new(vec![nc], vec![0.5; nc]));
+                state.insert(format!("opt/{}.as", l.name), Tensor::zeros(&[nc]));
+            }
+        }
+        let mut hm = hyper_map(true);
+        hm.insert("hyper/aq_on", Tensor::scalar(1.0));
+        let n_keys = state.len();
+        let mut losses = vec![];
+        for i in 0..10 {
+            let ds = crate::data::Dataset::new(Default::default());
+            let bch = ds.train_batch(0, i);
+            let mut io = NamedTensors::new();
+            io.insert("batch/x", bch.x);
+            io.insert("batch/y", bch.y);
+            let out = train_step(&m, Estimator::Lsq, &[&state, &io, &hm]).unwrap();
+            let mut next = NamedTensors::new();
+            for (k, v) in out.map {
+                if let Some(rest) = k.strip_prefix("state/") {
+                    next.insert(rest.to_string(), v);
+                } else if k == "metrics/loss" {
+                    losses.push(v.item());
+                }
+            }
+            state = next;
+            assert_eq!(state.len(), n_keys, "state keys must round-trip");
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        let first: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+        let last: f32 = losses[losses.len() - 3..].iter().sum::<f32>() / 3.0;
+        assert!(last < first, "spatial loss should drop: {losses:?}");
+
+        // bnstats: spatial dw sites calibrate per channel ([C]), and the
+        // position-aggregated mean matches the scalar absmean
+        let io = batch(&m);
+        let out = bnstats_step(&m, &[&state, &io, &hm]).unwrap();
+        let l = m.layers.iter().find(|l| l.name == "b1.dw").unwrap();
+        let c = l.act_channels();
+        assert!(c < l.d_in);
+        let pc = out.get("b1.dw.absmean_pc").unwrap();
+        assert_eq!(pc.len(), c);
+        let am = out.get("b1.dw.absmean").unwrap().item();
+        let mean = pc.data.iter().sum::<f32>() / c as f32;
+        assert!((mean - am).abs() < 1e-4, "pc mean {mean} vs scalar {am}");
+    }
+
+    #[test]
+    fn spatial_forward_matches_hand_reference() {
+        // 2x2 input, 1 channel, stride 1, pad 1 ("same"): each output is
+        // a 3x3 window over the zero-padded 2x2 block. Checked against a
+        // hand-computed convolution.
+        use crate::runtime::native::model::{LayerSpec, SpatialSpec};
+        let sp = SpatialSpec { hw_in: 2, channels: 1, stride: 1, pad: 1 };
+        let l = LayerSpec {
+            name: "t.dw".into(),
+            op: LayerOp::DwSpatial,
+            kind: "dw",
+            d_in: sp.d_in(),
+            d_out: sp.d_out(),
+            bn: false,
+            relu: false,
+            wq: "low",
+            aq: false,
+            bias: false,
+            spatial: Some(sp),
+        };
+        let m = NativeModel {
+            name: "t".into(),
+            batch_size: 1,
+            num_classes: 4,
+            input_hw: 2,
+            layers: vec![l],
+        };
+        let mut state = NamedTensors::new();
+        // w = [[1,2,3],[4,5,6],[7,8,9]] (single channel)
+        state.insert(
+            "params/t.dw.w",
+            Tensor::new(vec![1, 3, 3], (1..=9).map(|v| v as f32).collect()),
+        );
+        state.insert("params/t.dw.s", Tensor::scalar(1.0));
+        state.insert("opt/t.dw.w", Tensor::zeros(&[1, 3, 3]));
+        state.insert("opt/t.dw.s", Tensor::scalar(0.0));
+        let mut io = NamedTensors::new();
+        // a = [[1,2],[3,4]]
+        io.insert("batch/x", Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]));
+        io.insert("batch/y", Tensor::new(vec![1, 4], vec![1.0, 0.0, 0.0, 0.0]));
+        let hm = hyper_map(false);
+        let out = eval_step(&m, &[&state, &io, &hm]).unwrap();
+        assert!(out.expect("loss").unwrap().item().is_finite());
+        // forward() is private to the module, so recover z through a
+        // train-free eval: logits are the raw conv output here
+        let fwd = forward(&m, &[&state, &io, &hm], &hyper(&[&state, &io, &hm]).unwrap(), BnMode::Batch).unwrap();
+        // y=0,x=0 window covers padded rows/cols: taps (1,1)..(2,2) ->
+        // w5*a11 + w6*a12 + w8*a21 + w9*a22 evaluated per position
+        let expect = [
+            5.0 * 1.0 + 6.0 * 2.0 + 8.0 * 3.0 + 9.0 * 4.0,
+            4.0 * 1.0 + 5.0 * 2.0 + 7.0 * 3.0 + 8.0 * 4.0,
+            2.0 * 1.0 + 3.0 * 2.0 + 5.0 * 3.0 + 6.0 * 4.0,
+            1.0 * 1.0 + 2.0 * 2.0 + 4.0 * 3.0 + 5.0 * 4.0,
+        ];
+        for (got, want) in fwd.logits.iter().zip(expect) {
+            assert!((got - want).abs() < 1e-5, "{:?} vs {expect:?}", fwd.logits);
+        }
     }
 
     #[test]

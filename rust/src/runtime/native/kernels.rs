@@ -116,6 +116,120 @@ pub fn dampening_loss(w: &[f32], s: f32, n: f32, p: f32) -> f32 {
     dampening_loss_pc(w, std::slice::from_ref(&s), 1, n, p)
 }
 
+/// Output side length of a 3x3 spatial conv: `(hw + 2*pad - 3)/stride + 1`.
+pub fn dw_spatial_out(hw_in: usize, stride: usize, pad: usize) -> usize {
+    (hw_in + 2 * pad - 3) / stride.max(1) + 1
+}
+
+/// True 2-D spatial depthwise 3x3 forward (ref.dw_spatial_ref): `a` is a
+/// `[bsz, hw_in*hw_in*channels]` channel-last activation block, `w` the
+/// effective `[channels, 3, 3]` taps, `z` the `[bsz, hw_out^2*channels]`
+/// output. Zero padding is realized by skipping out-of-bounds taps; taps
+/// accumulate in `(ky, kx)` ascending order per output element — the
+/// bit-exactness contract shared with the deploy engine's
+/// scalar/blocked/streaming kernels.
+pub fn dw_spatial_fwd(
+    a: &[f32],
+    w: &[f32],
+    bsz: usize,
+    hw_in: usize,
+    channels: usize,
+    stride: usize,
+    pad: usize,
+    z: &mut [f32],
+) {
+    let hw_out = dw_spatial_out(hw_in, stride, pad);
+    let d_in = hw_in * hw_in * channels;
+    let d_out = hw_out * hw_out * channels;
+    debug_assert!(a.len() == bsz * d_in && z.len() == bsz * d_out && w.len() == channels * 9);
+    for bi in 0..bsz {
+        let arow = &a[bi * d_in..(bi + 1) * d_in];
+        let zrow = &mut z[bi * d_out..(bi + 1) * d_out];
+        for yo in 0..hw_out {
+            for xo in 0..hw_out {
+                for c in 0..channels {
+                    let mut acc = 0.0f32;
+                    for ky in 0..3usize {
+                        let y = yo * stride + ky;
+                        if y < pad || y - pad >= hw_in {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let x = xo * stride + kx;
+                            if x < pad || x - pad >= hw_in {
+                                continue;
+                            }
+                            let j = ((y - pad) * hw_in + (x - pad)) * channels + c;
+                            acc += w[c * 9 + ky * 3 + kx] * arow[j];
+                        }
+                    }
+                    zrow[(yo * hw_out + xo) * channels + c] = acc;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of [`dw_spatial_fwd`]: mirror of the forward tap walk; every
+/// `(output, tap)` pair contributes `dz*a` to the weight grad and `dz*w`
+/// to the input grad at the same flat index. Accumulates (`+=`) into
+/// `dw` (`[channels, 3, 3]`) and `da` (`[bsz, hw_in^2*channels]`), so a
+/// caller can fold multiple calls into one gradient buffer.
+pub fn dw_spatial_bwd(
+    a: &[f32],
+    w: &[f32],
+    dz: &[f32],
+    bsz: usize,
+    hw_in: usize,
+    channels: usize,
+    stride: usize,
+    pad: usize,
+    dw: &mut [f32],
+    da: &mut [f32],
+) {
+    let hw_out = dw_spatial_out(hw_in, stride, pad);
+    let d_in = hw_in * hw_in * channels;
+    let d_out = hw_out * hw_out * channels;
+    debug_assert!(
+        a.len() == bsz * d_in
+            && da.len() == bsz * d_in
+            && dz.len() == bsz * d_out
+            && w.len() == channels * 9
+            && dw.len() == channels * 9
+    );
+    for bi in 0..bsz {
+        let arow = &a[bi * d_in..(bi + 1) * d_in];
+        let dzrow = &dz[bi * d_out..(bi + 1) * d_out];
+        let darow = &mut da[bi * d_in..(bi + 1) * d_in];
+        for yo in 0..hw_out {
+            for xo in 0..hw_out {
+                for c in 0..channels {
+                    let g = dzrow[(yo * hw_out + xo) * channels + c];
+                    if g == 0.0 {
+                        continue;
+                    }
+                    for ky in 0..3usize {
+                        let y = yo * stride + ky;
+                        if y < pad || y - pad >= hw_in {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let x = xo * stride + kx;
+                            if x < pad || x - pad >= hw_in {
+                                continue;
+                            }
+                            let j = ((y - pad) * hw_in + (x - pad)) * channels + c;
+                            let wi = c * 9 + ky * 3 + kx;
+                            dw[wi] += g * arow[j];
+                            darow[j] += g * w[wi];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Algorithm-1 oscillation state for one weight tensor (all arrays share
 /// the tensor's length; masks/ints are stored as floats, matching the
 /// single-dtype HLO graphs).

@@ -7,7 +7,10 @@
 //! Layer inventory per model (names follow `python/compile/arch.py` style):
 //! * `stem`   — full matmul `768 -> C`, BN + ReLU, 8-bit weights
 //! * `b{i}.dw` — depthwise circular 3-tap channel conv (`[C, 3]` weights,
-//!   3 weights per channel — the oscillation hot spot), BN + ReLU, low-bit
+//!   3 weights per channel — the oscillation hot spot), BN + ReLU, low-bit.
+//!   In the `*_2d` zoo members this is a true spatial 3x3 depthwise conv
+//!   (`[C, 3, 3]` weights, stride/pad over an `[H, W, C]` channel-last
+//!   block — 9 weights per channel, the paper's actual op shape)
 //! * `b{i}.pw` — pointwise matmul `C -> C`, BN + ReLU, low-bit
 //! * `l{i}.a/.b` — plain full matmuls (the ResNet-style no-depthwise zoo
 //!   member), BN + ReLU, low-bit
@@ -31,6 +34,44 @@ pub enum LayerOp {
     Full,
     /// circular depthwise 3-tap channel conv, weights `[C, 3]`
     Dw,
+    /// true 2-D spatial depthwise 3x3 conv over an `[H, W, C]`
+    /// channel-last block, weights `[C, 3, 3]`
+    DwSpatial,
+}
+
+/// Spatial geometry for [`LayerOp::DwSpatial`] layers. Activations are
+/// flattened channel-last (`idx = (y * W + x) * C + c`), so `idx % C == c`
+/// — per-channel activation scales of length `C` compose with the same
+/// `i % n_scales` indexing every per-channel kernel already uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpatialSpec {
+    /// square input side: activations are `hw_in * hw_in * channels` flat
+    pub hw_in: usize,
+    pub channels: usize,
+    pub stride: usize,
+    /// zero padding on every spatial edge
+    pub pad: usize,
+}
+
+impl SpatialSpec {
+    /// Fixed 3x3 kernel (the paper's depthwise-separable building block).
+    pub const KERNEL: usize = 3;
+
+    /// Output side length under stride/pad.
+    pub fn hw_out(&self) -> usize {
+        (self.hw_in + 2 * self.pad - Self::KERNEL) / self.stride + 1
+    }
+
+    /// Flat input activation length.
+    pub fn d_in(&self) -> usize {
+        self.hw_in * self.hw_in * self.channels
+    }
+
+    /// Flat output activation length.
+    pub fn d_out(&self) -> usize {
+        let h = self.hw_out();
+        h * h * self.channels
+    }
 }
 
 /// One native layer specification.
@@ -49,6 +90,8 @@ pub struct LayerSpec {
     /// whether this layer's input activations are quantized (LSQ, unsigned)
     pub aq: bool,
     pub bias: bool,
+    /// geometry for [`LayerOp::DwSpatial`]; `None` for 1-D ops
+    pub spatial: Option<SpatialSpec>,
 }
 
 impl LayerSpec {
@@ -57,16 +100,41 @@ impl LayerSpec {
         match self.op {
             LayerOp::Full => vec![self.d_in, self.d_out],
             LayerOp::Dw => vec![self.d_out, 3],
+            LayerOp::DwSpatial => {
+                let sp = self.spatial.expect("DwSpatial layer without SpatialSpec");
+                vec![sp.channels, SpatialSpec::KERNEL, SpatialSpec::KERNEL]
+            }
         }
     }
 
     /// Per-channel scale layout `group` (see `kernels::scale_index`):
     /// dense weights carry one scale per output column (`group = 1`),
-    /// depthwise `[C, 3]` rows one scale per channel row (`group = 3`).
+    /// depthwise `[C, 3]` rows one scale per channel row (`group = 3`),
+    /// spatial depthwise `[C, 3, 3]` planes one per channel (`group = 9`).
     pub fn scale_group(&self) -> usize {
         match self.op {
             LayerOp::Full => 1,
             LayerOp::Dw => 3,
+            LayerOp::DwSpatial => SpatialSpec::KERNEL * SpatialSpec::KERNEL,
+        }
+    }
+
+    /// Number of weight-scale channels in the per-channel layout: one per
+    /// output column for dense layers, one per channel for depthwise.
+    pub fn w_channels(&self) -> usize {
+        match self.op {
+            LayerOp::Full | LayerOp::Dw => self.d_out,
+            LayerOp::DwSpatial => self.spatial.expect("DwSpatial layer without SpatialSpec").channels,
+        }
+    }
+
+    /// Number of activation-scale channels admitted on this layer's input.
+    /// A spatial depthwise reads `[H, W, C]` channel-last, so its input
+    /// carries `C` scale channels, not `d_in`.
+    pub fn act_channels(&self) -> usize {
+        match self.op {
+            LayerOp::DwSpatial => self.spatial.expect("DwSpatial layer without SpatialSpec").channels,
+            _ => self.d_in,
         }
     }
 }
@@ -93,6 +161,7 @@ fn full(name: &str, kind: &'static str, d_in: usize, d_out: usize, wq: &'static 
         wq,
         aq,
         bias: false,
+        spatial: None,
     }
 }
 
@@ -114,6 +183,7 @@ fn separable(name: &str, width: usize, blocks: usize, dw: bool) -> NativeModel {
                 wq: "low",
                 aq: true,
                 bias: false,
+                spatial: None,
             });
             layers.push(full(&format!("b{b}.pw"), "pw", width, width, "low", true));
         } else {
@@ -135,13 +205,69 @@ fn separable(name: &str, width: usize, blocks: usize, dw: bool) -> NativeModel {
     }
 }
 
-/// The four models the experiment drivers reference.
+/// Build one 2-D zoo member: MobileNet-style blocks with true spatial
+/// 3x3 depthwise convs over `[hw, hw, channels]` channel-last blocks.
+/// `stride2_at` marks the block whose depthwise stage halves the side
+/// (stride 2, pad 1); all other blocks are stride 1 / pad 1 ("same").
+fn separable2d(
+    name: &str,
+    channels: usize,
+    hw: usize,
+    blocks: usize,
+    stride2_at: Option<usize>,
+) -> NativeModel {
+    let d_in0 = 16 * 16 * 3;
+    let mut side = hw;
+    let mut layers = vec![full("stem", "full", d_in0, side * side * channels, "8bit", false)];
+    for b in 1..=blocks {
+        let stride = if stride2_at == Some(b) { 2 } else { 1 };
+        let sp = SpatialSpec {
+            hw_in: side,
+            channels,
+            stride,
+            pad: 1,
+        };
+        let (d_in, d_out) = (sp.d_in(), sp.d_out());
+        layers.push(LayerSpec {
+            name: format!("b{b}.dw"),
+            op: LayerOp::DwSpatial,
+            kind: "dw",
+            d_in,
+            d_out,
+            bn: true,
+            relu: true,
+            wq: "low",
+            aq: true,
+            bias: false,
+            spatial: Some(sp),
+        });
+        side = sp.hw_out();
+        layers.push(full(&format!("b{b}.pw"), "pw", d_out, d_out, "low", true));
+    }
+    let mut head = full("head", "full", side * side * channels, 10, "8bit", true);
+    head.bn = false;
+    head.relu = false;
+    head.bias = true;
+    layers.push(head);
+    NativeModel {
+        name: name.into(),
+        batch_size: 16,
+        num_classes: 10,
+        input_hw: 16,
+        layers,
+    }
+}
+
+/// The models the experiment drivers reference: the original 1-D zoo
+/// (kept verbatim for fixture/ckpt continuity) plus the spatial members.
 pub fn zoo() -> Vec<NativeModel> {
     vec![
         separable("mbv2", 48, 3, true),
         separable("resnet18", 64, 2, false),
         separable("mbv3", 40, 2, true),
         separable("efflite", 32, 2, true),
+        separable2d("mbv2_2d", 12, 4, 3, None),
+        separable2d("efflite_2d", 8, 4, 2, Some(2)),
     ]
 }
 
@@ -187,6 +313,22 @@ impl NativeModel {
                         v.push(rng.uniform(-0.35, 0.35));
                         v.push(rng.uniform(0.6, 1.4));
                         v.push(rng.uniform(-0.35, 0.35));
+                    }
+                    v
+                }
+                LayerOp::DwSpatial => {
+                    // same near-identity idea in 2-D: strong center tap of
+                    // each 3x3 plane, noisy surround taps
+                    let channels = l.spatial.expect("DwSpatial layer without SpatialSpec").channels;
+                    let mut v = Vec::with_capacity(channels * 9);
+                    for _ in 0..channels {
+                        for t in 0..9 {
+                            if t == 4 {
+                                v.push(rng.uniform(0.6, 1.4));
+                            } else {
+                                v.push(rng.uniform(-0.35, 0.35));
+                            }
+                        }
                     }
                     v
                 }
@@ -242,7 +384,9 @@ impl NativeModel {
                     kind: l.kind.to_string(),
                     weight: format!("{}.w", l.name),
                     bn: l.bn,
-                    cout: l.d_out,
+                    // per-channel scale-channel count: channels for spatial
+                    // depthwise (weights are [C, 3, 3]), d_out otherwise
+                    cout: l.w_channels(),
                     wq: l.wq.to_string(),
                 },
             );
@@ -293,6 +437,53 @@ mod tests {
                 assert!(!info.depthwise().is_empty());
             }
         }
+    }
+
+    #[test]
+    fn spatial_zoo_members_have_consistent_geometry() {
+        for name in ["mbv2_2d", "efflite_2d"] {
+            let m = zoo_model(name).unwrap();
+            let mut d_prev = None;
+            let mut saw_spatial = false;
+            for l in &m.layers {
+                if let Some(prev) = d_prev {
+                    assert_eq!(l.d_in, prev, "{name}/{}: d_in breaks the chain", l.name);
+                }
+                d_prev = Some(l.d_out);
+                if l.op == LayerOp::DwSpatial {
+                    saw_spatial = true;
+                    let sp = l.spatial.unwrap();
+                    assert_eq!(l.d_in, sp.d_in());
+                    assert_eq!(l.d_out, sp.d_out());
+                    assert_eq!(l.w_shape(), vec![sp.channels, 3, 3]);
+                    assert_eq!(l.scale_group(), 9);
+                    assert_eq!(l.w_channels(), sp.channels);
+                    assert_eq!(l.act_channels(), sp.channels);
+                    // channel-last flat layout: positions divide cleanly
+                    assert_eq!(l.d_in % sp.channels, 0);
+                    assert_eq!(l.d_out % sp.channels, 0);
+                } else {
+                    assert!(l.spatial.is_none());
+                }
+            }
+            assert!(saw_spatial, "{name} has no spatial depthwise layer");
+            let w = m.initial_state();
+            let sp_layer = m.layers.iter().find(|l| l.op == LayerOp::DwSpatial).unwrap();
+            let t = w.get(&format!("params/{}.w", sp_layer.name)).unwrap();
+            assert_eq!(t.shape, sp_layer.w_shape());
+            // strong center taps
+            let c = sp_layer.spatial.unwrap().channels;
+            for ch in 0..c {
+                assert!(t.data[ch * 9 + 4] >= 0.6, "{name} center tap too weak");
+            }
+        }
+        // efflite_2d block 2 downsamples 4x4 -> 2x2
+        let m = zoo_model("efflite_2d").unwrap();
+        let l = m.layers.iter().find(|l| l.name == "b2.dw").unwrap();
+        let sp = l.spatial.unwrap();
+        assert_eq!(sp.stride, 2);
+        assert_eq!(sp.hw_out(), 2);
+        assert_eq!(l.d_out, 2 * 2 * 8);
     }
 
     #[test]

@@ -18,6 +18,9 @@ use oscillations_qat::state::NamedTensors;
 use std::sync::Arc;
 
 const MODEL: &str = "efflite";
+/// The spatial-depthwise acceptance model: true 2-D `[C, 3, 3]` convs
+/// over channel-last blocks, including a stride-2 downsampling stage.
+const MODEL_2D: &str = "efflite_2d";
 const BITS: u32 = 4;
 const D_IN: usize = 16 * 16 * 3;
 
@@ -31,20 +34,20 @@ fn small_data() -> DataCfg {
 /// LSQ weight scale per output channel *and* one learned activation
 /// scale per input channel (the paper's depth-wise operating point);
 /// without it, the `--per-tensor` legacy single-scale quantizers.
-fn trained_state(be: &NativeBackend, per_channel: bool) -> NamedTensors {
+fn trained_state(be: &NativeBackend, model: &str, per_channel: bool) -> NamedTensors {
     let data = small_data();
     let trainer = Trainer::new(be);
-    let mut fp = RunCfg::fp(MODEL, 60, 0.02, 0);
+    let mut fp = RunCfg::fp(model, 60, 0.02, 0);
     fp.data = data.clone();
-    let run = trainer.train(be.initial_state(MODEL).unwrap(), &fp).unwrap();
+    let run = trainer.train(be.initial_state(model).unwrap(), &fp).unwrap();
     let mut state = run.state;
 
-    qat::prepare_qat(be, &mut state, MODEL, BITS, BITS, &data, 0).unwrap();
+    qat::prepare_qat(be, &mut state, model, BITS, BITS, &data, 0).unwrap();
     if per_channel {
-        let n = qat::to_per_channel_scales(be, &mut state, MODEL, BITS, BITS, &data, 0).unwrap();
+        let n = qat::to_per_channel_scales(be, &mut state, model, BITS, BITS, &data, 0).unwrap();
         assert!(n >= 5, "expected every weight tensor converted, got {n}");
     }
-    let mut cfg = RunCfg::qat(MODEL, 80, BITS, 0);
+    let mut cfg = RunCfg::qat(model, 80, BITS, 0);
     cfg.quant_a = true;
     cfg.data = data.clone();
     cfg.f_th = Schedule::Cosine { from: 0.04, to: 0.01 };
@@ -53,14 +56,18 @@ fn trained_state(be: &NativeBackend, per_channel: bool) -> NamedTensors {
     let mut state = run.state;
 
     let q = EvalQuant::full(BITS);
-    bn_restim::reestimate(be, &mut state, MODEL, q, &data, 0, 8).unwrap();
+    bn_restim::reestimate(be, &mut state, model, q, &data, 0, 8).unwrap();
     state
 }
 
 /// Per-sample top-1 predictions of the simulated fake-quant eval path,
 /// plus the flattened per-sample inputs.
-fn reference_preds(be: &NativeBackend, state: &NamedTensors) -> (Vec<usize>, Vec<Vec<f32>>) {
-    let info = be.index().model(MODEL).unwrap().clone();
+fn reference_preds(
+    be: &NativeBackend,
+    model: &str,
+    state: &NamedTensors,
+) -> (Vec<usize>, Vec<Vec<f32>>) {
+    let info = be.index().model(model).unwrap().clone();
     let eval_name = info.artifacts["eval"].clone();
     let hyper = EvalQuant::full(BITS).hyper();
     let ds = Dataset::new(small_data());
@@ -120,8 +127,8 @@ fn predict_all(eng: &Engine, inputs: &[Vec<f32>]) -> Vec<usize> {
 #[test]
 fn deploy_roundtrip_suite() {
     let be = NativeBackend::new();
-    let state = trained_state(&be, false);
-    let (ref_preds, inputs) = reference_preds(&be, &state);
+    let state = trained_state(&be, MODEL, false);
+    let (ref_preds, inputs) = reference_preds(&be, MODEL, &state);
     assert_eq!(ref_preds.len(), 64);
 
     // ---- export with BN folding + grid snapping -----------------------
@@ -231,15 +238,15 @@ fn deploy_roundtrip_suite() {
 }
 
 /// The per-channel acceptance criterion: a w4a4 QAT run of a depth-wise
-/// zoo model in the **v3 default regime** — per-channel weight scales
-/// *and* per-channel activation scales — exports through QPKG v3, the
-/// file round-trips, and both engine paths (f32-bit-exact and
+/// zoo model in the **per-channel default regime** — per-channel weight
+/// scales *and* per-channel activation scales — exports through QPKG,
+/// the file round-trips, and both engine paths (f32-bit-exact and
 /// i32-accumulation, standalone and behind the batched server) reproduce
 /// the fake-quant eval path's top-1 predictions exactly.
 #[test]
 fn per_channel_deploy_roundtrip_suite() {
     let be = NativeBackend::new();
-    let state = trained_state(&be, true);
+    let state = trained_state(&be, MODEL, true);
 
     // the trained state really carries per-channel scale vectors, for
     // weights ([d_out]) and for activation sites ([d_in])
@@ -253,7 +260,7 @@ fn per_channel_deploy_roundtrip_suite() {
         }
     }
 
-    let (ref_preds, inputs) = reference_preds(&be, &state);
+    let (ref_preds, inputs) = reference_preds(&be, MODEL, &state);
     assert_eq!(ref_preds.len(), 64);
 
     let cfg = ExportCfg { bits_w: BITS, bits_a: BITS, quant_a: true };
@@ -269,7 +276,7 @@ fn per_channel_deploy_roundtrip_suite() {
         }
     }
 
-    // ---- QPKG v3 file round-trip --------------------------------------
+    // ---- QPKG file round-trip -----------------------------------------
     let dir = std::env::temp_dir().join(format!("qat_deploy_pc_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("model_pc.qpkg");
@@ -277,8 +284,8 @@ fn per_channel_deploy_roundtrip_suite() {
     let raw = std::fs::read(&path).unwrap();
     assert_eq!(
         u32::from_le_bytes(raw[4..8].try_into().unwrap()),
-        3,
-        "per-channel-activation exports are version 3 on disk"
+        4,
+        "exports are version 4 on disk"
     );
     let dm2 = DeployModel::read_qpkg(&path).unwrap();
     assert_eq!(dm, dm2);
@@ -330,7 +337,128 @@ fn per_channel_deploy_roundtrip_suite() {
         "served per-channel predictions disagree with the fake-quant eval path"
     );
     eprintln!(
-        "[deploy] {MODEL} w{BITS}a{BITS} per-channel (v3 weights+activations): \
+        "[deploy] {MODEL} w{BITS}a{BITS} per-channel (weights+activations): \
+         100% top-1 agreement over {} samples; {}",
+        ref_preds.len(),
+        sreport.summary()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The spatial-depthwise acceptance criterion (QPKG v4): a w4a4
+/// per-channel QAT run of a **2-D zoo model** — true `[C, 3, 3]` spatial
+/// depthwise convs over channel-last blocks, including a stride-2
+/// downsampling stage — exports with BN folding into a version-4 QPKG,
+/// the file round-trips with its spatial metadata intact, and every
+/// engine mode (f32-bit-exact, i32-accumulation prepared / streaming /
+/// threaded, and the batched server) reproduces the fake-quant eval
+/// path's top-1 predictions exactly. The dw layers carry per-channel
+/// activation scales, so the i32 route runs the spatial exact-integer
+/// fast path rather than falling back to f32.
+#[test]
+fn spatial_deploy_roundtrip_suite() {
+    let be = NativeBackend::new();
+    let state = trained_state(&be, MODEL_2D, true);
+
+    // per-channel scale vectors sized by the layer's channel layout:
+    // [w_channels] for weights (C for spatial dw), [act_channels] for
+    // quantized-activation inputs
+    let nm = zoo_model(MODEL_2D).unwrap();
+    for l in &nm.layers {
+        let s = state.get(&format!("params/{}.s", l.name)).unwrap();
+        assert_eq!(s.len(), l.w_channels(), "{} weight scale count", l.name);
+        if l.aq {
+            let sa = state.get(&format!("params/{}.as", l.name)).unwrap();
+            assert_eq!(sa.len(), l.act_channels(), "{} act scale count", l.name);
+        }
+    }
+
+    let (ref_preds, inputs) = reference_preds(&be, MODEL_2D, &state);
+    assert_eq!(ref_preds.len(), 64);
+
+    let cfg = ExportCfg { bits_w: BITS, bits_a: BITS, quant_a: true };
+    let (dm, report) = export_model(&nm, &state, &cfg).unwrap();
+    assert!(report.frozen_verified > 0, "freezing should engage on spatial dw: {report:?}");
+    assert!(report.max_offgrid <= 0.5 + 1e-6, "{report:?}");
+
+    // the export preserved the spatial geometry and per-channel scales
+    let dws: Vec<_> = dm
+        .layers
+        .iter()
+        .filter(|l| l.op == oscillations_qat::deploy::format::DeployOp::DwSpatial)
+        .collect();
+    assert_eq!(dws.len(), 2, "efflite_2d has two spatial dw stages");
+    for dl in &dws {
+        let sp = dl.spatial.expect("spatial metadata must survive export");
+        assert_eq!(sp.kernel, 3);
+        assert_eq!(dl.d_in, sp.hw_in * sp.hw_in * sp.channels);
+        assert_eq!(dl.d_out, sp.hw_out() * sp.hw_out() * sp.channels);
+        assert_eq!(dl.scale_group(), 9);
+        assert_eq!(dl.w_scales.len(), sp.channels, "{} weight scales", dl.name);
+        assert_eq!(dl.a_scales.len(), sp.channels, "{} act scales", dl.name);
+        assert!(dl.per_channel_act(), "{} must take the exact-i32 spatial path", dl.name);
+        assert!(dl.requant.is_some(), "{} lost its BN fold", dl.name);
+    }
+    assert_eq!(dws[1].spatial.unwrap().stride, 2, "b2.dw downsamples");
+
+    // ---- QPKG v4 file round-trip --------------------------------------
+    let dir = std::env::temp_dir().join(format!("qat_deploy_2d_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model_2d.qpkg");
+    dm.write_qpkg(&path).unwrap();
+    let raw = std::fs::read(&path).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(raw[4..8].try_into().unwrap()),
+        4,
+        "spatial exports are version 4 on disk"
+    );
+    let dm2 = DeployModel::read_qpkg(&path).unwrap();
+    assert_eq!(dm, dm2);
+
+    let file_bytes = std::fs::metadata(&path).unwrap().len() as f64;
+    let f32_bytes = dm.f32_weight_bytes() as f64;
+    let eps_bytes = (dm.aux_bytes() + 64 * dm.layers.len() + 256) as f64;
+    assert!(file_bytes <= f32_bytes * (8.0 / 32.0) + eps_bytes);
+
+    // ---- every engine mode: 100% top-1 agreement ----------------------
+    let exact = Engine::with_mode(dm.clone(), false);
+    let mut exact_preds = vec![];
+    for x in &inputs {
+        exact_preds.push(exact.predict_batch(x, 1).unwrap()[0]);
+    }
+    assert_eq!(
+        agreement(&exact_preds, &ref_preds),
+        1.0,
+        "spatial f32-exact engine disagrees with the fake-quant eval path"
+    );
+
+    let int = Engine::with_opts(dm2.clone(), true, engine_opts());
+    let int_preds = predict_all(&int, &inputs);
+    assert_eq!(
+        agreement(&int_preds, &ref_preds),
+        1.0,
+        "spatial integer engine disagrees with the fake-quant eval path"
+    );
+
+    for (label, opts) in [
+        ("streaming", EngineOpts { prepared: false, ..Default::default() }),
+        ("threads=2", EngineOpts { threads: 2, ..Default::default() }),
+    ] {
+        let eng = Engine::with_opts(dm2.clone(), true, opts);
+        let preds = predict_all(&eng, &inputs);
+        assert_eq!(preds, int_preds, "spatial {label} engine drifted");
+    }
+
+    // ---- batched serving ----------------------------------------------
+    let scfg = ServeCfg { workers: 4, max_batch: 8, queue_cap: 64 };
+    let sreport = bench_serve(Arc::new(int), &scfg, &inputs).unwrap();
+    assert_eq!(
+        agreement(&sreport.preds, &ref_preds),
+        1.0,
+        "served spatial predictions disagree with the fake-quant eval path"
+    );
+    eprintln!(
+        "[deploy] {MODEL_2D} w{BITS}a{BITS} spatial per-channel (qpkg v4): \
          100% top-1 agreement over {} samples; {}",
         ref_preds.len(),
         sreport.summary()

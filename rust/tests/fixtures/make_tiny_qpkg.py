@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Regenerate the committed QPKG compatibility fixtures.
+
+Writes the byte-exact historic serializations of the "tiny" two-layer
+model the `qpkg_compat.rs` suite pins down:
+
+* ``tiny_v1.qpkg`` — single f32 w_scale + single f32 a_scale per layer
+* ``tiny_v2.qpkg`` — counted w_scales array + single f32 a_scale
+* ``tiny_v3.qpkg`` — counted w_scales *and* a_scales arrays (the v4
+  layout minus the spatial-depthwise op tag / metadata block)
+
+The layouts mirror ``rust/src/deploy/format.rs`` (all little-endian,
+LSB-first bit-packed weight codes). The script refuses to overwrite a
+committed fixture whose bytes differ from what it would regenerate, so
+the v1/v2 fixtures double as a check that this writer replicates the
+Rust serializer exactly.
+"""
+
+import struct
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+
+def pack_codes(codes, bits):
+    """LSB-first bitstream, `ceil(len * bits / 8)` bytes (Packed::pack)."""
+    out = bytearray((len(codes) * bits + 7) // 8)
+    for i, c in enumerate(codes):
+        assert 0 <= c < (1 << bits), (c, bits)
+        bit = i * bits
+        byte, shift = divmod(bit, 8)
+        out[byte] |= (c << shift) & 0xFF
+        if shift + bits > 8:
+            out[byte + 1] |= c >> (8 - shift)
+    return bytes(out)
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def f32s(vs):
+    return b"".join(struct.pack("<f", v) for v in vs)
+
+
+def name(s):
+    b = s.encode()
+    return u16(len(b)) + b
+
+
+# the "tiny" model: stem [12, 3] dense -> head depthwise 3-tap, 3 wide
+STEM = dict(
+    name="stem", op=0, relu=1, aq=0, d_in=12, d_out=3, w_bits=3, act_bits=8,
+    w_scales=[0.1, 0.07, 0.2], a_scales=[1.0],
+    bias=None, requant=([1.0, 0.5, 2.0], [0.0, -0.1, 0.2]),
+    codes=[i % 8 for i in range(36)],
+)
+HEAD = dict(
+    name="head", op=1, relu=0, aq=1, d_in=3, d_out=3, w_bits=4, act_bits=3,
+    w_scales=[0.2, 0.15, 0.3], a_scales=[0.05, 0.04, 0.06],
+    bias=[0.1, 0.2, 0.3], requant=None,
+    codes=list(range(1, 10)),
+)
+
+
+def layer_bytes(l, version):
+    buf = bytearray()
+    buf += name(l["name"])
+    buf += bytes([l["op"], l["relu"], l["aq"],
+                  l["bias"] is not None, l["requant"] is not None])
+    buf += u32(l["d_in"]) + u32(l["d_out"]) + u32(l["w_bits"]) + u32(l["act_bits"])
+    if version >= 2:
+        buf += u32(len(l["w_scales"])) + f32s(l["w_scales"])
+    else:
+        buf += f32s(l["w_scales"][:1])
+    if version >= 3:
+        buf += u32(len(l["a_scales"])) + f32s(l["a_scales"])
+    else:
+        buf += f32s(l["a_scales"][:1])
+    if l["bias"] is not None:
+        buf += f32s(l["bias"])
+    if l["requant"] is not None:
+        mult, add = l["requant"]
+        buf += f32s(mult) + f32s(add)
+    packed = pack_codes(l["codes"], l["w_bits"])
+    buf += u32(len(l["codes"])) + u32(len(packed)) + packed
+    return bytes(buf)
+
+
+def tiny_bytes(version):
+    # v1 layers carry only per-tensor scales; drop the per-channel
+    # payloads so the upgraded struct matches what v1 could express
+    layers = [STEM, HEAD]
+    if version == 1:
+        layers = [{**l, "w_scales": ([0.1] if l is STEM else [0.2]),
+                   "a_scales": l["a_scales"][:1]} for l in layers]
+    elif version == 2:
+        layers = [{**l, "a_scales": l["a_scales"][:1]} for l in layers]
+    buf = bytearray()
+    buf += b"QPKG" + u32(version)
+    buf += name("tiny")
+    buf += u32(2) + u32(3)        # input_hw, num_classes
+    buf += bytes([1])             # quant_a
+    buf += u32(3) + u32(3)        # bits_w, bits_a
+    buf += u32(len(layers))
+    for l in layers:
+        buf += layer_bytes(l, version)
+    return bytes(buf)
+
+
+def main():
+    changed = False
+    for version in (1, 2, 3):
+        path = HERE / f"tiny_v{version}.qpkg"
+        data = tiny_bytes(version)
+        if path.exists():
+            have = path.read_bytes()
+            if have == data:
+                print(f"{path.name}: up to date ({len(data)} bytes)")
+                continue
+            sys.exit(
+                f"{path.name}: committed fixture differs from regeneration "
+                f"({len(have)} vs {len(data)} bytes) — refusing to overwrite"
+            )
+        path.write_bytes(data)
+        print(f"{path.name}: wrote {len(data)} bytes")
+        changed = True
+    if not changed:
+        print("all fixtures verified byte-identical")
+
+
+if __name__ == "__main__":
+    main()

@@ -136,6 +136,37 @@ fn osc_update_matches_ref_fixtures() {
 }
 
 #[test]
+fn dw_spatial_matches_ref_fixtures() {
+    // fwd + bwd of the true 2-D spatial depthwise conv vs the jax
+    // lax.conv oracle and its autodiff vjp (ref.dw_spatial_vjp_ref)
+    let fx = fixture("dw_spatial");
+    let cases = fx.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, case) in cases.iter().enumerate() {
+        let x = vecf(case, "x");
+        let w = vecf(case, "w");
+        let g = vecf(case, "g");
+        let b = scalarf(case, "b") as usize;
+        let hw_in = scalarf(case, "hw_in") as usize;
+        let channels = scalarf(case, "channels") as usize;
+        let stride = scalarf(case, "stride") as usize;
+        let pad = scalarf(case, "pad") as usize;
+        let hw_out = scalarf(case, "hw_out") as usize;
+        assert_eq!(kernels::dw_spatial_out(hw_in, stride, pad), hw_out);
+
+        let mut z = vec![0.0f32; b * hw_out * hw_out * channels];
+        kernels::dw_spatial_fwd(&x, &w, b, hw_in, channels, stride, pad, &mut z);
+        assert_close("dw_spatial.out", ci, &z, &vecf(case, "out"));
+
+        let mut dw = vec![0.0f32; channels * 9];
+        let mut dx = vec![0.0f32; x.len()];
+        kernels::dw_spatial_bwd(&x, &w, &g, b, hw_in, channels, stride, pad, &mut dw, &mut dx);
+        assert_close("dw_spatial.dw", ci, &dw, &vecf(case, "dw"));
+        assert_close("dw_spatial.dx", ci, &dx, &vecf(case, "dx"));
+    }
+}
+
+#[test]
 fn quant_matmul_matches_ref_fixtures() {
     let fx = fixture("quant_matmul");
     let cases = fx.get("cases").as_arr().unwrap();

@@ -11,8 +11,8 @@ use oscillations_qat::analysis::kl::gaussian_kl;
 use oscillations_qat::deploy::serve::percentile as exact_percentile;
 use oscillations_qat::coordinator::Schedule;
 use oscillations_qat::deploy::engine::{
-    dw_f32, dw_i32, matmul_f32, matmul_i32, packed_dw, packed_matmul, packed_matmul_i32,
-    EngineOpts,
+    dw_f32, dw_i32, dw_spatial_f32, dw_spatial_i32, matmul_f32, matmul_i32, packed_dw,
+    packed_dw_spatial, packed_dw_spatial_i32, packed_matmul, packed_matmul_i32, EngineOpts,
 };
 use oscillations_qat::deploy::packed::Packed;
 use oscillations_qat::json;
@@ -619,6 +619,7 @@ fn per_channel_qpkg_v2_roundtrip_is_engine_bitexact() {
             weights,
             bias: None,
             requant: None,
+            spatial: None,
         };
         let dm = DeployModel {
             name: "pcprop".into(),
@@ -718,6 +719,7 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
                         mult: (0..c).map(|_| rng.uniform(0.5, 2.0)).collect(),
                         add: (0..c).map(|_| rng.normal() * 0.1).collect(),
                     }),
+                    spatial: None,
                 },
                 DeployLayer {
                     name: "dw".into(),
@@ -733,6 +735,7 @@ fn prepared_threaded_engine_bitexact_vs_streaming() {
                     weights: p_dw,
                     bias: None,
                     requant: None,
+                    spatial: None,
                 },
             ],
         };
@@ -819,6 +822,7 @@ fn per_channel_activation_engine_bitexact_vs_interp_math() {
                     weights: p_full,
                     bias: None,
                     requant: Some(requant.clone()),
+                    spatial: None,
                 },
                 DeployLayer {
                     name: "dw".into(),
@@ -834,6 +838,7 @@ fn per_channel_activation_engine_bitexact_vs_interp_math() {
                     weights: p_dw,
                     bias: None,
                     requant: None,
+                    spatial: None,
                 },
             ],
         };
@@ -895,6 +900,338 @@ fn per_channel_activation_engine_bitexact_vs_interp_math() {
                     .unwrap();
                 assert_eq!(got, want, "bits {bits} int_accum {int_accum} opts {opts:?}");
             }
+        }
+    });
+}
+
+/// Scalar oracle for the spatial depthwise kernels: per output element,
+/// in-bounds taps in ascending `(ky, kx)` order — the interpreter's term
+/// sequence. Shared by the f32 and (via exact small-integer values) the
+/// i32 property below.
+#[allow(clippy::too_many_arguments)]
+fn dw_spatial_scalar_oracle(
+    x: &[f32],
+    wq: &[f32],
+    b: usize,
+    hw_in: usize,
+    c_dim: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let hw_out = (hw_in + 2 * pad - 3) / stride + 1;
+    let mut out = vec![0.0f32; b * hw_out * hw_out * c_dim];
+    for bi in 0..b {
+        for yo in 0..hw_out {
+            for xo in 0..hw_out {
+                for c in 0..c_dim {
+                    let mut acc = 0.0f32;
+                    for ky in 0..3usize {
+                        let y = yo * stride + ky;
+                        if y < pad || y - pad >= hw_in {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let xx = xo * stride + kx;
+                            if xx < pad || xx - pad >= hw_in {
+                                continue;
+                            }
+                            let j = ((y - pad) * hw_in + (xx - pad)) * c_dim + c;
+                            acc += wq[c * 9 + ky * 3 + kx] * x[bi * hw_in * hw_in * c_dim + j];
+                        }
+                    }
+                    out[(bi * hw_out * hw_out + yo * hw_out + xo) * c_dim + c] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Random spatial-depthwise geometry drawn so `hw_out >= 1` always holds
+/// (`hw_in + 2*pad >= 3`): returns `(hw_in, c, stride, pad)`.
+fn random_spatial_geometry(rng: &mut Pcg32) -> (usize, usize, usize, usize) {
+    let pad = rng.below(2);
+    let hw_in = if pad == 0 { 3 + rng.below(3) } else { 1 + rng.below(5) };
+    let c = 1 + rng.below(6);
+    let stride = 1 + rng.below(2);
+    (hw_in, c, stride, pad)
+}
+
+#[test]
+fn spatial_dw_kernels_bitexact_vs_scalar_oracle() {
+    // QPKG v4 kernels: the blocked f32 kernel, its streaming-decode
+    // wrapper, and the i32 twin must reproduce the scalar tap walk to
+    // the bit over random geometry (stride 1/2, pad 0/1) and random
+    // per-channel scales (group = 9)
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::runtime::native::kernels::fake_quant_pc;
+    for_random_cases(80, "dw_spatial_kernel", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let (hw_in, c, stride, pad) = random_spatial_geometry(rng);
+        let hw_out = (hw_in + 2 * pad - 3) / stride + 1;
+        let b = 1 + rng.below(3);
+        let scales = random_scales(rng, c);
+        let x: Vec<f32> = (0..b * hw_in * hw_in * c).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..c * 9).map(|_| rng.normal() * 0.5).collect();
+        let (packed, grid_n) = snap_and_pack_pc(&w, &scales, 9, bits).unwrap();
+        let wq = fake_quant_pc(&w, &scales, 9, gn, gp);
+        let want = dw_spatial_scalar_oracle(&x, &wq, b, hw_in, c, stride, pad);
+        // prepared-plane kernel over the dequantized weights
+        let mut got = vec![0.0f32; b * hw_out * hw_out * c];
+        dw_spatial_f32(&x, &wq, b, hw_in, c, stride, pad, &mut got);
+        assert_eq!(got, want, "f32 {hw_in}x{hw_in}x{c} s{stride} p{pad} bits {bits}");
+        // streaming decode takes the same route through the bitstream
+        let streamed = packed_dw_spatial(&x, &packed, b, hw_in, c, stride, pad, &scales, grid_n);
+        assert_eq!(streamed, want, "streaming {hw_in}x{hw_in}x{c} s{stride} p{pad}");
+        // i32 twin: small codes keep every product exact in f32, so the
+        // f32 oracle doubles as the integer reference
+        let qa: Vec<i32> = (0..b * hw_in * hw_in * c).map(|_| rng.below(16) as i32).collect();
+        let mut wi = Vec::new();
+        packed.ints_into(grid_n, &mut wi);
+        let mut goti = vec![0i32; b * hw_out * hw_out * c];
+        dw_spatial_i32(&qa, &wi, b, hw_in, c, stride, pad, &mut goti);
+        let streamed_i = packed_dw_spatial_i32(&qa, &packed, b, hw_in, c, stride, pad, grid_n);
+        assert_eq!(goti, streamed_i, "i32 prepared vs streaming");
+        let xf: Vec<f32> = qa.iter().map(|&v| v as f32).collect();
+        let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
+        let wanti = dw_spatial_scalar_oracle(&xf, &wf, b, hw_in, c, stride, pad);
+        let gotif: Vec<f32> = goti.iter().map(|&v| v as f32).collect();
+        assert_eq!(gotif, wanti, "i32 {hw_in}x{hw_in}x{c} s{stride} p{pad}");
+    });
+}
+
+#[test]
+fn spatial_engine_modes_bitexact_and_v4_roundtrip() {
+    // QPKG v4 end to end: a spatial depthwise layer with per-channel
+    // weight AND activation scales feeding a dense head. The f32-exact
+    // engine must reproduce the interpreter-math scalar reference to the
+    // bit in every mode; the int-accum engine (which now takes the i32
+    // fast path despite per_channel_act) must be mode-stable; and the v4
+    // byte round-trip must preserve the model exactly.
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::deploy::format::{
+        DeployLayer, DeployModel, DeployOp, DwSpatialMeta, Requant,
+    };
+    use oscillations_qat::runtime::native::kernels::fake_quant_pc;
+    for_random_cases(40, "dw2d_engine", |rng| {
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let (gn, gp) = quant::weight_grid(bits);
+        let act_p = quant::act_grid(bits);
+        // channel count pinned to 3 so the first layer can sit at the
+        // model input (d_in = input_hw^2 * 3); geometry otherwise random
+        let c = 3usize;
+        let pad = rng.below(2);
+        let hw = if pad == 0 { 3 + rng.below(2) } else { 2 + rng.below(3) };
+        let stride = 1 + rng.below(2);
+        let hw_out = (hw + 2 * pad - 3) / stride + 1;
+        let (d_in, d_sp) = (hw * hw * c, hw_out * hw_out * c);
+        let nc = 2 + rng.below(4);
+        let w_scales = random_scales(rng, c);
+        let a_scales: Vec<f32> = (0..c).map(|_| rng.uniform(0.01, 0.4)).collect();
+        let head_scales = random_scales(rng, nc);
+        let w_sp: Vec<f32> = (0..c * 9).map(|_| rng.normal() * 0.5).collect();
+        let w_head: Vec<f32> = (0..d_sp * nc).map(|_| rng.normal() * 0.5).collect();
+        let (p_sp, _) = snap_and_pack_pc(&w_sp, &w_scales, 9, bits).unwrap();
+        let (p_head, _) = snap_and_pack_pc(&w_head, &head_scales, 1, bits).unwrap();
+        let requant = Requant {
+            mult: (0..d_sp).map(|_| rng.uniform(0.5, 2.0)).collect(),
+            add: (0..d_sp).map(|_| rng.normal() * 0.1).collect(),
+        };
+        let dm = DeployModel {
+            name: "dw2d".into(),
+            input_hw: hw,
+            num_classes: nc,
+            quant_a: true,
+            bits_w: bits,
+            bits_a: bits,
+            layers: vec![
+                DeployLayer {
+                    name: "dw2d".into(),
+                    op: DeployOp::DwSpatial,
+                    d_in,
+                    d_out: d_sp,
+                    relu: true,
+                    aq: true,
+                    act_bits: bits,
+                    a_scales: a_scales.clone(),
+                    w_bits: bits,
+                    w_scales: w_scales.clone(),
+                    weights: p_sp,
+                    bias: None,
+                    requant: Some(requant.clone()),
+                    spatial: Some(DwSpatialMeta {
+                        kernel: 3,
+                        stride,
+                        pad,
+                        hw_in: hw,
+                        channels: c,
+                    }),
+                },
+                DeployLayer {
+                    name: "head".into(),
+                    op: DeployOp::Full,
+                    d_in: d_sp,
+                    d_out: nc,
+                    relu: false,
+                    aq: false,
+                    act_bits: 8,
+                    a_scales: vec![1.0],
+                    w_bits: bits,
+                    w_scales: head_scales.clone(),
+                    weights: p_head,
+                    bias: None,
+                    requant: None,
+                    spatial: None,
+                },
+            ],
+        };
+        // v4 byte round-trip preserves the spatial metadata exactly
+        let dm2 = DeployModel::from_bytes(&dm.to_bytes()).expect("v4 roundtrip");
+        assert_eq!(dm, dm2);
+
+        let b = 1 + rng.below(3);
+        let x: Vec<f32> = (0..b * d_in).map(|_| rng.normal()).collect();
+
+        // ---- interpreter-math reference (f32-exact route) ----
+        let wq_sp = fake_quant_pc(&w_sp, &w_scales, 9, gn, gp);
+        let wq_head = fake_quant_pc(&w_head, &head_scales, 1, gn, gp);
+        let aq = fake_quant_pc(&x, &a_scales, 1, 0.0, act_p);
+        let mut mid = dw_spatial_scalar_oracle(&aq, &wq_sp, b, hw, c, stride, pad);
+        for bi in 0..b {
+            for o in 0..d_sp {
+                let idx = bi * d_sp + o;
+                mid[idx] = requant.mult[o] * mid[idx] + requant.add[o];
+                if mid[idx] < 0.0 {
+                    mid[idx] = 0.0;
+                }
+            }
+        }
+        let mut want = vec![0.0f32; b * nc];
+        for bi in 0..b {
+            for kk in 0..d_sp {
+                let a = mid[bi * d_sp + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..nc {
+                    want[bi * nc + j] += a * wq_head[kk * nc + j];
+                }
+            }
+        }
+
+        let modes = [
+            EngineOpts::default(),
+            EngineOpts { prepared: false, ..Default::default() },
+            EngineOpts { threads: 2 + rng.below(3), ..Default::default() },
+        ];
+        // f32-exact engine == interpreter math, every mode
+        for opts in modes {
+            let got = oscillations_qat::deploy::Engine::with_opts(dm.clone(), false, opts)
+                .forward_batch(&x, b)
+                .unwrap();
+            assert_eq!(got, want, "bits {bits} f32-exact opts {opts:?}");
+        }
+        // int-accum engine: the exact-integer fast path engages on the
+        // per-channel-act spatial layer; all modes must agree bit-for-bit
+        let int_ref = oscillations_qat::deploy::Engine::with_mode(dm.clone(), true)
+            .forward_batch(&x, b)
+            .unwrap();
+        for opts in modes {
+            let got = oscillations_qat::deploy::Engine::with_opts(dm.clone(), true, opts)
+                .forward_batch(&x, b)
+                .unwrap();
+            assert_eq!(got, int_ref, "bits {bits} int-accum opts {opts:?}");
+        }
+        // and top-1 agreement between the two accumulation routes
+        for bi in 0..b {
+            let f = &want[bi * nc..(bi + 1) * nc];
+            let i = &int_ref[bi * nc..(bi + 1) * nc];
+            assert_eq!(
+                oscillations_qat::deploy::engine::argmax(f),
+                oscillations_qat::deploy::engine::argmax(i),
+                "top-1 drift, sample {bi}"
+            );
+        }
+    });
+}
+
+#[test]
+fn spatial_i32_fast_path_exact_on_pow2_grids() {
+    // On power-of-two scale grids every f32 op in the reference route is
+    // exact, so the composed-requant i32 fast path must agree with the
+    // f32-exact engine to the bit — including per-channel activation
+    // scales, the configuration QPKG v4 newly admits to the integer path.
+    use oscillations_qat::deploy::export::snap_and_pack_pc;
+    use oscillations_qat::deploy::format::{
+        DeployLayer, DeployModel, DeployOp, DwSpatialMeta, Requant,
+    };
+    for_random_cases(60, "dw2d_i32_exact", |rng| {
+        let pow2 = [0.5f32, 0.25, 0.125, 0.0625];
+        let c = 3usize;
+        let pad = rng.below(2);
+        let hw = if pad == 0 { 3 + rng.below(2) } else { 2 + rng.below(3) };
+        let stride = 1 + rng.below(2);
+        let hw_out = (hw + 2 * pad - 3) / stride + 1;
+        let (d_in, d_sp) = (hw * hw * c, hw_out * hw_out * c);
+        let w_scales: Vec<f32> = (0..c).map(|_| pow2[rng.below(4)]).collect();
+        let a_scales: Vec<f32> = (0..c).map(|_| pow2[rng.below(4)]).collect();
+        // weights already on each channel's grid: snap is the identity
+        let w: Vec<f32> = (0..c * 9)
+            .map(|i| (rng.below(15) as f32 - 7.0) * w_scales[i / 9])
+            .collect();
+        let (packed, _) = snap_and_pack_pc(&w, &w_scales, 9, 4).unwrap();
+        let dm = DeployModel {
+            name: "dw2d-i32".into(),
+            input_hw: hw,
+            num_classes: d_sp,
+            quant_a: true,
+            bits_w: 4,
+            bits_a: 4,
+            layers: vec![DeployLayer {
+                name: "dw2d".into(),
+                op: DeployOp::DwSpatial,
+                d_in,
+                d_out: d_sp,
+                relu: rng.below(2) == 1,
+                aq: true,
+                act_bits: 4,
+                a_scales: a_scales.clone(),
+                w_bits: 4,
+                w_scales: w_scales.clone(),
+                weights: packed,
+                bias: None,
+                requant: Some(Requant {
+                    // pow2 mults keep the composed product exact too
+                    mult: (0..d_sp).map(|_| pow2[rng.below(4)] * 4.0).collect(),
+                    add: (0..d_sp).map(|_| rng.normal() * 0.1).collect(),
+                }),
+                spatial: Some(DwSpatialMeta {
+                    kernel: 3,
+                    stride,
+                    pad,
+                    hw_in: hw,
+                    channels: c,
+                }),
+            }],
+        };
+        let b = 1 + rng.below(4);
+        // inputs already on each channel's activation grid
+        let x: Vec<f32> = (0..b * d_in)
+            .map(|i| rng.below(16) as f32 * a_scales[i % c])
+            .collect();
+        let exact = oscillations_qat::deploy::Engine::with_mode(dm.clone(), false)
+            .forward_batch(&x, b)
+            .unwrap();
+        for opts in [
+            EngineOpts::default(),
+            EngineOpts { prepared: false, ..Default::default() },
+            EngineOpts { threads: 2, ..Default::default() },
+        ] {
+            let got = oscillations_qat::deploy::Engine::with_opts(dm.clone(), true, opts)
+                .forward_batch(&x, b)
+                .unwrap();
+            assert_eq!(got, exact, "i32 fast path must be exact, opts {opts:?}");
         }
     });
 }
